@@ -1,0 +1,8 @@
+//! Design-choice ablations (DESIGN.md E6): BLAS-3 packed checksum vs
+//! BLAS-2, 32-bit checksum, encode-A, DMR; modulus sweep.
+use dlrm_abft::bench::figures::run_ablations;
+use dlrm_abft::bench::harness::BenchConfig;
+
+fn main() {
+    run_ablations(&BenchConfig::default(), &mut std::io::stdout());
+}

@@ -1,0 +1,8 @@
+//! Validates the paper's §IV-C closed-form detection probabilities against
+//! Monte-Carlo fault injection. Env: TRIALS=N (default 2000).
+use dlrm_abft::bench::figures::run_analysis;
+
+fn main() {
+    let trials: usize = std::env::var("TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    run_analysis(trials, &mut std::io::stdout());
+}

@@ -1,0 +1,14 @@
+//! Regenerates paper Fig 5: ABFT overhead of low-precision GEMM across the
+//! 28 DLRM shapes. Run: `cargo bench --bench fig5_gemm_overhead`
+use dlrm_abft::bench::figures::run_fig5;
+use dlrm_abft::bench::harness::BenchConfig;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick {
+        BenchConfig { warmup_iters: 1, sample_iters: 5, inner_reps: 1 }
+    } else {
+        BenchConfig::default()
+    };
+    run_fig5(&cfg, &mut std::io::stdout());
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Fig 6 (a: no prefetch, b: prefetch) over the Table-I
+//! EmbeddingBag settings. Run: `cargo bench --bench fig6_eb_overhead`
+//! Env: EB_SCALE=N divides the 4M-row tables for quick runs.
+use dlrm_abft::bench::figures::run_fig6;
+use dlrm_abft::bench::harness::BenchConfig;
+
+fn main() {
+    let scale: usize = std::env::var("EB_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1);
+    let cfg = BenchConfig { warmup_iters: 2, sample_iters: 11, inner_reps: 1 };
+    run_fig6(&cfg, scale, &mut std::io::stdout());
+}

@@ -1,0 +1,11 @@
+//! §Perf bench: naive Alg-2 EB protection vs the fused interleaved-meta
+//! layout (the EB hot-path optimization; see abft::eb docs).
+//! Env: EB_SCALE=N divides the 4M-row tables.
+use dlrm_abft::bench::figures::run_eb_fused_perf;
+use dlrm_abft::bench::harness::BenchConfig;
+
+fn main() {
+    let scale: usize = std::env::var("EB_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1);
+    let cfg = BenchConfig { warmup_iters: 2, sample_iters: 11, inner_reps: 1 };
+    run_eb_fused_perf(&cfg, scale, &mut std::io::stdout());
+}

@@ -1,0 +1,9 @@
+//! §Perf roofline report: machine ceilings (microbenchmarks) + GEMM
+//! kernel placement. Run: `cargo bench --bench perf_roofline`
+use dlrm_abft::bench::harness::BenchConfig;
+use dlrm_abft::bench::roofline::run_roofline;
+
+fn main() {
+    let cfg = BenchConfig { warmup_iters: 2, sample_iters: 9, inner_reps: 1 };
+    run_roofline(&cfg, &mut std::io::stdout());
+}

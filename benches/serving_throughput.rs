@@ -1,0 +1,77 @@
+//! Serving-layer bench: end-to-end throughput/latency of the coordinator
+//! with ABFT on vs off, and under chaos injection — quantifies what the
+//! paper's <20% operator overhead means at the service level.
+//! Env: REQS=N (default 400), BATCH=N (default 16).
+
+use dlrm_abft::coordinator::{ChaosConfig, Engine, ScoreRequest};
+use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
+use dlrm_abft::util::rng::Pcg32;
+use std::time::Instant;
+
+fn model(protection: Protection) -> DlrmModel {
+    DlrmModel::random(DlrmConfig {
+        num_dense: 13,
+        embedding_dim: 64,
+        bottom_mlp: vec![256, 128, 64],
+        top_mlp: vec![256, 64],
+        tables: vec![TableConfig { rows: 100_000, pooling: 50 }; 8],
+        protection,
+        dense_range: (0.0, 1.0),
+        seed: 99,
+    })
+}
+
+fn requests(m: &DlrmModel, n: usize) -> Vec<ScoreRequest> {
+    let mut rng = Pcg32::new(7);
+    m.synth_requests(n, &mut rng)
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| ScoreRequest { id: i as u64, dense: r.dense, sparse: r.sparse })
+        .collect()
+}
+
+fn drive(engine: &Engine, reqs: &[ScoreRequest], batch: usize) -> (f64, f64) {
+    let t0 = Instant::now();
+    for chunk in reqs.chunks(batch) {
+        let resps = engine.process_batch(chunk.to_vec());
+        std::hint::black_box(&resps);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let qps = reqs.len() as f64 / dt;
+    let mean_lat = engine.metrics.latency.mean_us();
+    (qps, mean_lat)
+}
+
+fn main() {
+    let n: usize = std::env::var("REQS").ok().and_then(|s| s.parse().ok()).unwrap_or(400);
+    let batch: usize = std::env::var("BATCH").ok().and_then(|s| s.parse().ok()).unwrap_or(16);
+    println!("# Serving throughput ({n} requests, batch {batch}, 8x100k tables, d=64)");
+
+    let m_off = model(Protection::Off);
+    let reqs = requests(&m_off, n);
+    let e_off = Engine::new(m_off);
+    let (qps_off, lat_off) = drive(&e_off, &reqs, batch);
+    println!("protection=off              {qps_off:>8.1} req/s  mean_batch_lat {lat_off:>9.0} us");
+
+    let e_on = Engine::new(model(Protection::DetectRecompute));
+    let (qps_on, lat_on) = drive(&e_on, &reqs, batch);
+    println!("protection=detect_recompute {qps_on:>8.1} req/s  mean_batch_lat {lat_on:>9.0} us");
+    println!(
+        "service-level ABFT overhead: {:+.2}% qps, {:+.2}% latency",
+        (qps_off / qps_on - 1.0) * 100.0,
+        (lat_on / lat_off - 1.0) * 100.0
+    );
+
+    let e_chaos = Engine::with_chaos(
+        model(Protection::DetectRecompute),
+        ChaosConfig { p_weight_flip: 0.2, p_table_flip: 0.0, seed: 3 },
+    );
+    let (qps_c, lat_c) = drive(&e_chaos, &reqs, batch);
+    let det = e_chaos.metrics.detections.load(std::sync::atomic::Ordering::Relaxed);
+    let rec = e_chaos.metrics.recomputes.load(std::sync::atomic::Ordering::Relaxed);
+    let deg = e_chaos.metrics.degraded.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "chaos p=0.2 weight flips    {qps_c:>8.1} req/s  mean_batch_lat {lat_c:>9.0} us  \
+         detections={det} recomputes={rec} degraded={deg}"
+    );
+}

@@ -1,0 +1,12 @@
+//! Regenerates paper Table II: GEMM fault-injection campaign
+//! (bit flips in B after encoding, in C_temp, and error-free controls).
+//! Env: RUNS=N (default 100 = the paper's 2800-sample campaign).
+use dlrm_abft::bench::figures::run_table2;
+use dlrm_abft::fault::campaign::GemmCampaignConfig;
+
+fn main() {
+    let runs: usize = std::env::var("RUNS").ok().and_then(|s| s.parse().ok()).unwrap_or(100);
+    let threads: usize = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cfg = GemmCampaignConfig { runs_per_shape: runs, ..Default::default() };
+    run_table2(&cfg, threads, &mut std::io::stdout());
+}

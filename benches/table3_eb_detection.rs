@@ -1,0 +1,12 @@
+//! Regenerates paper Table III: EmbeddingBag fault-injection campaign
+//! (200 high-bit flips, 200 low-bit flips, 400 error-free runs).
+//! Env: ROWS=N (default 4,000,000 as in Table I).
+use dlrm_abft::bench::figures::{run_table3, run_table3_4bit};
+use dlrm_abft::fault::campaign::EbCampaignConfig;
+
+fn main() {
+    let rows: usize = std::env::var("ROWS").ok().and_then(|s| s.parse().ok()).unwrap_or(4_000_000);
+    let cfg = EbCampaignConfig { table_rows: rows, ..Default::default() };
+    run_table3(&cfg, 1, &mut std::io::stdout());
+    run_table3_4bit(&cfg, 1, &mut std::io::stdout());
+}

@@ -1,0 +1,62 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//! 1. Protect a quantized GEMM with ABFT (paper Alg 1) and catch an
+//!    injected bit flip.
+//! 2. Protect an EmbeddingBag (paper Alg 2) the same way.
+//! 3. Run a small fully-protected DLRM end to end.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dlrm_abft::abft::{AbftGemm, EbChecksum};
+use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
+use dlrm_abft::embedding::{bag_sum_8, QuantTable8};
+use dlrm_abft::util::rng::Pcg32;
+
+fn main() {
+    let mut rng = Pcg32::new(42);
+
+    // --- 1. Protected GEMM ---------------------------------------------
+    let (m, k, n) = (8, 256, 128);
+    let mut a = vec![0u8; m * k];
+    let mut b = vec![0i8; k * n];
+    rng.fill_u8(&mut a);
+    rng.fill_i8(&mut b);
+    let abft = AbftGemm::new(&b, k, n); // encode once, reuse forever
+    let (mut c_temp, verdict) = abft.exec(&a, m);
+    println!("clean GEMM: corrupted rows = {:?}", verdict.corrupted_rows);
+
+    c_temp[3 * (n + 1) + 40] ^= 1 << 17; // simulate a soft error in C_temp
+    let verdict = abft.verify(&c_temp, m);
+    println!("after bit flip: corrupted rows = {:?}", verdict.corrupted_rows);
+    abft.recompute_row(&a, 3, &mut c_temp, m); // row-level recovery
+    println!("after recompute: clean = {}", abft.verify(&c_temp, m).clean());
+
+    // --- 2. Protected EmbeddingBag --------------------------------------
+    let table = QuantTable8::random(10_000, 64, &mut rng);
+    let checksum = EbChecksum::build_8(&table); // C_T, precomputed offline
+    let indices: Vec<usize> = (0..100).map(|_| rng.gen_range(0, 10_000)).collect();
+    let mut r = vec![0f32; 64];
+    bag_sum_8(&table, &indices, None, true, &mut r);
+    let flagged = checksum.check_bag(&table.alpha, &table.beta, &indices, None, &r);
+    println!("clean EB bag flagged = {flagged}");
+    let bits = r[10].to_bits() ^ (1 << 29);
+    r[10] = f32::from_bits(bits); // soft error in the output
+    let flagged = checksum.check_bag(&table.alpha, &table.beta, &indices, None, &r);
+    println!("corrupted EB bag flagged = {flagged}");
+
+    // --- 3. Fully-protected DLRM ----------------------------------------
+    let model = DlrmModel::random(DlrmConfig {
+        num_dense: 8,
+        embedding_dim: 16,
+        bottom_mlp: vec![32, 16],
+        top_mlp: vec![32],
+        tables: vec![TableConfig { rows: 5_000, pooling: 10 }; 4],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed: 1,
+    });
+    let requests = model.synth_requests(4, &mut rng);
+    let (scores, report) = model.forward(&requests);
+    println!("DLRM scores = {scores:?}");
+    println!("DLRM soft-error report = {report:?}");
+}

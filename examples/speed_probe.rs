@@ -1,0 +1,17 @@
+fn main() {
+    use dlrm_abft::gemm::{PackedB, gemm_exec_into};
+    use dlrm_abft::util::rng::Pcg32;
+    let mut rng = Pcg32::new(1);
+    for (m,n,k) in [(150usize,800usize,3200usize),(1,800,3200),(100,512,512),(50,512,256)] {
+        let mut a = vec![0u8; m*k]; let mut b = vec![0i8; k*n];
+        rng.fill_u8(&mut a); rng.fill_i8(&mut b);
+        let p = PackedB::pack(&b, k, n);
+        let mut c = vec![0i32; m*n];
+        gemm_exec_into(&a,&p,m,&mut c);
+        let t0 = std::time::Instant::now();
+        let reps = 7;
+        for _ in 0..reps { gemm_exec_into(&a,&p,m,&mut c); }
+        let dt = t0.elapsed().as_secs_f64()/reps as f64;
+        println!("({m},{n},{k}): {:.3} ms, {:.2} Gop/s", dt*1e3, 2.0*(m*n*k) as f64/dt/1e9);
+    }
+}

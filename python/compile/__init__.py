@@ -1,0 +1,2 @@
+"""Build-time python package: L1 Pallas kernels, L2 JAX DLRM graph, AOT
+lowering to HLO-text artifacts. Never imported at serving time."""

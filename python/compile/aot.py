@@ -1,0 +1,108 @@
+"""AOT lowering: jax → HLO *text* artifacts the rust runtime loads.
+
+HLO text, NOT `.serialize()`: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the image's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all lowered with return_tuple=True):
+  model_b{B}.hlo.txt — full protected DLRM forward, batch B
+      inputs: dense f32[B, num_dense], indices i32[B, T, pooling]
+      outputs: (scores f32[B], gemm_bad_rows i32[], eb_flagged i32[])
+  abft_gemm.hlo.txt — standalone protected GEMM kernel
+      inputs: a u8[M, K], b_enc i8[K, N+1]
+      outputs: (c_temp i32[M, N+1], residuals i32[M])
+  eb_bag.hlo.txt — standalone protected EmbeddingBag
+      inputs: table u8[R, D], alpha f32[R], beta f32[R], c_t i32[R],
+              indices i32[B, P]
+      outputs: (result f32[B, D], rsum f32[B], csum f32[B])
+
+Run via `make artifacts`; a no-op when artifacts are newer than sources.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels import abft_gemm
+
+# Shapes for the standalone kernel artifacts (one DLRM layer / Table-I bag).
+GEMM_M, GEMM_K, GEMM_N = 16, 512, 512
+EB_ROWS, EB_D, EB_BATCH, EB_POOL = 10_000, 64, 10, 100
+MODEL_BATCHES = (1, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default ELIDES big
+    # literals as `constant({...})`, which the 0.5.1 text parser silently
+    # reads as garbage — baked weights would be corrupted on the rust side.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(batch: int):
+    params = model_mod.make_model()
+    cfg = params["cfg"]
+    fn = model_mod.make_jitted_forward(params)
+    dense = jax.ShapeDtypeStruct((batch, cfg["num_dense"]), jnp.float32)
+    indices = jax.ShapeDtypeStruct(
+        (batch, len(cfg["tables"]), cfg["pooling"]), jnp.int32
+    )
+    return jax.jit(fn).lower(dense, indices)
+
+
+def lower_gemm_kernel():
+    def fn(a, b_enc):
+        c = abft_gemm.abft_qgemm(a, b_enc)
+        return c, abft_gemm.verify_rows(c)
+
+    a = jax.ShapeDtypeStruct((GEMM_M, GEMM_K), jnp.uint8)
+    b_enc = jax.ShapeDtypeStruct((GEMM_K, GEMM_N + 1), jnp.int8)
+    return jax.jit(fn).lower(a, b_enc)
+
+
+def lower_eb_kernel():
+    from .kernels import embeddingbag
+
+    def fn(table, alpha, beta, c_t, indices):
+        return embeddingbag.eb_abft(table, alpha, beta, c_t, indices)
+
+    args = (
+        jax.ShapeDtypeStruct((EB_ROWS, EB_D), jnp.uint8),
+        jax.ShapeDtypeStruct((EB_ROWS,), jnp.float32),
+        jax.ShapeDtypeStruct((EB_ROWS,), jnp.float32),
+        jax.ShapeDtypeStruct((EB_ROWS,), jnp.int32),
+        jax.ShapeDtypeStruct((EB_BATCH, EB_POOL), jnp.int32),
+    )
+    return jax.jit(fn).lower(*args)
+
+
+def write(path: str, text: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>9} chars  {path}", file=sys.stderr)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out = args.out_dir
+
+    write(os.path.join(out, "abft_gemm.hlo.txt"), to_hlo_text(lower_gemm_kernel()))
+    write(os.path.join(out, "eb_bag.hlo.txt"), to_hlo_text(lower_eb_kernel()))
+    for b in MODEL_BATCHES:
+        write(os.path.join(out, f"model_b{b}.hlo.txt"), to_hlo_text(lower_model(b)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels (build-time python, interpret=True on CPU)."""
+
+from . import abft_gemm, embeddingbag, ref, requantize  # noqa: F401

@@ -1,0 +1,104 @@
+"""Layer-1 Pallas kernel: ABFT-protected quantized GEMM (paper Alg 1).
+
+The kernel multiplies u8 activations against the *encoded* weight panel
+B' = [B | S_B] (checksum column packed contiguously, §IV-A3) so protection
+rides inside a single tiled matmul: `C_temp[m, n+1] = A[m, k] · B'[k, n+1]`
+in i32.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the BlockSpec schedule
+below is the VMEM double-buffering plan — an (bm × bk) A tile and a
+(bk × bn) B' tile stream through VMEM per grid step while the MXU
+accumulates the (bm × bn) C tile across the k grid axis; the checksum
+column is just one extra RHS column riding in the last n-tile
+((n+1)/n MXU overhead). `interpret=True` everywhere: the CPU PJRT client
+cannot run Mosaic custom-calls; real-TPU numbers are estimated in
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+MODULUS = ref.MODULUS
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output tile; accumulates across the k grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.int32)
+
+
+def _pad_to(x, axis, multiple):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def abft_qgemm(a, b_enc, bm=8, bn=128, bk=128):
+    """Protected GEMM: (m, k) u8 × (k, n+1) i8 → (m, n+1) i32.
+
+    Zero padding is checksum-transparent: padded k-rows contribute 0 to
+    every dot product and padded n-columns sit to the right of the
+    checksum column and are sliced off.
+    """
+    m, k = a.shape
+    k2, n1 = b_enc.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    a_p = _pad_to(_pad_to(a, 0, bm), 1, bk)
+    b_p = _pad_to(_pad_to(b_enc, 0, bk), 1, bn)
+    mp, kp = a_p.shape
+    np_ = b_p.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, p: (i, p)),
+            pl.BlockSpec((bk, bn), lambda i, j, p: (p, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, p: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n1]
+
+
+def _verify_kernel(c_ref, r_ref):
+    """Per-row Eq 3b residual, mod-first so accumulation stays in i32
+    (a raw i32 row sum overflows once n·|entry| > 2^31)."""
+    c = c_ref[...]
+    payload = c[:, :-1] % MODULUS  # in [0, MODULUS)
+    t = jnp.sum(payload, axis=1)
+    r_ref[...] = ((t - c[:, -1]) % MODULUS).astype(jnp.int32)
+
+
+@jax.jit
+def verify_rows(c_temp):
+    """Row residuals of a protected C_temp: (m, n+1) i32 → (m,) i32."""
+    m = c_temp.shape[0]
+    return pl.pallas_call(
+        _verify_kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        interpret=True,
+    )(c_temp)
+
+
+@jax.jit
+def err_count(c_temp):
+    """Algorithm 1's errCount: number of corrupted rows."""
+    return jnp.sum((verify_rows(c_temp) != 0).astype(jnp.int32))

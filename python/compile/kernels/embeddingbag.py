@@ -1,0 +1,85 @@
+"""Layer-1 Pallas kernel: quantized EmbeddingBag with fused ABFT checksum
+(paper Alg 2).
+
+One grid step per bag: the kernel gathers `pooling` quantized rows,
+accumulates `α_i · row + β_i` into the f32 output, and *fuses* the Eq-5
+checksum sides — RSum (output sum) and CSum (α_i·C_T[i] + d·β_i over the
+bag) — so verification costs one extra scalar pass instead of re-reading
+the output.
+
+TPU adaptation: gathers are the HBM-bound part; on real hardware the
+BlockSpec keeps the index vector and per-row qparams in VMEM/SMEM while
+rows stream from HBM (the paper's software-prefetch distance becomes the
+double-buffer depth). interpret=True as everywhere.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _eb_kernel(table_ref, alpha_ref, beta_ref, ct_ref, idx_ref, out_ref, rsum_ref, csum_ref):
+    d = out_ref.shape[-1]
+    pooling = idx_ref.shape[-1]
+
+    def body(p, carry):
+        acc, csum = carry
+        i = idx_ref[0, p]
+        row = table_ref[i, :].astype(jnp.float32)
+        a = alpha_ref[i]
+        b = beta_ref[i]
+        acc = acc + a * row + b
+        csum = csum + a * ct_ref[i].astype(jnp.float32) + d * b
+        return acc, csum
+
+    acc, csum = jax.lax.fori_loop(
+        0, pooling, body, (jnp.zeros((d,), jnp.float32), jnp.float32(0.0))
+    )
+    out_ref[0, :] = acc
+    rsum_ref[0] = jnp.sum(acc)
+    csum_ref[0] = csum
+
+
+@functools.partial(jax.jit, static_argnames=())
+def eb_abft(table, alpha, beta, c_t, indices):
+    """Protected EmbeddingBag.
+
+    table: (rows, d) u8; alpha/beta: (rows,) f32; c_t: (rows,) i32
+    (precomputed code row sums); indices: (batch, pooling) i32.
+
+    Returns (result (batch, d) f32, rsum (batch,) f32, csum (batch,) f32);
+    a bag is flagged when |rsum - csum| exceeds the relative bound
+    (decided by the caller — rust keeps the policy).
+    """
+    batch, pooling = indices.shape
+    rows, d = table.shape
+    return pl.pallas_call(
+        _eb_kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((rows, d), lambda b: (0, 0)),
+            pl.BlockSpec((rows,), lambda b: (0,)),
+            pl.BlockSpec((rows,), lambda b: (0,)),
+            pl.BlockSpec((rows,), lambda b: (0,)),
+            pl.BlockSpec((1, pooling), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, d), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.float32),
+        ],
+        interpret=True,
+    )(table, alpha, beta, c_t, indices)
+
+
+def flag_bags(rsum, csum, rel_bound=1e-5):
+    """Eq-5 decision (paper §V-D): relative round-off bound."""
+    scale = jnp.maximum(jnp.maximum(jnp.abs(rsum), jnp.abs(csum)), 1.0)
+    return jnp.abs(rsum - csum) > rel_bound * scale

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these references at
+build time (pytest); the references themselves mirror the rust substrate
+(`rust/src/abft/gemm.rs`, `rust/src/abft/eb.rs`) bit-for-bit on integers.
+"""
+
+import jax.numpy as jnp
+
+MODULUS = 127  # paper §IV-A2 / §IV-C: largest odd prime in the i8 range
+
+
+def encode_checksum_col(b: jnp.ndarray, modulus: int = MODULUS) -> jnp.ndarray:
+    """Mod-`modulus` row-sum checksum column of a (k, n) i8 matrix.
+
+    Matches Algorithm 1 lines 2-5 (and rust `encode_checksum_col`):
+    values lie in (-modulus, modulus) and fit i8. jnp's `%` follows the
+    divisor's sign (python semantics) while rust's `%` truncates; we
+    emulate truncation to stay bit-identical with the rust encoder.
+    """
+    s = jnp.sum(b.astype(jnp.int32), axis=1)
+    rem = jnp.sign(s) * (jnp.abs(s) % modulus)  # truncated remainder
+    return rem.astype(jnp.int8)
+
+
+def encode(b: jnp.ndarray, modulus: int = MODULUS) -> jnp.ndarray:
+    """Append the checksum column: (k, n) i8 -> (k, n+1) i8 (the packed B')."""
+    col = encode_checksum_col(b, modulus)
+    return jnp.concatenate([b, col[:, None]], axis=1)
+
+
+def qgemm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """u8 x i8 -> i32 reference matmul."""
+    return jnp.dot(
+        a.astype(jnp.int32), b.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+
+
+def abft_qgemm_ref(a: jnp.ndarray, b_enc: jnp.ndarray) -> jnp.ndarray:
+    """Protected GEMM reference: (m, k) u8 x (k, n+1) i8 -> (m, n+1) i32."""
+    return qgemm(a, b_enc)
+
+
+def verify_rows(c_temp: jnp.ndarray, modulus: int = MODULUS) -> jnp.ndarray:
+    """Eq 3b residuals per row; 0 == clean.
+
+    Accumulates mod-first (`Σ(c_j mod p) mod p`) so everything stays in
+    i32 — a plain i32 row sum overflows for n·|entry| > 2^31 (the rust
+    side uses i64 instead; both test the same congruence).
+    """
+    payload = c_temp[:, :-1] % modulus  # python-style mod: in [0, p)
+    t = jnp.sum(payload, axis=1)
+    diff = (t - c_temp[:, -1]) % modulus
+    return diff.astype(jnp.int32)
+
+
+def eb_ref(table, alpha, beta, indices):
+    """EmbeddingBag reference over one batch.
+
+    table: (rows, d) u8; alpha/beta: (rows,) f32;
+    indices: (batch, pooling) i32 -> (batch, d) f32.
+    """
+    rows = table[indices]  # (batch, pooling, d)
+    a = alpha[indices][..., None]
+    b = beta[indices][..., None]
+    return jnp.sum(a * rows.astype(jnp.float32) + b, axis=1)
+
+
+def eb_checksum_ref(table):
+    """C_T: integer code row sums (§V-B keeps them unscaled in i32)."""
+    return jnp.sum(table.astype(jnp.int32), axis=1)
+
+
+def eb_verify_ref(result, c_t, alpha, beta, indices, d, rel_bound=1e-5):
+    """Eq 5 residual check per bag; True == flagged."""
+    rsum = jnp.sum(result, axis=1)
+    csum = jnp.sum(
+        alpha[indices] * c_t[indices].astype(jnp.float32) + d * beta[indices],
+        axis=1,
+    )
+    scale = jnp.maximum(jnp.maximum(jnp.abs(rsum), jnp.abs(csum)), 1.0)
+    return jnp.abs(rsum - csum) > rel_bound * scale

@@ -1,0 +1,68 @@
+"""Layer-1 Pallas kernel: requantization (paper Fig 1, §IV-A3).
+
+Combines the 32-bit protected intermediate `C_temp[m, n+1]` with the
+Eq-1 rank-1 correction terms and emits the u8 output tuple — *excluding
+the checksum column*, exactly the paper's modified requantization
+("we just need to modify the requantization procedure to let it exclude
+the last column of the intermediate 32-bit matrix").
+
+One grid step per (m-tile); the kernel reads the C tile plus the
+precomputed row/column sums (SMEM-friendly vectors on a real TPU) and
+writes the u8 tile. Quantized ReLU (clamp at the zero code) is fused.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _requant_kernel(c_ref, arow_ref, bcol_ref, params_ref, o_ref):
+    """params = [x_alpha, x_beta, w_alpha, w_beta, out_alpha, out_beta,
+    k, relu_flag] (f32)."""
+    x_alpha = params_ref[0]
+    x_beta = params_ref[1]
+    w_alpha = params_ref[2]
+    w_beta = params_ref[3]
+    out_alpha = params_ref[4]
+    out_beta = params_ref[5]
+    k = params_ref[6]
+    relu = params_ref[7]
+
+    payload = c_ref[:, :-1].astype(jnp.float32)  # checksum column excluded
+    arow = arow_ref[...].astype(jnp.float32)[:, None]
+    bcol = bcol_ref[...].astype(jnp.float32)[None, :]
+    real = (
+        x_alpha * w_alpha * payload
+        + x_alpha * w_beta * arow
+        + w_alpha * x_beta * bcol
+        + k * x_beta * w_beta
+    )
+    y = jnp.clip(jnp.round((real - out_beta) / out_alpha), 0, 255)
+    zero_code = jnp.clip(jnp.round((0.0 - out_beta) / out_alpha), 0, 255)
+    y = jnp.where(relu > 0.5, jnp.maximum(y, zero_code), y)
+    o_ref[...] = y.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "k"))
+def requantize_exclude_last_col(c_temp, a_row_sums, b_col_sums, x_qp, w_qp, out_qp, k, relu=False):
+    """Protected-C requantization.
+
+    c_temp: (m, n+1) i32 (last column = ABFT checksum, dropped);
+    a_row_sums: (m,) i32; b_col_sums: (n,) i32; *_qp: (alpha, beta)
+    float pairs; k: inner dimension. Returns (m, n) u8.
+    """
+    m, n1 = c_temp.shape
+    n = n1 - 1
+    assert a_row_sums.shape == (m,)
+    assert b_col_sums.shape == (n,)
+    params = jnp.array(
+        [x_qp[0], x_qp[1], w_qp[0], w_qp[1], out_qp[0], out_qp[1], float(int(k)), 1.0 if relu else 0.0],
+        dtype=jnp.float32,
+    )
+    return pl.pallas_call(
+        _requant_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint8),
+        interpret=True,
+    )(c_temp, a_row_sums, b_col_sums, params)

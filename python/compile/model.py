@@ -1,0 +1,237 @@
+"""Layer-2: the quantized DLRM forward graph in JAX, calling the Layer-1
+Pallas kernels, with ABFT verification fused into the graph.
+
+The lowered artifact *returns the ABFT evidence* alongside the scores —
+`gemm_bad_rows` (Alg 1's errCount summed over layers) and `eb_flagged`
+(Eq-5 violations over all bags) — so the rust coordinator can apply its
+recompute policy without re-entering python.
+
+Everything here is build-time only: `aot.py` lowers `forward` to HLO text
+once and the rust runtime serves it from then on.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import abft_gemm, embeddingbag, ref, requantize
+
+
+# --------------------------------------------------------------------------
+# Parameter construction (mirrors rust DlrmModel::random)
+# --------------------------------------------------------------------------
+
+
+def _fit_u8(lo, hi):
+    alpha = (hi - lo) / 255.0
+    return np.float32(alpha), np.float32(lo)
+
+
+def make_linear(rng, k, n, relu, out_bound):
+    """He-initialized float weights, quantized to i8 and ABFT-encoded.
+
+    The output lattice is slightly asymmetric so the quantized zero code
+    avoids 127/128 (code 127 ≡ 0 mod 127 hides B-errors under ReLU
+    clamping — DESIGN.md §Findings).
+    """
+    w = rng.normal(0.0, np.sqrt(2.0 / k), (k, n)).astype(np.float32)
+    lo, hi = float(w.min()), float(w.max())
+    w_alpha = np.float32((hi - lo) / 255.0)
+    w_beta = np.float32(lo + 128.0 * w_alpha)
+    wq = np.clip(np.round((w - w_beta) / w_alpha), -128, 127).astype(np.int8)
+    out_alpha, out_beta = _fit_u8(-out_bound, out_bound * 1.10)
+    return {
+        "b_enc": jnp.asarray(np.asarray(ref.encode(jnp.asarray(wq)))),
+        "w_col_sums": jnp.asarray(wq.astype(np.int32).sum(axis=0)),
+        "w_alpha": w_alpha,
+        "w_beta": w_beta,
+        "out_alpha": out_alpha,
+        "out_beta": out_beta,
+        "relu": relu,
+        "k": k,
+        "n": n,
+    }
+
+
+def make_table(rng, rows, d):
+    codes = rng.integers(0, 256, (rows, d), dtype=np.uint8)
+    alpha = rng.uniform(0.005, 0.02, rows).astype(np.float32)
+    beta = rng.uniform(-1.0, 1.0, rows).astype(np.float32)
+    return {
+        "codes": jnp.asarray(codes),
+        "alpha": jnp.asarray(alpha),
+        "beta": jnp.asarray(beta),
+        "c_t": jnp.asarray(codes.astype(np.int32).sum(axis=1)),
+    }
+
+
+DEFAULT_CFG = {
+    "num_dense": 8,
+    "embedding_dim": 32,
+    "bottom_mlp": [64, 32],
+    "top_mlp": [64],
+    "tables": [5000, 5000],
+    "pooling": 20,
+    "dense_range": (0.0, 1.0),
+    "seed": 42,
+}
+
+
+def make_model(cfg=None):
+    cfg = {**DEFAULT_CFG, **(cfg or {})}
+    assert cfg["bottom_mlp"][-1] == cfg["embedding_dim"]
+    rng = np.random.default_rng(cfg["seed"])
+    params = {"cfg": cfg, "bottom": [], "top": [], "tables": []}
+    prev = cfg["num_dense"]
+    for h in cfg["bottom_mlp"]:
+        # ±4 covers ±3σ of He-init activations; wider ranges quantize all
+        # outputs to one code and collapse the scores (see rust
+        # AbftLinear::random for the derivation).
+        params["bottom"].append(make_linear(rng, prev, h, True, 4.0))
+        prev = h
+    t = len(cfg["tables"]) + 1
+    top_in = cfg["embedding_dim"] + t * (t - 1) // 2
+    prev = top_in
+    for h in cfg["top_mlp"]:
+        params["top"].append(make_linear(rng, prev, h, True, 4.0))
+        prev = h
+    params["head"] = make_linear(rng, prev, 1, False, 4.0)
+    for rows in cfg["tables"]:
+        params["tables"].append(make_table(rng, rows, cfg["embedding_dim"]))
+    da, db = _fit_u8(*cfg["dense_range"])
+    params["dense_alpha"], params["dense_beta"] = da, db
+    _calibrate_top(params, rng)
+    return params
+
+
+def _calibrate_top(params, rng):
+    """Static-quantization calibration of the top-MLP input lattice
+    (mirrors rust DlrmModel::calibrate): dynamic per-batch ranges would
+    make a request's score depend on its batch-mates."""
+    cfg = params["cfg"]
+    batch = 32
+    dense = jnp.asarray(rng.uniform(0, 1, (batch, cfg["num_dense"])).astype(np.float32))
+    idx = np.stack(
+        [rng.integers(0, rows, (batch, cfg["pooling"])) for rows in cfg["tables"]],
+        axis=1,
+    ).astype(np.int32)
+    top_in = _compute_top_input(params, dense, jnp.asarray(idx))[0]
+    # Per-column standardization stats: interaction features are orders of
+    # magnitude larger than MLP features; a shared lattice without
+    # standardization saturates the head (mirrors rust calibrate()).
+    mean = jnp.mean(top_in, axis=0)
+    std = jnp.maximum(jnp.std(top_in, axis=0), 1e-3)
+    params["top_mean"], params["top_std"] = mean, std
+    # Standardized features ~N(0,1); asymmetric ±4σ lattice keeps the zero
+    # code off the modulus.
+    alpha, beta = _fit_u8(-4.0, 4.4)
+    params["top_alpha"], params["top_beta"] = alpha, beta
+
+
+# --------------------------------------------------------------------------
+# Forward graph
+# --------------------------------------------------------------------------
+
+
+def linear_forward(layer, x_q, x_alpha, x_beta):
+    """Protected quantized FC: Alg-1 GEMM + fused requantization, both as
+    Pallas kernels; the requantizer excludes the checksum column (§IV-A3)."""
+    c = abft_gemm.abft_qgemm(x_q, layer["b_enc"])
+    bad = abft_gemm.err_count(c)
+    a_rowsums = jnp.sum(x_q.astype(jnp.int32), axis=1)
+    y = requantize.requantize_exclude_last_col(
+        c,
+        a_rowsums,
+        layer["w_col_sums"],
+        (x_alpha, x_beta),
+        (layer["w_alpha"], layer["w_beta"]),
+        (layer["out_alpha"], layer["out_beta"]),
+        layer["k"],
+        relu=layer["relu"],
+    )
+    return y, bad
+
+
+def dequant_u8(y, alpha, beta):
+    return alpha * y.astype(jnp.float32) + beta
+
+
+def pairwise_interaction(feats):
+    """feats: (batch, groups, d) -> (batch, C(groups,2)) upper-tri dots."""
+    gram = jnp.einsum("bgd,bhd->bgh", feats, feats)
+    g = feats.shape[1]
+    iu, ju = jnp.triu_indices(g, k=1)
+    return gram[:, iu, ju]
+
+
+def _compute_top_input(params, dense, indices):
+    """Bottom half: bottom MLP -> EBs -> interaction -> concat."""
+    x = jnp.clip(
+        jnp.round((dense - params["dense_beta"]) / params["dense_alpha"]), 0, 255
+    ).astype(jnp.uint8)
+    x_alpha, x_beta = params["dense_alpha"], params["dense_beta"]
+
+    gemm_bad = jnp.int32(0)
+    for layer in params["bottom"]:
+        x, bad = linear_forward(layer, x, x_alpha, x_beta)
+        x_alpha, x_beta = layer["out_alpha"], layer["out_beta"]
+        gemm_bad += bad
+    bottom_f = dequant_u8(x, x_alpha, x_beta)  # (batch, d)
+
+    # EmbeddingBags via the fused-checksum Pallas kernel.
+    eb_flagged = jnp.int32(0)
+    feats = [bottom_f]
+    for t, table in enumerate(params["tables"]):
+        out, rsum, csum = embeddingbag.eb_abft(
+            table["codes"], table["alpha"], table["beta"], table["c_t"], indices[:, t, :]
+        )
+        eb_flagged += jnp.sum(
+            embeddingbag.flag_bags(rsum, csum).astype(jnp.int32)
+        )
+        feats.append(out)
+    stacked = jnp.stack(feats, axis=1)  # (batch, T+1, d)
+
+    inter = pairwise_interaction(stacked)
+    top_in = jnp.concatenate([bottom_f, inter], axis=1)
+    return top_in, gemm_bad, eb_flagged
+
+
+def forward(params, dense, indices):
+    """Full protected DLRM forward.
+
+    dense: (batch, num_dense) f32; indices: (batch, T, pooling) i32.
+    Returns (scores (batch,), gemm_bad_rows i32, eb_flagged i32).
+    """
+    top_in, gemm_bad, eb_flagged = _compute_top_input(params, dense, indices)
+
+    # Standardize per column (calibrated stats) then quantize onto the
+    # static lattice.
+    z = (top_in - params["top_mean"]) / params["top_std"]
+    x_alpha, x_beta = params["top_alpha"], params["top_beta"]
+    xq = jnp.clip(
+        jnp.round((z - x_beta) / x_alpha), 0, 255
+    ).astype(jnp.uint8)
+
+    for layer in params["top"]:
+        xq, bad = linear_forward(layer, xq, x_alpha, x_beta)
+        x_alpha, x_beta = layer["out_alpha"], layer["out_beta"]
+        gemm_bad += bad
+    logits_q, bad = linear_forward(params["head"], xq, x_alpha, x_beta)
+    gemm_bad += bad
+    logits = dequant_u8(
+        logits_q[:, 0], params["head"]["out_alpha"], params["head"]["out_beta"]
+    )
+    scores = jax.nn.sigmoid(logits)
+    return scores, gemm_bad, eb_flagged
+
+
+def make_jitted_forward(params):
+    """Close over params (they become HLO constants) for AOT lowering."""
+
+    @functools.partial(jax.jit)
+    def fn(dense, indices):
+        return forward(params, dense, indices)
+
+    return fn

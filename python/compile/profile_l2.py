@@ -1,0 +1,61 @@
+"""§Perf L1/L2 profiling: XLA cost analysis of the lowered graphs plus the
+VMEM/MXU estimate for the Pallas kernel's BlockSpec schedule.
+
+L1 note: `interpret=True` timings are CPU-numpy, not a TPU proxy — we
+optimize *structure* (block shapes, VMEM footprint, MXU utilization
+estimate) and measure wallclock only at L3 (rust). Run:
+
+    cd python && python -m compile.profile_l2
+"""
+
+import jax.numpy as jnp
+
+from . import aot
+
+
+def cost(lowered, name):
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns one dict per device
+        ca = ca[0]
+    flops = ca.get("flops", float("nan"))
+    bytes_ = ca.get("bytes accessed", float("nan"))
+    print(f"{name:<14} flops={flops:>14.3e}  bytes={bytes_:>12.3e}  "
+          f"arith.intensity={flops / max(bytes_, 1):>7.2f}")
+    return ca
+
+
+def vmem_mxu_estimate(bm, bn, bk, m, n1, k):
+    """Static VMEM/MXU estimate for the ABFT GEMM BlockSpec (DESIGN.md §8).
+
+    Per grid step the kernel holds one A tile (bm×bk u8), one B' tile
+    (bk×bn i8) and the C accumulator tile (bm×bn i32) in VMEM. MXU work
+    overhead of protection is (n+1)/n (one extra RHS column).
+    """
+    vmem = bm * bk + bk * bn + bm * bn * 4
+    print(f"L1 abft_gemm BlockSpec ({bm},{bn},{bk}):")
+    print(f"  VMEM/step = {vmem} B ({vmem / 1024:.1f} KiB; TPU budget ~16 MiB)")
+    n = n1 - 1
+    print(f"  MXU overhead of checksum column = (n+1)/n - 1 = {100.0 / n:.3f}%")
+    steps = ((m + bm - 1) // bm) * ((n1 + bn - 1) // bn) * ((k + bk - 1) // bk)
+    print(f"  grid steps = {steps}; HBM traffic/step = A {bm*bk}B + B' {bk*bn}B")
+    # MXU utilization estimate: u8 operands on the 128x128 systolic array.
+    util_m = min(bm, 128) / 128
+    util_n = min(bn, 128) / 128
+    print(f"  MXU tile fill = {util_m * util_n * 100:.1f}% "
+          f"(bm={bm} of 128 rows, bn={bn} of 128 cols)")
+
+
+def main():
+    print("== L2: XLA cost analysis of the AOT artifacts ==")
+    cost(aot.lower_gemm_kernel(), "abft_gemm")
+    cost(aot.lower_eb_kernel(), "eb_bag")
+    cost(aot.lower_model(1), "model_b1")
+    cost(aot.lower_model(8), "model_b8")
+    print()
+    print("== L1: Pallas ABFT GEMM structural estimate ==")
+    vmem_mxu_estimate(8, 128, 128, aot.GEMM_M, aot.GEMM_N + 1, aot.GEMM_K)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""AOT artifact regression tests — the interchange contract with rust.
+
+These pin the two failure modes discovered during bring-up (see
+DESIGN.md §Findings): elided large constants and serialized-proto
+incompatibility. If these fail, the rust side will load garbage weights
+or refuse the artifact entirely.
+"""
+
+import re
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as model_mod
+
+
+@pytest.fixture(scope="module")
+def model_text():
+    return aot.to_hlo_text(aot.lower_model(batch=1))
+
+
+def test_no_elided_constants(model_text):
+    # `constant({...})` is the elision marker; the 0.5.1 text parser reads
+    # it as garbage instead of erroring. Must never appear.
+    assert "constant({...})" not in model_text
+    assert "..." not in model_text, "any ellipsis in HLO text means elision"
+
+
+def test_constants_carry_real_payload(model_text):
+    # The baked i8 weight panels must appear as literal arrays: look for a
+    # wide s8 constant with actual digits.
+    m = re.search(r"s8\[\d+,\d+\]\{1,0\} constant\(\{ \{", model_text)
+    assert m, "no materialized s8 weight constant found"
+
+
+def test_gemm_kernel_text_is_plain_hlo():
+    text = aot.to_hlo_text(aot.lower_gemm_kernel())
+    assert "ENTRY" in text
+    # interpret=True must not leave Mosaic custom-calls behind.
+    assert "mosaic" not in text.lower()
+    for ty in ("u8[", "s8[", "s32["):
+        assert ty in text, f"missing {ty} in kernel HLO"
+
+
+def test_model_batch_consistency():
+    # The same request must score identically through model_b1 and as the
+    # first row of model_b8 (static quantization — no batch coupling).
+    params = model_mod.make_model()
+    cfg = params["cfg"]
+    rng = np.random.default_rng(3)
+    dense1 = rng.uniform(0, 1, (1, cfg["num_dense"])).astype(np.float32)
+    idx1 = rng.integers(0, min(cfg["tables"]), (1, len(cfg["tables"]), cfg["pooling"])).astype(
+        np.int32
+    )
+    dense8 = np.repeat(dense1, 8, axis=0)
+    idx8 = np.repeat(idx1, 8, axis=0)
+    s1, _, _ = model_mod.forward(params, jnp.asarray(dense1), jnp.asarray(idx1))
+    s8, _, _ = model_mod.forward(params, jnp.asarray(dense8), jnp.asarray(idx8))
+    np.testing.assert_allclose(np.asarray(s8), float(s1[0]), rtol=1e-6)
+
+
+def test_artifact_shapes_documented_in_aot():
+    # The rust integration tests hardcode these; fail loudly on drift.
+    assert (aot.GEMM_M, aot.GEMM_K, aot.GEMM_N) == (16, 512, 512)
+    assert (aot.EB_ROWS, aot.EB_D, aot.EB_BATCH, aot.EB_POOL) == (10_000, 64, 10, 100)
+    assert aot.MODEL_BATCHES == (1, 8)

@@ -1,0 +1,139 @@
+"""L2 model tests: shapes, ABFT evidence outputs, detection through the
+full graph, and AOT lowering round-trips."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model as model_mod
+
+
+TINY_CFG = {
+    "num_dense": 4,
+    "embedding_dim": 16,
+    "bottom_mlp": [32, 16],
+    "top_mlp": [32],
+    "tables": [300, 200],
+    "pooling": 10,
+    "seed": 7,
+}
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model_mod.make_model(TINY_CFG)
+
+
+def synth_inputs(params, batch, seed=0):
+    cfg = params["cfg"]
+    rng = np.random.default_rng(seed)
+    dense = jnp.asarray(rng.uniform(0, 1, (batch, cfg["num_dense"])).astype(np.float32))
+    idx = np.stack(
+        [
+            rng.integers(0, rows, (batch, cfg["pooling"]))
+            for rows in cfg["tables"]
+        ],
+        axis=1,
+    ).astype(np.int32)
+    return dense, jnp.asarray(idx)
+
+
+def test_forward_shapes_and_ranges(params):
+    dense, idx = synth_inputs(params, 6)
+    scores, gemm_bad, eb_flagged = model_mod.forward(params, dense, idx)
+    assert scores.shape == (6,)
+    s = np.asarray(scores)
+    assert ((s >= 0) & (s <= 1)).all()
+    assert int(gemm_bad) == 0
+    assert int(eb_flagged) == 0
+
+
+def test_forward_deterministic(params):
+    dense, idx = synth_inputs(params, 3, seed=5)
+    s1, _, _ = model_mod.forward(params, dense, idx)
+    s2, _, _ = model_mod.forward(params, dense, idx)
+    assert (np.asarray(s1) == np.asarray(s2)).all()
+
+
+def test_corrupted_weight_detected_through_graph(params):
+    import copy
+
+    p2 = {**params, "bottom": [dict(l) for l in params["bottom"]]}
+    b_enc = np.asarray(p2["bottom"][0]["b_enc"]).copy()
+    b_enc[2, 3] = np.int8(b_enc[2, 3] ^ 0x40)  # payload bit flip post-encode
+    p2["bottom"][0] = {**p2["bottom"][0], "b_enc": jnp.asarray(b_enc)}
+    dense, idx = synth_inputs(params, 4, seed=9)
+    _, gemm_bad, _ = model_mod.forward(p2, dense, idx)
+    assert int(gemm_bad) > 0, "post-encode weight corruption must be flagged"
+
+
+def test_corrupted_table_detected_through_graph(params):
+    p2 = {**params, "tables": [dict(t) for t in params["tables"]]}
+    codes = np.asarray(p2["tables"][0]["codes"]).copy()
+    codes[:, 0] ^= 0x80  # corrupt every row's first code: any bag hits it
+    p2["tables"][0] = {**p2["tables"][0], "codes": jnp.asarray(codes)}
+    dense, idx = synth_inputs(params, 4, seed=11)
+    _, _, eb_flagged = model_mod.forward(p2, dense, idx)
+    assert int(eb_flagged) > 0
+
+
+def test_interaction_matches_manual():
+    feats = jnp.asarray(
+        np.arange(2 * 3 * 4, dtype=np.float32).reshape(2, 3, 4)
+    )
+    got = np.asarray(model_mod.pairwise_interaction(feats))
+    for b in range(2):
+        manual = []
+        for g1 in range(3):
+            for g2 in range(g1 + 1, 3):
+                manual.append(float(np.dot(feats[b, g1], feats[b, g2])))
+        np.testing.assert_allclose(got[b], manual, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering
+# ---------------------------------------------------------------------------
+
+
+def test_lowered_gemm_kernel_parses_and_runs():
+    lowered = aot.lower_gemm_kernel()
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    # Execute the lowered computation via jax and compare with direct call.
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.integers(0, 256, (aot.GEMM_M, aot.GEMM_K), dtype=np.uint8))
+    b = jnp.asarray(
+        rng.integers(-128, 128, (aot.GEMM_K, aot.GEMM_N + 1), dtype=np.int8)
+    )
+    compiled = lowered.compile()
+    c, residuals = compiled(a, b)
+    from compile.kernels import abft_gemm
+
+    c2 = abft_gemm.abft_qgemm(a, b)
+    assert (np.asarray(c) == np.asarray(c2)).all()
+    assert residuals.shape == (aot.GEMM_M,)
+
+
+def test_lowered_model_executes(tmp_path):
+    lowered = aot.lower_model(batch=1)
+    compiled = lowered.compile()
+    params = model_mod.make_model()
+    cfg = params["cfg"]
+    rng = np.random.default_rng(2)
+    dense = jnp.asarray(rng.uniform(0, 1, (1, cfg["num_dense"])).astype(np.float32))
+    idx = jnp.asarray(
+        rng.integers(0, min(cfg["tables"]), (1, len(cfg["tables"]), cfg["pooling"]))
+        .astype(np.int32)
+    )
+    scores, gemm_bad, eb_flagged = compiled(dense, idx)
+    assert 0.0 <= float(scores[0]) <= 1.0
+    assert int(gemm_bad) == 0
+    assert int(eb_flagged) == 0
+
+
+def test_hlo_text_has_no_custom_calls():
+    # interpret=True must lower to plain HLO the CPU PJRT client can run —
+    # a Mosaic custom-call would break the rust loader.
+    text = aot.to_hlo_text(aot.lower_gemm_kernel())
+    assert "custom-call" not in text or "mosaic" not in text.lower()

@@ -1,0 +1,75 @@
+"""Requantization kernel vs a plain-jnp reference (Eq 1 / Fig 1, §IV-A3
+exclude-checksum semantics)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels import abft_gemm, ref, requantize
+
+
+def reference_requant(c, arow, bcol, x_qp, w_qp, out_qp, k, relu):
+    payload = np.asarray(c)[:, :-1].astype(np.float32)
+    real = (
+        x_qp[0] * w_qp[0] * payload
+        + x_qp[0] * w_qp[1] * np.asarray(arow, dtype=np.float32)[:, None]
+        + w_qp[0] * x_qp[1] * np.asarray(bcol, dtype=np.float32)[None, :]
+        + k * x_qp[1] * w_qp[1]
+    )
+    y = np.clip(np.round((real - out_qp[1]) / out_qp[0]), 0, 255)
+    if relu:
+        zero = np.clip(np.round((0.0 - out_qp[1]) / out_qp[0]), 0, 255)
+        y = np.maximum(y, zero)
+    return y.astype(np.uint8)
+
+
+@pytest.mark.parametrize("m,k,n,relu", [(1, 16, 8, False), (5, 64, 32, True), (16, 128, 64, True)])
+def test_kernel_matches_reference(m, k, n, relu):
+    rng = np.random.default_rng(m * 31 + k)
+    a = jnp.asarray(rng.integers(0, 256, (m, k), dtype=np.uint8))
+    b = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
+    b_enc = ref.encode(b)
+    c = abft_gemm.abft_qgemm(a, b_enc)
+    arow = jnp.sum(a.astype(jnp.int32), axis=1)
+    bcol = jnp.sum(b.astype(jnp.int32), axis=0)
+    x_qp = (np.float32(1 / 255), np.float32(0.0))
+    w_qp = (np.float32(0.01), np.float32(-0.5))
+    out_qp = (np.float32(8.4 / 255), np.float32(-4.0))
+    got = requantize.requantize_exclude_last_col(c, arow, bcol, x_qp, w_qp, out_qp, k, relu=relu)
+    want = reference_requant(c, arow, bcol, x_qp, w_qp, out_qp, k, relu)
+    # round() ties (x.5) may resolve differently across backends; allow
+    # off-by-one codes at exact ties, exact match elsewhere.
+    diff = np.abs(np.asarray(got).astype(np.int32) - want.astype(np.int32))
+    assert diff.max() <= 1
+    assert (diff > 0).mean() < 0.02
+
+
+def test_checksum_column_really_excluded():
+    rng = np.random.default_rng(9)
+    m, k, n = 3, 8, 6
+    a = jnp.asarray(rng.integers(0, 256, (m, k), dtype=np.uint8))
+    b = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
+    c = np.asarray(abft_gemm.abft_qgemm(a, ref.encode(b))).copy()
+    arow = jnp.asarray(np.asarray(a).astype(np.int32).sum(axis=1))
+    bcol = jnp.asarray(np.asarray(b).astype(np.int32).sum(axis=0))
+    qp = (np.float32(0.01), np.float32(0.0))
+    out = (np.float32(0.1), np.float32(-10.0))
+    y1 = requantize.requantize_exclude_last_col(jnp.asarray(c), arow, bcol, qp, qp, out, k)
+    c[:, -1] = 0x7FFFFFF  # trash the checksum column
+    y2 = requantize.requantize_exclude_last_col(jnp.asarray(c), arow, bcol, qp, qp, out, k)
+    assert (np.asarray(y1) == np.asarray(y2)).all(), "checksum column leaked into output"
+
+
+def test_output_shape_drops_column():
+    c = jnp.zeros((4, 11), jnp.int32)
+    y = requantize.requantize_exclude_last_col(
+        c,
+        jnp.zeros((4,), jnp.int32),
+        jnp.zeros((10,), jnp.int32),
+        (np.float32(1), np.float32(0)),
+        (np.float32(1), np.float32(0)),
+        (np.float32(1), np.float32(0)),
+        7,
+    )
+    assert y.shape == (4, 10)
+    assert y.dtype == jnp.uint8

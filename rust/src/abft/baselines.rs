@@ -1,0 +1,243 @@
+//! Baseline / ablation detectors the paper argues against (§II, §IV-A):
+//!
+//! * [`EncodeA`] — checksum *row* appended to A instead of a column on B
+//!   (§IV-A1's rejected alternative; must re-encode per call).
+//! * [`Blas2Abft`] — keep S_B in a separate vector and verify with a
+//!   matrix-vector product (§IV-A3's rejected "straightforward"
+//!   implementation ①-④).
+//! * [`Full32Abft`] — 32-bit (un-modulo'd) checksum column: perfect
+//!   detection, but the checksum cannot ride in the i8 panel (§IV-A2's
+//!   rejected alternative).
+//! * [`dmr_gemm`] — dual modular redundancy: run twice and compare (§II,
+//!   the ≥100%-overhead strawman).
+
+use crate::gemm::{gemm_exec, gemm_naive, PackedB};
+
+/// Encode-A ABFT: append the column-sum row `S_A[j] = Σ_i A[i][j]` as row
+/// m of A, multiply, and verify per *column* of C. Detects errors in A and
+/// C but NOT in B (the paper's §IV-A1 coverage argument).
+pub struct EncodeA {
+    pub modulus: i32,
+}
+
+impl EncodeA {
+    pub fn new() -> Self {
+        Self { modulus: 255 }
+    }
+
+    /// Run one protected GEMM. The checksum row is re-encoded on every call
+    /// (A is the transient activation operand — nothing to amortize).
+    /// Returns (C payload m×n, corrupted column indices).
+    pub fn exec(
+        &self,
+        a: &[u8],
+        packed_b: &PackedB,
+        m: usize,
+    ) -> (Vec<i32>, Vec<usize>) {
+        let k = packed_b.k;
+        assert_eq!(packed_b.extra_cols, 0, "encode-A uses a plain packed B");
+        let n = packed_b.n;
+        // Augment A with the mod-reduced column-sum row.
+        let mut a_aug = vec![0u8; (m + 1) * k];
+        a_aug[..m * k].copy_from_slice(a);
+        for p in 0..k {
+            let mut s = 0i64;
+            for i in 0..m {
+                s += a[i * k + p] as i64;
+            }
+            a_aug[m * k + p] = (s % self.modulus as i64) as u8;
+        }
+        let c = gemm_exec(&a_aug, packed_b, m + 1);
+        // Verify per column: Σ_i C[i][j] ≡ C[m][j] (mod modulus).
+        let mut bad = Vec::new();
+        for j in 0..n {
+            let mut t = 0i64;
+            for i in 0..m {
+                t += c[i * n + j] as i64;
+            }
+            if (t - c[m * n + j] as i64) % self.modulus as i64 != 0 {
+                bad.push(j);
+            }
+        }
+        (c[..m * n].to_vec(), bad)
+    }
+}
+
+impl Default for EncodeA {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// BLAS-2 ABFT (§IV-A3 alternative ①-④): S_B kept separate; verification
+/// computes the matrix-vector product `A · S_B` (a second pass over A)
+/// and the row sums of C.
+pub struct Blas2Abft {
+    pub s_b: Vec<i32>,
+    pub modulus: i32,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl Blas2Abft {
+    pub fn new(b: &[i8], k: usize, n: usize, modulus: i32) -> Self {
+        let mut s_b = vec![0i32; k];
+        for p in 0..k {
+            let s: i32 = b[p * n..(p + 1) * n].iter().map(|&v| v as i32).sum();
+            s_b[p] = s % modulus;
+        }
+        Self { s_b, modulus, k, n }
+    }
+
+    /// Run GEMM (unaugmented) then the BLAS-2 verification.
+    pub fn exec(&self, a: &[u8], packed_b: &PackedB, m: usize) -> (Vec<i32>, Vec<usize>) {
+        assert_eq!(packed_b.extra_cols, 0);
+        let c = gemm_exec(a, packed_b, m);
+        let bad = self.verify(a, &c, m);
+        (c, bad)
+    }
+
+    pub fn verify(&self, a: &[u8], c: &[i32], m: usize) -> Vec<usize> {
+        let (k, n) = (self.k, self.n);
+        let mut bad = Vec::new();
+        for i in 0..m {
+            // gemv row: Σ_p A[i][p] · S_B[p]
+            let mut ref_sum = 0i64;
+            for p in 0..k {
+                ref_sum += a[i * k + p] as i64 * self.s_b[p] as i64;
+            }
+            let mut t = 0i64;
+            for &v in &c[i * n..(i + 1) * n] {
+                t += v as i64;
+            }
+            if (t - ref_sum) % self.modulus as i64 != 0 {
+                bad.push(i);
+            }
+        }
+        bad
+    }
+}
+
+/// 32-bit exact checksum ABFT: S_B held un-modulo'd in i32; the checksum
+/// "column" is computed with a separate i32 gemv (it cannot ride in the i8
+/// panel). Exact equality check → detects ANY row corruption.
+pub struct Full32Abft {
+    pub s_b: Vec<i32>,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl Full32Abft {
+    pub fn new(b: &[i8], k: usize, n: usize) -> Self {
+        let mut s_b = vec![0i32; k];
+        for p in 0..k {
+            s_b[p] = b[p * n..(p + 1) * n].iter().map(|&v| v as i32).sum();
+        }
+        Self { s_b, k, n }
+    }
+
+    pub fn exec(&self, a: &[u8], packed_b: &PackedB, m: usize) -> (Vec<i32>, Vec<usize>) {
+        assert_eq!(packed_b.extra_cols, 0);
+        let c = gemm_exec(a, packed_b, m);
+        let bad = self.verify(a, &c, m);
+        (c, bad)
+    }
+
+    pub fn verify(&self, a: &[u8], c: &[i32], m: usize) -> Vec<usize> {
+        let (k, n) = (self.k, self.n);
+        let mut bad = Vec::new();
+        for i in 0..m {
+            let mut ref_sum = 0i64;
+            for p in 0..k {
+                ref_sum += a[i * k + p] as i64 * self.s_b[p] as i64;
+            }
+            let t: i64 = c[i * n..(i + 1) * n].iter().map(|&v| v as i64).sum();
+            if t != ref_sum {
+                bad.push(i);
+            }
+        }
+        bad
+    }
+}
+
+/// Dual modular redundancy: compute twice, compare element-wise.
+/// Detection is perfect for any transient compute error but overhead is
+/// ≥100% (§II) — the strawman the paper's <20% figure is measured against.
+pub fn dmr_gemm(a: &[u8], b: &[i8], m: usize, k: usize, n: usize) -> (Vec<i32>, bool) {
+    let packed = PackedB::pack(b, k, n);
+    let c1 = gemm_exec(a, &packed, m);
+    let c2 = gemm_naive(a, b, m, k, n);
+    let mismatch = c1 != c2;
+    (c1, mismatch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_ab(rng: &mut Pcg32, m: usize, k: usize, n: usize) -> (Vec<u8>, Vec<i8>) {
+        let mut a = vec![0u8; m * k];
+        let mut b = vec![0i8; k * n];
+        rng.fill_u8(&mut a);
+        rng.fill_i8(&mut b);
+        (a, b)
+    }
+
+    #[test]
+    fn encode_a_clean_and_detects_c_error() {
+        let mut rng = Pcg32::new(61);
+        let (m, k, n) = (8, 64, 32);
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let packed = PackedB::pack(&b, k, n);
+        let enc = EncodeA::new();
+        let (_, bad) = enc.exec(&a, &packed, m);
+        assert!(bad.is_empty());
+        // Encode-A cannot see B corruption by construction: corrupt B,
+        // rebuild, and observe the checksums still pass (coverage argument).
+        let mut b_bad = b.clone();
+        b_bad[5] = b_bad[5].wrapping_add(3);
+        let packed_bad = PackedB::pack(&b_bad, k, n);
+        let (_, bad2) = enc.exec(&a, &packed_bad, m);
+        assert!(
+            bad2.is_empty(),
+            "encode-A is blind to B errors (paper §IV-A1)"
+        );
+    }
+
+    #[test]
+    fn blas2_equivalent_verdict_to_blas3() {
+        let mut rng = Pcg32::new(62);
+        let (m, k, n) = (6, 96, 48);
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let packed = PackedB::pack(&b, k, n);
+        let blas2 = Blas2Abft::new(&b, k, n, 127);
+        let (mut c, bad) = blas2.exec(&a, &packed, m);
+        assert!(bad.is_empty());
+        c[2 * n + 1] ^= 1 << 17;
+        assert_eq!(blas2.verify(&a, &c, m), vec![2]);
+    }
+
+    #[test]
+    fn full32_detects_multiples_of_127() {
+        let mut rng = Pcg32::new(63);
+        let (m, k, n) = (4, 32, 16);
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let packed = PackedB::pack(&b, k, n);
+        let f32abft = Full32Abft::new(&b, k, n);
+        let (mut c, bad) = f32abft.exec(&a, &packed, m);
+        assert!(bad.is_empty());
+        // Delta divisible by 127 escapes mod-127 ABFT but not full-32.
+        c[0] += 127 * 9;
+        assert_eq!(f32abft.verify(&a, &c, m), vec![0]);
+    }
+
+    #[test]
+    fn dmr_clean_run_matches() {
+        let mut rng = Pcg32::new(64);
+        let (m, k, n) = (3, 40, 20);
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let (_, mismatch) = dmr_gemm(&a, &b, m, k, n);
+        assert!(!mismatch);
+    }
+}

@@ -1,0 +1,525 @@
+//! ABFT for low-precision EmbeddingBag (paper §V, Algorithm 2).
+//!
+//! One 32-bit *integer* row-sum column `C_T` is precomputed per table
+//! (`C_T[i] = Σ_j codes[i][j]` — unscaled, to avoid accumulating float
+//! round-off, §V-B). Per bag, the check is Eq 5:
+//!
+//! `Σ_j R[j]  ≈  Σ_{i∈I} w_i · (α_i · C_T[i] + d · β_i)`
+//!
+//! compared under a *relative round-off bound* (1e-5 in the paper §V-D —
+//! deliberately loose: small float fluctuations don't move inference
+//! results, so trading low-bit sensitivity for a low false-positive rate).
+
+use crate::embedding::{QuantTable4, QuantTable8};
+
+/// Paper §V-D: relative bound separating round-off from soft error.
+pub const DEFAULT_REL_BOUND: f64 = 1e-5;
+
+/// Accumulation precision of the verifier sums.
+///
+/// The paper's implementation accumulates RSum/CSum in f32 — its own
+/// round-off sits right at the 1e-5 bound, which is where Table III's
+/// 9.5% false positives and 47% low-bit detection come from. This repo
+/// defaults to f64 on the serving path (zero FPs at the same bound) and
+/// uses [`CheckPrecision::F32`] in the campaign to reproduce the paper's
+/// operating point. See DESIGN.md §Findings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CheckPrecision {
+    F32,
+    F64,
+}
+
+/// Precomputed ABFT state for one embedding table.
+#[derive(Clone, Debug)]
+pub struct EbChecksum {
+    /// Integer code row sums (the `C_T` column).
+    pub c_t: Vec<i32>,
+    pub d: usize,
+    pub rel_bound: f64,
+    pub precision: CheckPrecision,
+}
+
+impl EbChecksum {
+    /// Build from an 8-bit table (done once, offline — like the weight
+    /// checksums, the table is trained and then immutable §V-C).
+    pub fn build_8(table: &QuantTable8) -> Self {
+        Self {
+            c_t: (0..table.rows).map(|i| table.code_row_sum(i)).collect(),
+            d: table.d,
+            rel_bound: DEFAULT_REL_BOUND,
+            precision: CheckPrecision::F64,
+        }
+    }
+
+    pub fn build_4(table: &QuantTable4) -> Self {
+        Self {
+            c_t: (0..table.rows).map(|i| table.code_row_sum(i)).collect(),
+            d: table.d,
+            rel_bound: DEFAULT_REL_BOUND,
+            precision: CheckPrecision::F64,
+        }
+    }
+
+    pub fn with_bound(mut self, rel_bound: f64) -> Self {
+        self.rel_bound = rel_bound;
+        self
+    }
+
+    pub fn with_precision(mut self, precision: CheckPrecision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// Bytes of checksum storage (the §V-C `32/(p·d)` memory overhead).
+    pub fn bytes(&self) -> usize {
+        self.c_t.len() * 4
+    }
+
+    /// Checksum side of Eq 5 for one bag:
+    /// `Σ_{i∈I} w_i (α_i C_T[i] + d β_i)`, accumulated per `precision`.
+    pub fn expected_sum(
+        &self,
+        alpha: &[f32],
+        beta: &[f32],
+        indices: &[usize],
+        weights: Option<&[f32]>,
+    ) -> f64 {
+        match self.precision {
+            CheckPrecision::F64 => {
+                let d = self.d as f64;
+                let mut acc = 0f64;
+                for (pos, &i) in indices.iter().enumerate() {
+                    let w = weights.map_or(1.0, |w| w[pos]) as f64;
+                    acc += w * (alpha[i] as f64 * self.c_t[i] as f64 + d * beta[i] as f64);
+                }
+                acc
+            }
+            CheckPrecision::F32 => {
+                let d = self.d as f32;
+                let mut acc = 0f32;
+                for (pos, &i) in indices.iter().enumerate() {
+                    let w = weights.map_or(1.0f32, |w| w[pos]);
+                    acc += w * (alpha[i] * self.c_t[i] as f32 + d * beta[i]);
+                }
+                acc as f64
+            }
+        }
+    }
+
+    /// Algorithm 2 lines 2-7: verify one bag result `r` (len d).
+    /// Returns `true` if a soft error is flagged.
+    pub fn check_bag(
+        &self,
+        alpha: &[f32],
+        beta: &[f32],
+        indices: &[usize],
+        weights: Option<&[f32]>,
+        r: &[f32],
+    ) -> bool {
+        assert_eq!(r.len(), self.d);
+        let rsum: f64 = match self.precision {
+            CheckPrecision::F64 => r.iter().map(|&x| x as f64).sum(),
+            CheckPrecision::F32 => r.iter().sum::<f32>() as f64,
+        };
+        let csum = self.expected_sum(alpha, beta, indices, weights);
+        let scale = rsum.abs().max(csum.abs()).max(1.0);
+        (rsum - csum).abs() > self.rel_bound * scale
+    }
+
+    /// Batched verification (offsets convention as in
+    /// [`crate::embedding::embedding_bag_8`]): returns flagged bag indices.
+    pub fn check_batch(
+        &self,
+        alpha: &[f32],
+        beta: &[f32],
+        indices: &[usize],
+        offsets: &[usize],
+        weights: Option<&[f32]>,
+        result: &[f32],
+    ) -> Vec<usize> {
+        let batch = offsets.len();
+        assert_eq!(result.len(), batch * self.d);
+        let mut flagged = Vec::new();
+        for b in 0..batch {
+            let start = offsets[b];
+            let end = if b + 1 < batch { offsets[b + 1] } else { indices.len() };
+            let w = weights.map(|w| &w[start..end]);
+            if self.check_bag(
+                alpha,
+                beta,
+                &indices[start..end],
+                w,
+                &result[b * self.d..(b + 1) * self.d],
+            ) {
+                flagged.push(b);
+            }
+        }
+        flagged
+    }
+
+    /// Build the cache-optimal fused layout (see [`FusedEbAbft`]).
+    pub fn fuse(self, table: &QuantTable8) -> FusedEbAbft {
+        FusedEbAbft::new(table, self)
+    }
+
+    /// §V-C FLOP overhead for a bag of `m` lookups: `(3m + d) / (3 m d)`.
+    pub fn theoretical_overhead(m: usize, d: usize) -> f64 {
+        1.0 / d as f64 + 1.0 / (3.0 * m as f64)
+    }
+
+    /// §V-C memory overhead fraction for a p-bit table: `32 / (p d)`.
+    pub fn memory_overhead(p_bits: usize, d: usize) -> f64 {
+        32.0 / (p_bits as f64 * d as f64)
+    }
+}
+
+/// Per-row metadata interleaved for the fused protected bag: one 16-byte
+/// record instead of three parallel arrays, so the row's α, β and C_T
+/// arrive on a single cache line with one miss.
+#[derive(Clone, Copy, Debug)]
+#[repr(C)]
+pub struct RowMeta {
+    pub alpha: f32,
+    pub beta: f32,
+    pub c_t: i32,
+    _pad: i32,
+}
+
+/// Cache-optimal protected EmbeddingBag (§Perf optimization).
+///
+/// The naive Algorithm-2 deployment re-walks the index list after the bag
+/// to gather `C_T[i]` — with a cold multi-GB table that is one *extra
+/// random cache miss per lookup* on top of the bag's own row fetch, which
+/// measured at up to ~34% overhead for d=32 (vs the ~4% FLOP analysis).
+/// `FusedEbAbft` (a) interleaves (α, β, C_T) in one record, so the
+/// unprotected path's two metadata misses (α[], β[]) and the checksum's
+/// C_T miss collapse into one, and (b) accumulates CSum *inside* the bag
+/// loop while the record is hot. The protected bag then issues the same
+/// number of random streams as the unprotected one.
+#[derive(Clone, Debug)]
+pub struct FusedEbAbft {
+    pub meta: Vec<RowMeta>,
+    pub d: usize,
+    pub rel_bound: f64,
+}
+
+impl FusedEbAbft {
+    pub fn new(table: &QuantTable8, checksum: EbChecksum) -> Self {
+        assert_eq!(checksum.c_t.len(), table.rows);
+        let meta = (0..table.rows)
+            .map(|i| RowMeta {
+                alpha: table.alpha[i],
+                beta: table.beta[i],
+                c_t: checksum.c_t[i],
+                _pad: 0,
+            })
+            .collect();
+        Self {
+            meta,
+            d: table.d,
+            rel_bound: checksum.rel_bound,
+        }
+    }
+
+    /// Fused protected bag: gather + reduce + Eq-5 verification in one
+    /// pass. Returns `true` if the bag is flagged. `out` is zeroed first.
+    pub fn bag_sum_checked(
+        &self,
+        table: &QuantTable8,
+        indices: &[usize],
+        weights: Option<&[f32]>,
+        prefetch: bool,
+        out: &mut [f32],
+    ) -> bool {
+        let d = table.d;
+        assert_eq!(d, self.d);
+        assert_eq!(out.len(), d);
+        out.fill(0.0);
+        if let Some(w) = weights {
+            assert_eq!(w.len(), indices.len());
+        }
+        let mut csum = 0f64;
+        for (pos, &idx) in indices.iter().enumerate() {
+            assert!(idx < table.rows, "index {idx} out of range");
+            if prefetch {
+                if let Some(&nxt) = indices.get(pos + crate::embedding::PREFETCH_DISTANCE) {
+                    // Prefetch both the row and its meta record.
+                    prefetch_bytes(&table.data, nxt * d);
+                    prefetch_meta(&self.meta, nxt);
+                }
+            }
+            let w = weights.map_or(1.0f32, |w| w[pos]);
+            let m = self.meta[idx];
+            let a = m.alpha * w;
+            let b = m.beta * w;
+            // CSum rides along while the meta record is in register.
+            csum += (a * m.c_t as f32 + d as f32 * b) as f64;
+            let row = table.row(idx);
+            for (o, &q) in out.iter_mut().zip(row) {
+                *o += a * q as f32 + b;
+            }
+        }
+        let rsum: f64 = out.iter().map(|&x| x as f64).sum();
+        let scale = rsum.abs().max(csum.abs()).max(1.0);
+        (rsum - csum).abs() > self.rel_bound * scale
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.meta.len() * std::mem::size_of::<RowMeta>()
+    }
+}
+
+/// Fused protected bag over a 4-bit (nibble-packed) table — the paper's
+/// §V-C p=4 configuration, where the checksum's relative memory overhead
+/// doubles (32/(4d)) but the bag itself halves its traffic.
+#[derive(Clone, Debug)]
+pub struct FusedEbAbft4 {
+    pub meta: Vec<RowMeta>,
+    pub d: usize,
+    pub rel_bound: f64,
+}
+
+impl FusedEbAbft4 {
+    pub fn new(table: &QuantTable4, checksum: EbChecksum) -> Self {
+        assert_eq!(checksum.c_t.len(), table.rows);
+        let meta = (0..table.rows)
+            .map(|i| RowMeta {
+                alpha: table.alpha[i],
+                beta: table.beta[i],
+                c_t: checksum.c_t[i],
+                _pad: 0,
+            })
+            .collect();
+        Self {
+            meta,
+            d: table.d,
+            rel_bound: checksum.rel_bound,
+        }
+    }
+
+    /// Fused 4-bit protected bag; returns `true` if flagged.
+    pub fn bag_sum_checked(
+        &self,
+        table: &QuantTable4,
+        indices: &[usize],
+        weights: Option<&[f32]>,
+        out: &mut [f32],
+    ) -> bool {
+        let d = table.d;
+        assert_eq!(d, self.d);
+        assert_eq!(out.len(), d);
+        out.fill(0.0);
+        if let Some(w) = weights {
+            assert_eq!(w.len(), indices.len());
+        }
+        let mut csum = 0f64;
+        for (pos, &idx) in indices.iter().enumerate() {
+            assert!(idx < table.rows, "index {idx} out of range");
+            let w = weights.map_or(1.0f32, |w| w[pos]);
+            let m = self.meta[idx];
+            let a = m.alpha * w;
+            let b = m.beta * w;
+            csum += (a * m.c_t as f32 + d as f32 * b) as f64;
+            for (j, o) in out.iter_mut().enumerate() {
+                *o += a * table.code(idx, j) as f32 + b;
+            }
+        }
+        let rsum: f64 = out.iter().map(|&x| x as f64).sum();
+        let scale = rsum.abs().max(csum.abs()).max(1.0);
+        (rsum - csum).abs() > self.rel_bound * scale
+    }
+}
+
+#[inline]
+fn prefetch_bytes(data: &[u8], offset: usize) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        if offset < data.len() {
+            core::arch::x86_64::_mm_prefetch(
+                data.as_ptr().add(offset) as *const i8,
+                core::arch::x86_64::_MM_HINT_T0,
+            );
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (data, offset);
+    }
+}
+
+#[inline]
+fn prefetch_meta(meta: &[RowMeta], idx: usize) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        if idx < meta.len() {
+            core::arch::x86_64::_mm_prefetch(
+                meta.as_ptr().add(idx) as *const i8,
+                core::arch::x86_64::_MM_HINT_T0,
+            );
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (meta, idx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::{bag_sum_4, bag_sum_8};
+    use crate::util::rng::Pcg32;
+
+    fn setup(rows: usize, d: usize, seed: u64) -> (QuantTable8, EbChecksum, Pcg32) {
+        let mut rng = Pcg32::new(seed);
+        let table = QuantTable8::random(rows, d, &mut rng);
+        let cs = EbChecksum::build_8(&table);
+        (table, cs, rng)
+    }
+
+    #[test]
+    fn clean_bag_passes() {
+        let (table, cs, mut rng) = setup(10_000, 64, 41);
+        for _ in 0..50 {
+            let indices: Vec<usize> = (0..100).map(|_| rng.gen_range(0, 10_000)).collect();
+            let mut r = vec![0f32; 64];
+            bag_sum_8(&table, &indices, None, false, &mut r);
+            assert!(!cs.check_bag(&table.alpha, &table.beta, &indices, None, &r));
+        }
+    }
+
+    #[test]
+    fn clean_weighted_bag_passes() {
+        let (table, cs, mut rng) = setup(1000, 128, 42);
+        let indices: Vec<usize> = (0..80).map(|_| rng.gen_range(0, 1000)).collect();
+        let weights: Vec<f32> = (0..80).map(|_| rng.next_f32() * 2.0).collect();
+        let mut r = vec![0f32; 128];
+        bag_sum_8(&table, &indices, Some(&weights), false, &mut r);
+        assert!(!cs.check_bag(&table.alpha, &table.beta, &indices, Some(&weights), &r));
+    }
+
+    #[test]
+    fn high_bit_flip_in_result_detected() {
+        let (table, cs, mut rng) = setup(1000, 64, 43);
+        let indices: Vec<usize> = (0..100).map(|_| rng.gen_range(0, 1000)).collect();
+        let mut r = vec![0f32; 64];
+        bag_sum_8(&table, &indices, None, false, &mut r);
+        // Flip a high mantissa/exponent bit of one output element.
+        let bits = r[10].to_bits() ^ (1 << 28);
+        r[10] = f32::from_bits(bits);
+        assert!(cs.check_bag(&table.alpha, &table.beta, &indices, None, &r));
+    }
+
+    #[test]
+    fn tiny_perturbation_below_bound_ignored() {
+        // The loose bound is a *feature* (§V-D): sub-round-off fluctuations
+        // must not trigger.
+        let (table, cs, mut rng) = setup(1000, 64, 44);
+        let indices: Vec<usize> = (0..100).map(|_| rng.gen_range(0, 1000)).collect();
+        let mut r = vec![0f32; 64];
+        bag_sum_8(&table, &indices, None, false, &mut r);
+        r[3] += r[3].abs() * 1e-7;
+        assert!(!cs.check_bag(&table.alpha, &table.beta, &indices, None, &r));
+    }
+
+    #[test]
+    fn table_corruption_detected_via_result() {
+        // Corrupt a code in the table AFTER checksums are built; the bag
+        // computed from the corrupted table mismatches C_T.
+        let (mut table, cs, mut rng) = setup(1000, 64, 45);
+        let indices: Vec<usize> = (0..100).map(|_| rng.gen_range(0, 1000)).collect();
+        let victim = indices[17];
+        table.data[victim * 64 + 5] ^= 1 << 7; // high bit of a code
+        let mut r = vec![0f32; 64];
+        bag_sum_8(&table, &indices, None, false, &mut r);
+        assert!(cs.check_bag(&table.alpha, &table.beta, &indices, None, &r));
+    }
+
+    #[test]
+    fn batch_flags_only_corrupted_bag() {
+        let (table, cs, mut rng) = setup(2000, 32, 46);
+        let batch = 10;
+        let per = 50;
+        let indices: Vec<usize> = (0..batch * per).map(|_| rng.gen_range(0, 2000)).collect();
+        let offsets: Vec<usize> = (0..batch).map(|b| b * per).collect();
+        let mut result = crate::embedding::embedding_bag_8(&table, &indices, &offsets, None, false);
+        let bits = result[7 * 32 + 3].to_bits() ^ (1 << 30);
+        result[7 * 32 + 3] = f32::from_bits(bits);
+        let flagged = cs.check_batch(&table.alpha, &table.beta, &indices, &offsets, None, &result);
+        assert_eq!(flagged, vec![7]);
+    }
+
+    #[test]
+    fn four_bit_table_checksum_works() {
+        let mut rng = Pcg32::new(47);
+        let table = QuantTable4::random(500, 48, &mut rng);
+        let cs = EbChecksum::build_4(&table);
+        let indices: Vec<usize> = (0..60).map(|_| rng.gen_range(0, 500)).collect();
+        let mut r = vec![0f32; 48];
+        bag_sum_4(&table, &indices, None, false, &mut r);
+        assert!(!cs.check_bag(&table.alpha, &table.beta, &indices, None, &r));
+        let bits = r[0].to_bits() ^ (1 << 27);
+        r[0] = f32::from_bits(bits);
+        assert!(cs.check_bag(&table.alpha, &table.beta, &indices, None, &r));
+    }
+
+    #[test]
+    fn eq5_algebra_exact_in_f64() {
+        // Verify the §V-B derivation directly: computing R in f64 makes both
+        // sides of Eq 5 agree to ~1e-12 relative.
+        let (table, cs, mut rng) = setup(300, 96, 48);
+        let indices: Vec<usize> = (0..40).map(|_| rng.gen_range(0, 300)).collect();
+        let mut r = vec![0f64; 96];
+        for &i in &indices {
+            let (a, b) = (table.alpha[i] as f64, table.beta[i] as f64);
+            for (j, &q) in table.row(i).iter().enumerate() {
+                r[j] += a * q as f64 + b;
+            }
+        }
+        let rsum: f64 = r.iter().sum();
+        let csum = cs.expected_sum(&table.alpha, &table.beta, &indices, None);
+        assert!((rsum - csum).abs() <= 1e-9 * rsum.abs().max(1.0));
+    }
+
+    #[test]
+    fn fused_bag_matches_unfused_and_detects() {
+        let (table, cs, mut rng) = setup(2000, 64, 49);
+        let fused = cs.clone().fuse(&table);
+        for trial in 0..20 {
+            let indices: Vec<usize> = (0..100).map(|_| rng.gen_range(0, 2000)).collect();
+            let mut r_fused = vec![0f32; 64];
+            let flagged = fused.bag_sum_checked(&table, &indices, None, trial % 2 == 0, &mut r_fused);
+            assert!(!flagged, "clean fused bag flagged (trial {trial})");
+            let mut r_plain = vec![0f32; 64];
+            crate::embedding::bag_sum_8(&table, &indices, None, false, &mut r_plain);
+            assert_eq!(r_fused, r_plain, "fused bag must be bitwise identical");
+        }
+        // Detection through the fused path: corrupt a touched row.
+        let mut table2 = table.clone();
+        let indices: Vec<usize> = (0..100).map(|_| rng.gen_range(0, 2000)).collect();
+        table2.data[indices[3] * 64 + 7] ^= 0x80;
+        let mut r = vec![0f32; 64];
+        assert!(fused.bag_sum_checked(&table2, &indices, None, false, &mut r));
+    }
+
+    #[test]
+    fn fused_weighted_matches() {
+        let (table, cs, mut rng) = setup(500, 32, 50);
+        let fused = cs.clone().fuse(&table);
+        let indices: Vec<usize> = (0..40).map(|_| rng.gen_range(0, 500)).collect();
+        let weights: Vec<f32> = (0..40).map(|_| rng.next_f32() + 0.5).collect();
+        let mut r_fused = vec![0f32; 32];
+        let flagged = fused.bag_sum_checked(&table, &indices, Some(&weights), true, &mut r_fused);
+        assert!(!flagged);
+        let mut r_plain = vec![0f32; 32];
+        crate::embedding::bag_sum_8(&table, &indices, Some(&weights), false, &mut r_plain);
+        assert_eq!(r_fused, r_plain);
+    }
+
+    #[test]
+    fn overhead_formulas() {
+        assert!((EbChecksum::theoretical_overhead(100, 128) - (1.0 / 128.0 + 1.0 / 300.0)).abs() < 1e-12);
+        assert!((EbChecksum::memory_overhead(8, 128) - 32.0 / 1024.0).abs() < 1e-12);
+        assert!((EbChecksum::memory_overhead(4, 64) - 0.125).abs() < 1e-12);
+    }
+}

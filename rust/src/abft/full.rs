@@ -1,0 +1,231 @@
+//! Full Huang–Abraham ABFT with single-error *correction* (the classic
+//! scheme the paper starts from in §IV before specializing to
+//! detection-only): encode BOTH operands — a checksum row on A and a
+//! checksum column on B — so a single corrupted element of C is located
+//! at the intersection of the failing row and column and corrected from
+//! either checksum (paper Eq 3a/3b and the correction equations).
+//!
+//! The paper rejects this for DLRM serving (encoding A costs `1/m` per
+//! call and m is small); it lives here as the correction-capable upgrade
+//! path (paper §VII future work) and as an ablation arm.
+
+use crate::gemm::{gemm_exec, PackedB};
+
+/// Where the correction equations can repair from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CorrectionOutcome {
+    /// No violations: C is clean.
+    Clean,
+    /// One (row, col) violation pair: corrected in place.
+    Corrected { row: usize, col: usize, delta: i64 },
+    /// Violations don't form a single intersection: detected, not
+    /// correctable (recompute instead).
+    Uncorrectable {
+        bad_rows: Vec<usize>,
+        bad_cols: Vec<usize>,
+    },
+}
+
+/// Both-sides-encoded GEMM. The full checksums are held in i64 side
+/// vectors (not modulo — correction needs exact deltas).
+pub struct FullAbftGemm {
+    /// B packed with its exact-sum i32 column held separately.
+    packed_b: PackedB,
+    /// Exact row sums of B (length k), i64.
+    s_b: Vec<i64>,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl FullAbftGemm {
+    pub fn new(b: &[i8], k: usize, n: usize) -> Self {
+        let mut s_b = vec![0i64; k];
+        for p in 0..k {
+            s_b[p] = b[p * n..(p + 1) * n].iter().map(|&v| v as i64).sum();
+        }
+        Self {
+            packed_b: PackedB::pack(b, k, n),
+            s_b,
+            k,
+            n,
+        }
+    }
+
+    /// Compute C = A·B and the two checksum sides:
+    /// row side `r[i] = Σ_p A[i][p]·S_B[p]` (what row i must sum to) and
+    /// column side `c[j] = Σ_i C[i][j]` vs `S_A·B[j]`.
+    pub fn exec(&self, a: &[u8], m: usize) -> (Vec<i32>, FullChecksums) {
+        let c = gemm_exec(a, &self.packed_b, m);
+        let checks = self.checksums(a, &c, m);
+        (c, checks)
+    }
+
+    /// Recompute the expected row/column sums from the encodings.
+    pub fn checksums(&self, a: &[u8], c: &[i32], m: usize) -> FullChecksums {
+        let (k, n) = (self.k, self.n);
+        assert_eq!(a.len(), m * k);
+        assert_eq!(c.len(), m * n);
+        // Expected row sums via A·S_B.
+        let mut row_expected = vec![0i64; m];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let mut acc = 0i64;
+            for p in 0..k {
+                acc += arow[p] as i64 * self.s_b[p];
+            }
+            row_expected[i] = acc;
+        }
+        // Expected column sums via S_A·B (S_A = column sums of A, exact).
+        let mut s_a = vec![0i64; k];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for p in 0..k {
+                s_a[p] += arow[p] as i64;
+            }
+        }
+        let mut col_expected = vec![0i64; n];
+        let data = self.packed_b.data();
+        for p in 0..k {
+            let sa = s_a[p];
+            if sa == 0 {
+                continue;
+            }
+            let brow = &data[p * n..(p + 1) * n];
+            for (j, &bv) in brow.iter().enumerate() {
+                col_expected[j] += sa * bv as i64;
+            }
+        }
+        FullChecksums {
+            row_expected,
+            col_expected,
+        }
+    }
+
+    /// Verify and, if exactly one element is corrupted, correct it in
+    /// place (paper's correction equations).
+    pub fn verify_correct(&self, a: &[u8], c: &mut [i32], m: usize) -> CorrectionOutcome {
+        let n = self.n;
+        let checks = self.checksums(a, c, m);
+        let mut bad_rows = Vec::new();
+        for i in 0..m {
+            let t: i64 = c[i * n..(i + 1) * n].iter().map(|&v| v as i64).sum();
+            if t != checks.row_expected[i] {
+                bad_rows.push(i);
+            }
+        }
+        let mut bad_cols = Vec::new();
+        for j in 0..n {
+            let mut t = 0i64;
+            for i in 0..m {
+                t += c[i * n + j] as i64;
+            }
+            if t != checks.col_expected[j] {
+                bad_cols.push(j);
+            }
+        }
+        match (bad_rows.len(), bad_cols.len()) {
+            (0, 0) => CorrectionOutcome::Clean,
+            (1, 1) => {
+                let (row, col) = (bad_rows[0], bad_cols[0]);
+                let t: i64 = c[row * n..(row + 1) * n].iter().map(|&v| v as i64).sum();
+                let delta = checks.row_expected[row] - t;
+                c[row * n + col] = (c[row * n + col] as i64 + delta) as i32;
+                CorrectionOutcome::Corrected { row, col, delta }
+            }
+            _ => CorrectionOutcome::Uncorrectable { bad_rows, bad_cols },
+        }
+    }
+}
+
+/// Expected row/column sums for a full-encoded product.
+pub struct FullChecksums {
+    pub row_expected: Vec<i64>,
+    pub col_expected: Vec<i64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn setup(m: usize, k: usize, n: usize, seed: u64) -> (Vec<u8>, FullAbftGemm) {
+        let mut rng = Pcg32::new(seed);
+        let mut a = vec![0u8; m * k];
+        let mut b = vec![0i8; k * n];
+        rng.fill_u8(&mut a);
+        rng.fill_i8(&mut b);
+        (a.clone(), FullAbftGemm::new(&b, k, n))
+    }
+
+    #[test]
+    fn clean_run_clean_outcome() {
+        let (m, k, n) = (6, 40, 24);
+        let (a, full) = setup(m, k, n, 1);
+        let (mut c, _) = full.exec(&a, m);
+        assert_eq!(full.verify_correct(&a, &mut c, m), CorrectionOutcome::Clean);
+    }
+
+    #[test]
+    fn single_error_located_and_corrected() {
+        let (m, k, n) = (8, 32, 16);
+        let (a, full) = setup(m, k, n, 2);
+        let (mut c, _) = full.exec(&a, m);
+        let clean = c.clone();
+        for &(row, col, bit) in &[(3usize, 7usize, 5u32), (0, 0, 30), (7, 15, 0)] {
+            c[row * n + col] ^= 1 << bit;
+            match full.verify_correct(&a, &mut c, m) {
+                CorrectionOutcome::Corrected { row: r, col: j, .. } => {
+                    assert_eq!((r, j), (row, col), "mislocated");
+                }
+                other => panic!("expected correction, got {other:?}"),
+            }
+            assert_eq!(c, clean, "value not restored");
+        }
+    }
+
+    #[test]
+    fn multi_error_detected_not_corrected() {
+        let (m, k, n) = (6, 24, 12);
+        let (a, full) = setup(m, k, n, 3);
+        let (mut c, _) = full.exec(&a, m);
+        c[1 * n + 2] ^= 1 << 9;
+        c[4 * n + 8] ^= 1 << 13;
+        match full.verify_correct(&a, &mut c, m) {
+            CorrectionOutcome::Uncorrectable { bad_rows, bad_cols } => {
+                assert_eq!(bad_rows, vec![1, 4]);
+                assert_eq!(bad_cols, vec![2, 8]);
+            }
+            other => panic!("expected uncorrectable, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn two_errors_same_row_uncorrectable_but_detected() {
+        let (m, k, n) = (4, 16, 10);
+        let (a, full) = setup(m, k, n, 4);
+        let (mut c, _) = full.exec(&a, m);
+        c[2 * n + 1] ^= 1 << 8;
+        c[2 * n + 5] ^= 1 << 11;
+        match full.verify_correct(&a, &mut c, m) {
+            CorrectionOutcome::Uncorrectable { bad_rows, bad_cols } => {
+                assert_eq!(bad_rows, vec![2]);
+                assert_eq!(bad_cols.len(), 2);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn exact_checksums_catch_multiples_of_127() {
+        // Unlike the mod-127 detector, the exact i64 checksums have no
+        // blind spots.
+        let (m, k, n) = (3, 16, 8);
+        let (a, full) = setup(m, k, n, 5);
+        let (mut c, _) = full.exec(&a, m);
+        c[5] += 127 * 3;
+        assert!(matches!(
+            full.verify_correct(&a, &mut c, m),
+            CorrectionOutcome::Corrected { .. }
+        ));
+    }
+}

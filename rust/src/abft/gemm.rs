@@ -1,0 +1,314 @@
+//! ABFT for low-precision GEMM (paper §IV, Algorithm 1).
+//!
+//! Design decisions, all from the paper:
+//! * **Encode only B** (§IV-A1): B is the long-lived weight operand — one
+//!   encode amortizes over many GEMMs and covers the operand most exposed
+//!   to memory errors. Detection is per-*row* of C (no column checksums).
+//! * **Checksum kept in 8 bits via mod 127** (§IV-A2): row sums of B are
+//!   reduced mod 127 so the checksum column packs into the same i8 panel
+//!   as B and rides through the same u8×i8 kernel.
+//! * **Stay BLAS-3** (§IV-A3): the checksum column is packed contiguously
+//!   with B ([`PackedB::pack_with_extra_col`]) and `C_temp` gets one extra
+//!   column; requantization excludes it.
+//!
+//! Verification (Eq 3b, row form): for every row i,
+//! `Σ_j C_temp[i][j] ≡ C_temp[i][n]  (mod 127)`.
+//! The row sum is accumulated in i64 — with n up to 3200 and entries up to
+//! ~1e8, an i32 accumulator would overflow (the paper elides this detail).
+
+use crate::gemm::{gemm_exec_into, PackedB};
+
+/// Paper's modulus: the largest odd number in the i8 range, and prime —
+/// odd catches all single-bit flips, primality maximizes coverage of the
+/// data-fluctuation model (§IV-C).
+pub const DEFAULT_MODULUS: i32 = 127;
+
+/// Encode the mod-`modulus` row-sum checksum column of a k×n i8 matrix
+/// (Algorithm 1 lines 2-5). Output values lie in `(-modulus, modulus)`,
+/// which fits i8 for any modulus ≤ 127.
+pub fn encode_checksum_col(b: &[i8], k: usize, n: usize, modulus: i32) -> Vec<i8> {
+    assert_eq!(b.len(), k * n);
+    assert!((1..=127).contains(&modulus), "modulus must fit i8");
+    let mut col = vec![0i8; k];
+    for p in 0..k {
+        let mut s = 0i32;
+        for &v in &b[p * n..(p + 1) * n] {
+            s += v as i32;
+        }
+        col[p] = (s % modulus) as i8;
+    }
+    col
+}
+
+/// Outcome of one protected GEMM.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Verdict {
+    /// Row indices of C whose checksum failed.
+    pub corrupted_rows: Vec<usize>,
+}
+
+impl Verdict {
+    pub fn clean(&self) -> bool {
+        self.corrupted_rows.is_empty()
+    }
+
+    pub fn err_count(&self) -> usize {
+        self.corrupted_rows.len()
+    }
+}
+
+/// An ABFT-protected packed GEMM operand: B packed together with its
+/// checksum column, ready for repeated protected multiplications.
+#[derive(Clone, Debug)]
+pub struct AbftGemm {
+    pub packed: PackedB,
+    pub modulus: i32,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl AbftGemm {
+    /// Encode + pack (Algorithm 1 lines 1-6). Done once per weight matrix.
+    pub fn new(b: &[i8], k: usize, n: usize) -> Self {
+        Self::with_modulus(b, k, n, DEFAULT_MODULUS)
+    }
+
+    pub fn with_modulus(b: &[i8], k: usize, n: usize, modulus: i32) -> Self {
+        let col = encode_checksum_col(b, k, n, modulus);
+        Self {
+            packed: PackedB::pack_with_extra_col(b, k, n, &col),
+            modulus,
+            k,
+            n,
+        }
+    }
+
+    /// Wrap an already-packed encoded operand (used by fault campaigns that
+    /// corrupt the packed bytes *after* encoding).
+    pub fn from_packed(packed: PackedB, modulus: i32) -> Self {
+        assert_eq!(packed.extra_cols, 1, "needs a checksum column");
+        let (k, n) = (packed.k, packed.n);
+        Self {
+            packed,
+            modulus,
+            k,
+            n,
+        }
+    }
+
+    /// Protected GEMM (Algorithm 1 lines 7-16): compute `C_temp[m×(n+1)]`
+    /// and verify every row. Returns the intermediate matrix (checksum
+    /// column included — requantization must exclude it) and the verdict.
+    pub fn exec(&self, a: &[u8], m: usize) -> (Vec<i32>, Verdict) {
+        let mut c = vec![0i32; m * (self.n + 1)];
+        let verdict = self.exec_into(a, m, &mut c);
+        (c, verdict)
+    }
+
+    /// Allocation-free variant for the serving hot path.
+    pub fn exec_into(&self, a: &[u8], m: usize, c_temp: &mut [i32]) -> Verdict {
+        gemm_exec_into(a, &self.packed, m, c_temp);
+        self.verify(c_temp, m)
+    }
+
+    /// Check Eq 3b on an already-computed `C_temp[m×(n+1)]`.
+    pub fn verify(&self, c_temp: &[i32], m: usize) -> Verdict {
+        let nt = self.n + 1;
+        assert_eq!(c_temp.len(), m * nt);
+        let mut corrupted_rows = Vec::new();
+        for i in 0..m {
+            let row = &c_temp[i * nt..(i + 1) * nt];
+            if !row_ok(row, self.n, self.modulus) {
+                corrupted_rows.push(i);
+            }
+        }
+        Verdict { corrupted_rows }
+    }
+
+    /// Recompute the payload of a single corrupted row from A and the packed
+    /// B (row-level recovery; the paper's deployment model is "recompute on
+    /// detect" since double faults are vanishingly rare).
+    pub fn recompute_row(&self, a: &[u8], row: usize, c_temp: &mut [i32], m: usize) {
+        let nt = self.n + 1;
+        assert!(row < m);
+        let arow = &a[row * self.k..(row + 1) * self.k];
+        let out = &mut c_temp[row * nt..(row + 1) * nt];
+        out.fill(0);
+        for p in 0..self.k {
+            let av = arow[p] as i32;
+            let brow_start = p * nt;
+            for j in 0..nt {
+                out[j] += av * self.packed.data[brow_start + j] as i32;
+            }
+        }
+    }
+
+    /// Theoretical FLOP overhead of encode+verify for one GEMM of shape
+    /// (m, n, k): `1/(2m) + 1/n + 1/(2k)` (§IV-A1, encoding-B row).
+    pub fn theoretical_overhead(m: usize, n: usize, k: usize) -> f64 {
+        1.0 / (2.0 * m as f64) + 1.0 / n as f64 + 1.0 / (2.0 * k as f64)
+    }
+}
+
+/// Row check: `Σ_j row[0..n] ≡ row[n] (mod modulus)`; i64 accumulation.
+#[inline]
+pub fn row_ok(row: &[i32], n: usize, modulus: i32) -> bool {
+    let mut t: i64 = 0;
+    for &v in &row[..n] {
+        t += v as i64;
+    }
+    (t - row[n] as i64) % modulus as i64 == 0
+}
+
+/// §IV-A1 overhead if encoding A instead: `1/(2n) + 1/m + 1/(2k)`.
+pub fn theoretical_overhead_encode_a(m: usize, n: usize, k: usize) -> f64 {
+    1.0 / (2.0 * n as f64) + 1.0 / m as f64 + 1.0 / (2.0 * k as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_ab(rng: &mut Pcg32, m: usize, k: usize, n: usize) -> (Vec<u8>, Vec<i8>) {
+        let mut a = vec![0u8; m * k];
+        let mut b = vec![0i8; k * n];
+        rng.fill_u8(&mut a);
+        rng.fill_i8(&mut b);
+        (a, b)
+    }
+
+    #[test]
+    fn clean_run_verifies_clean() {
+        let mut rng = Pcg32::new(1);
+        for &(m, k, n) in &[(1usize, 3200usize, 800usize), (4, 64, 64), (150, 256, 32)] {
+            let (a, b) = rand_ab(&mut rng, m, k, n);
+            let abft = AbftGemm::new(&b, k, n);
+            let (_, verdict) = abft.exec(&a, m);
+            assert!(verdict.clean(), "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn payload_matches_unprotected_gemm() {
+        let mut rng = Pcg32::new(2);
+        let (m, k, n) = (5, 128, 40);
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let (c, _) = abft.exec(&a, m);
+        let plain = crate::gemm::gemm_naive(&a, &b, m, k, n);
+        for i in 0..m {
+            assert_eq!(&c[i * (n + 1)..i * (n + 1) + n], &plain[i * n..(i + 1) * n]);
+        }
+    }
+
+    #[test]
+    fn detects_corruption_in_c() {
+        let mut rng = Pcg32::new(3);
+        let (m, k, n) = (8, 100, 50);
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let (mut c, _) = abft.exec(&a, m);
+        // Flip a high bit in row 5.
+        c[5 * (n + 1) + 7] ^= 1 << 20;
+        let verdict = abft.verify(&c, m);
+        assert_eq!(verdict.corrupted_rows, vec![5]);
+    }
+
+    #[test]
+    fn multiple_corrupted_rows_all_reported() {
+        let mut rng = Pcg32::new(4);
+        let (m, k, n) = (10, 64, 30);
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let (mut c, _) = abft.exec(&a, m);
+        for &r in &[1usize, 4, 9] {
+            c[r * (n + 1)] ^= 1 << 10;
+        }
+        let verdict = abft.verify(&c, m);
+        assert_eq!(verdict.corrupted_rows, vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn multiple_of_modulus_escapes_as_analyzed() {
+        // An injected delta divisible by 127 is undetectable — the paper's
+        // §IV-C false-negative condition, reproduced exactly.
+        let mut rng = Pcg32::new(5);
+        let (m, k, n) = (2, 16, 8);
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let (mut c, _) = abft.exec(&a, m);
+        c[3] += 127 * 5;
+        assert!(abft.verify(&c, m).clean());
+        c[3] += 1;
+        assert!(!abft.verify(&c, m).clean());
+    }
+
+    #[test]
+    fn recompute_row_repairs() {
+        let mut rng = Pcg32::new(6);
+        let (m, k, n) = (6, 80, 24);
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let (mut c, _) = abft.exec(&a, m);
+        let clean = c.clone();
+        c[2 * (n + 1) + 3] ^= 1 << 13;
+        assert_eq!(abft.verify(&c, m).corrupted_rows, vec![2]);
+        abft.recompute_row(&a, 2, &mut c, m);
+        assert!(abft.verify(&c, m).clean());
+        assert_eq!(c, clean);
+    }
+
+    #[test]
+    fn i64_rowsum_no_overflow_on_large_n() {
+        // n*max_entry exceeds i32: entries near 2^27 with n=3200 would wrap
+        // an i32 accumulator. Construct a saturated case.
+        let (m, k, n) = (1usize, 3200usize, 3200usize);
+        let a = vec![255u8; m * k];
+        let b = vec![127i8; k * n];
+        let abft = AbftGemm::new(&b, k, n);
+        let (_, verdict) = abft.exec(&a, m);
+        assert!(verdict.clean(), "saturated case must not false-positive");
+    }
+
+    #[test]
+    fn checksum_col_values_fit_i8() {
+        let mut rng = Pcg32::new(7);
+        let (k, n) = (500, 333);
+        let mut b = vec![0i8; k * n];
+        rng.fill_i8(&mut b);
+        let col = encode_checksum_col(&b, k, n, 127);
+        for &v in &col {
+            assert!((-127..=127).contains(&(v as i32)));
+        }
+    }
+
+    #[test]
+    fn theoretical_overhead_prefers_b_for_dlrm_shapes() {
+        // DLRM: m small, n/k large → encoding B cheaper (§IV-A1).
+        for &(m, n, k) in &[(1usize, 800usize, 3200usize), (100, 512, 512)] {
+            assert!(
+                AbftGemm::theoretical_overhead(m, n, k)
+                    < theoretical_overhead_encode_a(m, n, k)
+                    || m >= n
+            );
+        }
+    }
+
+    #[test]
+    fn requant_not_linear() {
+        // §IV-B / E8: requantization is NOT linear, so checksums cannot be
+        // carried through it: Q(a)+Q(b) != Q(a+b) in general.
+        let qp = crate::quant::QParams::fit_u8(0.0, 100.0);
+        let q = |x: f32| qp.quantize_u8(x) as i32;
+        let mut violations = 0;
+        for a in [3.3f32, 10.7, 55.1] {
+            for b in [1.2f32, 9.9, 40.4] {
+                if q(a) + q(b) != q(a + b) {
+                    violations += 1;
+                }
+            }
+        }
+        assert!(violations > 0, "requantization unexpectedly linear");
+    }
+}

@@ -1,0 +1,20 @@
+//! Algorithm-based fault tolerance — the paper's contribution.
+//!
+//! * [`gemm`] — ABFT for low-precision GEMM (§IV, Algorithm 1).
+//! * [`eb`] — ABFT for low-precision EmbeddingBag (§V, Algorithm 2).
+//! * [`analysis`] — closed-form detection probabilities (§IV-C).
+//! * [`baselines`] — rejected alternatives used as ablations (§II, §IV-A).
+
+pub mod analysis;
+pub mod baselines;
+pub mod eb;
+pub mod full;
+pub mod gemm;
+pub mod interaction;
+pub mod scrub;
+
+pub use eb::{CheckPrecision, EbChecksum, FusedEbAbft, FusedEbAbft4, RowMeta, DEFAULT_REL_BOUND};
+pub use full::{CorrectionOutcome, FullAbftGemm};
+pub use interaction::{protected_interaction, InteractionVerdict, INTERACTION_REL_BOUND};
+pub use scrub::{ScrubReport, Scrubber};
+pub use gemm::{encode_checksum_col, AbftGemm, Verdict, DEFAULT_MODULUS};

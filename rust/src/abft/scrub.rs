@@ -1,0 +1,166 @@
+//! Background memory scrubber for embedding tables.
+//!
+//! The paper's coverage argument (§IV-A1) is that the long-lived operand
+//! (weights / embedding tables) is the one exposed to memory errors.
+//! Reactive ABFT only notices a corrupted row when a request *touches*
+//! it; with zipfian traffic, cold rows can stay silently corrupted for
+//! hours. The scrubber closes that gap: it re-walks the table in fixed-
+//! size strips (budgeted per serving idle slot) and compares each row's
+//! code sum against the `C_T` checksum — the same invariant, applied
+//! proactively. Detected rows are reported for re-fetch from the model
+//! store (here: recorded + optionally repaired from a shadow checksum).
+
+use crate::abft::EbChecksum;
+use crate::embedding::QuantTable8;
+
+/// One scrub pass outcome.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ScrubReport {
+    /// Rows checked in this slice.
+    pub rows_scanned: usize,
+    /// Row indices whose code sum no longer matches C_T.
+    pub corrupted_rows: Vec<usize>,
+    /// True when the cursor wrapped (a full table pass completed).
+    pub wrapped: bool,
+}
+
+/// Incremental scrubber over one table; keeps a cursor so each call
+/// checks the next strip.
+#[derive(Clone, Debug)]
+pub struct Scrubber {
+    cursor: usize,
+    /// Rows per `scrub_step` call.
+    pub stride: usize,
+    /// Lifetime counters.
+    pub total_scanned: u64,
+    pub total_corrupted: u64,
+    pub passes: u64,
+}
+
+impl Scrubber {
+    pub fn new(stride: usize) -> Self {
+        assert!(stride > 0);
+        Self {
+            cursor: 0,
+            stride,
+            total_scanned: 0,
+            total_corrupted: 0,
+            passes: 0,
+        }
+    }
+
+    /// Scrub the next strip of `table` against `checksum`.
+    pub fn scrub_step(&mut self, table: &QuantTable8, checksum: &EbChecksum) -> ScrubReport {
+        assert_eq!(checksum.c_t.len(), table.rows);
+        let mut report = ScrubReport::default();
+        let end = (self.cursor + self.stride).min(table.rows);
+        for row in self.cursor..end {
+            if table.code_row_sum(row) != checksum.c_t[row] {
+                report.corrupted_rows.push(row);
+            }
+        }
+        report.rows_scanned = end - self.cursor;
+        self.total_scanned += report.rows_scanned as u64;
+        self.total_corrupted += report.corrupted_rows.len() as u64;
+        self.cursor = if end >= table.rows {
+            report.wrapped = true;
+            self.passes += 1;
+            0
+        } else {
+            end
+        };
+        report
+    }
+
+    /// Scrub the whole table in one call (offline verification).
+    pub fn full_pass(table: &QuantTable8, checksum: &EbChecksum) -> Vec<usize> {
+        let mut s = Scrubber::new(table.rows.max(1));
+        s.scrub_step(table, checksum).corrupted_rows
+    }
+
+    /// Fraction of the table covered since the last wrap.
+    pub fn progress(&self, rows: usize) -> f64 {
+        if rows == 0 {
+            1.0
+        } else {
+            self.cursor as f64 / rows as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn setup(rows: usize, d: usize) -> (QuantTable8, EbChecksum) {
+        let mut rng = Pcg32::new(0x5C12);
+        let table = QuantTable8::random(rows, d, &mut rng);
+        let cs = EbChecksum::build_8(&table);
+        (table, cs)
+    }
+
+    #[test]
+    fn clean_table_scrubs_clean() {
+        let (table, cs) = setup(1000, 32);
+        assert!(Scrubber::full_pass(&table, &cs).is_empty());
+    }
+
+    #[test]
+    fn finds_every_corrupted_row() {
+        let (mut table, cs) = setup(2000, 16);
+        let victims = [3usize, 999, 1999];
+        for &v in &victims {
+            table.data[v * 16 + 5] ^= 0x40;
+        }
+        assert_eq!(Scrubber::full_pass(&table, &cs), victims.to_vec());
+    }
+
+    #[test]
+    fn incremental_covers_whole_table() {
+        let (mut table, cs) = setup(1050, 8); // not a multiple of stride
+        table.data[1049 * 8] ^= 0x01; // last row, low bit — still a sum change
+        let mut s = Scrubber::new(100);
+        let mut found = Vec::new();
+        let mut steps = 0;
+        loop {
+            let r = s.scrub_step(&table, &cs);
+            found.extend(r.corrupted_rows);
+            steps += 1;
+            if r.wrapped {
+                break;
+            }
+        }
+        assert_eq!(steps, 11); // ceil(1050/100)
+        assert_eq!(found, vec![1049]);
+        assert_eq!(s.total_scanned, 1050);
+        assert_eq!(s.passes, 1);
+        assert_eq!(s.progress(1050), 0.0); // wrapped back to start
+    }
+
+    #[test]
+    fn cursor_resumes_between_steps() {
+        let (table, cs) = setup(500, 8);
+        let mut s = Scrubber::new(200);
+        assert_eq!(s.scrub_step(&table, &cs).rows_scanned, 200);
+        assert!((s.progress(500) - 0.4).abs() < 1e-9);
+        assert_eq!(s.scrub_step(&table, &cs).rows_scanned, 200);
+        let last = s.scrub_step(&table, &cs);
+        assert_eq!(last.rows_scanned, 100);
+        assert!(last.wrapped);
+    }
+
+    #[test]
+    fn even_bit_pairs_that_cancel_modulo_are_caught() {
+        // The scrubber compares EXACT sums (not mod 127), so even a
+        // ±127-sum change is caught.
+        let (mut table, cs) = setup(100, 16);
+        // Craft a delta of exactly 127 across the row: +128 on one code
+        // (if possible) and -1 on another.
+        let r = 7;
+        let base = table.data[r * 16];
+        table.data[r * 16] = base.wrapping_add(127);
+        let found = Scrubber::full_pass(&table, &cs);
+        assert_eq!(found, vec![r]);
+    }
+}

@@ -1,0 +1,66 @@
+//! Cache flushing for memory-bound benchmarks (paper §VI-A2: "We flush the
+//! cache since the embedding table is too large to be held in the cache in
+//! real world scenarios").
+
+/// A buffer larger than any realistic LLC; sweeping it evicts the
+/// benchmark's working set.
+pub struct CacheFlusher {
+    buf: Vec<u8>,
+    sink: u64,
+}
+
+/// 256 MiB — comfortably past typical LLC (CLFLUSH would be exact but
+/// needs per-line loops over gigabyte tables; a sweep is what FBGEMM's own
+/// benchmarks do).
+pub const DEFAULT_FLUSH_BYTES: usize = 256 << 20;
+
+impl CacheFlusher {
+    pub fn new() -> Self {
+        Self::with_bytes(DEFAULT_FLUSH_BYTES)
+    }
+
+    pub fn with_bytes(bytes: usize) -> Self {
+        Self {
+            buf: vec![1u8; bytes],
+            sink: 0,
+        }
+    }
+
+    /// Read+write sweep; the data dependency on `sink` stops dead-code
+    /// elimination.
+    pub fn flush(&mut self) {
+        let mut acc = self.sink;
+        for chunk in self.buf.chunks_mut(64) {
+            acc = acc.wrapping_add(chunk[0] as u64);
+            chunk[0] = chunk[0].wrapping_add(1);
+        }
+        self.sink = acc;
+    }
+
+    pub fn sink(&self) -> u64 {
+        self.sink
+    }
+}
+
+impl Default for CacheFlusher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flush_touches_every_line() {
+        let mut f = CacheFlusher::with_bytes(1 << 20);
+        let s0 = f.sink();
+        f.flush();
+        assert_ne!(f.sink(), s0);
+        // Second flush sees the incremented bytes.
+        let s1 = f.sink();
+        f.flush();
+        assert_ne!(f.sink(), s1);
+    }
+}

@@ -1,0 +1,590 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (§VI): Fig 5, Table I + Fig 6a/6b, Table II, Table III, plus the §IV-C
+//! analytic-vs-Monte-Carlo validation and the design-choice ablations.
+//!
+//! Shared by `benches/*`, `examples/*` and the `dlrm-abft bench` CLI.
+
+use crate::abft::baselines::{Blas2Abft, EncodeA, Full32Abft};
+use crate::abft::{analysis, AbftGemm, EbChecksum};
+use crate::bench::cacheflush::CacheFlusher;
+use crate::bench::harness::{measure_pair, overhead_pct, BenchConfig, Measurement};
+use crate::bench::workload::{gen_eb_batch, table1_settings, EbSetting, IndexDist};
+use crate::embedding::{embedding_bag_8, QuantTable8};
+use crate::fault::campaign::{
+    fig5_shapes, run_eb_campaign, run_eb_campaign_4bit, run_gemm_trial, EbCampaignConfig,
+    EbTarget, GemmCampaignConfig, GemmCampaignResult, GemmTarget, Tally,
+};
+use crate::gemm::{gemm_exec_into, PackedB};
+use crate::util::rng::Pcg32;
+use crate::util::threadpool::ThreadPool;
+use std::io::Write;
+
+/// One bar of Fig 5.
+#[derive(Clone, Debug)]
+pub struct Fig5Row {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub base: Measurement,
+    pub protected: Measurement,
+}
+
+impl Fig5Row {
+    pub fn overhead(&self) -> f64 {
+        overhead_pct(&self.base, &self.protected)
+    }
+}
+
+/// Fig 5: ABFT overhead for the 28 DLRM GEMM shapes. Encoding/packing is
+/// done once outside the timed region (the paper's amortization argument,
+/// §IV-A1 — B is encoded once for many GEMMs).
+pub fn run_fig5(cfg: &BenchConfig, out: &mut dyn Write) -> Vec<Fig5Row> {
+    let mut rows = Vec::new();
+    writeln!(out, "# Fig 5 — ABFT overhead, low-precision GEMM (28 DLRM shapes)").unwrap();
+    writeln!(out, "{:>4} {:>5} {:>5} {:>12} {:>12} {:>9}", "m", "n", "k", "base_us", "abft_us", "overhead").unwrap();
+    for (m, n, k) in fig5_shapes() {
+        let mut rng = Pcg32::new((m * 1_000_003 + n * 1009 + k) as u64);
+        let mut a = vec![0u8; m * k];
+        let mut b = vec![0i8; k * n];
+        rng.fill_u8(&mut a);
+        rng.fill_i8(&mut b);
+        let plain = PackedB::pack(&b, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let mut c_plain = vec![0i32; m * n];
+        let mut c_prot = vec![0i32; m * (n + 1)];
+
+        let mut errs = 0usize;
+        let (base, protected) = measure_pair(
+            cfg,
+            || {},
+            || {
+                gemm_exec_into(&a, &plain, m, &mut c_plain);
+                std::hint::black_box(&c_plain);
+            },
+            || {
+                let verdict = abft.exec_into(&a, m, &mut c_prot);
+                errs += verdict.err_count();
+                std::hint::black_box(&c_prot);
+            },
+        );
+        assert_eq!(errs, 0, "clean bench must not flag");
+        let row = Fig5Row { m, n, k, base, protected };
+        writeln!(
+            out,
+            "{:>4} {:>5} {:>5} {:>12.2} {:>12.2} {:>8.2}%",
+            m,
+            n,
+            k,
+            row.base.median() * 1e6,
+            row.protected.median() * 1e6,
+            row.overhead()
+        )
+        .unwrap();
+        rows.push(row);
+    }
+    summarize_fig5(&rows, out);
+    rows
+}
+
+fn summarize_fig5(rows: &[Fig5Row], out: &mut dyn Write) {
+    let under5 = rows.iter().filter(|r| r.overhead() < 5.0).count();
+    let under10 = rows.iter().filter(|r| r.overhead() < 10.0).count();
+    let under20 = rows.iter().filter(|r| r.overhead() < 20.0).count();
+    writeln!(
+        out,
+        "summary: {}/{} shapes <5%, {}/{} <10%, {}/{} <20% (paper: 7, 17, 28)",
+        under5,
+        rows.len(),
+        under10,
+        rows.len(),
+        under20,
+        rows.len()
+    )
+    .unwrap();
+}
+
+/// One row of Fig 6.
+#[derive(Clone, Debug)]
+pub struct Fig6Row {
+    pub setting: EbSetting,
+    pub weighted: bool,
+    pub prefetch: bool,
+    pub base: Measurement,
+    pub protected: Measurement,
+}
+
+impl Fig6Row {
+    pub fn overhead(&self) -> f64 {
+        overhead_pct(&self.base, &self.protected)
+    }
+}
+
+/// Fig 6 (a: no prefetch, b: prefetch) over the Table-I settings,
+/// {sum, weighted-sum} × d ∈ {32,64,128,256}. Cache flushed before every
+/// sample (§VI-A2). `scale` divides the 4M-row table for quick runs.
+pub fn run_fig6(cfg: &BenchConfig, scale: usize, out: &mut dyn Write) -> Vec<Fig6Row> {
+    let mut rows = Vec::new();
+    let mut flusher = CacheFlusher::new();
+    writeln!(out, "# Fig 6 — ABFT overhead, low-precision EmbeddingBag (Table I settings)").unwrap();
+    writeln!(
+        out,
+        "{:>6} {:>5} {:>9} {:>9} {:>12} {:>12} {:>9}",
+        "rows", "dim", "weighted", "prefetch", "base_us", "abft_us", "overhead"
+    )
+    .unwrap();
+    for mut setting in table1_settings() {
+        setting.table_rows /= scale.max(1);
+        let mut rng = Pcg32::new(setting.dim as u64);
+        let table = QuantTable8::random(setting.table_rows, setting.dim, &mut rng);
+        let checksum = EbChecksum::build_8(&table);
+        for &prefetch in &[false, true] {
+            for &weighted in &[false, true] {
+                let (indices, offsets) = gen_eb_batch(&setting, &IndexDist::Uniform, &mut rng);
+                let weights: Option<Vec<f32>> = weighted
+                    .then(|| indices.iter().map(|_| 0.5 + rng.next_f32()).collect());
+                let (base, protected) = measure_pair(
+                    cfg,
+                    || flusher.flush(),
+                    || {
+                        let r = embedding_bag_8(&table, &indices, &offsets, weights.as_deref(), prefetch);
+                        std::hint::black_box(&r);
+                    },
+                    || {
+                        let r = embedding_bag_8(&table, &indices, &offsets, weights.as_deref(), prefetch);
+                        let flagged = checksum.check_batch(
+                            &table.alpha,
+                            &table.beta,
+                            &indices,
+                            &offsets,
+                            weights.as_deref(),
+                            &r,
+                        );
+                        std::hint::black_box((&r, &flagged));
+                    },
+                );
+                let row = Fig6Row { setting, weighted, prefetch, base, protected };
+                writeln!(
+                    out,
+                    "{:>6}k {:>5} {:>9} {:>9} {:>12.2} {:>12.2} {:>8.2}%",
+                    setting.table_rows / 1000,
+                    setting.dim,
+                    weighted,
+                    prefetch,
+                    row.base.median() * 1e6,
+                    row.protected.median() * 1e6,
+                    row.overhead()
+                )
+                .unwrap();
+                rows.push(row);
+            }
+        }
+    }
+    let max = rows.iter().map(|r| r.overhead()).fold(f64::MIN, f64::max);
+    writeln!(out, "summary: max EB overhead {max:.2}% (paper: <26%)").unwrap();
+    rows
+}
+
+/// §Perf: the fused-vs-naive protected EmbeddingBag comparison (the EB
+/// hot-path optimization). Three arms per Table-I setting, cache flushed:
+/// unprotected bag / naive Alg-2 (bag then re-walk for C_T) / fused
+/// (interleaved meta, checksum inside the loop).
+pub fn run_eb_fused_perf(cfg: &BenchConfig, scale: usize, out: &mut dyn Write) {
+    let mut flusher = CacheFlusher::new();
+    writeln!(out, "# §Perf — EB protection cost: naive Alg-2 vs fused layout (prefetch on)").unwrap();
+    writeln!(
+        out,
+        "{:>6} {:>5} {:>12} {:>12} {:>12} {:>9} {:>9}",
+        "rows", "dim", "base_us", "naive_us", "fused_us", "naiveOH", "fusedOH"
+    )
+    .unwrap();
+    for mut setting in table1_settings() {
+        setting.table_rows /= scale.max(1);
+        let mut rng = Pcg32::new(setting.dim as u64 ^ 0xFEED);
+        let table = QuantTable8::random(setting.table_rows, setting.dim, &mut rng);
+        let checksum = EbChecksum::build_8(&table);
+        let fused = checksum.clone().fuse(&table);
+        let (indices, offsets) = gen_eb_batch(&setting, &IndexDist::Uniform, &mut rng);
+        let d = setting.dim;
+
+        let (base, naive) = measure_pair(
+            cfg,
+            || flusher.flush(),
+            || {
+                let r = embedding_bag_8(&table, &indices, &offsets, None, true);
+                std::hint::black_box(&r);
+            },
+            || {
+                let r = embedding_bag_8(&table, &indices, &offsets, None, true);
+                let flagged =
+                    checksum.check_batch(&table.alpha, &table.beta, &indices, &offsets, None, &r);
+                std::hint::black_box((&r, &flagged));
+            },
+        );
+        let (base2, fused_m) = measure_pair(
+            cfg,
+            || flusher.flush(),
+            || {
+                let r = embedding_bag_8(&table, &indices, &offsets, None, true);
+                std::hint::black_box(&r);
+            },
+            || {
+                let batch = offsets.len();
+                let mut r = vec![0f32; batch * d];
+                let mut any = false;
+                for b in 0..batch {
+                    let start = offsets[b];
+                    let end = if b + 1 < batch { offsets[b + 1] } else { indices.len() };
+                    any |= fused.bag_sum_checked(
+                        &table,
+                        &indices[start..end],
+                        None,
+                        true,
+                        &mut r[b * d..(b + 1) * d],
+                    );
+                }
+                std::hint::black_box((&r, any));
+            },
+        );
+        writeln!(
+            out,
+            "{:>6}k {:>5} {:>12.2} {:>12.2} {:>12.2} {:>8.2}% {:>8.2}%",
+            setting.table_rows / 1000,
+            d,
+            base.median() * 1e6,
+            naive.median() * 1e6,
+            fused_m.median() * 1e6,
+            overhead_pct(&base, &naive),
+            overhead_pct(&base2, &fused_m)
+        )
+        .unwrap();
+    }
+}
+
+/// Table II, parallelized across shapes (deterministic per-shape streams).
+pub fn run_table2(cfg: &GemmCampaignConfig, threads: usize, out: &mut dyn Write) -> GemmCampaignResult {
+    let pool = ThreadPool::new(threads.max(1));
+    let shapes = cfg.shapes.clone();
+    let cfg2 = cfg.clone();
+    let per_shape = pool.map(shapes, move |(m, n, k)| {
+        let mut rng = Pcg32::new(cfg2.seed ^ ((m * 73_856_093 + n * 19_349_663 + k) as u64));
+        let mut r = GemmCampaignResult::default();
+        for _ in 0..cfg2.runs_per_shape {
+            tally_add(&mut r.error_in_b, run_gemm_trial(m, n, k, GemmTarget::MatrixB, &cfg2, &mut rng));
+            tally_add(&mut r.error_in_c, run_gemm_trial(m, n, k, GemmTarget::MatrixC, &cfg2, &mut rng));
+            tally_add(&mut r.no_error, run_gemm_trial(m, n, k, GemmTarget::None, &cfg2, &mut rng));
+        }
+        r
+    });
+    let mut total = GemmCampaignResult::default();
+    for r in per_shape {
+        merge_tally(&mut total.error_in_b, &r.error_in_b);
+        merge_tally(&mut total.error_in_c, &r.error_in_c);
+        merge_tally(&mut total.no_error, &r.no_error);
+    }
+    writeln!(out, "# Table II — GEMM detection campaign ({} runs/arm)", total.error_in_b.total()).unwrap();
+    writeln!(out, "{:<18} {:>10} {:>10} {:>9}", "", "error in B", "error in C", "no error").unwrap();
+    writeln!(
+        out,
+        "{:<18} {:>10} {:>10} {:>9}",
+        "detected runs", total.error_in_b.detected, total.error_in_c.detected, total.no_error.detected
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "{:<18} {:>10} {:>10} {:>9}",
+        "not detected runs",
+        total.error_in_b.not_detected,
+        total.error_in_c.not_detected,
+        total.no_error.not_detected
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "rates: B {:.2}% (paper 95.11%), C {:.2}% (paper 100%), FP {:.2}% (paper 0%)",
+        total.error_in_b.rate() * 100.0,
+        total.error_in_c.rate() * 100.0,
+        total.no_error.rate() * 100.0
+    )
+    .unwrap();
+    total
+}
+
+fn tally_add(t: &mut Tally, detected: bool) {
+    if detected {
+        t.detected += 1;
+    } else {
+        t.not_detected += 1;
+    }
+}
+
+fn merge_tally(into: &mut Tally, from: &Tally) {
+    into.detected += from.detected;
+    into.not_detected += from.not_detected;
+}
+
+/// Table III result set.
+#[derive(Clone, Debug)]
+pub struct Table3Result {
+    pub high_bits: Tally,
+    pub low_bits: Tally,
+    pub no_error: Tally,
+}
+
+/// Table III: EB detection campaign (200 high-bit, 200 low-bit, 400 clean
+/// in the paper; scaled by `runs_scale`).
+pub fn run_table3(cfg: &EbCampaignConfig, runs_scale: usize, out: &mut dyn Write) -> Table3Result {
+    let s = runs_scale.max(1);
+    let high_bits = run_eb_campaign(cfg, EbTarget::TableHigh4, 200 / s);
+    let low_bits = run_eb_campaign(cfg, EbTarget::TableLow4, 200 / s);
+    let no_error = run_eb_campaign(cfg, EbTarget::None, 400 / s);
+    writeln!(out, "# Table III — EB detection campaign (rows={}, d={})", cfg.table_rows, cfg.dim).unwrap();
+    writeln!(out, "{:<18} {:>10} {:>9} {:>9}", "", "high bits", "low bits", "no error").unwrap();
+    writeln!(
+        out,
+        "{:<18} {:>10} {:>9} {:>9}",
+        "detected runs", high_bits.detected, low_bits.detected, no_error.detected
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "{:<18} {:>10} {:>9} {:>9}",
+        "not detected runs", high_bits.not_detected, low_bits.not_detected, no_error.not_detected
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "rates: high {:.1}% (paper 99.5%), low {:.1}% (paper 47%), FP {:.1}% (paper 9.5%)",
+        high_bits.rate() * 100.0,
+        low_bits.rate() * 100.0,
+        no_error.rate() * 100.0
+    )
+    .unwrap();
+    Table3Result { high_bits, low_bits, no_error }
+}
+
+/// Table-III extension: the same campaign over a 4-bit table (paper
+/// §V-C's p=4 memory-optimized configuration).
+pub fn run_table3_4bit(cfg: &EbCampaignConfig, runs_scale: usize, out: &mut dyn Write) -> Table3Result {
+    let s = runs_scale.max(1);
+    let high_bits = run_eb_campaign_4bit(cfg, EbTarget::TableHigh4, 200 / s);
+    let low_bits = run_eb_campaign_4bit(cfg, EbTarget::TableLow4, 200 / s);
+    let no_error = run_eb_campaign_4bit(cfg, EbTarget::None, 400 / s);
+    writeln!(out, "# Table III ext — 4-bit EB detection (rows={}, d={})", cfg.table_rows, cfg.dim).unwrap();
+    writeln!(
+        out,
+        "rates: high-2-bits-of-nibble {:.1}%, low-2-bits {:.1}%, FP {:.1}%",
+        high_bits.rate() * 100.0,
+        low_bits.rate() * 100.0,
+        no_error.rate() * 100.0
+    )
+    .unwrap();
+    Table3Result { high_bits, low_bits, no_error }
+}
+
+/// §IV-C analytic bounds vs Monte-Carlo measurement.
+pub fn run_analysis(trials: usize, out: &mut dyn Write) {
+    writeln!(out, "# §IV-C — analytic detection probability vs Monte-Carlo ({trials} trials/cell)").unwrap();
+    writeln!(out, "{:<34} {:>4} {:>10} {:>10}", "case", "m", "analytic", "measured").unwrap();
+    let (n, k) = (64usize, 48usize);
+    for &m in &[1usize, 2, 4] {
+        for (label, model, target, analytic) in [
+            (
+                "bitflip in B",
+                crate::fault::FaultModel::BitFlip,
+                GemmTarget::MatrixB,
+                analysis::p_detect_bitflip_in_b(m),
+            ),
+            (
+                "fluctuation in B",
+                crate::fault::FaultModel::DataFluctuation,
+                GemmTarget::MatrixB,
+                analysis::p_detect_fluctuation_in_b(m),
+            ),
+            (
+                "bitflip in C",
+                crate::fault::FaultModel::BitFlip,
+                GemmTarget::MatrixC,
+                analysis::p_detect_bitflip_in_c(),
+            ),
+            (
+                "fluctuation in C (lower bnd)",
+                crate::fault::FaultModel::DataFluctuation,
+                GemmTarget::MatrixC,
+                analysis::p_detect_fluctuation_in_c_lower_bound(127),
+            ),
+        ] {
+            let cfg = GemmCampaignConfig {
+                shapes: vec![(m, n, k)],
+                runs_per_shape: trials,
+                fault_model: model,
+                ..Default::default()
+            };
+            let mut rng = Pcg32::new(0xA11A ^ m as u64 ^ (model as u64) << 8 ^ (target == GemmTarget::MatrixB) as u64);
+            let mut detected = 0usize;
+            for _ in 0..trials {
+                if run_gemm_trial(m, n, k, target, &cfg, &mut rng) {
+                    detected += 1;
+                }
+            }
+            let measured = detected as f64 / trials as f64;
+            writeln!(
+                out,
+                "{:<34} {:>4} {:>9.4}% {:>9.4}%",
+                label,
+                m,
+                analytic * 100.0,
+                measured * 100.0
+            )
+            .unwrap();
+        }
+    }
+}
+
+/// Design-choice ablations (E6): modulus policy, encode side, BLAS level,
+/// checksum width, DMR. Every variant is measured *interleaved* with the
+/// unprotected baseline so drift cancels out of the ratio.
+pub fn run_ablations(cfg: &BenchConfig, out: &mut dyn Write) {
+    let (m, n, k) = (100usize, 512usize, 512usize);
+    let mut rng = Pcg32::new(0xAB1A);
+    let mut a = vec![0u8; m * k];
+    let mut b = vec![0i8; k * n];
+    rng.fill_u8(&mut a);
+    rng.fill_i8(&mut b);
+    let plain = PackedB::pack(&b, k, n);
+    writeln!(out, "# Ablations on ({m},{n},{k}) — interleaved vs unprotected baseline").unwrap();
+
+    let mut report = |name: &str, mut body: Box<dyn FnMut() + '_>| {
+        let mut c_base = vec![0i32; m * n];
+        let (base, variant) = measure_pair(
+            cfg,
+            || {},
+            || {
+                gemm_exec_into(&a, &plain, m, &mut c_base);
+                std::hint::black_box(&c_base);
+            },
+            || body(),
+        );
+        writeln!(
+            out,
+            "{:<36} base {:>9.2}us  variant {:>9.2}us  overhead {:>7.2}%",
+            name,
+            base.median() * 1e6,
+            variant.median() * 1e6,
+            overhead_pct(&base, &variant)
+        )
+        .unwrap();
+    };
+
+    // 1. BLAS-3 packed-checksum ABFT (the paper's design).
+    let abft = AbftGemm::new(&b, k, n);
+    let mut c_prot = vec![0i32; m * (n + 1)];
+    report(
+        "encode-B, mod127, BLAS-3 (paper)",
+        Box::new(|| {
+            let v = abft.exec_into(&a, m, &mut c_prot);
+            std::hint::black_box((&c_prot, v.err_count()));
+        }),
+    );
+
+    // 2. BLAS-2 variant (§IV-A3's rejected implementation).
+    let blas2 = Blas2Abft::new(&b, k, n, 127);
+    report(
+        "encode-B, mod127, BLAS-2",
+        Box::new(|| {
+            let (c, bad) = blas2.exec(&a, &plain, m);
+            std::hint::black_box((c, bad));
+        }),
+    );
+
+    // 3. 32-bit checksum (exact, no modulo; §IV-A2's rejected width).
+    let full32 = Full32Abft::new(&b, k, n);
+    report(
+        "encode-B, 32-bit checksum",
+        Box::new(|| {
+            let (c, bad) = full32.exec(&a, &plain, m);
+            std::hint::black_box((c, bad));
+        }),
+    );
+
+    // 4. Encode-A (re-encoded every call; §IV-A1's rejected side).
+    let enc_a = EncodeA::new();
+    report(
+        "encode-A (per-call)",
+        Box::new(|| {
+            let (c, bad) = enc_a.exec(&a, &plain, m);
+            std::hint::black_box((c, bad));
+        }),
+    );
+
+    // 5. DMR (compute twice; §II's ≥100% strawman).
+    let mut c1 = vec![0i32; m * n];
+    let mut c2 = vec![0i32; m * n];
+    report(
+        "DMR (run twice + compare)",
+        Box::new(|| {
+            gemm_exec_into(&a, &plain, m, &mut c1);
+            gemm_exec_into(&a, &plain, m, &mut c2);
+            std::hint::black_box(c1 == c2);
+        }),
+    );
+
+    // 6. Modulus detection-strength sweep (analytic).
+    writeln!(out, "modulus sweep (analytic P(detect), fluctuation-in-B, m=1):").unwrap();
+    for &modulus in &[127u32, 113, 31, 3] {
+        debug_assert!(analysis::is_prime(modulus));
+        let p = analysis::p_detect_fluctuation_in_b_general(1, modulus);
+        writeln!(
+            out,
+            "  mod {:>3}: {:>8.4}% {}",
+            modulus,
+            p * 100.0,
+            if modulus == 127 { "(paper's choice)" } else { "" }
+        )
+        .unwrap();
+    }
+
+    run_eb_bound_sweep(out);
+}
+
+/// §V-D ablation: the round-off-bound / checker-precision trade-off.
+/// Sweeps rel_bound × {f32, f64} accumulation and reports low-bit
+/// detection vs false positives — the dial the paper sets to 1e-5/f32.
+pub fn run_eb_bound_sweep(out: &mut dyn Write) {
+    use crate::abft::CheckPrecision;
+    writeln!(out, "# EB bound sweep (rows=200k, d=64, pooling=100, batch=10; 100 runs/arm)").unwrap();
+    writeln!(
+        out,
+        "{:>9} {:>5} {:>10} {:>10} {:>9}",
+        "rel_bound", "acc", "high-bit%", "low-bit%", "FP%"
+    )
+    .unwrap();
+    for &(bound, precision, label) in &[
+        (1e-4f64, CheckPrecision::F32, "f32"),
+        (1e-5, CheckPrecision::F32, "f32"),
+        (1e-6, CheckPrecision::F32, "f32"),
+        (1e-5, CheckPrecision::F64, "f64"),
+        (1e-7, CheckPrecision::F64, "f64"),
+    ] {
+        let cfg = EbCampaignConfig {
+            table_rows: 200_000,
+            dim: 64,
+            rel_bound: bound,
+            precision,
+            ..Default::default()
+        };
+        let high = run_eb_campaign(&cfg, EbTarget::TableHigh4, 100);
+        let low = run_eb_campaign(&cfg, EbTarget::TableLow4, 100);
+        let fp = run_eb_campaign(&cfg, EbTarget::None, 100);
+        writeln!(
+            out,
+            "{:>9.0e} {:>5} {:>9.1}% {:>9.1}% {:>8.1}%",
+            bound,
+            label,
+            high.rate() * 100.0,
+            low.rate() * 100.0,
+            fp.rate() * 100.0
+        )
+        .unwrap();
+    }
+    writeln!(out, "(paper's operating point: 1e-5/f32 → 99.5% / 47% / 9.5%)").unwrap();
+}

@@ -1,0 +1,154 @@
+//! From-scratch measurement harness (no criterion offline): warmup,
+//! repeated timed runs, robust summaries, and overhead-ratio reporting —
+//! the shape every paper figure needs (protected vs unprotected time).
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Measurement settings.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    /// Inner repetitions per timed sample (amortizes clock overhead for
+    /// microsecond-scale bodies).
+    pub inner_reps: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            sample_iters: 15,
+            inner_reps: 1,
+        }
+    }
+}
+
+/// Timed samples (seconds per single body execution).
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn summary(&self) -> Summary {
+        Summary::from(&self.samples)
+    }
+
+    pub fn median(&self) -> f64 {
+        self.summary().median
+    }
+}
+
+/// Measure a closure. A `prep` hook runs before each sample, outside the
+/// timed region (cache flushes live there).
+pub fn measure<F: FnMut(), P: FnMut()>(cfg: &BenchConfig, mut prep: P, mut body: F) -> Measurement {
+    for _ in 0..cfg.warmup_iters {
+        body();
+    }
+    let mut samples = Vec::with_capacity(cfg.sample_iters);
+    for _ in 0..cfg.sample_iters {
+        prep();
+        let t0 = Instant::now();
+        for _ in 0..cfg.inner_reps {
+            body();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / cfg.inner_reps as f64);
+    }
+    Measurement { samples }
+}
+
+/// Measure two closures with interleaved samples (A,B,A,B,…) so slow
+/// drift (frequency scaling, noisy neighbours on a shared core) cancels
+/// out of the A/B ratio — the fair way to measure protection overhead.
+pub fn measure_pair<A: FnMut(), B: FnMut(), P: FnMut()>(
+    cfg: &BenchConfig,
+    mut prep: P,
+    mut body_a: A,
+    mut body_b: B,
+) -> (Measurement, Measurement) {
+    for _ in 0..cfg.warmup_iters {
+        body_a();
+        body_b();
+    }
+    let mut samples_a = Vec::with_capacity(cfg.sample_iters);
+    let mut samples_b = Vec::with_capacity(cfg.sample_iters);
+    for _ in 0..cfg.sample_iters {
+        prep();
+        let t0 = Instant::now();
+        for _ in 0..cfg.inner_reps {
+            body_a();
+        }
+        samples_a.push(t0.elapsed().as_secs_f64() / cfg.inner_reps as f64);
+        prep();
+        let t1 = Instant::now();
+        for _ in 0..cfg.inner_reps {
+            body_b();
+        }
+        samples_b.push(t1.elapsed().as_secs_f64() / cfg.inner_reps as f64);
+    }
+    (Measurement { samples: samples_a }, Measurement { samples: samples_b })
+}
+
+/// Overhead of `protected` relative to `baseline`, from medians:
+/// `(t_p - t_b) / t_b`. Matches the paper's Fig 5 / Fig 6 y-axis.
+pub fn overhead_pct(baseline: &Measurement, protected: &Measurement) -> f64 {
+    let b = baseline.median();
+    let p = protected.median();
+    (p - b) / b * 100.0
+}
+
+/// Render one figure-style row: name, baseline, protected, overhead.
+pub fn format_row(name: &str, baseline: &Measurement, protected: &Measurement) -> String {
+    format!(
+        "{:<24} base={:>9.3}us prot={:>9.3}us overhead={:>6.2}%",
+        name,
+        baseline.median() * 1e6,
+        protected.median() * 1e6,
+        overhead_pct(baseline, protected)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            sample_iters: 5,
+            inner_reps: 10,
+        };
+        let mut acc = 0u64;
+        let m = measure(&cfg, || {}, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        std::hint::black_box(acc);
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.median() > 0.0);
+    }
+
+    #[test]
+    fn overhead_of_double_work_positive() {
+        let cfg = BenchConfig {
+            warmup_iters: 2,
+            sample_iters: 9,
+            inner_reps: 50,
+        };
+        let work = |n: u64| {
+            let mut acc = 0u64;
+            for i in 0..n {
+                acc = acc.wrapping_add(std::hint::black_box(i).wrapping_mul(i));
+            }
+            std::hint::black_box(acc);
+        };
+        let base = measure(&cfg, || {}, || work(20_000));
+        let double = measure(&cfg, || {}, || work(40_000));
+        let oh = overhead_pct(&base, &double);
+        assert!(oh > 40.0 && oh < 200.0, "overhead={oh}");
+    }
+}

@@ -1,0 +1,14 @@
+//! Benchmark infrastructure: the measurement harness (criterion is not in
+//! the offline crate set), cache flushing for memory-bound runs, and the
+//! paper's workload generators.
+
+pub mod cacheflush;
+pub mod figures;
+pub mod trace;
+pub mod harness;
+pub mod roofline;
+pub mod workload;
+
+pub use cacheflush::CacheFlusher;
+pub use harness::{measure, overhead_pct, BenchConfig, Measurement};
+pub use workload::{gen_eb_batch, table1_settings, EbSetting, IndexDist};

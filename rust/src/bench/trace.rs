@@ -1,0 +1,236 @@
+//! Request traces: a JSONL format for recording, generating, and
+//! replaying serving workloads — the paper evaluates on synthetic uniform
+//! traffic (Table I); production CTR traffic is zipfian and bursty, so
+//! the trace layer lets every bench run against either, or against a
+//! captured trace file.
+//!
+//! One JSON object per line:
+//! `{"at_us": 1234, "dense": [...], "sparse": [[...], ...]}`
+
+use crate::dlrm::DlrmConfig;
+use crate::util::json::Json;
+use crate::util::rng::{Pcg32, Zipf};
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, Write};
+
+/// One traced request: arrival offset + model inputs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TracedRequest {
+    /// Arrival time offset from trace start, microseconds.
+    pub at_us: u64,
+    pub dense: Vec<f32>,
+    pub sparse: Vec<Vec<usize>>,
+}
+
+impl TracedRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("at_us", Json::Num(self.at_us as f64)),
+            (
+                "dense",
+                Json::Arr(self.dense.iter().map(|&x| Json::Num(x as f64)).collect()),
+            ),
+            (
+                "sparse",
+                Json::Arr(
+                    self.sparse
+                        .iter()
+                        .map(|t| Json::Arr(t.iter().map(|&i| Json::Num(i as f64)).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            at_us: j
+                .get("at_us")
+                .and_then(Json::as_i64)
+                .ok_or_else(|| anyhow!("missing at_us"))? as u64,
+            dense: j
+                .get("dense")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing dense"))?
+                .iter()
+                .map(|x| x.as_f64().map(|v| v as f32).ok_or_else(|| anyhow!("bad dense")))
+                .collect::<Result<_>>()?,
+            sparse: j
+                .get("sparse")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing sparse"))?
+                .iter()
+                .map(|t| {
+                    t.as_arr()
+                        .ok_or_else(|| anyhow!("bad sparse"))?
+                        .iter()
+                        .map(|i| i.as_usize().ok_or_else(|| anyhow!("bad index")))
+                        .collect()
+                })
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// Trace-generation parameters.
+#[derive(Clone, Debug)]
+pub struct TraceGenConfig {
+    /// Mean arrival rate, requests/second (Poisson).
+    pub rate: f64,
+    pub requests: usize,
+    /// Zipf exponent for sparse indices; None = uniform (paper setup).
+    pub zipf_s: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for TraceGenConfig {
+    fn default() -> Self {
+        Self {
+            rate: 500.0,
+            requests: 1000,
+            zipf_s: Some(1.05),
+            seed: 0x7124CE,
+        }
+    }
+}
+
+/// Generate a synthetic trace against a model config.
+pub fn generate_trace(model_cfg: &DlrmConfig, gen: &TraceGenConfig) -> Vec<TracedRequest> {
+    let mut rng = Pcg32::new(gen.seed);
+    let zipfs: Option<Vec<Zipf>> = gen.zipf_s.map(|s| {
+        model_cfg
+            .tables
+            .iter()
+            .map(|t| Zipf::new(t.rows.min(1 << 18), s))
+            .collect()
+    });
+    let mut at = 0f64;
+    let mut out = Vec::with_capacity(gen.requests);
+    for _ in 0..gen.requests {
+        at += crate::bench::workload::poisson_gap(gen.rate, &mut rng) * 1e6;
+        let sparse = model_cfg
+            .tables
+            .iter()
+            .enumerate()
+            .map(|(t, tc)| {
+                (0..tc.pooling.max(1))
+                    .map(|_| match &zipfs {
+                        Some(z) => {
+                            let stride = (tc.rows / (1 << 18).min(tc.rows)).max(1);
+                            (z[t].sample(&mut rng) * stride) % tc.rows
+                        }
+                        None => rng.gen_range(0, tc.rows),
+                    })
+                    .collect()
+            })
+            .collect();
+        out.push(TracedRequest {
+            at_us: at as u64,
+            dense: (0..model_cfg.num_dense).map(|_| rng.next_f32()).collect(),
+            sparse,
+        });
+    }
+    out
+}
+
+/// Write a trace as JSONL.
+pub fn write_trace<W: Write>(w: &mut W, trace: &[TracedRequest]) -> Result<()> {
+    for req in trace {
+        writeln!(w, "{}", req.to_json())?;
+    }
+    Ok(())
+}
+
+/// Read a JSONL trace.
+pub fn read_trace<R: BufRead>(r: R) -> Result<Vec<TracedRequest>> {
+    let mut out = Vec::new();
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line).map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        out.push(TracedRequest::from_json(&j).map_err(|e| anyhow!("line {}: {e}", lineno + 1))?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlrm::TableConfig;
+
+    fn cfg() -> DlrmConfig {
+        DlrmConfig {
+            num_dense: 4,
+            tables: vec![
+                TableConfig { rows: 1000, pooling: 5 },
+                TableConfig { rows: 200, pooling: 2 },
+            ],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn generate_shapes_and_monotone_arrivals() {
+        let trace = generate_trace(&cfg(), &TraceGenConfig { requests: 50, ..Default::default() });
+        assert_eq!(trace.len(), 50);
+        let mut prev = 0;
+        for req in &trace {
+            assert!(req.at_us >= prev, "arrivals must be monotone");
+            prev = req.at_us;
+            assert_eq!(req.dense.len(), 4);
+            assert_eq!(req.sparse.len(), 2);
+            assert_eq!(req.sparse[0].len(), 5);
+            assert!(req.sparse[0].iter().all(|&i| i < 1000));
+            assert!(req.sparse[1].iter().all(|&i| i < 200));
+        }
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let trace = generate_trace(&cfg(), &TraceGenConfig { requests: 20, ..Default::default() });
+        let mut buf = Vec::new();
+        write_trace(&mut buf, &trace).unwrap();
+        let back = read_trace(std::io::BufReader::new(&buf[..])).unwrap();
+        assert_eq!(trace, back);
+    }
+
+    #[test]
+    fn zipf_trace_skews_indices() {
+        let trace = generate_trace(
+            &cfg(),
+            &TraceGenConfig { requests: 200, zipf_s: Some(1.2), ..Default::default() },
+        );
+        let mut counts = std::collections::HashMap::new();
+        for req in &trace {
+            for &i in &req.sparse[0] {
+                *counts.entry(i).or_insert(0usize) += 1;
+            }
+        }
+        let max = counts.values().max().copied().unwrap();
+        assert!(max > 5, "zipf head should repeat (max count {max})");
+    }
+
+    #[test]
+    fn uniform_trace_covers_range() {
+        let trace = generate_trace(
+            &cfg(),
+            &TraceGenConfig { requests: 300, zipf_s: None, ..Default::default() },
+        );
+        let max_idx = trace
+            .iter()
+            .flat_map(|r| r.sparse[0].iter())
+            .max()
+            .copied()
+            .unwrap();
+        assert!(max_idx > 800, "uniform indices should reach high ids");
+    }
+
+    #[test]
+    fn bad_lines_reported_with_lineno() {
+        let data = b"{\"at_us\":1,\"dense\":[],\"sparse\":[]}\nnot json\n";
+        let err = read_trace(std::io::BufReader::new(&data[..])).unwrap_err();
+        assert!(format!("{err}").contains("line 2"));
+    }
+}

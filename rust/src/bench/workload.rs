@@ -1,0 +1,129 @@
+//! Workload generators for the benchmark harness: the Fig-5 GEMM shape
+//! grid, the Table-I EB settings, and synthetic serving traffic (uniform
+//! and zipfian index streams, Poisson arrivals).
+
+use crate::util::rng::{Pcg32, Zipf};
+
+/// One Fig-6 / Table-I EmbeddingBag setting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EbSetting {
+    pub table_rows: usize,
+    pub dim: usize,
+    pub pooling: usize,
+    pub batch: usize,
+}
+
+/// Paper Table I: 4M rows; d ∈ {32, 64, 128, 256}; pooling 100; batch 10.
+pub fn table1_settings() -> Vec<EbSetting> {
+    [32usize, 64, 128, 256]
+        .iter()
+        .map(|&dim| EbSetting {
+            table_rows: 4_000_000,
+            dim,
+            pooling: 100,
+            batch: 10,
+        })
+        .collect()
+}
+
+/// Index distribution for synthetic sparse traffic.
+#[derive(Clone, Debug)]
+pub enum IndexDist {
+    Uniform,
+    /// Zipfian with exponent s (production CTR streams are heavily skewed).
+    Zipf(f64),
+}
+
+/// Generate one batch of (indices, offsets) for an EB benchmark, pooling
+/// exactly `pooling` per bag (the paper's "average pooling size").
+pub fn gen_eb_batch(
+    setting: &EbSetting,
+    dist: &IndexDist,
+    rng: &mut Pcg32,
+) -> (Vec<usize>, Vec<usize>) {
+    let total = setting.pooling * setting.batch;
+    let indices = match dist {
+        IndexDist::Uniform => (0..total)
+            .map(|_| rng.gen_range(0, setting.table_rows))
+            .collect(),
+        IndexDist::Zipf(s) => {
+            let z = Zipf::new(setting.table_rows.min(1 << 20), *s);
+            // Spread the zipf head across the table with a fixed stride so
+            // hot rows are not all physically adjacent.
+            let stride = (setting.table_rows / z_len(&z)).max(1);
+            (0..total)
+                .map(|_| (z.sample(rng) * stride) % setting.table_rows)
+                .collect()
+        }
+    };
+    let offsets = (0..setting.batch).map(|b| b * setting.pooling).collect();
+    (indices, offsets)
+}
+
+fn z_len(_z: &Zipf) -> usize {
+    1 << 20
+}
+
+/// Poisson arrival process for the serving benches: next inter-arrival gap
+/// in seconds for rate `lambda` (requests/s).
+pub fn poisson_gap(lambda: f64, rng: &mut Pcg32) -> f64 {
+    let u = rng.next_f64().max(1e-12);
+    -u.ln() / lambda
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let s = table1_settings();
+        assert_eq!(s.len(), 4);
+        assert!(s.iter().all(|x| x.table_rows == 4_000_000));
+        assert!(s.iter().all(|x| x.pooling == 100 && x.batch == 10));
+        assert_eq!(
+            s.iter().map(|x| x.dim).collect::<Vec<_>>(),
+            vec![32, 64, 128, 256]
+        );
+    }
+
+    #[test]
+    fn eb_batch_shapes() {
+        let mut rng = Pcg32::new(1);
+        let setting = EbSetting {
+            table_rows: 1000,
+            dim: 32,
+            pooling: 7,
+            batch: 3,
+        };
+        let (idx, off) = gen_eb_batch(&setting, &IndexDist::Uniform, &mut rng);
+        assert_eq!(idx.len(), 21);
+        assert_eq!(off, vec![0, 7, 14]);
+        assert!(idx.iter().all(|&i| i < 1000));
+    }
+
+    #[test]
+    fn zipf_batch_in_range_and_skewed() {
+        let mut rng = Pcg32::new(2);
+        let setting = EbSetting {
+            table_rows: 100_000,
+            dim: 32,
+            pooling: 100,
+            batch: 10,
+        };
+        let (idx, _) = gen_eb_batch(&setting, &IndexDist::Zipf(1.1), &mut rng);
+        assert!(idx.iter().all(|&i| i < 100_000));
+        let distinct: std::collections::HashSet<_> = idx.iter().collect();
+        assert!(distinct.len() < idx.len(), "zipf should repeat hot rows");
+    }
+
+    #[test]
+    fn poisson_gaps_average_to_rate() {
+        let mut rng = Pcg32::new(3);
+        let lambda = 100.0;
+        let n = 20_000;
+        let total: f64 = (0..n).map(|_| poisson_gap(lambda, &mut rng)).sum();
+        let mean = total / n as f64;
+        assert!((mean - 1.0 / lambda).abs() < 0.001, "mean={mean}");
+    }
+}

@@ -1,0 +1,211 @@
+//! Dynamic batching: requests accumulate in a bounded queue and are cut
+//! into batches when either `max_batch` is reached or the oldest waiting
+//! request has aged past `max_wait` — the standard latency/throughput
+//! trade-off every serving stack (vLLM, DLRM inference tiers) exposes.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Queue bound; beyond it submissions are rejected (backpressure).
+    pub max_queue: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            max_queue: 4096,
+        }
+    }
+}
+
+struct Queued<T> {
+    item: T,
+    enqueued: Instant,
+}
+
+struct State<T> {
+    queue: VecDeque<Queued<T>>,
+    closed: bool,
+}
+
+/// MPMC dynamic batcher.
+pub struct Batcher<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+    pub policy: BatchPolicy,
+}
+
+/// Why `submit` failed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    QueueFull,
+    Closed,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            policy,
+        }
+    }
+
+    /// Enqueue one request.
+    pub fn submit(&self, item: T) -> Result<(), SubmitError> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(SubmitError::Closed);
+        }
+        if st.queue.len() >= self.policy.max_queue {
+            return Err(SubmitError::QueueFull);
+        }
+        st.queue.push_back(Queued {
+            item,
+            enqueued: Instant::now(),
+        });
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Block until a batch is ready (full, or oldest aged out, or closed).
+    /// Returns `None` when closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.queue.is_empty() {
+                let oldest_age = st.queue.front().unwrap().enqueued.elapsed();
+                if st.queue.len() >= self.policy.max_batch
+                    || oldest_age >= self.policy.max_wait
+                    || st.closed
+                {
+                    let n = st.queue.len().min(self.policy.max_batch);
+                    return Some(st.queue.drain(..n).map(|q| q.item).collect());
+                }
+                // Wait out the remaining aging time (or a new arrival).
+                let remaining = self.policy.max_wait - oldest_age;
+                let (guard, _) = self.cv.wait_timeout(st, remaining).unwrap();
+                st = guard;
+            } else if st.closed {
+                return None;
+            } else {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    /// Close the batcher; pending items still drain via `next_batch`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+            max_queue: 100,
+        }
+    }
+
+    #[test]
+    fn full_batch_cut_immediately() {
+        let b = Batcher::new(policy(4, 1000));
+        for i in 0..4 {
+            b.submit(i).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn partial_batch_cut_after_max_wait() {
+        let b = Batcher::new(policy(100, 10));
+        b.submit(7).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![7]);
+        assert!(t0.elapsed() >= Duration::from_millis(8));
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 10,
+            max_wait: Duration::from_secs(1),
+            max_queue: 2,
+        });
+        b.submit(1).unwrap();
+        b.submit(2).unwrap();
+        assert_eq!(b.submit(3), Err(SubmitError::QueueFull));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Batcher::new(policy(10, 1000));
+        b.submit(1).unwrap();
+        b.close();
+        assert_eq!(b.next_batch(), Some(vec![1]));
+        assert_eq!(b.next_batch(), None);
+        assert_eq!(b.submit(2), Err(SubmitError::Closed));
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_lose_nothing() {
+        let b = Arc::new(Batcher::new(policy(8, 2)));
+        let total = 200;
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let b = Arc::clone(&b);
+            handles.push(thread::spawn(move || {
+                for i in 0..total / 4 {
+                    while b.submit(t * 1000 + i).is_err() {
+                        thread::yield_now();
+                    }
+                }
+            }));
+        }
+        let consumer = {
+            let b = Arc::clone(&b);
+            thread::spawn(move || {
+                let mut seen = 0;
+                while let Some(batch) = b.next_batch() {
+                    seen += batch.len();
+                    if seen == total {
+                        break;
+                    }
+                }
+                seen
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Give the consumer a moment, then close to unblock if needed.
+        thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert_eq!(consumer.join().unwrap(), total);
+    }
+}

@@ -1,0 +1,342 @@
+//! Inference engine: wraps the DLRM model with the serve-time ABFT policy
+//! (verify → recompute-once → flag-degraded), metrics, and an optional
+//! chaos injector that exercises the whole detection path in production
+//! shape (the §VI methodology, online).
+
+use crate::abft::Scrubber;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{ScoreRequest, ScoreResponse};
+use crate::dlrm::{DlrmModel, DlrmRequest, Protection};
+use crate::util::rng::Pcg32;
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Online fault injection for resilience drills.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// Probability that a batch is served with a transiently corrupted
+    /// operand (bit flipped before, restored after).
+    pub p_weight_flip: f64,
+    /// Probability of a transient table-code flip.
+    pub p_table_flip: f64,
+    pub seed: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            p_weight_flip: 0.0,
+            p_table_flip: 0.0,
+            seed: 0xC405,
+        }
+    }
+}
+
+/// Undo-record for one chaos injection.
+enum ChaosUndo {
+    Weight { layer: usize, idx: usize, old: i8 },
+    Table { table: usize, idx: usize, old: u8 },
+}
+
+pub struct Engine {
+    pub model: Mutex<DlrmModel>,
+    pub metrics: Metrics,
+    chaos: Option<Mutex<(ChaosConfig, Pcg32)>>,
+    /// Background table scrubbers (one per table), advanced between
+    /// batches to proactively catch latent memory corruption in cold rows
+    /// (see abft::scrub). None disables scrubbing.
+    scrubbers: Option<Mutex<Vec<Scrubber>>>,
+}
+
+impl Engine {
+    pub fn new(model: DlrmModel) -> Self {
+        Self {
+            model: Mutex::new(model),
+            metrics: Metrics::new(),
+            chaos: None,
+            scrubbers: None,
+        }
+    }
+
+    pub fn with_chaos(model: DlrmModel, chaos: ChaosConfig) -> Self {
+        let rng = Pcg32::new(chaos.seed);
+        Self {
+            model: Mutex::new(model),
+            metrics: Metrics::new(),
+            chaos: Some(Mutex::new((chaos, rng))),
+            scrubbers: None,
+        }
+    }
+
+    /// Enable background scrubbing, `stride` rows per table per tick.
+    pub fn with_scrubbing(mut self, stride: usize) -> Self {
+        let n = self.model.lock().unwrap().tables.len();
+        self.scrubbers = Some(Mutex::new((0..n).map(|_| Scrubber::new(stride)).collect()));
+        self
+    }
+
+    /// Advance every table's scrubber by one strip. Called by the batch
+    /// loop between batches (idle slots). Returns corrupted (table, row)
+    /// pairs found this tick.
+    pub fn scrub_tick(&self) -> Vec<(usize, usize)> {
+        let Some(scrubbers) = &self.scrubbers else {
+            return Vec::new();
+        };
+        let model = self.model.lock().unwrap();
+        let mut scrubbers = scrubbers.lock().unwrap();
+        let mut hits = Vec::new();
+        for (t, (table, checksum)) in model.tables.iter().zip(&model.checksums).enumerate() {
+            let report = scrubbers[t].scrub_step(table, checksum);
+            self.metrics
+                .scrubbed_rows
+                .fetch_add(report.rows_scanned as u64, Ordering::Relaxed);
+            self.metrics
+                .scrub_hits
+                .fetch_add(report.corrupted_rows.len() as u64, Ordering::Relaxed);
+            hits.extend(report.corrupted_rows.into_iter().map(|r| (t, r)));
+        }
+        hits
+    }
+
+    /// Serve one batch: forward → on detection, restore-chaos + recompute
+    /// once → respond, with per-request latency stamped.
+    pub fn process_batch(&self, requests: Vec<ScoreRequest>) -> Vec<ScoreResponse> {
+        let t0 = Instant::now();
+        let ids: Vec<u64> = requests.iter().map(|r| r.id).collect();
+        let dlrm_reqs: Vec<DlrmRequest> =
+            requests.into_iter().map(ScoreRequest::into_dlrm).collect();
+
+        let mut model = self.model.lock().unwrap();
+        let undo = self.maybe_inject(&mut model);
+
+        let (mut scores, report) = model.forward(&dlrm_reqs);
+        let detected = !report.clean();
+        let mut recomputed = false;
+        let mut degraded = false;
+
+        if detected {
+            self.metrics.detections.fetch_add(
+                (report.gemm.rows_flagged + report.eb_bags_flagged) as u64,
+                Ordering::Relaxed,
+            );
+            // Restore transient chaos before the retry (a transient fault
+            // would not recur on real hardware either).
+            Self::undo_chaos(&mut model, &undo);
+            if model.cfg.protection == Protection::DetectRecompute {
+                let (scores2, report2) = model.forward(&dlrm_reqs);
+                scores = scores2;
+                recomputed = true;
+                self.metrics.recomputes.fetch_add(1, Ordering::Relaxed);
+                if !report2.clean() {
+                    degraded = true;
+                    self.metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        } else {
+            Self::undo_chaos(&mut model, &undo);
+        }
+        drop(model);
+
+        let latency_us = t0.elapsed().as_micros() as u64;
+        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .requests
+            .fetch_add(ids.len() as u64, Ordering::Relaxed);
+        self.metrics.latency.record_us(latency_us);
+
+        ids.into_iter()
+            .zip(scores)
+            .map(|(id, score)| ScoreResponse {
+                id,
+                score,
+                detected,
+                recomputed,
+                degraded,
+                latency_us,
+            })
+            .collect()
+    }
+
+    fn maybe_inject(&self, model: &mut DlrmModel) -> Vec<ChaosUndo> {
+        let mut undo = Vec::new();
+        if let Some(chaos) = &self.chaos {
+            let (cfg, rng) = &mut *chaos.lock().unwrap();
+            if rng.next_f64() < cfg.p_weight_flip {
+                // Flip a payload bit in a random protected layer.
+                let nlayers = model.bottom.len() + model.top.len() + 1;
+                let layer = rng.gen_range(0, nlayers);
+                let l = layer_mut(model, layer);
+                let nt = l.n + 1;
+                let p = rng.gen_range(0, l.k);
+                let j = rng.gen_range(0, l.n);
+                let idx = p * nt + j;
+                let bit = rng.gen_range_u32(8);
+                let data = l.abft_mut().packed.data_mut();
+                let old = data[idx];
+                data[idx] = (old as u8 ^ (1 << bit)) as i8;
+                undo.push(ChaosUndo::Weight { layer, idx, old });
+            }
+            if rng.next_f64() < cfg.p_table_flip && !model.tables.is_empty() {
+                let t = rng.gen_range(0, model.tables.len());
+                let idx = rng.gen_range(0, model.tables[t].data.len());
+                let bit = rng.gen_range_u32(8);
+                let old = model.tables[t].data[idx];
+                model.tables[t].data[idx] = old ^ (1 << bit);
+                undo.push(ChaosUndo::Table { table: t, idx, old });
+            }
+        }
+        undo
+    }
+
+    fn undo_chaos(model: &mut DlrmModel, undo: &[ChaosUndo]) {
+        for u in undo {
+            match *u {
+                ChaosUndo::Weight { layer, idx, old } => {
+                    layer_mut(model, layer).abft_mut().packed.data_mut()[idx] = old;
+                }
+                ChaosUndo::Table { table, idx, old } => {
+                    model.tables[table].data[idx] = old;
+                }
+            }
+        }
+    }
+}
+
+fn layer_mut(model: &mut DlrmModel, i: usize) -> &mut crate::dlrm::AbftLinear {
+    let nb = model.bottom.len();
+    let nt = model.top.len();
+    if i < nb {
+        &mut model.bottom[i]
+    } else if i < nb + nt {
+        &mut model.top[i - nb]
+    } else {
+        &mut model.head
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlrm::{DlrmConfig, TableConfig};
+
+    fn tiny_model(protection: Protection) -> DlrmModel {
+        DlrmModel::random(DlrmConfig {
+            num_dense: 4,
+            embedding_dim: 8,
+            bottom_mlp: vec![16, 8],
+            top_mlp: vec![16],
+            tables: vec![TableConfig { rows: 500, pooling: 5 }],
+            protection,
+            dense_range: (0.0, 1.0),
+            seed: 11,
+        })
+    }
+
+    fn make_requests(model: &DlrmModel, n: usize, seed: u64) -> Vec<ScoreRequest> {
+        let mut rng = Pcg32::new(seed);
+        model
+            .synth_requests(n, &mut rng)
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| ScoreRequest {
+                id: i as u64,
+                dense: r.dense,
+                sparse: r.sparse,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn clean_batch_served() {
+        let model = tiny_model(Protection::DetectRecompute);
+        let reqs = make_requests(&model, 5, 1);
+        let engine = Engine::new(model);
+        let resps = engine.process_batch(reqs);
+        assert_eq!(resps.len(), 5);
+        assert!(resps.iter().all(|r| !r.detected && !r.degraded));
+        assert_eq!(engine.metrics.requests.load(Ordering::Relaxed), 5);
+        assert_eq!(engine.metrics.detections.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn chaos_every_batch_detected_and_recovered() {
+        let model = tiny_model(Protection::DetectRecompute);
+        let reqs = make_requests(&model, 4, 2);
+        let clean_engine = Engine::new(tiny_model(Protection::DetectRecompute));
+        let clean = clean_engine.process_batch(reqs.clone());
+        let engine = Engine::with_chaos(
+            model,
+            ChaosConfig {
+                p_weight_flip: 1.0,
+                p_table_flip: 0.0,
+                seed: 3,
+            },
+        );
+        let mut detected_any = false;
+        for _ in 0..10 {
+            let resps = engine.process_batch(reqs.clone());
+            if resps[0].detected {
+                detected_any = true;
+                assert!(resps[0].recomputed);
+                assert!(!resps[0].degraded, "transient fault must recover");
+                // Recovered scores equal clean scores.
+                for (r, c) in resps.iter().zip(&clean) {
+                    assert_eq!(r.score, c.score);
+                }
+            }
+        }
+        assert!(detected_any, "weight flips should be detected");
+        assert!(engine.metrics.recomputes.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn chaos_with_detect_only_flags_without_recompute() {
+        let model = tiny_model(Protection::Detect);
+        let reqs = make_requests(&model, 4, 5);
+        let engine = Engine::with_chaos(
+            model,
+            ChaosConfig {
+                p_weight_flip: 1.0,
+                p_table_flip: 0.0,
+                seed: 4,
+            },
+        );
+        let mut detected_any = false;
+        for _ in 0..10 {
+            let resps = engine.process_batch(reqs.clone());
+            if resps[0].detected {
+                detected_any = true;
+                assert!(!resps[0].recomputed);
+            }
+        }
+        assert!(detected_any);
+        assert_eq!(engine.metrics.recomputes.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn table_chaos_detected() {
+        let model = tiny_model(Protection::DetectRecompute);
+        let reqs = make_requests(&model, 8, 6);
+        let engine = Engine::with_chaos(
+            model,
+            ChaosConfig {
+                p_weight_flip: 0.0,
+                p_table_flip: 1.0,
+                seed: 7,
+            },
+        );
+        // Table flips only surface when a touched row is corrupted; with
+        // 500 rows and 8×5 lookups per batch, ~8% per batch. Run enough
+        // batches to see at least one detection.
+        let mut detected_any = false;
+        for _ in 0..300 {
+            let resps = engine.process_batch(reqs.clone());
+            if resps[0].detected {
+                detected_any = true;
+                break;
+            }
+        }
+        assert!(detected_any, "table chaos never detected");
+    }
+}

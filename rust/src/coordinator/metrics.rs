@@ -1,0 +1,180 @@
+//! Serving metrics: lock-free counters and a log-bucketed latency
+//! histogram, snapshotted to JSON for the `/metrics`-style endpoint.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log2-bucketed latency histogram: bucket i holds samples in
+/// `[2^i, 2^{i+1})` microseconds, 0..=31.
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..32).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_us(&self, us: u64) {
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile from the bucket histogram (upper bound of the
+    /// bucket containing the q-th sample).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        u64::MAX
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// All serving counters.
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    /// Soft-error detections (GEMM rows + EB bags).
+    pub detections: AtomicU64,
+    /// Batch-level recomputations triggered by a detection.
+    pub recomputes: AtomicU64,
+    /// Detections that persisted after recompute.
+    pub degraded: AtomicU64,
+    /// Embedding rows scanned by the background scrubber.
+    pub scrubbed_rows: AtomicU64,
+    /// Corrupted rows found by the scrubber.
+    pub scrub_hits: AtomicU64,
+    pub latency: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            detections: AtomicU64::new(0),
+            recomputes: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            scrubbed_rows: AtomicU64::new(0),
+            scrub_hits: AtomicU64::new(0),
+            latency: LatencyHistogram::new(),
+        }
+    }
+
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
+            (
+                "detections",
+                Json::Num(self.detections.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "recomputes",
+                Json::Num(self.recomputes.load(Ordering::Relaxed) as f64),
+            ),
+            ("degraded", Json::Num(self.degraded.load(Ordering::Relaxed) as f64)),
+            (
+                "scrubbed_rows",
+                Json::Num(self.scrubbed_rows.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "scrub_hits",
+                Json::Num(self.scrub_hits.load(Ordering::Relaxed) as f64),
+            ),
+            ("latency_mean_us", Json::Num(self.latency.mean_us())),
+            ("latency_p50_us", Json::Num(self.latency.quantile_us(0.5) as f64)),
+            ("latency_p99_us", Json::Num(self.latency.quantile_us(0.99) as f64)),
+        ])
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = LatencyHistogram::new();
+        for us in [1u64, 2, 4, 8, 100, 1000, 100_000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 7);
+        assert!(h.mean_us() > 0.0);
+        assert!(h.quantile_us(0.5) <= 256);
+        assert!(h.quantile_us(1.0) >= 100_000);
+    }
+
+    #[test]
+    fn zero_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        h.record_us(0); // clamps to bucket 0
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn snapshot_has_all_keys() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.latency.record_us(50);
+        let s = m.snapshot();
+        for key in [
+            "requests",
+            "batches",
+            "detections",
+            "recomputes",
+            "degraded",
+            "scrubbed_rows",
+            "scrub_hits",
+            "latency_mean_us",
+            "latency_p50_us",
+            "latency_p99_us",
+        ] {
+            assert!(s.get(key).is_some(), "missing {key}");
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Serving coordinator (L3): dynamic batching, the ABFT
+//! verify→recompute→flag policy at serve time, metrics, and the TCP
+//! front-end. This is what turns the paper's operator-level detection into
+//! a deployable feature.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod pjrt_backend;
+pub mod request;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher, SubmitError};
+pub use engine::{ChaosConfig, Engine};
+pub use metrics::Metrics;
+pub use pjrt_backend::{ArtifactShape, PjrtModelEngine};
+pub use request::{ScoreRequest, ScoreResponse};
+pub use server::{Client, Server};

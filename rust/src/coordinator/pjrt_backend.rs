@@ -1,0 +1,278 @@
+//! PJRT serving backend: scores requests through the jax/Pallas-lowered
+//! DLRM artifacts (`model_b{1,8}.hlo.txt`) instead of the native rust
+//! operators — the full three-layer path, with the ABFT evidence the
+//! lowered graph returns (`gemm_bad_rows`, `eb_flagged`) driving the same
+//! detect → recompute → degrade policy as the native engine.
+//!
+//! Batching strategy: the engine owns one compiled executable per
+//! available batch size and routes each incoming batch to the smallest
+//! artifact that fits, padding with repeats of the last request (XLA
+//! shapes are static).
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{ScoreRequest, ScoreResponse};
+use crate::runtime::{PjrtEngine, Tensor};
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Input shape contract of the model artifacts (fixed by
+/// python/compile/aot.py's DEFAULT_CFG).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArtifactShape {
+    pub num_dense: usize,
+    pub num_tables: usize,
+    pub pooling: usize,
+    pub table_rows: usize,
+}
+
+impl Default for ArtifactShape {
+    fn default() -> Self {
+        // Mirrors model_mod.DEFAULT_CFG.
+        Self {
+            num_dense: 8,
+            num_tables: 2,
+            pooling: 20,
+            table_rows: 5000,
+        }
+    }
+}
+
+/// PJRT-backed scoring engine.
+pub struct PjrtModelEngine {
+    engine: Mutex<PjrtEngine>,
+    /// Ascending batch sizes with a loaded `model_b{n}` executable.
+    batch_sizes: Vec<usize>,
+    pub shape: ArtifactShape,
+    pub metrics: Metrics,
+    /// Retry once when the artifact reports ABFT evidence.
+    pub recompute_on_detect: bool,
+}
+
+impl PjrtModelEngine {
+    /// Load every `model_b*.hlo.txt` from `dir`.
+    pub fn load_dir(dir: &str, shape: ArtifactShape) -> Result<Self> {
+        let mut engine = PjrtEngine::cpu()?;
+        let loaded = engine.load_artifact_dir(dir)?;
+        let mut batch_sizes: Vec<usize> = loaded
+            .iter()
+            .filter_map(|n| n.strip_prefix("model_b").and_then(|b| b.parse().ok()))
+            .collect();
+        batch_sizes.sort_unstable();
+        if batch_sizes.is_empty() {
+            bail!("no model_b*.hlo.txt artifacts in {dir:?} — run `make artifacts`");
+        }
+        Ok(Self {
+            engine: Mutex::new(engine),
+            batch_sizes,
+            shape,
+            metrics: Metrics::new(),
+            recompute_on_detect: true,
+        })
+    }
+
+    pub fn batch_sizes(&self) -> &[usize] {
+        &self.batch_sizes
+    }
+
+    fn validate(&self, req: &ScoreRequest) -> Result<()> {
+        if req.dense.len() != self.shape.num_dense {
+            bail!(
+                "dense width {} != artifact contract {}",
+                req.dense.len(),
+                self.shape.num_dense
+            );
+        }
+        if req.sparse.len() != self.shape.num_tables {
+            bail!("table count {} != {}", req.sparse.len(), self.shape.num_tables);
+        }
+        for (t, idx) in req.sparse.iter().enumerate() {
+            if idx.len() != self.shape.pooling {
+                bail!(
+                    "table {t}: pooling {} != artifact contract {} (static shapes)",
+                    idx.len(),
+                    self.shape.pooling
+                );
+            }
+            if let Some(&bad) = idx.iter().find(|&&i| i >= self.shape.table_rows) {
+                bail!("table {t}: index {bad} out of range {}", self.shape.table_rows);
+            }
+        }
+        Ok(())
+    }
+
+    /// Score a batch through the lowered model.
+    pub fn process_batch(&self, requests: Vec<ScoreRequest>) -> Result<Vec<ScoreResponse>> {
+        let t0 = Instant::now();
+        let n = requests.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        for r in &requests {
+            self.validate(r)?;
+        }
+        let &exec_batch = self
+            .batch_sizes
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or_else(|| self.batch_sizes.last().unwrap());
+        if exec_batch < n {
+            bail!(
+                "batch {n} exceeds the largest artifact (b{exec_batch}); split upstream"
+            );
+        }
+
+        // Pack + pad inputs.
+        let s = self.shape;
+        let mut dense = Vec::with_capacity(exec_batch * s.num_dense);
+        let mut indices = Vec::with_capacity(exec_batch * s.num_tables * s.pooling);
+        for i in 0..exec_batch {
+            let req = &requests[i.min(n - 1)]; // pad with the last request
+            dense.extend_from_slice(&req.dense);
+            for t in 0..s.num_tables {
+                indices.extend(req.sparse[t].iter().map(|&x| x as i32));
+            }
+        }
+        let name = format!("model_b{exec_batch}");
+        let inputs = [
+            Tensor::F32(dense, vec![exec_batch, s.num_dense]),
+            Tensor::I32(indices, vec![exec_batch, s.num_tables, s.pooling]),
+        ];
+
+        let engine = self.engine.lock().unwrap();
+        let (mut scores, mut gemm_bad, mut eb_flagged) = run_model(&engine, &name, &inputs)?;
+        let detected = gemm_bad > 0 || eb_flagged > 0;
+        let mut recomputed = false;
+        let mut degraded = false;
+        if detected {
+            self.metrics
+                .detections
+                .fetch_add((gemm_bad + eb_flagged) as u64, Ordering::Relaxed);
+            if self.recompute_on_detect {
+                let (s2, g2, e2) = run_model(&engine, &name, &inputs)?;
+                scores = s2;
+                gemm_bad = g2;
+                eb_flagged = e2;
+                recomputed = true;
+                self.metrics.recomputes.fetch_add(1, Ordering::Relaxed);
+                if gemm_bad > 0 || eb_flagged > 0 {
+                    degraded = true;
+                    self.metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        drop(engine);
+
+        let latency_us = t0.elapsed().as_micros() as u64;
+        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        self.metrics.requests.fetch_add(n as u64, Ordering::Relaxed);
+        self.metrics.latency.record_us(latency_us);
+
+        Ok(requests
+            .iter()
+            .enumerate()
+            .map(|(i, req)| ScoreResponse {
+                id: req.id,
+                score: scores[i],
+                detected,
+                recomputed,
+                degraded,
+                latency_us,
+            })
+            .collect())
+    }
+}
+
+fn run_model(engine: &PjrtEngine, name: &str, inputs: &[Tensor]) -> Result<(Vec<f32>, i32, i32)> {
+    let out = engine.execute(name, inputs)?;
+    match (&out[0], &out[1], &out[2]) {
+        (Tensor::F32(scores, _), Tensor::I32(gemm_bad, _), Tensor::I32(eb_flagged, _)) => {
+            Ok((scores.clone(), gemm_bad[0], eb_flagged[0]))
+        }
+        other => Err(anyhow!("unexpected model outputs: {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/model_b1.hlo.txt").exists()
+    }
+
+    fn sample(shape: &ArtifactShape, id: u64, seed: u64) -> ScoreRequest {
+        let mut rng = Pcg32::new(seed);
+        ScoreRequest {
+            id,
+            dense: (0..shape.num_dense).map(|_| rng.next_f32()).collect(),
+            sparse: (0..shape.num_tables)
+                .map(|_| {
+                    (0..shape.pooling)
+                        .map(|_| rng.gen_range(0, shape.table_rows))
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn scores_through_artifacts() {
+        if !artifacts_available() {
+            eprintln!("SKIP: run `make artifacts`");
+            return;
+        }
+        let engine = PjrtModelEngine::load_dir("artifacts", ArtifactShape::default()).unwrap();
+        assert_eq!(engine.batch_sizes(), &[1, 8]);
+        let reqs: Vec<ScoreRequest> =
+            (0..3).map(|i| sample(&engine.shape, i, 100 + i)).collect();
+        let resps = engine.process_batch(reqs).unwrap();
+        assert_eq!(resps.len(), 3);
+        for r in &resps {
+            assert!((0.0..=1.0).contains(&r.score));
+            assert!(!r.detected, "clean artifacts must not flag");
+        }
+        assert_eq!(engine.metrics.requests.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn batch_padding_preserves_per_request_scores() {
+        if !artifacts_available() {
+            eprintln!("SKIP: run `make artifacts`");
+            return;
+        }
+        let engine = PjrtModelEngine::load_dir("artifacts", ArtifactShape::default()).unwrap();
+        let req = sample(&engine.shape, 7, 42);
+        // Score alone (b1 artifact) and inside a padded batch (b8).
+        let solo = engine.process_batch(vec![req.clone()]).unwrap()[0].score;
+        let mut batch = vec![req.clone()];
+        for i in 0..4 {
+            batch.push(sample(&engine.shape, 10 + i, 200 + i));
+        }
+        let batched = engine.process_batch(batch).unwrap()[0].score;
+        assert!(
+            (solo - batched).abs() < 1e-6,
+            "static quantization: same request must score the same ({solo} vs {batched})"
+        );
+    }
+
+    #[test]
+    fn shape_contract_enforced() {
+        if !artifacts_available() {
+            eprintln!("SKIP: run `make artifacts`");
+            return;
+        }
+        let engine = PjrtModelEngine::load_dir("artifacts", ArtifactShape::default()).unwrap();
+        let mut bad = sample(&engine.shape, 1, 1);
+        bad.dense.pop();
+        assert!(engine.process_batch(vec![bad]).is_err());
+        let mut bad = sample(&engine.shape, 1, 1);
+        bad.sparse[0][0] = 999_999;
+        assert!(engine.process_batch(vec![bad]).is_err());
+        let mut bad = sample(&engine.shape, 1, 1);
+        bad.sparse[0].pop();
+        assert!(engine.process_batch(vec![bad]).is_err());
+    }
+}

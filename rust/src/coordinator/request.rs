@@ -1,0 +1,149 @@
+//! Wire types for the serving protocol: newline-delimited JSON over TCP.
+
+use crate::dlrm::DlrmRequest;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// A scoring request from a client.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScoreRequest {
+    pub id: u64,
+    pub dense: Vec<f32>,
+    pub sparse: Vec<Vec<usize>>,
+}
+
+impl ScoreRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            (
+                "dense",
+                Json::Arr(self.dense.iter().map(|&x| Json::Num(x as f64)).collect()),
+            ),
+            (
+                "sparse",
+                Json::Arr(
+                    self.sparse
+                        .iter()
+                        .map(|t| Json::Arr(t.iter().map(|&i| Json::Num(i as f64)).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let id = j
+            .get("id")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow!("missing id"))? as u64;
+        let dense = j
+            .get("dense")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing dense"))?
+            .iter()
+            .map(|x| x.as_f64().map(|v| v as f32).ok_or_else(|| anyhow!("bad dense")))
+            .collect::<Result<_>>()?;
+        let sparse = j
+            .get("sparse")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing sparse"))?
+            .iter()
+            .map(|t| {
+                t.as_arr()
+                    .ok_or_else(|| anyhow!("bad sparse"))?
+                    .iter()
+                    .map(|i| i.as_usize().ok_or_else(|| anyhow!("bad index")))
+                    .collect::<Result<Vec<usize>>>()
+            })
+            .collect::<Result<_>>()?;
+        Ok(Self { id, dense, sparse })
+    }
+
+    pub fn into_dlrm(self) -> DlrmRequest {
+        DlrmRequest {
+            dense: self.dense,
+            sparse: self.sparse,
+        }
+    }
+}
+
+/// Response to one scoring request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScoreResponse {
+    pub id: u64,
+    pub score: f32,
+    /// A soft error was detected while serving this request's batch.
+    pub detected: bool,
+    /// The batch was recomputed before responding.
+    pub recomputed: bool,
+    /// Detection persisted after recompute (likely memory corruption).
+    pub degraded: bool,
+    pub latency_us: u64,
+}
+
+impl ScoreResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("score", Json::Num(self.score as f64)),
+            ("detected", Json::Bool(self.detected)),
+            ("recomputed", Json::Bool(self.recomputed)),
+            ("degraded", Json::Bool(self.degraded)),
+            ("latency_us", Json::Num(self.latency_us as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            id: j.get("id").and_then(Json::as_i64).ok_or_else(|| anyhow!("id"))? as u64,
+            score: j
+                .get("score")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("score"))? as f32,
+            detected: j.get("detected").and_then(Json::as_bool).unwrap_or(false),
+            recomputed: j.get("recomputed").and_then(Json::as_bool).unwrap_or(false),
+            degraded: j.get("degraded").and_then(Json::as_bool).unwrap_or(false),
+            latency_us: j.get("latency_us").and_then(Json::as_i64).unwrap_or(0) as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_json_roundtrip() {
+        let r = ScoreRequest {
+            id: 9,
+            dense: vec![0.5, 1.25],
+            sparse: vec![vec![1, 2, 3], vec![]],
+        };
+        let j = r.to_json().to_string();
+        let back = ScoreRequest::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn response_json_roundtrip() {
+        let r = ScoreResponse {
+            id: 3,
+            score: 0.75,
+            detected: true,
+            recomputed: true,
+            degraded: false,
+            latency_us: 1234,
+        };
+        let j = r.to_json().to_string();
+        let back = ScoreResponse::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn malformed_request_rejected() {
+        for s in [r#"{}"#, r#"{"id": 1}"#, r#"{"id":1,"dense":[],"sparse":"x"}"#] {
+            assert!(ScoreRequest::from_json(&Json::parse(s).unwrap()).is_err());
+        }
+    }
+}

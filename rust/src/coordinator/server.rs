@@ -1,0 +1,303 @@
+//! TCP serving front-end: newline-delimited JSON requests in, responses
+//! out, with dynamic batching between the socket threads and the engine.
+//!
+//! Protocol (one JSON object per line):
+//!   → `{"id": 1, "dense": [...], "sparse": [[...], ...]}`
+//!   → `{"op": "metrics"}`            (returns the metrics snapshot)
+//!   ← `{"id": 1, "score": 0.42, "detected": false, ...}`
+
+use crate::coordinator::batcher::{Batcher, BatchPolicy};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::request::{ScoreRequest, ScoreResponse};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+/// One queued unit: the request plus the channel its response goes back on.
+struct Pending {
+    req: ScoreRequest,
+    reply: mpsc::Sender<ScoreResponse>,
+}
+
+/// A running server (handle for tests and the CLI).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+    batch_thread: Option<thread::JoinHandle<()>>,
+    batcher: Arc<Batcher<Pending>>,
+}
+
+impl Server {
+    /// Bind and start serving on `addr` (use port 0 for an ephemeral port).
+    pub fn start(addr: &str, engine: Arc<Engine>, policy: BatchPolicy) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let batcher = Arc::new(Batcher::<Pending>::new(policy));
+
+        // Batch loop: drain batches, run the engine, fan responses out.
+        let batch_thread = {
+            let batcher = Arc::clone(&batcher);
+            let engine = Arc::clone(&engine);
+            thread::Builder::new()
+                .name("batch-loop".into())
+                .spawn(move || {
+                    while let Some(batch) = batcher.next_batch() {
+                        let (reqs, replies): (Vec<_>, Vec<_>) =
+                            batch.into_iter().map(|p| (p.req, p.reply)).unzip();
+                        let resps = engine.process_batch(reqs);
+                        for (resp, reply) in resps.into_iter().zip(replies) {
+                            let _ = reply.send(resp);
+                        }
+                        // Idle-slot proactive scrubbing (no-op when disabled).
+                        engine.scrub_tick();
+                    }
+                })?
+        };
+
+        // Accept loop: one thread per connection (CPU-bound inference
+        // dominates; connection counts here are small).
+        let accept_thread = {
+            let shutdown = Arc::clone(&shutdown);
+            let batcher = Arc::clone(&batcher);
+            let engine = Arc::clone(&engine);
+            thread::Builder::new().name("accept".into()).spawn(move || {
+                loop {
+                    if shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let batcher = Arc::clone(&batcher);
+                            let engine = Arc::clone(&engine);
+                            thread::spawn(move || {
+                                let _ = handle_conn(stream, batcher, engine);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?
+        };
+
+        Ok(Server {
+            addr: local,
+            shutdown,
+            accept_thread: Some(accept_thread),
+            batch_thread: Some(batch_thread),
+            batcher,
+        })
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.batcher.close();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.batch_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.batcher.close();
+    }
+}
+
+fn handle_conn(stream: TcpStream, batcher: Arc<Batcher<Pending>>, engine: Arc<Engine>) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                writeln!(writer, "{}", err_json(&format!("bad json: {e}")))?;
+                writer.flush()?;
+                continue;
+            }
+        };
+        // Control ops.
+        if let Some(op) = parsed.get("op").and_then(Json::as_str) {
+            match op {
+                "metrics" => writeln!(writer, "{}", engine.metrics.snapshot())?,
+                "ping" => writeln!(writer, "{}", Json::obj(vec![("pong", Json::Bool(true))]))?,
+                _ => writeln!(writer, "{}", err_json("unknown op"))?,
+            }
+            writer.flush()?;
+            continue;
+        }
+        match ScoreRequest::from_json(&parsed) {
+            Ok(req) => {
+                let (tx, rx) = mpsc::channel();
+                if batcher.submit(Pending { req, reply: tx }).is_err() {
+                    writeln!(writer, "{}", err_json("overloaded"))?;
+                    writer.flush()?;
+                    continue;
+                }
+                match rx.recv() {
+                    Ok(resp) => writeln!(writer, "{}", resp.to_json())?,
+                    Err(_) => writeln!(writer, "{}", err_json("engine dropped request"))?,
+                }
+                writer.flush()?;
+            }
+            Err(e) => {
+                writeln!(writer, "{}", err_json(&format!("bad request: {e}")))?;
+                writer.flush()?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))])
+}
+
+/// Minimal blocking client for tests, examples and the CLI.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Self {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    pub fn score(&mut self, req: &ScoreRequest) -> Result<ScoreResponse> {
+        writeln!(self.writer, "{}", req.to_json())?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let j = Json::parse(line.trim())?;
+        if let Some(err) = j.get("error").and_then(Json::as_str) {
+            anyhow::bail!("server error: {err}");
+        }
+        ScoreResponse::from_json(&j)
+    }
+
+    pub fn metrics(&mut self) -> Result<Json> {
+        writeln!(self.writer, "{{\"op\":\"metrics\"}}")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
+    use crate::util::rng::Pcg32;
+    use std::time::Duration;
+
+    fn tiny_engine() -> Arc<Engine> {
+        let model = DlrmModel::random(DlrmConfig {
+            num_dense: 4,
+            embedding_dim: 8,
+            bottom_mlp: vec![16, 8],
+            top_mlp: vec![16],
+            tables: vec![TableConfig { rows: 200, pooling: 4 }],
+            protection: Protection::DetectRecompute,
+            dense_range: (0.0, 1.0),
+            seed: 5,
+        });
+        Arc::new(Engine::new(model))
+    }
+
+    fn sample_request(id: u64) -> ScoreRequest {
+        let mut rng = Pcg32::new(id);
+        ScoreRequest {
+            id,
+            dense: (0..4).map(|_| rng.next_f32()).collect(),
+            sparse: vec![(0..4).map(|_| rng.gen_range(0, 200)).collect()],
+        }
+    }
+
+    fn fast_policy() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            max_queue: 64,
+        }
+    }
+
+    #[test]
+    fn end_to_end_score_over_tcp() {
+        let server = Server::start("127.0.0.1:0", tiny_engine(), fast_policy()).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        for id in 0..5 {
+            let resp = client.score(&sample_request(id)).unwrap();
+            assert_eq!(resp.id, id);
+            assert!((0.0..=1.0).contains(&resp.score));
+            assert!(!resp.detected);
+        }
+        let m = client.metrics().unwrap();
+        assert_eq!(m.get("requests").and_then(Json::as_usize), Some(5));
+        server.stop();
+    }
+
+    #[test]
+    fn malformed_lines_get_error_not_crash() {
+        let server = Server::start("127.0.0.1:0", tiny_engine(), fast_policy()).unwrap();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        let mut r = BufReader::new(stream);
+        writeln!(w, "not json at all").unwrap();
+        w.flush().unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("error"));
+        // Connection still usable afterwards.
+        writeln!(w, "{}", sample_request(1).to_json()).unwrap();
+        w.flush().unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("score"));
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_clients_batched_together() {
+        let engine = tiny_engine();
+        let server = Server::start("127.0.0.1:0", Arc::clone(&engine), fast_policy()).unwrap();
+        let addr = server.addr;
+        let handles: Vec<_> = (0..8)
+            .map(|id| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    c.score(&sample_request(id)).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let resp = h.join().unwrap();
+            assert!((0.0..=1.0).contains(&resp.score));
+        }
+        let batches = engine.metrics.batches.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(batches <= 8, "batching should coalesce ({batches} batches)");
+        server.stop();
+    }
+}

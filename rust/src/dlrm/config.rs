@@ -1,0 +1,204 @@
+//! DLRM model configuration, loadable from JSON (the config system the
+//! launcher and examples share).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Per-operator protection switch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Protection {
+    /// No ABFT (baseline).
+    Off,
+    /// ABFT verification; detections reported but output used as-is.
+    Detect,
+    /// ABFT verification + recompute of corrupted rows/bags.
+    DetectRecompute,
+}
+
+impl Protection {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(Protection::Off),
+            "detect" => Ok(Protection::Detect),
+            "detect_recompute" => Ok(Protection::DetectRecompute),
+            _ => Err(anyhow!("unknown protection mode {s:?}")),
+        }
+    }
+
+    pub fn enabled(self) -> bool {
+        self != Protection::Off
+    }
+}
+
+/// One embedding table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TableConfig {
+    pub rows: usize,
+    /// Mean lookups per bag for synthetic traffic.
+    pub pooling: usize,
+}
+
+/// Full model + protection configuration.
+#[derive(Clone, Debug)]
+pub struct DlrmConfig {
+    /// Dense (continuous) input features.
+    pub num_dense: usize,
+    /// Embedding dimension d (shared across tables, as in DLRM).
+    pub embedding_dim: usize,
+    /// Bottom-MLP hidden sizes; the last must equal `embedding_dim`.
+    pub bottom_mlp: Vec<usize>,
+    /// Top-MLP hidden sizes; a final 1-wide output layer is appended.
+    pub top_mlp: Vec<usize>,
+    pub tables: Vec<TableConfig>,
+    pub protection: Protection,
+    /// Dense inputs are quantized against this fixed range.
+    pub dense_range: (f32, f32),
+    pub seed: u64,
+}
+
+impl Default for DlrmConfig {
+    fn default() -> Self {
+        Self {
+            num_dense: 13,
+            embedding_dim: 64,
+            bottom_mlp: vec![512, 256, 64],
+            top_mlp: vec![512, 256],
+            tables: vec![TableConfig { rows: 100_000, pooling: 30 }; 8],
+            protection: Protection::DetectRecompute,
+            dense_range: (0.0, 1.0),
+            seed: 42,
+        }
+    }
+}
+
+impl DlrmConfig {
+    /// Input width of the top MLP: bottom output (d) concatenated with the
+    /// pairwise interaction features among (tables + 1) d-vectors.
+    pub fn top_input_dim(&self) -> usize {
+        let t = self.tables.len() + 1;
+        self.embedding_dim + t * (t - 1) / 2
+    }
+
+    /// Total trainable parameters (for sizing the e2e run).
+    pub fn param_count(&self) -> usize {
+        let mut count = 0usize;
+        let mut prev = self.num_dense;
+        for &h in &self.bottom_mlp {
+            count += prev * h;
+            prev = h;
+        }
+        prev = self.top_input_dim();
+        for &h in &self.top_mlp {
+            count += prev * h;
+            prev = h;
+        }
+        count += prev; // final scalar head
+        count += self.tables.iter().map(|t| t.rows * self.embedding_dim).sum::<usize>();
+        count
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = DlrmConfig::default();
+        if let Some(v) = j.get("num_dense").and_then(Json::as_usize) {
+            cfg.num_dense = v;
+        }
+        if let Some(v) = j.get("embedding_dim").and_then(Json::as_usize) {
+            cfg.embedding_dim = v;
+        }
+        if let Some(a) = j.get("bottom_mlp").and_then(Json::as_arr) {
+            cfg.bottom_mlp = parse_usize_arr(a)?;
+        }
+        if let Some(a) = j.get("top_mlp").and_then(Json::as_arr) {
+            cfg.top_mlp = parse_usize_arr(a)?;
+        }
+        if let Some(a) = j.get("tables").and_then(Json::as_arr) {
+            cfg.tables = a
+                .iter()
+                .map(|t| {
+                    Ok(TableConfig {
+                        rows: t
+                            .get("rows")
+                            .and_then(Json::as_usize)
+                            .ok_or_else(|| anyhow!("table needs rows"))?,
+                        pooling: t.get("pooling").and_then(Json::as_usize).unwrap_or(30),
+                    })
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(s) = j.get("protection").and_then(Json::as_str) {
+            cfg.protection = Protection::parse(s)?;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_i64) {
+            cfg.seed = v as u64;
+        }
+        if let Some(last) = cfg.bottom_mlp.last() {
+            if *last != cfg.embedding_dim {
+                return Err(anyhow!(
+                    "bottom_mlp must end at embedding_dim ({} != {})",
+                    last,
+                    cfg.embedding_dim
+                ));
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_json_str(s: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(s)?)
+    }
+}
+
+fn parse_usize_arr(a: &[Json]) -> Result<Vec<usize>> {
+    a.iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("expected usize")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_sane() {
+        let c = DlrmConfig::default();
+        assert_eq!(*c.bottom_mlp.last().unwrap(), c.embedding_dim);
+        assert_eq!(c.top_input_dim(), 64 + 9 * 8 / 2);
+        assert!(c.param_count() > 50_000_000); // embedding dominated
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = DlrmConfig::from_json_str(
+            r#"{
+              "num_dense": 4,
+              "embedding_dim": 16,
+              "bottom_mlp": [32, 16],
+              "top_mlp": [64],
+              "tables": [{"rows": 1000}, {"rows": 500, "pooling": 5}],
+              "protection": "detect",
+              "seed": 7
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.num_dense, 4);
+        assert_eq!(cfg.tables.len(), 2);
+        assert_eq!(cfg.tables[1].pooling, 5);
+        assert_eq!(cfg.protection, Protection::Detect);
+    }
+
+    #[test]
+    fn rejects_mismatched_bottom() {
+        let r = DlrmConfig::from_json_str(
+            r#"{"embedding_dim": 16, "bottom_mlp": [32, 8]}"#,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn protection_parse() {
+        assert_eq!(Protection::parse("off").unwrap(), Protection::Off);
+        assert!(Protection::parse("bogus").is_err());
+        assert!(!Protection::Off.enabled());
+        assert!(Protection::Detect.enabled());
+    }
+}

@@ -1,0 +1,73 @@
+//! DLRM pairwise feature interaction: dot products between every pair of
+//! the (num_tables + 1) d-dimensional feature vectors (bottom-MLP output +
+//! one pooled embedding per table).
+
+/// `vectors` is `groups` feature vectors per sample, laid out as
+/// `batch × groups × d`. Output is `batch × C(groups,2)` of pairwise dots
+/// (upper triangle, row-major pair order).
+pub fn pairwise_interaction(vectors: &[f32], batch: usize, groups: usize, d: usize) -> Vec<f32> {
+    assert_eq!(vectors.len(), batch * groups * d);
+    let pairs = groups * (groups - 1) / 2;
+    let mut out = vec![0f32; batch * pairs];
+    for b in 0..batch {
+        let base = b * groups * d;
+        let mut p = 0;
+        for g1 in 0..groups {
+            let v1 = &vectors[base + g1 * d..base + (g1 + 1) * d];
+            for g2 in (g1 + 1)..groups {
+                let v2 = &vectors[base + g2 * d..base + (g2 + 1) * d];
+                let mut dot = 0f32;
+                for j in 0..d {
+                    dot += v1[j] * v2[j];
+                }
+                out[b * pairs + p] = dot;
+                p += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Number of interaction features for `groups` vectors.
+pub fn interaction_dim(groups: usize) -> usize {
+    groups * (groups - 1) / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_vectors_single_dot() {
+        // batch=1, groups=2, d=3: [1,2,3]·[4,5,6] = 32
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        assert_eq!(pairwise_interaction(&v, 1, 2, 3), vec![32.0]);
+    }
+
+    #[test]
+    fn pair_order_and_count() {
+        // groups=3 → pairs (0,1), (0,2), (1,2)
+        let v = [
+            1.0, 0.0, // g0
+            0.0, 1.0, // g1
+            1.0, 1.0, // g2
+        ];
+        let out = pairwise_interaction(&v, 1, 3, 2);
+        assert_eq!(out, vec![0.0, 1.0, 1.0]);
+        assert_eq!(interaction_dim(3), 3);
+    }
+
+    #[test]
+    fn batch_independence() {
+        let mut v = vec![0f32; 2 * 2 * 4];
+        // batch 0: ones; batch 1: twos.
+        for x in &mut v[..8] {
+            *x = 1.0;
+        }
+        for x in &mut v[8..] {
+            *x = 2.0;
+        }
+        let out = pairwise_interaction(&v, 2, 2, 4);
+        assert_eq!(out, vec![4.0, 16.0]);
+    }
+}

@@ -1,0 +1,14 @@
+//! The DLRM model assembled from the quantized operators (bottom MLP →
+//! EmbeddingBags → pairwise interaction → top MLP), with ABFT protection
+//! wired through every GEMM and EB.
+
+pub mod config;
+pub mod interaction;
+pub mod layer;
+pub mod model;
+pub mod serialize;
+
+pub use config::{DlrmConfig, Protection, TableConfig};
+pub use interaction::{interaction_dim, pairwise_interaction};
+pub use layer::{AbftLinear, LayerReport};
+pub use model::{DlrmModel, DlrmRequest, InferenceReport};

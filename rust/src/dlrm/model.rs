@@ -1,0 +1,377 @@
+//! The DLRM inference model assembled from the quantized operators, with
+//! ABFT protection on every GEMM and EmbeddingBag (the paper's two >70%
+//! latency operators) and a recompute-on-detect recovery policy.
+
+use crate::abft::{EbChecksum, FusedEbAbft};
+use crate::dlrm::config::{DlrmConfig, Protection};
+use crate::dlrm::interaction::pairwise_interaction;
+use crate::dlrm::layer::{AbftLinear, LayerReport};
+use crate::embedding::{bag_sum_8, QuantTable8};
+use crate::quant::QParams;
+use crate::util::rng::Pcg32;
+
+/// One inference request: dense features + per-table index lists.
+#[derive(Clone, Debug)]
+pub struct DlrmRequest {
+    pub dense: Vec<f32>,
+    /// `sparse[t]` = lookup indices into table t.
+    pub sparse: Vec<Vec<usize>>,
+}
+
+/// Aggregated soft-error events from one batch inference.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct InferenceReport {
+    pub gemm: LayerReport,
+    pub eb_bags_flagged: usize,
+    pub eb_bags_recomputed: usize,
+    /// Flagged again after recompute — a persistent (memory) error.
+    pub eb_bags_unrecovered: usize,
+}
+
+impl InferenceReport {
+    pub fn merge(&mut self, o: &InferenceReport) {
+        self.gemm.merge(&o.gemm);
+        self.eb_bags_flagged += o.eb_bags_flagged;
+        self.eb_bags_recomputed += o.eb_bags_recomputed;
+        self.eb_bags_unrecovered += o.eb_bags_unrecovered;
+    }
+
+    pub fn clean(&self) -> bool {
+        self.gemm.rows_flagged == 0 && self.eb_bags_flagged == 0
+    }
+}
+
+/// The model: quantized bottom/top MLPs + quantized embedding tables.
+pub struct DlrmModel {
+    pub cfg: DlrmConfig,
+    pub bottom: Vec<AbftLinear>,
+    pub top: Vec<AbftLinear>,
+    pub head: AbftLinear,
+    pub tables: Vec<QuantTable8>,
+    pub checksums: Vec<EbChecksum>,
+    /// Cache-optimal fused ABFT state (one per table); the serving path
+    /// uses this instead of the naive bag+check (see abft::eb §Perf note).
+    pub fused: Vec<FusedEbAbft>,
+    pub dense_qparams: QParams,
+    /// Static (calibrated) quantization lattice for the top-MLP input.
+    /// Dynamic per-batch quantization would make a request's score depend
+    /// on which batch it landed in — unacceptable for serving.
+    pub top_qparams: QParams,
+    /// Per-column standardization of the top-MLP input, fitted at
+    /// calibration. Interaction features are O(pooling²·d) while MLP
+    /// features are O(1); without standardization the shared u8 lattice
+    /// wastes its range and the head saturates.
+    pub top_mean: Vec<f32>,
+    pub top_std: Vec<f32>,
+}
+
+impl DlrmModel {
+    /// Synthetic random model from a config (weights He-initialized then
+    /// quantized; tables uniform-random as in the paper's evaluation).
+    pub fn random(cfg: DlrmConfig) -> Self {
+        let mut rng = Pcg32::new(cfg.seed);
+        let prot = cfg.protection;
+        let mut bottom = Vec::new();
+        let mut prev = cfg.num_dense;
+        for &h in &cfg.bottom_mlp {
+            bottom.push(AbftLinear::random(prev, h, true, prot, &mut rng));
+            prev = h;
+        }
+        let mut top = Vec::new();
+        let mut tprev = cfg.top_input_dim();
+        for &h in &cfg.top_mlp {
+            top.push(AbftLinear::random(tprev, h, true, prot, &mut rng));
+            tprev = h;
+        }
+        let head = AbftLinear::random(tprev, 1, false, prot, &mut rng);
+        let mut tables = Vec::new();
+        let mut checksums = Vec::new();
+        let mut fused = Vec::new();
+        for t in &cfg.tables {
+            let table = QuantTable8::random(t.rows, cfg.embedding_dim, &mut rng);
+            let cs = EbChecksum::build_8(&table);
+            fused.push(cs.clone().fuse(&table));
+            checksums.push(cs);
+            tables.push(table);
+        }
+        let dense_qparams = QParams::fit_u8(cfg.dense_range.0, cfg.dense_range.1);
+        let mut model = Self {
+            cfg,
+            bottom,
+            top,
+            head,
+            tables,
+            checksums,
+            fused,
+            dense_qparams,
+            top_qparams: QParams::fit_u8(-1.0, 1.0), // placeholder
+            top_mean: Vec::new(),
+            top_std: Vec::new(),
+        };
+        model.calibrate(&mut rng);
+        model
+    }
+
+    /// Post-training static-quantization calibration: run a synthetic batch
+    /// through the bottom half and fit the top-MLP input lattice with
+    /// headroom. Keeps serving deterministic w.r.t. batch composition.
+    fn calibrate(&mut self, rng: &mut Pcg32) {
+        let batch = 64;
+        let dim = self.cfg.top_input_dim();
+        let reqs = self.synth_requests(batch, rng);
+        let top_in = self.compute_top_input(&reqs).0;
+        // Per-column mean/std over the calibration batch.
+        let mut mean = vec![0f32; dim];
+        for b in 0..batch {
+            for (j, m) in mean.iter_mut().enumerate() {
+                *m += top_in[b * dim + j];
+            }
+        }
+        for m in &mut mean {
+            *m /= batch as f32;
+        }
+        let mut std = vec![0f32; dim];
+        for b in 0..batch {
+            for j in 0..dim {
+                let d = top_in[b * dim + j] - mean[j];
+                std[j] += d * d;
+            }
+        }
+        for s in &mut std {
+            *s = (*s / batch as f32).sqrt().max(1e-3);
+        }
+        self.top_mean = mean;
+        self.top_std = std;
+        // Standardized features are ~N(0,1); ±4σ with asymmetric headroom
+        // keeps the zero code off the modulus (see AbftLinear::random).
+        self.top_qparams = QParams::fit_u8(-4.0, 4.4);
+    }
+
+    /// Batched forward pass. Returns (scores in [0,1], soft-error report).
+    pub fn forward(&self, requests: &[DlrmRequest]) -> (Vec<f32>, InferenceReport) {
+        let (top_in, mut report) = self.compute_top_input(requests);
+        let batch = requests.len();
+        let top_in_dim = self.cfg.top_input_dim();
+
+        // 5. Standardize per column (calibrated stats), then quantize onto
+        // the static lattice and run the top MLP + scalar head.
+        let mut qp = self.top_qparams;
+        let mut xq = vec![0u8; batch * top_in_dim];
+        for b in 0..batch {
+            for j in 0..top_in_dim {
+                let z = (top_in[b * top_in_dim + j] - self.top_mean[j]) / self.top_std[j];
+                xq[b * top_in_dim + j] = qp.quantize_u8(z);
+            }
+        }
+        for layer in &self.top {
+            let (y, rep) = layer.forward(&xq, batch, qp);
+            report.gemm.merge(&rep);
+            qp = layer.out_qparams;
+            xq = y;
+        }
+        let (logits_q, rep) = self.head.forward(&xq, batch, qp);
+        report.gemm.merge(&rep);
+        let scores: Vec<f32> = logits_q
+            .iter()
+            .map(|&q| sigmoid(self.head.out_qparams.dequantize_u8(q)))
+            .collect();
+        (scores, report)
+    }
+
+    /// Bottom half of the forward pass: bottom MLP → EBs → interaction →
+    /// concat. Returns the float top-MLP input (batch × top_input_dim).
+    fn compute_top_input(&self, requests: &[DlrmRequest]) -> (Vec<f32>, InferenceReport) {
+        let batch = requests.len();
+        assert!(batch > 0);
+        let d = self.cfg.embedding_dim;
+        let num_tables = self.tables.len();
+        let mut report = InferenceReport::default();
+
+        // 1. Quantize dense inputs against the fixed input lattice.
+        let mut dense_q = vec![0u8; batch * self.cfg.num_dense];
+        for (b, req) in requests.iter().enumerate() {
+            assert_eq!(req.dense.len(), self.cfg.num_dense, "dense width");
+            assert_eq!(req.sparse.len(), num_tables, "sparse tables");
+            for (j, &x) in req.dense.iter().enumerate() {
+                dense_q[b * self.cfg.num_dense + j] = self.dense_qparams.quantize_u8(x);
+            }
+        }
+
+        // 2. Bottom MLP.
+        let mut x = dense_q;
+        let mut x_qp = self.dense_qparams;
+        for layer in &self.bottom {
+            let (y, rep) = layer.forward(&x, batch, x_qp);
+            report.gemm.merge(&rep);
+            x_qp = layer.out_qparams;
+            x = y;
+        }
+        let bottom_f: Vec<f32> = x.iter().map(|&q| x_qp.dequantize_u8(q)).collect();
+
+        // 3. EmbeddingBags, ABFT-checked per bag.
+        // Feature layout for interaction: batch × (1 + T) × d.
+        let groups = num_tables + 1;
+        let mut feats = vec![0f32; batch * groups * d];
+        for b in 0..batch {
+            feats[b * groups * d..b * groups * d + d]
+                .copy_from_slice(&bottom_f[b * d..(b + 1) * d]);
+        }
+        for (t, (table, fused)) in self.tables.iter().zip(&self.fused).enumerate() {
+            for (b, req) in requests.iter().enumerate() {
+                let indices = &req.sparse[t];
+                let out = &mut feats
+                    [b * groups * d + (t + 1) * d..b * groups * d + (t + 2) * d];
+                if self.cfg.protection.enabled() {
+                    // Fused gather+reduce+verify: same random-access streams
+                    // as the unprotected bag (abft::eb §Perf).
+                    let mut bad = fused.bag_sum_checked(table, indices, None, true, out);
+                    if bad {
+                        report.eb_bags_flagged += 1;
+                        if self.cfg.protection == Protection::DetectRecompute {
+                            report.eb_bags_recomputed += 1;
+                            bad = fused.bag_sum_checked(table, indices, None, true, out);
+                            if bad {
+                                report.eb_bags_unrecovered += 1;
+                            }
+                        }
+                    }
+                } else {
+                    bag_sum_8(table, indices, None, true, out);
+                }
+            }
+        }
+
+        // 4. Pairwise interactions + concat with bottom output.
+        let inter = pairwise_interaction(&feats, batch, groups, d);
+        let pairs = inter.len() / batch;
+        let top_in_dim = d + pairs;
+        debug_assert_eq!(top_in_dim, self.cfg.top_input_dim());
+        let mut top_in = vec![0f32; batch * top_in_dim];
+        for b in 0..batch {
+            top_in[b * top_in_dim..b * top_in_dim + d]
+                .copy_from_slice(&bottom_f[b * d..(b + 1) * d]);
+            top_in[b * top_in_dim + d..(b + 1) * top_in_dim]
+                .copy_from_slice(&inter[b * pairs..(b + 1) * pairs]);
+        }
+        (top_in, report)
+    }
+
+    /// Generate a synthetic request batch (uniform indices, as the paper's
+    /// evaluation does; callers can build zipfian traffic via
+    /// [`crate::bench::workload`]).
+    pub fn synth_requests(&self, batch: usize, rng: &mut Pcg32) -> Vec<DlrmRequest> {
+        (0..batch)
+            .map(|_| DlrmRequest {
+                dense: (0..self.cfg.num_dense).map(|_| rng.next_f32()).collect(),
+                sparse: self
+                    .cfg
+                    .tables
+                    .iter()
+                    .map(|t| {
+                        (0..t.pooling.max(1))
+                            .map(|_| rng.gen_range(0, t.rows))
+                            .collect()
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+
+    /// Total weight bytes (packed MLPs + tables), for sizing reports.
+    pub fn weight_bytes(&self) -> usize {
+        let mlp: usize = self
+            .bottom
+            .iter()
+            .chain(&self.top)
+            .chain(std::iter::once(&self.head))
+            .map(|l| l.weight_bytes())
+            .sum();
+        mlp + self.tables.iter().map(|t| t.bytes()).sum::<usize>()
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlrm::config::TableConfig;
+
+    fn tiny_cfg(protection: Protection) -> DlrmConfig {
+        DlrmConfig {
+            num_dense: 4,
+            embedding_dim: 8,
+            bottom_mlp: vec![16, 8],
+            top_mlp: vec![16],
+            tables: vec![
+                TableConfig { rows: 200, pooling: 5 },
+                TableConfig { rows: 100, pooling: 3 },
+            ],
+            protection,
+            dense_range: (0.0, 1.0),
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn forward_produces_probabilities() {
+        let model = DlrmModel::random(tiny_cfg(Protection::DetectRecompute));
+        let mut rng = Pcg32::new(1);
+        let reqs = model.synth_requests(6, &mut rng);
+        let (scores, report) = model.forward(&reqs);
+        assert_eq!(scores.len(), 6);
+        assert!(scores.iter().all(|&s| (0.0..=1.0).contains(&s)));
+        assert!(report.clean(), "clean model must not flag: {report:?}");
+    }
+
+    #[test]
+    fn protection_is_output_transparent() {
+        let mut rng = Pcg32::new(2);
+        let m_on = DlrmModel::random(tiny_cfg(Protection::DetectRecompute));
+        let m_off = DlrmModel::random(tiny_cfg(Protection::Off));
+        let reqs = m_on.synth_requests(4, &mut rng);
+        let (s_on, _) = m_on.forward(&reqs);
+        let (s_off, _) = m_off.forward(&reqs);
+        assert_eq!(s_on, s_off, "same seed, same scores regardless of ABFT");
+    }
+
+    #[test]
+    fn corrupted_mlp_weight_detected_in_forward() {
+        let mut model = DlrmModel::random(tiny_cfg(Protection::Detect));
+        // Flip a high bit in a packed bottom-layer weight.
+        let data = model.bottom[0].abft_mut().packed.data_mut();
+        let mid = data.len() / 2;
+        data[mid] = (data[mid] as u8 ^ 0x40) as i8;
+        let mut rng = Pcg32::new(3);
+        let reqs = model.synth_requests(4, &mut rng);
+        let (_, report) = model.forward(&reqs);
+        assert!(report.gemm.rows_flagged > 0, "{report:?}");
+    }
+
+    #[test]
+    fn corrupted_table_flagged_and_unrecovered() {
+        let mut model = DlrmModel::random(tiny_cfg(Protection::DetectRecompute));
+        // Persistent table corruption: high bit of many codes in table 0 —
+        // recompute rereads the same bad memory, so it must be reported
+        // unrecovered.
+        for r in 0..model.tables[0].rows {
+            model.tables[0].data[r * model.cfg.embedding_dim] ^= 0x80;
+        }
+        let mut rng = Pcg32::new(4);
+        let reqs = model.synth_requests(4, &mut rng);
+        let (_, report) = model.forward(&reqs);
+        assert!(report.eb_bags_flagged > 0);
+        assert_eq!(report.eb_bags_recomputed, report.eb_bags_flagged);
+        assert_eq!(report.eb_bags_unrecovered, report.eb_bags_flagged);
+    }
+
+    #[test]
+    fn weight_bytes_accounts_tables() {
+        let model = DlrmModel::random(tiny_cfg(Protection::Off));
+        // tables: 200*8 + 100*8 codes + 300*8 qparam bytes
+        assert!(model.weight_bytes() > 200 * 8 + 100 * 8);
+    }
+}

@@ -1,0 +1,455 @@
+//! Model snapshot format (`.dlrm` files): save/load a quantized DLRM so
+//! the launcher can serve a fixed model (`dlrm-abft serve --model-path`)
+//! and so corrupted tables can be re-fetched from the store after a
+//! scrubber hit (the fail-stop/recovery loop the paper defers to
+//! checkpoint-restart [1]).
+//!
+//! Format: little-endian, section-per-component, each section protected
+//! by a CRC-32 — a model store for a soft-error paper should notice its
+//! own bit rot. ABFT checksums (packed B′ column, C_T, fused meta) are
+//! NOT stored: they are re-encoded on load, so the encode path is always
+//! exercised and a stale checksum can never mask a corrupted payload.
+
+use crate::dlrm::config::{DlrmConfig, Protection};
+use crate::dlrm::layer::AbftLinear;
+use crate::dlrm::model::DlrmModel;
+use crate::embedding::QuantTable8;
+use crate::quant::QParams;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"DLRMABF1";
+const VERSION: u32 = 1;
+
+/// Table-driven CRC-32 (IEEE 802.3 polynomial) — no crc crate offline.
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+struct SectionWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> SectionWriter<W> {
+    fn section(&mut self, tag: &[u8; 4], payload: &[u8]) -> Result<()> {
+        self.w.write_all(tag)?;
+        self.w.write_all(&(payload.len() as u64).to_le_bytes())?;
+        self.w.write_all(&crc32(payload).to_le_bytes())?;
+        self.w.write_all(payload)?;
+        Ok(())
+    }
+}
+
+struct SectionReader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> SectionReader<R> {
+    fn section(&mut self, expect_tag: &[u8; 4]) -> Result<Vec<u8>> {
+        let mut tag = [0u8; 4];
+        self.r.read_exact(&mut tag)?;
+        if &tag != expect_tag {
+            bail!(
+                "section tag mismatch: expected {:?}, got {:?}",
+                std::str::from_utf8(expect_tag),
+                std::str::from_utf8(&tag)
+            );
+        }
+        let mut len8 = [0u8; 8];
+        self.r.read_exact(&mut len8)?;
+        let len = u64::from_le_bytes(len8) as usize;
+        let mut crc4 = [0u8; 4];
+        self.r.read_exact(&mut crc4)?;
+        let want = u32::from_le_bytes(crc4);
+        let mut payload = vec![0u8; len];
+        self.r.read_exact(&mut payload)?;
+        let got = crc32(&payload);
+        if got != want {
+            bail!(
+                "CRC mismatch in section {:?}: stored {want:#010x}, computed {got:#010x} — \
+                 snapshot is corrupted",
+                std::str::from_utf8(expect_tag)
+            );
+        }
+        Ok(payload)
+    }
+}
+
+fn push_f32(buf: &mut Vec<u8>, x: f32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.data.len() {
+            bail!("truncated section");
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn encode_layer(l: &AbftLinear) -> Vec<u8> {
+    let mut buf = Vec::new();
+    push_u64(&mut buf, l.k as u64);
+    push_u64(&mut buf, l.n as u64);
+    buf.push(l.relu as u8);
+    push_f32(&mut buf, l.w_qparams.alpha);
+    push_f32(&mut buf, l.w_qparams.beta);
+    push_f32(&mut buf, l.out_qparams.alpha);
+    push_f32(&mut buf, l.out_qparams.beta);
+    // Payload weights only (k×n), extracted from the packed layout.
+    let nt = l.n + 1;
+    let data = l.abft().packed.data();
+    for p in 0..l.k {
+        let row = &data[p * nt..p * nt + l.n];
+        buf.extend(row.iter().map(|&v| v as u8));
+    }
+    buf
+}
+
+fn decode_layer(payload: &[u8], protection: Protection) -> Result<AbftLinear> {
+    let mut c = Cursor { data: payload, pos: 0 };
+    let k = c.u64()? as usize;
+    let n = c.u64()? as usize;
+    let relu = c.take(1)?[0] != 0;
+    let w_qparams = QParams { alpha: c.f32()?, beta: c.f32()? };
+    let out_alpha = c.f32()?;
+    let out_beta = c.f32()?;
+    let wq: Vec<i8> = c.take(k * n)?.iter().map(|&v| v as i8).collect();
+    let mut layer = AbftLinear::from_quantized(
+        &wq,
+        w_qparams,
+        k,
+        n,
+        (out_beta, out_beta + out_alpha * 255.0),
+        relu,
+        protection,
+    );
+    // from_quantized refits the lattice from the range; restore exactly.
+    layer.out_qparams = QParams { alpha: out_alpha, beta: out_beta };
+    Ok(layer)
+}
+
+fn encode_table(t: &QuantTable8) -> Vec<u8> {
+    let mut buf = Vec::new();
+    push_u64(&mut buf, t.rows as u64);
+    push_u64(&mut buf, t.d as u64);
+    buf.extend_from_slice(&t.data);
+    for &a in &t.alpha {
+        push_f32(&mut buf, a);
+    }
+    for &b in &t.beta {
+        push_f32(&mut buf, b);
+    }
+    buf
+}
+
+fn decode_table(payload: &[u8]) -> Result<QuantTable8> {
+    let mut c = Cursor { data: payload, pos: 0 };
+    let rows = c.u64()? as usize;
+    let d = c.u64()? as usize;
+    let data = c.take(rows * d)?.to_vec();
+    let mut alpha = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        alpha.push(c.f32()?);
+    }
+    let mut beta = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        beta.push(c.f32()?);
+    }
+    Ok(QuantTable8 { rows, d, data, alpha, beta })
+}
+
+impl DlrmModel {
+    /// Write a snapshot to `path`.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        let mut w = SectionWriter { w: std::io::BufWriter::new(f) };
+
+        let mut head = Vec::new();
+        head.extend_from_slice(MAGIC);
+        head.extend_from_slice(&VERSION.to_le_bytes());
+        w.section(b"HEAD", &head)?;
+
+        // Config as JSON (human-inspectable with xxd).
+        let cfg = &self.cfg;
+        let cfg_json = crate::util::json::Json::obj(vec![
+            ("num_dense", crate::util::json::Json::Num(cfg.num_dense as f64)),
+            ("embedding_dim", crate::util::json::Json::Num(cfg.embedding_dim as f64)),
+            (
+                "bottom_mlp",
+                crate::util::json::Json::Arr(
+                    cfg.bottom_mlp.iter().map(|&h| crate::util::json::Json::Num(h as f64)).collect(),
+                ),
+            ),
+            (
+                "top_mlp",
+                crate::util::json::Json::Arr(
+                    cfg.top_mlp.iter().map(|&h| crate::util::json::Json::Num(h as f64)).collect(),
+                ),
+            ),
+            (
+                "tables",
+                crate::util::json::Json::Arr(
+                    cfg.tables
+                        .iter()
+                        .map(|t| {
+                            crate::util::json::Json::obj(vec![
+                                ("rows", crate::util::json::Json::Num(t.rows as f64)),
+                                ("pooling", crate::util::json::Json::Num(t.pooling as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("seed", crate::util::json::Json::Num(cfg.seed as f64)),
+        ]);
+        w.section(b"CONF", cfg_json.to_string().as_bytes())?;
+
+        let mut qp = Vec::new();
+        push_f32(&mut qp, self.dense_qparams.alpha);
+        push_f32(&mut qp, self.dense_qparams.beta);
+        push_f32(&mut qp, self.top_qparams.alpha);
+        push_f32(&mut qp, self.top_qparams.beta);
+        push_f32(&mut qp, cfg.dense_range.0);
+        push_f32(&mut qp, cfg.dense_range.1);
+        w.section(b"QPAR", &qp)?;
+
+        // Calibrated per-column standardization of the top-MLP input.
+        let mut stdz = Vec::new();
+        push_u64(&mut stdz, self.top_mean.len() as u64);
+        for &m in &self.top_mean {
+            push_f32(&mut stdz, m);
+        }
+        for &sd in &self.top_std {
+            push_f32(&mut stdz, sd);
+        }
+        w.section(b"STDZ", &stdz)?;
+
+        for l in self.bottom.iter() {
+            w.section(b"LBOT", &encode_layer(l))?;
+        }
+        for l in self.top.iter() {
+            w.section(b"LTOP", &encode_layer(l))?;
+        }
+        w.section(b"LHED", &encode_layer(&self.head))?;
+        for t in &self.tables {
+            w.section(b"TABL", &encode_table(t))?;
+        }
+        w.section(b"TAIL", b"end")?;
+        Ok(())
+    }
+
+    /// Load a snapshot; ABFT state (checksum column, C_T, fused meta) is
+    /// re-encoded from the payloads.
+    pub fn load<P: AsRef<Path>>(path: P, protection: Protection) -> Result<DlrmModel> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let mut r = SectionReader { r: std::io::BufReader::new(f) };
+
+        let head = r.section(b"HEAD")?;
+        if &head[..8] != MAGIC {
+            bail!("not a dlrm-abft snapshot");
+        }
+        let version = u32::from_le_bytes(head[8..12].try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported snapshot version {version}");
+        }
+
+        let conf = r.section(b"CONF")?;
+        let conf_json = crate::util::json::Json::parse(
+            std::str::from_utf8(&conf).map_err(|_| anyhow!("CONF not utf8"))?,
+        )?;
+        let mut cfg = DlrmConfig::from_json(&conf_json)?;
+        cfg.protection = protection;
+
+        let qp = r.section(b"QPAR")?;
+        let mut c = Cursor { data: &qp, pos: 0 };
+        let dense_qparams = QParams { alpha: c.f32()?, beta: c.f32()? };
+        let top_qparams = QParams { alpha: c.f32()?, beta: c.f32()? };
+        cfg.dense_range = (c.f32()?, c.f32()?);
+
+        let stdz = r.section(b"STDZ")?;
+        let mut c = Cursor { data: &stdz, pos: 0 };
+        let dim = c.u64()? as usize;
+        if dim != cfg.top_input_dim() {
+            bail!("STDZ dim {dim} != top_input_dim {}", cfg.top_input_dim());
+        }
+        let mut top_mean = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            top_mean.push(c.f32()?);
+        }
+        let mut top_std = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            top_std.push(c.f32()?);
+        }
+
+        let mut bottom = Vec::new();
+        for _ in 0..cfg.bottom_mlp.len() {
+            bottom.push(decode_layer(&r.section(b"LBOT")?, protection)?);
+        }
+        let mut top = Vec::new();
+        for _ in 0..cfg.top_mlp.len() {
+            top.push(decode_layer(&r.section(b"LTOP")?, protection)?);
+        }
+        let head_layer = decode_layer(&r.section(b"LHED")?, protection)?;
+        let mut tables = Vec::new();
+        let mut checksums = Vec::new();
+        let mut fused = Vec::new();
+        for tc in &cfg.tables {
+            let table = decode_table(&r.section(b"TABL")?)?;
+            if table.rows != tc.rows || table.d != cfg.embedding_dim {
+                bail!("table shape mismatch vs CONF");
+            }
+            let cs = crate::abft::EbChecksum::build_8(&table);
+            fused.push(cs.clone().fuse(&table));
+            checksums.push(cs);
+            tables.push(table);
+        }
+        r.section(b"TAIL")?;
+
+        Ok(DlrmModel {
+            cfg,
+            bottom,
+            top,
+            head: head_layer,
+            tables,
+            checksums,
+            fused,
+            dense_qparams,
+            top_qparams,
+            top_mean,
+            top_std,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlrm::config::TableConfig;
+    use crate::util::rng::Pcg32;
+
+    fn tiny() -> DlrmModel {
+        DlrmModel::random(DlrmConfig {
+            num_dense: 4,
+            embedding_dim: 8,
+            bottom_mlp: vec![16, 8],
+            top_mlp: vec![16],
+            tables: vec![
+                TableConfig { rows: 100, pooling: 5 },
+                TableConfig { rows: 50, pooling: 3 },
+            ],
+            protection: Protection::DetectRecompute,
+            dense_range: (0.0, 1.0),
+            seed: 31,
+        })
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // CRC-32/IEEE of "123456789" is 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn save_load_roundtrip_scores_identical() {
+        let model = tiny();
+        let dir = std::env::temp_dir().join("dlrm_abft_test_snapshot.dlrm");
+        model.save(&dir).unwrap();
+        let loaded = DlrmModel::load(&dir, Protection::DetectRecompute).unwrap();
+        let mut rng = Pcg32::new(1);
+        let reqs = model.synth_requests(6, &mut rng);
+        let (s1, r1) = model.forward(&reqs);
+        let (s2, r2) = loaded.forward(&reqs);
+        assert_eq!(s1, s2, "loaded model must score identically");
+        assert_eq!(r1, r2);
+        assert!(r2.clean());
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_snapshot_rejected() {
+        let model = tiny();
+        let path = std::env::temp_dir().join("dlrm_abft_test_corrupt.dlrm");
+        model.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = match DlrmModel::load(&path, Protection::Detect) {
+            Err(e) => e,
+            Ok(_) => panic!("corrupted snapshot loaded successfully"),
+        };
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("CRC") || msg.contains("tag") || msg.contains("truncated"),
+            "unexpected error: {msg}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_with_different_protection_mode() {
+        let model = tiny();
+        let path = std::env::temp_dir().join("dlrm_abft_test_prot.dlrm");
+        model.save(&path).unwrap();
+        let loaded = DlrmModel::load(&path, Protection::Off).unwrap();
+        assert_eq!(loaded.cfg.protection, Protection::Off);
+        let mut rng = Pcg32::new(2);
+        let reqs = model.synth_requests(3, &mut rng);
+        let (s1, _) = model.forward(&reqs);
+        let (s2, _) = loaded.forward(&reqs);
+        assert_eq!(s1, s2, "protection mode must not change scores");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let model = tiny();
+        let path = std::env::temp_dir().join("dlrm_abft_test_trunc.dlrm");
+        model.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 3]).unwrap();
+        assert!(DlrmModel::load(&path, Protection::Detect).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,251 @@
+//! The EmbeddingBag operator (paper §III-C): gather rows of a quantized
+//! table by an index set and reduce them (plain or weighted sum), with an
+//! optional software-prefetch path (Fig 6 benchmarks both).
+//!
+//! Batch convention follows PyTorch's `EmbeddingBag(indices, offsets)`:
+//! `offsets[b]..offsets[b+1]` delimits bag `b`'s slice of `indices`.
+
+use super::table::{QuantTable4, QuantTable8};
+
+/// How far ahead of the current lookup to issue prefetches.
+pub const PREFETCH_DISTANCE: usize = 8;
+
+#[inline]
+fn prefetch_row(data: &[u8], offset: usize) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        if offset < data.len() {
+            core::arch::x86_64::_mm_prefetch(
+                data.as_ptr().add(offset) as *const i8,
+                core::arch::x86_64::_MM_HINT_T0,
+            );
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (data, offset);
+    }
+}
+
+/// One bag over an 8-bit table: `R = Σ_{i∈I} w_i · (α_i·eb_i + β_i·e_d)`
+/// accumulated into `out` (len d), which is zeroed first.
+pub fn bag_sum_8(
+    table: &QuantTable8,
+    indices: &[usize],
+    weights: Option<&[f32]>,
+    prefetch: bool,
+    out: &mut [f32],
+) {
+    let d = table.d;
+    assert_eq!(out.len(), d);
+    out.fill(0.0);
+    if let Some(w) = weights {
+        assert_eq!(w.len(), indices.len());
+    }
+    for (pos, &idx) in indices.iter().enumerate() {
+        assert!(idx < table.rows, "index {idx} out of range");
+        if prefetch {
+            if let Some(&nxt) = indices.get(pos + PREFETCH_DISTANCE) {
+                prefetch_row(&table.data, nxt * d);
+            }
+        }
+        let w = weights.map_or(1.0, |w| w[pos]);
+        let a = table.alpha[idx] * w;
+        let b = table.beta[idx] * w;
+        let row = table.row(idx);
+        for (o, &q) in out.iter_mut().zip(row) {
+            *o += a * q as f32 + b;
+        }
+    }
+}
+
+/// One bag over a 4-bit table.
+pub fn bag_sum_4(
+    table: &QuantTable4,
+    indices: &[usize],
+    weights: Option<&[f32]>,
+    prefetch: bool,
+    out: &mut [f32],
+) {
+    let d = table.d;
+    assert_eq!(out.len(), d);
+    out.fill(0.0);
+    if let Some(w) = weights {
+        assert_eq!(w.len(), indices.len());
+    }
+    let row_bytes = (d + 1) / 2;
+    for (pos, &idx) in indices.iter().enumerate() {
+        assert!(idx < table.rows, "index {idx} out of range");
+        if prefetch {
+            if let Some(&nxt) = indices.get(pos + PREFETCH_DISTANCE) {
+                prefetch_row(&table.data, nxt * row_bytes);
+            }
+        }
+        let w = weights.map_or(1.0, |w| w[pos]);
+        let a = table.alpha[idx] * w;
+        let b = table.beta[idx] * w;
+        for j in 0..d {
+            out[j] += a * table.code(idx, j) as f32 + b;
+        }
+    }
+}
+
+/// Batched EB over an 8-bit table (PyTorch offsets convention).
+/// Output is `batch × d`, row-major; `offsets.len()` is the batch size and
+/// `offsets[b+1]` (or `indices.len()` for the last bag) ends bag b.
+pub fn embedding_bag_8(
+    table: &QuantTable8,
+    indices: &[usize],
+    offsets: &[usize],
+    weights: Option<&[f32]>,
+    prefetch: bool,
+) -> Vec<f32> {
+    let batch = offsets.len();
+    let d = table.d;
+    let mut out = vec![0f32; batch * d];
+    for b in 0..batch {
+        let start = offsets[b];
+        let end = if b + 1 < batch { offsets[b + 1] } else { indices.len() };
+        assert!(start <= end && end <= indices.len(), "bad offsets");
+        let w = weights.map(|w| &w[start..end]);
+        bag_sum_8(
+            table,
+            &indices[start..end],
+            w,
+            prefetch,
+            &mut out[b * d..(b + 1) * d],
+        );
+    }
+    out
+}
+
+/// Batched EB over a 4-bit table.
+pub fn embedding_bag_4(
+    table: &QuantTable4,
+    indices: &[usize],
+    offsets: &[usize],
+    weights: Option<&[f32]>,
+    prefetch: bool,
+) -> Vec<f32> {
+    let batch = offsets.len();
+    let d = table.d;
+    let mut out = vec![0f32; batch * d];
+    for b in 0..batch {
+        let start = offsets[b];
+        let end = if b + 1 < batch { offsets[b + 1] } else { indices.len() };
+        let w = weights.map(|w| &w[start..end]);
+        bag_sum_4(
+            table,
+            &indices[start..end],
+            w,
+            prefetch,
+            &mut out[b * d..(b + 1) * d],
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Scalar oracle: dequantize rows fully, then sum in f64.
+    fn oracle_8(table: &QuantTable8, indices: &[usize], weights: Option<&[f32]>) -> Vec<f32> {
+        let mut out = vec![0f64; table.d];
+        for (pos, &i) in indices.iter().enumerate() {
+            let w = weights.map_or(1.0, |w| w[pos]) as f64;
+            for (j, x) in table.dequantize_row(i).iter().enumerate() {
+                out[j] += w * *x as f64;
+            }
+        }
+        out.into_iter().map(|x| x as f32).collect()
+    }
+
+    #[test]
+    fn single_bag_matches_oracle() {
+        let mut rng = Pcg32::new(31);
+        let table = QuantTable8::random(1000, 64, &mut rng);
+        let indices: Vec<usize> = (0..50).map(|_| rng.gen_range(0, 1000)).collect();
+        let mut out = vec![0f32; 64];
+        bag_sum_8(&table, &indices, None, false, &mut out);
+        let exact = oracle_8(&table, &indices, None);
+        for (a, b) in out.iter().zip(&exact) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn prefetch_path_bitwise_equal() {
+        let mut rng = Pcg32::new(32);
+        let table = QuantTable8::random(5000, 128, &mut rng);
+        let indices: Vec<usize> = (0..200).map(|_| rng.gen_range(0, 5000)).collect();
+        let mut a = vec![0f32; 128];
+        let mut b = vec![0f32; 128];
+        bag_sum_8(&table, &indices, None, false, &mut a);
+        bag_sum_8(&table, &indices, None, true, &mut b);
+        assert_eq!(a, b, "prefetch must not change results");
+    }
+
+    #[test]
+    fn weighted_bag_scales() {
+        let mut rng = Pcg32::new(33);
+        let table = QuantTable8::random(100, 32, &mut rng);
+        let indices = vec![3usize, 7, 7, 42];
+        let weights = vec![1.0f32, 0.5, 0.5, 2.0];
+        let mut got = vec![0f32; 32];
+        bag_sum_8(&table, &indices, Some(&weights), false, &mut got);
+        let exact = oracle_8(&table, &indices, Some(&weights));
+        for (a, b) in got.iter().zip(&exact) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn batch_offsets_slicing() {
+        let mut rng = Pcg32::new(34);
+        let table = QuantTable8::random(500, 16, &mut rng);
+        let indices = vec![1usize, 2, 3, 10, 20, 30, 40, 99];
+        let offsets = vec![0usize, 3, 7]; // bags: [0..3), [3..7), [7..8)
+        let out = embedding_bag_8(&table, &indices, &offsets, None, false);
+        assert_eq!(out.len(), 3 * 16);
+        let mut bag1 = vec![0f32; 16];
+        bag_sum_8(&table, &indices[3..7], None, false, &mut bag1);
+        assert_eq!(&out[16..32], &bag1[..]);
+    }
+
+    #[test]
+    fn empty_bag_is_zero() {
+        let mut rng = Pcg32::new(35);
+        let table = QuantTable8::random(10, 8, &mut rng);
+        let out = embedding_bag_8(&table, &[], &[0], None, false);
+        assert_eq!(out, vec![0f32; 8]);
+    }
+
+    #[test]
+    fn four_bit_matches_dequantized_oracle() {
+        let mut rng = Pcg32::new(36);
+        let table = QuantTable4::random(300, 48, &mut rng);
+        let indices: Vec<usize> = (0..40).map(|_| rng.gen_range(0, 300)).collect();
+        let mut got = vec![0f32; 48];
+        bag_sum_4(&table, &indices, None, true, &mut got);
+        let mut exact = vec![0f64; 48];
+        for &i in &indices {
+            for (j, x) in table.dequantize_row(i).iter().enumerate() {
+                exact[j] += *x as f64;
+            }
+        }
+        for (a, b) in got.iter().zip(&exact) {
+            assert!((*a as f64 - b).abs() < 1e-3 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_index_panics() {
+        let mut rng = Pcg32::new(37);
+        let table = QuantTable8::random(10, 8, &mut rng);
+        let mut out = vec![0f32; 8];
+        bag_sum_8(&table, &[11], None, false, &mut out);
+    }
+}

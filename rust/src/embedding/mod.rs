@@ -1,0 +1,10 @@
+//! Quantized embedding substrate: tables (8/4-bit, per-row scale+bias) and
+//! the EmbeddingBag operator (paper §III-C).
+
+pub mod bag;
+pub mod table;
+
+pub use bag::{
+    bag_sum_4, bag_sum_8, embedding_bag_4, embedding_bag_8, PREFETCH_DISTANCE,
+};
+pub use table::{QuantTable4, QuantTable8};

@@ -1,0 +1,228 @@
+//! Quantized embedding tables (paper §III-C).
+//!
+//! Each d-length row is stored as low-precision codes plus one per-row pair
+//! of float quantization parameters `(α_i, β_i)`: the real row is
+//! `α_i · codes + β_i · e_d`. 8-bit ([`QuantTable8`]) and 4-bit
+//! ([`QuantTable4`], nibble-packed) variants are provided — the paper's
+//! p ∈ {8, 4} memory-overhead analysis (§V-C).
+
+use crate::quant::{get_nibble, pack_nibbles, QParams4};
+use crate::util::rng::Pcg32;
+
+/// 8-bit quantized embedding table: `rows × d` u8 codes, per-row α/β.
+#[derive(Clone, Debug)]
+pub struct QuantTable8 {
+    pub rows: usize,
+    pub d: usize,
+    pub data: Vec<u8>,
+    pub alpha: Vec<f32>,
+    pub beta: Vec<f32>,
+}
+
+impl QuantTable8 {
+    /// Quantize a float table (rows × d) row-wise.
+    pub fn from_float(table: &[f32], rows: usize, d: usize) -> Self {
+        assert_eq!(table.len(), rows * d);
+        let mut data = vec![0u8; rows * d];
+        let mut alpha = vec![0f32; rows];
+        let mut beta = vec![0f32; rows];
+        for r in 0..rows {
+            let row = &table[r * d..(r + 1) * d];
+            let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let qp = crate::quant::QParams::fit_u8(lo, hi);
+            alpha[r] = qp.alpha;
+            beta[r] = qp.beta;
+            for (j, &x) in row.iter().enumerate() {
+                data[r * d + j] = qp.quantize_u8(x);
+            }
+        }
+        Self {
+            rows,
+            d,
+            data,
+            alpha,
+            beta,
+        }
+    }
+
+    /// Synthetic random table — codes uniform in [0,255], α ~ U(0.005,0.02),
+    /// β ~ U(-1,1); mirrors the paper's uniform-random evaluation setup.
+    pub fn random(rows: usize, d: usize, rng: &mut Pcg32) -> Self {
+        let mut data = vec![0u8; rows * d];
+        rng.fill_u8(&mut data);
+        let alpha = (0..rows).map(|_| 0.005 + 0.015 * rng.next_f32()).collect();
+        let beta = (0..rows).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        Self {
+            rows,
+            d,
+            data,
+            alpha,
+            beta,
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u8] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Dequantize one row to f32.
+    pub fn dequantize_row(&self, i: usize) -> Vec<f32> {
+        let (a, b) = (self.alpha[i], self.beta[i]);
+        self.row(i).iter().map(|&q| a * q as f32 + b).collect()
+    }
+
+    /// Integer row sum of the stored codes (what ABFT's `C_T` holds).
+    pub fn code_row_sum(&self, i: usize) -> i32 {
+        self.row(i).iter().map(|&q| q as i32).sum()
+    }
+
+    /// Bytes used by codes + qparams.
+    pub fn bytes(&self) -> usize {
+        self.data.len() + self.rows * 8
+    }
+}
+
+/// 4-bit quantized embedding table (nibble-packed codes).
+#[derive(Clone, Debug)]
+pub struct QuantTable4 {
+    pub rows: usize,
+    pub d: usize,
+    /// `rows × ceil(d/2)` packed nibbles.
+    pub data: Vec<u8>,
+    pub alpha: Vec<f32>,
+    pub beta: Vec<f32>,
+    row_bytes: usize,
+}
+
+impl QuantTable4 {
+    pub fn from_float(table: &[f32], rows: usize, d: usize) -> Self {
+        assert_eq!(table.len(), rows * d);
+        let row_bytes = (d + 1) / 2;
+        let mut data = vec![0u8; rows * row_bytes];
+        let mut alpha = vec![0f32; rows];
+        let mut beta = vec![0f32; rows];
+        for r in 0..rows {
+            let row = &table[r * d..(r + 1) * d];
+            let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let qp = QParams4::fit(lo, hi);
+            alpha[r] = qp.alpha;
+            beta[r] = qp.beta;
+            let codes: Vec<u8> = row.iter().map(|&x| qp.quantize(x)).collect();
+            data[r * row_bytes..(r + 1) * row_bytes].copy_from_slice(&pack_nibbles(&codes));
+        }
+        Self {
+            rows,
+            d,
+            data,
+            alpha,
+            beta,
+            row_bytes,
+        }
+    }
+
+    pub fn random(rows: usize, d: usize, rng: &mut Pcg32) -> Self {
+        let row_bytes = (d + 1) / 2;
+        let mut data = vec![0u8; rows * row_bytes];
+        rng.fill_u8(&mut data);
+        if d % 2 == 1 {
+            // Clear the unused high nibble of each row's last byte so code
+            // row sums are well defined.
+            for r in 0..rows {
+                data[r * row_bytes + row_bytes - 1] &= 0x0f;
+            }
+        }
+        let alpha = (0..rows).map(|_| 0.02 + 0.08 * rng.next_f32()).collect();
+        let beta = (0..rows).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        Self {
+            rows,
+            d,
+            data,
+            alpha,
+            beta,
+            row_bytes,
+        }
+    }
+
+    #[inline]
+    pub fn code(&self, row: usize, j: usize) -> u8 {
+        get_nibble(&self.data[row * self.row_bytes..(row + 1) * self.row_bytes], j)
+    }
+
+    pub fn dequantize_row(&self, i: usize) -> Vec<f32> {
+        let (a, b) = (self.alpha[i], self.beta[i]);
+        (0..self.d).map(|j| a * self.code(i, j) as f32 + b).collect()
+    }
+
+    pub fn code_row_sum(&self, i: usize) -> i32 {
+        (0..self.d).map(|j| self.code(i, j) as i32).sum()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() + self.rows * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_float_roundtrip_within_step() {
+        let mut rng = Pcg32::new(21);
+        let (rows, d) = (10, 16);
+        let table: Vec<f32> = (0..rows * d).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let qt = QuantTable8::from_float(&table, rows, d);
+        for r in 0..rows {
+            let back = qt.dequantize_row(r);
+            for j in 0..d {
+                assert!((back[j] - table[r * d + j]).abs() <= qt.alpha[r] * 0.5 + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn four_bit_roundtrip_within_step() {
+        let mut rng = Pcg32::new(22);
+        let (rows, d) = (8, 15); // odd d exercises nibble tail
+        let table: Vec<f32> = (0..rows * d).map(|_| rng.next_f32()).collect();
+        let qt = QuantTable4::from_float(&table, rows, d);
+        for r in 0..rows {
+            let back = qt.dequantize_row(r);
+            for j in 0..d {
+                assert!(
+                    (back[j] - table[r * d + j]).abs() <= qt.alpha[r] * 0.5 + 1e-5,
+                    "row {r} col {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn code_row_sum_matches_manual() {
+        let mut rng = Pcg32::new(23);
+        let qt = QuantTable8::random(5, 32, &mut rng);
+        for r in 0..5 {
+            let manual: i32 = qt.row(r).iter().map(|&q| q as i32).sum();
+            assert_eq!(qt.code_row_sum(r), manual);
+        }
+        let q4 = QuantTable4::random(5, 33, &mut rng);
+        for r in 0..5 {
+            let manual: i32 = (0..33).map(|j| q4.code(r, j) as i32).sum();
+            assert_eq!(q4.code_row_sum(r), manual);
+        }
+    }
+
+    #[test]
+    fn memory_overhead_ratio_as_paper() {
+        // §V-C: the 32-bit row-sum column costs 32/(p·d) of table memory.
+        let mut rng = Pcg32::new(24);
+        let d = 128;
+        let t8 = QuantTable8::random(1000, d, &mut rng);
+        let checksum_bytes = 1000 * 4;
+        let ratio = checksum_bytes as f64 / (t8.data.len() as f64);
+        assert!((ratio - 32.0 / (8.0 * d as f64)).abs() < 1e-9);
+    }
+}

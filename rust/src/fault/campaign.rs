@@ -1,0 +1,449 @@
+//! Fault-injection campaigns — the machinery behind Tables II and III.
+//!
+//! Methodology follows §VI-B exactly: source-level injection, one fault per
+//! run, detection tallied over repeated runs with fresh random inputs.
+
+use super::{flip_i32, flip_u8, restore_u8, BitRange, FaultModel};
+use crate::abft::eb::CheckPrecision;
+use crate::abft::{AbftGemm, EbChecksum};
+use crate::embedding::{bag_sum_4, embedding_bag_8, QuantTable4, QuantTable8};
+use crate::util::rng::Pcg32;
+
+/// Where a GEMM campaign injects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmTarget {
+    /// Packed B payload, *after* checksum encoding (Table II "error in B").
+    MatrixB,
+    /// 32-bit intermediate C_temp (Table II "error in C").
+    MatrixC,
+    /// No injection — false-positive control (Table II "no error").
+    None,
+}
+
+/// detected / not-detected counts for one arm of a campaign.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Tally {
+    pub detected: usize,
+    pub not_detected: usize,
+}
+
+impl Tally {
+    pub fn total(&self) -> usize {
+        self.detected + self.not_detected
+    }
+
+    pub fn rate(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.detected as f64 / self.total() as f64
+        }
+    }
+
+    fn add(&mut self, detected: bool) {
+        if detected {
+            self.detected += 1;
+        } else {
+            self.not_detected += 1;
+        }
+    }
+}
+
+/// Configuration for the Table-II GEMM campaign.
+#[derive(Clone, Debug)]
+pub struct GemmCampaignConfig {
+    /// (m, n, k) shapes; paper uses the 28 DLRM shapes of Fig 5.
+    pub shapes: Vec<(usize, usize, usize)>,
+    /// Runs per shape per arm (paper: 100 → 2800 samples per arm).
+    pub runs_per_shape: usize,
+    pub fault_model: FaultModel,
+    pub modulus: i32,
+    pub seed: u64,
+}
+
+impl Default for GemmCampaignConfig {
+    fn default() -> Self {
+        Self {
+            shapes: fig5_shapes(),
+            runs_per_shape: 100,
+            fault_model: FaultModel::BitFlip,
+            modulus: crate::abft::DEFAULT_MODULUS,
+            seed: 0xD12A,
+        }
+    }
+}
+
+/// The 28 DLRM GEMM shapes benchmarked in Fig 5: batch rows
+/// m ∈ {1, 50, 100, 150} × seven (n, k) layer shapes common in DLRM MLPs
+/// (the paper names (1, 800, 3200) explicitly; the grid is reconstructed
+/// from the figure's axis).
+pub fn fig5_shapes() -> Vec<(usize, usize, usize)> {
+    let ms = [1usize, 50, 100, 150];
+    let nks = [
+        (800usize, 3200usize),
+        (800, 800),
+        (512, 512),
+        (512, 256),
+        (256, 512),
+        (128, 128),
+        (256, 32),
+    ];
+    let mut out = Vec::with_capacity(28);
+    for &m in &ms {
+        for &(n, k) in &nks {
+            out.push((m, n, k));
+        }
+    }
+    out
+}
+
+/// Result rows of Table II.
+#[derive(Clone, Debug, Default)]
+pub struct GemmCampaignResult {
+    pub error_in_b: Tally,
+    pub error_in_c: Tally,
+    /// For the no-error arm, `detected` counts FALSE POSITIVES.
+    pub no_error: Tally,
+}
+
+/// Run the full Table-II campaign.
+pub fn run_gemm_campaign(cfg: &GemmCampaignConfig) -> GemmCampaignResult {
+    let mut result = GemmCampaignResult::default();
+    let mut rng = Pcg32::new(cfg.seed);
+    for &(m, n, k) in &cfg.shapes {
+        for _ in 0..cfg.runs_per_shape {
+            result
+                .error_in_b
+                .add(run_gemm_trial(m, n, k, GemmTarget::MatrixB, cfg, &mut rng));
+            result
+                .error_in_c
+                .add(run_gemm_trial(m, n, k, GemmTarget::MatrixC, cfg, &mut rng));
+            result
+                .no_error
+                .add(run_gemm_trial(m, n, k, GemmTarget::None, cfg, &mut rng));
+        }
+    }
+    result
+}
+
+/// One GEMM trial: fresh random A/B, encode, inject per `target`, verify.
+/// Returns whether ABFT flagged the run.
+pub fn run_gemm_trial(
+    m: usize,
+    n: usize,
+    k: usize,
+    target: GemmTarget,
+    cfg: &GemmCampaignConfig,
+    rng: &mut Pcg32,
+) -> bool {
+    let mut a = vec![0u8; m * k];
+    let mut b = vec![0i8; k * n];
+    rng.fill_u8(&mut a);
+    rng.fill_i8(&mut b);
+    let mut abft = AbftGemm::with_modulus(&b, k, n, cfg.modulus);
+
+    if target == GemmTarget::MatrixB {
+        // Inject into the packed B *payload* (never the checksum column —
+        // the paper's §IV-C assumption: the much smaller checksum is
+        // error-free), after encoding, as in §VI-B1.
+        let nt = n + 1;
+        let p = rng.gen_range(0, k);
+        let j = rng.gen_range(0, n);
+        let idx = p * nt + j;
+        let data = abft.packed.data_mut();
+        match cfg.fault_model {
+            FaultModel::BitFlip => {
+                let bit = rng.gen_range_u32(8);
+                data[idx] = (data[idx] as u8 ^ (1 << bit)) as i8;
+            }
+            FaultModel::DataFluctuation => {
+                let old = data[idx];
+                let mut new = old;
+                while new == old {
+                    new = rng.next_i8();
+                }
+                data[idx] = new;
+            }
+        }
+    }
+
+    let (mut c_temp, verdict) = abft.exec(&a, m);
+
+    match target {
+        GemmTarget::MatrixB => !verdict.clean(),
+        GemmTarget::None => !verdict.clean(), // any flag is a false positive
+        GemmTarget::MatrixC => {
+            debug_assert!(verdict.clean());
+            match cfg.fault_model {
+                FaultModel::BitFlip => {
+                    flip_i32(&mut c_temp, rng);
+                }
+                FaultModel::DataFluctuation => {
+                    super::fluctuate_i32(&mut c_temp, rng);
+                }
+            }
+            !abft.verify(&c_temp, m).clean()
+        }
+    }
+}
+
+/// Where an EB campaign injects (Table III splits table bit flips by
+/// significance).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EbTarget {
+    /// Bit flip in the upper 4 bits of a table code read by the batch.
+    TableHigh4,
+    /// Bit flip in the lower 4 bits.
+    TableLow4,
+    /// Bit flip anywhere in an 8-bit code read by the batch.
+    TableAny,
+    /// Bit flip in the f32 output vector.
+    Result,
+    /// No injection — false-positive control.
+    None,
+}
+
+/// Configuration for the Table-III EB campaign.
+#[derive(Clone, Debug)]
+pub struct EbCampaignConfig {
+    pub table_rows: usize,
+    pub dim: usize,
+    /// Lookups per bag (paper Table I: average pooling size 100).
+    pub pooling: usize,
+    pub batch: usize,
+    pub weighted: bool,
+    pub rel_bound: f64,
+    /// The paper's checker accumulates in f32 (§V-D's FP/low-bit numbers
+    /// depend on it); the serving path defaults to f64. See DESIGN.md.
+    pub precision: CheckPrecision,
+    pub seed: u64,
+}
+
+impl Default for EbCampaignConfig {
+    fn default() -> Self {
+        Self {
+            table_rows: 4_000_000,
+            dim: 64,
+            pooling: 100,
+            batch: 10,
+            weighted: false,
+            rel_bound: crate::abft::DEFAULT_REL_BOUND,
+            precision: CheckPrecision::F32,
+            seed: 0xEB,
+        }
+    }
+}
+
+/// One arm of Table III.
+pub fn run_eb_campaign(cfg: &EbCampaignConfig, target: EbTarget, runs: usize) -> Tally {
+    let mut rng = Pcg32::new(cfg.seed);
+    let mut table = QuantTable8::random(cfg.table_rows, cfg.dim, &mut rng);
+    let checksum = EbChecksum::build_8(&table)
+        .with_bound(cfg.rel_bound)
+        .with_precision(cfg.precision);
+    let mut tally = Tally::default();
+    for _ in 0..runs {
+        tally.add(run_eb_trial(&mut table, &checksum, cfg, target, &mut rng));
+    }
+    tally
+}
+
+/// One EB trial: sample a batch of bags, inject per `target` into an
+/// element that participates in the batch, run EB, verify, restore.
+pub fn run_eb_trial(
+    table: &mut QuantTable8,
+    checksum: &EbChecksum,
+    cfg: &EbCampaignConfig,
+    target: EbTarget,
+    rng: &mut Pcg32,
+) -> bool {
+    let total = cfg.pooling * cfg.batch;
+    let indices: Vec<usize> = (0..total).map(|_| rng.gen_range(0, table.rows)).collect();
+    let offsets: Vec<usize> = (0..cfg.batch).map(|b| b * cfg.pooling).collect();
+    let weights: Option<Vec<f32>> = if cfg.weighted {
+        Some((0..total).map(|_| 0.5 + rng.next_f32()).collect())
+    } else {
+        None
+    };
+
+    // Inject into a code belonging to a row the batch actually reads —
+    // §VI-B's "randomly choose an element" over the touched working set.
+    let inj = match target {
+        EbTarget::TableHigh4 | EbTarget::TableLow4 | EbTarget::TableAny => {
+            let victim_row = indices[rng.gen_range(0, indices.len())];
+            let col = rng.gen_range(0, table.d);
+            let idx = victim_row * table.d + col;
+            let range = match target {
+                EbTarget::TableHigh4 => BitRange::High4,
+                EbTarget::TableLow4 => BitRange::Low4,
+                _ => BitRange::Any,
+            };
+            let one = &mut table.data[idx..idx + 1];
+            let mut r = flip_u8(one, rng, range);
+            r.index = idx;
+            Some(r)
+        }
+        _ => None,
+    };
+
+    let mut result = embedding_bag_8(
+        table,
+        &indices,
+        &offsets,
+        weights.as_deref(),
+        false,
+    );
+
+    if target == EbTarget::Result {
+        super::flip_f32(&mut result, rng);
+    }
+
+    let flagged = checksum.check_batch(
+        &table.alpha,
+        &table.beta,
+        &indices,
+        &offsets,
+        weights.as_deref(),
+        &result,
+    );
+
+    if let Some(inj) = inj {
+        restore_u8(&mut table.data, inj);
+    }
+    !flagged.is_empty()
+}
+
+/// Table-III extension (paper §V-C's p=4 configuration): the EB campaign
+/// over a 4-bit nibble-packed table. Bit flips hit a random *stored byte*
+/// (two codes) of a row the batch reads; significance is the flipped
+/// bit's position within its nibble.
+pub fn run_eb_campaign_4bit(cfg: &EbCampaignConfig, target: EbTarget, runs: usize) -> Tally {
+    let mut rng = Pcg32::new(cfg.seed ^ 0x4B17);
+    let mut table = QuantTable4::random(cfg.table_rows, cfg.dim, &mut rng);
+    let checksum = EbChecksum::build_4(&table)
+        .with_bound(cfg.rel_bound)
+        .with_precision(cfg.precision);
+    let mut tally = Tally::default();
+    let row_bytes = (cfg.dim + 1) / 2;
+    for _ in 0..runs {
+        let total = cfg.pooling * cfg.batch;
+        let indices: Vec<usize> = (0..total).map(|_| rng.gen_range(0, table.rows)).collect();
+        let offsets: Vec<usize> = (0..cfg.batch).map(|b| b * cfg.pooling).collect();
+
+        let inj = match target {
+            EbTarget::TableHigh4 | EbTarget::TableLow4 | EbTarget::TableAny => {
+                let victim_row = indices[rng.gen_range(0, indices.len())];
+                let byte = rng.gen_range(0, row_bytes);
+                let idx = victim_row * row_bytes + byte;
+                // Within each nibble: bits 2-3 are "high", 0-1 "low".
+                let nib = rng.gen_range_u32(2) * 4;
+                let bit = match target {
+                    EbTarget::TableHigh4 => nib + 2 + rng.gen_range_u32(2),
+                    EbTarget::TableLow4 => nib + rng.gen_range_u32(2),
+                    _ => nib + rng.gen_range_u32(4),
+                };
+                let old = table.data[idx];
+                table.data[idx] = old ^ (1 << bit);
+                Some((idx, old))
+            }
+            _ => None,
+        };
+
+        let mut flagged = false;
+        let mut out = vec![0f32; cfg.dim];
+        for b in 0..cfg.batch {
+            let start = offsets[b];
+            let end = if b + 1 < cfg.batch { offsets[b + 1] } else { indices.len() };
+            bag_sum_4(&table, &indices[start..end], None, false, &mut out);
+            flagged |= checksum.check_bag(
+                &table.alpha,
+                &table.beta,
+                &indices[start..end],
+                None,
+                &out,
+            );
+        }
+        if let Some((idx, old)) = inj {
+            table.data[idx] = old;
+        }
+        tally.add(flagged);
+    }
+    tally
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> GemmCampaignConfig {
+        GemmCampaignConfig {
+            shapes: vec![(4, 64, 32), (1, 128, 64)],
+            runs_per_shape: 25,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn gemm_campaign_c_errors_always_detected() {
+        let r = run_gemm_campaign(&small_cfg());
+        // §IV-C2 model 1: bit flips in C are detected with probability 1.
+        assert_eq!(r.error_in_c.not_detected, 0, "{r:?}");
+        assert_eq!(r.error_in_c.total(), 50);
+    }
+
+    #[test]
+    fn gemm_campaign_no_false_positives() {
+        let r = run_gemm_campaign(&small_cfg());
+        // Integer arithmetic: zero round-off → zero false positives (§VI-B1).
+        assert_eq!(r.no_error.detected, 0);
+    }
+
+    #[test]
+    fn gemm_campaign_b_errors_mostly_detected() {
+        let r = run_gemm_campaign(&small_cfg());
+        assert!(r.error_in_b.rate() > 0.85, "rate={}", r.error_in_b.rate());
+    }
+
+    #[test]
+    fn eb_campaign_high_bits_nearly_all_detected() {
+        let cfg = EbCampaignConfig {
+            table_rows: 20_000,
+            dim: 64,
+            ..Default::default()
+        };
+        let t = run_eb_campaign(&cfg, EbTarget::TableHigh4, 50);
+        assert!(t.rate() > 0.9, "rate={}", t.rate());
+    }
+
+    #[test]
+    fn eb_campaign_low_bits_partial() {
+        let cfg = EbCampaignConfig {
+            table_rows: 20_000,
+            dim: 64,
+            ..Default::default()
+        };
+        let t = run_eb_campaign(&cfg, EbTarget::TableLow4, 60);
+        // Low-significance flips sit near the bound: some escape (§VI-B2).
+        assert!(t.rate() < 1.0);
+        assert!(t.rate() > 0.1, "rate={}", t.rate());
+    }
+
+    #[test]
+    fn eb_trial_restores_table() {
+        let cfg = EbCampaignConfig {
+            table_rows: 1000,
+            dim: 32,
+            pooling: 20,
+            batch: 2,
+            ..Default::default()
+        };
+        let mut rng = Pcg32::new(1);
+        let mut table = QuantTable8::random(cfg.table_rows, cfg.dim, &mut rng);
+        let orig = table.data.clone();
+        let checksum = EbChecksum::build_8(&table);
+        for _ in 0..20 {
+            run_eb_trial(&mut table, &checksum, &cfg, EbTarget::TableAny, &mut rng);
+            assert_eq!(table.data, orig, "injection must be restored");
+        }
+    }
+}

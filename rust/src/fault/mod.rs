@@ -1,0 +1,216 @@
+//! Source-level soft-error injection (paper §VI-B: "randomly selecting an
+//! element in the input or output and flipping a random bit in that
+//! element"), plus the random-data-fluctuation model of §IV-C.
+
+pub mod campaign;
+
+use crate::util::rng::Pcg32;
+
+/// The two fault models analyzed in §IV-C.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultModel {
+    /// Flip one uniformly-random bit of one element.
+    BitFlip,
+    /// Replace one element with a uniform random value of its type.
+    DataFluctuation,
+}
+
+/// Which bits of an 8-bit element a flip may land in (Table III splits
+/// EB injections into the upper and lower 4 bits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BitRange {
+    Any,
+    High4,
+    Low4,
+}
+
+impl BitRange {
+    fn pick_bit(self, rng: &mut Pcg32, width: u32) -> u32 {
+        match self {
+            BitRange::Any => rng.gen_range_u32(width),
+            BitRange::High4 => {
+                debug_assert!(width == 8);
+                4 + rng.gen_range_u32(4)
+            }
+            BitRange::Low4 => {
+                debug_assert!(width == 8);
+                rng.gen_range_u32(4)
+            }
+        }
+    }
+}
+
+/// Record of one injected fault, for logging / restoration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Injection {
+    pub index: usize,
+    pub bit: Option<u32>,
+    pub old_bits: u64,
+    pub new_bits: u64,
+}
+
+/// Flip one bit of a random i8 element. Returns the injection record.
+pub fn flip_i8(buf: &mut [i8], rng: &mut Pcg32) -> Injection {
+    let idx = rng.gen_range(0, buf.len());
+    let bit = rng.gen_range_u32(8);
+    let old = buf[idx];
+    buf[idx] = (old as u8 ^ (1 << bit)) as i8;
+    Injection {
+        index: idx,
+        bit: Some(bit),
+        old_bits: old as u8 as u64,
+        new_bits: buf[idx] as u8 as u64,
+    }
+}
+
+/// Flip one bit (in `range`) of a random u8 element.
+pub fn flip_u8(buf: &mut [u8], rng: &mut Pcg32, range: BitRange) -> Injection {
+    let idx = rng.gen_range(0, buf.len());
+    let bit = range.pick_bit(rng, 8);
+    let old = buf[idx];
+    buf[idx] = old ^ (1 << bit);
+    Injection {
+        index: idx,
+        bit: Some(bit),
+        old_bits: old as u64,
+        new_bits: buf[idx] as u64,
+    }
+}
+
+/// Flip one bit of a random i32 element (the C_temp target of §IV-C2).
+pub fn flip_i32(buf: &mut [i32], rng: &mut Pcg32) -> Injection {
+    let idx = rng.gen_range(0, buf.len());
+    let bit = rng.gen_range_u32(32);
+    let old = buf[idx];
+    buf[idx] = old ^ (1i32 << bit);
+    Injection {
+        index: idx,
+        bit: Some(bit),
+        old_bits: old as u32 as u64,
+        new_bits: buf[idx] as u32 as u64,
+    }
+}
+
+/// Flip one bit of a random f32 element (EB results are float).
+pub fn flip_f32(buf: &mut [f32], rng: &mut Pcg32) -> Injection {
+    let idx = rng.gen_range(0, buf.len());
+    let bit = rng.gen_range_u32(32);
+    let old = buf[idx].to_bits();
+    buf[idx] = f32::from_bits(old ^ (1u32 << bit));
+    Injection {
+        index: idx,
+        bit: Some(bit),
+        old_bits: old as u64,
+        new_bits: buf[idx].to_bits() as u64,
+    }
+}
+
+/// Replace a random i8 element with a uniform random *different* value.
+pub fn fluctuate_i8(buf: &mut [i8], rng: &mut Pcg32) -> Injection {
+    let idx = rng.gen_range(0, buf.len());
+    let old = buf[idx];
+    let mut new = old;
+    while new == old {
+        new = rng.next_i8();
+    }
+    buf[idx] = new;
+    Injection {
+        index: idx,
+        bit: None,
+        old_bits: old as u8 as u64,
+        new_bits: new as u8 as u64,
+    }
+}
+
+/// Replace a random i32 element with a uniform random *different* value.
+pub fn fluctuate_i32(buf: &mut [i32], rng: &mut Pcg32) -> Injection {
+    let idx = rng.gen_range(0, buf.len());
+    let old = buf[idx];
+    let mut new = old;
+    while new == old {
+        new = rng.next_u32() as i32;
+    }
+    buf[idx] = new;
+    Injection {
+        index: idx,
+        bit: None,
+        old_bits: old as u32 as u64,
+        new_bits: new as u32 as u64,
+    }
+}
+
+/// Undo an injection on an i8 buffer.
+pub fn restore_i8(buf: &mut [i8], inj: Injection) {
+    buf[inj.index] = inj.old_bits as u8 as i8;
+}
+
+/// Undo an injection on a u8 buffer.
+pub fn restore_u8(buf: &mut [u8], inj: Injection) {
+    buf[inj.index] = inj.old_bits as u8;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flip_changes_exactly_one_bit() {
+        let mut rng = Pcg32::new(71);
+        for _ in 0..100 {
+            let mut buf = vec![0i8; 64];
+            rng.fill_i8(&mut buf);
+            let orig = buf.clone();
+            let inj = flip_i8(&mut buf, &mut rng);
+            let diff: u32 = buf
+                .iter()
+                .zip(&orig)
+                .map(|(a, b)| (*a as u8 ^ *b as u8).count_ones())
+                .sum();
+            assert_eq!(diff, 1);
+            assert_ne!(buf[inj.index], orig[inj.index]);
+        }
+    }
+
+    #[test]
+    fn bit_ranges_respected() {
+        let mut rng = Pcg32::new(72);
+        for _ in 0..200 {
+            let mut buf = vec![0u8; 16];
+            let inj = flip_u8(&mut buf, &mut rng, BitRange::High4);
+            assert!(inj.bit.unwrap() >= 4);
+            let mut buf = vec![0u8; 16];
+            let inj = flip_u8(&mut buf, &mut rng, BitRange::Low4);
+            assert!(inj.bit.unwrap() < 4);
+        }
+    }
+
+    #[test]
+    fn fluctuation_always_changes_value() {
+        let mut rng = Pcg32::new(73);
+        for _ in 0..100 {
+            let mut buf = vec![5i32; 8];
+            let inj = fluctuate_i32(&mut buf, &mut rng);
+            assert_ne!(buf[inj.index], 5);
+        }
+    }
+
+    #[test]
+    fn restore_roundtrip() {
+        let mut rng = Pcg32::new(74);
+        let mut buf = vec![0u8; 32];
+        rng.fill_u8(&mut buf);
+        let orig = buf.clone();
+        let inj = flip_u8(&mut buf, &mut rng, BitRange::Any);
+        assert_ne!(buf, orig);
+        restore_u8(&mut buf, inj);
+        assert_eq!(buf, orig);
+    }
+
+    #[test]
+    fn flip_f32_changes_bits() {
+        let mut rng = Pcg32::new(75);
+        let mut buf = vec![1.5f32; 4];
+        let inj = flip_f32(&mut buf, &mut rng);
+        assert_ne!(buf[inj.index].to_bits(), 1.5f32.to_bits());
+    }
+}

@@ -1,0 +1,111 @@
+//! Low-precision GEMM substrate (paper §III-B).
+//!
+//! * [`naive`] — triple-loop oracle.
+//! * [`packed`] — packed, cache-blocked production kernel with the
+//!   extra-column packing hook the ABFT layer builds on.
+//! * [`QuantizedLinear`] — a full FC layer: packed weights + requantization
+//!   (Fig 1 pipeline), the unit the DLRM MLPs are made of.
+
+pub mod naive;
+pub mod packed;
+
+pub use naive::gemm_naive;
+pub use packed::{gemm_exec, gemm_exec_into, PackedB};
+
+use crate::quant::{requantize, QParams, RequantParams};
+
+/// A quantized fully-connected layer: y = requant(x · W).
+///
+/// Weights are packed once at construction (they are the long-lived operand
+/// — paper §IV-A1) and reused across every forward call.
+#[derive(Clone, Debug)]
+pub struct QuantizedLinear {
+    pub packed: PackedB,
+    pub w_qparams: QParams,
+    pub out_qparams: QParams,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl QuantizedLinear {
+    /// Build from float weights (k×n row-major); fits weight and output
+    /// lattices from the data / provided output range.
+    pub fn from_float(w: &[f32], k: usize, n: usize, out_range: (f32, f32)) -> Self {
+        let (wq, w_qparams) = crate::quant::quantize_slice_i8(w);
+        Self {
+            packed: PackedB::pack(&wq, k, n),
+            w_qparams,
+            out_qparams: QParams::fit_u8(out_range.0, out_range.1),
+            k,
+            n,
+        }
+    }
+
+    /// Forward: quantized input (m×k u8 + its qparams) → quantized output
+    /// (m×n u8). Returns the 32-bit intermediate too (ABFT wants it).
+    pub fn forward(&self, x: &[u8], m: usize, x_qparams: QParams) -> (Vec<u8>, Vec<i32>) {
+        let c_temp = gemm_exec(x, &self.packed, m);
+        let rp = self.requant_params(x, m, x_qparams);
+        let out = requantize(&c_temp, m, self.n, &rp);
+        (out, c_temp)
+    }
+
+    pub(crate) fn requant_params(&self, x: &[u8], m: usize, x_qparams: QParams) -> RequantParams {
+        // Column sums of W from the packed payload columns.
+        let mut b_col_sums = vec![0i32; self.n];
+        let nt = self.packed.n_total();
+        for p in 0..self.k {
+            for j in 0..self.n {
+                b_col_sums[j] += self.packed.data[p * nt + j] as i32;
+            }
+        }
+        let mut a_row_sums = vec![0i32; m];
+        for i in 0..m {
+            a_row_sums[i] = x[i * self.k..(i + 1) * self.k]
+                .iter()
+                .map(|&v| v as i32)
+                .sum();
+        }
+        RequantParams {
+            a: x_qparams,
+            b: self.w_qparams,
+            c: self.out_qparams,
+            a_row_sums,
+            b_col_sums,
+            k: self.k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn linear_layer_end_to_end() {
+        let (m, k, n) = (4, 32, 8);
+        let mut rng = Pcg32::new(77);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.next_f32() - 0.5).collect();
+        let layer = QuantizedLinear::from_float(&w, k, n, (-80.0, 80.0));
+        let xf: Vec<f32> = (0..m * k).map(|_| rng.next_f32() * 2.0).collect();
+        let (xq, xp) = crate::quant::quantize_slice_u8(&xf);
+        let (y, c_temp) = layer.forward(&xq, m, xp);
+        assert_eq!(y.len(), m * n);
+        assert_eq!(c_temp.len(), m * n);
+        // Compare against float matmul within quantization noise.
+        for i in 0..m {
+            for j in 0..n {
+                let mut exact = 0f32;
+                for p in 0..k {
+                    exact += xf[i * k + p] * w[p * n + j];
+                }
+                let approx = layer.out_qparams.dequantize_u8(y[i * n + j]);
+                assert!(
+                    (approx - exact).abs() < 2.5,
+                    "({i},{j}): approx={approx} exact={exact}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Naive triple-loop u8×i8→i32 GEMM — the correctness oracle every other
+//! kernel in this crate is tested against.
+
+/// `C[m×n] = A[m×k] · B[k×n]`, all row-major, i32 accumulation.
+pub fn gemm_naive(a: &[u8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for p in 0..k {
+                acc += a[i * k + p] as i32 * b[p * n + j] as i32;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_like() {
+        // A = [[1,2],[3,4]] (u8), B = I2 (i8)
+        let a = [1u8, 2, 3, 4];
+        let b = [1i8, 0, 0, 1];
+        assert_eq!(gemm_naive(&a, &b, 2, 2, 2), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn known_product_with_negatives() {
+        // A = [[2, 3]], B = [[-1], [5]] → [13]
+        let a = [2u8, 3];
+        let b = [-1i8, 5];
+        assert_eq!(gemm_naive(&a, &b, 1, 2, 1), vec![13]);
+    }
+
+    #[test]
+    fn extreme_values_no_overflow() {
+        // k=4096 of 255 * -128: 4096 * 255 * -128 = -133_693_440 fits i32.
+        let k = 4096;
+        let a = vec![255u8; k];
+        let b = vec![-128i8; k];
+        assert_eq!(gemm_naive(&a, &b, 1, k, 1), vec![-133_693_440]);
+    }
+
+    #[test]
+    fn empty_m_or_n() {
+        assert!(gemm_naive(&[], &[1i8, 2], 0, 2, 1).is_empty());
+        assert!(gemm_naive(&[1u8, 2], &[], 1, 2, 0).is_empty());
+    }
+}

@@ -1,0 +1,264 @@
+//! Packed u8×i8→i32 GEMM (FBGEMM-lite).
+//!
+//! `PackedB` is the pre-packed weight operand: B is laid out row-major with
+//! an optional *extra column* appended contiguously — this is the paper's
+//! §IV-A3 trick ("pack the original B and the separate vector storing row
+//! sums together into blocks so the blocks look like they are from encoded
+//! B′ in contiguous memory space"), which keeps the ABFT-protected GEMM a
+//! single BLAS-3 call.
+//!
+//! The compute kernel blocks over k so a `KC × n` panel of B stays cache
+//! resident while all m rows of A stream over it, and processes rows of A
+//! in pairs for instruction-level parallelism. The inner j-loop is written
+//! to autovectorize.
+
+/// Cache block over the inner (k) dimension (swept 128/256/512 in the
+/// §Perf pass; 128 won on this core's L1/L2).
+const KC: usize = 128;
+
+/// Pre-packed right-hand-side operand.
+#[derive(Clone, Debug)]
+pub struct PackedB {
+    /// Row-major `k × n_total` panel data.
+    pub(crate) data: Vec<i8>,
+    pub k: usize,
+    /// Logical (payload) column count, excluding any extra column.
+    pub n: usize,
+    /// Number of appended extra columns (0 or 1).
+    pub extra_cols: usize,
+}
+
+impl PackedB {
+    /// Pack a plain row-major `k × n` B with no extra column.
+    pub fn pack(b: &[i8], k: usize, n: usize) -> Self {
+        assert_eq!(b.len(), k * n);
+        Self {
+            data: b.to_vec(),
+            k,
+            n,
+            extra_cols: 0,
+        }
+    }
+
+    /// Pack B together with one extra i8 column (e.g. the mod-127 row-sum
+    /// checksum): output layout is row-major `k × (n+1)`.
+    pub fn pack_with_extra_col(b: &[i8], k: usize, n: usize, extra: &[i8]) -> Self {
+        assert_eq!(b.len(), k * n);
+        assert_eq!(extra.len(), k);
+        let nt = n + 1;
+        let mut data = vec![0i8; k * nt];
+        for p in 0..k {
+            data[p * nt..p * nt + n].copy_from_slice(&b[p * n..(p + 1) * n]);
+            data[p * nt + n] = extra[p];
+        }
+        Self {
+            data,
+            k,
+            n,
+            extra_cols: 1,
+        }
+    }
+
+    /// Total stored columns (payload + extra).
+    #[inline]
+    pub fn n_total(&self) -> usize {
+        self.n + self.extra_cols
+    }
+
+    /// Bytes of packed storage.
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Raw packed element at `(row, col)` over the total width.
+    #[inline]
+    pub fn at(&self, row: usize, col: usize) -> i8 {
+        self.data[row * self.n_total() + col]
+    }
+
+    /// Raw packed bytes (row-major `k × n_total`) — the exact layout the
+    /// AOT artifacts take as their encoded-operand input.
+    pub fn data(&self) -> &[i8] {
+        &self.data
+    }
+
+    /// Mutable access for fault injection (tests/campaigns only).
+    pub fn data_mut(&mut self) -> &mut [i8] {
+        &mut self.data
+    }
+}
+
+/// `C[m × n_total] = A[m × k] · B_packed`, i32 accumulation, row-major C.
+///
+/// Output width is `packed.n_total()`: if the pack carries a checksum
+/// column, C carries one too (paper: "allocate one more column for the
+/// intermediate result matrix").
+pub fn gemm_exec(a: &[u8], packed: &PackedB, m: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * packed.n_total()];
+    gemm_exec_into(a, packed, m, &mut c);
+    c
+}
+
+/// Register-tile width over the j (output column) dimension. 32 i32
+/// accumulators per A row = 4 AVX2 vectors; with MR=2 rows that is 8
+/// live vector accumulators, comfortably inside the 16 ymm registers.
+const NR: usize = 32;
+
+/// Same as [`gemm_exec`] but writes into a caller-provided buffer, allowing
+/// the serving hot path to reuse allocations.
+///
+/// Kernel shape (§Perf iteration 2): k-blocked (KC) so a B panel stays
+/// cache-resident, j-tiled (NR) with the accumulator tile held in
+/// registers across the whole k-block — C is read/written once per
+/// k-block instead of once per k step (the v1 kernel's bottleneck was
+/// exactly that L1 read-modify-write traffic), and 2 rows of A share
+/// every loaded B line.
+pub fn gemm_exec_into(a: &[u8], packed: &PackedB, m: usize, c: &mut [i32]) {
+    let k = packed.k;
+    let nt = packed.n_total();
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(c.len(), m * nt, "C shape");
+    c.fill(0);
+    let data = &packed.data[..];
+
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        let mut i = 0;
+        while i + 2 <= m {
+            let a0 = &a[i * k..(i + 1) * k];
+            let a1 = &a[(i + 1) * k..(i + 2) * k];
+            let (lo, hi) = c.split_at_mut((i + 1) * nt);
+            let c0 = &mut lo[i * nt..];
+            let c1 = &mut hi[..nt];
+            let mut jb = 0;
+            while jb + NR <= nt {
+                let mut acc0 = [0i32; NR];
+                let mut acc1 = [0i32; NR];
+                for p in kb..kend {
+                    let av0 = a0[p] as i32;
+                    let av1 = a1[p] as i32;
+                    let b = &data[p * nt + jb..p * nt + jb + NR];
+                    for r in 0..NR {
+                        let bw = b[r] as i32;
+                        acc0[r] += av0 * bw;
+                        acc1[r] += av1 * bw;
+                    }
+                }
+                for r in 0..NR {
+                    c0[jb + r] += acc0[r];
+                    c1[jb + r] += acc1[r];
+                }
+                jb += NR;
+            }
+            if jb < nt {
+                // Column tail (< NR wide).
+                for p in kb..kend {
+                    let av0 = a0[p] as i32;
+                    let av1 = a1[p] as i32;
+                    let b = &data[p * nt..(p + 1) * nt];
+                    for r in jb..nt {
+                        let bw = b[r] as i32;
+                        c0[r] += av0 * bw;
+                        c1[r] += av1 * bw;
+                    }
+                }
+            }
+            i += 2;
+        }
+        if i < m {
+            // Row tail (odd m, incl. the important m=1 serving case):
+            // stream full B rows — a single accumulator row has no tile
+            // reuse to exploit, and strided column access would waste
+            // 3/4 of every loaded B line.
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * nt..(i + 1) * nt];
+            for p in kb..kend {
+                let av = arow[p] as i32;
+                let brow = &data[p * nt..(p + 1) * nt];
+                for (x, &bv) in crow.iter_mut().zip(brow) {
+                    *x += av * bv as i32;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::naive::gemm_naive;
+    use crate::util::rng::Pcg32;
+
+    fn rand_case(rng: &mut Pcg32, m: usize, k: usize, n: usize) -> (Vec<u8>, Vec<i8>) {
+        let mut a = vec![0u8; m * k];
+        let mut b = vec![0i8; k * n];
+        rng.fill_u8(&mut a);
+        rng.fill_i8(&mut b);
+        (a, b)
+    }
+
+    #[test]
+    fn matches_naive_across_shapes() {
+        let mut rng = Pcg32::new(2024);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (1, 3200, 800),
+            (2, 7, 5),
+            (3, 300, 17),
+            (4, 256, 64),
+            (5, 257, 63), // straddles the KC boundary
+            (17, 512, 32),
+        ] {
+            let (a, b) = rand_case(&mut rng, m, k, n);
+            let packed = PackedB::pack(&b, k, n);
+            assert_eq!(
+                gemm_exec(&a, &packed, m),
+                gemm_naive(&a, &b, m, k, n),
+                "shape ({m},{k},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn extra_col_behaves_like_augmented_matrix() {
+        let mut rng = Pcg32::new(11);
+        let (m, k, n) = (6, 100, 40);
+        let (a, b) = rand_case(&mut rng, m, k, n);
+        let mut extra = vec![0i8; k];
+        rng.fill_i8(&mut extra);
+        // Build explicit augmented B′ and compare.
+        let mut b_aug = vec![0i8; k * (n + 1)];
+        for p in 0..k {
+            b_aug[p * (n + 1)..p * (n + 1) + n].copy_from_slice(&b[p * n..(p + 1) * n]);
+            b_aug[p * (n + 1) + n] = extra[p];
+        }
+        let packed = PackedB::pack_with_extra_col(&b, k, n, &extra);
+        assert_eq!(packed.n_total(), n + 1);
+        assert_eq!(
+            gemm_exec(&a, &packed, m),
+            gemm_naive(&a, &b_aug, m, k, n + 1)
+        );
+    }
+
+    #[test]
+    fn exec_into_reuses_buffer() {
+        let mut rng = Pcg32::new(3);
+        let (m, k, n) = (4, 64, 16);
+        let (a, b) = rand_case(&mut rng, m, k, n);
+        let packed = PackedB::pack(&b, k, n);
+        let mut buf = vec![0xDEADi32 as i32; m * n];
+        gemm_exec_into(&a, &packed, m, &mut buf);
+        assert_eq!(buf, gemm_naive(&a, &b, m, k, n));
+    }
+
+    #[test]
+    fn odd_row_count_tail_handled() {
+        let mut rng = Pcg32::new(4);
+        for m in [1usize, 3, 5, 7] {
+            let (k, n) = (33, 9);
+            let (a, b) = rand_case(&mut rng, m, k, n);
+            let packed = PackedB::pack(&b, k, n);
+            assert_eq!(gemm_exec(&a, &packed, m), gemm_naive(&a, &b, m, k, n));
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! # dlrm-abft
+//!
+//! Production-quality reproduction of *"Efficient Soft-Error Detection for
+//! Low-precision Deep Learning Recommendation Models"* (CS.DC 2021):
+//! algorithm-based fault tolerance (ABFT) for the two workhorse operators
+//! of quantized DLRM inference — GEMM and EmbeddingBag — integrated as a
+//! first-class feature of a serving stack.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`quant`], [`gemm`], [`embedding`] — the low-precision operator
+//!   substrate (FBGEMM-lite).
+//! * [`abft`] — the paper's contribution: checksum encode/verify for GEMM
+//!   (Alg 1) and EB (Alg 2), detection-probability analysis, baselines.
+//! * [`fault`] — soft-error injection + campaign runner (§VI-B).
+//! * [`dlrm`] — the recommendation model built from the operators.
+//! * [`coordinator`] — serving: batching, ABFT verification,
+//!   recompute-on-detect, metrics.
+//! * [`runtime`] — PJRT loader for the jax/Pallas-lowered model artifacts.
+//! * [`bench`] — harness + workload generators regenerating every paper
+//!   table and figure.
+//! * [`util`] — from-scratch infra (PRNG, JSON, threadpool, stats).
+
+pub mod abft;
+pub mod bench;
+pub mod coordinator;
+pub mod dlrm;
+pub mod embedding;
+pub mod fault;
+pub mod gemm;
+pub mod quant;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,385 @@
+//! dlrm-abft launcher.
+//!
+//! Commands: serve / bench / campaign / artifacts / snapshot / trace-gen /
+//! trace-replay / scrub / quickstart. Flags are `--key value` pairs (see
+//! `util::cli`).
+
+use anyhow::{bail, Context, Result};
+use dlrm_abft::bench::figures;
+use dlrm_abft::bench::harness::BenchConfig;
+use dlrm_abft::bench::trace::{generate_trace, read_trace, write_trace, TraceGenConfig};
+use dlrm_abft::coordinator::{BatchPolicy, ChaosConfig, Client, Engine, ScoreRequest, Server};
+use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, Protection};
+use dlrm_abft::fault::campaign::{EbCampaignConfig, GemmCampaignConfig};
+use dlrm_abft::runtime::PjrtEngine;
+use dlrm_abft::util::cli::Cli;
+use dlrm_abft::util::rng::Pcg32;
+use dlrm_abft::util::stats::Summary;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::parse(&args)?;
+    let result = match cli.command.as_str() {
+        "serve" => serve(&cli),
+        "bench" => bench(&cli),
+        "campaign" => campaign(&cli),
+        "artifacts" => artifacts(&cli),
+        "snapshot" => snapshot(&cli),
+        "trace-gen" => trace_gen(&cli),
+        "score" => score(&cli),
+        "trace-replay" => trace_replay(&cli),
+        "scrub" => scrub(&cli),
+        "quickstart" => quickstart(),
+        "help" | "" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown command {other:?}")
+        }
+    };
+    if result.is_ok() {
+        cli.reject_unknown()?;
+    }
+    result
+}
+
+fn print_help() {
+    println!(
+        "dlrm-abft — ABFT-protected low-precision DLRM serving\n\
+         \n\
+         USAGE: dlrm-abft <command> [--flag value ...]\n\
+         \n\
+         COMMANDS:\n\
+           serve        --addr 127.0.0.1:7878 [--config cfg.json | --model-path m.dlrm]\n\
+                        --max-batch 32 --max-wait-ms 2 --protection detect_recompute\n\
+                        --chaos-weight-p 0 --chaos-table-p 0 --scrub-stride 0\n\
+           bench        --which fig5|fig6|table2|table3|analysis|ablations|eb-fused|all\n\
+                        [--quick true] [--scale N] [--runs N] [--threads N]\n\
+           campaign     --op gemm|eb [--runs N] [--rows N] [--dim N]\n\
+           artifacts    --dir artifacts     (load + compile PJRT artifacts)\n\
+           snapshot     --out model.dlrm [--config cfg.json]  (build + save)\n\
+           trace-gen    --out trace.jsonl [--requests N] [--rate R] [--zipf S]\n\
+           score        --backend native|pjrt --input trace.jsonl [--out -]\n\
+           trace-replay --trace trace.jsonl --addr HOST:PORT [--speed X]\n\
+           scrub        --model-path m.dlrm  (offline full-table verification)\n\
+           quickstart   (tiny protected model, end to end)"
+    );
+}
+
+fn load_or_build_model(cli: &Cli, protection: Protection) -> Result<DlrmModel> {
+    if let Some(path) = cli.get("model-path") {
+        println!("loading snapshot {path}");
+        return DlrmModel::load(path, protection);
+    }
+    let mut cfg = match cli.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            DlrmConfig::from_json_str(&text)?
+        }
+        None => DlrmConfig::default(),
+    };
+    cfg.protection = protection;
+    println!(
+        "building model: {} params, {} tables, protection {:?}",
+        cfg.param_count(),
+        cfg.tables.len(),
+        cfg.protection
+    );
+    Ok(DlrmModel::random(cfg))
+}
+
+fn serve(cli: &Cli) -> Result<()> {
+    let addr: String = cli.flag("addr", "127.0.0.1:7878".to_string())?;
+    let protection = Protection::parse(&cli.flag("protection", "detect_recompute".to_string())?)?;
+    let model = load_or_build_model(cli, protection)?;
+    println!("model ready: {} MiB of weights", model.weight_bytes() / (1 << 20));
+    let chaos_w: f64 = cli.flag("chaos-weight-p", 0.0)?;
+    let chaos_t: f64 = cli.flag("chaos-table-p", 0.0)?;
+    let mut engine = if chaos_w > 0.0 || chaos_t > 0.0 {
+        Engine::with_chaos(
+            model,
+            ChaosConfig {
+                p_weight_flip: chaos_w,
+                p_table_flip: chaos_t,
+                seed: cli.flag("chaos-seed", 0xC405u64)?,
+            },
+        )
+    } else {
+        Engine::new(model)
+    };
+    let scrub_stride: usize = cli.flag("scrub-stride", 0)?;
+    if scrub_stride > 0 {
+        engine = engine.with_scrubbing(scrub_stride);
+        println!("background scrubbing: {scrub_stride} rows/table/batch");
+    }
+    let policy = BatchPolicy {
+        max_batch: cli.flag("max-batch", 32usize)?,
+        max_wait: Duration::from_millis(cli.flag("max-wait-ms", 2u64)?),
+        max_queue: cli.flag("max-queue", 4096usize)?,
+    };
+    cli.reject_unknown()?;
+    let server = Server::start(&addr, Arc::new(engine), policy)?;
+    println!("serving on {}", server.addr);
+    println!("protocol: newline-delimited JSON; try {{\"op\":\"ping\"}}");
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn bench(cli: &Cli) -> Result<()> {
+    let which: String = cli.flag("which", "all".to_string())?;
+    let quick: bool = cli.flag("quick", false)?;
+    let threads: usize = cli.flag(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    )?;
+    let bench_cfg = if quick {
+        BenchConfig { warmup_iters: 1, sample_iters: 5, inner_reps: 1 }
+    } else {
+        BenchConfig::default()
+    };
+    let scale: usize = cli.flag("scale", if quick { 40 } else { 1 })?;
+    let runs: usize = cli.flag("runs", if quick { 10 } else { 100 })?;
+    let rows: usize = cli.flag("rows", if quick { 100_000 } else { 4_000_000 })?;
+    let dim: usize = cli.flag("dim", 64usize)?;
+    let trials: usize = if quick { 200 } else { 2000 };
+    let mut out = std::io::stdout();
+    let run = |which: &str, out: &mut dyn std::io::Write| -> Result<()> {
+        match which {
+            "fig5" => {
+                figures::run_fig5(&bench_cfg, out);
+            }
+            "fig6" => {
+                figures::run_fig6(&bench_cfg, scale, out);
+            }
+            "table2" => {
+                let cfg = GemmCampaignConfig { runs_per_shape: runs, ..Default::default() };
+                figures::run_table2(&cfg, threads, out);
+            }
+            "table3" => {
+                let cfg = EbCampaignConfig { table_rows: rows, dim, ..Default::default() };
+                figures::run_table3(&cfg, if quick { 10 } else { 1 }, out);
+            }
+            "analysis" => figures::run_analysis(trials, out),
+            "ablations" => figures::run_ablations(&bench_cfg, out),
+            "eb-fused" => figures::run_eb_fused_perf(&bench_cfg, scale, out),
+            other => bail!("unknown bench {other:?}"),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for w in ["fig5", "fig6", "table2", "table3", "analysis", "ablations", "eb-fused"] {
+            run(w, &mut out)?;
+        }
+    } else {
+        run(&which, &mut out)?;
+    }
+    Ok(())
+}
+
+fn campaign(cli: &Cli) -> Result<()> {
+    let op: String = cli.flag("op", "gemm".to_string())?;
+    let mut out = std::io::stdout();
+    match op.as_str() {
+        "gemm" => {
+            let cfg = GemmCampaignConfig {
+                runs_per_shape: cli.flag("runs", 100usize)?,
+                ..Default::default()
+            };
+            figures::run_table2(&cfg, cli.flag("threads", 1usize)?, &mut out);
+        }
+        "eb" => {
+            let cfg = EbCampaignConfig {
+                table_rows: cli.flag("rows", 4_000_000usize)?,
+                dim: cli.flag("dim", 64usize)?,
+                ..Default::default()
+            };
+            figures::run_table3(&cfg, 1, &mut out);
+        }
+        other => bail!("unknown campaign {other:?}"),
+    }
+    Ok(())
+}
+
+fn artifacts(cli: &Cli) -> Result<()> {
+    let dir: String = cli.flag("dir", "artifacts".to_string())?;
+    let mut engine = PjrtEngine::cpu()?;
+    let loaded = engine.load_artifact_dir(&dir)?;
+    if loaded.is_empty() {
+        bail!("no *.hlo.txt artifacts in {dir:?}; run `make artifacts` first");
+    }
+    println!("platform={} loaded={loaded:?}", engine.platform());
+    for name in &loaded {
+        println!("  {name}: compiled OK");
+    }
+    Ok(())
+}
+
+fn snapshot(cli: &Cli) -> Result<()> {
+    let out: String = cli.flag("out", "model.dlrm".to_string())?;
+    let model = load_or_build_model(cli, Protection::DetectRecompute)?;
+    model.save(&out)?;
+    let bytes = std::fs::metadata(&out)?.len();
+    println!("wrote {out} ({} MiB)", bytes / (1 << 20));
+    Ok(())
+}
+
+fn trace_gen(cli: &Cli) -> Result<()> {
+    let out: String = cli.flag("out", "trace.jsonl".to_string())?;
+    let model_cfg = match cli.get("config") {
+        Some(path) => DlrmConfig::from_json_str(&std::fs::read_to_string(path)?)?,
+        None => DlrmConfig::default(),
+    };
+    let gen = TraceGenConfig {
+        rate: cli.flag("rate", 500.0)?,
+        requests: cli.flag("requests", 1000usize)?,
+        zipf_s: {
+            let s: f64 = cli.flag("zipf", 1.05)?;
+            (s > 0.0).then_some(s)
+        },
+        seed: cli.flag("seed", 0x7124CEu64)?,
+    };
+    let trace = generate_trace(&model_cfg, &gen);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&out)?);
+    write_trace(&mut f, &trace)?;
+    println!("wrote {} requests to {out}", trace.len());
+    Ok(())
+}
+
+/// Offline batch scoring: read a JSONL trace, score through the chosen
+/// backend, emit JSONL results. The `pjrt` backend serves the jax/Pallas
+/// artifacts — python stays off this path entirely.
+fn score(cli: &Cli) -> Result<()> {
+    use dlrm_abft::coordinator::{ArtifactShape, PjrtModelEngine};
+    let input: String = cli.flag("input", "trace.jsonl".to_string())?;
+    let backend: String = cli.flag("backend", "native".to_string())?;
+    let out_path: String = cli.flag("out", "-".to_string())?;
+    let trace = read_trace(std::io::BufReader::new(std::fs::File::open(&input)?))?;
+    let mut out: Box<dyn std::io::Write> = if out_path == "-" {
+        Box::new(std::io::stdout())
+    } else {
+        Box::new(std::io::BufWriter::new(std::fs::File::create(&out_path)?))
+    };
+    let to_reqs = |trace: &[dlrm_abft::bench::trace::TracedRequest]| -> Vec<ScoreRequest> {
+        trace
+            .iter()
+            .enumerate()
+            .map(|(i, t)| ScoreRequest { id: i as u64, dense: t.dense.clone(), sparse: t.sparse.clone() })
+            .collect()
+    };
+    match backend.as_str() {
+        "native" => {
+            let model = load_or_build_model(cli, Protection::DetectRecompute)?;
+            let engine = Engine::new(model);
+            for chunk in to_reqs(&trace).chunks(16) {
+                for resp in engine.process_batch(chunk.to_vec()) {
+                    writeln!(out, "{}", resp.to_json())?;
+                }
+            }
+            eprintln!("metrics: {}", engine.metrics.snapshot());
+        }
+        "pjrt" => {
+            let dir: String = cli.flag("artifacts", "artifacts".to_string())?;
+            let engine = PjrtModelEngine::load_dir(&dir, ArtifactShape::default())?;
+            let max_b = *engine.batch_sizes().last().unwrap();
+            for chunk in to_reqs(&trace).chunks(max_b) {
+                for resp in engine.process_batch(chunk.to_vec())? {
+                    writeln!(out, "{}", resp.to_json())?;
+                }
+            }
+            eprintln!("metrics: {}", engine.metrics.snapshot());
+        }
+        other => bail!("unknown backend {other:?}"),
+    }
+    Ok(())
+}
+
+fn trace_replay(cli: &Cli) -> Result<()> {
+    let path: String = cli.flag("trace", "trace.jsonl".to_string())?;
+    let addr: String = cli.flag("addr", "127.0.0.1:7878".to_string())?;
+    let speed: f64 = cli.flag("speed", 1.0)?;
+    let trace = read_trace(std::io::BufReader::new(std::fs::File::open(&path)?))?;
+    println!("replaying {} requests to {addr} at {speed}x", trace.len());
+    let sock_addr: std::net::SocketAddr = addr.parse()?;
+    let mut client = Client::connect(&sock_addr)?;
+    let t0 = Instant::now();
+    let mut latencies = Vec::with_capacity(trace.len());
+    let mut detected = 0usize;
+    for (i, req) in trace.iter().enumerate() {
+        let due = Duration::from_micros((req.at_us as f64 / speed) as u64);
+        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let score_req = ScoreRequest {
+            id: i as u64,
+            dense: req.dense.clone(),
+            sparse: req.sparse.clone(),
+        };
+        let t = Instant::now();
+        let resp = client.score(&score_req)?;
+        latencies.push(t.elapsed().as_secs_f64() * 1e3);
+        detected += resp.detected as usize;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = Summary::from(&latencies);
+    println!(
+        "done: {:.1} req/s, latency ms p50 {:.2} p95 {:.2} max {:.2}, detections {}",
+        latencies.len() as f64 / wall,
+        s.median,
+        s.p95,
+        s.max,
+        detected
+    );
+    Ok(())
+}
+
+fn scrub(cli: &Cli) -> Result<()> {
+    use dlrm_abft::abft::Scrubber;
+    let path = cli
+        .get("model-path")
+        .context("scrub needs --model-path")?
+        .to_string();
+    let model = DlrmModel::load(&path, Protection::Detect)?;
+    let t0 = Instant::now();
+    let mut total_bad = 0usize;
+    for (t, (table, checksum)) in model.tables.iter().zip(&model.checksums).enumerate() {
+        let bad = Scrubber::full_pass(table, checksum);
+        println!("table {t}: {} rows scanned, {} corrupted", table.rows, bad.len());
+        total_bad += bad.len();
+    }
+    println!(
+        "scrub complete in {:.2}s: {total_bad} corrupted rows",
+        t0.elapsed().as_secs_f64()
+    );
+    if total_bad > 0 {
+        bail!("{total_bad} corrupted rows found");
+    }
+    Ok(())
+}
+
+fn quickstart() -> Result<()> {
+    use dlrm_abft::dlrm::TableConfig;
+    println!("== dlrm-abft quickstart ==");
+    let cfg = DlrmConfig {
+        num_dense: 8,
+        embedding_dim: 16,
+        bottom_mlp: vec![32, 16],
+        top_mlp: vec![32],
+        tables: vec![TableConfig { rows: 10_000, pooling: 20 }; 4],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed: 1,
+    };
+    let model = DlrmModel::random(cfg);
+    let mut rng = Pcg32::new(2);
+    let reqs = model.synth_requests(16, &mut rng);
+    let (scores, report) = model.forward(&reqs);
+    println!("scores[..4] = {:?}", &scores[..4]);
+    println!("soft-error report: {report:?}");
+    println!("quickstart OK");
+    Ok(())
+}

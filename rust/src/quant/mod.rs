@@ -1,0 +1,247 @@
+//! Quantized-arithmetic substrate (paper §III-A, Fig 1).
+//!
+//! Real values are represented as `x ≈ α·x_I + β` with `x_I` a short
+//! integer: `u8` for activations (matrix A), `i8` for weights (matrix B),
+//! following the paper's convention (and PyTorch/FBGEMM's).
+//!
+//! A quantized GEMM (Eq 1) decomposes into the integer product
+//! `C_temp = A_I · B_I` plus rank-1 correction terms, followed by a
+//! *requantization* step producing the 8-bit output tuple `(C_I, α_C, β_C)`.
+
+pub mod requantize;
+
+pub use requantize::{requantize, requantize_exclude_last_col, RequantParams};
+
+/// Affine quantization parameters: `x ≈ alpha * x_int + beta`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QParams {
+    pub alpha: f32,
+    pub beta: f32,
+}
+
+impl QParams {
+    /// Fit `[x_min, x_max]` onto the `u8` lattice `[0, 255]`.
+    pub fn fit_u8(x_min: f32, x_max: f32) -> Self {
+        let (lo, hi) = sanitize_range(x_min, x_max);
+        let alpha = (hi - lo) / 255.0;
+        Self { alpha, beta: lo }
+    }
+
+    /// Fit `[x_min, x_max]` onto the `i8` lattice `[-128, 127]`.
+    pub fn fit_i8(x_min: f32, x_max: f32) -> Self {
+        let (lo, hi) = sanitize_range(x_min, x_max);
+        let alpha = (hi - lo) / 255.0;
+        Self {
+            alpha,
+            beta: lo + 128.0 * alpha,
+        }
+    }
+
+    /// Quantize one value to u8: round((x - beta)/alpha) clamped to [0,255].
+    #[inline]
+    pub fn quantize_u8(&self, x: f32) -> u8 {
+        let q = ((x - self.beta) / self.alpha).round();
+        q.clamp(0.0, 255.0) as u8
+    }
+
+    /// Quantize one value to i8.
+    #[inline]
+    pub fn quantize_i8(&self, x: f32) -> i8 {
+        let q = ((x - self.beta) / self.alpha).round();
+        q.clamp(-128.0, 127.0) as i8
+    }
+
+    #[inline]
+    pub fn dequantize_u8(&self, q: u8) -> f32 {
+        self.alpha * q as f32 + self.beta
+    }
+
+    #[inline]
+    pub fn dequantize_i8(&self, q: i8) -> f32 {
+        self.alpha * q as f32 + self.beta
+    }
+}
+
+fn sanitize_range(x_min: f32, x_max: f32) -> (f32, f32) {
+    assert!(x_min.is_finite() && x_max.is_finite() && x_min <= x_max);
+    // Degenerate ranges still need a nonzero alpha.
+    if x_max - x_min < f32::EPSILON {
+        (x_min - 0.5, x_min + 0.5)
+    } else {
+        (x_min, x_max)
+    }
+}
+
+/// Quantize an f32 slice to u8 with range fitted from the data.
+pub fn quantize_slice_u8(xs: &[f32]) -> (Vec<u8>, QParams) {
+    let (lo, hi) = min_max(xs);
+    let qp = QParams::fit_u8(lo, hi);
+    (xs.iter().map(|&x| qp.quantize_u8(x)).collect(), qp)
+}
+
+/// Quantize an f32 slice to i8 with range fitted from the data.
+pub fn quantize_slice_i8(xs: &[f32]) -> (Vec<i8>, QParams) {
+    let (lo, hi) = min_max(xs);
+    let qp = QParams::fit_i8(lo, hi);
+    (xs.iter().map(|&x| qp.quantize_i8(x)).collect(), qp)
+}
+
+pub fn dequantize_slice_u8(qs: &[u8], qp: QParams) -> Vec<f32> {
+    qs.iter().map(|&q| qp.dequantize_u8(q)).collect()
+}
+
+pub fn dequantize_slice_i8(qs: &[i8], qp: QParams) -> Vec<f32> {
+    qs.iter().map(|&q| qp.dequantize_i8(q)).collect()
+}
+
+fn min_max(xs: &[f32]) -> (f32, f32) {
+    assert!(!xs.is_empty());
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        if x < lo {
+            lo = x;
+        }
+        if x > hi {
+            hi = x;
+        }
+    }
+    (lo, hi)
+}
+
+/// 4-bit quantization parameters for embedding rows (paper cites
+/// post-training 4-bit quantization of embedding tables [24]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QParams4 {
+    pub alpha: f32,
+    pub beta: f32,
+}
+
+impl QParams4 {
+    pub fn fit(x_min: f32, x_max: f32) -> Self {
+        let (lo, hi) = sanitize_range(x_min, x_max);
+        Self {
+            alpha: (hi - lo) / 15.0,
+            beta: lo,
+        }
+    }
+
+    #[inline]
+    pub fn quantize(&self, x: f32) -> u8 {
+        (((x - self.beta) / self.alpha).round()).clamp(0.0, 15.0) as u8
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: u8) -> f32 {
+        debug_assert!(q < 16);
+        self.alpha * q as f32 + self.beta
+    }
+}
+
+/// Pack a slice of 4-bit codes (values < 16) two-per-byte, low nibble first.
+pub fn pack_nibbles(codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; (codes.len() + 1) / 2];
+    for (i, &c) in codes.iter().enumerate() {
+        debug_assert!(c < 16);
+        if i % 2 == 0 {
+            out[i / 2] |= c;
+        } else {
+            out[i / 2] |= c << 4;
+        }
+    }
+    out
+}
+
+/// Read the i-th 4-bit code from a nibble-packed buffer.
+#[inline]
+pub fn get_nibble(packed: &[u8], i: usize) -> u8 {
+    let b = packed[i / 2];
+    if i % 2 == 0 {
+        b & 0x0f
+    } else {
+        b >> 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn u8_roundtrip_error_within_half_step() {
+        let qp = QParams::fit_u8(-3.0, 5.0);
+        for i in 0..=1000 {
+            let x = -3.0 + 8.0 * i as f32 / 1000.0;
+            let err = (qp.dequantize_u8(qp.quantize_u8(x)) - x).abs();
+            assert!(err <= qp.alpha * 0.5 + 1e-6, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn i8_roundtrip_error_within_half_step() {
+        let qp = QParams::fit_i8(-1.0, 1.0);
+        for i in 0..=1000 {
+            let x = -1.0 + 2.0 * i as f32 / 1000.0;
+            let err = (qp.dequantize_i8(qp.quantize_i8(x)) - x).abs();
+            assert!(err <= qp.alpha * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn endpoints_map_to_lattice_ends() {
+        let qp = QParams::fit_u8(-2.0, 2.0);
+        assert_eq!(qp.quantize_u8(-2.0), 0);
+        assert_eq!(qp.quantize_u8(2.0), 255);
+        let qi = QParams::fit_i8(-2.0, 2.0);
+        assert_eq!(qi.quantize_i8(-2.0), -128);
+        assert_eq!(qi.quantize_i8(2.0), 127);
+    }
+
+    #[test]
+    fn out_of_range_clamps() {
+        let qp = QParams::fit_u8(0.0, 1.0);
+        assert_eq!(qp.quantize_u8(-100.0), 0);
+        assert_eq!(qp.quantize_u8(100.0), 255);
+    }
+
+    #[test]
+    fn degenerate_range_ok() {
+        let qp = QParams::fit_u8(1.0, 1.0);
+        let q = qp.quantize_u8(1.0);
+        assert!((qp.dequantize_u8(q) - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn slice_roundtrip_random() {
+        let mut rng = Pcg32::new(1234);
+        let xs: Vec<f32> = (0..4096).map(|_| rng.next_f32() * 10.0 - 5.0).collect();
+        let (qs, qp) = quantize_slice_u8(&xs);
+        let back = dequantize_slice_u8(&qs, qp);
+        for (x, b) in xs.iter().zip(&back) {
+            assert!((x - b).abs() <= qp.alpha * 0.5 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn nibble_pack_roundtrip() {
+        let mut rng = Pcg32::new(5);
+        for len in [0usize, 1, 2, 7, 64, 129] {
+            let codes: Vec<u8> = (0..len).map(|_| rng.next_u8() & 0x0f).collect();
+            let packed = pack_nibbles(&codes);
+            assert_eq!(packed.len(), (len + 1) / 2);
+            for (i, &c) in codes.iter().enumerate() {
+                assert_eq!(get_nibble(&packed, i), c);
+            }
+        }
+    }
+
+    #[test]
+    fn four_bit_roundtrip() {
+        let qp = QParams4::fit(-1.0, 1.0);
+        for i in 0..16 {
+            let x = qp.dequantize(i);
+            assert_eq!(qp.quantize(x), i);
+        }
+    }
+}

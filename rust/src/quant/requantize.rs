@@ -1,0 +1,211 @@
+//! Requantization: combine the 32-bit integer product `C_temp = A_I·B_I`
+//! with the rank-1 correction terms of Eq 1 and emit the quantized output
+//! tuple `(C_I, α_C, β_C)` (paper Fig 1).
+//!
+//! `AB ≈ α_A α_B A_I B_I
+//!      + α_A β_B (A_I e_k) e_nᵀ      (row sums of A_I)
+//!      + α_B β_A e_m (e_kᵀ B_I)      (column sums of B_I)
+//!      + k β_A β_B e_m e_nᵀ`
+//!
+//! The paper's ABFT checksum column lives in `C_temp` and is *excluded*
+//! from requantization (§IV-A3); `requantize_exclude_last_col` implements
+//! exactly that.
+
+use super::QParams;
+
+/// Everything the requantization step needs besides `C_temp`.
+#[derive(Clone, Debug)]
+pub struct RequantParams {
+    pub a: QParams,
+    pub b: QParams,
+    /// Output lattice.
+    pub c: QParams,
+    /// Row sums of `A_I` (length m).
+    pub a_row_sums: Vec<i32>,
+    /// Column sums of `B_I` (length n).
+    pub b_col_sums: Vec<i32>,
+    /// Inner dimension k.
+    pub k: usize,
+}
+
+impl RequantParams {
+    /// Compute row sums of A (m×k u8) and column sums of B (k×n i8).
+    pub fn prepare(
+        a_mat: &[u8],
+        b_mat: &[i8],
+        m: usize,
+        k: usize,
+        n: usize,
+        a: QParams,
+        b: QParams,
+        c: QParams,
+    ) -> Self {
+        assert_eq!(a_mat.len(), m * k);
+        assert_eq!(b_mat.len(), k * n);
+        let mut a_row_sums = vec![0i32; m];
+        for i in 0..m {
+            let mut s = 0i32;
+            for p in 0..k {
+                s += a_mat[i * k + p] as i32;
+            }
+            a_row_sums[i] = s;
+        }
+        let mut b_col_sums = vec![0i32; n];
+        for p in 0..k {
+            let row = &b_mat[p * n..(p + 1) * n];
+            for (j, &v) in row.iter().enumerate() {
+                b_col_sums[j] += v as i32;
+            }
+        }
+        Self {
+            a,
+            b,
+            c,
+            a_row_sums,
+            b_col_sums,
+            k,
+        }
+    }
+
+    /// Real-valued output entry before final quantization.
+    #[inline]
+    pub fn real_value(&self, c_temp_ij: i32, i: usize, j: usize) -> f32 {
+        self.a.alpha * self.b.alpha * c_temp_ij as f32
+            + self.a.alpha * self.b.beta * self.a_row_sums[i] as f32
+            + self.b.alpha * self.a.beta * self.b_col_sums[j] as f32
+            + self.k as f32 * self.a.beta * self.b.beta
+    }
+}
+
+/// Requantize an m×n `C_temp` (row-major, stride n) to u8.
+pub fn requantize(c_temp: &[i32], m: usize, n: usize, p: &RequantParams) -> Vec<u8> {
+    assert_eq!(c_temp.len(), m * n);
+    let mut out = vec![0u8; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[i * n + j] = p.c.quantize_u8(p.real_value(c_temp[i * n + j], i, j));
+        }
+    }
+    out
+}
+
+/// Requantize an m×(n+1) `C_temp` whose last column is the ABFT checksum:
+/// the checksum column is skipped, output is m×n (paper §IV-A3: "modify the
+/// requantization procedure to let it exclude the last column").
+pub fn requantize_exclude_last_col(
+    c_temp: &[i32],
+    m: usize,
+    n_plus_1: usize,
+    p: &RequantParams,
+) -> Vec<u8> {
+    assert!(n_plus_1 >= 1);
+    let n = n_plus_1 - 1;
+    assert_eq!(c_temp.len(), m * n_plus_1);
+    let mut out = vec![0u8; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[i * n + j] = p.c.quantize_u8(p.real_value(c_temp[i * n_plus_1 + j], i, j));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_slice_i8, quantize_slice_u8, QParams};
+    use crate::util::rng::Pcg32;
+
+    /// Float reference: dequantize inputs, real matmul.
+    fn float_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p];
+                for j in 0..n {
+                    c[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn int_matmul(a: &[u8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+        let mut c = vec![0i32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p] as i32;
+                for j in 0..n {
+                    c[i * n + j] += av * b[p * n + j] as i32;
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn quantized_matmul_tracks_float_matmul() {
+        let (m, k, n) = (8, 32, 16);
+        let mut rng = Pcg32::new(99);
+        let af: Vec<f32> = (0..m * k).map(|_| rng.next_f32() * 2.0).collect();
+        let bf: Vec<f32> = (0..k * n).map(|_| rng.next_f32() - 0.5).collect();
+        let (aq, apar) = quantize_slice_u8(&af);
+        let (bq, bpar) = quantize_slice_i8(&bf);
+        let cf = float_matmul(&af, &bf, m, k, n);
+        let (lo, hi) = (
+            cf.iter().cloned().fold(f32::INFINITY, f32::min),
+            cf.iter().cloned().fold(f32::NEG_INFINITY, f32::max),
+        );
+        let cpar = QParams::fit_u8(lo, hi);
+        let p = RequantParams::prepare(&aq, &bq, m, k, n, apar, bpar, cpar);
+        let c_temp = int_matmul(&aq, &bq, m, k, n);
+        let cq = requantize(&c_temp, m, n, &p);
+        // Dequantized output should match the float matmul to quantization noise.
+        let tol = cpar.alpha * 2.0 + 0.05 * (hi - lo);
+        for (idx, &q) in cq.iter().enumerate() {
+            let approx = cpar.dequantize_u8(q);
+            assert!(
+                (approx - cf[idx]).abs() < tol,
+                "idx={idx} approx={approx} exact={}",
+                cf[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn exclude_last_col_drops_checksum() {
+        let (m, k, n) = (3, 4, 5);
+        let mut rng = Pcg32::new(7);
+        let mut a = vec![0u8; m * k];
+        let mut b = vec![0i8; k * n];
+        rng.fill_u8(&mut a);
+        rng.fill_i8(&mut b);
+        let qp = QParams { alpha: 1.0, beta: 0.0 };
+        let p = RequantParams::prepare(&a, &b, m, k, n, qp, qp, QParams::fit_u8(-500.0, 500.0));
+        let c = int_matmul(&a, &b, m, k, n);
+        // Build m×(n+1) with junk checksum column.
+        let mut c_aug = vec![0i32; m * (n + 1)];
+        for i in 0..m {
+            c_aug[i * (n + 1)..i * (n + 1) + n].copy_from_slice(&c[i * n..(i + 1) * n]);
+            c_aug[i * (n + 1) + n] = 0x5A5A5A;
+        }
+        let plain = requantize(&c, m, n, &p);
+        let excl = requantize_exclude_last_col(&c_aug, m, n + 1, &p);
+        assert_eq!(plain, excl);
+    }
+
+    #[test]
+    fn real_value_matches_eq1_identity() {
+        // With alpha=1, beta=0 on both sides, real_value == c_temp.
+        let qp = QParams { alpha: 1.0, beta: 0.0 };
+        let p = RequantParams {
+            a: qp,
+            b: qp,
+            c: qp,
+            a_row_sums: vec![10],
+            b_col_sums: vec![20],
+            k: 4,
+        };
+        assert_eq!(p.real_value(42, 0, 0), 42.0);
+    }
+}

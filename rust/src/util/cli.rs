@@ -1,0 +1,131 @@
+//! Hand-rolled CLI parsing (clap is not in the offline crate set):
+//! `subcommand --flag value --flag value …`, typed flag extraction with
+//! defaults, and unknown-flag detection.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand + flag map.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub command: String,
+    flags: HashMap<String, String>,
+    /// Flags read via `get`/`flag` — used by `reject_unknown`.
+    seen: std::cell::RefCell<std::collections::HashSet<String>>,
+}
+
+impl Cli {
+    /// Parse `args` (without argv[0]).
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        let mut cli = Cli::default();
+        if args.is_empty() {
+            return Ok(cli);
+        }
+        if args[0].starts_with("--") {
+            bail!("expected a subcommand before flags, got {:?}", args[0]);
+        }
+        cli.command = args[0].clone();
+        let mut i = 1;
+        while i < args.len() {
+            let key = args[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {:?}", args[i]))?;
+            if key.is_empty() {
+                bail!("empty flag name");
+            }
+            let val = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+            if cli.flags.insert(key.to_string(), val.clone()).is_some() {
+                bail!("duplicate flag --{key}");
+            }
+            i += 2;
+        }
+        Ok(cli)
+    }
+
+    /// Typed flag with default.
+    pub fn flag<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        self.seen.borrow_mut().insert(key.to_string());
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("bad value for --{key}: {v:?}")),
+        }
+    }
+
+    /// Optional flag (no default).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.seen.borrow_mut().insert(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Error if any provided flag was never consumed (catches typos like
+    /// `--runz 10`). Call after all `flag`/`get` lookups.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&str> = self
+            .flags
+            .keys()
+            .filter(|k| !seen.contains(*k))
+            .map(|s| s.as_str())
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown flag(s): {}", unknown.join(", "));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let cli = Cli::parse(&args(&["serve", "--addr", "0.0.0.0:1", "--max-batch", "8"])).unwrap();
+        assert_eq!(cli.command, "serve");
+        assert_eq!(cli.get("addr"), Some("0.0.0.0:1"));
+        assert_eq!(cli.flag("max-batch", 0usize).unwrap(), 8);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let cli = Cli::parse(&args(&["bench"])).unwrap();
+        assert_eq!(cli.flag("runs", 100usize).unwrap(), 100);
+        assert!(cli.get("which").is_none());
+    }
+
+    #[test]
+    fn typed_parse_errors() {
+        let cli = Cli::parse(&args(&["x", "--n", "abc"])).unwrap();
+        assert!(cli.flag("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Cli::parse(&args(&["--flag-first", "v"])).is_err());
+        assert!(Cli::parse(&args(&["cmd", "loose"])).is_err());
+        assert!(Cli::parse(&args(&["cmd", "--dangling"])).is_err());
+        assert!(Cli::parse(&args(&["cmd", "--a", "1", "--a", "2"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let cli = Cli::parse(&args(&["cmd", "--known", "1", "--typo", "2"])).unwrap();
+        let _ = cli.flag("known", 0usize).unwrap();
+        let err = cli.reject_unknown().unwrap_err();
+        assert!(format!("{err}").contains("typo"));
+    }
+
+    #[test]
+    fn empty_args_ok() {
+        let cli = Cli::parse(&[]).unwrap();
+        assert_eq!(cli.command, "");
+    }
+}

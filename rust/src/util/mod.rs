@@ -1,0 +1,15 @@
+//! From-scratch infrastructure substrates (the offline crate set lacks
+//! rand/serde/tokio/rayon/criterion, so we provide our own).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Monotonic wall-clock timer helper.
+pub fn time_it<F: FnOnce()>(f: F) -> std::time::Duration {
+    let t0 = std::time::Instant::now();
+    f();
+    t0.elapsed()
+}

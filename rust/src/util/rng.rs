@@ -1,0 +1,326 @@
+//! From-scratch deterministic PRNG (PCG-XSH-RR 64/32 and SplitMix64).
+//!
+//! The offline crate set has no `rand`; every stochastic component in this
+//! repo (workload generators, fault injectors, property tests) draws from
+//! this module so campaigns are reproducible from a single `u64` seed.
+
+/// SplitMix64: used for seeding and as a cheap stream splitter.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSH-RR 64/32 — small, fast, statistically solid. Main generator.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub const DEFAULT_STREAM: u64 = 0xda3e_39cb_94b9_5bdb;
+
+    /// Seed with SplitMix64 expansion so nearby seeds give unrelated streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self::from_state(sm.next_u64(), sm.next_u64())
+    }
+
+    /// Derive an independent sub-stream (e.g. one per campaign run).
+    pub fn split(&mut self, stream: u64) -> Self {
+        let s = self.next_u64();
+        Self::from_state(s, stream.wrapping_mul(2).wrapping_add(1))
+    }
+
+    fn from_state(state: u64, inc: u64) -> Self {
+        let mut r = Self {
+            state: 0,
+            inc: (inc << 1) | 1,
+        };
+        r.next_u32();
+        r.state = r.state.wrapping_add(state);
+        r.next_u32();
+        r
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` without modulo bias (Lemire rejection).
+    #[inline]
+    pub fn gen_range_u32(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64).wrapping_mul(bound as u64);
+            let l = m as u32;
+            if l >= bound || l >= (bound.wrapping_neg() % bound) {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn gen_range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.gen_range_u32((hi - lo) as u32) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 random bits.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform u8 over the full range (paper's fault-model assumption for A).
+    #[inline]
+    pub fn next_u8(&mut self) -> u8 {
+        (self.next_u32() & 0xff) as u8
+    }
+
+    /// Uniform i8 over the full range.
+    #[inline]
+    pub fn next_i8(&mut self) -> i8 {
+        (self.next_u32() & 0xff) as u8 as i8
+    }
+
+    /// Fill a slice with uniform u8.
+    pub fn fill_u8(&mut self, buf: &mut [u8]) {
+        for b in buf {
+            *b = self.next_u8();
+        }
+    }
+
+    /// Fill a slice with uniform i8.
+    pub fn fill_i8(&mut self, buf: &mut [i8]) {
+        for b in buf {
+            *b = self.next_i8();
+        }
+    }
+
+    /// Standard normal via Box-Muller (used for synthetic float weights).
+    pub fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u = self.next_f64();
+            if u > 1e-12 {
+                let v = self.next_f64();
+                return (-2.0 * u.ln()).sqrt() * (2.0 * std::f64::consts::PI * v).cos();
+            }
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(0, i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `n` distinct indices from `[0, universe)` (partial Fisher-Yates
+    /// for dense draws, rejection for sparse).
+    pub fn sample_distinct(&mut self, universe: usize, n: usize) -> Vec<usize> {
+        assert!(n <= universe);
+        if n * 4 >= universe {
+            let mut all: Vec<usize> = (0..universe).collect();
+            for i in 0..n {
+                let j = self.gen_range(i, universe);
+                all.swap(i, j);
+            }
+            all.truncate(n);
+            all
+        } else {
+            let mut seen = std::collections::HashSet::with_capacity(n * 2);
+            let mut out = Vec::with_capacity(n);
+            while out.len() < n {
+                let x = self.gen_range(0, universe);
+                if seen.insert(x) {
+                    out.push(x);
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Zipfian sampler over `[0, n)` with exponent `s` — models the skewed
+/// embedding-access distributions of production CTR traffic.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for i in 1..=n {
+            acc += 1.0 / (i as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Self { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg32) -> usize {
+        let u = rng.next_f64();
+        match self
+            .cdf
+            .binary_search_by(|p| p.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let same = (0..100).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn range_bounds_respected() {
+        let mut r = Pcg32::new(7);
+        for _ in 0..10_000 {
+            let x = r.gen_range(3, 17);
+            assert!((3..17).contains(&x));
+        }
+    }
+
+    #[test]
+    fn range_covers_all_values() {
+        let mut r = Pcg32::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            seen[r.gen_range(0, 10)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Pcg32::new(3);
+        let mut sum = 0.0;
+        for _ in 0..100_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn u8_uniformity_chi_square_sane() {
+        let mut r = Pcg32::new(11);
+        let mut counts = [0u32; 256];
+        let n = 256 * 1000;
+        for _ in 0..n {
+            counts[r.next_u8() as usize] += 1;
+        }
+        let expected = (n / 256) as f64;
+        let chi2: f64 = counts
+            .iter()
+            .map(|&c| {
+                let d = c as f64 - expected;
+                d * d / expected
+            })
+            .sum();
+        // 255 dof: mean 255, sd ~22.6. Accept generous band.
+        assert!(chi2 > 150.0 && chi2 < 400.0, "chi2={chi2}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct() {
+        let mut r = Pcg32::new(5);
+        for &(u, n) in &[(100usize, 10usize), (100, 90), (1_000_000, 100)] {
+            let s = r.sample_distinct(u, n);
+            assert_eq!(s.len(), n);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), n);
+            assert!(s.iter().all(|&x| x < u));
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let z = Zipf::new(1000, 1.0);
+        let mut r = Pcg32::new(9);
+        let mut head = 0usize;
+        let n = 10_000;
+        for _ in 0..n {
+            if z.sample(&mut r) < 10 {
+                head += 1;
+            }
+        }
+        // top-1% of ids should hold far more than 1% of mass
+        assert!(head > n / 10, "head={head}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::new(13);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

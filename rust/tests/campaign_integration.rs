@@ -1,0 +1,58 @@
+//! Integration: scaled-down Table II / Table III campaigns land in the
+//! statistical bands the paper reports.
+
+use dlrm_abft::bench::figures::{run_table2, run_table3};
+use dlrm_abft::fault::campaign::{EbCampaignConfig, GemmCampaignConfig};
+use dlrm_abft::util::stats::wilson_interval;
+
+#[test]
+fn table2_bands() {
+    let cfg = GemmCampaignConfig {
+        // Keep the shapes small in the debug profile; the m mix matters
+        // (detection improves with m) so keep the paper's m values.
+        shapes: vec![(1, 128, 64), (50, 128, 64), (100, 64, 64), (150, 64, 32)],
+        runs_per_shape: 30,
+        ..Default::default()
+    };
+    let mut sink = Vec::new();
+    let r = run_table2(&cfg, 1, &mut sink);
+    // error-in-C: certain detection; no-error: zero FPs (integer exactness).
+    assert_eq!(r.error_in_c.not_detected, 0);
+    assert_eq!(r.no_error.detected, 0);
+    // error-in-B: paper 95.11%; analytic floor at m=1 is 96.9%+ mixing to
+    // ~100% for bigger m. Accept a generous Wilson band around 95%.
+    let (lo, _) = wilson_interval(r.error_in_b.detected, r.error_in_b.total(), 2.58);
+    assert!(lo > 0.85, "B-detection too low: {:?}", r.error_in_b);
+}
+
+#[test]
+fn table3_bands() {
+    let cfg = EbCampaignConfig {
+        table_rows: 50_000,
+        dim: 64,
+        ..Default::default()
+    };
+    let mut sink = Vec::new();
+    let r = run_table3(&cfg, 4, &mut sink); // 50/50/100 runs
+    // High-significance flips: paper 99.5%.
+    assert!(r.high_bits.rate() > 0.85, "{:?}", r.high_bits);
+    // Low-significance flips sit near the bound: partial detection (47%).
+    assert!(r.low_bits.rate() < 1.0, "{:?}", r.low_bits);
+    // False positives: paper 9.5% — must stay well below half.
+    assert!(r.no_error.rate() < 0.35, "{:?}", r.no_error);
+}
+
+#[test]
+fn table2_deterministic_given_seed() {
+    let cfg = GemmCampaignConfig {
+        shapes: vec![(4, 64, 32)],
+        runs_per_shape: 20,
+        ..Default::default()
+    };
+    let mut s1 = Vec::new();
+    let mut s2 = Vec::new();
+    let r1 = run_table2(&cfg, 1, &mut s1);
+    let r2 = run_table2(&cfg, 1, &mut s2);
+    assert_eq!(r1.error_in_b.detected, r2.error_in_b.detected);
+    assert_eq!(String::from_utf8(s1).unwrap(), String::from_utf8(s2).unwrap());
+}

@@ -1,0 +1,228 @@
+//! Property-based tests over the ABFT invariants, using a from-scratch
+//! mini-framework (proptest is not in the offline crate set): random cases
+//! from a seeded PCG stream; on failure the failing case parameters are in
+//! the panic message for direct reproduction.
+
+use dlrm_abft::abft::{encode_checksum_col, AbftGemm, EbChecksum};
+use dlrm_abft::embedding::{bag_sum_8, QuantTable8};
+use dlrm_abft::gemm::{gemm_naive, PackedB};
+use dlrm_abft::quant::{get_nibble, pack_nibbles, QParams};
+use dlrm_abft::util::rng::Pcg32;
+
+const CASES: usize = 60;
+
+/// Run `f` on `CASES` seeded random cases; panic messages carry the case id.
+fn forall(name: &str, mut f: impl FnMut(&mut Pcg32, usize)) {
+    for case in 0..CASES {
+        let mut rng = Pcg32::new(0x9E3779B9 ^ (case as u64) << 8 ^ name.len() as u64);
+        f(&mut rng, case);
+    }
+}
+
+fn rand_shape(rng: &mut Pcg32) -> (usize, usize, usize) {
+    (rng.gen_range(1, 12), rng.gen_range(1, 96), rng.gen_range(1, 64))
+}
+
+fn rand_ab(rng: &mut Pcg32, m: usize, k: usize, n: usize) -> (Vec<u8>, Vec<i8>) {
+    let mut a = vec![0u8; m * k];
+    let mut b = vec![0i8; k * n];
+    rng.fill_u8(&mut a);
+    rng.fill_i8(&mut b);
+    (a, b)
+}
+
+#[test]
+fn prop_packed_gemm_equals_naive() {
+    forall("packed=naive", |rng, case| {
+        let (m, k, n) = rand_shape(rng);
+        let (a, b) = rand_ab(rng, m, k, n);
+        let packed = PackedB::pack(&b, k, n);
+        assert_eq!(
+            dlrm_abft::gemm::gemm_exec(&a, &packed, m),
+            gemm_naive(&a, &b, m, k, n),
+            "case {case}: shape ({m},{k},{n})"
+        );
+    });
+}
+
+#[test]
+fn prop_clean_abft_never_false_positives() {
+    // Integer arithmetic has no round-off: clean runs must NEVER flag,
+    // for any shape and any odd modulus (§VI-B1's zero-FP claim).
+    forall("no-fp", |rng, case| {
+        let (m, k, n) = rand_shape(rng);
+        let (a, b) = rand_ab(rng, m, k, n);
+        let modulus = [127, 125, 63, 31, 3][rng.gen_range(0, 5)];
+        let abft = AbftGemm::with_modulus(&b, k, n, modulus);
+        let (_, verdict) = abft.exec(&a, m);
+        assert!(verdict.clean(), "case {case}: shape ({m},{k},{n}) mod {modulus}");
+    });
+}
+
+#[test]
+fn prop_any_nondivisible_delta_is_detected() {
+    // Inject an arbitrary delta into one payload element of C_temp: the
+    // row is flagged iff delta % modulus != 0 — exactly the paper's
+    // §IV-C detectability condition, both directions.
+    forall("delta-detect", |rng, case| {
+        let (m, k, n) = rand_shape(rng);
+        let (a, b) = rand_ab(rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let (mut c, _) = abft.exec(&a, m);
+        let row = rng.gen_range(0, m);
+        let col = rng.gen_range(0, n);
+        let delta = rng.next_u32() as i32 % 100_000;
+        if delta == 0 {
+            return;
+        }
+        c[row * (n + 1) + col] = c[row * (n + 1) + col].wrapping_add(delta);
+        let verdict = abft.verify(&c, m);
+        if delta % 127 == 0 {
+            assert!(verdict.clean(), "case {case}: delta {delta} divisible by 127 must escape");
+        } else {
+            assert_eq!(
+                verdict.corrupted_rows,
+                vec![row],
+                "case {case}: delta {delta} at ({row},{col}) shape ({m},{k},{n})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_checksum_col_congruent_to_rowsum() {
+    forall("congruence", |rng, case| {
+        let k = rng.gen_range(1, 64);
+        let n = rng.gen_range(1, 128);
+        let mut b = vec![0i8; k * n];
+        rng.fill_i8(&mut b);
+        let col = encode_checksum_col(&b, k, n, 127);
+        for p in 0..k {
+            let s: i32 = b[p * n..(p + 1) * n].iter().map(|&v| v as i32).sum();
+            assert_eq!(
+                (s - col[p] as i32) % 127,
+                0,
+                "case {case}: row {p} checksum not congruent"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_recompute_row_restores_exact_values() {
+    forall("recompute", |rng, case| {
+        let (m, k, n) = rand_shape(rng);
+        let (a, b) = rand_ab(rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let (mut c, _) = abft.exec(&a, m);
+        let clean = c.clone();
+        // Corrupt up to 3 elements of one row.
+        let row = rng.gen_range(0, m);
+        for _ in 0..rng.gen_range(1, 4) {
+            let col = rng.gen_range(0, n + 1);
+            c[row * (n + 1) + col] ^= 1 << rng.gen_range_u32(31);
+        }
+        abft.recompute_row(&a, row, &mut c, m);
+        assert_eq!(c, clean, "case {case}");
+    });
+}
+
+#[test]
+fn prop_quantize_dequantize_bounded_error() {
+    forall("quant-bound", |rng, case| {
+        let lo = rng.next_f32() * -10.0;
+        let hi = rng.next_f32() * 10.0 + lo + 0.1;
+        let qp = QParams::fit_u8(lo, hi);
+        for _ in 0..50 {
+            let x = lo + (hi - lo) * rng.next_f32();
+            let err = (qp.dequantize_u8(qp.quantize_u8(x)) - x).abs();
+            assert!(
+                err <= qp.alpha * 0.5 + 1e-5,
+                "case {case}: x={x} err={err} alpha={}",
+                qp.alpha
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_nibble_pack_roundtrip() {
+    forall("nibble", |rng, case| {
+        let len = rng.gen_range(0, 200);
+        let codes: Vec<u8> = (0..len).map(|_| rng.next_u8() & 0x0f).collect();
+        let packed = pack_nibbles(&codes);
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(get_nibble(&packed, i), c, "case {case}: idx {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_eb_checksum_flags_iff_delta_above_bound() {
+    // Perturb one output element by a known delta and check the Eq-5
+    // decision agrees with the bound arithmetic in both directions.
+    forall("eb-bound", |rng, case| {
+        let rows = rng.gen_range(50, 500);
+        let d = [16, 32, 64][rng.gen_range(0, 3)];
+        let table = QuantTable8::random(rows, d, rng);
+        let cs = EbChecksum::build_8(&table);
+        let m = rng.gen_range(5, 60);
+        let indices: Vec<usize> = (0..m).map(|_| rng.gen_range(0, rows)).collect();
+        let mut r = vec![0f32; d];
+        bag_sum_8(&table, &indices, None, false, &mut r);
+        assert!(
+            !cs.check_bag(&table.alpha, &table.beta, &indices, None, &r),
+            "case {case}: clean bag flagged"
+        );
+        // A delta 100× the bound must flag.
+        let rsum: f64 = r.iter().map(|&x| x as f64).sum();
+        let big = (rsum.abs().max(1.0) * 1e-3) as f32;
+        r[0] += big;
+        assert!(
+            cs.check_bag(&table.alpha, &table.beta, &indices, None, &r),
+            "case {case}: delta {big} not flagged (rsum={rsum})"
+        );
+    });
+}
+
+#[test]
+fn prop_eb_weighted_linearity() {
+    // Eq 5 with weights: scaling all weights by c scales both sides by c.
+    forall("eb-linear", |rng, case| {
+        let rows = 200;
+        let d = 24;
+        let table = QuantTable8::random(rows, d, rng);
+        let cs = EbChecksum::build_8(&table);
+        let m = rng.gen_range(3, 30);
+        let indices: Vec<usize> = (0..m).map(|_| rng.gen_range(0, rows)).collect();
+        let w1: Vec<f32> = (0..m).map(|_| rng.next_f32() + 0.1).collect();
+        let c = 2.5f32;
+        let w2: Vec<f32> = w1.iter().map(|&w| w * c).collect();
+        let s1 = cs.expected_sum(&table.alpha, &table.beta, &indices, Some(&w1));
+        let s2 = cs.expected_sum(&table.alpha, &table.beta, &indices, Some(&w2));
+        assert!(
+            (s2 - s1 * c as f64).abs() <= 1e-6 * s2.abs().max(1.0),
+            "case {case}: {s2} != {c} * {s1}"
+        );
+    });
+}
+
+#[test]
+fn prop_verdict_rows_sorted_and_unique() {
+    forall("verdict-shape", |rng, case| {
+        let (m, k, n) = rand_shape(rng);
+        let (a, b) = rand_ab(rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let (mut c, _) = abft.exec(&a, m);
+        for _ in 0..rng.gen_range(1, 6) {
+            let i = rng.gen_range(0, m * (n + 1));
+            c[i] ^= 1 << rng.gen_range_u32(31);
+        }
+        let v = abft.verify(&c, m);
+        let mut sorted = v.corrupted_rows.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(v.corrupted_rows, sorted, "case {case}");
+        assert!(v.corrupted_rows.iter().all(|&r| r < m), "case {case}");
+    });
+}

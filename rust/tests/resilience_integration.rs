@@ -1,0 +1,141 @@
+//! Integration: the full resilience loop — persistent memory corruption,
+//! request-path detection, background scrubbing, and repair from the
+//! CRC-protected model store.
+
+use dlrm_abft::abft::Scrubber;
+use dlrm_abft::coordinator::{Engine, ScoreRequest};
+use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
+use dlrm_abft::util::rng::Pcg32;
+use std::sync::atomic::Ordering;
+
+fn cfg() -> DlrmConfig {
+    DlrmConfig {
+        num_dense: 4,
+        embedding_dim: 16,
+        bottom_mlp: vec![32, 16],
+        top_mlp: vec![32],
+        tables: vec![TableConfig { rows: 3_000, pooling: 12 }; 2],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed: 77,
+    }
+}
+
+fn reqs(model: &DlrmModel, n: usize, seed: u64) -> Vec<ScoreRequest> {
+    let mut rng = Pcg32::new(seed);
+    model
+        .synth_requests(n, &mut rng)
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| ScoreRequest { id: i as u64, dense: r.dense, sparse: r.sparse })
+        .collect()
+}
+
+#[test]
+fn persistent_corruption_degrades_then_store_repair_recovers() {
+    let model = DlrmModel::random(cfg());
+    let store = std::env::temp_dir().join("resilience_it_store.dlrm");
+    model.save(&store).unwrap();
+    let requests = reqs(&model, 8, 1);
+
+    let engine = Engine::new(model);
+    let clean: Vec<f32> = engine
+        .process_batch(requests.clone())
+        .into_iter()
+        .map(|r| r.score)
+        .collect();
+    assert_eq!(engine.metrics.detections.load(Ordering::Relaxed), 0);
+
+    // Persistent corruption: smash the top bit of the first code of EVERY
+    // row of table 0 (hardware gone very wrong). Detection must fire, the
+    // recompute must re-read the same bad memory, and the response must be
+    // marked degraded.
+    {
+        let mut m = engine.model.lock().unwrap();
+        let d = m.cfg.embedding_dim;
+        for r in 0..m.tables[0].rows {
+            m.tables[0].data[r * d] ^= 0x80;
+        }
+    }
+    let resps = engine.process_batch(requests.clone());
+    assert!(resps.iter().all(|r| r.detected), "persistent corruption must be detected");
+    assert!(resps.iter().all(|r| r.recomputed));
+    assert!(resps.iter().all(|r| r.degraded), "recompute cannot fix memory corruption");
+
+    // Repair every corrupted row from the store (what an operator/agent
+    // would do on a degraded alert), then verify service recovers.
+    {
+        let pristine = DlrmModel::load(&store, Protection::DetectRecompute).unwrap();
+        let mut m = engine.model.lock().unwrap();
+        let d = m.cfg.embedding_dim;
+        let bad = Scrubber::full_pass(&m.tables[0], &m.checksums[0]);
+        assert_eq!(bad.len(), m.tables[0].rows, "scrubber must see every smashed row");
+        for row in bad {
+            let src = &pristine.tables[0].data[row * d..(row + 1) * d];
+            m.tables[0].data[row * d..(row + 1) * d].copy_from_slice(src);
+        }
+        assert!(Scrubber::full_pass(&m.tables[0], &m.checksums[0]).is_empty());
+    }
+    let healed: Vec<f32> = engine
+        .process_batch(requests)
+        .into_iter()
+        .map(|r| {
+            assert!(!r.detected);
+            r.score
+        })
+        .collect();
+    assert_eq!(healed, clean, "post-repair scores must match pre-corruption");
+    std::fs::remove_file(&store).ok();
+}
+
+#[test]
+fn scrub_tick_finds_cold_corruption_the_request_path_misses() {
+    let model = DlrmModel::random(cfg());
+    let engine = Engine::new(model).with_scrubbing(1000);
+
+    // Corrupt one cold row (never referenced by our requests: we'll only
+    // look up rows < 100, corrupt row 2999).
+    {
+        let mut m = engine.model.lock().unwrap();
+        let d = m.cfg.embedding_dim;
+        m.tables[1].data[2999 * d + 3] ^= 0x40;
+    }
+    // Requests that never touch the corrupted row: no request-path detection.
+    let mut rng = Pcg32::new(9);
+    let reqs: Vec<ScoreRequest> = (0..4)
+        .map(|i| ScoreRequest {
+            id: i,
+            dense: (0..4).map(|_| rng.next_f32()).collect(),
+            sparse: vec![
+                (0..12).map(|_| rng.gen_range(0, 100)).collect(),
+                (0..12).map(|_| rng.gen_range(0, 100)).collect(),
+            ],
+        })
+        .collect();
+    let resps = engine.process_batch(reqs);
+    assert!(resps.iter().all(|r| !r.detected), "cold corruption is invisible to requests");
+
+    // The scrubber, ticking through strips, finds it within one full pass.
+    let mut hits = Vec::new();
+    for _ in 0..3 {
+        // 3000 rows / 1000 stride
+        hits.extend(engine.scrub_tick());
+    }
+    assert_eq!(hits, vec![(1, 2999)]);
+    assert_eq!(engine.metrics.scrub_hits.load(Ordering::Relaxed), 1);
+    assert_eq!(engine.metrics.scrubbed_rows.load(Ordering::Relaxed), 2 * 3000);
+}
+
+#[test]
+fn snapshot_roundtrip_through_engine() {
+    let model = DlrmModel::random(cfg());
+    let store = std::env::temp_dir().join("resilience_it_engine.dlrm");
+    model.save(&store).unwrap();
+    let requests = reqs(&model, 5, 3);
+    let e1 = Engine::new(model);
+    let s1: Vec<f32> = e1.process_batch(requests.clone()).into_iter().map(|r| r.score).collect();
+    let e2 = Engine::new(DlrmModel::load(&store, Protection::DetectRecompute).unwrap());
+    let s2: Vec<f32> = e2.process_batch(requests).into_iter().map(|r| r.score).collect();
+    assert_eq!(s1, s2);
+    std::fs::remove_file(&store).ok();
+}

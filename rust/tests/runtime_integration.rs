@@ -1,0 +1,171 @@
+//! Integration: the PJRT runtime against the AOT artifacts — the rust
+//! native operators and the jax/Pallas-lowered computations must agree
+//! bit-for-bit on integers. Skips (with a loud message) if `make
+//! artifacts` has not run.
+
+use dlrm_abft::abft::AbftGemm;
+use dlrm_abft::runtime::{PjrtEngine, Tensor};
+use dlrm_abft::util::rng::Pcg32;
+
+// Shapes fixed by python/compile/aot.py.
+const M: usize = 16;
+const K: usize = 512;
+const N: usize = 512;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("abft_gemm.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn pallas_artifact_bit_identical_to_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = PjrtEngine::cpu().unwrap();
+    engine.load_hlo_text("abft_gemm", format!("{dir}/abft_gemm.hlo.txt")).unwrap();
+
+    let mut rng = Pcg32::new(0xBEEF);
+    let mut a = vec![0u8; M * K];
+    let mut b = vec![0i8; K * N];
+    rng.fill_u8(&mut a);
+    rng.fill_i8(&mut b);
+    let native = AbftGemm::new(&b, K, N);
+    let (c_native, verdict) = native.exec(&a, M);
+    assert!(verdict.clean());
+
+    let out = engine
+        .execute(
+            "abft_gemm",
+            &[
+                Tensor::U8(a, vec![M, K]),
+                Tensor::I8(native.packed.data().to_vec(), vec![K, N + 1]),
+            ],
+        )
+        .unwrap();
+    match (&out[0], &out[1]) {
+        (Tensor::I32(c, dims), Tensor::I32(res, _)) => {
+            assert_eq!(dims, &vec![M, N + 1]);
+            assert_eq!(c, &c_native, "Pallas artifact != native kernel");
+            assert!(res.iter().all(|&r| r == 0));
+        }
+        other => panic!("unexpected outputs {other:?}"),
+    }
+}
+
+#[test]
+fn pallas_artifact_detects_injected_fault() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = PjrtEngine::cpu().unwrap();
+    engine.load_hlo_text("abft_gemm", format!("{dir}/abft_gemm.hlo.txt")).unwrap();
+
+    let mut rng = Pcg32::new(0xFACE);
+    let mut a = vec![0u8; M * K];
+    let mut b = vec![0i8; K * N];
+    rng.fill_u8(&mut a);
+    rng.fill_i8(&mut b);
+    let native = AbftGemm::new(&b, K, N);
+    let mut b_enc = native.packed.data().to_vec();
+    // Flip a payload bit (avoid the checksum column, index n of each row).
+    let p = rng.gen_range(0, K);
+    let j = rng.gen_range(0, N);
+    b_enc[p * (N + 1) + j] = (b_enc[p * (N + 1) + j] as u8 ^ 0x08) as i8;
+
+    let out = engine
+        .execute(
+            "abft_gemm",
+            &[Tensor::U8(a, vec![M, K]), Tensor::I8(b_enc, vec![K, N + 1])],
+        )
+        .unwrap();
+    let Tensor::I32(res, _) = &out[1] else { panic!() };
+    let flagged = res.iter().filter(|&&r| r != 0).count();
+    assert!(flagged >= M - 2, "only {flagged}/{M} rows flagged");
+}
+
+#[test]
+fn eb_artifact_matches_native_bag() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = PjrtEngine::cpu().unwrap();
+    engine.load_hlo_text("eb_bag", format!("{dir}/eb_bag.hlo.txt")).unwrap();
+
+    // Shapes fixed by aot.py: rows=10_000, d=64, batch=10, pooling=100.
+    let (rows, d, batch, pooling) = (10_000usize, 64usize, 10usize, 100usize);
+    let mut rng = Pcg32::new(0xE8);
+    let table = dlrm_abft::embedding::QuantTable8::random(rows, d, &mut rng);
+    let c_t: Vec<i32> = (0..rows).map(|i| table.code_row_sum(i)).collect();
+    let indices: Vec<i32> = (0..batch * pooling)
+        .map(|_| rng.gen_range(0, rows) as i32)
+        .collect();
+
+    let out = engine
+        .execute(
+            "eb_bag",
+            &[
+                Tensor::U8(table.data.clone(), vec![rows, d]),
+                Tensor::F32(table.alpha.clone(), vec![rows]),
+                Tensor::F32(table.beta.clone(), vec![rows]),
+                Tensor::I32(c_t, vec![rows]),
+                Tensor::I32(indices.clone(), vec![batch, pooling]),
+            ],
+        )
+        .unwrap();
+    let Tensor::F32(result, dims) = &out[0] else { panic!() };
+    assert_eq!(dims, &vec![batch, d]);
+
+    // Native bags over the same indices.
+    for bagi in 0..batch {
+        let idx: Vec<usize> = indices[bagi * pooling..(bagi + 1) * pooling]
+            .iter()
+            .map(|&i| i as usize)
+            .collect();
+        let mut native = vec![0f32; d];
+        dlrm_abft::embedding::bag_sum_8(&table, &idx, None, false, &mut native);
+        for (x, y) in result[bagi * d..(bagi + 1) * d].iter().zip(&native) {
+            let tol = 1e-3 * (1.0 + y.abs());
+            assert!((x - y).abs() < tol, "bag {bagi}: {x} vs {y}");
+        }
+    }
+
+    // Fused checksum sides agree with the native policy: clean → no flags.
+    let (Tensor::F32(rsum, _), Tensor::F32(csum, _)) = (&out[1], &out[2]) else { panic!() };
+    for b in 0..batch {
+        let scale = rsum[b].abs().max(csum[b].abs()).max(1.0);
+        assert!((rsum[b] - csum[b]).abs() <= 1e-5 * scale, "bag {b} flagged clean");
+    }
+}
+
+#[test]
+fn model_artifacts_serve_scores() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = PjrtEngine::cpu().unwrap();
+    let loaded = engine.load_artifact_dir(&dir).unwrap();
+    assert!(loaded.iter().any(|n| n == "model_b1"));
+    assert!(loaded.iter().any(|n| n == "model_b8"));
+
+    let mut rng = Pcg32::new(0xD1);
+    for (name, batch) in [("model_b1", 1usize), ("model_b8", 8usize)] {
+        let dense: Vec<f32> = (0..batch * 8).map(|_| rng.next_f32()).collect();
+        let indices: Vec<i32> = (0..batch * 2 * 20)
+            .map(|_| rng.gen_range(0, 5000) as i32)
+            .collect();
+        let out = engine
+            .execute(
+                name,
+                &[
+                    Tensor::F32(dense, vec![batch, 8]),
+                    Tensor::I32(indices, vec![batch, 2, 20]),
+                ],
+            )
+            .unwrap();
+        let Tensor::F32(scores, _) = &out[0] else { panic!() };
+        assert_eq!(scores.len(), batch);
+        assert!(scores.iter().all(|s| (0.0..=1.0).contains(s)));
+        let Tensor::I32(gemm_bad, _) = &out[1] else { panic!() };
+        let Tensor::I32(eb_flagged, _) = &out[2] else { panic!() };
+        assert_eq!(gemm_bad[0], 0, "{name} clean run flagged GEMM rows");
+        assert_eq!(eb_flagged[0], 0, "{name} clean run flagged EB bags");
+    }
+}

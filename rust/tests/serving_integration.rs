@@ -1,0 +1,166 @@
+//! Integration: the full serving stack — TCP server, dynamic batcher,
+//! engine with ABFT policy — under clean traffic and under chaos.
+
+use dlrm_abft::coordinator::{
+    BatchPolicy, ChaosConfig, Client, Engine, ScoreRequest, Server,
+};
+use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
+use dlrm_abft::util::json::Json;
+use dlrm_abft::util::rng::Pcg32;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn cfg(protection: Protection) -> DlrmConfig {
+    DlrmConfig {
+        num_dense: 6,
+        embedding_dim: 16,
+        bottom_mlp: vec![32, 16],
+        top_mlp: vec![32],
+        tables: vec![
+            TableConfig { rows: 2_000, pooling: 10 },
+            TableConfig { rows: 1_000, pooling: 5 },
+        ],
+        protection,
+        dense_range: (0.0, 1.0),
+        seed: 21,
+    }
+}
+
+fn requests(model: &DlrmModel, n: usize, seed: u64) -> Vec<ScoreRequest> {
+    let mut rng = Pcg32::new(seed);
+    model
+        .synth_requests(n, &mut rng)
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| ScoreRequest { id: i as u64, dense: r.dense, sparse: r.sparse })
+        .collect()
+}
+
+fn policy() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        max_queue: 256,
+    }
+}
+
+#[test]
+fn clean_traffic_end_to_end() {
+    let model = DlrmModel::random(cfg(Protection::DetectRecompute));
+    let reqs = requests(&model, 20, 1);
+    let engine = Arc::new(Engine::new(model));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&engine), policy()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+    for req in &reqs {
+        let resp = client.score(req).unwrap();
+        assert_eq!(resp.id, req.id);
+        assert!((0.0..=1.0).contains(&resp.score));
+        assert!(!resp.detected);
+    }
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("requests").and_then(Json::as_usize), Some(20));
+    assert_eq!(m.get("detections").and_then(Json::as_usize), Some(0));
+    server.stop();
+}
+
+#[test]
+fn chaos_traffic_detected_recovered_and_scores_match_clean() {
+    // Serve the same requests through a clean engine and a chaos engine:
+    // every response must match (transient faults repaired before reply).
+    let clean_model = DlrmModel::random(cfg(Protection::DetectRecompute));
+    let reqs = requests(&clean_model, 12, 2);
+    let clean_engine = Engine::new(clean_model);
+    let clean_scores: Vec<f32> = clean_engine
+        .process_batch(reqs.clone())
+        .into_iter()
+        .map(|r| r.score)
+        .collect();
+
+    let chaos_engine = Arc::new(Engine::with_chaos(
+        DlrmModel::random(cfg(Protection::DetectRecompute)),
+        ChaosConfig { p_weight_flip: 1.0, p_table_flip: 0.0, seed: 5 },
+    ));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&chaos_engine), policy()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+    let mut any_detected = false;
+    let mut mismatches = 0usize;
+    let mut total = 0usize;
+    for _round in 0..5 {
+        for (req, &clean) in reqs.iter().zip(&clean_scores) {
+            let resp = client.score(req).unwrap();
+            total += 1;
+            if resp.score != clean {
+                // ABFT's guarantee is probabilistic (~95% for B errors,
+                // §IV-C): a flip whose row-sum delta ≡ 0 (mod 127) can
+                // escape and alter a score. It must stay rare.
+                mismatches += 1;
+            } else if resp.detected {
+                assert!(!resp.degraded, "transient fault must recover");
+            }
+            any_detected |= resp.detected;
+        }
+    }
+    assert!(any_detected, "p=1.0 weight chaos never detected");
+    assert!(
+        mismatches * 10 < total,
+        "undetected-escape rate too high: {mismatches}/{total}"
+    );
+    let det = chaos_engine
+        .metrics
+        .detections
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(det > 0);
+    server.stop();
+}
+
+#[test]
+fn unprotected_engine_under_chaos_shows_why_abft_matters() {
+    // The negative control: with Protection::Off the chaos flips go
+    // unnoticed — detections stay zero even though outputs may be wrong.
+    let engine = Arc::new(Engine::with_chaos(
+        DlrmModel::random(cfg(Protection::Off)),
+        ChaosConfig { p_weight_flip: 1.0, p_table_flip: 0.5, seed: 9 },
+    ));
+    let model_for_reqs = DlrmModel::random(cfg(Protection::Off));
+    let reqs = requests(&model_for_reqs, 10, 3);
+    let resps = engine.process_batch(reqs);
+    assert!(resps.iter().all(|r| !r.detected));
+    assert_eq!(
+        engine.metrics.detections.load(std::sync::atomic::Ordering::Relaxed),
+        0
+    );
+}
+
+#[test]
+fn backpressure_overload_reports_error() {
+    let model = DlrmModel::random(cfg(Protection::Detect));
+    let engine = Arc::new(Engine::new(model));
+    let tight = BatchPolicy {
+        max_batch: 2,
+        max_wait: Duration::from_millis(50),
+        max_queue: 1,
+    };
+    let server = Server::start("127.0.0.1:0", engine, tight).unwrap();
+    // Flood from several threads; at least everything terminates and the
+    // server stays alive (responses are either scores or "overloaded").
+    let model2 = DlrmModel::random(cfg(Protection::Detect));
+    let reqs = requests(&model2, 8, 4);
+    let addr = server.addr;
+    let handles: Vec<_> = reqs
+        .into_iter()
+        .map(|req| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                c.score(&req).is_ok()
+            })
+        })
+        .collect();
+    let mut oks = 0;
+    for h in handles {
+        if h.join().unwrap() {
+            oks += 1;
+        }
+    }
+    assert!(oks >= 1, "at least some requests must be served");
+    server.stop();
+}
