@@ -1,0 +1,282 @@
+//! Hot-path perf harness for the SIMD + parallel PR: emits
+//! `BENCH_PR1.json` so the bench trajectory is machine-readable across
+//! PRs. Covers:
+//!
+//! * GEMM — DLRM shapes (m ∈ {1, 16}, k,n ∈ 256–1024): scalar vs
+//!   single-thread SIMD vs auto (SIMD + row-parallel), GFLOP/s and GB/s,
+//!   and ABFT-on overhead % (checksum column + row verification).
+//! * EmbeddingBag — scalar vs SIMD bags/s, bag-parallel batch, and
+//!   fused-ABFT overhead %.
+//! * Engine — end-to-end req/s at 1/4/8 concurrent caller threads with
+//!   ABFT on and off (the RwLock read path is what lets this scale).
+//!
+//! Env: `QUICK=1` shrinks iteration counts; `BENCH_OUT=path` overrides
+//! the output file. Run: `cargo bench --bench perf_hotpath`.
+
+use dlrm_abft::abft::{AbftGemm, EbChecksum};
+use dlrm_abft::bench::harness::{measure, overhead_pct, BenchConfig};
+use dlrm_abft::coordinator::{Engine, ScoreRequest};
+use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
+use dlrm_abft::embedding::{bag_sum_8, bag_sum_8_scalar, embedding_bag_8, QuantTable8};
+use dlrm_abft::gemm::{
+    gemm_exec_into, gemm_exec_into_scalar, gemm_exec_into_st, simd_active, PackedB,
+};
+use dlrm_abft::util::json::Json;
+use dlrm_abft::util::rng::Pcg32;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+fn gemm_section(cfg: &BenchConfig, rng: &mut Pcg32) -> Json {
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 256, 256),
+        (1, 512, 512),
+        (1, 1024, 1024),
+        (16, 256, 256),
+        (16, 512, 512),
+        (16, 1024, 1024),
+    ];
+    let mut rows = Vec::new();
+    for &(m, k, n) in shapes {
+        let mut a = vec![0u8; m * k];
+        let mut b = vec![0i8; k * n];
+        rng.fill_u8(&mut a);
+        rng.fill_i8(&mut b);
+        let packed = PackedB::pack(&b, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let mut c = vec![0i32; m * n];
+        let mut c_abft = vec![0i32; m * (n + 1)];
+
+        let scalar = measure(cfg, || {}, || gemm_exec_into_scalar(&a, &packed, m, &mut c));
+        let simd_st = measure(cfg, || {}, || gemm_exec_into_st(&a, &packed, m, &mut c));
+        let auto = measure(cfg, || {}, || gemm_exec_into(&a, &packed, m, &mut c));
+        let abft_auto = measure(cfg, || {}, || {
+            let verdict = abft.exec_into(&a, m, &mut c_abft);
+            std::hint::black_box(verdict.clean());
+        });
+
+        let flops = 2.0 * (m * k * n) as f64;
+        let bytes = (m * k + k * n + 4 * m * n) as f64;
+        let t_simd = simd_st.median();
+        let t_auto = auto.median();
+        rows.push(Json::obj(vec![
+            ("m", num(m as f64)),
+            ("k", num(k as f64)),
+            ("n", num(n as f64)),
+            ("scalar_st_us", num(round3(scalar.median() * 1e6))),
+            ("simd_st_us", num(round3(t_simd * 1e6))),
+            ("auto_us", num(round3(t_auto * 1e6))),
+            ("speedup_simd_st", num(round3(scalar.median() / t_simd))),
+            ("speedup_auto", num(round3(scalar.median() / t_auto))),
+            ("gflops_simd_st", num(round3(flops / t_simd / 1e9))),
+            ("gflops_auto", num(round3(flops / t_auto / 1e9))),
+            ("gbs_simd_st", num(round3(bytes / t_simd / 1e9))),
+            ("abft_overhead_pct", num(round3(overhead_pct(&auto, &abft_auto)))),
+        ]));
+    }
+    Json::Arr(rows)
+}
+
+fn eb_section(cfg: &BenchConfig, rng: &mut Pcg32, quick: bool) -> Json {
+    let rows = if quick { 50_000 } else { 400_000 };
+    let (d, pooling, batch) = (64usize, 100usize, 256usize);
+    let table = QuantTable8::random(rows, d, rng);
+    let cs = EbChecksum::build_8(&table);
+    let fused = cs.clone().fuse(&table);
+    let indices: Vec<usize> = (0..batch * pooling).map(|_| rng.gen_range(0, rows)).collect();
+    let offsets: Vec<usize> = (0..batch).map(|b| b * pooling).collect();
+    let mut out = vec![0f32; d];
+
+    let scalar = measure(cfg, || {}, || {
+        for b in 0..batch {
+            bag_sum_8_scalar(
+                &table,
+                &indices[b * pooling..(b + 1) * pooling],
+                None,
+                true,
+                &mut out,
+            );
+        }
+    });
+    let simd = measure(cfg, || {}, || {
+        for b in 0..batch {
+            bag_sum_8(
+                &table,
+                &indices[b * pooling..(b + 1) * pooling],
+                None,
+                true,
+                &mut out,
+            );
+        }
+    });
+    let parallel = measure(cfg, || {}, || {
+        std::hint::black_box(embedding_bag_8(&table, &indices, &offsets, None, true));
+    });
+    let fused_abft = measure(cfg, || {}, || {
+        for b in 0..batch {
+            let flag = fused.bag_sum_checked(
+                &table,
+                &indices[b * pooling..(b + 1) * pooling],
+                None,
+                true,
+                &mut out,
+            );
+            std::hint::black_box(flag);
+        }
+    });
+
+    let bags = batch as f64;
+    Json::obj(vec![
+        ("rows", num(rows as f64)),
+        ("d", num(d as f64)),
+        ("pooling", num(pooling as f64)),
+        ("batch", num(bags)),
+        ("scalar_bags_per_s", num(round3(bags / scalar.median()))),
+        ("simd_bags_per_s", num(round3(bags / simd.median()))),
+        ("parallel_bags_per_s", num(round3(bags / parallel.median()))),
+        ("speedup_simd", num(round3(scalar.median() / simd.median()))),
+        (
+            "speedup_parallel",
+            num(round3(scalar.median() / parallel.median())),
+        ),
+        (
+            "abft_on_overhead_pct",
+            num(round3(overhead_pct(&simd, &fused_abft))),
+        ),
+    ])
+}
+
+/// Per-batch work deliberately below the kernel-parallel thresholds so
+/// the 1→4→8 scaling isolates the RwLock read path (lock-free serving),
+/// not nested operator parallelism.
+fn engine_model(protection: Protection) -> DlrmModel {
+    DlrmModel::random(DlrmConfig {
+        num_dense: 13,
+        embedding_dim: 64,
+        bottom_mlp: vec![128, 64],
+        top_mlp: vec![128],
+        tables: vec![TableConfig { rows: 50_000, pooling: 20 }; 4],
+        protection,
+        dense_range: (0.0, 1.0),
+        seed: 0xE11,
+    })
+}
+
+fn engine_req_per_s(engine: &Arc<Engine>, threads: usize, iters: usize, batch: usize) -> f64 {
+    let reqs: Vec<Vec<ScoreRequest>> = (0..threads)
+        .map(|t| {
+            let model = engine.model.read().unwrap();
+            let mut rng = Pcg32::new(0x7000 + t as u64);
+            model
+                .synth_requests(batch, &mut rng)
+                .into_iter()
+                .enumerate()
+                .map(|(i, r)| ScoreRequest { id: i as u64, dense: r.dense, sparse: r.sparse })
+                .collect()
+        })
+        .collect();
+    // Warmup.
+    engine.process_batch(reqs[0].clone());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for tr in &reqs {
+            s.spawn(move || {
+                for _ in 0..iters {
+                    std::hint::black_box(engine.process_batch(tr.clone()));
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    (threads * iters * batch) as f64 / wall
+}
+
+fn engine_section(quick: bool) -> Json {
+    let iters = if quick { 6 } else { 30 };
+    let batch = 16;
+    let mut rows = Vec::new();
+    let on = Arc::new(Engine::new(engine_model(Protection::DetectRecompute)));
+    let off = Arc::new(Engine::new(engine_model(Protection::Off)));
+    let mut one_thread = 0.0;
+    let mut four_thread = 0.0;
+    for threads in [1usize, 4, 8] {
+        let abft = engine_req_per_s(&on, threads, iters, batch);
+        let plain = engine_req_per_s(&off, threads, iters, batch);
+        if threads == 1 {
+            one_thread = abft;
+        }
+        if threads == 4 {
+            four_thread = abft;
+        }
+        rows.push(Json::obj(vec![
+            ("threads", num(threads as f64)),
+            ("abft_req_per_s", num(round3(abft))),
+            ("noabft_req_per_s", num(round3(plain))),
+            (
+                "abft_overhead_pct",
+                num(round3((plain / abft - 1.0) * 100.0)),
+            ),
+        ]));
+    }
+    Json::obj(vec![
+        ("batch", num(batch as f64)),
+        ("iters_per_thread", num(iters as f64)),
+        ("by_threads", Json::Arr(rows)),
+        ("scaling_1_to_4", {
+            let s = if one_thread > 0.0 {
+                four_thread / one_thread
+            } else {
+                0.0
+            };
+            num(round3(s))
+        }),
+    ])
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick");
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_PR1.json".into());
+    let cfg = if quick {
+        BenchConfig { warmup_iters: 1, sample_iters: 3, inner_reps: 1 }
+    } else {
+        BenchConfig { warmup_iters: 3, sample_iters: 11, inner_reps: 1 }
+    };
+    let mut rng = Pcg32::new(0xB16B00);
+
+    eprintln!("perf_hotpath: avx2={} quick={quick}", simd_active());
+    let gemm = gemm_section(&cfg, &mut rng);
+    eprintln!("perf_hotpath: gemm done");
+    let eb = eb_section(&cfg, &mut rng, quick);
+    eprintln!("perf_hotpath: eb done");
+    let engine = engine_section(quick);
+    eprintln!("perf_hotpath: engine done");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_hotpath_pr1".into())),
+        (
+            "host",
+            Json::obj(vec![
+                ("avx2", Json::Bool(simd_active())),
+                (
+                    "threads",
+                    num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0) as f64),
+                ),
+            ]),
+        ),
+        ("gemm", gemm),
+        ("eb", eb),
+        ("engine", engine),
+    ]);
+    let text = format!("{doc}");
+    std::fs::write(&out_path, &text).expect("write bench output");
+    println!("{text}");
+    eprintln!("perf_hotpath: wrote {out_path}");
+}

@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     let (c_native, verdict) = native.exec(&a, M);
     assert!(verdict.clean());
 
-    let b_enc = native.packed.data().to_vec(); // k×(n+1), checksum packed in
+    let b_enc = native.packed.to_row_major(); // k×(n+1), checksum packed in
     let out = engine.execute(
         "abft_gemm",
         &[

@@ -223,6 +223,12 @@ impl FusedEbAbft {
 
     /// Fused protected bag: gather + reduce + Eq-5 verification in one
     /// pass. Returns `true` if the bag is flagged. `out` is zeroed first.
+    ///
+    /// The dequant-accumulate uses the same 8-wide AVX2 helper as the
+    /// unprotected [`crate::embedding::bag_sum_8`] (bit-identical to
+    /// scalar), and the CSum side keeps accumulating in the same gather
+    /// pass while the (α, β, C_T) record is hot — the protected bag
+    /// issues no extra sweep over the index list.
     pub fn bag_sum_checked(
         &self,
         table: &QuantTable8,
@@ -238,6 +244,7 @@ impl FusedEbAbft {
         if let Some(w) = weights {
             assert_eq!(w.len(), indices.len());
         }
+        let row_accum = crate::embedding::bag::select_axpb();
         let mut csum = 0f64;
         for (pos, &idx) in indices.iter().enumerate() {
             assert!(idx < table.rows, "index {idx} out of range");
@@ -254,10 +261,7 @@ impl FusedEbAbft {
             let b = m.beta * w;
             // CSum rides along while the meta record is in register.
             csum += (a * m.c_t as f32 + d as f32 * b) as f64;
-            let row = table.row(idx);
-            for (o, &q) in out.iter_mut().zip(row) {
-                *o += a * q as f32 + b;
-            }
+            row_accum(out, table.row(idx), a, b);
         }
         let rsum: f64 = out.iter().map(|&x| x as f64).sum();
         let scale = rsum.abs().max(csum.abs()).max(1.0);

@@ -9,6 +9,7 @@
 //! call and m is small); it lives here as the correction-capable upgrade
 //! path (paper §VII future work) and as an ablation arm.
 
+use crate::gemm::packed::NR;
 use crate::gemm::{gemm_exec, PackedB};
 
 /// Where the correction equations can repair from.
@@ -83,17 +84,34 @@ impl FullAbftGemm {
                 s_a[p] += arow[p] as i64;
             }
         }
+        // Sweep B panel-contiguously (mirrors the kernel's pair-block
+        // walk — no row-major shadow copy, no per-element offset math).
         let mut col_expected = vec![0i64; n];
         let data = self.packed_b.data();
-        for p in 0..k {
-            let sa = s_a[p];
-            if sa == 0 {
-                continue;
+        let kp = k & !1;
+        let mut j0 = 0usize;
+        while j0 < n {
+            let w = NR.min(n - j0);
+            let base = j0 * k;
+            let cols = &mut col_expected[j0..j0 + w];
+            for pp in 0..kp / 2 {
+                let (sa0, sa1) = (s_a[2 * pp], s_a[2 * pp + 1]);
+                if sa0 == 0 && sa1 == 0 {
+                    continue;
+                }
+                let blk = &data[base + pp * 2 * w..base + (pp + 1) * 2 * w];
+                for (c, slot) in cols.iter_mut().enumerate() {
+                    *slot += sa0 * blk[2 * c] as i64 + sa1 * blk[2 * c + 1] as i64;
+                }
             }
-            let brow = &data[p * n..(p + 1) * n];
-            for (j, &bv) in brow.iter().enumerate() {
-                col_expected[j] += sa * bv as i64;
+            if k % 2 == 1 && s_a[k - 1] != 0 {
+                let sa = s_a[k - 1];
+                let blk = &data[base + kp * w..base + kp * w + w];
+                for (slot, &bv) in cols.iter_mut().zip(blk) {
+                    *slot += sa * bv as i64;
+                }
             }
+            j0 += w;
         }
         FullChecksums {
             row_expected,

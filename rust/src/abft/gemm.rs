@@ -133,14 +133,9 @@ impl AbftGemm {
         assert!(row < m);
         let arow = &a[row * self.k..(row + 1) * self.k];
         let out = &mut c_temp[row * nt..(row + 1) * nt];
-        out.fill(0);
-        for p in 0..self.k {
-            let av = arow[p] as i32;
-            let brow_start = p * nt;
-            for j in 0..nt {
-                out[j] += av * self.packed.data[brow_start + j] as i32;
-            }
-        }
+        // One-row GEMM through the production kernel: same panel layout,
+        // same bit-exact result as the original computation.
+        crate::gemm::gemm_exec_into_scalar(arow, &self.packed, 1, out);
     }
 
     /// Theoretical FLOP overhead of encode+verify for one GEMM of shape

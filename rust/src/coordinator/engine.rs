@@ -2,14 +2,21 @@
 //! (verify → recompute-once → flag-degraded), metrics, and an optional
 //! chaos injector that exercises the whole detection path in production
 //! shape (the §VI methodology, online).
+//!
+//! Concurrency: inference is read-only, so the model sits behind an
+//! `RwLock` and clean-path batches run under a **shared** read lock —
+//! any number of threads can score concurrently (the old model-wide
+//! `Mutex` serialized every request; see BENCH_PR1's 1→4→8 thread
+//! scaling). The write lock is taken only by mutators: chaos
+//! inject/undo drills and operator repairs (tests/CLI).
 
 use crate::abft::Scrubber;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ScoreRequest, ScoreResponse};
-use crate::dlrm::{DlrmModel, DlrmRequest, Protection};
+use crate::dlrm::{DlrmModel, DlrmRequest, InferenceReport, Protection};
 use crate::util::rng::Pcg32;
 use std::sync::atomic::Ordering;
-use std::sync::Mutex;
+use std::sync::{Mutex, RwLock};
 use std::time::Instant;
 
 /// Online fault injection for resilience drills.
@@ -39,8 +46,26 @@ enum ChaosUndo {
     Table { table: usize, idx: usize, old: u8 },
 }
 
+/// One batch's injection sites, drawn atomically (a single chaos-mutex
+/// session) so seeded drills stay reproducible under concurrent callers.
+#[derive(Default)]
+struct ChaosPlan {
+    /// (layer, p, j, bit)
+    weight: Option<(usize, usize, usize, u32)>,
+    /// (table, byte index, bit)
+    table: Option<(usize, usize, u32)>,
+}
+
+impl ChaosPlan {
+    fn is_empty(&self) -> bool {
+        self.weight.is_none() && self.table.is_none()
+    }
+}
+
 pub struct Engine {
-    pub model: Mutex<DlrmModel>,
+    /// Read-mostly: shared read lock for inference, write lock only for
+    /// chaos injection/undo and repair writes.
+    pub model: RwLock<DlrmModel>,
     pub metrics: Metrics,
     chaos: Option<Mutex<(ChaosConfig, Pcg32)>>,
     /// Background table scrubbers (one per table), advanced between
@@ -52,7 +77,7 @@ pub struct Engine {
 impl Engine {
     pub fn new(model: DlrmModel) -> Self {
         Self {
-            model: Mutex::new(model),
+            model: RwLock::new(model),
             metrics: Metrics::new(),
             chaos: None,
             scrubbers: None,
@@ -62,7 +87,7 @@ impl Engine {
     pub fn with_chaos(model: DlrmModel, chaos: ChaosConfig) -> Self {
         let rng = Pcg32::new(chaos.seed);
         Self {
-            model: Mutex::new(model),
+            model: RwLock::new(model),
             metrics: Metrics::new(),
             chaos: Some(Mutex::new((chaos, rng))),
             scrubbers: None,
@@ -71,7 +96,7 @@ impl Engine {
 
     /// Enable background scrubbing, `stride` rows per table per tick.
     pub fn with_scrubbing(mut self, stride: usize) -> Self {
-        let n = self.model.lock().unwrap().tables.len();
+        let n = self.model.read().unwrap().tables.len();
         self.scrubbers = Some(Mutex::new((0..n).map(|_| Scrubber::new(stride)).collect()));
         self
     }
@@ -83,7 +108,9 @@ impl Engine {
         let Some(scrubbers) = &self.scrubbers else {
             return Vec::new();
         };
-        let model = self.model.lock().unwrap();
+        // Scrubbing only reads table bytes; a shared lock keeps it off
+        // the serving path's critical section.
+        let model = self.model.read().unwrap();
         let mut scrubbers = scrubbers.lock().unwrap();
         let mut hits = Vec::new();
         for (t, (table, checksum)) in model.tables.iter().zip(&model.checksums).enumerate() {
@@ -101,42 +128,21 @@ impl Engine {
 
     /// Serve one batch: forward → on detection, restore-chaos + recompute
     /// once → respond, with per-request latency stamped.
+    ///
+    /// Clean-path batches run under a shared read lock, so concurrent
+    /// callers execute in parallel; only chaos drills take the write lock
+    /// (injection mutates the model transiently).
     pub fn process_batch(&self, requests: Vec<ScoreRequest>) -> Vec<ScoreResponse> {
         let t0 = Instant::now();
         let ids: Vec<u64> = requests.iter().map(|r| r.id).collect();
         let dlrm_reqs: Vec<DlrmRequest> =
             requests.into_iter().map(ScoreRequest::into_dlrm).collect();
 
-        let mut model = self.model.lock().unwrap();
-        let undo = self.maybe_inject(&mut model);
-
-        let (mut scores, report) = model.forward(&dlrm_reqs);
-        let detected = !report.clean();
-        let mut recomputed = false;
-        let mut degraded = false;
-
-        if detected {
-            self.metrics.detections.fetch_add(
-                (report.gemm.rows_flagged + report.eb_bags_flagged) as u64,
-                Ordering::Relaxed,
-            );
-            // Restore transient chaos before the retry (a transient fault
-            // would not recur on real hardware either).
-            Self::undo_chaos(&mut model, &undo);
-            if model.cfg.protection == Protection::DetectRecompute {
-                let (scores2, report2) = model.forward(&dlrm_reqs);
-                scores = scores2;
-                recomputed = true;
-                self.metrics.recomputes.fetch_add(1, Ordering::Relaxed);
-                if !report2.clean() {
-                    degraded = true;
-                    self.metrics.degraded.fetch_add(1, Ordering::Relaxed);
-                }
-            }
+        let (scores, detected, recomputed, degraded) = if self.chaos.is_some() {
+            self.run_batch_chaos(&dlrm_reqs)
         } else {
-            Self::undo_chaos(&mut model, &undo);
-        }
-        drop(model);
+            self.run_batch_clean(&dlrm_reqs)
+        };
 
         let latency_us = t0.elapsed().as_micros() as u64;
         self.metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -158,33 +164,118 @@ impl Engine {
             .collect()
     }
 
-    fn maybe_inject(&self, model: &mut DlrmModel) -> Vec<ChaosUndo> {
+    /// Lock-free-read serving path: forward (and recompute-on-detect)
+    /// under a shared lock.
+    fn run_batch_clean(&self, dlrm_reqs: &[DlrmRequest]) -> (Vec<f32>, bool, bool, bool) {
+        let model = self.model.read().unwrap();
+        let (scores, report) = model.forward(dlrm_reqs);
+        self.apply_detection_policy(&model, dlrm_reqs, scores, &report)
+    }
+
+    /// Shared detect → recompute-once → flag-degraded policy (with the
+    /// metrics accounting), applied after a batch's first forward. The
+    /// caller still holds its model lock, so the retry sees the same
+    /// (restored, for chaos) operands.
+    fn apply_detection_policy(
+        &self,
+        model: &DlrmModel,
+        dlrm_reqs: &[DlrmRequest],
+        mut scores: Vec<f32>,
+        report: &InferenceReport,
+    ) -> (Vec<f32>, bool, bool, bool) {
+        let detected = !report.clean();
+        let mut recomputed = false;
+        let mut degraded = false;
+        if detected {
+            self.metrics.detections.fetch_add(
+                (report.gemm.rows_flagged + report.eb_bags_flagged) as u64,
+                Ordering::Relaxed,
+            );
+            if model.cfg.protection == Protection::DetectRecompute {
+                let (scores2, report2) = model.forward(dlrm_reqs);
+                scores = scores2;
+                recomputed = true;
+                self.metrics.recomputes.fetch_add(1, Ordering::Relaxed);
+                if !report2.clean() {
+                    degraded = true;
+                    self.metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        (scores, detected, recomputed, degraded)
+    }
+
+    /// Chaos-drill path. All of a batch's RNG draws — the dice AND the
+    /// fault coordinates — happen in one chaos-mutex session (reading
+    /// model shapes under the shared lock), so seeded drills stay
+    /// reproducible even with concurrent callers interleaving. The
+    /// overwhelming majority of batches (at production-shape flip
+    /// probabilities) draw an empty plan and serve on the shared read
+    /// path like any clean batch; only a batch that actually mutates
+    /// operands takes the write lock, for the whole inject → forward →
+    /// restore window (readers must never observe a transiently-
+    /// corrupted model).
+    fn run_batch_chaos(&self, dlrm_reqs: &[DlrmRequest]) -> (Vec<f32>, bool, bool, bool) {
+        let plan = self.draw_chaos_plan();
+        if plan.is_empty() {
+            return self.run_batch_clean(dlrm_reqs);
+        }
+
+        let mut model = self.model.write().unwrap();
+        let undo = Self::apply_plan(&mut model, &plan);
+        let (scores, report) = model.forward(dlrm_reqs);
+        // Restore transient chaos before any retry (a transient fault
+        // would not recur on real hardware either).
+        Self::undo_chaos(&mut model, &undo);
+        self.apply_detection_policy(&model, dlrm_reqs, scores, &report)
+    }
+
+    /// Roll the dice and, when they come up, draw the fault coordinates —
+    /// atomically with respect to other chaos batches. Model shapes are
+    /// read under the shared lock (they are immutable after build).
+    fn draw_chaos_plan(&self) -> ChaosPlan {
+        let chaos = self.chaos.as_ref().expect("chaos path without config");
+        let model = self.model.read().unwrap();
+        let (cfg, rng) = &mut *chaos.lock().unwrap();
+        let mut plan = ChaosPlan::default();
+        if rng.next_f64() < cfg.p_weight_flip {
+            let nlayers = model.bottom.len() + model.top.len() + 1;
+            let layer = rng.gen_range(0, nlayers);
+            let l = layer_ref(&model, layer);
+            plan.weight = Some((
+                layer,
+                rng.gen_range(0, l.k),
+                rng.gen_range(0, l.n),
+                rng.gen_range_u32(8),
+            ));
+        }
+        if rng.next_f64() < cfg.p_table_flip && !model.tables.is_empty() {
+            let t = rng.gen_range(0, model.tables.len());
+            plan.table = Some((
+                t,
+                rng.gen_range(0, model.tables[t].data.len()),
+                rng.gen_range_u32(8),
+            ));
+        }
+        plan
+    }
+
+    /// Apply a drawn plan (write lock held by the caller); the logical
+    /// (p, j) is mapped through the panel-interleaved layout.
+    fn apply_plan(model: &mut DlrmModel, plan: &ChaosPlan) -> Vec<ChaosUndo> {
         let mut undo = Vec::new();
-        if let Some(chaos) = &self.chaos {
-            let (cfg, rng) = &mut *chaos.lock().unwrap();
-            if rng.next_f64() < cfg.p_weight_flip {
-                // Flip a payload bit in a random protected layer.
-                let nlayers = model.bottom.len() + model.top.len() + 1;
-                let layer = rng.gen_range(0, nlayers);
-                let l = layer_mut(model, layer);
-                let nt = l.n + 1;
-                let p = rng.gen_range(0, l.k);
-                let j = rng.gen_range(0, l.n);
-                let idx = p * nt + j;
-                let bit = rng.gen_range_u32(8);
-                let data = l.abft_mut().packed.data_mut();
-                let old = data[idx];
-                data[idx] = (old as u8 ^ (1 << bit)) as i8;
-                undo.push(ChaosUndo::Weight { layer, idx, old });
-            }
-            if rng.next_f64() < cfg.p_table_flip && !model.tables.is_empty() {
-                let t = rng.gen_range(0, model.tables.len());
-                let idx = rng.gen_range(0, model.tables[t].data.len());
-                let bit = rng.gen_range_u32(8);
-                let old = model.tables[t].data[idx];
-                model.tables[t].data[idx] = old ^ (1 << bit);
-                undo.push(ChaosUndo::Table { table: t, idx, old });
-            }
+        if let Some((layer, p, j, bit)) = plan.weight {
+            let abft = layer_mut(model, layer).abft_mut();
+            let idx = abft.packed.offset(p, j);
+            let data = abft.packed.data_mut();
+            let old = data[idx];
+            data[idx] = (old as u8 ^ (1 << bit)) as i8;
+            undo.push(ChaosUndo::Weight { layer, idx, old });
+        }
+        if let Some((t, idx, bit)) = plan.table {
+            let old = model.tables[t].data[idx];
+            model.tables[t].data[idx] = old ^ (1 << bit);
+            undo.push(ChaosUndo::Table { table: t, idx, old });
         }
         undo
     }
@@ -212,6 +303,18 @@ fn layer_mut(model: &mut DlrmModel, i: usize) -> &mut crate::dlrm::AbftLinear {
         &mut model.top[i - nb]
     } else {
         &mut model.head
+    }
+}
+
+fn layer_ref(model: &DlrmModel, i: usize) -> &crate::dlrm::AbftLinear {
+    let nb = model.bottom.len();
+    let nt = model.top.len();
+    if i < nb {
+        &model.bottom[i]
+    } else if i < nb + nt {
+        &model.top[i - nb]
+    } else {
+        &model.head
     }
 }
 

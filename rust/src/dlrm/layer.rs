@@ -222,9 +222,8 @@ mod tests {
         let (m, k, n) = (6, 48, 24);
         let mut layer = AbftLinear::random(k, n, false, Protection::Detect, &mut rng);
         #[allow(unused_variables)] let (x, xp) = quantize_input(&mut rng, m, k);
-        // flip a payload bit in packed B
-        let nt = n + 1;
-        let idx = 5 * nt + 3;
+        // flip a payload bit in packed B (logical (5,3) via the panel map)
+        let idx = layer.abft().packed.offset(5, 3);
         let data = layer.abft_mut().packed.data_mut();
         data[idx] = (data[idx] as u8 ^ 0x40) as i8;
         let (_, rep) = layer.forward(&x, m, xp);

@@ -6,6 +6,7 @@ use crate::abft::{EbChecksum, FusedEbAbft};
 use crate::dlrm::config::{DlrmConfig, Protection};
 use crate::dlrm::interaction::pairwise_interaction;
 use crate::dlrm::layer::{AbftLinear, LayerReport};
+use crate::embedding::bag::EB_PAR_MIN_WORK;
 use crate::embedding::{bag_sum_8, QuantTable8};
 use crate::quant::QParams;
 use crate::util::rng::Pcg32;
@@ -39,6 +40,15 @@ impl InferenceReport {
     pub fn clean(&self) -> bool {
         self.gemm.rows_flagged == 0 && self.eb_bags_flagged == 0
     }
+}
+
+/// Per-request EB detection tallies, merged into the batch report after
+/// the (possibly parallel) bag fan-out.
+#[derive(Clone, Copy, Debug, Default)]
+struct EbFlags {
+    flagged: usize,
+    recomputed: usize,
+    unrecovered: usize,
 }
 
 /// The model: quantized bottom/top MLPs + quantized embedding tables.
@@ -208,37 +218,45 @@ impl DlrmModel {
         }
         let bottom_f: Vec<f32> = x.iter().map(|&q| x_qp.dequantize_u8(q)).collect();
 
-        // 3. EmbeddingBags, ABFT-checked per bag.
-        // Feature layout for interaction: batch × (1 + T) × d.
+        // 3. EmbeddingBags, ABFT-checked per bag, parallel over requests:
+        // each request owns a disjoint `batch × (1 + T) × d` feature row,
+        // so bags fan out on the global pool with bit-identical results.
         let groups = num_tables + 1;
         let mut feats = vec![0f32; batch * groups * d];
         for b in 0..batch {
             feats[b * groups * d..b * groups * d + d]
                 .copy_from_slice(&bottom_f[b * d..(b + 1) * d]);
         }
-        for (t, (table, fused)) in self.tables.iter().zip(&self.fused).enumerate() {
-            for (b, req) in requests.iter().enumerate() {
-                let indices = &req.sparse[t];
-                let out = &mut feats
-                    [b * groups * d + (t + 1) * d..b * groups * d + (t + 2) * d];
-                if self.cfg.protection.enabled() {
-                    // Fused gather+reduce+verify: same random-access streams
-                    // as the unprotected bag (abft::eb §Perf).
-                    let mut bad = fused.bag_sum_checked(table, indices, None, true, out);
-                    if bad {
-                        report.eb_bags_flagged += 1;
-                        if self.cfg.protection == Protection::DetectRecompute {
-                            report.eb_bags_recomputed += 1;
-                            bad = fused.bag_sum_checked(table, indices, None, true, out);
-                            if bad {
-                                report.eb_bags_unrecovered += 1;
-                            }
-                        }
-                    }
-                } else {
-                    bag_sum_8(table, indices, None, true, out);
+        let mut eb_flags = vec![EbFlags::default(); batch];
+        let pool = crate::util::threadpool::global();
+        let eb_work: usize = requests
+            .iter()
+            .flat_map(|r| r.sparse.iter())
+            .map(|s| s.len() * d)
+            .sum();
+        if batch >= 2 && pool.size() > 1 && eb_work >= EB_PAR_MIN_WORK {
+            pool.scope(|s| {
+                for ((req, fchunk), flags) in requests
+                    .iter()
+                    .zip(feats.chunks_mut(groups * d))
+                    .zip(eb_flags.iter_mut())
+                {
+                    s.spawn(move || self.eb_for_request(req, fchunk, flags));
                 }
+            });
+        } else {
+            for ((req, fchunk), flags) in requests
+                .iter()
+                .zip(feats.chunks_mut(groups * d))
+                .zip(eb_flags.iter_mut())
+            {
+                self.eb_for_request(req, fchunk, flags);
             }
+        }
+        for f in &eb_flags {
+            report.eb_bags_flagged += f.flagged;
+            report.eb_bags_recomputed += f.recomputed;
+            report.eb_bags_unrecovered += f.unrecovered;
         }
 
         // 4. Pairwise interactions + concat with bottom output.
@@ -254,6 +272,33 @@ impl DlrmModel {
                 .copy_from_slice(&inter[b * pairs..(b + 1) * pairs]);
         }
         (top_in, report)
+    }
+
+    /// All tables' bags for one request, written into its `(1+T)·d`
+    /// feature row (slot 0 already holds the bottom-MLP output).
+    fn eb_for_request(&self, req: &DlrmRequest, fchunk: &mut [f32], flags: &mut EbFlags) {
+        let d = self.cfg.embedding_dim;
+        for (t, (table, fused)) in self.tables.iter().zip(&self.fused).enumerate() {
+            let indices = &req.sparse[t];
+            let out = &mut fchunk[(t + 1) * d..(t + 2) * d];
+            if self.cfg.protection.enabled() {
+                // Fused gather+reduce+verify: same random-access streams
+                // as the unprotected bag (abft::eb §Perf).
+                let mut bad = fused.bag_sum_checked(table, indices, None, true, out);
+                if bad {
+                    flags.flagged += 1;
+                    if self.cfg.protection == Protection::DetectRecompute {
+                        flags.recomputed += 1;
+                        bad = fused.bag_sum_checked(table, indices, None, true, out);
+                        if bad {
+                            flags.unrecovered += 1;
+                        }
+                    }
+                }
+            } else {
+                bag_sum_8(table, indices, None, true, out);
+            }
+        }
     }
 
     /// Generate a synthetic request batch (uniform indices, as the paper's

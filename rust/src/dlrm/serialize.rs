@@ -133,12 +133,11 @@ fn encode_layer(l: &AbftLinear) -> Vec<u8> {
     push_f32(&mut buf, l.w_qparams.beta);
     push_f32(&mut buf, l.out_qparams.alpha);
     push_f32(&mut buf, l.out_qparams.beta);
-    // Payload weights only (k×n), extracted from the packed layout.
-    let nt = l.n + 1;
-    let data = l.abft().packed.data();
+    // Payload weights only (k×n), re-materialized row-major from the
+    // panel-interleaved pack (checksum column dropped).
+    let packed = &l.abft().packed;
     for p in 0..l.k {
-        let row = &data[p * nt..p * nt + l.n];
-        buf.extend(row.iter().map(|&v| v as u8));
+        buf.extend((0..l.n).map(|j| packed.at(p, j) as u8));
     }
     buf
 }

@@ -2,6 +2,16 @@
 //! table by an index set and reduce them (plain or weighted sum), with an
 //! optional software-prefetch path (Fig 6 benchmarks both).
 //!
+//! The dequant-accumulate inner loop (`out[j] += α·q[j] + β`) is
+//! vectorized 8-wide with AVX2 when the host has it: load 8 u8 codes,
+//! widen to i32, convert to f32, then `mul`/`add` in **the same per-lane
+//! operation order as the scalar loop** — elements are independent, so
+//! the SIMD path is bit-identical to the scalar path (a fused
+//! multiply-add would round differently and is deliberately not used).
+//! [`embedding_bag_8`] additionally fans out over bags on the global
+//! thread pool for large batches; bags write disjoint output rows, so
+//! parallel results are bit-identical too.
+//!
 //! Batch convention follows PyTorch's `EmbeddingBag(indices, offsets)`:
 //! `offsets[b]..offsets[b+1]` delimits bag `b`'s slice of `indices`.
 
@@ -9,6 +19,11 @@ use super::table::{QuantTable4, QuantTable8};
 
 /// How far ahead of the current lookup to issue prefetches.
 pub const PREFETCH_DISTANCE: usize = 8;
+
+/// Minimum total f32 accumulate count (Σ pooling · d) before a batched EB
+/// fans out over bags on the global pool. Shared with the model's
+/// request-parallel EB stage so both fan-out decisions retune together.
+pub(crate) const EB_PAR_MIN_WORK: usize = 1 << 17;
 
 #[inline]
 fn prefetch_row(data: &[u8], offset: usize) {
@@ -27,14 +42,68 @@ fn prefetch_row(data: &[u8], offset: usize) {
     }
 }
 
-/// One bag over an 8-bit table: `R = Σ_{i∈I} w_i · (α_i·eb_i + β_i·e_d)`
-/// accumulated into `out` (len d), which is zeroed first.
-pub fn bag_sum_8(
+/// `out[j] += a·row[j] + b` over a full row — scalar reference order.
+#[inline]
+pub(crate) fn axpb_accumulate_scalar(out: &mut [f32], row: &[u8], a: f32, b: f32) {
+    for (o, &q) in out.iter_mut().zip(row) {
+        *o += a * q as f32 + b;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpb_accumulate_avx2(out: &mut [f32], row: &[u8], a: f32, b: f32) {
+    use core::arch::x86_64::*;
+    let d = out.len();
+    debug_assert_eq!(row.len(), d);
+    let av = _mm256_set1_ps(a);
+    let bv = _mm256_set1_ps(b);
+    let mut j = 0usize;
+    while j + 8 <= d {
+        let q8 = _mm_loadl_epi64(row.as_ptr().add(j) as *const __m128i);
+        let qf = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(q8));
+        // Same rounding sequence as the scalar loop: (a·q) + b, then +=.
+        let t = _mm256_add_ps(_mm256_mul_ps(av, qf), bv);
+        let o = _mm256_loadu_ps(out.as_ptr().add(j));
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_add_ps(o, t));
+        j += 8;
+    }
+    while j < d {
+        *out.get_unchecked_mut(j) += a * *row.get_unchecked(j) as f32 + b;
+        j += 1;
+    }
+}
+
+/// The selected row accumulate routine: `fn(out, row, α, β)`.
+pub(crate) type AxpbFn = fn(&mut [f32], &[u8], f32, f32);
+
+#[cfg(target_arch = "x86_64")]
+fn axpb_accumulate_avx2_checked(out: &mut [f32], row: &[u8], a: f32, b: f32) {
+    // SAFETY: private; only handed out by `select_axpb`, which verified
+    // AVX2 on this host first.
+    unsafe { axpb_accumulate_avx2(out, row, a, b) };
+}
+
+/// Pick the dequant-accumulate routine once (per bag/batch) so the hot
+/// loop makes a direct call instead of re-probing the cpu feature per
+/// gathered row. Both routines are bit-identical (see module docs).
+pub(crate) fn select_axpb() -> AxpbFn {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::gemm::avx2::available() {
+            return axpb_accumulate_avx2_checked;
+        }
+    }
+    axpb_accumulate_scalar
+}
+
+fn bag_sum_8_impl(
     table: &QuantTable8,
     indices: &[usize],
     weights: Option<&[f32]>,
     prefetch: bool,
     out: &mut [f32],
+    simd: bool,
 ) {
     let d = table.d;
     assert_eq!(out.len(), d);
@@ -42,6 +111,11 @@ pub fn bag_sum_8(
     if let Some(w) = weights {
         assert_eq!(w.len(), indices.len());
     }
+    let row_accum: AxpbFn = if simd {
+        select_axpb()
+    } else {
+        axpb_accumulate_scalar
+    };
     for (pos, &idx) in indices.iter().enumerate() {
         assert!(idx < table.rows, "index {idx} out of range");
         if prefetch {
@@ -52,11 +126,32 @@ pub fn bag_sum_8(
         let w = weights.map_or(1.0, |w| w[pos]);
         let a = table.alpha[idx] * w;
         let b = table.beta[idx] * w;
-        let row = table.row(idx);
-        for (o, &q) in out.iter_mut().zip(row) {
-            *o += a * q as f32 + b;
-        }
+        row_accum(out, table.row(idx), a, b);
     }
+}
+
+/// One bag over an 8-bit table: `R = Σ_{i∈I} w_i · (α_i·eb_i + β_i·e_d)`
+/// accumulated into `out` (len d), which is zeroed first.
+pub fn bag_sum_8(
+    table: &QuantTable8,
+    indices: &[usize],
+    weights: Option<&[f32]>,
+    prefetch: bool,
+    out: &mut [f32],
+) {
+    bag_sum_8_impl(table, indices, weights, prefetch, out, true);
+}
+
+/// Always-scalar variant: the reference the SIMD path is tested against
+/// and the baseline the perf harness reports speedups over.
+pub fn bag_sum_8_scalar(
+    table: &QuantTable8,
+    indices: &[usize],
+    weights: Option<&[f32]>,
+    prefetch: bool,
+    out: &mut [f32],
+) {
+    bag_sum_8_impl(table, indices, weights, prefetch, out, false);
 }
 
 /// One bag over a 4-bit table.
@@ -90,9 +185,25 @@ pub fn bag_sum_4(
     }
 }
 
+/// Bag `b`'s `[start, end)` slice of the index list.
+#[inline]
+pub(crate) fn bag_bounds(offsets: &[usize], total: usize, b: usize) -> (usize, usize) {
+    let start = offsets[b];
+    let end = if b + 1 < offsets.len() {
+        offsets[b + 1]
+    } else {
+        total
+    };
+    assert!(start <= end && end <= total, "bad offsets");
+    (start, end)
+}
+
 /// Batched EB over an 8-bit table (PyTorch offsets convention).
 /// Output is `batch × d`, row-major; `offsets.len()` is the batch size and
 /// `offsets[b+1]` (or `indices.len()` for the last bag) ends bag b.
+///
+/// Large batches fan out over bags on the global pool (disjoint output
+/// rows → bit-identical to the serial loop).
 pub fn embedding_bag_8(
     table: &QuantTable8,
     indices: &[usize],
@@ -103,18 +214,31 @@ pub fn embedding_bag_8(
     let batch = offsets.len();
     let d = table.d;
     let mut out = vec![0f32; batch * d];
-    for b in 0..batch {
-        let start = offsets[b];
-        let end = if b + 1 < batch { offsets[b + 1] } else { indices.len() };
-        assert!(start <= end && end <= indices.len(), "bad offsets");
+    let run_bag = |b: usize, obag: &mut [f32]| {
+        let (start, end) = bag_bounds(offsets, indices.len(), b);
         let w = weights.map(|w| &w[start..end]);
-        bag_sum_8(
-            table,
-            &indices[start..end],
-            w,
-            prefetch,
-            &mut out[b * d..(b + 1) * d],
-        );
+        bag_sum_8(table, &indices[start..end], w, prefetch, obag);
+    };
+
+    let pool = crate::util::threadpool::global();
+    let work = indices.len() * d;
+    if batch >= 2 && pool.size() > 1 && work >= EB_PAR_MIN_WORK {
+        let jobs = pool.size().min(batch);
+        let per = (batch + jobs - 1) / jobs;
+        pool.scope(|s| {
+            for (ji, chunk) in out.chunks_mut(per * d).enumerate() {
+                let run_bag = &run_bag;
+                s.spawn(move || {
+                    for (bi, obag) in chunk.chunks_mut(d).enumerate() {
+                        run_bag(ji * per + bi, obag);
+                    }
+                });
+            }
+        });
+    } else {
+        for (b, obag) in out.chunks_mut(d).enumerate() {
+            run_bag(b, obag);
+        }
     }
     out
 }
@@ -131,8 +255,7 @@ pub fn embedding_bag_4(
     let d = table.d;
     let mut out = vec![0f32; batch * d];
     for b in 0..batch {
-        let start = offsets[b];
-        let end = if b + 1 < batch { offsets[b + 1] } else { indices.len() };
+        let (start, end) = bag_bounds(offsets, indices.len(), b);
         let w = weights.map(|w| &w[start..end]);
         bag_sum_4(
             table,
@@ -176,6 +299,24 @@ mod tests {
     }
 
     #[test]
+    fn simd_path_bitwise_equals_scalar() {
+        let mut rng = Pcg32::new(38);
+        // Odd dims exercise the 8-wide tail; tiny dims the pure-tail case.
+        for d in [1usize, 7, 8, 16, 31, 64, 127] {
+            let table = QuantTable8::random(500, d, &mut rng);
+            let indices: Vec<usize> = (0..80).map(|_| rng.gen_range(0, 500)).collect();
+            let weights: Vec<f32> = (0..80).map(|_| rng.next_f32() * 2.0).collect();
+            for w in [None, Some(&weights[..])] {
+                let mut simd = vec![0f32; d];
+                let mut scalar = vec![0f32; d];
+                bag_sum_8(&table, &indices, w, false, &mut simd);
+                bag_sum_8_scalar(&table, &indices, w, false, &mut scalar);
+                assert_eq!(simd, scalar, "d={d} weighted={}", w.is_some());
+            }
+        }
+    }
+
+    #[test]
     fn prefetch_path_bitwise_equal() {
         let mut rng = Pcg32::new(32);
         let table = QuantTable8::random(5000, 128, &mut rng);
@@ -212,6 +353,29 @@ mod tests {
         let mut bag1 = vec![0f32; 16];
         bag_sum_8(&table, &indices[3..7], None, false, &mut bag1);
         assert_eq!(&out[16..32], &bag1[..]);
+    }
+
+    #[test]
+    fn parallel_batch_bit_identical_to_serial() {
+        let mut rng = Pcg32::new(39);
+        let (rows, d, batch, pooling) = (4000usize, 64usize, 32usize, 80usize);
+        assert!(batch * pooling * d >= super::EB_PAR_MIN_WORK);
+        let table = QuantTable8::random(rows, d, &mut rng);
+        let indices: Vec<usize> = (0..batch * pooling).map(|_| rng.gen_range(0, rows)).collect();
+        let offsets: Vec<usize> = (0..batch).map(|b| b * pooling).collect();
+        let par = embedding_bag_8(&table, &indices, &offsets, None, false);
+        // Serial reference, bag by bag.
+        let mut serial = vec![0f32; batch * d];
+        for b in 0..batch {
+            bag_sum_8(
+                &table,
+                &indices[b * pooling..(b + 1) * pooling],
+                None,
+                false,
+                &mut serial[b * d..(b + 1) * d],
+            );
+        }
+        assert_eq!(par, serial);
     }
 
     #[test]

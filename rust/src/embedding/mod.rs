@@ -5,6 +5,6 @@ pub mod bag;
 pub mod table;
 
 pub use bag::{
-    bag_sum_4, bag_sum_8, embedding_bag_4, embedding_bag_8, PREFETCH_DISTANCE,
+    bag_sum_4, bag_sum_8, bag_sum_8_scalar, embedding_bag_4, embedding_bag_8, PREFETCH_DISTANCE,
 };
 pub use table::{QuantTable4, QuantTable8};

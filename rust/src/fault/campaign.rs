@@ -145,11 +145,11 @@ pub fn run_gemm_trial(
     if target == GemmTarget::MatrixB {
         // Inject into the packed B *payload* (never the checksum column —
         // the paper's §IV-C assumption: the much smaller checksum is
-        // error-free), after encoding, as in §VI-B1.
-        let nt = n + 1;
+        // error-free), after encoding, as in §VI-B1. The pack is
+        // panel-interleaved, so map the logical (p, j) through offset().
         let p = rng.gen_range(0, k);
         let j = rng.gen_range(0, n);
-        let idx = p * nt + j;
+        let idx = abft.packed.offset(p, j);
         let data = abft.packed.data_mut();
         match cfg.fault_model {
             FaultModel::BitFlip => {

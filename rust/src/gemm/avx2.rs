@@ -1,0 +1,223 @@
+//! AVX2 microkernel for the panel-interleaved u8×i8→i32 GEMM.
+//!
+//! The pairwise trick: the pack interleaves two consecutive k-rows per
+//! column (see `packed` module docs), so one 32-byte load holds 16
+//! columns × 2 k-rows. Both operands are widened to i16
+//! (`_mm256_cvtepi8_epi16` for B, zero-extension for the u8 A pair) and
+//! reduced with `_mm256_madd_epi16`, which computes the exact i32
+//! `a_even·b_even + a_odd·b_odd` per column — the `maddubs` dataflow
+//! without its i16 saturation, keeping SIMD output bit-identical to the
+//! scalar kernel (products ≤ 255·128 fit i16 ranges comfortably inside
+//! madd's i32 accumulation).
+//!
+//! Shape: MR=2 rows × NR=32 columns per register tile → 8 ymm
+//! accumulators + 4 shared widened-B vectors in flight, within the 16
+//! architectural ymm registers. A full panel is walked over all of k in
+//! one pass, so C is touched once per (row, panel).
+//!
+//! Ragged tail panels (width < 32 — e.g. the ABFT checksum column when
+//! `n % 32 == 0` makes `n_total ≡ 1 (mod 32)`) fall back to the shared
+//! scalar panel kernel; they are a vanishing fraction of the work.
+
+#![allow(clippy::missing_safety_doc)]
+
+use core::arch::x86_64::*;
+
+use super::packed::{panel_rows_scalar, PackedB, NR};
+
+/// Cached runtime AVX2 check (std memoizes the cpuid probe).
+#[inline]
+pub(crate) fn available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// Multiply a row block: `c[rows × nt] += a[rows × k] · B`. `c` must be
+/// pre-zeroed by the caller (the dispatcher does).
+///
+/// # Safety
+/// Caller must ensure the host supports AVX2 (`available()`).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gemm_rows(a: &[u8], packed: &PackedB, rows: usize, c: &mut [i32]) {
+    let k = packed.k;
+    let nt = packed.n_total();
+    debug_assert_eq!(a.len(), rows * k);
+    debug_assert_eq!(c.len(), rows * nt);
+    let data = packed.data().as_ptr();
+    let mut j0 = 0usize;
+    while j0 < nt {
+        let w = NR.min(nt - j0);
+        if w < NR {
+            panel_rows_scalar(a, packed.data(), k, nt, rows, c, j0, w);
+            j0 += w;
+            continue;
+        }
+        let panel = data.add(j0 * k);
+        let mut i = 0usize;
+        while i + 2 <= rows {
+            row_pair_panel(
+                a.as_ptr().add(i * k),
+                a.as_ptr().add((i + 1) * k),
+                panel,
+                k,
+                c.as_mut_ptr().add(i * nt + j0),
+                c.as_mut_ptr().add((i + 1) * nt + j0),
+            );
+            i += 2;
+        }
+        if i < rows {
+            row_single_panel(
+                a.as_ptr().add(i * k),
+                panel,
+                k,
+                c.as_mut_ptr().add(i * nt + j0),
+            );
+        }
+        j0 += NR;
+    }
+}
+
+/// Widen one 32-byte interleaved pair-block into 4 × 16-lane i16 vectors
+/// covering columns [0,8), [8,16), [16,24), [24,32).
+///
+/// Helpers that take/return `__m256i` carry the same `target_feature`
+/// as their callers: without it, a non-inlined call would cross an
+/// ABI-mismatched boundary (rustc's `abi_unsupported_vector_types`
+/// unsoundness) and silently corrupt the vectors.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn widen_pair_block(panel: *const i8, byte_off: usize) -> [__m256i; 4] {
+    let v0 = _mm256_loadu_si256(panel.add(byte_off) as *const __m256i);
+    let v1 = _mm256_loadu_si256(panel.add(byte_off + 32) as *const __m256i);
+    [
+        _mm256_cvtepi8_epi16(_mm256_castsi256_si128(v0)),
+        _mm256_cvtepi8_epi16(_mm256_extracti128_si256(v0, 1)),
+        _mm256_cvtepi8_epi16(_mm256_castsi256_si128(v1)),
+        _mm256_cvtepi8_epi16(_mm256_extracti128_si256(v1, 1)),
+    ]
+}
+
+/// Broadcast the (a[2pp], a[2pp+1]) u8 pair as zero-extended i16 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn broadcast_a_pair(arow: *const u8, pp: usize) -> __m256i {
+    let lo = *arow.add(2 * pp) as i32;
+    let hi = *arow.add(2 * pp + 1) as i32;
+    _mm256_set1_epi32(lo | (hi << 16))
+}
+
+/// Add the odd trailing k-row (when k is odd) into a full-width panel row
+/// of C — one scalar pass, negligible next to the k/2 vector iterations.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn add_tail_row(tail: *const i8, av: i32, crow: *mut i32) {
+    for cix in 0..NR {
+        *crow.add(cix) += av * *tail.add(cix) as i32;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn row_pair_panel(
+    a0: *const u8,
+    a1: *const u8,
+    panel: *const i8,
+    k: usize,
+    c0: *mut i32,
+    c1: *mut i32,
+) {
+    let kp = k & !1;
+    let mut acc0 = [_mm256_setzero_si256(); 4];
+    let mut acc1 = [_mm256_setzero_si256(); 4];
+    for pp in 0..kp / 2 {
+        let b = widen_pair_block(panel, pp * 2 * NR);
+        let va0 = broadcast_a_pair(a0, pp);
+        let va1 = broadcast_a_pair(a1, pp);
+        for q in 0..4 {
+            acc0[q] = _mm256_add_epi32(acc0[q], _mm256_madd_epi16(va0, b[q]));
+            acc1[q] = _mm256_add_epi32(acc1[q], _mm256_madd_epi16(va1, b[q]));
+        }
+    }
+    for q in 0..4 {
+        let p0 = (c0 as *mut __m256i).add(q);
+        _mm256_storeu_si256(p0, _mm256_add_epi32(_mm256_loadu_si256(p0 as *const _), acc0[q]));
+        let p1 = (c1 as *mut __m256i).add(q);
+        _mm256_storeu_si256(p1, _mm256_add_epi32(_mm256_loadu_si256(p1 as *const _), acc1[q]));
+    }
+    if k % 2 == 1 {
+        let tail = panel.add(kp * NR);
+        add_tail_row(tail, *a0.add(k - 1) as i32, c0);
+        add_tail_row(tail, *a1.add(k - 1) as i32, c1);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn row_single_panel(a0: *const u8, panel: *const i8, k: usize, c0: *mut i32) {
+    let kp = k & !1;
+    let mut acc = [_mm256_setzero_si256(); 4];
+    for pp in 0..kp / 2 {
+        let b = widen_pair_block(panel, pp * 2 * NR);
+        let va = broadcast_a_pair(a0, pp);
+        for q in 0..4 {
+            acc[q] = _mm256_add_epi32(acc[q], _mm256_madd_epi16(va, b[q]));
+        }
+    }
+    for q in 0..4 {
+        let p = (c0 as *mut __m256i).add(q);
+        _mm256_storeu_si256(p, _mm256_add_epi32(_mm256_loadu_si256(p as *const _), acc[q]));
+    }
+    if k % 2 == 1 {
+        add_tail_row(panel.add(kp * NR), *a0.add(k - 1) as i32, c0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::gemm_naive;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn avx2_matches_naive_bitwise() {
+        if !available() {
+            eprintln!("SKIP: host has no AVX2");
+            return;
+        }
+        let mut rng = Pcg32::new(0xA5);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (1, 512, 512),
+            (2, 2, 32),
+            (3, 129, 96),  // odd k, multi-panel
+            (5, 64, 33),   // full panel + 1-col tail (ABFT shape)
+            (8, 255, 160),
+            (16, 512, 513),
+        ] {
+            let mut a = vec![0u8; m * k];
+            let mut b = vec![0i8; k * n];
+            rng.fill_u8(&mut a);
+            rng.fill_i8(&mut b);
+            let packed = PackedB::pack(&b, k, n);
+            let mut c = vec![0i32; m * n];
+            unsafe { gemm_rows(&a, &packed, m, &mut c) };
+            assert_eq!(c, gemm_naive(&a, &b, m, k, n), "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn saturating_inputs_stay_exact() {
+        // The maddubs-style trick must NOT saturate: all-255 × all-±127
+        // is the worst case for the i16 intermediate.
+        if !available() {
+            eprintln!("SKIP: host has no AVX2");
+            return;
+        }
+        let (m, k, n) = (2usize, 64usize, 64usize);
+        let a = vec![255u8; m * k];
+        for fill in [127i8, -128, -127] {
+            let b = vec![fill; k * n];
+            let packed = PackedB::pack(&b, k, n);
+            let mut c = vec![0i32; m * n];
+            unsafe { gemm_rows(&a, &packed, m, &mut c) };
+            assert_eq!(c, gemm_naive(&a, &b, m, k, n), "fill {fill}");
+        }
+    }
+}

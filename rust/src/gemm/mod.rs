@@ -6,11 +6,15 @@
 //! * [`QuantizedLinear`] — a full FC layer: packed weights + requantization
 //!   (Fig 1 pipeline), the unit the DLRM MLPs are made of.
 
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
 pub mod naive;
 pub mod packed;
 
 pub use naive::gemm_naive;
-pub use packed::{gemm_exec, gemm_exec_into, PackedB};
+pub use packed::{
+    gemm_exec, gemm_exec_into, gemm_exec_into_scalar, gemm_exec_into_st, simd_active, PackedB,
+};
 
 use crate::quant::{requantize, QParams, RequantParams};
 
@@ -23,6 +27,9 @@ pub struct QuantizedLinear {
     pub packed: PackedB,
     pub w_qparams: QParams,
     pub out_qparams: QParams,
+    /// Column sums of W, precomputed at pack time for requantization
+    /// (recomputing them per forward would walk the whole pack).
+    b_col_sums: Vec<i32>,
     pub k: usize,
     pub n: usize,
 }
@@ -32,10 +39,17 @@ impl QuantizedLinear {
     /// lattices from the data / provided output range.
     pub fn from_float(w: &[f32], k: usize, n: usize, out_range: (f32, f32)) -> Self {
         let (wq, w_qparams) = crate::quant::quantize_slice_i8(w);
+        let mut b_col_sums = vec![0i32; n];
+        for p in 0..k {
+            for j in 0..n {
+                b_col_sums[j] += wq[p * n + j] as i32;
+            }
+        }
         Self {
             packed: PackedB::pack(&wq, k, n),
             w_qparams,
             out_qparams: QParams::fit_u8(out_range.0, out_range.1),
+            b_col_sums,
             k,
             n,
         }
@@ -51,14 +65,6 @@ impl QuantizedLinear {
     }
 
     pub(crate) fn requant_params(&self, x: &[u8], m: usize, x_qparams: QParams) -> RequantParams {
-        // Column sums of W from the packed payload columns.
-        let mut b_col_sums = vec![0i32; self.n];
-        let nt = self.packed.n_total();
-        for p in 0..self.k {
-            for j in 0..self.n {
-                b_col_sums[j] += self.packed.data[p * nt + j] as i32;
-            }
-        }
         let mut a_row_sums = vec![0i32; m];
         for i in 0..m {
             a_row_sums[i] = x[i * self.k..(i + 1) * self.k]
@@ -71,7 +77,7 @@ impl QuantizedLinear {
             b: self.w_qparams,
             c: self.out_qparams,
             a_row_sums,
-            b_col_sums,
+            b_col_sums: self.b_col_sums.clone(),
             k: self.k,
         }
     }

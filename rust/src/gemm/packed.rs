@@ -1,25 +1,56 @@
-//! Packed u8×i8→i32 GEMM (FBGEMM-lite).
+//! Packed u8×i8→i32 GEMM (FBGEMM-lite) with an explicit AVX2 microkernel.
 //!
-//! `PackedB` is the pre-packed weight operand: B is laid out row-major with
-//! an optional *extra column* appended contiguously — this is the paper's
-//! §IV-A3 trick ("pack the original B and the separate vector storing row
-//! sums together into blocks so the blocks look like they are from encoded
-//! B′ in contiguous memory space"), which keeps the ABFT-protected GEMM a
-//! single BLAS-3 call.
+//! # Packed layout (panel-interleaved)
 //!
-//! The compute kernel blocks over k so a `KC × n` panel of B stays cache
-//! resident while all m rows of A stream over it, and processes rows of A
-//! in pairs for instruction-level parallelism. The inner j-loop is written
-//! to autovectorize.
+//! `PackedB` stores B in **column panels of `NR` (= 32) columns**, each
+//! panel laid out **k-pair interleaved**, so the microkernel's inner loop
+//! is nothing but contiguous 32-byte loads:
+//!
+//! ```text
+//! panel q  = columns [q·NR, min((q+1)·NR, n_total))   (width w ≤ NR)
+//! within a panel (k rows, pair-blocked over k):
+//!   pair block pp (rows 2pp, 2pp+1), 2·w bytes:
+//!     [ B[2pp][j₀+0], B[2pp+1][j₀+0], B[2pp][j₀+1], B[2pp+1][j₀+1], … ]
+//!   if k is odd, one trailing w-byte row: [ B[k-1][j₀+0], … ]
+//! ```
+//!
+//! Two consecutive k-rows of one column sit in adjacent bytes: exactly the
+//! operand order `_mm256_madd_epi16` wants for the u8×i8 pairwise trick
+//! (the `maddubs` shape, done via i16 widening so it is **exact** — no
+//! i16 saturation, hence bit-identical to the scalar kernel). One 32-byte
+//! load covers 16 columns × 2 k-rows; a full panel row-pair is two loads.
+//! Total storage is exactly `k × n_total` bytes — no padding, so every
+//! packed byte is payload (or checksum) and fault-injection campaigns can
+//! target any byte meaningfully.
+//!
+//! The optional *extra column* (the paper's §IV-A3 trick: "pack the
+//! original B and the separate vector storing row sums together into
+//! blocks so the blocks look like they are from encoded B′ in contiguous
+//! memory space") rides in the last panel like any other column, which
+//! keeps the ABFT-protected GEMM a single kernel call.
+//!
+//! # Execution
+//!
+//! [`gemm_exec_into`] dispatches at runtime: AVX2 microkernel when the
+//! host has it (`is_x86_feature_detected!`), portable scalar fallback
+//! otherwise — both walk the same panel layout and produce bit-identical
+//! i32 results (integer adds commute). Large multiplications additionally
+//! fan out over m-row blocks on [`crate::util::threadpool::global`]; rows
+//! are independent, so parallel results are bit-identical too.
 
-/// Cache block over the inner (k) dimension (swept 128/256/512 in the
-/// §Perf pass; 128 won on this core's L1/L2).
-const KC: usize = 128;
+/// Register-tile width over the j (output column) dimension: 32 i8 = one
+/// 32-byte load; 32 i32 accumulators = 4 ymm per A row, and the row-pair
+/// kernel's 8 live accumulators sit comfortably inside the 16 ymm regs.
+pub(crate) const NR: usize = 32;
 
-/// Pre-packed right-hand-side operand.
+/// Minimum m·k·n_total MAC count before a GEMM fans out over row blocks
+/// on the global pool (below this, spawn overhead beats the win).
+const PAR_MIN_WORK: usize = 1 << 21;
+
+/// Pre-packed right-hand-side operand (see module docs for the layout).
 #[derive(Clone, Debug)]
 pub struct PackedB {
-    /// Row-major `k × n_total` panel data.
+    /// Panel-interleaved `k × n_total` bytes.
     pub(crate) data: Vec<i8>,
     pub k: usize,
     /// Logical (payload) column count, excluding any extra column.
@@ -28,12 +59,34 @@ pub struct PackedB {
     pub extra_cols: usize,
 }
 
+/// Byte offset of logical element `(p, j)` in the panel-interleaved
+/// layout for a `k × nt` pack.
+#[inline]
+pub(crate) fn panel_offset(k: usize, nt: usize, p: usize, j: usize) -> usize {
+    debug_assert!(p < k && j < nt);
+    let j0 = (j / NR) * NR;
+    let w = NR.min(nt - j0);
+    let base = j0 * k;
+    let c = j - j0;
+    if k % 2 == 1 && p == k - 1 {
+        base + (k - 1) * w + c
+    } else {
+        base + (p / 2) * (2 * w) + 2 * c + (p % 2)
+    }
+}
+
 impl PackedB {
     /// Pack a plain row-major `k × n` B with no extra column.
     pub fn pack(b: &[i8], k: usize, n: usize) -> Self {
         assert_eq!(b.len(), k * n);
+        let mut data = vec![0i8; k * n];
+        for p in 0..k {
+            for j in 0..n {
+                data[panel_offset(k, n, p, j)] = b[p * n + j];
+            }
+        }
         Self {
-            data: b.to_vec(),
+            data,
             k,
             n,
             extra_cols: 0,
@@ -41,15 +94,17 @@ impl PackedB {
     }
 
     /// Pack B together with one extra i8 column (e.g. the mod-127 row-sum
-    /// checksum): output layout is row-major `k × (n+1)`.
+    /// checksum): logical layout is `k × (n+1)`, stored panel-interleaved.
     pub fn pack_with_extra_col(b: &[i8], k: usize, n: usize, extra: &[i8]) -> Self {
         assert_eq!(b.len(), k * n);
         assert_eq!(extra.len(), k);
         let nt = n + 1;
         let mut data = vec![0i8; k * nt];
         for p in 0..k {
-            data[p * nt..p * nt + n].copy_from_slice(&b[p * n..(p + 1) * n]);
-            data[p * nt + n] = extra[p];
+            for j in 0..n {
+                data[panel_offset(k, nt, p, j)] = b[p * n + j];
+            }
+            data[panel_offset(k, nt, p, n)] = extra[p];
         }
         Self {
             data,
@@ -70,21 +125,43 @@ impl PackedB {
         self.data.len()
     }
 
-    /// Raw packed element at `(row, col)` over the total width.
+    /// Byte offset of logical element `(row, col)` in the packed buffer —
+    /// the indexing bridge for fault injection and layout-aware readers.
     #[inline]
-    pub fn at(&self, row: usize, col: usize) -> i8 {
-        self.data[row * self.n_total() + col]
+    pub fn offset(&self, row: usize, col: usize) -> usize {
+        panel_offset(self.k, self.n_total(), row, col)
     }
 
-    /// Raw packed bytes (row-major `k × n_total`) — the exact layout the
-    /// AOT artifacts take as their encoded-operand input.
+    /// Packed element at logical `(row, col)` over the total width.
+    #[inline]
+    pub fn at(&self, row: usize, col: usize) -> i8 {
+        self.data[self.offset(row, col)]
+    }
+
+    /// Raw packed bytes (panel-interleaved; see module docs). Every byte
+    /// maps to exactly one logical element, so arbitrary byte corruption
+    /// is always a payload/checksum fault.
     pub fn data(&self) -> &[i8] {
         &self.data
     }
 
-    /// Mutable access for fault injection (tests/campaigns only).
+    /// Mutable access for fault injection (tests/campaigns only); pair
+    /// with [`PackedB::offset`] to target a logical element.
     pub fn data_mut(&mut self) -> &mut [i8] {
         &mut self.data
+    }
+
+    /// Re-materialize the row-major `k × n_total` matrix — the interchange
+    /// layout the AOT artifacts and the snapshot format use.
+    pub fn to_row_major(&self) -> Vec<i8> {
+        let nt = self.n_total();
+        let mut out = vec![0i8; self.k * nt];
+        for p in 0..self.k {
+            for j in 0..nt {
+                out[p * nt + j] = self.at(p, j);
+            }
+        }
+        out
     }
 }
 
@@ -99,86 +176,138 @@ pub fn gemm_exec(a: &[u8], packed: &PackedB, m: usize) -> Vec<i32> {
     c
 }
 
-/// Register-tile width over the j (output column) dimension. 32 i32
-/// accumulators per A row = 4 AVX2 vectors; with MR=2 rows that is 8
-/// live vector accumulators, comfortably inside the 16 ymm registers.
-const NR: usize = 32;
-
 /// Same as [`gemm_exec`] but writes into a caller-provided buffer, allowing
-/// the serving hot path to reuse allocations.
-///
-/// Kernel shape (§Perf iteration 2): k-blocked (KC) so a B panel stays
-/// cache-resident, j-tiled (NR) with the accumulator tile held in
-/// registers across the whole k-block — C is read/written once per
-/// k-block instead of once per k step (the v1 kernel's bottleneck was
-/// exactly that L1 read-modify-write traffic), and 2 rows of A share
-/// every loaded B line.
+/// the serving hot path to reuse allocations. Dispatches SIMD/scalar and
+/// row-parallel execution (see module docs); results are bit-identical on
+/// every path.
 pub fn gemm_exec_into(a: &[u8], packed: &PackedB, m: usize, c: &mut [i32]) {
+    if !gemm_prologue(a, packed, m, c) {
+        return;
+    }
+    let k = packed.k;
+    let nt = packed.n_total();
+    let pool = crate::util::threadpool::global();
+    let work = m * k * nt;
+    if m >= 2 && pool.size() > 1 && work >= PAR_MIN_WORK {
+        let jobs = pool.size().min(m);
+        let rows_per = (m + jobs - 1) / jobs;
+        pool.scope(|s| {
+            for (ab, cb) in a.chunks(rows_per * k).zip(c.chunks_mut(rows_per * nt)) {
+                s.spawn(move || {
+                    gemm_rows_dispatch(ab, packed, ab.len() / k, cb);
+                });
+            }
+        });
+    } else {
+        gemm_rows_dispatch(a, packed, m, c);
+    }
+}
+
+/// Single-thread variant of [`gemm_exec_into`] (SIMD when available, no
+/// row fan-out) — lets the perf harness separate kernel speedup from
+/// parallel speedup. `c` is fully overwritten.
+pub fn gemm_exec_into_st(a: &[u8], packed: &PackedB, m: usize, c: &mut [i32]) {
+    if gemm_prologue(a, packed, m, c) {
+        gemm_rows_dispatch(a, packed, m, c);
+    }
+}
+
+/// Always-scalar, always-single-thread variant: the reference the SIMD
+/// path is tested against bit-for-bit, and the baseline the perf harness
+/// reports speedups over. `c` is fully overwritten.
+pub fn gemm_exec_into_scalar(a: &[u8], packed: &PackedB, m: usize, c: &mut [i32]) {
+    if gemm_prologue(a, packed, m, c) {
+        gemm_rows_scalar(a, packed, m, c);
+    }
+}
+
+/// Shared entry-point preamble: shape contract, zeroed output, and the
+/// degenerate-size early-out. Returns false when there is nothing to
+/// compute.
+fn gemm_prologue(a: &[u8], packed: &PackedB, m: usize, c: &mut [i32]) -> bool {
     let k = packed.k;
     let nt = packed.n_total();
     assert_eq!(a.len(), m * k, "A shape");
     assert_eq!(c.len(), m * nt, "C shape");
     c.fill(0);
-    let data = &packed.data[..];
+    m != 0 && k != 0 && nt != 0
+}
 
-    for kb in (0..k).step_by(KC) {
-        let kend = (kb + KC).min(k);
-        let mut i = 0;
-        while i + 2 <= m {
-            let a0 = &a[i * k..(i + 1) * k];
-            let a1 = &a[(i + 1) * k..(i + 2) * k];
-            let (lo, hi) = c.split_at_mut((i + 1) * nt);
-            let c0 = &mut lo[i * nt..];
-            let c1 = &mut hi[..nt];
-            let mut jb = 0;
-            while jb + NR <= nt {
-                let mut acc0 = [0i32; NR];
-                let mut acc1 = [0i32; NR];
-                for p in kb..kend {
-                    let av0 = a0[p] as i32;
-                    let av1 = a1[p] as i32;
-                    let b = &data[p * nt + jb..p * nt + jb + NR];
-                    for r in 0..NR {
-                        let bw = b[r] as i32;
-                        acc0[r] += av0 * bw;
-                        acc1[r] += av1 * bw;
-                    }
-                }
-                for r in 0..NR {
-                    c0[jb + r] += acc0[r];
-                    c1[jb + r] += acc1[r];
-                }
-                jb += NR;
-            }
-            if jb < nt {
-                // Column tail (< NR wide).
-                for p in kb..kend {
-                    let av0 = a0[p] as i32;
-                    let av1 = a1[p] as i32;
-                    let b = &data[p * nt..(p + 1) * nt];
-                    for r in jb..nt {
-                        let bw = b[r] as i32;
-                        c0[r] += av0 * bw;
-                        c1[r] += av1 * bw;
-                    }
-                }
-            }
-            i += 2;
+/// True when the AVX2 microkernel serves [`gemm_exec_into`] on this host.
+pub fn simd_active() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        crate::gemm::avx2::available()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// One row block, SIMD when available. `c` must be pre-zeroed.
+fn gemm_rows_dispatch(a: &[u8], packed: &PackedB, rows: usize, c: &mut [i32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::gemm::avx2::available() {
+            // SAFETY: AVX2 presence just checked.
+            unsafe { crate::gemm::avx2::gemm_rows(a, packed, rows, c) };
+            return;
         }
-        if i < m {
-            // Row tail (odd m, incl. the important m=1 serving case):
-            // stream full B rows — a single accumulator row has no tile
-            // reuse to exploit, and strided column access would waste
-            // 3/4 of every loaded B line.
-            let arow = &a[i * k..(i + 1) * k];
-            let crow = &mut c[i * nt..(i + 1) * nt];
-            for p in kb..kend {
-                let av = arow[p] as i32;
-                let brow = &data[p * nt..(p + 1) * nt];
-                for (x, &bv) in crow.iter_mut().zip(brow) {
-                    *x += av * bv as i32;
-                }
+    }
+    gemm_rows_scalar(a, packed, rows, c);
+}
+
+/// Portable fallback over the panel layout. `c` (rows × nt) must be
+/// pre-zeroed; results accumulate panel by panel.
+fn gemm_rows_scalar(a: &[u8], packed: &PackedB, rows: usize, c: &mut [i32]) {
+    let k = packed.k;
+    let nt = packed.n_total();
+    let mut j0 = 0usize;
+    while j0 < nt {
+        let w = NR.min(nt - j0);
+        panel_rows_scalar(a, &packed.data, k, nt, rows, c, j0, w);
+        j0 += w;
+    }
+}
+
+/// Scalar kernel for one panel (`w` columns starting at `j0`) over a row
+/// block. Shared with the AVX2 path, which uses it for ragged tail panels
+/// (`w < NR`) — e.g. the single checksum column of an encoded operand.
+pub(crate) fn panel_rows_scalar(
+    a: &[u8],
+    data: &[i8],
+    k: usize,
+    nt: usize,
+    rows: usize,
+    c: &mut [i32],
+    j0: usize,
+    w: usize,
+) {
+    let kp = k & !1;
+    let base = j0 * k;
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let mut acc = [0i32; NR];
+        let acc = &mut acc[..w];
+        for pp in 0..kp / 2 {
+            let a0 = arow[2 * pp] as i32;
+            let a1 = arow[2 * pp + 1] as i32;
+            let blk = &data[base + pp * 2 * w..base + (pp + 1) * 2 * w];
+            for (cix, slot) in acc.iter_mut().enumerate() {
+                *slot += a0 * blk[2 * cix] as i32 + a1 * blk[2 * cix + 1] as i32;
             }
+        }
+        if k % 2 == 1 {
+            let al = arow[k - 1] as i32;
+            let blk = &data[base + kp * w..base + kp * w + w];
+            for (slot, &bv) in acc.iter_mut().zip(blk) {
+                *slot += al * bv as i32;
+            }
+        }
+        let crow = &mut c[i * nt + j0..i * nt + j0 + w];
+        for (o, &v) in crow.iter_mut().zip(acc.iter()) {
+            *o += v;
         }
     }
 }
@@ -198,6 +327,36 @@ mod tests {
     }
 
     #[test]
+    fn panel_offset_is_a_bijection() {
+        for &(k, nt) in &[(1usize, 1usize), (2, 32), (3, 33), (7, 65), (16, 31), (5, 97)] {
+            let mut seen = vec![false; k * nt];
+            for p in 0..k {
+                for j in 0..nt {
+                    let off = panel_offset(k, nt, p, j);
+                    assert!(off < k * nt, "({k},{nt}) ({p},{j}) -> {off}");
+                    assert!(!seen[off], "collision at ({k},{nt}) ({p},{j})");
+                    seen[off] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "holes in layout ({k},{nt})");
+        }
+    }
+
+    #[test]
+    fn at_reads_back_packed_values() {
+        let mut rng = Pcg32::new(5);
+        let (k, n) = (37, 70);
+        let (_, b) = rand_case(&mut rng, 1, k, n);
+        let packed = PackedB::pack(&b, k, n);
+        for p in 0..k {
+            for j in 0..n {
+                assert_eq!(packed.at(p, j), b[p * n + j], "({p},{j})");
+            }
+        }
+        assert_eq!(packed.to_row_major(), b);
+    }
+
+    #[test]
     fn matches_naive_across_shapes() {
         let mut rng = Pcg32::new(2024);
         for &(m, k, n) in &[
@@ -206,16 +365,18 @@ mod tests {
             (2, 7, 5),
             (3, 300, 17),
             (4, 256, 64),
-            (5, 257, 63), // straddles the KC boundary
+            (5, 257, 63), // odd k exercises the tail-row path
             (17, 512, 32),
+            (2, 64, 31),  // ragged single panel
+            (2, 64, 33),  // full panel + width-1 tail panel
         ] {
             let (a, b) = rand_case(&mut rng, m, k, n);
             let packed = PackedB::pack(&b, k, n);
-            assert_eq!(
-                gemm_exec(&a, &packed, m),
-                gemm_naive(&a, &b, m, k, n),
-                "shape ({m},{k},{n})"
-            );
+            let want = gemm_naive(&a, &b, m, k, n);
+            assert_eq!(gemm_exec(&a, &packed, m), want, "dispatch ({m},{k},{n})");
+            let mut c = vec![0i32; m * n];
+            gemm_exec_into_scalar(&a, &packed, m, &mut c);
+            assert_eq!(c, want, "scalar ({m},{k},{n})");
         }
     }
 
@@ -260,5 +421,21 @@ mod tests {
             let packed = PackedB::pack(&b, k, n);
             assert_eq!(gemm_exec(&a, &packed, m), gemm_naive(&a, &b, m, k, n));
         }
+    }
+
+    #[test]
+    fn parallel_path_bit_identical() {
+        // Big enough to cross PAR_MIN_WORK: the row-parallel path must
+        // produce the same bytes as the single-thread scalar path.
+        let mut rng = Pcg32::new(6);
+        let (m, k, n) = (19, 384, 320);
+        assert!(m * k * n >= super::PAR_MIN_WORK);
+        let (a, b) = rand_case(&mut rng, m, k, n);
+        let packed = PackedB::pack(&b, k, n);
+        let mut par = vec![0i32; m * n];
+        gemm_exec_into(&a, &packed, m, &mut par);
+        let mut scalar = vec![0i32; m * n];
+        gemm_exec_into_scalar(&a, &packed, m, &mut scalar);
+        assert_eq!(par, scalar);
     }
 }

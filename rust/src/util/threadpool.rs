@@ -1,40 +1,134 @@
-//! Fixed-size thread pool over std primitives (no tokio/rayon offline).
+//! Fixed-size thread pool over std primitives (no tokio/rayon offline),
+//! plus a borrow-friendly [`ThreadPool::scope`] used by the row-parallel
+//! GEMM and bag-parallel EmbeddingBag hot paths.
 //!
-//! Used by the serving coordinator for request execution and by the fault
-//! campaign runner for parallel trials.
+//! Robustness notes (post §Perf-PR triage):
+//! * The in-flight counter is decremented by a **drop guard**, so a job
+//!   that panics still counts down and `wait_idle`/`scope` cannot wedge.
+//! * Workers run jobs under `catch_unwind`, so a panicking job no longer
+//!   kills its worker thread (the pool keeps its full width for the life
+//!   of the process).
+//! * The queue is a `Mutex<VecDeque> + Condvar` rather than an `mpsc`
+//!   channel: an idle `Receiver::recv` would pin the shared-receiver
+//!   mutex, and waiting threads could not *help* drain the queue. With
+//!   the condvar queue, [`ThreadPool::scope`]'s join loop pops and runs
+//!   jobs itself, which is also what makes nested scopes deadlock-free.
+//! * Orderings are the minimal correct set: the pool's in-flight counter
+//!   uses `Release` on completion / `Acquire` on the waiting loads (the
+//!   completion edge is what makes a job's writes visible to the waiter)
+//!   and `Relaxed` for the pure count-up; scope joins are monitor-based
+//!   (mutex + condvar), so their happens-before comes from the lock.
 
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
+
+/// First panic payload captured from a scope's jobs, re-raised at the
+/// scope boundary so the original message (e.g. an out-of-range-index
+/// assert from a parallel bag) is not replaced by a generic one.
+type PanicSlot = Arc<Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>>;
+
+/// Per-scope completion tracking: a counted mutex + condvar, so the
+/// joining thread can *block* once there is nothing left to steal,
+/// instead of yield-spinning a core while the last jobs finish on
+/// workers. The wait is time-bounded (see `Waiter`) so a nested scope
+/// whose jobs land on the queue after we block still gets stolen.
+struct ScopeSync {
+    pending: Mutex<usize>,
+    cv: Condvar,
+}
+
+/// Decrements a scope's pending count on drop (panic-safe) and wakes
+/// the joiner when the count reaches zero.
+struct ScopeGuard(Arc<ScopeSync>);
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        let mut pending = self.0.pending.lock().unwrap();
+        *pending -= 1;
+        if *pending == 0 {
+            drop(pending);
+            self.0.cv.notify_all();
+        }
+    }
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+struct Queue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
 pub struct ThreadPool {
     workers: Vec<thread::JoinHandle<()>>,
-    tx: Option<mpsc::Sender<Job>>,
-    queued: Arc<AtomicUsize>,
+    queue: Arc<Queue>,
+    /// Jobs submitted and not yet finished (queued + running).
+    in_flight: Arc<AtomicUsize>,
+    size: usize,
+}
+
+/// Decrements a counter on drop — runs even if the guarded job panics.
+struct CountGuard(Arc<AtomicUsize>);
+
+impl Drop for CountGuard {
+    fn drop(&mut self) {
+        // Release: pairs with the Acquire loads in the waiting loops so a
+        // job's memory effects are visible once its completion is observed.
+        self.0.fetch_sub(1, Ordering::Release);
+    }
+}
+
+fn run_job(job: Job) {
+    // A panicking job must neither kill the worker nor leak the count
+    // (the count is guarded by the caller). Swallow the payload; the
+    // submitter observes the panic through `Scope` or its own channel.
+    let _ = catch_unwind(AssertUnwindSafe(job));
 }
 
 impl ThreadPool {
     pub fn new(size: usize) -> Self {
         assert!(size > 0);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let queued = Arc::new(AtomicUsize::new(0));
+        let queue = Arc::new(Queue {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let in_flight = Arc::new(AtomicUsize::new(0));
         let workers = (0..size)
             .map(|i| {
-                let rx = Arc::clone(&rx);
-                let queued = Arc::clone(&queued);
+                let queue = Arc::clone(&queue);
+                let in_flight = Arc::clone(&in_flight);
                 thread::Builder::new()
                     .name(format!("pool-{i}"))
                     .spawn(move || loop {
-                        let job = rx.lock().unwrap().recv();
-                        match job {
-                            Ok(job) => {
-                                job();
-                                queued.fetch_sub(1, Ordering::SeqCst);
+                        let job = {
+                            let mut st = queue.state.lock().unwrap();
+                            loop {
+                                if let Some(job) = st.jobs.pop_front() {
+                                    break Some(job);
+                                }
+                                if st.shutdown {
+                                    break None;
+                                }
+                                st = queue.cv.wait(st).unwrap();
                             }
-                            Err(_) => break,
+                        };
+                        match job {
+                            Some(job) => {
+                                let _guard = CountGuard(Arc::clone(&in_flight));
+                                run_job(job);
+                            }
+                            None => break,
                         }
                     })
                     .expect("spawn worker")
@@ -42,75 +136,225 @@ impl ThreadPool {
             .collect();
         Self {
             workers,
-            tx: Some(tx),
-            queued,
+            queue,
+            in_flight,
+            size,
         }
     }
 
+    /// Worker-thread count.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    fn submit(&self, job: Job) {
+        // Relaxed is enough for the increment: the queue mutex orders the
+        // push against the pop, and completion (the edge that matters to
+        // waiters) is Release in CountGuard.
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        let mut st = self.queue.state.lock().unwrap();
+        assert!(!st.shutdown, "pool shut down");
+        st.jobs.push_back(job);
+        drop(st);
+        self.queue.cv.notify_one();
+    }
+
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.queued.fetch_add(1, Ordering::SeqCst);
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("worker channel closed");
+        self.submit(Box::new(f));
     }
 
     /// Jobs submitted but not yet finished.
     pub fn pending(&self) -> usize {
-        self.queued.load(Ordering::SeqCst)
+        self.in_flight.load(Ordering::Acquire)
     }
 
-    /// Busy-wait (with yield) until all submitted jobs complete.
+    /// Pop one queued job and run it on the calling thread. Returns false
+    /// when the queue is empty. This is how waiting threads "help": a
+    /// thread blocked in [`ThreadPool::scope`] or [`ThreadPool::wait_idle`]
+    /// drains the queue instead of spinning, which also makes nested
+    /// scopes deadlock-free (the waiter can always run its own
+    /// outstanding jobs even when every worker is busy).
+    fn try_run_one(&self) -> bool {
+        let job = self.queue.state.lock().unwrap().jobs.pop_front();
+        match job {
+            Some(job) => {
+                let _guard = CountGuard(Arc::clone(&self.in_flight));
+                run_job(job);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Wait (helping, then briefly parking) until all submitted jobs
+    /// complete. Not a hot path — serving joins go through `scope`.
     pub fn wait_idle(&self) {
         while self.pending() > 0 {
-            thread::yield_now();
+            if !self.try_run_one() {
+                thread::park_timeout(std::time::Duration::from_micros(100));
+            }
         }
+    }
+
+    /// Run a set of borrowed-data jobs and join them before returning —
+    /// the `std::thread::scope` shape, but on pool workers instead of
+    /// fresh threads. Jobs may borrow from the caller's stack (`'env`);
+    /// the scope guarantees they finish before it returns, even if the
+    /// closure or a job panics.
+    ///
+    /// If any spawned job panicked, the scope re-raises the first panic
+    /// payload after all jobs have completed (so partial results are
+    /// never silently kept and the original message survives).
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: FnOnce(&Scope<'_, 'env>) -> R,
+    {
+        let scope = Scope {
+            pool: self,
+            sync: Arc::new(ScopeSync {
+                pending: Mutex::new(0),
+                cv: Condvar::new(),
+            }),
+            panic: Arc::new(Mutex::new(None)),
+            _env: std::marker::PhantomData,
+        };
+        // The join must run even if `f` unwinds: jobs borrow `'env` data
+        // and may not outlive this frame.
+        struct Waiter<'a> {
+            pool: &'a ThreadPool,
+            sync: Arc<ScopeSync>,
+        }
+        impl Drop for Waiter<'_> {
+            fn drop(&mut self) {
+                loop {
+                    if *self.sync.pending.lock().unwrap() == 0 {
+                        return;
+                    }
+                    // Our jobs aren't done. Help run queued work — our own
+                    // jobs may sit behind unrelated ones in the FIFO, and
+                    // helping is what keeps nested scopes deadlock-free.
+                    // (Checking pending FIRST means a scope whose jobs
+                    // already finished never picks up strangers' work.)
+                    if self.pool.try_run_one() {
+                        continue;
+                    }
+                    // Nothing stealable: block until the last job's guard
+                    // wakes us. Time-bounded so jobs that reach the queue
+                    // *after* we block (nested scopes spawned by our own
+                    // jobs) still get stolen on the next lap instead of
+                    // deadlocking a fully-busy pool.
+                    let pending = self.sync.pending.lock().unwrap();
+                    if *pending == 0 {
+                        return;
+                    }
+                    let _ = self
+                        .sync
+                        .cv
+                        .wait_timeout(pending, std::time::Duration::from_micros(200))
+                        .unwrap();
+                }
+            }
+        }
+        let waiter = Waiter {
+            pool: self,
+            sync: Arc::clone(&scope.sync),
+        };
+        let r = f(&scope);
+        drop(waiter); // join all spawned jobs
+        if let Some(payload) = scope.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+        r
     }
 
     /// Map `f` over `items` in parallel, preserving order.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
-        T: Send + 'static,
-        R: Send + 'static,
-        F: Fn(T) -> R + Send + Sync + 'static,
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Send + Sync,
     {
         let n = items.len();
-        let f = Arc::new(f);
-        let results: Arc<Mutex<Vec<Option<R>>>> =
-            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
-        let done = Arc::new(AtomicUsize::new(0));
-        for (i, item) in items.into_iter().enumerate() {
-            let f = Arc::clone(&f);
-            let results = Arc::clone(&results);
-            let done = Arc::clone(&done);
-            self.execute(move || {
-                let r = f(item);
-                results.lock().unwrap()[i] = Some(r);
-                done.fetch_add(1, Ordering::SeqCst);
-            });
-        }
-        while done.load(Ordering::SeqCst) < n {
-            thread::yield_now();
-        }
-        Arc::try_unwrap(results)
-            .ok()
-            .expect("all workers done")
-            .into_inner()
-            .unwrap()
-            .into_iter()
-            .map(|r| r.unwrap())
-            .collect()
+        let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        self.scope(|s| {
+            for (item, slot) in items.into_iter().zip(results.iter_mut()) {
+                let f = &f;
+                s.spawn(move || {
+                    *slot = Some(f(item));
+                });
+            }
+        });
+        results.into_iter().map(|r| r.unwrap()).collect()
+    }
+}
+
+/// Handle for spawning borrowed-data jobs inside [`ThreadPool::scope`].
+pub struct Scope<'pool, 'env> {
+    pool: &'pool ThreadPool,
+    sync: Arc<ScopeSync>,
+    panic: PanicSlot,
+    // Invariant over 'env: closures may borrow anything outliving the
+    // scope call, mutably or not.
+    _env: std::marker::PhantomData<&'env mut &'env ()>,
+}
+
+impl<'pool, 'env> Scope<'pool, 'env> {
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        *self.sync.pending.lock().unwrap() += 1;
+        let guard_sync = Arc::clone(&self.sync);
+        let panic = Arc::clone(&self.panic);
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            let _guard = ScopeGuard(guard_sync);
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(f)) {
+                let mut slot = panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+        });
+        // SAFETY: the scope's Waiter joins every spawned job before the
+        // 'env frame can be left (normally or by unwind), so the closure
+        // never outlives its borrows. Erasing the lifetime is what lets it
+        // ride the pool's 'static queue.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Box<dyn FnOnce() + Send + 'static>>(
+                job,
+            )
+        };
+        self.pool.submit(job);
     }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        {
+            let mut st = self.queue.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.queue.cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
+}
+
+/// Process-wide pool for kernel-level parallelism (row-parallel GEMM,
+/// bag-parallel EB). Sized from `DLRM_ABFT_THREADS` when set, else the
+/// machine's available parallelism. Lives for the process; sharing one
+/// pool keeps nested operator parallelism from oversubscribing cores.
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let n = std::env::var("DLRM_ABFT_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
+        ThreadPool::new(n)
+    })
 }
 
 #[cfg(test)]
@@ -145,5 +389,89 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(10));
         });
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn panicking_job_does_not_wedge_wait_idle() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        pool.execute(|| {});
+        pool.wait_idle(); // must terminate: guard decrements on unwind
+        assert_eq!(pool.pending(), 0);
+        // Workers survived the panic and still run jobs.
+        let c = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let c = Arc::clone(&c);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(c.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn scope_borrows_without_static() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u64; 1024];
+        let chunk = 128;
+        pool.scope(|s| {
+            for (ci, out) in data.chunks_mut(chunk).enumerate() {
+                s.spawn(move || {
+                    for (j, x) in out.iter_mut().enumerate() {
+                        *x = (ci * chunk + j) as u64;
+                    }
+                });
+            }
+        });
+        assert!(data.iter().enumerate().all(|(i, &x)| x == i as u64));
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        // More concurrent scopes than workers: the inner scopes' join
+        // loops must help drain the queue instead of blocking a worker
+        // forever.
+        let pool = ThreadPool::new(2);
+        let pool_ref = &pool;
+        let total = Arc::new(AtomicUsize::new(0));
+        pool.scope(|s| {
+            for _ in 0..4 {
+                let total = Arc::clone(&total);
+                s.spawn(move || {
+                    pool_ref.scope(|inner| {
+                        for _ in 0..4 {
+                            let total = Arc::clone(&total);
+                            inner.spawn(move || {
+                                total.fetch_add(1, Ordering::SeqCst);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner boom")]
+    fn scope_propagates_original_panic_payload() {
+        let pool = ThreadPool::new(2);
+        pool.scope(|s| {
+            s.spawn(|| panic!("inner boom"));
+        });
+    }
+
+    #[test]
+    fn global_pool_is_usable() {
+        let pool = global();
+        assert!(pool.size() >= 1);
+        let mut x = [0usize; 16];
+        pool.scope(|s| {
+            for (i, slot) in x.iter_mut().enumerate() {
+                s.spawn(move || *slot = i + 1);
+            }
+        });
+        assert_eq!(x.iter().sum::<usize>(), (1..=16).sum());
     }
 }

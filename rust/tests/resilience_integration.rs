@@ -51,7 +51,7 @@ fn persistent_corruption_degrades_then_store_repair_recovers() {
     // recompute must re-read the same bad memory, and the response must be
     // marked degraded.
     {
-        let mut m = engine.model.lock().unwrap();
+        let mut m = engine.model.write().unwrap();
         let d = m.cfg.embedding_dim;
         for r in 0..m.tables[0].rows {
             m.tables[0].data[r * d] ^= 0x80;
@@ -66,7 +66,7 @@ fn persistent_corruption_degrades_then_store_repair_recovers() {
     // would do on a degraded alert), then verify service recovers.
     {
         let pristine = DlrmModel::load(&store, Protection::DetectRecompute).unwrap();
-        let mut m = engine.model.lock().unwrap();
+        let mut m = engine.model.write().unwrap();
         let d = m.cfg.embedding_dim;
         let bad = Scrubber::full_pass(&m.tables[0], &m.checksums[0]);
         assert_eq!(bad.len(), m.tables[0].rows, "scrubber must see every smashed row");
@@ -96,7 +96,7 @@ fn scrub_tick_finds_cold_corruption_the_request_path_misses() {
     // Corrupt one cold row (never referenced by our requests: we'll only
     // look up rows < 100, corrupt row 2999).
     {
-        let mut m = engine.model.lock().unwrap();
+        let mut m = engine.model.write().unwrap();
         let d = m.cfg.embedding_dim;
         m.tables[1].data[2999 * d + 3] ^= 0x40;
     }

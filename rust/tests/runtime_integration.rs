@@ -23,6 +23,7 @@ fn artifacts_dir() -> Option<String> {
 }
 
 #[test]
+#[ignore = "needs the optional PJRT runtime (add the xla dep, build with --cfg pjrt_runtime) and `make artifacts` outputs"]
 fn pallas_artifact_bit_identical_to_native() {
     let Some(dir) = artifacts_dir() else { return };
     let mut engine = PjrtEngine::cpu().unwrap();
@@ -42,7 +43,7 @@ fn pallas_artifact_bit_identical_to_native() {
             "abft_gemm",
             &[
                 Tensor::U8(a, vec![M, K]),
-                Tensor::I8(native.packed.data().to_vec(), vec![K, N + 1]),
+                Tensor::I8(native.packed.to_row_major(), vec![K, N + 1]),
             ],
         )
         .unwrap();
@@ -57,6 +58,7 @@ fn pallas_artifact_bit_identical_to_native() {
 }
 
 #[test]
+#[ignore = "needs the optional PJRT runtime (add the xla dep, build with --cfg pjrt_runtime) and `make artifacts` outputs"]
 fn pallas_artifact_detects_injected_fault() {
     let Some(dir) = artifacts_dir() else { return };
     let mut engine = PjrtEngine::cpu().unwrap();
@@ -68,7 +70,7 @@ fn pallas_artifact_detects_injected_fault() {
     rng.fill_u8(&mut a);
     rng.fill_i8(&mut b);
     let native = AbftGemm::new(&b, K, N);
-    let mut b_enc = native.packed.data().to_vec();
+    let mut b_enc = native.packed.to_row_major();
     // Flip a payload bit (avoid the checksum column, index n of each row).
     let p = rng.gen_range(0, K);
     let j = rng.gen_range(0, N);
@@ -86,6 +88,7 @@ fn pallas_artifact_detects_injected_fault() {
 }
 
 #[test]
+#[ignore = "needs the optional PJRT runtime (add the xla dep, build with --cfg pjrt_runtime) and `make artifacts` outputs"]
 fn eb_artifact_matches_native_bag() {
     let Some(dir) = artifacts_dir() else { return };
     let mut engine = PjrtEngine::cpu().unwrap();
@@ -138,6 +141,7 @@ fn eb_artifact_matches_native_bag() {
 }
 
 #[test]
+#[ignore = "needs the optional PJRT runtime (add the xla dep, build with --cfg pjrt_runtime) and `make artifacts` outputs"]
 fn model_artifacts_serve_scores() {
     let Some(dir) = artifacts_dir() else { return };
     let mut engine = PjrtEngine::cpu().unwrap();

@@ -1,0 +1,199 @@
+//! Property tests for the vectorized hot path: the AVX2 GEMM microkernel,
+//! the scalar panel fallback, and the SIMD EmbeddingBag must be
+//! **bit-identical** to their reference implementations across a shape
+//! sweep that straddles every tiling boundary (NR panels, k pairing,
+//! m-row pairing, the ABFT extra column, and the m=1 serving case) — on
+//! hosts without AVX2 the dispatch degenerates to scalar and the same
+//! assertions hold for the fallback.
+
+use dlrm_abft::abft::{AbftGemm, EbChecksum};
+use dlrm_abft::embedding::{bag_sum_8, bag_sum_8_scalar, QuantTable8};
+use dlrm_abft::gemm::{gemm_exec, gemm_exec_into, gemm_exec_into_scalar, gemm_naive, PackedB};
+use dlrm_abft::util::rng::Pcg32;
+
+fn rand_ab(rng: &mut Pcg32, m: usize, k: usize, n: usize) -> (Vec<u8>, Vec<i8>) {
+    let mut a = vec![0u8; m * k];
+    let mut b = vec![0i8; k * n];
+    rng.fill_u8(&mut a);
+    rng.fill_i8(&mut b);
+    (a, b)
+}
+
+/// The sweep: every (m, k, n) here crosses at least one kernel boundary.
+/// NR = 32 (column panel), k pairing = 2, row pairing = 2.
+fn boundary_shapes() -> Vec<(usize, usize, usize)> {
+    let mut shapes = vec![
+        (1, 1, 1),    // degenerate
+        (1, 512, 512),   // m=1 serving, aligned
+        (1, 511, 513),   // m=1 serving, everything ragged
+        (2, 2, 32),      // exactly one panel, one k pair
+        (2, 3, 32),      // odd k tail row
+        (3, 64, 64),     // odd m tail row
+        (4, 128, 31),    // single ragged panel
+        (4, 128, 33),    // full panel + width-1 tail panel (ABFT shape)
+        (5, 127, 95),    // odd k, ragged panel, odd m
+        (7, 129, 160),   // multi-panel, odd everything
+        (16, 512, 512),  // DLRM MLP shape
+        (17, 256, 257),  // row tail over panel tail
+    ];
+    // Dense sweep of small shapes around the pairing boundaries.
+    for m in [1usize, 2, 3] {
+        for k in [1usize, 2, 3, 4, 5] {
+            for n in [1usize, 31, 32, 33, 63, 64, 65] {
+                shapes.push((m, k, n));
+            }
+        }
+    }
+    shapes
+}
+
+#[test]
+fn gemm_simd_scalar_naive_bit_identical() {
+    let mut rng = Pcg32::new(0x51D);
+    for (m, k, n) in boundary_shapes() {
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let packed = PackedB::pack(&b, k, n);
+        let naive = gemm_naive(&a, &b, m, k, n);
+        let dispatched = gemm_exec(&a, &packed, m);
+        assert_eq!(dispatched, naive, "dispatch != naive at ({m},{k},{n})");
+        let mut scalar = vec![0i32; m * n];
+        gemm_exec_into_scalar(&a, &packed, m, &mut scalar);
+        assert_eq!(scalar, naive, "scalar != naive at ({m},{k},{n})");
+    }
+}
+
+#[test]
+fn gemm_extra_column_rides_every_shape() {
+    // The checksum extra column must behave exactly like an augmented
+    // matrix on both kernel paths, across the same boundary sweep.
+    let mut rng = Pcg32::new(0xEC);
+    for (m, k, n) in boundary_shapes() {
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let mut extra = vec![0i8; k];
+        rng.fill_i8(&mut extra);
+        let mut b_aug = vec![0i8; k * (n + 1)];
+        for p in 0..k {
+            b_aug[p * (n + 1)..p * (n + 1) + n].copy_from_slice(&b[p * n..(p + 1) * n]);
+            b_aug[p * (n + 1) + n] = extra[p];
+        }
+        let packed = PackedB::pack_with_extra_col(&b, k, n, &extra);
+        let naive = gemm_naive(&a, &b_aug, m, k, n + 1);
+        assert_eq!(
+            gemm_exec(&a, &packed, m),
+            naive,
+            "extra-col dispatch at ({m},{k},{n})"
+        );
+        let mut scalar = vec![0i32; m * (n + 1)];
+        gemm_exec_into_scalar(&a, &packed, m, &mut scalar);
+        assert_eq!(scalar, naive, "extra-col scalar at ({m},{k},{n})");
+    }
+}
+
+#[test]
+fn gemm_saturation_adversarial_inputs_exact() {
+    // Extremes that would saturate a real maddubs (u8=255 × i8=±127/−128):
+    // the widened-madd kernel must stay exact.
+    for &(m, k, n) in &[(2usize, 64usize, 64usize), (1, 3200, 33), (3, 127, 65)] {
+        for (afill, bfill) in [(255u8, 127i8), (255, -128), (255, -127), (128, 127)] {
+            let a = vec![afill; m * k];
+            let b = vec![bfill; k * n];
+            let packed = PackedB::pack(&b, k, n);
+            assert_eq!(
+                gemm_exec(&a, &packed, m),
+                gemm_naive(&a, &b, m, k, n),
+                "({m},{k},{n}) a={afill} b={bfill}"
+            );
+        }
+    }
+}
+
+#[test]
+fn abft_gemm_clean_and_detects_on_simd_path() {
+    // The protected GEMM (checksum column packed in) through the
+    // dispatched kernel: clean runs verify clean, a payload flip via the
+    // panel-layout offset is detected.
+    let mut rng = Pcg32::new(0xAB);
+    for &(m, k, n) in &[(1usize, 256usize, 256usize), (4, 100, 33), (16, 512, 512)] {
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let mut abft = AbftGemm::new(&b, k, n);
+        let (_, verdict) = abft.exec(&a, m);
+        assert!(verdict.clean(), "clean ({m},{k},{n})");
+        // Flip a high payload bit through the layout-mapping offset.
+        let p = rng.gen_range(0, k);
+        let j = rng.gen_range(0, n);
+        let idx = abft.packed.offset(p, j);
+        let old = abft.packed.at(p, j);
+        abft.packed.data_mut()[idx] = (old as u8 ^ 0x40) as i8;
+        let (_, verdict) = abft.exec(&a, m);
+        assert!(!verdict.clean(), "corrupt ({m},{k},{n}) escaped");
+    }
+}
+
+#[test]
+fn eb_simd_bit_identical_and_fused_equals_two_pass() {
+    let mut rng = Pcg32::new(0xEB);
+    for d in [16usize, 32, 48, 64, 100] {
+        let rows = 2000;
+        let table = QuantTable8::random(rows, d, &mut rng);
+        let cs = EbChecksum::build_8(&table);
+        let fused = cs.clone().fuse(&table);
+        for trial in 0..10 {
+            let pooling = rng.gen_range(1, 120);
+            let indices: Vec<usize> = (0..pooling).map(|_| rng.gen_range(0, rows)).collect();
+            let weights: Vec<f32> = (0..pooling).map(|_| rng.next_f32() + 0.25).collect();
+            let w = if trial % 2 == 0 { None } else { Some(&weights[..]) };
+
+            // SIMD bag == scalar bag, bit for bit.
+            let mut simd = vec![0f32; d];
+            let mut scalar = vec![0f32; d];
+            bag_sum_8(&table, &indices, w, trial % 3 == 0, &mut simd);
+            bag_sum_8_scalar(&table, &indices, w, false, &mut scalar);
+            assert_eq!(simd, scalar, "d={d} trial={trial}");
+
+            // Fused single-pass checksum == two-pass bag + check_bag:
+            // same result vector, same verdict.
+            let mut fused_out = vec![0f32; d];
+            let flagged = fused.bag_sum_checked(&table, &indices, w, false, &mut fused_out);
+            assert_eq!(fused_out, scalar, "fused result d={d} trial={trial}");
+            let two_pass = cs.check_bag(&table.alpha, &table.beta, &indices, w, &scalar);
+            assert_eq!(flagged, two_pass, "verdict d={d} trial={trial}");
+            assert!(!flagged, "clean bag flagged d={d} trial={trial}");
+        }
+    }
+}
+
+#[test]
+fn eb_fused_detects_corruption_like_two_pass() {
+    let mut rng = Pcg32::new(0xEBB);
+    let (rows, d) = (1500usize, 64usize);
+    let table = QuantTable8::random(rows, d, &mut rng);
+    let cs = EbChecksum::build_8(&table);
+    let fused = cs.clone().fuse(&table);
+    let indices: Vec<usize> = (0..100).map(|_| rng.gen_range(0, rows)).collect();
+    // Corrupt a touched row's high bit after checksums were built.
+    let mut bad_table = table.clone();
+    bad_table.data[indices[11] * d + 3] ^= 0x80;
+    let mut fused_out = vec![0f32; d];
+    let fused_flag = fused.bag_sum_checked(&bad_table, &indices, None, false, &mut fused_out);
+    let mut plain = vec![0f32; d];
+    bag_sum_8(&bad_table, &indices, None, false, &mut plain);
+    let two_pass_flag = cs.check_bag(&bad_table.alpha, &bad_table.beta, &indices, None, &plain);
+    assert_eq!(fused_out, plain);
+    assert_eq!(fused_flag, two_pass_flag);
+    assert!(fused_flag, "high-bit table corruption must be flagged");
+}
+
+#[test]
+fn parallel_gemm_matches_serial_on_large_batch() {
+    // Crosses the row-parallel threshold: the fan-out over m blocks must
+    // be bit-identical to the single-thread path.
+    let mut rng = Pcg32::new(0x9A9);
+    let (m, k, n) = (64, 300, 256);
+    let (a, b) = rand_ab(&mut rng, m, k, n);
+    let packed = PackedB::pack(&b, k, n);
+    let mut par = vec![0i32; m * n];
+    gemm_exec_into(&a, &packed, m, &mut par);
+    let mut ser = vec![0i32; m * n];
+    gemm_exec_into_scalar(&a, &packed, m, &mut ser);
+    assert_eq!(par, ser);
+}

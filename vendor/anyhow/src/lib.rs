@@ -1,0 +1,153 @@
+//! Vendored, offline-compatible subset of the `anyhow` error API.
+//!
+//! The build environment has no network registry, so this path crate
+//! provides the exact surface the workspace uses: [`Error`], [`Result`],
+//! the [`anyhow!`] / [`bail!`] macros, and the [`Context`] extension
+//! trait for both `Result` and `Option`. Error values carry a message
+//! chain (context is prepended, `: `-joined) — no backtraces, no
+//! downcasting.
+
+use std::fmt;
+
+/// Drop-in error type: a boxed message chain.
+///
+/// Deliberately does **not** implement `std::error::Error`, so the
+/// blanket `From<E: std::error::Error>` conversion below stays coherent
+/// (same design as the real crate).
+pub struct Error {
+    msg: Box<str>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self {
+            msg: m.to_string().into_boxed_str(),
+        }
+    }
+
+    /// Prepend a context layer (what `Context::context` does).
+    pub fn wrap<C: fmt::Display>(self, ctx: C) -> Self {
+        Self::msg(format!("{ctx}: {}", self.msg))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Include the source chain the way `{:#}` would.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error::msg(msg)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (and to `None`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("...")` — build an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("...")` — early-return an error from a `Result` function.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// `ensure!(cond, "...")` — bail unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let e = io_fail().context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config: disk on fire");
+        let e: Error = None::<()>.with_context(|| "missing flag").unwrap_err();
+        assert_eq!(e.to_string(), "missing flag");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {} for {}", 7, "x");
+        assert_eq!(e.to_string(), "bad value 7 for x");
+        fn f() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 1");
+        fn g(ok: bool) -> Result<u32> {
+            ensure!(ok, "must be ok");
+            Ok(3)
+        }
+        assert_eq!(g(true).unwrap(), 3);
+        assert!(g(false).is_err());
+    }
+}
