@@ -1,0 +1,142 @@
+//! Shard-layer perf harness: emits `BENCH_PR2.json` so the serving
+//! trajectory stays machine-readable across PRs. Covers:
+//!
+//! * Router throughput — batch forward req/s unsharded vs N ∈ {1, 2, 4}
+//!   shards (R = 2): the per-shard fan-out on the global pool vs the
+//!   request-parallel local stage.
+//! * Failover latency — the first batch that hits a persistently
+//!   corrupted primary replica (detect → retry → quarantine → re-serve
+//!   shard-batch from the healthy sibling) vs the clean-batch median.
+//! * Repair latency — the synchronous re-copy + checksum verify +
+//!   re-admit of the quarantined replica.
+//!
+//! Env: `QUICK=1` shrinks sizes/iterations; `BENCH_OUT=path` overrides
+//! the output file. Run: `cargo bench --bench perf_shard`.
+
+use dlrm_abft::bench::harness::{measure, BenchConfig};
+use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, DlrmRequest, Protection, TableConfig};
+use dlrm_abft::shard::{ShardPlan, ShardRouter, ShardStore};
+use dlrm_abft::util::json::Json;
+use dlrm_abft::util::rng::Pcg32;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+fn bench_model(rows: usize) -> DlrmModel {
+    DlrmModel::random(DlrmConfig {
+        num_dense: 13,
+        embedding_dim: 64,
+        bottom_mlp: vec![128, 64],
+        top_mlp: vec![128],
+        tables: vec![TableConfig { rows, pooling: 20 }; 8],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed: 0x5AD2,
+    })
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick");
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_PR2.json".into());
+    let cfg = if quick {
+        BenchConfig { warmup_iters: 1, sample_iters: 3, inner_reps: 1 }
+    } else {
+        BenchConfig { warmup_iters: 3, sample_iters: 11, inner_reps: 1 }
+    };
+    let rows = if quick { 4_000 } else { 20_000 };
+    let batch = 32usize;
+
+    let model = bench_model(rows);
+    let mut rng = Pcg32::new(0x17AF);
+    let reqs: Vec<DlrmRequest> = model.synth_requests(batch, &mut rng);
+
+    // Unsharded baseline.
+    let local = measure(&cfg, || {}, || {
+        std::hint::black_box(model.forward(&reqs));
+    });
+    let local_rps = batch as f64 / local.median();
+    eprintln!("perf_shard: unsharded {local_rps:.1} req/s");
+
+    // Router throughput at N shards × R=2 replicas.
+    let mut shard_rows = Vec::new();
+    for n in [1usize, 2, 4] {
+        let plan = ShardPlan::hash_placement(model.tables.len(), n, 2);
+        let store = Arc::new(ShardStore::from_model(&model, plan, 256));
+        let router = ShardRouter::new(Arc::clone(&store));
+        let routed = measure(&cfg, || {}, || {
+            std::hint::black_box(model.forward_with(&reqs, &router));
+        });
+        let rps = batch as f64 / routed.median();
+        eprintln!("perf_shard: N={n} R=2 {rps:.1} req/s");
+        shard_rows.push(Json::obj(vec![
+            ("num_shards", num(n as f64)),
+            ("replicas", num(2.0)),
+            ("req_per_s", num(round3(rps))),
+            ("vs_unsharded", num(round3(rps / local_rps))),
+        ]));
+    }
+
+    // Failover latency: corrupt the primary replica of table 0 so the
+    // next batch detects persistently, quarantines, and re-serves the
+    // shard-batch from the sibling. One-shot by nature (the store heals),
+    // so it is timed directly rather than through `measure`.
+    let plan = ShardPlan::hash_placement(model.tables.len(), 2, 2);
+    let store = Arc::new(ShardStore::from_model(&model, plan, 256));
+    let router = ShardRouter::new(Arc::clone(&store));
+    let clean = measure(&cfg, || {}, || {
+        std::hint::black_box(model.forward_with(&reqs, &router));
+    });
+    let d = model.cfg.embedding_dim;
+    for row in 0..model.tables[0].rows {
+        store.flip_table_byte(0, 0, row * d, 0x80);
+    }
+    let t0 = Instant::now();
+    let (_, rep) = model.forward_with(&reqs, &router);
+    let failover_batch_s = t0.elapsed().as_secs_f64();
+    assert!(rep.shard_failovers >= 1, "failover batch must fail over");
+
+    let t1 = Instant::now();
+    let repairs = store.drain_repairs();
+    let repair_s = t1.elapsed().as_secs_f64();
+    assert!(repairs >= 1);
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_shard_pr2".into())),
+        ("quick", Json::Bool(quick)),
+        (
+            "host",
+            Json::obj(vec![(
+                "threads",
+                num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0) as f64),
+            )]),
+        ),
+        ("rows_per_table", num(rows as f64)),
+        ("batch", num(batch as f64)),
+        ("unsharded_req_per_s", num(round3(local_rps))),
+        ("router", Json::Arr(shard_rows)),
+        (
+            "failover",
+            Json::obj(vec![
+                ("clean_batch_us", num(round3(clean.median() * 1e6))),
+                ("failover_batch_us", num(round3(failover_batch_s * 1e6))),
+                (
+                    "failover_added_us",
+                    num(round3((failover_batch_s - clean.median()) * 1e6)),
+                ),
+                ("repair_us", num(round3(repair_s * 1e6))),
+            ]),
+        ),
+    ]);
+    let text = format!("{doc}");
+    std::fs::write(&out_path, &text).expect("write bench output");
+    println!("{text}");
+    eprintln!("perf_shard: wrote {out_path}");
+}

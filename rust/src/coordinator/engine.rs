@@ -13,11 +13,16 @@
 use crate::abft::Scrubber;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ScoreRequest, ScoreResponse};
-use crate::dlrm::{DlrmModel, DlrmRequest, InferenceReport, Protection};
+use crate::dlrm::{DlrmModel, DlrmRequest, EbStage, InferenceReport, LocalEbStage, Protection};
+use crate::shard::{RepairWorker, ShardPlan, ShardRouter, ShardStore};
+use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use std::sync::atomic::Ordering;
-use std::sync::{Mutex, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
+
+/// The unsharded EB stage, shared by every non-sharded engine.
+static LOCAL_EB_STAGE: LocalEbStage = LocalEbStage;
 
 /// Online fault injection for resilience drills.
 #[derive(Clone, Debug)]
@@ -44,6 +49,11 @@ impl Default for ChaosConfig {
 enum ChaosUndo {
     Weight { layer: usize, idx: usize, old: i8 },
     Table { table: usize, idx: usize, old: u8 },
+    /// Conditional restore of a shard-store replica byte (sharded
+    /// engines): applied only if the flip is still present, because a
+    /// concurrent background repair may have already rewritten the
+    /// replica from a clean sibling.
+    Replica { table: usize, replica: usize, idx: usize, old: u8, mask: u8 },
 }
 
 /// One batch's injection sites, drawn atomically (a single chaos-mutex
@@ -52,14 +62,27 @@ enum ChaosUndo {
 struct ChaosPlan {
     /// (layer, p, j, bit)
     weight: Option<(usize, usize, usize, u32)>,
-    /// (table, byte index, bit)
-    table: Option<(usize, usize, u32)>,
+    /// (table, byte index, bit, replica). `replica` is `None` for the
+    /// engine's own tables (unsharded) and `Some(r)` for a shard-store
+    /// replica copy (sharded serving — table traffic never touches the
+    /// engine model's tables there).
+    table: Option<(usize, usize, u32, Option<usize>)>,
 }
 
 impl ChaosPlan {
     fn is_empty(&self) -> bool {
         self.weight.is_none() && self.table.is_none()
     }
+}
+
+/// Sharded-serving attachment: the replicated store, the router that
+/// serves EB traffic from it, and (optionally) the background repairer.
+pub struct ShardServing {
+    pub store: Arc<ShardStore>,
+    pub router: ShardRouter,
+    /// Keeps the background repair thread alive for the engine's
+    /// lifetime; dropping the engine joins it.
+    pub worker: Option<RepairWorker>,
 }
 
 pub struct Engine {
@@ -70,8 +93,12 @@ pub struct Engine {
     chaos: Option<Mutex<(ChaosConfig, Pcg32)>>,
     /// Background table scrubbers (one per table), advanced between
     /// batches to proactively catch latent memory corruption in cold rows
-    /// (see abft::scrub). None disables scrubbing.
+    /// (see abft::scrub). None disables scrubbing. Sharded engines scrub
+    /// the store's replicas instead (see [`Engine::scrub_tick`]).
     scrubbers: Option<Mutex<Vec<Scrubber>>>,
+    /// When set, embedding traffic is served from the shard store via the
+    /// router; the dense MLP layers stay in `model`.
+    shards: Option<ShardServing>,
 }
 
 impl Engine {
@@ -81,6 +108,7 @@ impl Engine {
             metrics: Metrics::new(),
             chaos: None,
             scrubbers: None,
+            shards: None,
         }
     }
 
@@ -91,6 +119,7 @@ impl Engine {
             metrics: Metrics::new(),
             chaos: Some(Mutex::new((chaos, rng))),
             scrubbers: None,
+            shards: None,
         }
     }
 
@@ -101,10 +130,66 @@ impl Engine {
         self
     }
 
+    /// Serve embedding traffic from a replicated shard store built from
+    /// the model's tables (`scrub_stride` rows per replica table per
+    /// scrub tick). Dense MLP layers keep living in the engine; scores
+    /// stay bit-identical to the unsharded engine on clean data.
+    pub fn with_shards(mut self, plan: ShardPlan, scrub_stride: usize) -> Self {
+        let store = {
+            let model = self.model.read().unwrap();
+            Arc::new(ShardStore::from_model(&model, plan, scrub_stride))
+        };
+        self.shards = Some(ShardServing {
+            router: ShardRouter::new(Arc::clone(&store)),
+            store,
+            worker: None,
+        });
+        self
+    }
+
+    /// Spawn the background [`RepairWorker`] over the shard store's
+    /// repair queue. Must be called **after** [`Engine::with_shards`]
+    /// (panics otherwise — a silently worker-less store would let
+    /// quarantined replicas pile up). Without a worker, repairs run when
+    /// the operator calls [`ShardStore::drain_repairs`].
+    pub fn with_repair_worker(mut self) -> Self {
+        let sh = self
+            .shards
+            .as_mut()
+            .expect("with_repair_worker requires with_shards to be applied first");
+        sh.worker = Some(RepairWorker::spawn(Arc::clone(&sh.store)));
+        self
+    }
+
+    /// The shard store, when this engine serves sharded.
+    pub fn shard_store(&self) -> Option<&Arc<ShardStore>> {
+        self.shards.as_ref().map(|s| &s.store)
+    }
+
+    /// The EB-stage strategy this engine serves with.
+    fn eb_stage(&self) -> &dyn EbStage {
+        match &self.shards {
+            Some(s) => &s.router,
+            None => &LOCAL_EB_STAGE,
+        }
+    }
+
     /// Advance every table's scrubber by one strip. Called by the batch
     /// loop between batches (idle slots). Returns corrupted (table, row)
     /// pairs found this tick.
+    ///
+    /// Sharded engines scrub the store's replica copies instead (that is
+    /// where table traffic is served from); a scrub hit quarantines the
+    /// replica and queues a repair — the proactive arm of
+    /// detection-driven failover.
     pub fn scrub_tick(&self) -> Vec<(usize, usize)> {
+        if let Some(sh) = &self.shards {
+            let hits = sh.store.scrub_tick();
+            self.metrics
+                .scrub_hits
+                .fetch_add(hits.len() as u64, Ordering::Relaxed);
+            return hits.into_iter().map(|(_s, _r, table, row)| (table, row)).collect();
+        }
         let Some(scrubbers) = &self.scrubbers else {
             return Vec::new();
         };
@@ -168,7 +253,7 @@ impl Engine {
     /// under a shared lock.
     fn run_batch_clean(&self, dlrm_reqs: &[DlrmRequest]) -> (Vec<f32>, bool, bool, bool) {
         let model = self.model.read().unwrap();
-        let (scores, report) = model.forward(dlrm_reqs);
+        let (scores, report) = model.forward_with(dlrm_reqs, self.eb_stage());
         self.apply_detection_policy(&model, dlrm_reqs, scores, &report)
     }
 
@@ -183,6 +268,7 @@ impl Engine {
         mut scores: Vec<f32>,
         report: &InferenceReport,
     ) -> (Vec<f32>, bool, bool, bool) {
+        self.record_shard_events(report);
         let detected = !report.clean();
         let mut recomputed = false;
         let mut degraded = false;
@@ -192,7 +278,8 @@ impl Engine {
                 Ordering::Relaxed,
             );
             if model.cfg.protection == Protection::DetectRecompute {
-                let (scores2, report2) = model.forward(dlrm_reqs);
+                let (scores2, report2) = model.forward_with(dlrm_reqs, self.eb_stage());
+                self.record_shard_events(&report2);
                 scores = scores2;
                 recomputed = true;
                 self.metrics.recomputes.fetch_add(1, Ordering::Relaxed);
@@ -203,6 +290,38 @@ impl Engine {
             }
         }
         (scores, detected, recomputed, degraded)
+    }
+
+    /// Fold the router's transparently-recovered events into the serving
+    /// counters (they never dirty a batch, but operators must see them).
+    fn record_shard_events(&self, report: &InferenceReport) {
+        if report.shard_detections > 0 {
+            self.metrics
+                .shard_detections
+                .fetch_add(report.shard_detections as u64, Ordering::Relaxed);
+        }
+        if report.shard_failovers > 0 {
+            self.metrics
+                .shard_failovers
+                .fetch_add(report.shard_failovers as u64, Ordering::Relaxed);
+        }
+        if report.shard_quarantines > 0 {
+            self.metrics
+                .shard_quarantines
+                .fetch_add(report.shard_quarantines as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Metrics snapshot extended with the shard store's health block when
+    /// this engine serves sharded (the `/metrics`-style payload).
+    pub fn metrics_snapshot(&self) -> Json {
+        let mut snap = self.metrics.snapshot();
+        if let Some(sh) = &self.shards {
+            if let Json::Obj(map) = &mut snap {
+                map.insert("shards".to_string(), sh.store.health_json());
+            }
+        }
+        snap
     }
 
     /// Chaos-drill path. All of a batch's RNG draws — the dice AND the
@@ -222,11 +341,11 @@ impl Engine {
         }
 
         let mut model = self.model.write().unwrap();
-        let undo = Self::apply_plan(&mut model, &plan);
-        let (scores, report) = model.forward(dlrm_reqs);
+        let undo = self.apply_plan(&mut model, &plan);
+        let (scores, report) = model.forward_with(dlrm_reqs, self.eb_stage());
         // Restore transient chaos before any retry (a transient fault
         // would not recur on real hardware either).
-        Self::undo_chaos(&mut model, &undo);
+        self.undo_chaos(&mut model, &undo);
         self.apply_detection_policy(&model, dlrm_reqs, scores, &report)
     }
 
@@ -251,18 +370,27 @@ impl Engine {
         }
         if rng.next_f64() < cfg.p_table_flip && !model.tables.is_empty() {
             let t = rng.gen_range(0, model.tables.len());
+            // Sharded serving reads replica copies, not the model's
+            // tables — aim the flip where the traffic actually goes.
+            let replica = self
+                .shards
+                .as_ref()
+                .map(|sh| rng.gen_range(0, sh.store.plan.replicas));
             plan.table = Some((
                 t,
                 rng.gen_range(0, model.tables[t].data.len()),
                 rng.gen_range_u32(8),
+                replica,
             ));
         }
         plan
     }
 
-    /// Apply a drawn plan (write lock held by the caller); the logical
-    /// (p, j) is mapped through the panel-interleaved layout.
-    fn apply_plan(model: &mut DlrmModel, plan: &ChaosPlan) -> Vec<ChaosUndo> {
+    /// Apply a drawn plan (model write lock held by the caller); the
+    /// logical (p, j) is mapped through the panel-interleaved layout.
+    /// Replica-targeted table flips go through the shard store's own
+    /// (replica-level) write lock.
+    fn apply_plan(&self, model: &mut DlrmModel, plan: &ChaosPlan) -> Vec<ChaosUndo> {
         let mut undo = Vec::new();
         if let Some((layer, p, j, bit)) = plan.weight {
             let abft = layer_mut(model, layer).abft_mut();
@@ -272,15 +400,24 @@ impl Engine {
             data[idx] = (old as u8 ^ (1 << bit)) as i8;
             undo.push(ChaosUndo::Weight { layer, idx, old });
         }
-        if let Some((t, idx, bit)) = plan.table {
-            let old = model.tables[t].data[idx];
-            model.tables[t].data[idx] = old ^ (1 << bit);
-            undo.push(ChaosUndo::Table { table: t, idx, old });
+        if let Some((t, idx, bit, replica)) = plan.table {
+            match replica {
+                Some(r) => {
+                    let store = &self.shards.as_ref().expect("replica plan without shards").store;
+                    let old = store.chaos_flip_table_byte(t, r, idx, 1 << bit);
+                    undo.push(ChaosUndo::Replica { table: t, replica: r, idx, old, mask: 1 << bit });
+                }
+                None => {
+                    let old = model.tables[t].data[idx];
+                    model.tables[t].data[idx] = old ^ (1 << bit);
+                    undo.push(ChaosUndo::Table { table: t, idx, old });
+                }
+            }
         }
         undo
     }
 
-    fn undo_chaos(model: &mut DlrmModel, undo: &[ChaosUndo]) {
+    fn undo_chaos(&self, model: &mut DlrmModel, undo: &[ChaosUndo]) {
         for u in undo {
             match *u {
                 ChaosUndo::Weight { layer, idx, old } => {
@@ -288,6 +425,16 @@ impl Engine {
                 }
                 ChaosUndo::Table { table, idx, old } => {
                     model.tables[table].data[idx] = old;
+                }
+                ChaosUndo::Replica { table, replica, idx, old, mask } => {
+                    // Conditional: skipped when a background repair has
+                    // already replaced the corrupted byte (a blind XOR
+                    // would re-corrupt a Healthy replica).
+                    self.shards
+                        .as_ref()
+                        .expect("replica undo without shards")
+                        .store
+                        .chaos_restore_table_byte(table, replica, idx, old, mask);
                 }
             }
         }
@@ -415,6 +562,62 @@ mod tests {
         }
         assert!(detected_any);
         assert_eq!(engine.metrics.recomputes.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn sharded_engine_matches_unsharded_scores() {
+        let reqs = make_requests(&tiny_model(Protection::DetectRecompute), 6, 21);
+        let plain = Engine::new(tiny_model(Protection::DetectRecompute));
+        let sharded = Engine::new(tiny_model(Protection::DetectRecompute))
+            .with_shards(crate::shard::ShardPlan::hash_placement(1, 2, 2), 64);
+        let want = plain.process_batch(reqs.clone());
+        let got = sharded.process_batch(reqs);
+        assert_eq!(want.len(), got.len());
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.score, g.score, "sharded serving must be bit-identical");
+            assert!(!g.detected);
+        }
+        let snap = sharded.metrics_snapshot();
+        assert!(snap.get("shards").is_some(), "sharded snapshot must carry health");
+        assert!(plain.metrics_snapshot().get("shards").is_none());
+    }
+
+    #[test]
+    fn sharded_chaos_table_flip_fails_over_transparently() {
+        let reqs = make_requests(&tiny_model(Protection::DetectRecompute), 6, 22);
+        let clean_engine = Engine::new(tiny_model(Protection::DetectRecompute));
+        let clean = clean_engine.process_batch(reqs.clone());
+        let engine = Engine::with_chaos(
+            tiny_model(Protection::DetectRecompute),
+            ChaosConfig {
+                p_weight_flip: 0.0,
+                p_table_flip: 1.0,
+                seed: 23,
+            },
+        )
+        .with_shards(crate::shard::ShardPlan::hash_placement(1, 1, 2), 64);
+        // Replica flips surface when a touched row is hit; run batches
+        // until the router sees one, then check the response was clean.
+        let mut seen = false;
+        for _ in 0..300 {
+            let resps = engine.process_batch(reqs.clone());
+            if engine.metrics.shard_detections.load(Ordering::Relaxed) > 0 {
+                seen = true;
+                // Detected corruption was routed around: the batch is
+                // neither detected nor degraded, scores match clean.
+                assert!(!resps[0].detected && !resps[0].degraded);
+                for (r, c) in resps.iter().zip(&clean) {
+                    assert_eq!(r.score, c.score);
+                }
+                break;
+            }
+        }
+        assert!(seen, "replica chaos never detected by the router");
+        // The quarantined replica repairs back to health.
+        let store = engine.shard_store().unwrap();
+        assert!(store.quarantined_replicas() >= 1);
+        store.drain_repairs();
+        assert_eq!(store.quarantined_replicas(), 0);
     }
 
     #[test]

@@ -80,6 +80,16 @@ pub struct Metrics {
     pub scrubbed_rows: AtomicU64,
     /// Corrupted rows found by the scrubber.
     pub scrub_hits: AtomicU64,
+    /// Shard-router events (sharded serving): bags flagged on a replica,
+    /// shard-batches re-served from a sibling replica, and
+    /// Healthy→Quarantined transitions. Under `DetectRecompute` these
+    /// were recovered transparently (retry or failover) and never
+    /// dirtied a batch; under detect-only protection a `shard_detections`
+    /// count means the flagged value WAS served and the batch was marked
+    /// detected (contrast `detections`/`degraded`).
+    pub shard_detections: AtomicU64,
+    pub shard_failovers: AtomicU64,
+    pub shard_quarantines: AtomicU64,
     pub latency: LatencyHistogram,
 }
 
@@ -93,6 +103,9 @@ impl Metrics {
             degraded: AtomicU64::new(0),
             scrubbed_rows: AtomicU64::new(0),
             scrub_hits: AtomicU64::new(0),
+            shard_detections: AtomicU64::new(0),
+            shard_failovers: AtomicU64::new(0),
+            shard_quarantines: AtomicU64::new(0),
             latency: LatencyHistogram::new(),
         }
     }
@@ -117,6 +130,18 @@ impl Metrics {
             (
                 "scrub_hits",
                 Json::Num(self.scrub_hits.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "shard_detections",
+                Json::Num(self.shard_detections.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "shard_failovers",
+                Json::Num(self.shard_failovers.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "shard_quarantines",
+                Json::Num(self.shard_quarantines.load(Ordering::Relaxed) as f64),
             ),
             ("latency_mean_us", Json::Num(self.latency.mean_us())),
             ("latency_p50_us", Json::Num(self.latency.quantile_us(0.5) as f64)),
@@ -170,6 +195,9 @@ mod tests {
             "degraded",
             "scrubbed_rows",
             "scrub_hits",
+            "shard_detections",
+            "shard_failovers",
+            "shard_quarantines",
             "latency_mean_us",
             "latency_p50_us",
             "latency_p99_us",

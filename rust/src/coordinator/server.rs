@@ -136,7 +136,7 @@ fn handle_conn(stream: TcpStream, batcher: Arc<Batcher<Pending>>, engine: Arc<En
         // Control ops.
         if let Some(op) = parsed.get("op").and_then(Json::as_str) {
             match op {
-                "metrics" => writeln!(writer, "{}", engine.metrics.snapshot())?,
+                "metrics" => writeln!(writer, "{}", engine.metrics_snapshot())?,
                 "ping" => writeln!(writer, "{}", Json::obj(vec![("pong", Json::Bool(true))]))?,
                 _ => writeln!(writer, "{}", err_json("unknown op"))?,
             }

@@ -8,6 +8,7 @@ use crate::dlrm::config::Protection;
 use crate::gemm::{gemm_exec, PackedB};
 use crate::quant::{requantize, requantize_exclude_last_col, QParams, RequantParams};
 use crate::util::rng::Pcg32;
+use std::sync::Arc;
 
 /// Detection/recovery events from one layer invocation.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -32,8 +33,9 @@ pub struct AbftLinear {
     plain: PackedB,
     pub w_qparams: QParams,
     pub out_qparams: QParams,
-    /// Column sums of the weight payload, for requantization.
-    w_col_sums: Vec<i32>,
+    /// Column sums of the weight payload, for requantization; `Arc`-shared
+    /// into each forward's `RequantParams` instead of cloned per call.
+    w_col_sums: Arc<[i32]>,
     pub k: usize,
     pub n: usize,
     pub relu: bool,
@@ -99,7 +101,7 @@ impl AbftLinear {
             plain: PackedB::pack(wq, k, n),
             w_qparams,
             out_qparams: QParams::fit_u8(out_range.0, out_range.1),
-            w_col_sums,
+            w_col_sums: w_col_sums.into(),
             k,
             n,
             relu,
@@ -160,7 +162,7 @@ impl AbftLinear {
             b: self.w_qparams,
             c: self.out_qparams,
             a_row_sums,
-            b_col_sums: self.w_col_sums.clone(),
+            b_col_sums: Arc::clone(&self.w_col_sums),
             k: self.k,
         }
     }

@@ -11,4 +11,4 @@ pub mod serialize;
 pub use config::{DlrmConfig, Protection, TableConfig};
 pub use interaction::{interaction_dim, pairwise_interaction};
 pub use layer::{AbftLinear, LayerReport};
-pub use model::{DlrmModel, DlrmRequest, InferenceReport};
+pub use model::{DlrmModel, DlrmRequest, EbStage, EbStageReport, InferenceReport, LocalEbStage};

@@ -6,10 +6,11 @@ use crate::abft::{EbChecksum, FusedEbAbft};
 use crate::dlrm::config::{DlrmConfig, Protection};
 use crate::dlrm::interaction::pairwise_interaction;
 use crate::dlrm::layer::{AbftLinear, LayerReport};
-use crate::embedding::bag::EB_PAR_MIN_WORK;
 use crate::embedding::{bag_sum_8, QuantTable8};
 use crate::quant::QParams;
 use crate::util::rng::Pcg32;
+use crate::util::threadpool::EB_PAR_MIN_WORK;
+use std::sync::Mutex;
 
 /// One inference request: dense features + per-table index lists.
 #[derive(Clone, Debug)]
@@ -27,6 +28,14 @@ pub struct InferenceReport {
     pub eb_bags_recomputed: usize,
     /// Flagged again after recompute — a persistent (memory) error.
     pub eb_bags_unrecovered: usize,
+    /// Shard-router events (sharded serving only). Under
+    /// `DetectRecompute` these were already recovered inside the EB
+    /// stage — by retry or replica failover — so they do NOT dirty the
+    /// batch; only `eb_bags_flagged`/`eb_bags_unrecovered` do (and
+    /// detect-only flags are mirrored into `eb_bags_flagged`).
+    pub shard_detections: usize,
+    pub shard_failovers: usize,
+    pub shard_quarantines: usize,
 }
 
 impl InferenceReport {
@@ -35,6 +44,9 @@ impl InferenceReport {
         self.eb_bags_flagged += o.eb_bags_flagged;
         self.eb_bags_recomputed += o.eb_bags_recomputed;
         self.eb_bags_unrecovered += o.eb_bags_unrecovered;
+        self.shard_detections += o.shard_detections;
+        self.shard_failovers += o.shard_failovers;
+        self.shard_quarantines += o.shard_quarantines;
     }
 
     pub fn clean(&self) -> bool {
@@ -42,13 +54,80 @@ impl InferenceReport {
     }
 }
 
-/// Per-request EB detection tallies, merged into the batch report after
-/// the (possibly parallel) bag fan-out.
-#[derive(Clone, Copy, Debug, Default)]
-struct EbFlags {
-    flagged: usize,
-    recomputed: usize,
-    unrecovered: usize,
+/// Detection tallies from one EB-stage execution (local or sharded).
+/// `flagged`/`recomputed`/`unrecovered` follow the local detect →
+/// recompute-once semantics; the `shard_*` counters record router
+/// events. Under `DetectRecompute` those events were recovered
+/// transparently (retry or failover — they never reach a served value);
+/// under detect-only protection a flagged bag is ALSO counted in
+/// `flagged` and its value is served as-is, mirroring the local stage.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EbStageReport {
+    pub flagged: usize,
+    pub recomputed: usize,
+    pub unrecovered: usize,
+    pub shard_detections: usize,
+    pub shard_failovers: usize,
+    pub shard_quarantines: usize,
+}
+
+impl EbStageReport {
+    pub fn absorb(&mut self, o: &EbStageReport) {
+        self.flagged += o.flagged;
+        self.recomputed += o.recomputed;
+        self.unrecovered += o.unrecovered;
+        self.shard_detections += o.shard_detections;
+        self.shard_failovers += o.shard_failovers;
+        self.shard_quarantines += o.shard_quarantines;
+    }
+}
+
+/// Strategy for the EmbeddingBag stage of the forward pass: fill every
+/// request's table slots (1..=T) of the `batch × (1+T) × d` feature
+/// buffer — slot 0 already holds the bottom-MLP output — and report
+/// detection tallies. [`LocalEbStage`] reads the model's own tables; the
+/// shard router ([`crate::shard::ShardRouter`]) serves the same traffic
+/// from a replicated shard store with detection-driven failover.
+///
+/// Contract: on clean data an implementation must be **bit-identical**
+/// to [`LocalEbStage`] — a model's scores must not depend on the serving
+/// topology.
+pub trait EbStage: Sync {
+    fn run(&self, model: &DlrmModel, requests: &[DlrmRequest], feats: &mut [f32]) -> EbStageReport;
+}
+
+/// The unsharded EB stage: every table served from `model.tables`,
+/// request-parallel on the global pool.
+pub struct LocalEbStage;
+
+impl EbStage for LocalEbStage {
+    fn run(&self, model: &DlrmModel, requests: &[DlrmRequest], feats: &mut [f32]) -> EbStageReport {
+        let d = model.cfg.embedding_dim;
+        let groups = model.tables.len() + 1;
+        let eb_work: usize = requests
+            .iter()
+            .flat_map(|r| r.sparse.iter())
+            .map(|s| s.len() * d)
+            .sum();
+        // Each request owns a disjoint (1+T)·d feature row, so requests
+        // fan out on the global pool with bit-identical results; tallies
+        // are summed per job and folded once (order-independent).
+        let total = Mutex::new(EbStageReport::default());
+        crate::util::threadpool::global().scope_chunks(
+            feats,
+            groups * d,
+            eb_work,
+            EB_PAR_MIN_WORK,
+            |req0, chunk| {
+                let mut local = EbStageReport::default();
+                for (bi, fchunk) in chunk.chunks_mut(groups * d).enumerate() {
+                    model.eb_for_request(&requests[req0 + bi], fchunk, &mut local);
+                }
+                total.lock().unwrap().absorb(&local);
+            },
+        );
+        total.into_inner().unwrap()
+    }
 }
 
 /// The model: quantized bottom/top MLPs + quantized embedding tables.
@@ -129,7 +208,7 @@ impl DlrmModel {
         let batch = 64;
         let dim = self.cfg.top_input_dim();
         let reqs = self.synth_requests(batch, rng);
-        let top_in = self.compute_top_input(&reqs).0;
+        let top_in = self.compute_top_input(&reqs, &LocalEbStage).0;
         // Per-column mean/std over the calibration batch.
         let mut mean = vec![0f32; dim];
         for b in 0..batch {
@@ -157,9 +236,21 @@ impl DlrmModel {
         self.top_qparams = QParams::fit_u8(-4.0, 4.4);
     }
 
-    /// Batched forward pass. Returns (scores in [0,1], soft-error report).
+    /// Batched forward pass with the default (unsharded) EB stage.
+    /// Returns (scores in [0,1], soft-error report).
     pub fn forward(&self, requests: &[DlrmRequest]) -> (Vec<f32>, InferenceReport) {
-        let (top_in, mut report) = self.compute_top_input(requests);
+        self.forward_with(requests, &LocalEbStage)
+    }
+
+    /// Batched forward pass with an explicit EB-stage strategy (the shard
+    /// router, a test double, …). Scores are bit-identical across
+    /// strategies on clean data (see [`EbStage`]).
+    pub fn forward_with(
+        &self,
+        requests: &[DlrmRequest],
+        stage: &dyn EbStage,
+    ) -> (Vec<f32>, InferenceReport) {
+        let (top_in, mut report) = self.compute_top_input(requests, stage);
         let batch = requests.len();
         let top_in_dim = self.cfg.top_input_dim();
 
@@ -188,9 +279,14 @@ impl DlrmModel {
         (scores, report)
     }
 
-    /// Bottom half of the forward pass: bottom MLP → EBs → interaction →
-    /// concat. Returns the float top-MLP input (batch × top_input_dim).
-    fn compute_top_input(&self, requests: &[DlrmRequest]) -> (Vec<f32>, InferenceReport) {
+    /// Bottom half of the forward pass: bottom MLP → EBs (via `stage`) →
+    /// interaction → concat. Returns the float top-MLP input
+    /// (batch × top_input_dim).
+    fn compute_top_input(
+        &self,
+        requests: &[DlrmRequest],
+        stage: &dyn EbStage,
+    ) -> (Vec<f32>, InferenceReport) {
         let batch = requests.len();
         assert!(batch > 0);
         let d = self.cfg.embedding_dim;
@@ -218,46 +314,22 @@ impl DlrmModel {
         }
         let bottom_f: Vec<f32> = x.iter().map(|&q| x_qp.dequantize_u8(q)).collect();
 
-        // 3. EmbeddingBags, ABFT-checked per bag, parallel over requests:
-        // each request owns a disjoint `batch × (1 + T) × d` feature row,
-        // so bags fan out on the global pool with bit-identical results.
+        // 3. EmbeddingBags, ABFT-checked per bag, via the serving
+        // strategy: [`LocalEbStage`] reads `self.tables`; the shard
+        // router serves replicas — both bit-identical on clean data.
         let groups = num_tables + 1;
         let mut feats = vec![0f32; batch * groups * d];
         for b in 0..batch {
             feats[b * groups * d..b * groups * d + d]
                 .copy_from_slice(&bottom_f[b * d..(b + 1) * d]);
         }
-        let mut eb_flags = vec![EbFlags::default(); batch];
-        let pool = crate::util::threadpool::global();
-        let eb_work: usize = requests
-            .iter()
-            .flat_map(|r| r.sparse.iter())
-            .map(|s| s.len() * d)
-            .sum();
-        if batch >= 2 && pool.size() > 1 && eb_work >= EB_PAR_MIN_WORK {
-            pool.scope(|s| {
-                for ((req, fchunk), flags) in requests
-                    .iter()
-                    .zip(feats.chunks_mut(groups * d))
-                    .zip(eb_flags.iter_mut())
-                {
-                    s.spawn(move || self.eb_for_request(req, fchunk, flags));
-                }
-            });
-        } else {
-            for ((req, fchunk), flags) in requests
-                .iter()
-                .zip(feats.chunks_mut(groups * d))
-                .zip(eb_flags.iter_mut())
-            {
-                self.eb_for_request(req, fchunk, flags);
-            }
-        }
-        for f in &eb_flags {
-            report.eb_bags_flagged += f.flagged;
-            report.eb_bags_recomputed += f.recomputed;
-            report.eb_bags_unrecovered += f.unrecovered;
-        }
+        let eb = stage.run(self, requests, &mut feats);
+        report.eb_bags_flagged += eb.flagged;
+        report.eb_bags_recomputed += eb.recomputed;
+        report.eb_bags_unrecovered += eb.unrecovered;
+        report.shard_detections += eb.shard_detections;
+        report.shard_failovers += eb.shard_failovers;
+        report.shard_quarantines += eb.shard_quarantines;
 
         // 4. Pairwise interactions + concat with bottom output.
         let inter = pairwise_interaction(&feats, batch, groups, d);
@@ -276,7 +348,7 @@ impl DlrmModel {
 
     /// All tables' bags for one request, written into its `(1+T)·d`
     /// feature row (slot 0 already holds the bottom-MLP output).
-    fn eb_for_request(&self, req: &DlrmRequest, fchunk: &mut [f32], flags: &mut EbFlags) {
+    fn eb_for_request(&self, req: &DlrmRequest, fchunk: &mut [f32], flags: &mut EbStageReport) {
         let d = self.cfg.embedding_dim;
         for (t, (table, fused)) in self.tables.iter().zip(&self.fused).enumerate() {
             let indices = &req.sparse[t];

@@ -20,10 +20,9 @@ use super::table::{QuantTable4, QuantTable8};
 /// How far ahead of the current lookup to issue prefetches.
 pub const PREFETCH_DISTANCE: usize = 8;
 
-/// Minimum total f32 accumulate count (Σ pooling · d) before a batched EB
-/// fans out over bags on the global pool. Shared with the model's
-/// request-parallel EB stage so both fan-out decisions retune together.
-pub(crate) const EB_PAR_MIN_WORK: usize = 1 << 17;
+/// Fan-out threshold, hoisted to the threadpool module so every gate
+/// retunes in one place; re-exported here for the EB call sites.
+pub(crate) use crate::util::threadpool::EB_PAR_MIN_WORK;
 
 #[inline]
 fn prefetch_row(data: &[u8], offset: usize) {
@@ -220,26 +219,14 @@ pub fn embedding_bag_8(
         bag_sum_8(table, &indices[start..end], w, prefetch, obag);
     };
 
-    let pool = crate::util::threadpool::global();
+    // Bag-chunked fan-out via the shared gate/chunking helper (bags write
+    // disjoint rows, so the parallel path stays bit-identical).
     let work = indices.len() * d;
-    if batch >= 2 && pool.size() > 1 && work >= EB_PAR_MIN_WORK {
-        let jobs = pool.size().min(batch);
-        let per = (batch + jobs - 1) / jobs;
-        pool.scope(|s| {
-            for (ji, chunk) in out.chunks_mut(per * d).enumerate() {
-                let run_bag = &run_bag;
-                s.spawn(move || {
-                    for (bi, obag) in chunk.chunks_mut(d).enumerate() {
-                        run_bag(ji * per + bi, obag);
-                    }
-                });
-            }
-        });
-    } else {
-        for (b, obag) in out.chunks_mut(d).enumerate() {
-            run_bag(b, obag);
+    crate::util::threadpool::global().scope_chunks(&mut out, d, work, EB_PAR_MIN_WORK, |bag0, chunk| {
+        for (bi, obag) in chunk.chunks_mut(d).enumerate() {
+            run_bag(bag0 + bi, obag);
         }
-    }
+    });
     out
 }
 

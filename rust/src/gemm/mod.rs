@@ -17,6 +17,7 @@ pub use packed::{
 };
 
 use crate::quant::{requantize, QParams, RequantParams};
+use std::sync::Arc;
 
 /// A quantized fully-connected layer: y = requant(x · W).
 ///
@@ -28,8 +29,9 @@ pub struct QuantizedLinear {
     pub w_qparams: QParams,
     pub out_qparams: QParams,
     /// Column sums of W, precomputed at pack time for requantization
-    /// (recomputing them per forward would walk the whole pack).
-    b_col_sums: Vec<i32>,
+    /// (recomputing them per forward would walk the whole pack); shared
+    /// into each forward's `RequantParams` by `Arc` instead of cloning.
+    b_col_sums: Arc<[i32]>,
     pub k: usize,
     pub n: usize,
 }
@@ -49,7 +51,7 @@ impl QuantizedLinear {
             packed: PackedB::pack(&wq, k, n),
             w_qparams,
             out_qparams: QParams::fit_u8(out_range.0, out_range.1),
-            b_col_sums,
+            b_col_sums: b_col_sums.into(),
             k,
             n,
         }
@@ -77,7 +79,7 @@ impl QuantizedLinear {
             b: self.w_qparams,
             c: self.out_qparams,
             a_row_sums,
-            b_col_sums: self.b_col_sums.clone(),
+            b_col_sums: Arc::clone(&self.b_col_sums),
             k: self.k,
         }
     }

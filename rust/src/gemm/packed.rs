@@ -43,9 +43,7 @@
 /// kernel's 8 live accumulators sit comfortably inside the 16 ymm regs.
 pub(crate) const NR: usize = 32;
 
-/// Minimum m·k·n_total MAC count before a GEMM fans out over row blocks
-/// on the global pool (below this, spawn overhead beats the win).
-const PAR_MIN_WORK: usize = 1 << 21;
+use crate::util::threadpool::GEMM_PAR_MIN_WORK;
 
 /// Pre-packed right-hand-side operand (see module docs for the layout).
 #[derive(Clone, Debug)]
@@ -186,21 +184,12 @@ pub fn gemm_exec_into(a: &[u8], packed: &PackedB, m: usize, c: &mut [i32]) {
     }
     let k = packed.k;
     let nt = packed.n_total();
-    let pool = crate::util::threadpool::global();
-    let work = m * k * nt;
-    if m >= 2 && pool.size() > 1 && work >= PAR_MIN_WORK {
-        let jobs = pool.size().min(m);
-        let rows_per = (m + jobs - 1) / jobs;
-        pool.scope(|s| {
-            for (ab, cb) in a.chunks(rows_per * k).zip(c.chunks_mut(rows_per * nt)) {
-                s.spawn(move || {
-                    gemm_rows_dispatch(ab, packed, ab.len() / k, cb);
-                });
-            }
-        });
-    } else {
-        gemm_rows_dispatch(a, packed, m, c);
-    }
+    // Row-chunked fan-out via the shared gate/chunking helper (rows are
+    // independent, so the parallel path stays bit-identical).
+    crate::util::threadpool::global().scope_chunks(c, nt, m * k * nt, GEMM_PAR_MIN_WORK, |row0, cb| {
+        let rows = cb.len() / nt;
+        gemm_rows_dispatch(&a[row0 * k..(row0 + rows) * k], packed, rows, cb);
+    });
 }
 
 /// Single-thread variant of [`gemm_exec_into`] (SIMD when available, no
@@ -425,11 +414,11 @@ mod tests {
 
     #[test]
     fn parallel_path_bit_identical() {
-        // Big enough to cross PAR_MIN_WORK: the row-parallel path must
-        // produce the same bytes as the single-thread scalar path.
+        // Big enough to cross GEMM_PAR_MIN_WORK: the row-parallel path
+        // must produce the same bytes as the single-thread scalar path.
         let mut rng = Pcg32::new(6);
         let (m, k, n) = (19, 384, 320);
-        assert!(m * k * n >= super::PAR_MIN_WORK);
+        assert!(m * k * n >= super::GEMM_PAR_MIN_WORK);
         let (a, b) = rand_case(&mut rng, m, k, n);
         let packed = PackedB::pack(&b, k, n);
         let mut par = vec![0i32; m * n];

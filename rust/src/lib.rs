@@ -13,6 +13,8 @@
 //!   (Alg 1) and EB (Alg 2), detection-probability analysis, baselines.
 //! * [`fault`] — soft-error injection + campaign runner (§VI-B).
 //! * [`dlrm`] — the recommendation model built from the operators.
+//! * [`shard`] — replicated shard store + router: detection-driven
+//!   replica quarantine, failover, and checksum-verified repair.
 //! * [`coordinator`] — serving: batching, ABFT verification,
 //!   recompute-on-detect, metrics.
 //! * [`runtime`] — PJRT loader for the jax/Pallas-lowered model artifacts.
@@ -29,4 +31,5 @@ pub mod fault;
 pub mod gemm;
 pub mod quant;
 pub mod runtime;
+pub mod shard;
 pub mod util;

@@ -12,6 +12,7 @@
 //! exactly that.
 
 use super::QParams;
+use std::sync::Arc;
 
 /// Everything the requantization step needs besides `C_temp`.
 #[derive(Clone, Debug)]
@@ -22,8 +23,11 @@ pub struct RequantParams {
     pub c: QParams,
     /// Row sums of `A_I` (length m).
     pub a_row_sums: Vec<i32>,
-    /// Column sums of `B_I` (length n).
-    pub b_col_sums: Vec<i32>,
+    /// Column sums of `B_I` (length n). `Arc`-shared with the owning
+    /// layer's pack-time cache: B is the long-lived operand, so its
+    /// column sums are computed once and every forward's params borrow
+    /// them instead of cloning O(n) ints per call (ROADMAP open item).
+    pub b_col_sums: Arc<[i32]>,
     /// Inner dimension k.
     pub k: usize,
 }
@@ -62,7 +66,7 @@ impl RequantParams {
             b,
             c,
             a_row_sums,
-            b_col_sums,
+            b_col_sums: b_col_sums.into(),
             k,
         }
     }
@@ -203,7 +207,7 @@ mod tests {
             b: qp,
             c: qp,
             a_row_sums: vec![10],
-            b_col_sums: vec![20],
+            b_col_sums: vec![20].into(),
             k: 4,
         };
         assert_eq!(p.real_value(42, 0, 0), 42.0);

@@ -1,0 +1,29 @@
+//! Sharded, replicated model store with detection-driven failover — the
+//! serving layer that turns the paper's detectors into availability.
+//!
+//! The detectors (ABFT GEMM checksums, Eq-5 EmbeddingBag checksums,
+//! background scrubbing) only pay off in production if a detection *does
+//! something*. This subsystem gives them a target: embedding tables are
+//! partitioned across N shards ([`ShardPlan`], hash-of-table-id, tables
+//! placed whole so bags never split), each shard held as R byte-identical
+//! replicas ([`ShardStore`]), with a [`ShardRouter`] in front that fans
+//! bag traffic out per shard on the global thread pool and merges
+//! bit-identically with the unsharded path.
+//!
+//! Control loop: a protected-EB flag that survives a same-replica retry,
+//! or a scrubber hit, marks the replica **quarantined**; traffic fails
+//! over to a healthy replica with zero downtime; a background
+//! [`RepairWorker`] re-copies the shard from a clean replica
+//! (checksum-verified against the store's canonical `C_T` columns) and
+//! re-admits it. See `store.rs` for the state machine and repair
+//! invariants, `router.rs` for the serving policy.
+
+pub mod plan;
+pub mod repair;
+pub mod router;
+pub mod store;
+
+pub use plan::ShardPlan;
+pub use repair::RepairWorker;
+pub use router::ShardRouter;
+pub use store::{RepairOutcome, ReplicaState, ReplicaTables, Shard, ShardStats, ShardStore};

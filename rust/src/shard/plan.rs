@@ -1,0 +1,144 @@
+//! Placement: which shard owns each embedding table.
+//!
+//! Tables are placed **whole** (hash-of-table-id, not row ranges): a bag
+//! reads exactly one table, so whole-table placement keeps every bag's
+//! gather inside a single shard and makes the sharded reduction trivially
+//! bit-identical to the unsharded one — merging is a copy, never a
+//! float re-association. Row-range sharding (the NUMA item on the
+//! ROADMAP) would split a bag's sum across shards and force a float
+//! merge order; it stays future work.
+
+use crate::util::json::Json;
+
+/// Deterministic 64-bit mix (splitmix64 finalizer) — stable placement
+/// across runs and processes, no `std::hash` RandomState involved.
+#[inline]
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// The shard topology: N shards × R replicas, plus the table→shard map.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub num_shards: usize,
+    /// Replicas per shard (R = 1 means no failover target).
+    pub replicas: usize,
+    /// `assignment[t]` = shard owning global table `t`.
+    assignment: Vec<usize>,
+    /// `shard_tables[s]` = global table ids on shard `s`, ascending.
+    shard_tables: Vec<Vec<usize>>,
+    /// `slot[t]` = (shard, index of `t` within `shard_tables[shard]`).
+    slot: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    /// Hash-of-table-id placement over `num_shards` shards with
+    /// `replicas` copies of each shard. Deterministic; shards may end up
+    /// empty when `num_shards` exceeds the table count (legal — the
+    /// router skips them).
+    pub fn hash_placement(num_tables: usize, num_shards: usize, replicas: usize) -> Self {
+        assert!(num_shards >= 1, "need at least one shard");
+        assert!(replicas >= 1, "need at least one replica");
+        let assignment: Vec<usize> = (0..num_tables)
+            .map(|t| (splitmix64(t as u64) % num_shards as u64) as usize)
+            .collect();
+        let mut shard_tables = vec![Vec::new(); num_shards];
+        let mut slot = vec![(0usize, 0usize); num_tables];
+        for (t, &s) in assignment.iter().enumerate() {
+            slot[t] = (s, shard_tables[s].len());
+            shard_tables[s].push(t);
+        }
+        Self {
+            num_shards,
+            replicas,
+            assignment,
+            shard_tables,
+            slot,
+        }
+    }
+
+    pub fn num_tables(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Shard owning global table `t`.
+    pub fn shard_of(&self, table: usize) -> usize {
+        self.assignment[table]
+    }
+
+    /// (shard, local slot) of global table `t`.
+    pub fn slot_of(&self, table: usize) -> (usize, usize) {
+        self.slot[table]
+    }
+
+    /// Global table ids on shard `s`, ascending.
+    pub fn tables_of(&self, shard: usize) -> &[usize] {
+        &self.shard_tables[shard]
+    }
+
+    /// Shards that actually hold tables.
+    pub fn occupied_shards(&self) -> usize {
+        self.shard_tables.iter().filter(|t| !t.is_empty()).count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("num_shards", Json::Num(self.num_shards as f64)),
+            ("replicas", Json::Num(self.replicas as f64)),
+            (
+                "assignment",
+                Json::Arr(self.assignment.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_is_total_and_consistent() {
+        for shards in [1usize, 2, 3, 8] {
+            let plan = ShardPlan::hash_placement(10, shards, 2);
+            assert_eq!(plan.num_tables(), 10);
+            let mut seen = vec![false; 10];
+            for s in 0..shards {
+                for &t in plan.tables_of(s) {
+                    assert!(!seen[t], "table {t} placed twice");
+                    seen[t] = true;
+                    assert_eq!(plan.shard_of(t), s);
+                    let (ps, slot) = plan.slot_of(t);
+                    assert_eq!(ps, s);
+                    assert_eq!(plan.tables_of(s)[slot], t);
+                }
+            }
+            assert!(seen.iter().all(|&x| x), "placement must cover every table");
+        }
+    }
+
+    #[test]
+    fn placement_is_deterministic() {
+        let a = ShardPlan::hash_placement(16, 4, 3);
+        let b = ShardPlan::hash_placement(16, 4, 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn single_shard_owns_everything() {
+        let plan = ShardPlan::hash_placement(5, 1, 1);
+        assert_eq!(plan.tables_of(0), &[0, 1, 2, 3, 4]);
+        assert_eq!(plan.occupied_shards(), 1);
+    }
+
+    #[test]
+    fn more_shards_than_tables_leaves_empties() {
+        let plan = ShardPlan::hash_placement(2, 16, 2);
+        assert!(plan.occupied_shards() <= 2);
+        let total: usize = (0..16).map(|s| plan.tables_of(s).len()).sum();
+        assert_eq!(total, 2);
+    }
+}

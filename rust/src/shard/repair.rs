@@ -1,0 +1,88 @@
+//! Background repair: a dedicated thread that drains the store's repair
+//! queue so quarantined replicas are re-copied (checksum-verified — see
+//! [`ShardStore::repair`]) and re-admitted **while traffic keeps flowing
+//! on the healthy replicas**. The serving path never blocks on a repair:
+//! the worker takes the target replica's write lock only for the install,
+//! and only quarantined replicas — which the router already skips — are
+//! ever written.
+
+use crate::shard::store::ShardStore;
+use std::sync::Arc;
+use std::thread;
+
+/// Handle to the background repair thread. Dropping it shuts the queue
+/// down and joins the thread (a repair in flight completes first).
+pub struct RepairWorker {
+    store: Arc<ShardStore>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl RepairWorker {
+    /// Spawn the worker over `store`'s repair queue.
+    pub fn spawn(store: Arc<ShardStore>) -> Self {
+        let queue_store = Arc::clone(&store);
+        let handle = thread::Builder::new()
+            .name("shard-repair".into())
+            .spawn(move || {
+                while let Some((shard, replica)) = queue_store.wait_repair_ticket() {
+                    // Outcome lands in the store's stats; NotQuarantined
+                    // tickets (stale after a synchronous drain) are no-ops.
+                    let _ = queue_store.repair(shard, replica);
+                }
+            })
+            .expect("spawn shard-repair worker");
+        Self {
+            store,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl Drop for RepairWorker {
+    fn drop(&mut self) {
+        self.store.shutdown_repairs();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
+    use crate::shard::{ReplicaState, ShardPlan};
+    use std::time::Duration;
+
+    #[test]
+    fn worker_repairs_quarantined_replica_in_background() {
+        let model = DlrmModel::random(DlrmConfig {
+            num_dense: 4,
+            embedding_dim: 8,
+            bottom_mlp: vec![16, 8],
+            top_mlp: vec![16],
+            tables: vec![TableConfig { rows: 50, pooling: 4 }],
+            protection: Protection::DetectRecompute,
+            dense_range: (0.0, 1.0),
+            seed: 9,
+        });
+        let plan = ShardPlan::hash_placement(1, 1, 2);
+        let store = Arc::new(ShardStore::from_model(&model, plan, 16));
+        let worker = RepairWorker::spawn(Arc::clone(&store));
+
+        let shard = store.flip_table_byte(0, 1, 3, 0x80);
+        assert!(store.quarantine(shard, 1));
+        // The worker should repair + re-admit without any synchronous call.
+        let mut healthy = false;
+        for _ in 0..500 {
+            if store.replica_state(shard, 1) == ReplicaState::Healthy {
+                healthy = true;
+                break;
+            }
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert!(healthy, "background repair never re-admitted the replica");
+        assert_eq!(store.table_bytes(0, 1), model.tables[0].data);
+        drop(worker); // joins cleanly
+    }
+}

@@ -1,0 +1,378 @@
+//! The shard router: serves the model's EmbeddingBag stage from the
+//! replicated shard store, with the paper's detectors as the control
+//! signal for failover.
+//!
+//! # Serving policy (per bag, `DetectRecompute`)
+//!
+//! 1. Gather + reduce + Eq-5 verify on the shard's primary (first
+//!    healthy) replica — the same fused kernel as the unsharded path, so
+//!    clean results are **bit-identical** to [`LocalEbStage`].
+//! 2. On a flag: recompute once on the *same* replica. Transient faults
+//!    (bus/cache/register) clear here, exactly like the local policy.
+//! 3. Still flagged ⇒ the replica's memory is corrupted: quarantine it
+//!    (lock-free state flip; other replicas keep serving) and re-serve
+//!    the **whole shard-batch** from the next healthy replica — every
+//!    value already computed from the corrupt replica is suspect (its
+//!    own corruption may sit below the float bound), so nothing from it
+//!    is kept. A detected corruption therefore never reaches a served
+//!    response while a healthy replica exists.
+//! 4. No healthy replica left ⇒ the bag is reported
+//!    flagged/unrecovered, which marks the batch degraded upstream —
+//!    the R=1 degenerate case.
+//!
+//! Under `Protection::Detect` the router only reports (no retry, no
+//! failover), mirroring the local stage's detect-only semantics; under
+//! `Protection::Off` it serves unchecked bags from the primary replica.
+//!
+//! # Fan-out and merge
+//!
+//! Shards run in parallel on the global pool (gated like every other
+//! fan-out), and within a shard each lap additionally fans out over
+//! requests via [`ThreadPool::scope_chunks`] under a single replica
+//! read guard — so an N=1 (or placement-skewed) store keeps the same
+//! request-level parallelism as the unsharded stage, and the replica
+//! lock is taken once per lap, not per bag. Nested scopes are
+//! deadlock-free (helping join), so the two levels compose. Each shard
+//! job writes into its own dense `batch × slots × d` scratch buffer;
+//! after the join the scratch rows are **copied** into the model's
+//! feature slots. Because every table lives whole on one shard, no
+//! float value is ever re-associated across shards — the merge is
+//! placement, not arithmetic, hence bit-exact.
+//!
+//! [`ThreadPool::scope_chunks`]: crate::util::threadpool::ThreadPool::scope_chunks
+//!
+//! [`LocalEbStage`]: crate::dlrm::LocalEbStage
+
+use crate::dlrm::{DlrmModel, DlrmRequest, EbStage, EbStageReport, Protection};
+use crate::embedding::bag_sum_8;
+use crate::shard::store::{Shard, ShardStore};
+use crate::util::threadpool::EB_PAR_MIN_WORK;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Routes EB traffic to shard replicas; plugs into
+/// [`DlrmModel::forward_with`] as the [`EbStage`].
+pub struct ShardRouter {
+    store: Arc<ShardStore>,
+}
+
+impl ShardRouter {
+    pub fn new(store: Arc<ShardStore>) -> Self {
+        Self { store }
+    }
+
+    pub fn store(&self) -> &Arc<ShardStore> {
+        &self.store
+    }
+
+    /// All bags of one shard for the whole batch, written into the
+    /// shard's `batch × slots × d` scratch buffer.
+    ///
+    /// Failover granularity is the **shard-batch**: once a replica is
+    /// proven corrupt (a flag that survives the same-replica retry),
+    /// every bag this shard already computed for the batch is suspect —
+    /// bags whose corruption sits below the float bound would otherwise
+    /// slip through while their sibling bag triggered the alarm. So a
+    /// failover restarts the whole shard-batch lap on the new primary;
+    /// laps are bounded by the replica count (each restart quarantines
+    /// one more replica first).
+    fn run_shard(
+        &self,
+        shard: &Shard,
+        requests: &[DlrmRequest],
+        d: usize,
+        protection: Protection,
+        rep: &mut EbStageReport,
+        scratch: &mut [f32],
+    ) {
+        let slots = shard.tables.len();
+        debug_assert_eq!(scratch.len(), requests.len() * slots * d);
+        let store = &*self.store;
+        let max_laps = shard.num_replicas() + 1;
+        let mut laps = 0;
+        loop {
+            laps += 1;
+            let primary = store.serving_replica(shard.id);
+            // One read guard per lap (not per bag); requests fan out on
+            // the pool over disjoint scratch rows — nested scopes are
+            // deadlock-free, so this composes with the per-shard spawn.
+            let persistent = AtomicUsize::new(0);
+            let total = Mutex::new(EbStageReport::default());
+            {
+                let guard = store.read_replica(shard.id, primary);
+                let data = &*guard;
+                let work: usize = requests
+                    .iter()
+                    .flat_map(|r| shard.tables.iter().map(|&t| r.sparse[t].len() * d))
+                    .sum();
+                crate::util::threadpool::global().scope_chunks(
+                    scratch,
+                    slots * d,
+                    work,
+                    EB_PAR_MIN_WORK,
+                    |req0, chunk| {
+                        let mut local = EbStageReport::default();
+                        for (bi, rchunk) in chunk.chunks_mut(slots * d).enumerate() {
+                            let req = &requests[req0 + bi];
+                            for (slot, &t) in shard.tables.iter().enumerate() {
+                                let indices = &req.sparse[t];
+                                let out = &mut rchunk[slot * d..(slot + 1) * d];
+                                if !protection.enabled() {
+                                    bag_sum_8(&data.tables[slot], indices, None, true, out);
+                                    continue;
+                                }
+                                let mut bad = data.fused[slot]
+                                    .bag_sum_checked(&data.tables[slot], indices, None, true, out);
+                                if bad {
+                                    local.shard_detections += 1;
+                                    if protection == Protection::DetectRecompute {
+                                        // Same-replica retry: transient
+                                        // faults clear here.
+                                        local.recomputed += 1;
+                                        bad = data.fused[slot].bag_sum_checked(
+                                            &data.tables[slot],
+                                            indices,
+                                            None,
+                                            true,
+                                            out,
+                                        );
+                                        if bad {
+                                            persistent.fetch_add(1, Ordering::Relaxed);
+                                        }
+                                    } else {
+                                        // Detect-only: report, serve as-is
+                                        // (the local stage's semantics —
+                                        // no failover).
+                                        local.flagged += 1;
+                                    }
+                                }
+                            }
+                        }
+                        total.lock().unwrap().absorb(&local);
+                    },
+                );
+            }
+            let lap_report = total.into_inner().unwrap();
+            rep.absorb(&lap_report);
+            if lap_report.shard_detections > 0 {
+                store
+                    .stats
+                    .detections
+                    .fetch_add(lap_report.shard_detections as u64, Ordering::Relaxed);
+            }
+            let persistent = persistent.into_inner();
+            if persistent == 0 {
+                return;
+            }
+            // Persistent corruption on `primary`: quarantine it
+            // (lock-free; siblings keep serving) …
+            if store.quarantine(shard.id, primary) {
+                rep.shard_quarantines += 1;
+            }
+            // … and re-serve the whole shard-batch from a healthy
+            // sibling, discarding everything computed this lap.
+            if laps < max_laps && store.healthy_replica(shard.id).is_some() {
+                rep.shard_failovers += 1;
+                store.stats.failovers.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            // Nowhere to go (R=1 or every replica bad): the last computed
+            // values are served and the batch is marked dirty/degraded
+            // upstream, one count per persistently-flagged bag.
+            rep.flagged += persistent;
+            rep.unrecovered += persistent;
+            return;
+        }
+    }
+}
+
+impl EbStage for ShardRouter {
+    fn run(&self, model: &DlrmModel, requests: &[DlrmRequest], feats: &mut [f32]) -> EbStageReport {
+        let d = model.cfg.embedding_dim;
+        let groups = model.tables.len() + 1;
+        let batch = requests.len();
+        debug_assert_eq!(feats.len(), batch * groups * d);
+        assert_eq!(
+            self.store.plan.num_tables(),
+            model.tables.len(),
+            "router store was built for a different model"
+        );
+        let protection = model.cfg.protection;
+        let shards = self.store.shards();
+
+        let mut scratch: Vec<Vec<f32>> = shards
+            .iter()
+            .map(|sh| vec![0f32; batch * sh.tables.len() * d])
+            .collect();
+        let mut reports = vec![EbStageReport::default(); shards.len()];
+
+        let work: usize = requests
+            .iter()
+            .flat_map(|r| r.sparse.iter())
+            .map(|s| s.len() * d)
+            .sum();
+        let pool = crate::util::threadpool::global();
+        if self.store.plan.occupied_shards() >= 2 && pool.size() > 1 && work >= EB_PAR_MIN_WORK {
+            pool.scope(|s| {
+                for ((shard, scr), rep) in
+                    shards.iter().zip(scratch.iter_mut()).zip(reports.iter_mut())
+                {
+                    if shard.tables.is_empty() {
+                        continue;
+                    }
+                    s.spawn(move || self.run_shard(shard, requests, d, protection, rep, scr));
+                }
+            });
+        } else {
+            for ((shard, scr), rep) in shards.iter().zip(scratch.iter_mut()).zip(reports.iter_mut())
+            {
+                if !shard.tables.is_empty() {
+                    self.run_shard(shard, requests, d, protection, rep, scr);
+                }
+            }
+        }
+
+        // Merge: copy each shard's scratch rows into the global table
+        // slots (placement only — bit-exact by construction).
+        for (shard, scr) in shards.iter().zip(&scratch) {
+            let slots = shard.tables.len();
+            for (slot, &t) in shard.tables.iter().enumerate() {
+                for b in 0..batch {
+                    let src = &scr[(b * slots + slot) * d..(b * slots + slot + 1) * d];
+                    let dst_base = b * groups * d + (t + 1) * d;
+                    feats[dst_base..dst_base + d].copy_from_slice(src);
+                }
+            }
+        }
+
+        let mut total = EbStageReport::default();
+        for r in &reports {
+            total.absorb(r);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlrm::{DlrmConfig, TableConfig};
+    use crate::shard::ShardPlan;
+    use crate::util::rng::Pcg32;
+
+    fn model(protection: Protection, seed: u64) -> DlrmModel {
+        DlrmModel::random(DlrmConfig {
+            num_dense: 4,
+            embedding_dim: 8,
+            bottom_mlp: vec![16, 8],
+            top_mlp: vec![16],
+            tables: vec![
+                TableConfig { rows: 100, pooling: 5 },
+                TableConfig { rows: 80, pooling: 4 },
+                TableConfig { rows: 60, pooling: 3 },
+            ],
+            protection,
+            dense_range: (0.0, 1.0),
+            seed,
+        })
+    }
+
+    fn router_for(m: &DlrmModel, n: usize, r: usize) -> ShardRouter {
+        let plan = ShardPlan::hash_placement(m.tables.len(), n, r);
+        ShardRouter::new(Arc::new(ShardStore::from_model(m, plan, 32)))
+    }
+
+    #[test]
+    fn routed_scores_bit_identical_to_local() {
+        let m = model(Protection::DetectRecompute, 0x11);
+        let mut rng = Pcg32::new(1);
+        let reqs = m.synth_requests(6, &mut rng);
+        let (want, _) = m.forward(&reqs);
+        for (n, r) in [(1usize, 1usize), (2, 2), (3, 1), (5, 2)] {
+            let router = router_for(&m, n, r);
+            let (got, rep) = m.forward_with(&reqs, &router);
+            assert_eq!(got, want, "N={n} R={r}");
+            assert!(rep.clean());
+            assert_eq!(rep.shard_detections, 0);
+        }
+    }
+
+    #[test]
+    fn routed_unprotected_matches_local_unprotected() {
+        let m = model(Protection::Off, 0x12);
+        let mut rng = Pcg32::new(2);
+        let reqs = m.synth_requests(4, &mut rng);
+        let (want, _) = m.forward(&reqs);
+        let router = router_for(&m, 2, 2);
+        let (got, rep) = m.forward_with(&reqs, &router);
+        assert_eq!(got, want);
+        assert_eq!(rep, crate::dlrm::InferenceReport::default());
+    }
+
+    #[test]
+    fn persistent_corruption_fails_over_and_matches_clean_scores() {
+        let m = model(Protection::DetectRecompute, 0x13);
+        let mut rng = Pcg32::new(3);
+        let reqs = m.synth_requests(5, &mut rng);
+        let (clean, _) = m.forward(&reqs);
+        let router = router_for(&m, 2, 2);
+        let store = Arc::clone(router.store());
+        // Smash the high bit of every row's first code in replica 0 of
+        // table 0 — any bag over table 0 must detect persistently.
+        let d = m.cfg.embedding_dim;
+        let mut shard = 0;
+        for row in 0..m.tables[0].rows {
+            shard = store.flip_table_byte(0, 0, row * d, 0x80);
+        }
+        let (got, rep) = m.forward_with(&reqs, &router);
+        assert_eq!(got, clean, "failover must serve the clean value");
+        assert!(rep.clean(), "router-recovered events must not dirty the batch");
+        assert!(rep.shard_detections >= 1);
+        assert_eq!(rep.shard_quarantines, 1);
+        assert!(rep.shard_failovers >= 1);
+        assert_eq!(
+            store.replica_state(shard, 0),
+            crate::shard::ReplicaState::Quarantined
+        );
+        // Traffic continues from the healthy replica with no new events.
+        let (got2, rep2) = m.forward_with(&reqs, &router);
+        assert_eq!(got2, clean);
+        assert_eq!(rep2.shard_detections, 0);
+        assert_eq!(rep2.shard_quarantines, 0);
+    }
+
+    #[test]
+    fn r1_unrecovered_marks_batch_dirty() {
+        let m = model(Protection::DetectRecompute, 0x14);
+        let mut rng = Pcg32::new(4);
+        let reqs = m.synth_requests(3, &mut rng);
+        let router = router_for(&m, 1, 1);
+        let store = Arc::clone(router.store());
+        let d = m.cfg.embedding_dim;
+        for row in 0..m.tables[1].rows {
+            store.flip_table_byte(1, 0, row * d, 0x80);
+        }
+        let (_, rep) = m.forward_with(&reqs, &router);
+        assert!(rep.eb_bags_flagged > 0);
+        assert!(rep.eb_bags_unrecovered > 0);
+        assert!(!rep.clean());
+    }
+
+    #[test]
+    fn detect_only_reports_without_failover() {
+        let m = model(Protection::Detect, 0x15);
+        let mut rng = Pcg32::new(5);
+        let reqs = m.synth_requests(3, &mut rng);
+        let router = router_for(&m, 2, 2);
+        let store = Arc::clone(router.store());
+        let d = m.cfg.embedding_dim;
+        for row in 0..m.tables[0].rows {
+            store.flip_table_byte(0, 0, row * d, 0x80);
+        }
+        let (_, rep) = m.forward_with(&reqs, &router);
+        assert!(rep.eb_bags_flagged > 0);
+        assert_eq!(rep.shard_failovers, 0);
+        assert_eq!(rep.shard_quarantines, 0);
+        assert_eq!(store.quarantined_replicas(), 0);
+    }
+}

@@ -1,0 +1,682 @@
+//! Replicated shard store: the embedding tables partitioned by a
+//! [`ShardPlan`], held as R copies per shard, each copy carrying its own
+//! fused-ABFT metadata and an incremental scrubber.
+//!
+//! # Quarantine state machine (per replica)
+//!
+//! ```text
+//!            detection (router persistent-flag, scrub hit)
+//!   Healthy ───────────────────────────────────────────────► Quarantined
+//!      ▲                                                          │
+//!      │ re-admit (copy installed AND checksum-verified)          │ repair
+//!      │                                                          ▼
+//!      └───────────────────────────────────────────────────── Repairing
+//!                 (verify failure / no clean source → back to Quarantined)
+//! ```
+//!
+//! * Only **Healthy** replicas serve traffic or act as repair sources.
+//! * Quarantine is a lock-free state flip (CAS on an atomic), so flagging
+//!   a replica never stalls readers on the other replicas — that is the
+//!   zero-downtime property the failover drill tests.
+//! * Repair copies from a Healthy replica whose tables pass a **full**
+//!   checksum scrub (a replica can be silently corrupted in rows nobody
+//!   touched), installs under the target's write lock, re-verifies the
+//!   installed bytes against the canonical `C_T` checksums, and only then
+//!   re-admits. A dirty source is itself quarantined and queued.
+//! * The canonical checksums are store-level and immutable — the paper's
+//!   §IV-C assumption that the (much smaller) checksum state is
+//!   error-free, now doing double duty as the repair ground truth.
+
+use crate::abft::{EbChecksum, FusedEbAbft, Scrubber};
+use crate::dlrm::DlrmModel;
+use crate::embedding::QuantTable8;
+use crate::shard::ShardPlan;
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Condvar, Mutex, RwLock, RwLockReadGuard};
+
+/// Per-replica serving state (stored as an `AtomicU8`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaState {
+    Healthy,
+    Quarantined,
+    Repairing,
+}
+
+const HEALTHY: u8 = 0;
+const QUARANTINED: u8 = 1;
+const REPAIRING: u8 = 2;
+
+impl ReplicaState {
+    fn from_u8(v: u8) -> Self {
+        match v {
+            HEALTHY => ReplicaState::Healthy,
+            QUARANTINED => ReplicaState::Quarantined,
+            _ => ReplicaState::Repairing,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReplicaState::Healthy => "healthy",
+            ReplicaState::Quarantined => "quarantined",
+            ReplicaState::Repairing => "repairing",
+        }
+    }
+}
+
+/// One replica's copy of its shard's tables, slot-indexed per
+/// [`ShardPlan::tables_of`]. The fused (α, β, C_T) metadata rides with
+/// the copy so the protected bag stays one gather pass per lookup.
+#[derive(Clone)]
+pub struct ReplicaTables {
+    pub tables: Vec<QuantTable8>,
+    pub fused: Vec<FusedEbAbft>,
+}
+
+struct Replica {
+    data: RwLock<ReplicaTables>,
+    state: AtomicU8,
+    /// One incremental scrubber per slot (proactive cold-row coverage).
+    scrub: Mutex<Vec<Scrubber>>,
+}
+
+/// One shard: the global table ids it owns and its R replicas.
+pub struct Shard {
+    pub id: usize,
+    /// Global table ids, ascending (slot i ↔ `tables[i]`).
+    pub tables: Vec<usize>,
+    replicas: Vec<Replica>,
+}
+
+impl Shard {
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+}
+
+/// Lifetime health counters (all relaxed — they are reporting, not
+/// synchronization; the data edges come from the replica locks).
+#[derive(Default)]
+pub struct ShardStats {
+    /// Bags the router flagged while serving.
+    pub detections: AtomicU64,
+    /// Healthy→Quarantined transitions.
+    pub quarantines: AtomicU64,
+    /// Bags re-served from a different replica after a persistent flag.
+    pub failovers: AtomicU64,
+    /// Successful repairs (== re-admissions).
+    pub repairs: AtomicU64,
+    /// Repair attempts that found no clean source or failed verification.
+    pub failed_repairs: AtomicU64,
+    /// Rows scanned / corrupted rows found by replica scrubbers.
+    pub scrubbed_rows: AtomicU64,
+    pub scrub_hits: AtomicU64,
+}
+
+/// What [`ShardStore::repair`] did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RepairOutcome {
+    /// Copy installed, checksum-verified, replica re-admitted.
+    Repaired,
+    /// The replica was not quarantined (already healthy or mid-repair).
+    NotQuarantined,
+    /// No healthy, checksum-clean source replica exists (or the install
+    /// failed verification); the replica stays quarantined.
+    NoCleanSource,
+}
+
+struct RepairQueue {
+    tickets: VecDeque<(usize, usize)>,
+    shutdown: bool,
+}
+
+/// The replicated shard store. See module docs for the state machine.
+pub struct ShardStore {
+    pub plan: ShardPlan,
+    shards: Vec<Shard>,
+    /// Canonical per-table `C_T` checksums (global-table-id indexed);
+    /// immutable ground truth for scrub and repair verification.
+    checksums: Vec<EbChecksum>,
+    pub stats: ShardStats,
+    repair_q: Mutex<RepairQueue>,
+    repair_cv: Condvar,
+    scrub_stride: usize,
+}
+
+impl ShardStore {
+    /// Build the store from a model's tables: each shard's replicas are
+    /// byte-identical copies (which is what makes sharded serving
+    /// bit-identical to the unsharded path).
+    pub fn from_model(model: &DlrmModel, plan: ShardPlan, scrub_stride: usize) -> Self {
+        assert_eq!(
+            plan.num_tables(),
+            model.tables.len(),
+            "plan table count must match the model"
+        );
+        assert!(scrub_stride > 0);
+        let shards = (0..plan.num_shards)
+            .map(|s| {
+                let tables: Vec<usize> = plan.tables_of(s).to_vec();
+                let replicas = (0..plan.replicas)
+                    .map(|_| Replica {
+                        data: RwLock::new(ReplicaTables {
+                            tables: tables.iter().map(|&t| model.tables[t].clone()).collect(),
+                            fused: tables.iter().map(|&t| model.fused[t].clone()).collect(),
+                        }),
+                        state: AtomicU8::new(HEALTHY),
+                        scrub: Mutex::new(
+                            tables.iter().map(|_| Scrubber::new(scrub_stride)).collect(),
+                        ),
+                    })
+                    .collect();
+                Shard { id: s, tables, replicas }
+            })
+            .collect();
+        Self {
+            plan,
+            shards,
+            checksums: model.checksums.clone(),
+            stats: ShardStats::default(),
+            repair_q: Mutex::new(RepairQueue {
+                tickets: VecDeque::new(),
+                shutdown: false,
+            }),
+            repair_cv: Condvar::new(),
+            scrub_stride,
+        }
+    }
+
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    pub fn replica_state(&self, shard: usize, replica: usize) -> ReplicaState {
+        ReplicaState::from_u8(self.shards[shard].replicas[replica].state.load(Ordering::Acquire))
+    }
+
+    /// First Healthy replica of `shard`, if any.
+    pub fn healthy_replica(&self, shard: usize) -> Option<usize> {
+        self.shards[shard]
+            .replicas
+            .iter()
+            .position(|r| r.state.load(Ordering::Acquire) == HEALTHY)
+    }
+
+    /// Replica to serve from: the first healthy one, else replica 0
+    /// (stale-serve — with R=1 there is nowhere to fail over to; the
+    /// router reports such bags unrecovered).
+    pub fn serving_replica(&self, shard: usize) -> usize {
+        self.healthy_replica(shard).unwrap_or(0)
+    }
+
+    /// Shared read access to one replica's tables (the serving path).
+    pub fn read_replica(&self, shard: usize, replica: usize) -> RwLockReadGuard<'_, ReplicaTables> {
+        self.shards[shard].replicas[replica].data.read().unwrap()
+    }
+
+    /// Mark a replica quarantined (Healthy→Quarantined CAS) and enqueue a
+    /// repair ticket. Returns false when the replica was not healthy
+    /// (already quarantined or mid-repair) — no double ticket.
+    pub fn quarantine(&self, shard: usize, replica: usize) -> bool {
+        let rep = &self.shards[shard].replicas[replica];
+        if rep
+            .state
+            .compare_exchange(HEALTHY, QUARANTINED, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return false;
+        }
+        self.stats.quarantines.fetch_add(1, Ordering::Relaxed);
+        self.enqueue_ticket(shard, replica);
+        true
+    }
+
+    /// Re-enqueue a repair for an already-quarantined replica (operator
+    /// hook after a failed repair; no-op counters-wise).
+    pub fn request_repair(&self, shard: usize, replica: usize) {
+        if self.replica_state(shard, replica) == ReplicaState::Quarantined {
+            self.enqueue_ticket(shard, replica);
+        }
+    }
+
+    fn enqueue_ticket(&self, shard: usize, replica: usize) {
+        let mut q = self.repair_q.lock().unwrap();
+        q.tickets.push_back((shard, replica));
+        drop(q);
+        self.repair_cv.notify_one();
+    }
+
+    /// Block until a repair ticket is available (the [`RepairWorker`]
+    /// loop); `None` once [`ShardStore::shutdown_repairs`] was called.
+    ///
+    /// [`RepairWorker`]: crate::shard::RepairWorker
+    pub fn wait_repair_ticket(&self) -> Option<(usize, usize)> {
+        let mut q = self.repair_q.lock().unwrap();
+        loop {
+            if let Some(t) = q.tickets.pop_front() {
+                return Some(t);
+            }
+            if q.shutdown {
+                return None;
+            }
+            q = self.repair_cv.wait(q).unwrap();
+        }
+    }
+
+    /// Unblock every ticket waiter permanently (worker shutdown).
+    pub fn shutdown_repairs(&self) {
+        self.repair_q.lock().unwrap().shutdown = true;
+        self.repair_cv.notify_all();
+    }
+
+    /// Synchronously run every queued repair on the calling thread
+    /// (deterministic tests / single-threaded operation). Returns the
+    /// number of tickets processed.
+    pub fn drain_repairs(&self) -> usize {
+        let mut n = 0;
+        loop {
+            let ticket = self.repair_q.lock().unwrap().tickets.pop_front();
+            match ticket {
+                Some((s, r)) => {
+                    self.repair(s, r);
+                    n += 1;
+                }
+                None => return n,
+            }
+        }
+    }
+
+    /// Repair one quarantined replica: copy its shard's tables from a
+    /// healthy, checksum-clean sibling, verify the installed copy against
+    /// the canonical checksums, and re-admit. See module docs for the
+    /// invariants. Never holds two replica locks at once (copy out under
+    /// the source's read lock, install under the target's write lock), so
+    /// it cannot deadlock against the serving path.
+    pub fn repair(&self, shard: usize, replica: usize) -> RepairOutcome {
+        let sh = &self.shards[shard];
+        let rep = &sh.replicas[replica];
+        if rep
+            .state
+            .compare_exchange(QUARANTINED, REPAIRING, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return RepairOutcome::NotQuarantined;
+        }
+
+        // Find a clean source: healthy AND a full checksum pass over all
+        // of its slots (quarantine only proves the *flagged* replica bad;
+        // the source must be proven good).
+        let mut fresh: Option<ReplicaTables> = None;
+        for (r, src) in sh.replicas.iter().enumerate() {
+            if r == replica || src.state.load(Ordering::Acquire) != HEALTHY {
+                continue;
+            }
+            let guard = src.data.read().unwrap();
+            let clean = self.replica_tables_clean(sh, &guard);
+            if clean {
+                fresh = Some(guard.clone());
+                break;
+            }
+            drop(guard);
+            // A silently-corrupted source is itself quarantined + queued.
+            self.quarantine(shard, r);
+        }
+
+        let Some(fresh) = fresh else {
+            rep.state.store(QUARANTINED, Ordering::Release);
+            self.stats.failed_repairs.fetch_add(1, Ordering::Relaxed);
+            return RepairOutcome::NoCleanSource;
+        };
+
+        {
+            let mut guard = rep.data.write().unwrap();
+            *guard = fresh;
+            // Re-verify the *installed* bytes before re-admission: the
+            // copy itself crossed memory that can fault too.
+            if !self.replica_tables_clean(sh, &guard) {
+                drop(guard);
+                rep.state.store(QUARANTINED, Ordering::Release);
+                self.stats.failed_repairs.fetch_add(1, Ordering::Relaxed);
+                return RepairOutcome::NoCleanSource;
+            }
+        }
+        // Fresh data ⇒ fresh scrub pass.
+        *rep.scrub.lock().unwrap() =
+            sh.tables.iter().map(|_| Scrubber::new(self.scrub_stride)).collect();
+        rep.state.store(HEALTHY, Ordering::Release);
+        self.stats.repairs.fetch_add(1, Ordering::Relaxed);
+        RepairOutcome::Repaired
+    }
+
+    /// Full checksum pass over every slot of one replica's tables.
+    fn replica_tables_clean(&self, sh: &Shard, data: &ReplicaTables) -> bool {
+        sh.tables
+            .iter()
+            .enumerate()
+            .all(|(slot, &t)| Scrubber::full_pass(&data.tables[slot], &self.checksums[t]).is_empty())
+    }
+
+    /// Advance every healthy replica's scrubbers by one strip; corrupted
+    /// rows quarantine their replica (the proactive arm of
+    /// detection-driven failover) and enqueue repairs. Returns
+    /// `(shard, replica, global_table, row)` hits.
+    pub fn scrub_tick(&self) -> Vec<(usize, usize, usize, usize)> {
+        let mut hits = Vec::new();
+        for sh in &self.shards {
+            for (r, rep) in sh.replicas.iter().enumerate() {
+                if rep.state.load(Ordering::Acquire) != HEALTHY {
+                    continue; // quarantined replicas are already pending repair
+                }
+                let mut dirty = false;
+                {
+                    let data = rep.data.read().unwrap();
+                    let mut scrub = rep.scrub.lock().unwrap();
+                    for (slot, &t) in sh.tables.iter().enumerate() {
+                        let report = scrub[slot].scrub_step(&data.tables[slot], &self.checksums[t]);
+                        self.stats
+                            .scrubbed_rows
+                            .fetch_add(report.rows_scanned as u64, Ordering::Relaxed);
+                        for row in report.corrupted_rows {
+                            dirty = true;
+                            self.stats.scrub_hits.fetch_add(1, Ordering::Relaxed);
+                            hits.push((sh.id, r, t, row));
+                        }
+                    }
+                }
+                if dirty {
+                    self.quarantine(sh.id, r);
+                }
+            }
+        }
+        hits
+    }
+
+    /// One full scrub pass over every healthy replica (campaigns /
+    /// offline verification); corrupted replicas are quarantined and
+    /// queued exactly like [`ShardStore::scrub_tick`] hits. Returns the
+    /// number of corrupted rows found.
+    pub fn scrub_full(&self) -> usize {
+        let mut found = 0;
+        for sh in &self.shards {
+            for (r, rep) in sh.replicas.iter().enumerate() {
+                if rep.state.load(Ordering::Acquire) != HEALTHY {
+                    continue;
+                }
+                let dirty_rows = {
+                    let data = rep.data.read().unwrap();
+                    sh.tables
+                        .iter()
+                        .enumerate()
+                        .map(|(slot, &t)| {
+                            Scrubber::full_pass(&data.tables[slot], &self.checksums[t]).len()
+                        })
+                        .sum::<usize>()
+                };
+                if dirty_rows > 0 {
+                    found += dirty_rows;
+                    self.stats.scrub_hits.fetch_add(dirty_rows as u64, Ordering::Relaxed);
+                    self.quarantine(sh.id, r);
+                }
+            }
+        }
+        found
+    }
+
+    /// Fault-injection door (tests, campaigns, chaos drills): XOR `mask`
+    /// into one stored code byte of `table` (global id) in one replica.
+    /// Applying the same call twice restores the byte — but only when no
+    /// repair ran in between; transient (restored) injections should use
+    /// [`ShardStore::chaos_flip_table_byte`] /
+    /// [`ShardStore::chaos_restore_table_byte`] instead. Returns the
+    /// shard the table lives on.
+    pub fn flip_table_byte(&self, table: usize, replica: usize, byte: usize, mask: u8) -> usize {
+        let (shard, slot) = self.plan.slot_of(table);
+        let mut guard = self.shards[shard].replicas[replica].data.write().unwrap();
+        guard.tables[slot].data[byte] ^= mask;
+        shard
+    }
+
+    /// Transient-chaos apply: XOR `mask` into a replica byte and return
+    /// the previous value, for a later conditional restore.
+    pub fn chaos_flip_table_byte(&self, table: usize, replica: usize, byte: usize, mask: u8) -> u8 {
+        let (shard, slot) = self.plan.slot_of(table);
+        let mut guard = self.shards[shard].replicas[replica].data.write().unwrap();
+        let old = guard.tables[slot].data[byte];
+        guard.tables[slot].data[byte] = old ^ mask;
+        old
+    }
+
+    /// Transient-chaos undo: restore `original` **only if** the byte
+    /// still holds the flipped value `original ^ mask`. A concurrent
+    /// repair may already have rewritten the replica from a clean
+    /// sibling — the corruption is gone and a blind XOR would
+    /// RE-corrupt a replica that is marked Healthy. Returns whether the
+    /// restore was applied.
+    pub fn chaos_restore_table_byte(
+        &self,
+        table: usize,
+        replica: usize,
+        byte: usize,
+        original: u8,
+        mask: u8,
+    ) -> bool {
+        let (shard, slot) = self.plan.slot_of(table);
+        let mut guard = self.shards[shard].replicas[replica].data.write().unwrap();
+        let cell = &mut guard.tables[slot].data[byte];
+        if *cell == original ^ mask {
+            *cell = original;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Code bytes of one replica's copy of `table` (drill assertions).
+    pub fn table_bytes(&self, table: usize, replica: usize) -> Vec<u8> {
+        let (shard, slot) = self.plan.slot_of(table);
+        self.read_replica(shard, replica).tables[slot].data.clone()
+    }
+
+    /// Replicas currently not Healthy (gauge for health reporting).
+    pub fn quarantined_replicas(&self) -> usize {
+        self.shards
+            .iter()
+            .flat_map(|sh| sh.replicas.iter())
+            .filter(|r| r.state.load(Ordering::Acquire) != HEALTHY)
+            .count()
+    }
+
+    /// Queued (not yet executed) repair tickets.
+    pub fn pending_repairs(&self) -> usize {
+        self.repair_q.lock().unwrap().tickets.len()
+    }
+
+    /// Health snapshot: per-shard replica states + lifetime counters.
+    pub fn health_json(&self) -> Json {
+        let shards = self
+            .shards
+            .iter()
+            .map(|sh| {
+                Json::obj(vec![
+                    ("id", Json::Num(sh.id as f64)),
+                    (
+                        "tables",
+                        Json::Arr(sh.tables.iter().map(|&t| Json::Num(t as f64)).collect()),
+                    ),
+                    (
+                        "replicas",
+                        Json::Arr(
+                            sh.replicas
+                                .iter()
+                                .map(|r| {
+                                    Json::Str(
+                                        ReplicaState::from_u8(r.state.load(Ordering::Acquire))
+                                            .as_str()
+                                            .to_string(),
+                                    )
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let n = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("num_shards", Json::Num(self.plan.num_shards as f64)),
+            ("replicas_per_shard", Json::Num(self.plan.replicas as f64)),
+            ("detections", n(&self.stats.detections)),
+            ("quarantines", n(&self.stats.quarantines)),
+            ("failovers", n(&self.stats.failovers)),
+            ("repairs", n(&self.stats.repairs)),
+            ("failed_repairs", n(&self.stats.failed_repairs)),
+            ("scrubbed_rows", n(&self.stats.scrubbed_rows)),
+            ("scrub_hits", n(&self.stats.scrub_hits)),
+            (
+                "quarantined_replicas",
+                Json::Num(self.quarantined_replicas() as f64),
+            ),
+            ("pending_repairs", Json::Num(self.pending_repairs() as f64)),
+            ("shards", Json::Arr(shards)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlrm::{DlrmConfig, Protection, TableConfig};
+
+    fn tiny_model() -> DlrmModel {
+        DlrmModel::random(DlrmConfig {
+            num_dense: 4,
+            embedding_dim: 8,
+            bottom_mlp: vec![16, 8],
+            top_mlp: vec![16],
+            tables: vec![
+                TableConfig { rows: 60, pooling: 4 },
+                TableConfig { rows: 40, pooling: 3 },
+                TableConfig { rows: 30, pooling: 2 },
+            ],
+            protection: Protection::DetectRecompute,
+            dense_range: (0.0, 1.0),
+            seed: 0x5A,
+        })
+    }
+
+    fn store(n: usize, r: usize) -> (DlrmModel, ShardStore) {
+        let model = tiny_model();
+        let plan = ShardPlan::hash_placement(model.tables.len(), n, r);
+        let store = ShardStore::from_model(&model, plan, 16);
+        (model, store)
+    }
+
+    #[test]
+    fn replicas_start_healthy_and_byte_identical() {
+        let (model, store) = store(2, 3);
+        for t in 0..model.tables.len() {
+            let (shard, _) = store.plan.slot_of(t);
+            for r in 0..3 {
+                assert_eq!(store.replica_state(shard, r), ReplicaState::Healthy);
+                assert_eq!(store.table_bytes(t, r), model.tables[t].data);
+            }
+        }
+        assert_eq!(store.quarantined_replicas(), 0);
+    }
+
+    #[test]
+    fn quarantine_is_single_shot_and_enqueues() {
+        let (_, store) = store(1, 2);
+        assert!(store.quarantine(0, 1));
+        assert!(!store.quarantine(0, 1), "second quarantine must be a no-op");
+        assert_eq!(store.replica_state(0, 1), ReplicaState::Quarantined);
+        assert_eq!(store.pending_repairs(), 1);
+        assert_eq!(store.healthy_replica(0), Some(0));
+        assert_eq!(store.stats.quarantines.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn repair_restores_from_clean_sibling() {
+        let (model, store) = store(1, 2);
+        let t = 0;
+        store.flip_table_byte(t, 1, 5, 0x80);
+        assert_ne!(store.table_bytes(t, 1), model.tables[t].data);
+        assert!(store.quarantine(0, 1));
+        assert_eq!(store.repair(0, 1), RepairOutcome::Repaired);
+        assert_eq!(store.replica_state(0, 1), ReplicaState::Healthy);
+        assert_eq!(store.table_bytes(t, 1), model.tables[t].data);
+        assert_eq!(store.stats.repairs.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn repair_without_clean_source_stays_quarantined() {
+        let (_, store) = store(1, 1);
+        store.flip_table_byte(0, 0, 3, 0x40);
+        assert!(store.quarantine(0, 0));
+        assert_eq!(store.repair(0, 0), RepairOutcome::NoCleanSource);
+        assert_eq!(store.replica_state(0, 0), ReplicaState::Quarantined);
+        assert_eq!(store.stats.failed_repairs.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn repair_rejects_corrupt_source_and_quarantines_it() {
+        let (model, store) = store(1, 3);
+        // Target (r0) and the first candidate source (r1) both corrupted;
+        // only r2 is clean.
+        store.flip_table_byte(0, 0, 1, 0x20);
+        store.flip_table_byte(0, 1, 2, 0x10);
+        assert!(store.quarantine(0, 0));
+        assert_eq!(store.repair(0, 0), RepairOutcome::Repaired);
+        assert_eq!(store.table_bytes(0, 0), model.tables[0].data);
+        // The dirty source was itself quarantined + queued.
+        assert_eq!(store.replica_state(0, 1), ReplicaState::Quarantined);
+        assert!(store.pending_repairs() >= 1);
+        assert!(store.drain_repairs() >= 1);
+        assert_eq!(store.replica_state(0, 1), ReplicaState::Healthy);
+        assert_eq!(store.table_bytes(0, 1), model.tables[0].data);
+    }
+
+    #[test]
+    fn scrub_tick_finds_cold_corruption_and_quarantines() {
+        let (_, store) = store(2, 2);
+        // Low-bit flip: invisible to float bounds, exact to the scrubber.
+        let shard = store.flip_table_byte(1, 1, 7, 0x01);
+        let mut hits = Vec::new();
+        for _ in 0..16 {
+            hits.extend(store.scrub_tick());
+            if !hits.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(hits.len(), 1);
+        let (s, r, t, _row) = hits[0];
+        assert_eq!((s, r, t), (shard, 1, 1));
+        assert_eq!(store.replica_state(shard, 1), ReplicaState::Quarantined);
+        assert_eq!(store.drain_repairs(), 1);
+        assert_eq!(store.replica_state(shard, 1), ReplicaState::Healthy);
+    }
+
+    #[test]
+    fn scrub_full_covers_everything_at_once() {
+        let (_, store) = store(2, 2);
+        store.flip_table_byte(2, 0, 0, 0x02);
+        assert_eq!(store.scrub_full(), 1);
+        let (shard, _) = store.plan.slot_of(2);
+        assert_eq!(store.replica_state(shard, 0), ReplicaState::Quarantined);
+        store.drain_repairs();
+        assert_eq!(store.quarantined_replicas(), 0);
+        assert_eq!(store.scrub_full(), 0);
+    }
+
+    #[test]
+    fn health_json_reports_states() {
+        let (_, store) = store(2, 2);
+        store.quarantine(0, 0);
+        let j = store.health_json();
+        assert_eq!(j.get("num_shards").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("quarantined_replicas").and_then(Json::as_usize), Some(1));
+        assert!(j.get("shards").is_some());
+    }
+}

@@ -55,6 +55,16 @@ impl Drop for ScopeGuard {
     }
 }
 
+/// Minimum MAC count (m·k·n_total) before a GEMM fans out over row
+/// blocks on the global pool (below this, spawn overhead beats the win).
+/// All fan-out gate thresholds live here so every operator's parallelism
+/// decision retunes in one place (ROADMAP open item).
+pub const GEMM_PAR_MIN_WORK: usize = 1 << 21;
+
+/// Minimum total f32 accumulate count (Σ pooling · d) before a batched
+/// EmbeddingBag — or the model's request-parallel EB stage — fans out.
+pub const EB_PAR_MIN_WORK: usize = 1 << 17;
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 struct Queue {
@@ -267,6 +277,36 @@ impl ThreadPool {
         r
     }
 
+    /// The shared fan-out shape of every row/bag-parallel operator in the
+    /// crate (GEMM row blocks, EB bags, the model's per-request EB stage):
+    /// `out` is a run of independent records of `item_len` elements each.
+    /// When the gate passes (≥2 items, >1 worker, `work >= min_work`) the
+    /// items are ceil-chunked into at most `size()` contiguous jobs and
+    /// `f(first_item, chunk)` runs per job on the pool; otherwise the
+    /// whole slice is handled by one inline `f(0, out)` call. Items must
+    /// be independent — which is also what makes the parallel path
+    /// bit-identical to the serial one.
+    pub fn scope_chunks<T, F>(&self, out: &mut [T], item_len: usize, work: usize, min_work: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(item_len > 0 && out.len() % item_len == 0, "chunk shape");
+        let items = out.len() / item_len;
+        if items >= 2 && self.size() > 1 && work >= min_work {
+            let jobs = self.size().min(items);
+            let per = (items + jobs - 1) / jobs;
+            self.scope(|s| {
+                for (ji, chunk) in out.chunks_mut(per * item_len).enumerate() {
+                    let f = &f;
+                    s.spawn(move || f(ji * per, chunk));
+                }
+            });
+        } else {
+            f(0, out);
+        }
+    }
+
     /// Map `f` over `items` in parallel, preserving order.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
@@ -460,6 +500,38 @@ mod tests {
         pool.scope(|s| {
             s.spawn(|| panic!("inner boom"));
         });
+    }
+
+    #[test]
+    fn scope_chunks_covers_all_items_parallel_and_serial() {
+        let pool = ThreadPool::new(4);
+        for (items, item_len, min_work) in [(64usize, 8usize, 0usize), (64, 8, usize::MAX), (1, 8, 0), (5, 3, 0)] {
+            let mut out = vec![0u32; items * item_len];
+            pool.scope_chunks(&mut out, item_len, items * item_len, min_work, |first, chunk| {
+                for (i, rec) in chunk.chunks_mut(item_len).enumerate() {
+                    rec.fill((first + i) as u32 + 1);
+                }
+            });
+            for (i, rec) in out.chunks(item_len).enumerate() {
+                assert!(rec.iter().all(|&x| x == i as u32 + 1), "item {i} (items={items})");
+            }
+        }
+    }
+
+    #[test]
+    fn scope_chunks_chunk_boundaries_are_item_aligned() {
+        let pool = ThreadPool::new(3);
+        let (items, item_len) = (10usize, 4usize);
+        let mut out = vec![0usize; items * item_len];
+        pool.scope_chunks(&mut out, item_len, usize::MAX, 0, |first, chunk| {
+            assert_eq!(chunk.len() % item_len, 0);
+            chunk.fill(first);
+        });
+        // Every record's fill value is its job's first-item index ≤ its own.
+        for (i, rec) in out.chunks(item_len).enumerate() {
+            assert!(rec[0] <= i);
+            assert!(rec.iter().all(|&x| x == rec[0]));
+        }
     }
 
     #[test]

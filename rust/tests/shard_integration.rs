@@ -1,0 +1,276 @@
+//! Integration tests for the sharded replicated model store:
+//! sharded-vs-unsharded bit-exact equivalence over an N×R grid (including
+//! the N=1/R=1 degenerate corners) and the full failover drill —
+//! inject → detect → quarantine → serve from replica → repair → re-admit.
+
+use dlrm_abft::coordinator::Engine;
+use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, DlrmRequest, Protection, TableConfig};
+use dlrm_abft::shard::{RepairWorker, ReplicaState, ShardPlan, ShardRouter, ShardStore};
+use dlrm_abft::util::json::Json;
+use dlrm_abft::util::rng::Pcg32;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn model(protection: Protection, seed: u64) -> DlrmModel {
+    DlrmModel::random(DlrmConfig {
+        num_dense: 6,
+        embedding_dim: 16,
+        bottom_mlp: vec![32, 16],
+        top_mlp: vec![32],
+        tables: vec![
+            TableConfig { rows: 300, pooling: 6 },
+            TableConfig { rows: 200, pooling: 4 },
+            TableConfig { rows: 150, pooling: 3 },
+            TableConfig { rows: 100, pooling: 5 },
+        ],
+        protection,
+        dense_range: (0.0, 1.0),
+        seed,
+    })
+}
+
+fn requests(m: &DlrmModel, n: usize, seed: u64) -> Vec<DlrmRequest> {
+    let mut rng = Pcg32::new(seed);
+    m.synth_requests(n, &mut rng)
+}
+
+fn router(m: &DlrmModel, n: usize, r: usize) -> (Arc<ShardStore>, ShardRouter) {
+    let plan = ShardPlan::hash_placement(m.tables.len(), n, r);
+    let store = Arc::new(ShardStore::from_model(m, plan, 64));
+    (Arc::clone(&store), ShardRouter::new(store))
+}
+
+/// Smash the high bit of every row's first code of `table` in `replica`,
+/// so any bag over the table detects persistently on that replica.
+fn smash_table(store: &ShardStore, m: &DlrmModel, table: usize, replica: usize) -> usize {
+    let d = m.cfg.embedding_dim;
+    let mut shard = 0;
+    for row in 0..m.tables[table].rows {
+        shard = store.flip_table_byte(table, replica, row * d, 0x80);
+    }
+    shard
+}
+
+#[test]
+fn sharded_equals_unsharded_over_nxr_grid() {
+    for &protection in &[Protection::DetectRecompute, Protection::Detect, Protection::Off] {
+        let m = model(protection, 0xA1);
+        let reqs = requests(&m, 7, 1);
+        let (want, wrep) = m.forward(&reqs);
+        assert!(wrep.clean() || !protection.enabled());
+        // Grid includes both degenerate corners (N=1/R=1), N == tables,
+        // and N > tables (empty shards).
+        for n in [1usize, 2, 3, 4, 9] {
+            for r in [1usize, 2, 3] {
+                let (_store, router) = router(&m, n, r);
+                let (got, rep) = m.forward_with(&reqs, &router);
+                assert_eq!(got, want, "N={n} R={r} {protection:?}");
+                assert_eq!(rep.shard_detections, 0, "clean store must not flag");
+                assert_eq!(rep.shard_failovers, 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_shard_fanout_bit_identical_to_serial_paths() {
+    // Large enough batch×pooling×d to cross EB_PAR_MIN_WORK, so both the
+    // local request-parallel stage and the router's per-shard fan-out
+    // take their threadpool paths — results must still be bit-identical.
+    let m = DlrmModel::random(DlrmConfig {
+        num_dense: 6,
+        embedding_dim: 16,
+        bottom_mlp: vec![32, 16],
+        top_mlp: vec![32],
+        tables: vec![TableConfig { rows: 400, pooling: 30 }; 4],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed: 0x77,
+    });
+    let batch = 80;
+    let reqs = requests(&m, batch, 9);
+    let eb_work: usize = reqs
+        .iter()
+        .flat_map(|r| r.sparse.iter())
+        .map(|s| s.len() * m.cfg.embedding_dim)
+        .sum();
+    assert!(eb_work >= 1 << 17, "test must cross the fan-out gate ({eb_work})");
+    let (want, _) = m.forward(&reqs);
+    for n in [2usize, 4] {
+        let (_store, router) = router(&m, n, 2);
+        let (got, rep) = m.forward_with(&reqs, &router);
+        assert_eq!(got, want, "N={n}");
+        assert!(rep.clean());
+    }
+}
+
+#[test]
+fn failover_drill_inject_detect_quarantine_serve_repair_readmit() {
+    let m = model(Protection::DetectRecompute, 0xB2);
+    let reqs = requests(&m, 6, 2);
+    let (clean, _) = m.forward(&reqs);
+    let (store, router) = router(&m, 2, 2);
+
+    // Inject: persistent corruption in replica 0 of table 1.
+    let shard = smash_table(&store, &m, 1, 0);
+    let slot = store.plan.slot_of(1).1;
+
+    // Detect + quarantine + failover: the corrupted value never reaches
+    // the response, and the batch is not even marked dirty.
+    let (got, rep) = m.forward_with(&reqs, &router);
+    assert_eq!(got, clean, "detected corruption must never be served");
+    assert!(rep.clean());
+    assert!(rep.shard_detections >= 1);
+    assert_eq!(rep.shard_quarantines, 1);
+    assert!(rep.shard_failovers >= 1);
+    assert_eq!(store.replica_state(shard, 0), ReplicaState::Quarantined);
+    assert_eq!(store.replica_state(shard, 1), ReplicaState::Healthy);
+
+    // Traffic continues during the outage — zero downtime, no new events.
+    for trial in 0..3 {
+        let (got2, rep2) = m.forward_with(&reqs, &router);
+        assert_eq!(got2, clean, "trial {trial}");
+        assert_eq!(rep2.shard_detections, 0);
+        assert_eq!(rep2.shard_quarantines, 0);
+    }
+
+    // Repair: re-copy from the clean replica, checksum-verified, re-admit.
+    assert!(store.pending_repairs() >= 1);
+    assert!(store.drain_repairs() >= 1);
+    assert_eq!(store.replica_state(shard, 0), ReplicaState::Healthy);
+    assert_eq!(
+        store.read_replica(shard, 0).tables[slot].data,
+        m.tables[1].data,
+        "repaired replica must be byte-identical to the pristine table"
+    );
+    assert_eq!(store.stats.repairs.load(Ordering::Relaxed), 1);
+
+    // Re-admitted replica serves cleanly again.
+    let (got3, rep3) = m.forward_with(&reqs, &router);
+    assert_eq!(got3, clean);
+    assert_eq!(rep3.shard_detections, 0);
+    assert_eq!(store.quarantined_replicas(), 0);
+}
+
+#[test]
+fn degenerate_r1_has_no_failover_target_and_degrades() {
+    let m = model(Protection::DetectRecompute, 0xC3);
+    let reqs = requests(&m, 4, 3);
+    let (store, router) = router(&m, 1, 1);
+    smash_table(&store, &m, 0, 0);
+    let (_, rep) = m.forward_with(&reqs, &router);
+    assert!(rep.eb_bags_flagged > 0, "R=1 must surface the corruption");
+    assert!(rep.eb_bags_unrecovered > 0);
+    assert!(!rep.clean());
+    // Repair cannot find a clean source; the replica stays quarantined.
+    store.drain_repairs();
+    assert_eq!(store.quarantined_replicas(), 1);
+    assert!(store.stats.failed_repairs.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn scrub_driven_quarantine_catches_cold_low_bit_corruption() {
+    let m = model(Protection::DetectRecompute, 0xD4);
+    let (store, router) = router(&m, 2, 2);
+    // One low-bit flip in one cold row of replica 1: under the float
+    // bound and likely untouched — the request path can miss it, the
+    // exact integer scrubber cannot.
+    let d = m.cfg.embedding_dim;
+    let victim_row = m.tables[2].rows - 1;
+    let shard = store.flip_table_byte(2, 1, victim_row * d + 3, 0x01);
+    let mut hits = Vec::new();
+    for _ in 0..(m.tables[2].rows / 64 + 2) * 4 {
+        hits.extend(store.scrub_tick());
+        if !hits.is_empty() {
+            break;
+        }
+    }
+    assert_eq!(hits.len(), 1);
+    let (s, r, t, row) = hits[0];
+    assert_eq!((s, r, t, row), (shard, 1, 2, victim_row));
+    assert_eq!(store.replica_state(shard, 1), ReplicaState::Quarantined);
+    // Serving was never interrupted and still matches the unsharded path.
+    let reqs = requests(&m, 4, 4);
+    let (want, _) = m.forward(&reqs);
+    let (got, rep) = m.forward_with(&reqs, &router);
+    assert_eq!(got, want);
+    assert!(rep.clean());
+    // Repair re-admits with pristine bytes.
+    store.drain_repairs();
+    assert_eq!(store.replica_state(shard, 1), ReplicaState::Healthy);
+    assert_eq!(store.table_bytes(2, 1), m.tables[2].data);
+}
+
+#[test]
+fn background_repair_worker_readmits_while_serving() {
+    let m = model(Protection::DetectRecompute, 0xE5);
+    let reqs = requests(&m, 5, 5);
+    let (clean, _) = m.forward(&reqs);
+    let (store, router) = router(&m, 2, 2);
+    let worker = RepairWorker::spawn(Arc::clone(&store));
+
+    let shard = smash_table(&store, &m, 3, 0);
+    let (got, rep) = m.forward_with(&reqs, &router);
+    assert_eq!(got, clean);
+    assert_eq!(rep.shard_quarantines, 1);
+
+    // The worker repairs in the background while traffic keeps flowing.
+    let mut healthy = false;
+    for _ in 0..500 {
+        let (got2, _) = m.forward_with(&reqs, &router);
+        assert_eq!(got2, clean, "traffic must stay correct during repair");
+        if store.replica_state(shard, 0) == ReplicaState::Healthy {
+            healthy = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert!(healthy, "worker never re-admitted the replica");
+    assert_eq!(store.table_bytes(3, 0), m.tables[3].data);
+    drop(worker);
+}
+
+#[test]
+fn sharded_engine_end_to_end_with_metrics() {
+    use dlrm_abft::coordinator::ScoreRequest;
+    let m = model(Protection::DetectRecompute, 0xF6);
+    let score_reqs: Vec<ScoreRequest> = requests(&m, 6, 6)
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| ScoreRequest { id: i as u64, dense: r.dense, sparse: r.sparse })
+        .collect();
+    let plain = Engine::new(model(Protection::DetectRecompute, 0xF6));
+    let sharded = Engine::new(m)
+        .with_shards(ShardPlan::hash_placement(4, 2, 2), 64)
+        .with_repair_worker();
+    let want = plain.process_batch(score_reqs.clone());
+    let got = sharded.process_batch(score_reqs.clone());
+    for (w, g) in want.iter().zip(&got) {
+        assert_eq!(w.score, g.score);
+    }
+
+    // Corrupt a replica through the store handle, serve, and watch the
+    // health surface through the metrics snapshot.
+    let store = Arc::clone(sharded.shard_store().unwrap());
+    let d = {
+        let guard = sharded.model.read().unwrap();
+        guard.cfg.embedding_dim
+    };
+    let rows = {
+        let guard = sharded.model.read().unwrap();
+        guard.tables[0].rows
+    };
+    for row in 0..rows {
+        store.flip_table_byte(0, 0, row * d, 0x80);
+    }
+    let got2 = sharded.process_batch(score_reqs);
+    for (w, g) in want.iter().zip(&got2) {
+        assert_eq!(w.score, g.score, "failover must preserve scores");
+        assert!(!g.detected && !g.degraded);
+    }
+    assert!(sharded.metrics.shard_detections.load(Ordering::Relaxed) >= 1);
+    assert_eq!(sharded.metrics.shard_quarantines.load(Ordering::Relaxed), 1);
+    let snap = sharded.metrics_snapshot();
+    let shards_block = snap.get("shards").expect("sharded snapshot has health");
+    assert!(shards_block.get("quarantines").and_then(Json::as_usize).unwrap_or(0) >= 1);
+}
