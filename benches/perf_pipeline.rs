@@ -1,0 +1,251 @@
+//! Zero-allocation pipeline perf harness (PR 3): emits `BENCH_PR3.json`.
+//!
+//! * Engine — `Engine::score` req/s at 1/4/8 concurrent caller threads
+//!   (the pooled-arena, allocation-free serving core).
+//! * Allocations — allocs/request through the legacy allocating wrapper
+//!   (`DlrmModel::forward_with`, a fresh arena per call — the pre-PR3
+//!   behavior) vs steady-state `Engine::score` (target: 0), counted by a
+//!   global counting allocator.
+//! * Fused epilogue — per-layer latency of the fused GEMM+requantize+ReLU
+//!   kernel vs the two-pass flow (GEMM, then a separate scalar
+//!   requantization sweep over the i32 tile), on DLRM layer shapes.
+//!
+//! Env: `QUICK=1` shrinks iteration counts; `BENCH_OUT=path` overrides
+//! the output file. Run: `cargo bench --bench perf_pipeline`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use dlrm_abft::bench::harness::{measure, BenchConfig};
+use dlrm_abft::coordinator::Engine;
+use dlrm_abft::dlrm::{AbftLinear, DlrmConfig, DlrmModel, DlrmRequest, Protection, TableConfig};
+use dlrm_abft::gemm::{gemm_exec_into, simd_active};
+use dlrm_abft::quant::{quantize_slice_u8, requantize_exclude_last_col};
+use dlrm_abft::util::json::Json;
+use dlrm_abft::util::rng::Pcg32;
+use dlrm_abft::util::scratch::GemmScratch;
+
+struct CountingAlloc;
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+/// Same shape family as perf_hotpath's engine model: per-batch work below
+/// the kernel fan-out gates so thread scaling isolates the serving path.
+fn engine_model(protection: Protection) -> DlrmModel {
+    DlrmModel::random(DlrmConfig {
+        num_dense: 13,
+        embedding_dim: 64,
+        bottom_mlp: vec![128, 64],
+        top_mlp: vec![128],
+        tables: vec![TableConfig { rows: 50_000, pooling: 20 }; 4],
+        protection,
+        dense_range: (0.0, 1.0),
+        seed: 0xE33,
+    })
+}
+
+fn synth(model: &DlrmModel, batch: usize, seed: u64) -> Vec<DlrmRequest> {
+    let mut rng = Pcg32::new(seed);
+    model.synth_requests(batch, &mut rng)
+}
+
+fn score_req_per_s(engine: &Arc<Engine>, threads: usize, iters: usize, batch: usize) -> f64 {
+    let reqs: Vec<Vec<DlrmRequest>> = {
+        let model = engine.model.read().unwrap();
+        (0..threads)
+            .map(|t| synth(&model, batch, 0x9000 + t as u64))
+            .collect()
+    };
+    // Warmup one arena per caller thread.
+    std::thread::scope(|s| {
+        for tr in &reqs {
+            s.spawn(move || {
+                let mut scores = vec![0f32; batch];
+                engine.score(tr, &mut scores);
+            });
+        }
+    });
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for tr in &reqs {
+            s.spawn(move || {
+                let mut scores = vec![0f32; batch];
+                for _ in 0..iters {
+                    std::hint::black_box(engine.score(tr, &mut scores));
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    (threads * iters * batch) as f64 / wall
+}
+
+fn engine_section(quick: bool) -> Json {
+    let iters = if quick { 8 } else { 40 };
+    let batch = 16;
+    let engine = Arc::new(Engine::new(engine_model(Protection::DetectRecompute)));
+    let mut rows = Vec::new();
+    for threads in [1usize, 4, 8] {
+        let rps = score_req_per_s(&engine, threads, iters, batch);
+        rows.push(Json::obj(vec![
+            ("threads", num(threads as f64)),
+            ("req_per_s", num(round3(rps))),
+        ]));
+    }
+    Json::obj(vec![
+        ("batch", num(batch as f64)),
+        ("iters_per_thread", num(iters as f64)),
+        ("by_threads", Json::Arr(rows)),
+    ])
+}
+
+/// Allocs/request: legacy allocating wrapper vs pooled-arena score path.
+fn alloc_section(quick: bool) -> Json {
+    let batch = 16usize;
+    let iters = if quick { 20 } else { 100 };
+    let engine = Engine::new(engine_model(Protection::DetectRecompute));
+    let reqs = {
+        let model = engine.model.read().unwrap();
+        synth(&model, batch, 0xA110)
+    };
+    let mut scores = vec![0f32; batch];
+
+    // Legacy path: forward_with allocates a fresh arena + every
+    // intermediate per call (exactly what every batch paid before PR 3).
+    let model = engine.model.read().unwrap();
+    model.forward(&reqs); // warmup (lazy pools, table caches)
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..iters {
+        std::hint::black_box(model.forward(&reqs));
+    }
+    let legacy = (ALLOCS.load(Ordering::Relaxed) - before) as f64 / (iters * batch) as f64;
+    drop(model);
+
+    // Pooled path: steady-state Engine::score.
+    for _ in 0..3 {
+        engine.score(&reqs, &mut scores);
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..iters {
+        std::hint::black_box(engine.score(&reqs, &mut scores));
+    }
+    let pooled = (ALLOCS.load(Ordering::Relaxed) - before) as f64 / (iters * batch) as f64;
+
+    Json::obj(vec![
+        ("batch", num(batch as f64)),
+        ("allocs_per_req_legacy_forward", num(round3(legacy))),
+        ("allocs_per_req_engine_score", num(round3(pooled))),
+    ])
+}
+
+/// Fused epilogue vs two-pass requantization on DLRM layer shapes.
+fn fused_section(cfg: &BenchConfig, rng: &mut Pcg32) -> Json {
+    let shapes: &[(usize, usize, usize)] = &[(16, 512, 512), (16, 1024, 1024), (1, 512, 512)];
+    let mut rows = Vec::new();
+    for &(m, k, n) in shapes {
+        let layer = AbftLinear::random(k, n, true, Protection::Detect, rng);
+        let xf: Vec<f32> = (0..m * k).map(|_| rng.next_f32()).collect();
+        let (x, xp) = quantize_slice_u8(&xf);
+        let mut scratch = GemmScratch::default();
+        let mut out = vec![0u8; m * n];
+        let fused = measure(cfg, || {}, || {
+            std::hint::black_box(layer.forward_into(&x, m, xp, &mut scratch, &mut out));
+        });
+
+        // Two-pass: protected GEMM into a reused buffer, then the
+        // separate scalar requantize sweep + ReLU clamp (pre-PR3 flow).
+        let p = layer.requant_params(&x, m, xp);
+        let zero_code = layer.out_qparams.quantize_u8(0.0);
+        let mut c_temp = vec![0i32; m * (n + 1)];
+        let two_pass = measure(cfg, || {}, || {
+            gemm_exec_into(&x, &layer.abft().packed, m, &mut c_temp);
+            let mut y = requantize_exclude_last_col(&c_temp, m, n + 1, &p);
+            for v in &mut y {
+                if *v < zero_code {
+                    *v = zero_code;
+                }
+            }
+            std::hint::black_box(y);
+        });
+
+        rows.push(Json::obj(vec![
+            ("m", num(m as f64)),
+            ("k", num(k as f64)),
+            ("n", num(n as f64)),
+            ("fused_us", num(round3(fused.median() * 1e6))),
+            ("two_pass_us", num(round3(two_pass.median() * 1e6))),
+            (
+                "two_pass_overhead_pct",
+                num(round3((two_pass.median() / fused.median() - 1.0) * 100.0)),
+            ),
+        ]));
+    }
+    Json::Arr(rows)
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick");
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_PR3.json".into());
+    let cfg = if quick {
+        BenchConfig { warmup_iters: 1, sample_iters: 3, inner_reps: 1 }
+    } else {
+        BenchConfig { warmup_iters: 3, sample_iters: 11, inner_reps: 1 }
+    };
+    let mut rng = Pcg32::new(0x93E11);
+
+    eprintln!("perf_pipeline: avx2={} quick={quick}", simd_active());
+    let fused = fused_section(&cfg, &mut rng);
+    eprintln!("perf_pipeline: fused epilogue done");
+    let allocs = alloc_section(quick);
+    eprintln!("perf_pipeline: alloc counts done");
+    let engine = engine_section(quick);
+    eprintln!("perf_pipeline: engine done");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_pipeline_pr3".into())),
+        (
+            "host",
+            Json::obj(vec![
+                ("avx2", Json::Bool(simd_active())),
+                (
+                    "threads",
+                    num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0) as f64),
+                ),
+            ]),
+        ),
+        ("fused_epilogue", fused),
+        ("allocations", allocs),
+        ("engine_score", engine),
+    ]);
+    let text = format!("{doc}");
+    std::fs::write(&out_path, &text).expect("write bench output");
+    println!("{text}");
+    eprintln!("perf_pipeline: wrote {out_path}");
+}

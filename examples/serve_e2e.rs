@@ -60,6 +60,7 @@ fn main() {
             max_batch: 16,
             max_wait: Duration::from_millis(4),
             max_queue: 1024,
+            loops: 2,
         },
     )
     .expect("server start");

@@ -12,8 +12,15 @@ use std::time::{Duration, Instant};
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
-    /// Queue bound; beyond it submissions are rejected (backpressure).
+    /// Queue bound **per batch loop**; beyond it submissions are rejected
+    /// (backpressure).
     pub max_queue: usize,
+    /// Number of independent batch loops the server runs. Connections are
+    /// hashed across them, so at high connection counts the batch-cut
+    /// wakeups and engine calls no longer serialize on one loop thread
+    /// (ROADMAP perf open item). `0` = auto (min(4, cores)); `1` = the
+    /// single-loop behavior.
+    pub loops: usize,
 }
 
 impl Default for BatchPolicy {
@@ -22,6 +29,21 @@ impl Default for BatchPolicy {
             max_batch: 32,
             max_wait: Duration::from_millis(2),
             max_queue: 4096,
+            loops: 1,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// Resolve `loops` to a concrete count (`0` = auto).
+    pub fn effective_loops(&self) -> usize {
+        if self.loops == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(4)
+        } else {
+            self.loops
         }
     }
 }
@@ -127,6 +149,7 @@ mod tests {
             max_batch,
             max_wait: Duration::from_millis(wait_ms),
             max_queue: 100,
+            loops: 1,
         }
     }
 
@@ -156,6 +179,7 @@ mod tests {
             max_batch: 10,
             max_wait: Duration::from_secs(1),
             max_queue: 2,
+            loops: 1,
         });
         b.submit(1).unwrap();
         b.submit(2).unwrap();

@@ -13,7 +13,9 @@
 use crate::abft::Scrubber;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ScoreRequest, ScoreResponse};
-use crate::dlrm::{DlrmModel, DlrmRequest, EbStage, InferenceReport, LocalEbStage, Protection};
+use crate::dlrm::{
+    DlrmModel, DlrmRequest, EbStage, InferenceReport, InferenceScratch, LocalEbStage, Protection,
+};
 use crate::shard::{RepairWorker, ShardPlan, ShardRouter, ShardStore};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
@@ -85,6 +87,16 @@ pub struct ShardServing {
     pub worker: Option<RepairWorker>,
 }
 
+/// What happened to one scored batch (the serve-time ABFT policy's
+/// verdict): detection, whether a recompute ran, and whether the batch
+/// was served degraded (detection persisted through the retry).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchOutcome {
+    pub detected: bool,
+    pub recomputed: bool,
+    pub degraded: bool,
+}
+
 pub struct Engine {
     /// Read-mostly: shared read lock for inference, write lock only for
     /// chaos injection/undo and repair writes.
@@ -99,6 +111,12 @@ pub struct Engine {
     /// When set, embedding traffic is served from the shard store via the
     /// router; the dense MLP layers stay in `model`.
     shards: Option<ShardServing>,
+    /// Per-worker inference arenas: [`Engine::score`] checks one out for
+    /// the duration of a batch and returns it, so N concurrent callers
+    /// settle on N pooled arenas and steady-state scoring allocates
+    /// nothing (the pool itself is touched only outside the forward
+    /// pass; the `Box` keeps pool pushes to one pointer move).
+    scratch_pool: Mutex<Vec<Box<InferenceScratch>>>,
 }
 
 impl Engine {
@@ -109,6 +127,7 @@ impl Engine {
             chaos: None,
             scrubbers: None,
             shards: None,
+            scratch_pool: Mutex::new(Vec::new()),
         }
     }
 
@@ -120,6 +139,7 @@ impl Engine {
             chaos: Some(Mutex::new((chaos, rng))),
             scrubbers: None,
             shards: None,
+            scratch_pool: Mutex::new(Vec::new()),
         }
     }
 
@@ -214,47 +234,75 @@ impl Engine {
     /// Serve one batch: forward → on detection, restore-chaos + recompute
     /// once → respond, with per-request latency stamped.
     ///
-    /// Clean-path batches run under a shared read lock, so concurrent
-    /// callers execute in parallel; only chaos drills take the write lock
-    /// (injection mutates the model transiently).
+    /// Allocating front-end over [`Engine::score`] (request/response
+    /// marshalling); the scoring itself is allocation-free.
     pub fn process_batch(&self, requests: Vec<ScoreRequest>) -> Vec<ScoreResponse> {
         let t0 = Instant::now();
         let ids: Vec<u64> = requests.iter().map(|r| r.id).collect();
         let dlrm_reqs: Vec<DlrmRequest> =
             requests.into_iter().map(ScoreRequest::into_dlrm).collect();
-
-        let (scores, detected, recomputed, degraded) = if self.chaos.is_some() {
-            self.run_batch_chaos(&dlrm_reqs)
-        } else {
-            self.run_batch_clean(&dlrm_reqs)
-        };
-
+        let mut scores = vec![0f32; dlrm_reqs.len()];
+        let outcome = self.score(&dlrm_reqs, &mut scores);
         let latency_us = t0.elapsed().as_micros() as u64;
-        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
-        self.metrics
-            .requests
-            .fetch_add(ids.len() as u64, Ordering::Relaxed);
-        self.metrics.latency.record_us(latency_us);
 
         ids.into_iter()
             .zip(scores)
             .map(|(id, score)| ScoreResponse {
                 id,
                 score,
-                detected,
-                recomputed,
-                degraded,
+                detected: outcome.detected,
+                recomputed: outcome.recomputed,
+                degraded: outcome.degraded,
                 latency_us,
             })
             .collect()
     }
 
+    /// Score one batch into a caller-provided buffer — the zero-allocation
+    /// serving core. An [`InferenceScratch`] arena is checked out of the
+    /// per-worker pool for the duration of the batch, so after one warmup
+    /// batch per concurrent worker (at the largest shapes) the clean path
+    /// performs **no heap allocation** (enforced by
+    /// `rust/tests/zero_alloc.rs`).
+    ///
+    /// Clean-path batches run under a shared read lock, so concurrent
+    /// callers execute in parallel; only chaos drills take the write lock
+    /// (injection mutates the model transiently).
+    pub fn score(&self, requests: &[DlrmRequest], scores: &mut [f32]) -> BatchOutcome {
+        let t0 = Instant::now();
+        let mut scratch = self
+            .scratch_pool
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_default();
+        let outcome = if self.chaos.is_some() {
+            self.run_batch_chaos(requests, &mut scratch, scores)
+        } else {
+            self.run_batch_clean(requests, &mut scratch, scores)
+        };
+        self.scratch_pool.lock().unwrap().push(scratch);
+        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .requests
+            .fetch_add(requests.len() as u64, Ordering::Relaxed);
+        self.metrics
+            .latency
+            .record_us(t0.elapsed().as_micros() as u64);
+        outcome
+    }
+
     /// Lock-free-read serving path: forward (and recompute-on-detect)
     /// under a shared lock.
-    fn run_batch_clean(&self, dlrm_reqs: &[DlrmRequest]) -> (Vec<f32>, bool, bool, bool) {
+    fn run_batch_clean(
+        &self,
+        dlrm_reqs: &[DlrmRequest],
+        scratch: &mut InferenceScratch,
+        scores: &mut [f32],
+    ) -> BatchOutcome {
         let model = self.model.read().unwrap();
-        let (scores, report) = model.forward_with(dlrm_reqs, self.eb_stage());
-        self.apply_detection_policy(&model, dlrm_reqs, scores, &report)
+        let report = model.forward_into(dlrm_reqs, self.eb_stage(), scratch, scores);
+        self.apply_detection_policy(&model, dlrm_reqs, scratch, scores, &report)
     }
 
     /// Shared detect → recompute-once → flag-degraded policy (with the
@@ -265,31 +313,32 @@ impl Engine {
         &self,
         model: &DlrmModel,
         dlrm_reqs: &[DlrmRequest],
-        mut scores: Vec<f32>,
+        scratch: &mut InferenceScratch,
+        scores: &mut [f32],
         report: &InferenceReport,
-    ) -> (Vec<f32>, bool, bool, bool) {
+    ) -> BatchOutcome {
         self.record_shard_events(report);
-        let detected = !report.clean();
-        let mut recomputed = false;
-        let mut degraded = false;
-        if detected {
+        let mut outcome = BatchOutcome {
+            detected: !report.clean(),
+            ..BatchOutcome::default()
+        };
+        if outcome.detected {
             self.metrics.detections.fetch_add(
                 (report.gemm.rows_flagged + report.eb_bags_flagged) as u64,
                 Ordering::Relaxed,
             );
             if model.cfg.protection == Protection::DetectRecompute {
-                let (scores2, report2) = model.forward_with(dlrm_reqs, self.eb_stage());
+                let report2 = model.forward_into(dlrm_reqs, self.eb_stage(), scratch, scores);
                 self.record_shard_events(&report2);
-                scores = scores2;
-                recomputed = true;
+                outcome.recomputed = true;
                 self.metrics.recomputes.fetch_add(1, Ordering::Relaxed);
                 if !report2.clean() {
-                    degraded = true;
+                    outcome.degraded = true;
                     self.metrics.degraded.fetch_add(1, Ordering::Relaxed);
                 }
             }
         }
-        (scores, detected, recomputed, degraded)
+        outcome
     }
 
     /// Fold the router's transparently-recovered events into the serving
@@ -334,19 +383,24 @@ impl Engine {
     /// operands takes the write lock, for the whole inject → forward →
     /// restore window (readers must never observe a transiently-
     /// corrupted model).
-    fn run_batch_chaos(&self, dlrm_reqs: &[DlrmRequest]) -> (Vec<f32>, bool, bool, bool) {
+    fn run_batch_chaos(
+        &self,
+        dlrm_reqs: &[DlrmRequest],
+        scratch: &mut InferenceScratch,
+        scores: &mut [f32],
+    ) -> BatchOutcome {
         let plan = self.draw_chaos_plan();
         if plan.is_empty() {
-            return self.run_batch_clean(dlrm_reqs);
+            return self.run_batch_clean(dlrm_reqs, scratch, scores);
         }
 
         let mut model = self.model.write().unwrap();
         let undo = self.apply_plan(&mut model, &plan);
-        let (scores, report) = model.forward_with(dlrm_reqs, self.eb_stage());
+        let report = model.forward_into(dlrm_reqs, self.eb_stage(), scratch, scores);
         // Restore transient chaos before any retry (a transient fault
         // would not recur on real hardware either).
         self.undo_chaos(&mut model, &undo);
-        self.apply_detection_policy(&model, dlrm_reqs, scores, &report)
+        self.apply_detection_policy(&model, dlrm_reqs, scratch, scores, &report)
     }
 
     /// Roll the dice and, when they come up, draw the fault coordinates —

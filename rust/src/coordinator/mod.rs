@@ -11,7 +11,7 @@ pub mod request;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher, SubmitError};
-pub use engine::{ChaosConfig, Engine, ShardServing};
+pub use engine::{BatchOutcome, ChaosConfig, Engine, ShardServing};
 pub use metrics::Metrics;
 pub use pjrt_backend::{ArtifactShape, PjrtModelEngine};
 pub use request::{ScoreRequest, ScoreResponse};

@@ -5,11 +5,24 @@
 //!   → `{"id": 1, "dense": [...], "sparse": [[...], ...]}`
 //!   → `{"op": "metrics"}`            (returns the metrics snapshot)
 //!   ← `{"id": 1, "score": 0.42, "detected": false, ...}`
+//!
+//! # Sharded batch loops
+//!
+//! The server runs `policy.effective_loops()` independent batcher +
+//! batch-loop pairs and **hashes each connection** (splitmix64 of its
+//! accept sequence number) onto one of them. With a single global loop,
+//! every batch cut wakes the same thread and the engine call serializes
+//! behind it at high connection counts; with per-core loops the wakeups,
+//! response fan-outs, and engine calls proceed in parallel — the engine
+//! itself is already concurrent (shared read lock + per-worker scratch).
+//! A connection sticks to its loop for its lifetime, so per-connection
+//! response ordering is preserved.
 
 use crate::coordinator::batcher::{Batcher, BatchPolicy};
 use crate::coordinator::engine::Engine;
 use crate::coordinator::request::{ScoreRequest, ScoreResponse};
 use crate::util::json::Json;
+use crate::util::rng::splitmix64;
 use anyhow::Result;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
@@ -28,8 +41,8 @@ pub struct Server {
     pub addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
     accept_thread: Option<thread::JoinHandle<()>>,
-    batch_thread: Option<thread::JoinHandle<()>>,
-    batcher: Arc<Batcher<Pending>>,
+    batch_threads: Vec<thread::JoinHandle<()>>,
+    batchers: Vec<Arc<Batcher<Pending>>>,
 }
 
 impl Server {
@@ -39,42 +52,54 @@ impl Server {
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let shutdown = Arc::new(AtomicBool::new(false));
-        let batcher = Arc::new(Batcher::<Pending>::new(policy));
+        let loops = policy.effective_loops().max(1);
+        let batchers: Vec<Arc<Batcher<Pending>>> = (0..loops)
+            .map(|_| Arc::new(Batcher::<Pending>::new(policy)))
+            .collect();
 
-        // Batch loop: drain batches, run the engine, fan responses out.
-        let batch_thread = {
-            let batcher = Arc::clone(&batcher);
+        // Batch loops: drain batches, run the engine, fan responses out.
+        let mut batch_threads = Vec::with_capacity(loops);
+        for (l, batcher) in batchers.iter().enumerate() {
+            let batcher = Arc::clone(batcher);
             let engine = Arc::clone(&engine);
-            thread::Builder::new()
-                .name("batch-loop".into())
-                .spawn(move || {
-                    while let Some(batch) = batcher.next_batch() {
-                        let (reqs, replies): (Vec<_>, Vec<_>) =
-                            batch.into_iter().map(|p| (p.req, p.reply)).unzip();
-                        let resps = engine.process_batch(reqs);
-                        for (resp, reply) in resps.into_iter().zip(replies) {
-                            let _ = reply.send(resp);
+            batch_threads.push(
+                thread::Builder::new()
+                    .name(format!("batch-loop-{l}"))
+                    .spawn(move || {
+                        while let Some(batch) = batcher.next_batch() {
+                            let (reqs, replies): (Vec<_>, Vec<_>) =
+                                batch.into_iter().map(|p| (p.req, p.reply)).unzip();
+                            let resps = engine.process_batch(reqs);
+                            for (resp, reply) in resps.into_iter().zip(replies) {
+                                let _ = reply.send(resp);
+                            }
+                            // Idle-slot proactive scrubbing (incremental +
+                            // thread-safe, so concurrent loops just scrub
+                            // more rows per wall-clock tick).
+                            engine.scrub_tick();
                         }
-                        // Idle-slot proactive scrubbing (no-op when disabled).
-                        engine.scrub_tick();
-                    }
-                })?
-        };
+                    })?,
+            );
+        }
 
         // Accept loop: one thread per connection (CPU-bound inference
-        // dominates; connection counts here are small).
+        // dominates; connection counts here are small). Each connection
+        // is hashed onto one batch loop.
         let accept_thread = {
             let shutdown = Arc::clone(&shutdown);
-            let batcher = Arc::clone(&batcher);
+            let batchers = batchers.clone();
             let engine = Arc::clone(&engine);
             thread::Builder::new().name("accept".into()).spawn(move || {
+                let mut conn_seq = 0u64;
                 loop {
                     if shutdown.load(Ordering::SeqCst) {
                         break;
                     }
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let batcher = Arc::clone(&batcher);
+                            let lix = (splitmix64(conn_seq) % batchers.len() as u64) as usize;
+                            conn_seq += 1;
+                            let batcher = Arc::clone(&batchers[lix]);
                             let engine = Arc::clone(&engine);
                             thread::spawn(move || {
                                 let _ = handle_conn(stream, batcher, engine);
@@ -93,18 +118,20 @@ impl Server {
             addr: local,
             shutdown,
             accept_thread: Some(accept_thread),
-            batch_thread: Some(batch_thread),
-            batcher,
+            batch_threads,
+            batchers,
         })
     }
 
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        self.batcher.close();
+        for b in &self.batchers {
+            b.close();
+        }
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        if let Some(t) = self.batch_thread.take() {
+        for t in self.batch_threads.drain(..) {
             let _ = t.join();
         }
     }
@@ -113,7 +140,9 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        self.batcher.close();
+        for b in &self.batchers {
+            b.close();
+        }
     }
 }
 
@@ -241,6 +270,7 @@ mod tests {
             max_batch: 8,
             max_wait: Duration::from_millis(1),
             max_queue: 64,
+            loops: 1,
         }
     }
 
@@ -276,6 +306,51 @@ mod tests {
         line.clear();
         r.read_line(&mut line).unwrap();
         assert!(line.contains("score"));
+        server.stop();
+    }
+
+    #[test]
+    fn sharded_batch_loops_serve_all_connections() {
+        // Several loops + many connections: every request is answered,
+        // responses stay correct per connection, and the request count
+        // adds up (no loop loses traffic).
+        let engine = tiny_engine();
+        let policy = BatchPolicy { loops: 3, ..fast_policy() };
+        let server = Server::start("127.0.0.1:0", Arc::clone(&engine), policy).unwrap();
+        let addr = server.addr;
+        let handles: Vec<_> = (0..12u64)
+            .map(|id| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    let mut last = 0.0;
+                    for i in 0..3 {
+                        let resp = c.score(&sample_request(id * 100 + i)).unwrap();
+                        assert_eq!(resp.id, id * 100 + i);
+                        last = resp.score;
+                    }
+                    last
+                })
+            })
+            .collect();
+        for h in handles {
+            let score = h.join().unwrap();
+            assert!((0.0..=1.0).contains(&score));
+        }
+        assert_eq!(
+            engine.metrics.requests.load(std::sync::atomic::Ordering::Relaxed),
+            36
+        );
+        server.stop();
+    }
+
+    #[test]
+    fn zero_loops_resolves_to_auto() {
+        let policy = BatchPolicy { loops: 0, ..fast_policy() };
+        assert!(policy.effective_loops() >= 1);
+        let server = Server::start("127.0.0.1:0", tiny_engine(), policy).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let resp = client.score(&sample_request(9)).unwrap();
+        assert_eq!(resp.id, 9);
         server.stop();
     }
 

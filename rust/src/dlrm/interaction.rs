@@ -6,9 +6,25 @@
 /// `batch × groups × d`. Output is `batch × C(groups,2)` of pairwise dots
 /// (upper triangle, row-major pair order).
 pub fn pairwise_interaction(vectors: &[f32], batch: usize, groups: usize, d: usize) -> Vec<f32> {
-    assert_eq!(vectors.len(), batch * groups * d);
-    let pairs = groups * (groups - 1) / 2;
+    let pairs = interaction_dim(groups);
     let mut out = vec![0f32; batch * pairs];
+    pairwise_interaction_into(vectors, batch, groups, d, &mut out);
+    out
+}
+
+/// Allocation-free form of [`pairwise_interaction`]: writes the
+/// `batch × C(groups,2)` dots into a caller-provided buffer (the serving
+/// path reuses its scratch arena's).
+pub fn pairwise_interaction_into(
+    vectors: &[f32],
+    batch: usize,
+    groups: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(vectors.len(), batch * groups * d);
+    let pairs = interaction_dim(groups);
+    assert_eq!(out.len(), batch * pairs);
     for b in 0..batch {
         let base = b * groups * d;
         let mut p = 0;
@@ -25,7 +41,6 @@ pub fn pairwise_interaction(vectors: &[f32], batch: usize, groups: usize, d: usi
             }
         }
     }
-    out
 }
 
 /// Number of interaction features for `groups` vectors.

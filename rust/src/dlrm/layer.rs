@@ -5,9 +5,10 @@
 
 use crate::abft::AbftGemm;
 use crate::dlrm::config::Protection;
-use crate::gemm::{gemm_exec, PackedB};
-use crate::quant::{requantize, requantize_exclude_last_col, QParams, RequantParams};
+use crate::gemm::{gemm_requant_exec_into, PackedB};
+use crate::quant::{requantize_cols_into, QParams, RequantEpilogue, RequantParams, RequantSpec};
 use crate::util::rng::Pcg32;
+use crate::util::scratch::{grow, GemmScratch};
 use std::sync::Arc;
 
 /// Detection/recovery events from one layer invocation.
@@ -110,27 +111,81 @@ impl AbftLinear {
     }
 
     /// Forward one quantized batch (m×k u8). Returns (m×n u8, report).
+    ///
+    /// Allocating wrapper over [`AbftLinear::forward_into`] (kept for
+    /// tests/tools); the serving path threads a [`GemmScratch`] through
+    /// the `_into` form and never allocates.
     pub fn forward(&self, x: &[u8], m: usize, x_qparams: QParams) -> (Vec<u8>, LayerReport) {
-        let mut report = LayerReport::default();
-        let rp = self.requant_params(x, m, x_qparams);
+        let mut scratch = GemmScratch::default();
+        let mut out = vec![0u8; m * self.n];
+        let report = self.forward_into(x, m, x_qparams, &mut scratch, &mut out);
+        (out, report)
+    }
 
-        let out = if self.protection.enabled() {
-            let (mut c_temp, verdict) = self.abft.exec(x, m);
+    /// Allocation-free forward through the fused GEMM + requantize/ReLU
+    /// kernel. The protected path computes `C_temp` (checksum column
+    /// included) into `scratch.c_temp` *and* the quantized payload into
+    /// `out` in one kernel pass, then verifies the stored i32 rows
+    /// (Eq 3b semantics are unchanged — verification always sees the
+    /// pre-requantization accumulator). A row that fails and is
+    /// recomputed is re-requantized from its repaired accumulator, so
+    /// the output is bit-identical to the two-pass requantize-after-
+    /// recompute flow on every dispatch path.
+    pub fn forward_into(
+        &self,
+        x: &[u8],
+        m: usize,
+        x_qparams: QParams,
+        scratch: &mut GemmScratch,
+        out: &mut [u8],
+    ) -> LayerReport {
+        assert_eq!(x.len(), m * self.k, "input shape");
+        assert_eq!(out.len(), m * self.n, "output shape");
+        let mut report = LayerReport::default();
+        let spec = RequantSpec::new(x_qparams, self.w_qparams, self.out_qparams, self.k);
+        let relu_floor = if self.relu {
+            self.out_qparams.quantize_u8(0.0)
+        } else {
+            0
+        };
+        let GemmScratch { c_temp, a_row_sums } = scratch;
+        crate::gemm::row_sums_into(x, m, self.k, grow(a_row_sums, m));
+        let epi = RequantEpilogue {
+            spec,
+            a_row_sums: &a_row_sums[..m],
+            b_col_sums: &self.w_col_sums,
+            n_out: self.n,
+            relu_floor,
+        };
+
+        if self.protection.enabled() {
+            let nt = self.n + 1;
+            let c_temp = grow(c_temp, m * nt);
+            gemm_requant_exec_into(x, &self.abft.packed, m, &epi, c_temp, out);
+            let verdict = self.abft.verify(c_temp, m);
             report.rows_flagged = verdict.err_count();
             if self.protection == Protection::DetectRecompute && !verdict.clean() {
                 for &row in &verdict.corrupted_rows {
-                    self.abft.recompute_row(x, row, &mut c_temp, m);
+                    self.abft.recompute_row(x, row, c_temp, m);
                     report.rows_recomputed += 1;
+                    requantize_cols_into(
+                        &c_temp[row * nt..(row + 1) * nt],
+                        1,
+                        nt,
+                        0..self.n,
+                        &epi.a_row_sums[row..row + 1],
+                        epi.b_col_sums,
+                        &epi.spec,
+                        epi.relu_floor,
+                        &mut out[row * self.n..(row + 1) * self.n],
+                    );
                 }
             }
-            requantize_exclude_last_col(&c_temp, m, self.n + 1, &rp)
         } else {
-            let c_temp = gemm_exec(x, &self.plain, m);
-            requantize(&c_temp, m, self.n, &rp)
-        };
-
-        let out = if self.relu { self.apply_relu(out) } else { out };
-        (out, report)
+            let c_temp = grow(c_temp, m * self.n);
+            gemm_requant_exec_into(x, &self.plain, m, &epi, c_temp, out);
+        }
+        report
     }
 
     /// Expose the 32-bit intermediate for fault-injection tests.
@@ -138,25 +193,11 @@ impl AbftLinear {
         self.abft.exec(x, m)
     }
 
-    /// Quantized ReLU: clamp below the code of real 0.
-    fn apply_relu(&self, mut out: Vec<u8>) -> Vec<u8> {
-        let zero_code = self.out_qparams.quantize_u8(0.0);
-        for v in &mut out {
-            if *v < zero_code {
-                *v = zero_code;
-            }
-        }
-        out
-    }
-
-    fn requant_params(&self, x: &[u8], m: usize, x_qparams: QParams) -> RequantParams {
+    /// The Eq-1 requantization parameter set for one input batch (used by
+    /// tests and baselines that drive the two-pass scalar path).
+    pub fn requant_params(&self, x: &[u8], m: usize, x_qparams: QParams) -> RequantParams {
         let mut a_row_sums = vec![0i32; m];
-        for i in 0..m {
-            a_row_sums[i] = x[i * self.k..(i + 1) * self.k]
-                .iter()
-                .map(|&v| v as i32)
-                .sum();
-        }
+        crate::gemm::row_sums_into(x, m, self.k, &mut a_row_sums);
         RequantParams {
             a: x_qparams,
             b: self.w_qparams,

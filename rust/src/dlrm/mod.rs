@@ -6,9 +6,11 @@ pub mod config;
 pub mod interaction;
 pub mod layer;
 pub mod model;
+pub mod scratch;
 pub mod serialize;
 
 pub use config::{DlrmConfig, Protection, TableConfig};
-pub use interaction::{interaction_dim, pairwise_interaction};
+pub use interaction::{interaction_dim, pairwise_interaction, pairwise_interaction_into};
 pub use layer::{AbftLinear, LayerReport};
 pub use model::{DlrmModel, DlrmRequest, EbStage, EbStageReport, InferenceReport, LocalEbStage};
+pub use scratch::{EbScratch, InferenceScratch};

@@ -4,8 +4,9 @@
 
 use crate::abft::{EbChecksum, FusedEbAbft};
 use crate::dlrm::config::{DlrmConfig, Protection};
-use crate::dlrm::interaction::pairwise_interaction;
+use crate::dlrm::interaction::pairwise_interaction_into;
 use crate::dlrm::layer::{AbftLinear, LayerReport};
+use crate::dlrm::scratch::{grow, EbScratch, InferenceScratch};
 use crate::embedding::{bag_sum_8, QuantTable8};
 use crate::quant::QParams;
 use crate::util::rng::Pcg32;
@@ -89,11 +90,21 @@ impl EbStageReport {
 /// shard router ([`crate::shard::ShardRouter`]) serves the same traffic
 /// from a replicated shard store with detection-driven failover.
 ///
+/// `eb` is the caller's pooled stage scratch: implementations park any
+/// per-batch buffers there (grow-only) so steady-state serving stays
+/// allocation-free; [`LocalEbStage`] needs none and ignores it.
+///
 /// Contract: on clean data an implementation must be **bit-identical**
 /// to [`LocalEbStage`] — a model's scores must not depend on the serving
 /// topology.
 pub trait EbStage: Sync {
-    fn run(&self, model: &DlrmModel, requests: &[DlrmRequest], feats: &mut [f32]) -> EbStageReport;
+    fn run(
+        &self,
+        model: &DlrmModel,
+        requests: &[DlrmRequest],
+        feats: &mut [f32],
+        eb: &mut EbScratch,
+    ) -> EbStageReport;
 }
 
 /// The unsharded EB stage: every table served from `model.tables`,
@@ -101,7 +112,13 @@ pub trait EbStage: Sync {
 pub struct LocalEbStage;
 
 impl EbStage for LocalEbStage {
-    fn run(&self, model: &DlrmModel, requests: &[DlrmRequest], feats: &mut [f32]) -> EbStageReport {
+    fn run(
+        &self,
+        model: &DlrmModel,
+        requests: &[DlrmRequest],
+        feats: &mut [f32],
+        _eb: &mut EbScratch,
+    ) -> EbStageReport {
         let d = model.cfg.embedding_dim;
         let groups = model.tables.len() + 1;
         let eb_work: usize = requests
@@ -208,7 +225,9 @@ impl DlrmModel {
         let batch = 64;
         let dim = self.cfg.top_input_dim();
         let reqs = self.synth_requests(batch, rng);
-        let top_in = self.compute_top_input(&reqs, &LocalEbStage).0;
+        let mut scratch = InferenceScratch::default();
+        self.compute_top_input_into(&reqs, &LocalEbStage, &mut scratch);
+        let top_in = &scratch.top_in[..batch * dim];
         // Per-column mean/std over the calibration batch.
         let mut mean = vec![0f32; dim];
         for b in 0..batch {
@@ -245,48 +264,86 @@ impl DlrmModel {
     /// Batched forward pass with an explicit EB-stage strategy (the shard
     /// router, a test double, …). Scores are bit-identical across
     /// strategies on clean data (see [`EbStage`]).
+    ///
+    /// Allocating wrapper over [`DlrmModel::forward_into`]; serving paths
+    /// hold an [`InferenceScratch`] and call the `_into` form directly.
     pub fn forward_with(
         &self,
         requests: &[DlrmRequest],
         stage: &dyn EbStage,
     ) -> (Vec<f32>, InferenceReport) {
-        let (top_in, mut report) = self.compute_top_input(requests, stage);
+        let mut scratch = InferenceScratch::default();
+        let mut scores = vec![0f32; requests.len()];
+        let report = self.forward_into(requests, stage, &mut scratch, &mut scores);
+        (scores, report)
+    }
+
+    /// The zero-allocation forward pass: every intermediate lives in
+    /// `scratch` (grow-only — after one warmup batch at the largest
+    /// shapes, no heap allocation happens here), scores land in the
+    /// caller's buffer. Bit-identical to [`DlrmModel::forward_with`] by
+    /// construction (that wrapper delegates here).
+    pub fn forward_into(
+        &self,
+        requests: &[DlrmRequest],
+        stage: &dyn EbStage,
+        scratch: &mut InferenceScratch,
+        scores: &mut [f32],
+    ) -> InferenceReport {
         let batch = requests.len();
+        assert_eq!(scores.len(), batch, "scores buffer");
+        let mut report = self.compute_top_input_into(requests, stage, scratch);
         let top_in_dim = self.cfg.top_input_dim();
 
         // 5. Standardize per column (calibrated stats), then quantize onto
         // the static lattice and run the top MLP + scalar head.
         let mut qp = self.top_qparams;
-        let mut xq = vec![0u8; batch * top_in_dim];
+        let xq = grow(&mut scratch.act_a, batch * top_in_dim);
         for b in 0..batch {
             for j in 0..top_in_dim {
-                let z = (top_in[b * top_in_dim + j] - self.top_mean[j]) / self.top_std[j];
+                let z = (scratch.top_in[b * top_in_dim + j] - self.top_mean[j]) / self.top_std[j];
                 xq[b * top_in_dim + j] = qp.quantize_u8(z);
             }
         }
+        let mut width = top_in_dim;
         for layer in &self.top {
-            let (y, rep) = layer.forward(&xq, batch, qp);
+            grow(&mut scratch.act_b, batch * layer.n);
+            let rep = layer.forward_into(
+                &scratch.act_a[..batch * width],
+                batch,
+                qp,
+                &mut scratch.gemm,
+                &mut scratch.act_b[..batch * layer.n],
+            );
             report.gemm.merge(&rep);
             qp = layer.out_qparams;
-            xq = y;
+            width = layer.n;
+            std::mem::swap(&mut scratch.act_a, &mut scratch.act_b);
         }
-        let (logits_q, rep) = self.head.forward(&xq, batch, qp);
+        grow(&mut scratch.act_b, batch);
+        let rep = self.head.forward_into(
+            &scratch.act_a[..batch * width],
+            batch,
+            qp,
+            &mut scratch.gemm,
+            &mut scratch.act_b[..batch],
+        );
         report.gemm.merge(&rep);
-        let scores: Vec<f32> = logits_q
-            .iter()
-            .map(|&q| sigmoid(self.head.out_qparams.dequantize_u8(q)))
-            .collect();
-        (scores, report)
+        for (s, &q) in scores.iter_mut().zip(&scratch.act_b[..batch]) {
+            *s = sigmoid(self.head.out_qparams.dequantize_u8(q));
+        }
+        report
     }
 
     /// Bottom half of the forward pass: bottom MLP → EBs (via `stage`) →
-    /// interaction → concat. Returns the float top-MLP input
-    /// (batch × top_input_dim).
-    fn compute_top_input(
+    /// interaction → concat. Leaves the float top-MLP input in
+    /// `scratch.top_in` (batch × top_input_dim).
+    fn compute_top_input_into(
         &self,
         requests: &[DlrmRequest],
         stage: &dyn EbStage,
-    ) -> (Vec<f32>, InferenceReport) {
+        scratch: &mut InferenceScratch,
+    ) -> InferenceReport {
         let batch = requests.len();
         assert!(batch > 0);
         let d = self.cfg.embedding_dim;
@@ -294,7 +351,7 @@ impl DlrmModel {
         let mut report = InferenceReport::default();
 
         // 1. Quantize dense inputs against the fixed input lattice.
-        let mut dense_q = vec![0u8; batch * self.cfg.num_dense];
+        let dense_q = grow(&mut scratch.act_a, batch * self.cfg.num_dense);
         for (b, req) in requests.iter().enumerate() {
             assert_eq!(req.dense.len(), self.cfg.num_dense, "dense width");
             assert_eq!(req.sparse.len(), num_tables, "sparse tables");
@@ -303,27 +360,44 @@ impl DlrmModel {
             }
         }
 
-        // 2. Bottom MLP.
-        let mut x = dense_q;
+        // 2. Bottom MLP (activations ping-pong between the two scratch
+        // buffers; the current input always sits in `act_a`).
         let mut x_qp = self.dense_qparams;
+        let mut width = self.cfg.num_dense;
         for layer in &self.bottom {
-            let (y, rep) = layer.forward(&x, batch, x_qp);
+            grow(&mut scratch.act_b, batch * layer.n);
+            let rep = layer.forward_into(
+                &scratch.act_a[..batch * width],
+                batch,
+                x_qp,
+                &mut scratch.gemm,
+                &mut scratch.act_b[..batch * layer.n],
+            );
             report.gemm.merge(&rep);
             x_qp = layer.out_qparams;
-            x = y;
+            width = layer.n;
+            std::mem::swap(&mut scratch.act_a, &mut scratch.act_b);
         }
-        let bottom_f: Vec<f32> = x.iter().map(|&q| x_qp.dequantize_u8(q)).collect();
+        let bottom_f = grow(&mut scratch.bottom_f, batch * width);
+        for (f, &q) in bottom_f.iter_mut().zip(&scratch.act_a[..batch * width]) {
+            *f = x_qp.dequantize_u8(q);
+        }
 
         // 3. EmbeddingBags, ABFT-checked per bag, via the serving
         // strategy: [`LocalEbStage`] reads `self.tables`; the shard
         // router serves replicas — both bit-identical on clean data.
         let groups = num_tables + 1;
-        let mut feats = vec![0f32; batch * groups * d];
+        let feats = grow(&mut scratch.feats, batch * groups * d);
         for b in 0..batch {
             feats[b * groups * d..b * groups * d + d]
-                .copy_from_slice(&bottom_f[b * d..(b + 1) * d]);
+                .copy_from_slice(&scratch.bottom_f[b * d..(b + 1) * d]);
         }
-        let eb = stage.run(self, requests, &mut feats);
+        let eb = stage.run(
+            self,
+            requests,
+            &mut scratch.feats[..batch * groups * d],
+            &mut scratch.eb,
+        );
         report.eb_bags_flagged += eb.flagged;
         report.eb_bags_recomputed += eb.recomputed;
         report.eb_bags_unrecovered += eb.unrecovered;
@@ -332,18 +406,24 @@ impl DlrmModel {
         report.shard_quarantines += eb.shard_quarantines;
 
         // 4. Pairwise interactions + concat with bottom output.
-        let inter = pairwise_interaction(&feats, batch, groups, d);
-        let pairs = inter.len() / batch;
+        let pairs = crate::dlrm::interaction::interaction_dim(groups);
+        pairwise_interaction_into(
+            &scratch.feats[..batch * groups * d],
+            batch,
+            groups,
+            d,
+            grow(&mut scratch.inter, batch * pairs),
+        );
         let top_in_dim = d + pairs;
         debug_assert_eq!(top_in_dim, self.cfg.top_input_dim());
-        let mut top_in = vec![0f32; batch * top_in_dim];
+        let top_in = grow(&mut scratch.top_in, batch * top_in_dim);
         for b in 0..batch {
             top_in[b * top_in_dim..b * top_in_dim + d]
-                .copy_from_slice(&bottom_f[b * d..(b + 1) * d]);
+                .copy_from_slice(&scratch.bottom_f[b * d..(b + 1) * d]);
             top_in[b * top_in_dim + d..(b + 1) * top_in_dim]
-                .copy_from_slice(&inter[b * pairs..(b + 1) * pairs]);
+                .copy_from_slice(&scratch.inter[b * pairs..(b + 1) * pairs]);
         }
-        (top_in, report)
+        report
     }
 
     /// All tables' bags for one request, written into its `(1+T)·d`

@@ -1,0 +1,104 @@
+//! The inference scratch arena: every buffer a `DlrmModel::forward_into`
+//! pass needs, owned in one reusable struct so steady-state serving makes
+//! **zero heap allocations** (ROADMAP "Zero-allocation pipeline").
+//!
+//! # Ownership / aliasing rules
+//!
+//! * One arena belongs to **one forward pass at a time**. The engine keeps
+//!   a pool of arenas and checks one out per batch (per worker thread
+//!   under the shared read lock), so concurrent scoring never shares an
+//!   arena. Nothing here is `Sync`-guarded — sharing mid-pass is a bug.
+//! * All buffers are grow-only ([`grow`]): the first batch at the largest
+//!   shapes is the warmup allocation; afterwards `Engine::score` is
+//!   allocation-free (enforced by the counting-allocator test in
+//!   `rust/tests/zero_alloc.rs`).
+//! * Contents are stale between passes. Each stage fully overwrites the
+//!   prefix it claims before anything reads it; no stage may read a
+//!   region another stage wrote during a *previous* pass.
+//! * The activation pair `act_a`/`act_b` ping-pongs through the MLP
+//!   chains by `std::mem::swap` — pointers move, bytes never copy.
+
+use crate::dlrm::model::EbStageReport;
+pub use crate::util::scratch::{grow, GemmScratch};
+
+/// Scratch owned by the EmbeddingBag serving strategy ([`EbStage`]).
+/// [`LocalEbStage`] needs none; the shard router parks its per-shard
+/// fan-out buffers here so they pool across batches instead of being
+/// reallocated per batch (ROADMAP shard open item).
+///
+/// [`EbStage`]: crate::dlrm::EbStage
+/// [`LocalEbStage`]: crate::dlrm::LocalEbStage
+#[derive(Clone, Debug, Default)]
+pub struct EbScratch {
+    /// One dense `batch × shard_slots × d` buffer per shard (indexed by
+    /// shard id). Grown lazily to the store's shard count.
+    pub bufs: Vec<Vec<f32>>,
+    /// One detection tally per shard, reset each run.
+    pub reports: Vec<EbStageReport>,
+}
+
+impl EbScratch {
+    /// Make sure at least `n` per-shard buffer/report slots exist and
+    /// reset the first `n` reports. Allocation-free once `n` has been
+    /// seen (the empty `Vec`s themselves are pooled).
+    pub fn reset(&mut self, n: usize) {
+        while self.bufs.len() < n {
+            self.bufs.push(Vec::new());
+        }
+        if self.reports.len() < n {
+            self.reports.resize(n, EbStageReport::default());
+        }
+        self.reports[..n].fill(EbStageReport::default());
+    }
+}
+
+/// All buffers of one end-to-end forward pass (see module docs for the
+/// ownership rules). Stage map:
+///
+/// | field       | written by                  | read by                  |
+/// |-------------|-----------------------------|--------------------------|
+/// | `act_a/b`   | quantize + every MLP layer  | the next layer           |
+/// | `gemm`      | each layer's fused GEMM     | ABFT verify / recompute  |
+/// | `bottom_f`  | bottom-MLP dequantization   | feats slot 0, top concat |
+/// | `feats`     | slot 0 copy + EB stage      | pairwise interaction     |
+/// | `inter`     | pairwise interaction        | top-MLP concat           |
+/// | `top_in`    | concat                      | top-MLP quantization     |
+/// | `eb`        | the EB stage strategy       | (strategy-internal)      |
+#[derive(Clone, Debug, Default)]
+pub struct InferenceScratch {
+    /// Per-layer GEMM accumulator + A-row sums (shared down the chain).
+    pub gemm: GemmScratch,
+    /// Quantized activation ping buffer (holds the current layer input).
+    pub act_a: Vec<u8>,
+    /// Quantized activation pong buffer (receives the layer output).
+    pub act_b: Vec<u8>,
+    /// Dequantized bottom-MLP output, `batch × d`.
+    pub bottom_f: Vec<f32>,
+    /// Feature groups `batch × (1 + num_tables) × d`.
+    pub feats: Vec<f32>,
+    /// Pairwise interactions `batch × C(groups, 2)`.
+    pub inter: Vec<f32>,
+    /// Top-MLP float input `batch × top_input_dim`.
+    pub top_in: Vec<f32>,
+    /// EB-stage strategy scratch (shard router fan-out buffers).
+    pub eb: EbScratch,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eb_scratch_reset_pools_slots() {
+        let mut eb = EbScratch::default();
+        eb.reset(3);
+        assert_eq!(eb.bufs.len(), 3);
+        assert_eq!(eb.reports.len(), 3);
+        eb.reports[1].flagged = 7;
+        grow(&mut eb.bufs[2], 16);
+        eb.reset(2);
+        assert_eq!(eb.bufs.len(), 3, "buffers are pooled, not dropped");
+        assert_eq!(eb.reports[1], EbStageReport::default(), "reports reset");
+        assert_eq!(eb.bufs[2].len(), 16, "capacity survives reset");
+    }
+}

@@ -1,4 +1,5 @@
-//! AVX2 microkernel for the panel-interleaved u8×i8→i32 GEMM.
+//! AVX2 microkernel for the panel-interleaved u8×i8→i32 GEMM, with an
+//! optional fused requantize+ReLU epilogue.
 //!
 //! The pairwise trick: the pack interleaves two consecutive k-rows per
 //! column (see `packed` module docs), so one 32-byte load holds 16
@@ -8,22 +9,38 @@
 //! `a_even·b_even + a_odd·b_odd` per column — the `maddubs` dataflow
 //! without its i16 saturation, keeping SIMD output bit-identical to the
 //! scalar kernel (products ≤ 255·128 fit i16 ranges comfortably inside
-//! madd's i32 accumulation).
+//! madd's i32 accumulation). When k is odd the trailing k-row is folded
+//! into the accumulators with a widened `_mm256_mullo_epi32` — integer
+//! adds commute, so the whole `C_temp` tile is finished **in registers**.
 //!
 //! Shape: MR=2 rows × NR=32 columns per register tile → 8 ymm
 //! accumulators + 4 shared widened-B vectors in flight, within the 16
 //! architectural ymm registers. A full panel is walked over all of k in
 //! one pass, so C is touched once per (row, panel).
 //!
-//! Ragged tail panels (width < 32 — e.g. the ABFT checksum column when
-//! `n % 32 == 0` makes `n_total ≡ 1 (mod 32)`) fall back to the shared
-//! scalar panel kernel; they are a vanishing fraction of the work.
+//! # Fused epilogue ([`gemm_rows_fused`])
+//!
+//! After a tile's accumulators are final, the fused variant stores the
+//! i32 tile to `C_temp` (the ABFT row-checksum verification still needs
+//! it) **and** requantizes the same register values straight to u8 —
+//! Eq 1's affine correction, `round`, clamp, and the quantized-ReLU
+//! floor — without ever reloading the i32 tile from memory. Bit-exactness
+//! with the scalar `quant::requantize_cols_into` core is maintained by
+//! replaying its exact f32 operation sequence ([`RequantSpec::real`]'s
+//! documented order, true IEEE division, and a `round`-half-away-from-
+//! zero implemented via truncate + signed adjust — `_mm256_round_ps`'s
+//! nearest-even mode would diverge from Rust's `f32::round` on exact
+//! ties). Columns at or beyond `n_out` (the ABFT checksum column) are
+//! skipped exactly as `requantize_exclude_last_col` skips them: panels
+//! that touch the payload boundary, and ragged tail panels, store i32
+//! and requantize through the shared scalar core instead.
 
 #![allow(clippy::missing_safety_doc)]
 
 use core::arch::x86_64::*;
 
 use super::packed::{panel_rows_scalar, PackedB, NR};
+use crate::quant::{requantize_cols_into, RequantEpilogue};
 
 /// Cached runtime AVX2 check (std memoizes the cpuid probe).
 #[inline]
@@ -31,8 +48,9 @@ pub(crate) fn available() -> bool {
     std::arch::is_x86_feature_detected!("avx2")
 }
 
-/// Multiply a row block: `c[rows × nt] += a[rows × k] · B`. `c` must be
-/// pre-zeroed by the caller (the dispatcher does).
+/// Multiply a row block: `c[rows × nt] = a[rows × k] · B` for the full
+/// panels; ragged tail panels accumulate via the shared scalar kernel, so
+/// `c` must be pre-zeroed by the caller (the dispatcher does).
 ///
 /// # Safety
 /// Caller must ensure the host supports AVX2 (`available()`).
@@ -54,25 +72,131 @@ pub(crate) unsafe fn gemm_rows(a: &[u8], packed: &PackedB, rows: usize, c: &mut 
         let panel = data.add(j0 * k);
         let mut i = 0usize;
         while i + 2 <= rows {
-            row_pair_panel(
-                a.as_ptr().add(i * k),
-                a.as_ptr().add((i + 1) * k),
-                panel,
-                k,
-                c.as_mut_ptr().add(i * nt + j0),
-                c.as_mut_ptr().add((i + 1) * nt + j0),
-            );
+            let (acc0, acc1) = panel_acc_pair(a.as_ptr().add(i * k), a.as_ptr().add((i + 1) * k), panel, k);
+            store_tile(&acc0, c.as_mut_ptr().add(i * nt + j0));
+            store_tile(&acc1, c.as_mut_ptr().add((i + 1) * nt + j0));
             i += 2;
         }
         if i < rows {
-            row_single_panel(
-                a.as_ptr().add(i * k),
-                panel,
-                k,
-                c.as_mut_ptr().add(i * nt + j0),
-            );
+            let acc = panel_acc_single(a.as_ptr().add(i * k), panel, k);
+            store_tile(&acc, c.as_mut_ptr().add(i * nt + j0));
         }
         j0 += NR;
+    }
+}
+
+/// Fused multiply + requantize row block: identical `C_temp` bytes as
+/// [`gemm_rows`], plus the payload columns of `out[rows × epi.n_out]`
+/// filled with the requantized (and ReLU-floored) u8 codes. `c` must be
+/// pre-zeroed (ragged panels accumulate).
+///
+/// # Safety
+/// Caller must ensure the host supports AVX2 (`available()`).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gemm_rows_fused(
+    a: &[u8],
+    packed: &PackedB,
+    rows: usize,
+    c: &mut [i32],
+    out: &mut [u8],
+    epi: &RequantEpilogue<'_>,
+) {
+    let k = packed.k;
+    let nt = packed.n_total();
+    debug_assert_eq!(a.len(), rows * k);
+    debug_assert_eq!(c.len(), rows * nt);
+    debug_assert_eq!(out.len(), rows * epi.n_out);
+    debug_assert_eq!(epi.a_row_sums.len(), rows);
+    let data = packed.data().as_ptr();
+    let ec = EpiConsts::new(epi);
+    let mut j0 = 0usize;
+    while j0 < nt {
+        let w = NR.min(nt - j0);
+        if w == NR && j0 + NR <= epi.n_out {
+            // Full panel entirely inside the payload: fused path.
+            let panel = data.add(j0 * k);
+            let bcols = epi.b_col_sums.as_ptr().add(j0);
+            let mut i = 0usize;
+            while i + 2 <= rows {
+                let (acc0, acc1) =
+                    panel_acc_pair(a.as_ptr().add(i * k), a.as_ptr().add((i + 1) * k), panel, k);
+                store_tile(&acc0, c.as_mut_ptr().add(i * nt + j0));
+                store_tile(&acc1, c.as_mut_ptr().add((i + 1) * nt + j0));
+                epilogue_panel_row(
+                    &acc0,
+                    out.as_mut_ptr().add(i * epi.n_out + j0),
+                    bcols,
+                    *epi.a_row_sums.get_unchecked(i),
+                    &ec,
+                );
+                epilogue_panel_row(
+                    &acc1,
+                    out.as_mut_ptr().add((i + 1) * epi.n_out + j0),
+                    bcols,
+                    *epi.a_row_sums.get_unchecked(i + 1),
+                    &ec,
+                );
+                i += 2;
+            }
+            if i < rows {
+                let acc = panel_acc_single(a.as_ptr().add(i * k), panel, k);
+                store_tile(&acc, c.as_mut_ptr().add(i * nt + j0));
+                epilogue_panel_row(
+                    &acc,
+                    out.as_mut_ptr().add(i * epi.n_out + j0),
+                    bcols,
+                    *epi.a_row_sums.get_unchecked(i),
+                    &ec,
+                );
+            }
+        } else {
+            // Boundary panel (holds the checksum column) or ragged tail:
+            // compute the i32 tile, then requantize its payload columns
+            // through the shared scalar core — same bits, by definition.
+            if w == NR {
+                let panel = data.add(j0 * k);
+                let mut i = 0usize;
+                while i + 2 <= rows {
+                    let (acc0, acc1) =
+                        panel_acc_pair(a.as_ptr().add(i * k), a.as_ptr().add((i + 1) * k), panel, k);
+                    store_tile(&acc0, c.as_mut_ptr().add(i * nt + j0));
+                    store_tile(&acc1, c.as_mut_ptr().add((i + 1) * nt + j0));
+                    i += 2;
+                }
+                if i < rows {
+                    let acc = panel_acc_single(a.as_ptr().add(i * k), panel, k);
+                    store_tile(&acc, c.as_mut_ptr().add(i * nt + j0));
+                }
+            } else {
+                panel_rows_scalar(a, packed.data(), k, nt, rows, c, j0, w);
+            }
+            let end = epi.n_out.min(j0 + w);
+            if j0 < end {
+                for i in 0..rows {
+                    requantize_cols_into(
+                        &c[i * nt..(i + 1) * nt],
+                        1,
+                        nt,
+                        j0..end,
+                        &epi.a_row_sums[i..i + 1],
+                        epi.b_col_sums,
+                        &epi.spec,
+                        epi.relu_floor,
+                        &mut out[i * epi.n_out + j0..i * epi.n_out + end],
+                    );
+                }
+            }
+        }
+        j0 += w;
+    }
+}
+
+/// Store one finished 32-column i32 tile.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn store_tile(acc: &[__m256i; 4], crow: *mut i32) {
+    for (q, v) in acc.iter().enumerate() {
+        _mm256_storeu_si256((crow as *mut __m256i).add(q), *v);
     }
 }
 
@@ -105,25 +229,30 @@ unsafe fn broadcast_a_pair(arow: *const u8, pp: usize) -> __m256i {
     _mm256_set1_epi32(lo | (hi << 16))
 }
 
-/// Add the odd trailing k-row (when k is odd) into a full-width panel row
-/// of C — one scalar pass, negligible next to the k/2 vector iterations.
+/// Fold the odd trailing k-row (when k is odd) into the accumulators:
+/// widen 8 tail bytes at a time to i32 and `mullo` by the broadcast A
+/// value — exact (products ≤ 255·128), so still bit-identical to scalar.
 #[inline]
 #[target_feature(enable = "avx2")]
-unsafe fn add_tail_row(tail: *const i8, av: i32, crow: *mut i32) {
-    for cix in 0..NR {
-        *crow.add(cix) += av * *tail.add(cix) as i32;
+unsafe fn fold_tail_row(acc: &mut [__m256i; 4], tail: *const i8, a_last: i32) {
+    let av = _mm256_set1_epi32(a_last);
+    for (q, slot) in acc.iter_mut().enumerate() {
+        let b8 = _mm_loadl_epi64(tail.add(8 * q) as *const __m128i);
+        let b32 = _mm256_cvtepi8_epi32(b8);
+        *slot = _mm256_add_epi32(*slot, _mm256_mullo_epi32(av, b32));
     }
 }
 
+/// Accumulate one full-width panel for a row pair, odd-k tail included —
+/// the returned accumulators hold the final `C_temp` tile values.
+#[inline]
 #[target_feature(enable = "avx2")]
-unsafe fn row_pair_panel(
+unsafe fn panel_acc_pair(
     a0: *const u8,
     a1: *const u8,
     panel: *const i8,
     k: usize,
-    c0: *mut i32,
-    c1: *mut i32,
-) {
+) -> ([__m256i; 4], [__m256i; 4]) {
     let kp = k & !1;
     let mut acc0 = [_mm256_setzero_si256(); 4];
     let mut acc1 = [_mm256_setzero_si256(); 4];
@@ -136,21 +265,18 @@ unsafe fn row_pair_panel(
             acc1[q] = _mm256_add_epi32(acc1[q], _mm256_madd_epi16(va1, b[q]));
         }
     }
-    for q in 0..4 {
-        let p0 = (c0 as *mut __m256i).add(q);
-        _mm256_storeu_si256(p0, _mm256_add_epi32(_mm256_loadu_si256(p0 as *const _), acc0[q]));
-        let p1 = (c1 as *mut __m256i).add(q);
-        _mm256_storeu_si256(p1, _mm256_add_epi32(_mm256_loadu_si256(p1 as *const _), acc1[q]));
-    }
     if k % 2 == 1 {
         let tail = panel.add(kp * NR);
-        add_tail_row(tail, *a0.add(k - 1) as i32, c0);
-        add_tail_row(tail, *a1.add(k - 1) as i32, c1);
+        fold_tail_row(&mut acc0, tail, *a0.add(k - 1) as i32);
+        fold_tail_row(&mut acc1, tail, *a1.add(k - 1) as i32);
     }
+    (acc0, acc1)
 }
 
+/// Single-row variant of [`panel_acc_pair`].
+#[inline]
 #[target_feature(enable = "avx2")]
-unsafe fn row_single_panel(a0: *const u8, panel: *const i8, k: usize, c0: *mut i32) {
+unsafe fn panel_acc_single(a0: *const u8, panel: *const i8, k: usize) -> [__m256i; 4] {
     let kp = k & !1;
     let mut acc = [_mm256_setzero_si256(); 4];
     for pp in 0..kp / 2 {
@@ -160,13 +286,111 @@ unsafe fn row_single_panel(a0: *const u8, panel: *const i8, k: usize, c0: *mut i
             acc[q] = _mm256_add_epi32(acc[q], _mm256_madd_epi16(va, b[q]));
         }
     }
-    for q in 0..4 {
-        let p = (c0 as *mut __m256i).add(q);
-        _mm256_storeu_si256(p, _mm256_add_epi32(_mm256_loadu_si256(p as *const _), acc[q]));
-    }
     if k % 2 == 1 {
-        add_tail_row(panel.add(kp * NR), *a0.add(k - 1) as i32, c0);
+        fold_tail_row(&mut acc, panel.add(kp * NR), *a0.add(k - 1) as i32);
     }
+    acc
+}
+
+/// Broadcast epilogue constants, hoisted out of the tile loop.
+struct EpiConsts {
+    /// Scalar `α_A·β_B`, kept in scalar form: the per-row term
+    /// `s_arow · a_row_sum` is computed with the exact same scalar f32
+    /// multiply the scalar core uses, then broadcast.
+    s_arow: f32,
+    s_prod: __m256,
+    s_bcol: __m256,
+    s_const: __m256,
+    c_beta: __m256,
+    c_alpha: __m256,
+    half: __m256,
+    one: __m256,
+    abs_mask: __m256,
+    sign_mask: __m256,
+    lo: __m256,
+    hi: __m256,
+    relu: __m256i,
+    perm: __m256i,
+}
+
+impl EpiConsts {
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn new(epi: &RequantEpilogue<'_>) -> Self {
+        Self {
+            s_arow: epi.spec.s_arow,
+            s_prod: _mm256_set1_ps(epi.spec.s_prod),
+            s_bcol: _mm256_set1_ps(epi.spec.s_bcol),
+            s_const: _mm256_set1_ps(epi.spec.s_const),
+            c_beta: _mm256_set1_ps(epi.spec.c.beta),
+            c_alpha: _mm256_set1_ps(epi.spec.c.alpha),
+            half: _mm256_set1_ps(0.5),
+            one: _mm256_set1_ps(1.0),
+            abs_mask: _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff)),
+            sign_mask: _mm256_castsi256_ps(_mm256_set1_epi32(i32::MIN)),
+            lo: _mm256_setzero_ps(),
+            hi: _mm256_set1_ps(255.0),
+            relu: _mm256_set1_epi8(epi.relu_floor as i8),
+            perm: _mm256_setr_epi32(0, 4, 1, 5, 2, 6, 3, 7),
+        }
+    }
+}
+
+/// `f32::round` (round half AWAY from zero) for 8 lanes. `_mm256_round_ps`
+/// rounds half to even, which diverges from Rust's scalar `round` on exact
+/// .5 ties — so truncate and add ±1 when |frac| ≥ 0.5 instead. Exact for
+/// all finite inputs: for |x| < 2²⁴ the subtraction `x - trunc(x)` is
+/// exact, and for larger |x| the value is already integral (frac = 0).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn round_half_away(x: __m256, e: &EpiConsts) -> __m256 {
+    let t = _mm256_round_ps(x, _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC);
+    let frac = _mm256_sub_ps(x, t);
+    let absf = _mm256_and_ps(frac, e.abs_mask);
+    let ge = _mm256_cmp_ps(absf, e.half, _CMP_GE_OQ);
+    let sign1 = _mm256_or_ps(_mm256_and_ps(x, e.sign_mask), e.one);
+    _mm256_add_ps(t, _mm256_and_ps(ge, sign1))
+}
+
+/// Requantize one row's finished 32-column accumulator tile to u8 while it
+/// is still in registers: Eq 1 affine correction in the scalar core's
+/// exact operation order, output-lattice quantization (true IEEE divide,
+/// round-half-away, clamp), narrow to bytes, ReLU floor, one 32-byte store.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn epilogue_panel_row(
+    acc: &[__m256i; 4],
+    orow: *mut u8,
+    bcols: *const i32,
+    a_row_sum: i32,
+    e: &EpiConsts,
+) {
+    // t2 = s_arow·ar is row-constant; computed in scalar f32 exactly as
+    // the scalar core does, then broadcast.
+    let row_term = _mm256_set1_ps(e.s_arow * a_row_sum as f32);
+    let mut ri = [_mm256_setzero_si256(); 4];
+    for (q, slot) in ri.iter_mut().enumerate() {
+        // Scalar core order: ((s_prod·c + s_arow·ar) + s_bcol·bc) + s_const.
+        let cf = _mm256_cvtepi32_ps(acc[q]);
+        let bc = _mm256_cvtepi32_ps(_mm256_loadu_si256((bcols as *const __m256i).add(q)));
+        let mut v = _mm256_mul_ps(e.s_prod, cf);
+        v = _mm256_add_ps(v, row_term);
+        v = _mm256_add_ps(v, _mm256_mul_ps(e.s_bcol, bc));
+        v = _mm256_add_ps(v, e.s_const);
+        // Output lattice: ((x - β_C) / α_C).round().clamp(0, 255).
+        let qv = _mm256_div_ps(_mm256_sub_ps(v, e.c_beta), e.c_alpha);
+        let r = round_half_away(qv, e);
+        let r = _mm256_min_ps(_mm256_max_ps(r, e.lo), e.hi);
+        *slot = _mm256_cvtps_epi32(r);
+    }
+    // Narrow 4×8 i32 (all in [0,255]) to 32 bytes. packs/packus operate
+    // per 128-bit lane, so a dword permute restores column order.
+    let p01 = _mm256_packs_epi32(ri[0], ri[1]);
+    let p23 = _mm256_packs_epi32(ri[2], ri[3]);
+    let p = _mm256_packus_epi16(p01, p23);
+    let p = _mm256_permutevar8x32_epi32(p, e.perm);
+    let p = _mm256_max_epu8(p, e.relu);
+    _mm256_storeu_si256(orow as *mut __m256i, p);
 }
 
 #[cfg(test)]

@@ -13,10 +13,12 @@ pub mod packed;
 
 pub use naive::gemm_naive;
 pub use packed::{
-    gemm_exec, gemm_exec_into, gemm_exec_into_scalar, gemm_exec_into_st, simd_active, PackedB,
+    gemm_exec, gemm_exec_into, gemm_exec_into_scalar, gemm_exec_into_st, gemm_requant_exec_into,
+    gemm_requant_exec_into_scalar, simd_active, PackedB,
 };
 
-use crate::quant::{requantize, QParams, RequantParams};
+use crate::quant::{QParams, RequantEpilogue, RequantParams, RequantSpec};
+use crate::util::scratch::{grow, GemmScratch};
 use std::sync::Arc;
 
 /// A quantized fully-connected layer: y = requant(x · W).
@@ -59,21 +61,47 @@ impl QuantizedLinear {
 
     /// Forward: quantized input (m×k u8 + its qparams) → quantized output
     /// (m×n u8). Returns the 32-bit intermediate too (ABFT wants it).
+    ///
+    /// Allocating wrapper over [`QuantizedLinear::forward_into`]; serving
+    /// paths hold a [`GemmScratch`] and call the `_into` form directly.
     pub fn forward(&self, x: &[u8], m: usize, x_qparams: QParams) -> (Vec<u8>, Vec<i32>) {
-        let c_temp = gemm_exec(x, &self.packed, m);
-        let rp = self.requant_params(x, m, x_qparams);
-        let out = requantize(&c_temp, m, self.n, &rp);
+        let mut scratch = GemmScratch::default();
+        let mut out = vec![0u8; m * self.n];
+        self.forward_into(x, m, x_qparams, &mut scratch, &mut out);
+        let mut c_temp = scratch.c_temp;
+        c_temp.truncate(m * self.n);
         (out, c_temp)
+    }
+
+    /// Allocation-free forward through the fused GEMM+requantize kernel:
+    /// the i32 accumulator lands in `scratch.c_temp` (callers that want
+    /// the intermediate read it there) and the quantized output in `out`.
+    pub fn forward_into(
+        &self,
+        x: &[u8],
+        m: usize,
+        x_qparams: QParams,
+        scratch: &mut GemmScratch,
+        out: &mut [u8],
+    ) {
+        assert_eq!(x.len(), m * self.k, "input shape");
+        assert_eq!(out.len(), m * self.n, "output shape");
+        let spec = RequantSpec::new(x_qparams, self.w_qparams, self.out_qparams, self.k);
+        let GemmScratch { c_temp, a_row_sums } = scratch;
+        row_sums_into(x, m, self.k, grow(a_row_sums, m));
+        let epi = RequantEpilogue {
+            spec,
+            a_row_sums: &a_row_sums[..m],
+            b_col_sums: &self.b_col_sums,
+            n_out: self.n,
+            relu_floor: 0,
+        };
+        gemm_requant_exec_into(x, &self.packed, m, &epi, grow(c_temp, m * self.n), out);
     }
 
     pub(crate) fn requant_params(&self, x: &[u8], m: usize, x_qparams: QParams) -> RequantParams {
         let mut a_row_sums = vec![0i32; m];
-        for i in 0..m {
-            a_row_sums[i] = x[i * self.k..(i + 1) * self.k]
-                .iter()
-                .map(|&v| v as i32)
-                .sum();
-        }
+        row_sums_into(x, m, self.k, &mut a_row_sums);
         RequantParams {
             a: x_qparams,
             b: self.w_qparams,
@@ -82,6 +110,15 @@ impl QuantizedLinear {
             b_col_sums: Arc::clone(&self.b_col_sums),
             k: self.k,
         }
+    }
+}
+
+/// Row sums of an m×k u8 activation block (the Eq-1 A-row-sum term).
+pub(crate) fn row_sums_into(x: &[u8], m: usize, k: usize, out: &mut [i32]) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(out.len(), m);
+    for (i, s) in out.iter_mut().enumerate() {
+        *s = x[i * k..(i + 1) * k].iter().map(|&v| v as i32).sum();
     }
 }
 

@@ -210,6 +210,145 @@ pub fn gemm_exec_into_scalar(a: &[u8], packed: &PackedB, m: usize, c: &mut [i32]
     }
 }
 
+/// Fused protected-GEMM + requantize/ReLU epilogue: computes
+/// `c_temp[m × n_total] = A·B_packed` (bit-identical to [`gemm_exec_into`])
+/// **and** the requantized u8 payload `out[m × epi.n_out]` in the same
+/// kernel pass — on AVX2 the accumulator tile is quantized while still in
+/// registers; the fallback runs the scalar kernel followed by the shared
+/// scalar requantization core over each row block. Both orderings apply
+/// the identical per-element affine+round pipeline, so every dispatch
+/// path produces the same bytes (see `quant::requantize_cols_into`).
+///
+/// Columns `epi.n_out..n_total` of `c_temp` (the ABFT checksum column,
+/// when the pack carries one) are computed but never requantized — the
+/// caller verifies them against the row sums *of the stored i32 tile*,
+/// exactly as in the two-pass flow.
+pub fn gemm_requant_exec_into(
+    a: &[u8],
+    packed: &PackedB,
+    m: usize,
+    epi: &crate::quant::RequantEpilogue<'_>,
+    c_temp: &mut [i32],
+    out: &mut [u8],
+) {
+    let k = packed.k;
+    let nt = packed.n_total();
+    if !fused_prologue(a, packed, m, epi, c_temp, out) {
+        return;
+    }
+    // Row-chunked fan-out through the shared two-slice gate/chunking
+    // helper (rows are independent and each block's epilogue slices its
+    // own row sums, so the parallel output is bit-identical).
+    crate::util::threadpool::global().scope_chunks2(
+        c_temp,
+        nt,
+        out,
+        epi.n_out,
+        m * k * nt,
+        GEMM_PAR_MIN_WORK,
+        |row0, c_blk, o_blk| {
+            let rows = c_blk.len() / nt;
+            let blk_epi = crate::quant::RequantEpilogue {
+                a_row_sums: &epi.a_row_sums[row0..row0 + rows],
+                ..*epi
+            };
+            gemm_requant_rows_dispatch(
+                &a[row0 * k..(row0 + rows) * k],
+                packed,
+                rows,
+                &blk_epi,
+                c_blk,
+                o_blk,
+            );
+        },
+    );
+}
+
+/// Always-scalar, single-thread variant of [`gemm_requant_exec_into`] —
+/// the reference the fused SIMD epilogue is tested against bit-for-bit.
+pub fn gemm_requant_exec_into_scalar(
+    a: &[u8],
+    packed: &PackedB,
+    m: usize,
+    epi: &crate::quant::RequantEpilogue<'_>,
+    c_temp: &mut [i32],
+    out: &mut [u8],
+) {
+    if fused_prologue(a, packed, m, epi, c_temp, out) {
+        gemm_rows_scalar(a, packed, m, c_temp);
+        requant_block_scalar(packed, m, epi, c_temp, out);
+    }
+}
+
+/// Shape contract + zero fill for the fused entry points. Returns false
+/// when there is no GEMM work left; degenerate-k shapes still requantize
+/// the zeroed accumulator (matching the two-pass flow exactly).
+fn fused_prologue(
+    a: &[u8],
+    packed: &PackedB,
+    m: usize,
+    epi: &crate::quant::RequantEpilogue<'_>,
+    c_temp: &mut [i32],
+    out: &mut [u8],
+) -> bool {
+    let nt = packed.n_total();
+    assert!(epi.n_out <= nt, "payload width exceeds packed width");
+    assert!(epi.b_col_sums.len() >= epi.n_out, "missing B column sums");
+    assert_eq!(epi.a_row_sums.len(), m, "A row sums");
+    assert_eq!(out.len(), m * epi.n_out, "out shape");
+    if !gemm_prologue(a, packed, m, c_temp) {
+        if m != 0 && nt != 0 && packed.k == 0 {
+            requant_block_scalar(packed, m, epi, c_temp, out);
+        }
+        return false;
+    }
+    true
+}
+
+/// One fused row block: SIMD kernel+epilogue when available, else the
+/// scalar kernel followed by the shared requantization core.
+fn gemm_requant_rows_dispatch(
+    a: &[u8],
+    packed: &PackedB,
+    rows: usize,
+    epi: &crate::quant::RequantEpilogue<'_>,
+    c: &mut [i32],
+    out: &mut [u8],
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::gemm::avx2::available() {
+            // SAFETY: AVX2 presence just checked.
+            unsafe { crate::gemm::avx2::gemm_rows_fused(a, packed, rows, c, out, epi) };
+            return;
+        }
+    }
+    gemm_rows_scalar(a, packed, rows, c);
+    requant_block_scalar(packed, rows, epi, c, out);
+}
+
+/// The two-pass tail shared by the non-SIMD fused paths: requantize the
+/// payload columns of an already-computed `rows × n_total` block.
+fn requant_block_scalar(
+    packed: &PackedB,
+    rows: usize,
+    epi: &crate::quant::RequantEpilogue<'_>,
+    c: &[i32],
+    out: &mut [u8],
+) {
+    crate::quant::requantize_cols_into(
+        c,
+        rows,
+        packed.n_total(),
+        0..epi.n_out,
+        epi.a_row_sums,
+        epi.b_col_sums,
+        &epi.spec,
+        epi.relu_floor,
+        out,
+    );
+}
+
 /// Shared entry-point preamble: shape contract, zeroed output, and the
 /// degenerate-size early-out. Returns false when there is nothing to
 /// compute.

@@ -120,7 +120,11 @@ fn serve(cli: &Cli) -> Result<()> {
         max_batch: cli.flag("max-batch", 32usize)?,
         max_wait: Duration::from_millis(cli.flag("max-wait-ms", 2u64)?),
         max_queue: cli.flag("max-queue", 4096usize)?,
+        // 0 = auto (min(4, cores)): connections hash across per-core
+        // batch loops so the accept path doesn't funnel into one thread.
+        loops: cli.flag("batch-loops", 0usize)?,
     };
+    println!("batch loops: {}", policy.effective_loops());
     cli.reject_unknown()?;
     let server = Server::start(&addr, Arc::new(engine), policy)?;
     println!("serving on {}", server.addr);

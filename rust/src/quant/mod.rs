@@ -10,7 +10,10 @@
 
 pub mod requantize;
 
-pub use requantize::{requantize, requantize_exclude_last_col, RequantParams};
+pub use requantize::{
+    requantize, requantize_cols_into, requantize_exclude_last_col, RequantEpilogue, RequantParams,
+    RequantSpec,
+};
 
 /// Affine quantization parameters: `x ≈ alpha * x_int + beta`.
 #[derive(Clone, Copy, Debug, PartialEq)]

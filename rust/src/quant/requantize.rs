@@ -7,11 +7,19 @@
 //!      + α_B β_A e_m (e_kᵀ B_I)      (column sums of B_I)
 //!      + k β_A β_B e_m e_nᵀ`
 //!
-//! The paper's ABFT checksum column lives in `C_temp` and is *excluded*
-//! from requantization (§IV-A3); `requantize_exclude_last_col` implements
-//! exactly that.
+//! There is **one** rounding implementation, [`requantize_cols_into`],
+//! parameterized by the output column range. Its three callers:
+//! [`requantize`] (all columns), [`requantize_exclude_last_col`] (the
+//! paper's §IV-A3 "modify the requantization procedure to let it exclude
+//! the last column" — the ABFT checksum column lives in `C_temp` and is
+//! never requantized), and the fused GEMM epilogue
+//! (`gemm::gemm_requant_exec_into`), which runs the same arithmetic on
+//! the accumulator tile while it is still in registers and falls back to
+//! this scalar core for ragged/boundary panels — which is exactly why the
+//! fused path is bit-identical to the two-pass one.
 
 use super::QParams;
+use std::ops::Range;
 use std::sync::Arc;
 
 /// Everything the requantization step needs besides `C_temp`.
@@ -32,6 +40,75 @@ pub struct RequantParams {
     pub k: usize,
 }
 
+/// The scalar coefficients of Eq 1's affine map from an accumulator entry
+/// (plus its row/column sums) to a real value, pre-multiplied once per
+/// forward. `Copy`, so kernels can carry it by value; the operation order
+/// in [`RequantSpec::real`] is the bit-exactness contract every
+/// requantization path (scalar core, fused AVX2 epilogue) must follow.
+#[derive(Clone, Copy, Debug)]
+pub struct RequantSpec {
+    /// `α_A · α_B` (scales `C_temp`).
+    pub s_prod: f32,
+    /// `α_A · β_B` (scales the A row sum).
+    pub s_arow: f32,
+    /// `α_B · β_A` (scales the B column sum).
+    pub s_bcol: f32,
+    /// `k · β_A · β_B`.
+    pub s_const: f32,
+    /// Output lattice.
+    pub c: QParams,
+}
+
+impl RequantSpec {
+    pub fn new(a: QParams, b: QParams, c: QParams, k: usize) -> Self {
+        Self {
+            s_prod: a.alpha * b.alpha,
+            s_arow: a.alpha * b.beta,
+            s_bcol: b.alpha * a.beta,
+            s_const: k as f32 * a.beta * b.beta,
+            c,
+        }
+    }
+
+    /// Real-valued output for one accumulator entry. The sum order
+    /// `((t1 + t2) + t3) + t4` is deliberate and load-bearing: the fused
+    /// SIMD epilogue replays exactly this sequence of f32 operations.
+    #[inline]
+    pub fn real(&self, c_temp_ij: i32, a_row_sum: i32, b_col_sum: i32) -> f32 {
+        self.s_prod * c_temp_ij as f32
+            + self.s_arow * a_row_sum as f32
+            + self.s_bcol * b_col_sum as f32
+            + self.s_const
+    }
+
+    /// One output code: quantize the real value, then apply the quantized
+    /// ReLU floor (`0` disables it — `max(q, 0)` is the identity on u8).
+    #[inline]
+    pub fn quantize(&self, c_temp_ij: i32, a_row_sum: i32, b_col_sum: i32, relu_floor: u8) -> u8 {
+        self.c
+            .quantize_u8(self.real(c_temp_ij, a_row_sum, b_col_sum))
+            .max(relu_floor)
+    }
+}
+
+/// Borrowed binding of a [`RequantSpec`] to one GEMM's sum vectors — what
+/// the fused GEMM epilogue carries into the kernel. `n_out` is the
+/// payload width: columns `n_out..n_total` of the accumulator (the ABFT
+/// checksum column, when present) are skipped exactly as
+/// [`requantize_exclude_last_col`] skips them.
+#[derive(Clone, Copy)]
+pub struct RequantEpilogue<'a> {
+    pub spec: RequantSpec,
+    /// Row sums of the A block being multiplied (length = block rows).
+    pub a_row_sums: &'a [i32],
+    /// Column sums of B's payload (length ≥ `n_out`).
+    pub b_col_sums: &'a [i32],
+    /// Output (payload) column count; `≤ packed.n_total()`.
+    pub n_out: usize,
+    /// Quantized-ReLU floor; `0` means no ReLU.
+    pub relu_floor: u8,
+}
+
 impl RequantParams {
     /// Compute row sums of A (m×k u8) and column sums of B (k×n i8).
     pub fn prepare(
@@ -47,12 +124,8 @@ impl RequantParams {
         assert_eq!(a_mat.len(), m * k);
         assert_eq!(b_mat.len(), k * n);
         let mut a_row_sums = vec![0i32; m];
-        for i in 0..m {
-            let mut s = 0i32;
-            for p in 0..k {
-                s += a_mat[i * k + p] as i32;
-            }
-            a_row_sums[i] = s;
+        for (i, s) in a_row_sums.iter_mut().enumerate() {
+            *s = a_mat[i * k..(i + 1) * k].iter().map(|&v| v as i32).sum();
         }
         let mut b_col_sums = vec![0i32; n];
         for p in 0..k {
@@ -71,25 +144,68 @@ impl RequantParams {
         }
     }
 
+    /// The `Copy` coefficient bundle for this params set.
+    pub fn spec(&self) -> RequantSpec {
+        RequantSpec::new(self.a, self.b, self.c, self.k)
+    }
+
     /// Real-valued output entry before final quantization.
     #[inline]
     pub fn real_value(&self, c_temp_ij: i32, i: usize, j: usize) -> f32 {
-        self.a.alpha * self.b.alpha * c_temp_ij as f32
-            + self.a.alpha * self.b.beta * self.a_row_sums[i] as f32
-            + self.b.alpha * self.a.beta * self.b_col_sums[j] as f32
-            + self.k as f32 * self.a.beta * self.b.beta
+        self.spec()
+            .real(c_temp_ij, self.a_row_sums[i], self.b_col_sums[j])
+    }
+}
+
+/// The single requantization implementation: quantize columns `cols` of a
+/// `rows × stride` `C_temp` block into a dense `rows × cols.len()` u8
+/// output, applying the quantized-ReLU floor. `a_row_sums` is indexed by
+/// block-local row (callers slice it when processing a row block);
+/// `b_col_sums` is indexed by absolute column.
+pub fn requantize_cols_into(
+    c_temp: &[i32],
+    rows: usize,
+    stride: usize,
+    cols: Range<usize>,
+    a_row_sums: &[i32],
+    b_col_sums: &[i32],
+    spec: &RequantSpec,
+    relu_floor: u8,
+    out: &mut [u8],
+) {
+    assert!(cols.end <= stride, "column range exceeds stride");
+    assert!(cols.end <= b_col_sums.len(), "missing B column sums");
+    assert_eq!(c_temp.len(), rows * stride, "C_temp shape");
+    assert_eq!(a_row_sums.len(), rows, "A row sums");
+    let w = cols.end - cols.start;
+    assert_eq!(out.len(), rows * w, "output shape");
+    for i in 0..rows {
+        let crow = &c_temp[i * stride + cols.start..i * stride + cols.end];
+        let orow = &mut out[i * w..(i + 1) * w];
+        let ar = a_row_sums[i];
+        for (x, (o, &bc)) in crow
+            .iter()
+            .zip(orow.iter_mut().zip(&b_col_sums[cols.clone()]))
+        {
+            *o = spec.quantize(*x, ar, bc, relu_floor);
+        }
     }
 }
 
 /// Requantize an m×n `C_temp` (row-major, stride n) to u8.
 pub fn requantize(c_temp: &[i32], m: usize, n: usize, p: &RequantParams) -> Vec<u8> {
-    assert_eq!(c_temp.len(), m * n);
     let mut out = vec![0u8; m * n];
-    for i in 0..m {
-        for j in 0..n {
-            out[i * n + j] = p.c.quantize_u8(p.real_value(c_temp[i * n + j], i, j));
-        }
-    }
+    requantize_cols_into(
+        c_temp,
+        m,
+        n,
+        0..n,
+        &p.a_row_sums,
+        &p.b_col_sums,
+        &p.spec(),
+        0,
+        &mut out,
+    );
     out
 }
 
@@ -104,13 +220,18 @@ pub fn requantize_exclude_last_col(
 ) -> Vec<u8> {
     assert!(n_plus_1 >= 1);
     let n = n_plus_1 - 1;
-    assert_eq!(c_temp.len(), m * n_plus_1);
     let mut out = vec![0u8; m * n];
-    for i in 0..m {
-        for j in 0..n {
-            out[i * n + j] = p.c.quantize_u8(p.real_value(c_temp[i * n_plus_1 + j], i, j));
-        }
-    }
+    requantize_cols_into(
+        c_temp,
+        m,
+        n_plus_1,
+        0..n,
+        &p.a_row_sums,
+        &p.b_col_sums,
+        &p.spec(),
+        0,
+        &mut out,
+    );
     out
 }
 
@@ -211,5 +332,77 @@ mod tests {
             k: 4,
         };
         assert_eq!(p.real_value(42, 0, 0), 42.0);
+    }
+
+    #[test]
+    fn cols_range_matches_full_requantize_columnwise() {
+        // The range-parameterized core must agree with the full-width
+        // wrapper on any sub-range, including ReLU flooring.
+        let (m, k, n) = (5, 24, 13);
+        let mut rng = Pcg32::new(21);
+        let mut a = vec![0u8; m * k];
+        let mut b = vec![0i8; k * n];
+        rng.fill_u8(&mut a);
+        rng.fill_i8(&mut b);
+        let (_, apar) = quantize_slice_u8(&[0.0, 3.0]);
+        let (_, bpar) = quantize_slice_i8(&[-0.5, 0.5]);
+        let p = RequantParams::prepare(&a, &b, m, k, n, apar, bpar, QParams::fit_u8(-40.0, 44.0));
+        let c = int_matmul(&a, &b, m, k, n);
+        let full = requantize(&c, m, n, &p);
+        for (start, end) in [(0usize, n), (0, 4), (3, 11), (n - 1, n), (6, 6)] {
+            for floor in [0u8, p.c.quantize_u8(0.0)] {
+                let w = end - start;
+                let mut part = vec![0u8; m * w];
+                requantize_cols_into(
+                    &c,
+                    m,
+                    n,
+                    start..end,
+                    &p.a_row_sums,
+                    &p.b_col_sums,
+                    &p.spec(),
+                    floor,
+                    &mut part,
+                );
+                for i in 0..m {
+                    for j in 0..w {
+                        assert_eq!(
+                            part[i * w + j],
+                            full[i * n + start + j].max(floor),
+                            "({start}..{end}) floor={floor} ({i},{j})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spec_real_is_bitwise_real_value() {
+        let mut rng = Pcg32::new(33);
+        let a = QParams { alpha: 0.013, beta: -1.7 };
+        let b = QParams { alpha: 0.0041, beta: 0.33 };
+        let c = QParams::fit_u8(-3.0, 9.0);
+        let p = RequantParams {
+            a,
+            b,
+            c,
+            a_row_sums: (0..7).map(|_| rng.gen_range(0, 50_000) as i32).collect(),
+            b_col_sums: (0..9)
+                .map(|_| rng.gen_range(0, 30_000) as i32 - 15_000)
+                .collect::<Vec<_>>()
+                .into(),
+            k: 321,
+        };
+        let spec = p.spec();
+        for i in 0..7 {
+            for j in 0..9 {
+                let ct = rng.gen_range(0, 1 << 20) as i32 - (1 << 19);
+                assert_eq!(
+                    p.real_value(ct, i, j).to_bits(),
+                    spec.real(ct, p.a_row_sums[i], p.b_col_sums[j]).to_bits()
+                );
+            }
+        }
     }
 }

@@ -9,16 +9,7 @@
 //! merge order; it stays future work.
 
 use crate::util::json::Json;
-
-/// Deterministic 64-bit mix (splitmix64 finalizer) — stable placement
-/// across runs and processes, no `std::hash` RandomState involved.
-#[inline]
-fn splitmix64(mut x: u64) -> u64 {
-    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
-    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    x ^ (x >> 31)
-}
+use crate::util::rng::splitmix64;
 
 /// The shard topology: N shards × R replicas, plus the table→shard map.
 #[derive(Clone, Debug, PartialEq, Eq)]

@@ -33,17 +33,20 @@
 //! request-level parallelism as the unsharded stage, and the replica
 //! lock is taken once per lap, not per bag. Nested scopes are
 //! deadlock-free (helping join), so the two levels compose. Each shard
-//! job writes into its own dense `batch × slots × d` scratch buffer;
-//! after the join the scratch rows are **copied** into the model's
-//! feature slots. Because every table lives whole on one shard, no
-//! float value is ever re-associated across shards — the merge is
-//! placement, not arithmetic, hence bit-exact.
+//! job writes into its own dense `batch × slots × d` scratch buffer,
+//! pooled in the caller's [`EbScratch`] arena (grow-only, reused across
+//! batches — zero steady-state allocation); after the join the scratch
+//! rows are **copied** into the model's feature slots. Because every
+//! table lives whole on one shard, no float value is ever re-associated
+//! across shards — the merge is placement, not arithmetic, hence
+//! bit-exact.
 //!
 //! [`ThreadPool::scope_chunks`]: crate::util::threadpool::ThreadPool::scope_chunks
 //!
 //! [`LocalEbStage`]: crate::dlrm::LocalEbStage
 
-use crate::dlrm::{DlrmModel, DlrmRequest, EbStage, EbStageReport, Protection};
+use crate::dlrm::scratch::grow;
+use crate::dlrm::{DlrmModel, DlrmRequest, EbScratch, EbStage, EbStageReport, Protection};
 use crate::embedding::bag_sum_8;
 use crate::shard::store::{Shard, ShardStore};
 use crate::util::threadpool::EB_PAR_MIN_WORK;
@@ -187,7 +190,13 @@ impl ShardRouter {
 }
 
 impl EbStage for ShardRouter {
-    fn run(&self, model: &DlrmModel, requests: &[DlrmRequest], feats: &mut [f32]) -> EbStageReport {
+    fn run(
+        &self,
+        model: &DlrmModel,
+        requests: &[DlrmRequest],
+        feats: &mut [f32],
+        eb: &mut EbScratch,
+    ) -> EbStageReport {
         let d = model.cfg.embedding_dim;
         let groups = model.tables.len() + 1;
         let batch = requests.len();
@@ -200,11 +209,13 @@ impl EbStage for ShardRouter {
         let protection = model.cfg.protection;
         let shards = self.store.shards();
 
-        let mut scratch: Vec<Vec<f32>> = shards
-            .iter()
-            .map(|sh| vec![0f32; batch * sh.tables.len() * d])
-            .collect();
-        let mut reports = vec![EbStageReport::default(); shards.len()];
+        // Per-shard fan-out buffers + tallies come from the caller's
+        // pooled stage scratch: grown on first use, reused every batch
+        // after (the per-batch allocation was a ROADMAP shard open item).
+        eb.reset(shards.len());
+        for (shard, buf) in shards.iter().zip(eb.bufs.iter_mut()) {
+            grow(buf, batch * shard.tables.len() * d);
+        }
 
         let work: usize = requests
             .iter()
@@ -212,29 +223,29 @@ impl EbStage for ShardRouter {
             .map(|s| s.len() * d)
             .sum();
         let pool = crate::util::threadpool::global();
-        if self.store.plan.occupied_shards() >= 2 && pool.size() > 1 && work >= EB_PAR_MIN_WORK {
+        let par = self.store.plan.occupied_shards() >= 2 && pool.size() > 1 && work >= EB_PAR_MIN_WORK;
+        let jobs = shards
+            .iter()
+            .zip(eb.bufs.iter_mut())
+            .zip(eb.reports.iter_mut())
+            .filter(|((shard, _), _)| !shard.tables.is_empty());
+        if par {
             pool.scope(|s| {
-                for ((shard, scr), rep) in
-                    shards.iter().zip(scratch.iter_mut()).zip(reports.iter_mut())
-                {
-                    if shard.tables.is_empty() {
-                        continue;
-                    }
+                for ((shard, buf), rep) in jobs {
+                    let scr = &mut buf[..batch * shard.tables.len() * d];
                     s.spawn(move || self.run_shard(shard, requests, d, protection, rep, scr));
                 }
             });
         } else {
-            for ((shard, scr), rep) in shards.iter().zip(scratch.iter_mut()).zip(reports.iter_mut())
-            {
-                if !shard.tables.is_empty() {
-                    self.run_shard(shard, requests, d, protection, rep, scr);
-                }
+            for ((shard, buf), rep) in jobs {
+                let scr = &mut buf[..batch * shard.tables.len() * d];
+                self.run_shard(shard, requests, d, protection, rep, scr);
             }
         }
 
         // Merge: copy each shard's scratch rows into the global table
         // slots (placement only — bit-exact by construction).
-        for (shard, scr) in shards.iter().zip(&scratch) {
+        for (shard, scr) in shards.iter().zip(&eb.bufs) {
             let slots = shard.tables.len();
             for (slot, &t) in shard.tables.iter().enumerate() {
                 for b in 0..batch {
@@ -246,7 +257,7 @@ impl EbStage for ShardRouter {
         }
 
         let mut total = EbStageReport::default();
-        for r in &reports {
+        for r in &eb.reports[..shards.len()] {
             total.absorb(r);
         }
         total

@@ -213,6 +213,18 @@ impl Zipf {
     }
 }
 
+/// Deterministic 64-bit mix (splitmix64 finalizer): stable hashing
+/// across runs and processes, no `std::hash` RandomState involved. Used
+/// for shard placement (`shard::plan`) and connection→batch-loop
+/// assignment (`coordinator::server`).
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

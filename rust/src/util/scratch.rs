@@ -1,0 +1,67 @@
+//! Reusable kernel-level scratch buffers (the bottom layer of the
+//! zero-allocation inference arena — see `dlrm::scratch` for the
+//! pipeline-level [`InferenceScratch`] that embeds this).
+//!
+//! # Aliasing / reuse invariants
+//!
+//! * A scratch buffer is **owned by exactly one in-flight forward pass**
+//!   at a time. Nothing here is synchronized: callers that serve
+//!   concurrently keep one scratch per worker (see `Engine`'s pool) and
+//!   never share one across threads mid-pass.
+//! * Buffers only **grow** ([`grow`] never shrinks), so after a warmup
+//!   pass at the largest shapes every later pass is allocation-free.
+//! * Contents are garbage between uses. Every consumer fully overwrites
+//!   the prefix it asks for (`gemm_requant_exec_into` zero-fills
+//!   `c_temp`; requantization writes every output byte) — callers must
+//!   never read a scratch slice they did not just write.
+//!
+//! [`InferenceScratch`]: crate::dlrm::InferenceScratch
+
+/// Grow-only sizing: returns `&mut buf[..len]`, resizing (with `T::default()`)
+/// only when the buffer is too small. The capacity high-water mark is the
+/// warmup allocation; steady state never reallocates.
+#[inline]
+pub fn grow<T: Default + Clone>(buf: &mut Vec<T>, len: usize) -> &mut [T] {
+    if buf.len() < len {
+        buf.resize(len, T::default());
+    }
+    &mut buf[..len]
+}
+
+/// Per-layer GEMM scratch: the 32-bit accumulator tile and the A-row sums
+/// the requantization epilogue needs. One instance serves a whole MLP
+/// chain — each layer regrows/overwrites the prefix it uses.
+#[derive(Clone, Debug, Default)]
+pub struct GemmScratch {
+    /// `m × n_total` i32 accumulator (`C_temp`, checksum column included
+    /// on protected layers). Valid only between a layer's GEMM and its
+    /// verification/recompute — the next layer overwrites it.
+    pub c_temp: Vec<i32>,
+    /// Row sums of the current layer's quantized input (length m).
+    pub a_row_sums: Vec<i32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_never_shrinks_and_reuses_capacity() {
+        let mut buf: Vec<i32> = Vec::new();
+        assert_eq!(grow(&mut buf, 8).len(), 8);
+        let cap = buf.capacity();
+        assert_eq!(grow(&mut buf, 4).len(), 4);
+        assert_eq!(buf.len(), 8, "grow must not shrink the backing buffer");
+        assert_eq!(grow(&mut buf, 8).len(), 8);
+        assert_eq!(buf.capacity(), cap, "steady-state regrow must not realloc");
+    }
+
+    #[test]
+    fn gemm_scratch_grows_independently() {
+        let mut s = GemmScratch::default();
+        grow(&mut s.c_temp, 64).fill(7);
+        grow(&mut s.a_row_sums, 4).fill(1);
+        assert_eq!(s.c_temp.len(), 64);
+        assert_eq!(s.a_row_sums.len(), 4);
+    }
+}

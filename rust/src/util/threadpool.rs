@@ -307,6 +307,53 @@ impl ThreadPool {
         }
     }
 
+    /// Two-slice variant of [`ThreadPool::scope_chunks`] for operators
+    /// that produce two outputs per item with different record widths
+    /// (the fused GEMM writes an `n_total`-wide i32 accumulator row AND
+    /// an `n_out`-wide u8 row per m-row). Same gate, same ceil chunking
+    /// — both slices split at identical item boundaries, so the gate and
+    /// chunk policy keep living in exactly one place.
+    pub fn scope_chunks2<T, U, F>(
+        &self,
+        out_a: &mut [T],
+        item_len_a: usize,
+        out_b: &mut [U],
+        item_len_b: usize,
+        work: usize,
+        min_work: usize,
+        f: F,
+    ) where
+        T: Send,
+        U: Send,
+        F: Fn(usize, &mut [T], &mut [U]) + Sync,
+    {
+        assert!(item_len_a > 0 && out_a.len() % item_len_a == 0, "chunk shape");
+        let items = out_a.len() / item_len_a;
+        assert_eq!(out_b.len(), items * item_len_b, "chunk shape (second slice)");
+        if items >= 2 && self.size() > 1 && work >= min_work {
+            let jobs = self.size().min(items);
+            let per = (items + jobs - 1) / jobs;
+            self.scope(|s| {
+                let mut rest_a = out_a;
+                let mut rest_b = out_b;
+                let mut i0 = 0usize;
+                while i0 < items {
+                    let n = per.min(items - i0);
+                    let (ca, ta) = rest_a.split_at_mut(n * item_len_a);
+                    let (cb, tb) = rest_b.split_at_mut(n * item_len_b);
+                    rest_a = ta;
+                    rest_b = tb;
+                    let f = &f;
+                    let first = i0;
+                    s.spawn(move || f(first, ca, cb));
+                    i0 += n;
+                }
+            });
+        } else {
+            f(0, out_a, out_b);
+        }
+    }
+
     /// Map `f` over `items` in parallel, preserving order.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
@@ -531,6 +578,32 @@ mod tests {
         for (i, rec) in out.chunks(item_len).enumerate() {
             assert!(rec[0] <= i);
             assert!(rec.iter().all(|&x| x == rec[0]));
+        }
+    }
+
+    #[test]
+    fn scope_chunks2_splits_both_slices_item_aligned() {
+        let pool = ThreadPool::new(3);
+        for min_work in [0usize, usize::MAX] {
+            let (items, la, lb) = (10usize, 4usize, 3usize);
+            let mut a = vec![0usize; items * la];
+            let mut b = vec![0usize; items * lb];
+            pool.scope_chunks2(&mut a, la, &mut b, lb, 1 << 30, min_work, |first, ca, cb| {
+                assert_eq!(ca.len() % la, 0);
+                assert_eq!(cb.len() / lb, ca.len() / la, "same item count per job");
+                for (i, rec) in ca.chunks_mut(la).enumerate() {
+                    rec.fill(first + i + 1);
+                }
+                for (i, rec) in cb.chunks_mut(lb).enumerate() {
+                    rec.fill((first + i + 1) * 10);
+                }
+            });
+            for (i, rec) in a.chunks(la).enumerate() {
+                assert!(rec.iter().all(|&x| x == i + 1), "a item {i} (min_work={min_work})");
+            }
+            for (i, rec) in b.chunks(lb).enumerate() {
+                assert!(rec.iter().all(|&x| x == (i + 1) * 10), "b item {i}");
+            }
         }
     }
 

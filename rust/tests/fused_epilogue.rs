@@ -1,0 +1,233 @@
+//! Bit-exactness grid for the fused GEMM requantize/ReLU epilogue (PR 3):
+//! on every dispatch path (AVX2 fused, scalar fallback, row-parallel) the
+//! fused kernel must produce (a) the identical i32 `C_temp` as the plain
+//! GEMM and (b) the identical u8 output as the two-pass scalar
+//! requantize(+ReLU) flow — including when the pack carries the ABFT
+//! checksum column, which is computed but never requantized (§IV-A3).
+
+use dlrm_abft::abft::AbftGemm;
+use dlrm_abft::dlrm::{AbftLinear, Protection};
+use dlrm_abft::gemm::{
+    gemm_exec, gemm_requant_exec_into, gemm_requant_exec_into_scalar, simd_active, PackedB,
+};
+use dlrm_abft::quant::{
+    quantize_slice_u8, requantize, requantize_exclude_last_col, QParams, RequantEpilogue,
+    RequantParams,
+};
+use dlrm_abft::util::rng::Pcg32;
+
+fn rand_case(rng: &mut Pcg32, m: usize, k: usize, n: usize) -> (Vec<u8>, Vec<i8>) {
+    let mut a = vec![0u8; m * k];
+    let mut b = vec![0i8; k * n];
+    rng.fill_u8(&mut a);
+    rng.fill_i8(&mut b);
+    (a, b)
+}
+
+fn qparams(rng: &mut Pcg32) -> (QParams, QParams, QParams) {
+    let a = QParams::fit_u8(0.0, 1.0 + rng.next_f32() * 3.0);
+    let b = QParams::fit_i8(-0.5 - rng.next_f32(), 0.5 + rng.next_f32());
+    let c = QParams::fit_u8(-40.0 - rng.next_f32() * 200.0, 44.0 + rng.next_f32() * 200.0);
+    (a, b, c)
+}
+
+/// Reference: plain GEMM, scalar requantize over the payload columns,
+/// then the quantized ReLU clamp — the exact pre-PR3 two-pass pipeline.
+fn two_pass_reference(
+    a: &[u8],
+    packed: &PackedB,
+    m: usize,
+    p: &RequantParams,
+    relu_floor: u8,
+) -> (Vec<i32>, Vec<u8>) {
+    let c_temp = gemm_exec(a, packed, m);
+    let n = packed.n;
+    let mut out = if packed.extra_cols == 1 {
+        requantize_exclude_last_col(&c_temp, m, n + 1, p)
+    } else {
+        requantize(&c_temp, m, n, p)
+    };
+    for v in &mut out {
+        if *v < relu_floor {
+            *v = relu_floor;
+        }
+    }
+    (c_temp, out)
+}
+
+/// The grid: shapes covering m=1, row pairs + odd row, panel boundaries
+/// (n = 31 / 32 / 33 / 64 / 65), odd k (in-register tail fold), and the
+/// GEMM_PAR_MIN_WORK crossing (row-parallel fused path); each × {plain,
+/// checksum-augmented} × {ReLU on, off}.
+#[test]
+fn fused_epilogue_bit_identical_to_two_pass() {
+    let mut rng = Pcg32::new(0xF05E);
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 64, 32),
+        (2, 7, 5),
+        (3, 64, 31),
+        (2, 33, 32), // odd k: the tail row folds into registers
+        (5, 64, 33),
+        (4, 128, 64),
+        (3, 129, 65),
+        (8, 255, 96),
+        (19, 384, 320), // crosses GEMM_PAR_MIN_WORK → row-parallel fused
+    ];
+    for &(m, k, n) in shapes {
+        for with_checksum in [false, true] {
+            for relu in [false, true] {
+                let (a, b) = rand_case(&mut rng, m, k, n);
+                let (qa, qb, qc) = qparams(&mut rng);
+                let packed = if with_checksum {
+                    AbftGemm::new(&b, k, n).packed
+                } else {
+                    PackedB::pack(&b, k, n)
+                };
+                let p = RequantParams::prepare(&a, &b, m, k, n, qa, qb, qc);
+                let relu_floor = if relu { qc.quantize_u8(0.0) } else { 0 };
+                let (want_c, want_out) = two_pass_reference(&a, &packed, m, &p, relu_floor);
+
+                let nt = packed.n_total();
+                let epi = RequantEpilogue {
+                    spec: p.spec(),
+                    a_row_sums: &p.a_row_sums,
+                    b_col_sums: &p.b_col_sums,
+                    n_out: n,
+                    relu_floor,
+                };
+                let tag = format!("({m},{k},{n}) checksum={with_checksum} relu={relu}");
+
+                let mut c_fused = vec![0i32; m * nt];
+                let mut out_fused = vec![0u8; m * n];
+                gemm_requant_exec_into(&a, &packed, m, &epi, &mut c_fused, &mut out_fused);
+                assert_eq!(c_fused, want_c, "fused C_temp diverged {tag}");
+                assert_eq!(out_fused, want_out, "fused output diverged {tag}");
+
+                let mut c_scalar = vec![0i32; m * nt];
+                let mut out_scalar = vec![0u8; m * n];
+                gemm_requant_exec_into_scalar(&a, &packed, m, &epi, &mut c_scalar, &mut out_scalar);
+                assert_eq!(c_scalar, want_c, "scalar-forced C_temp diverged {tag}");
+                assert_eq!(out_scalar, want_out, "scalar-forced output diverged {tag}");
+            }
+        }
+    }
+    eprintln!("fused grid done (avx2 fused path active: {})", simd_active());
+}
+
+/// Saturated inputs push the accumulator (and the affine correction) to
+/// its extremes — the epilogue's clamp and the in-register odd-k tail
+/// must stay exact there too.
+#[test]
+fn fused_epilogue_saturated_inputs_exact() {
+    for (k, fill) in [(64usize, 127i8), (65, -128), (63, -127)] {
+        let (m, n) = (3usize, 64usize);
+        let a = vec![255u8; m * k];
+        let b = vec![fill; k * n];
+        let packed = PackedB::pack(&b, k, n);
+        let qa = QParams::fit_u8(0.0, 4.0);
+        let qb = QParams::fit_i8(-1.0, 1.0);
+        let qc = QParams::fit_u8(-100.0, 120.0);
+        let p = RequantParams::prepare(&a, &b, m, k, n, qa, qb, qc);
+        let (want_c, want_out) = two_pass_reference(&a, &packed, m, &p, 0);
+        let epi = RequantEpilogue {
+            spec: p.spec(),
+            a_row_sums: &p.a_row_sums,
+            b_col_sums: &p.b_col_sums,
+            n_out: n,
+            relu_floor: 0,
+        };
+        let mut c = vec![0i32; m * n];
+        let mut out = vec![0u8; m * n];
+        gemm_requant_exec_into(&a, &packed, m, &epi, &mut c, &mut out);
+        assert_eq!(c, want_c, "k={k} fill={fill}");
+        assert_eq!(out, want_out, "k={k} fill={fill}");
+    }
+}
+
+/// The layer-level contract: `AbftLinear::forward` (now fused inside)
+/// must still match the hand-composed two-pass pipeline on protected and
+/// unprotected paths, and detection semantics must survive the fusion —
+/// a corrupted packed weight is flagged from the stored i32 accumulator.
+#[test]
+fn abft_linear_fused_matches_manual_two_pass() {
+    let mut rng = Pcg32::new(0xAB1);
+    for (m, k, n) in [(1usize, 48usize, 32usize), (6, 96, 40), (4, 33, 64)] {
+        for protection in [Protection::Off, Protection::Detect, Protection::DetectRecompute] {
+            for relu in [false, true] {
+                let layer = AbftLinear::random(k, n, relu, protection, &mut rng);
+                let xf: Vec<f32> = (0..m * k).map(|_| rng.next_f32()).collect();
+                let (x, xp) = quantize_slice_u8(&xf);
+                let (y, rep) = layer.forward(&x, m, xp);
+                assert_eq!(rep.rows_flagged, 0, "clean layer must not flag");
+
+                // Manual two-pass: protected GEMM (or plain), scalar
+                // requantize excluding the checksum column, then ReLU.
+                let p = layer.requant_params(&x, m, xp);
+                let packed = if protection.enabled() {
+                    layer.abft().packed.clone()
+                } else {
+                    PackedB::pack(
+                        &layer.abft().packed.to_row_major()[..] // row-major k×(n+1)
+                            .chunks(n + 1)
+                            .flat_map(|r| r[..n].iter().copied())
+                            .collect::<Vec<i8>>(),
+                        k,
+                        n,
+                    )
+                };
+                let relu_floor = if relu { layer.out_qparams.quantize_u8(0.0) } else { 0 };
+                let (_, want) = two_pass_reference(&x, &packed, m, &p, relu_floor);
+                assert_eq!(y, want, "({m},{k},{n}) prot={protection:?} relu={relu}");
+            }
+        }
+    }
+}
+
+/// Detection through the fused path: corrupt a packed payload byte and
+/// the verdict (computed from the stored `C_temp`) must still fire.
+#[test]
+fn fused_path_preserves_detection() {
+    let mut rng = Pcg32::new(0xDE7);
+    let (m, k, n) = (6usize, 48usize, 40usize);
+    let mut layer = AbftLinear::random(k, n, true, Protection::Detect, &mut rng);
+    let xf: Vec<f32> = (0..m * k).map(|_| rng.next_f32()).collect();
+    let (x, xp) = quantize_slice_u8(&xf);
+    let idx = layer.abft().packed.offset(5, 3);
+    let data = layer.abft_mut().packed.data_mut();
+    data[idx] = (data[idx] as u8 ^ 0x40) as i8;
+    let (_, rep) = layer.forward(&x, m, xp);
+    assert!(rep.rows_flagged > 0, "corruption must be flagged through the fused path");
+}
+
+/// Quantization-lattice edge sweep: drive values that land arbitrarily
+/// close to rounding boundaries through both paths. With α_C chosen so
+/// code boundaries fall on representable halves, ties are exercised.
+#[test]
+fn fused_epilogue_rounding_boundary_sweep() {
+    // α = 2.0, β = -256: real values land on integers and exact .5
+    // points depending on c_temp parity — round-half-away ties galore.
+    let qa = QParams { alpha: 1.0, beta: 0.0 };
+    let qb = QParams { alpha: 1.0, beta: 0.0 };
+    let qc = QParams { alpha: 2.0, beta: -256.0 };
+    let (m, k, n) = (8usize, 1usize, 64usize);
+    // a: single k so c_temp[i][j] = a[i] * b[j]; choose values to sweep
+    // the output lattice including exact-tie points.
+    let a: Vec<u8> = (0..m as u8).map(|v| v * 3 + 1).collect();
+    let b: Vec<i8> = (0..n).map(|j| (j as i32 - 32) as i8).collect();
+    let packed = PackedB::pack(&b, k, n);
+    let p = RequantParams::prepare(&a, &b, m, k, n, qa, qb, qc);
+    let (want_c, want_out) = two_pass_reference(&a, &packed, m, &p, 0);
+    let epi = RequantEpilogue {
+        spec: p.spec(),
+        a_row_sums: &p.a_row_sums,
+        b_col_sums: &p.b_col_sums,
+        n_out: n,
+        relu_floor: 0,
+    };
+    let mut c = vec![0i32; m * n];
+    let mut out = vec![0u8; m * n];
+    gemm_requant_exec_into(&a, &packed, m, &epi, &mut c, &mut out);
+    assert_eq!(c, want_c);
+    assert_eq!(out, want_out, "tie-prone lattice must round identically");
+}

@@ -41,6 +41,7 @@ fn policy() -> BatchPolicy {
         max_batch: 8,
         max_wait: Duration::from_millis(1),
         max_queue: 256,
+        loops: 1,
     }
 }
 
@@ -139,6 +140,7 @@ fn backpressure_overload_reports_error() {
         max_batch: 2,
         max_wait: Duration::from_millis(50),
         max_queue: 1,
+        loops: 1,
     };
     let server = Server::start("127.0.0.1:0", engine, tight).unwrap();
     // Flood from several threads; at least everything terminates and the

@@ -1,0 +1,96 @@
+//! Steady-state allocation regression test (PR 3 acceptance criterion):
+//! after warmup, `Engine::score` must perform **zero** heap allocations
+//! on the clean serving path — unsharded and sharded.
+//!
+//! A counting global allocator tallies every `alloc`/`realloc`. The test
+//! keeps batches below the kernel fan-out gates so the whole pass runs
+//! inline on the caller thread (pool workers would otherwise allocate
+//! job boxes — kernel parallelism is amortized differently and measured
+//! by the perf benches, not this invariant). This file holds exactly one
+//! `#[test]` so no concurrent test case can pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+use dlrm_abft::coordinator::Engine;
+use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
+use dlrm_abft::shard::ShardPlan;
+use dlrm_abft::util::rng::Pcg32;
+
+fn tiny_model(seed: u64) -> DlrmModel {
+    DlrmModel::random(DlrmConfig {
+        num_dense: 8,
+        embedding_dim: 16,
+        bottom_mlp: vec![32, 16],
+        top_mlp: vec![32],
+        tables: vec![
+            TableConfig { rows: 400, pooling: 6 },
+            TableConfig { rows: 300, pooling: 4 },
+        ],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed,
+    })
+}
+
+fn steady_state_allocs(engine: &Engine, batch: usize, label: &str) {
+    let mut rng = Pcg32::new(0x5EED);
+    let model = engine.model.read().unwrap();
+    let reqs = model.synth_requests(batch, &mut rng);
+    drop(model);
+    let mut scores = vec![0f32; batch];
+
+    // Warmup: grows every scratch buffer to its high-water mark and
+    // parks one arena in the engine pool.
+    for _ in 0..3 {
+        let outcome = engine.score(&reqs, &mut scores);
+        assert!(!outcome.detected, "{label}: clean model must not detect");
+    }
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..20 {
+        engine.score(&reqs, &mut scores);
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "{label}: Engine::score allocated in steady state"
+    );
+    assert!(scores.iter().all(|s| (0.0..=1.0).contains(s)));
+}
+
+#[test]
+fn engine_score_steady_state_is_allocation_free() {
+    // Unsharded: local EB stage, fused MLP pipeline, pooled arena.
+    let engine = Engine::new(tiny_model(0x21));
+    steady_state_allocs(&engine, 4, "unsharded");
+
+    // Sharded: the router's per-shard fan-out buffers pool in the arena's
+    // EbScratch — the "router scratch allocates per batch" ROADMAP item.
+    let sharded = Engine::new(tiny_model(0x21)).with_shards(ShardPlan::hash_placement(2, 2, 2), 64);
+    steady_state_allocs(&sharded, 4, "sharded");
+}
