@@ -1,0 +1,186 @@
+//! Adaptive detection control-plane perf harness (PR 4): emits
+//! `BENCH_PR4.json`.
+//!
+//! * Modes — engine `score` req/s and p50/p99 latency with every site
+//!   pinned at `Full` vs `Sampled(1/8)` vs `BoundOnly` vs `Off` (the
+//!   detection-overhead dial the controller turns at runtime).
+//! * Escalation — latency of the control loop itself on a sharded
+//!   engine: persistent replica fault injected under `Sampled(8)` →
+//!   batches served + controller ticks + wall time until the victim
+//!   site reads `Full`.
+//!
+//! Env: `QUICK=1` shrinks iteration counts; `BENCH_OUT=path` overrides
+//! the output file. Run: `cargo bench --bench perf_policy`.
+
+use std::time::Instant;
+
+use dlrm_abft::coordinator::Engine;
+use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, DlrmRequest, Protection, TableConfig};
+use dlrm_abft::gemm::simd_active;
+use dlrm_abft::policy::{DetectionMode, PolicyConfig};
+use dlrm_abft::shard::ShardPlan;
+use dlrm_abft::util::json::Json;
+use dlrm_abft::util::rng::Pcg32;
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+/// Same shape family as perf_pipeline's engine model (EB-heavy: the
+/// modes move the most work on the bag path).
+fn engine_model() -> DlrmModel {
+    DlrmModel::random(DlrmConfig {
+        num_dense: 13,
+        embedding_dim: 64,
+        bottom_mlp: vec![128, 64],
+        top_mlp: vec![128],
+        tables: vec![TableConfig { rows: 50_000, pooling: 20 }; 4],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed: 0x9047,
+    })
+}
+
+fn synth(model: &DlrmModel, batch: usize, seed: u64) -> Vec<DlrmRequest> {
+    let mut rng = Pcg32::new(seed);
+    model.synth_requests(batch, &mut rng)
+}
+
+fn quantile_us(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx] * 1e6
+}
+
+fn mode_section(quick: bool) -> Json {
+    let iters = if quick { 20 } else { 200 };
+    let batch = 16usize;
+    let engine = Engine::new(engine_model()).with_policy(PolicyConfig::default());
+    let sites = engine.policy_sites().expect("policy attached").clone();
+    let reqs = {
+        let model = engine.model.read().unwrap();
+        synth(&model, batch, 0x9001)
+    };
+    let mut scores = vec![0f32; batch];
+    let mut rows = Vec::new();
+    for (label, mode) in [
+        ("full", DetectionMode::Full),
+        ("sampled_1_in_8", DetectionMode::Sampled(8)),
+        ("bound_only", DetectionMode::BoundOnly),
+        ("off", DetectionMode::Off),
+    ] {
+        sites.set_all(mode);
+        // Warmup (arena growth + caches).
+        for _ in 0..3 {
+            engine.score(&reqs, &mut scores);
+        }
+        let mut lats = Vec::with_capacity(iters);
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(engine.score(&reqs, &mut scores));
+            lats.push(t.elapsed().as_secs_f64());
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rows.push(Json::obj(vec![
+            ("mode", Json::Str(label.to_string())),
+            ("req_per_s", num(round3((iters * batch) as f64 / wall))),
+            ("p50_us", num(round3(quantile_us(&lats, 0.50)))),
+            ("p99_us", num(round3(quantile_us(&lats, 0.99)))),
+        ]));
+    }
+    sites.set_all(DetectionMode::Full);
+    Json::obj(vec![
+        ("batch", num(batch as f64)),
+        ("iters", num(iters as f64)),
+        ("by_mode", Json::Arr(rows)),
+    ])
+}
+
+/// Injected flag → `Full` mode: the control loop's reaction latency.
+fn escalation_section() -> Json {
+    let model = DlrmModel::random(DlrmConfig {
+        num_dense: 4,
+        embedding_dim: 32,
+        bottom_mlp: vec![16, 32],
+        top_mlp: vec![16],
+        tables: vec![TableConfig { rows: 2000, pooling: 8 }; 2],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed: 0xE5C,
+    });
+    let engine = Engine::new(model)
+        .with_shards(ShardPlan::hash_placement(2, 1, 2), 2000)
+        .with_policy(PolicyConfig::default());
+    let sites = engine.policy_sites().unwrap().clone();
+    let store = engine.shard_store().unwrap().clone();
+    sites.set_all(DetectionMode::Sampled(8));
+
+    let reqs = {
+        let model = engine.model.read().unwrap();
+        synth(&model, 8, 0xE5C1)
+    };
+    let mut scores = vec![0f32; 8];
+    engine.score(&reqs, &mut scores); // warmup
+
+    // Persistent fault in replica 0's copy of table 0.
+    for row in 0..2000 {
+        store.flip_table_byte(0, 0, row * 32, 0x80);
+    }
+    let t0 = Instant::now();
+    let mut batches = 0usize;
+    let mut ticks = 0usize;
+    while sites.eb[0].cell.load() != DetectionMode::Full && batches < 64 {
+        engine.score(&reqs, &mut scores);
+        batches += 1;
+        engine.policy_tick();
+        ticks += 1;
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    store.drain_repairs();
+    Json::obj(vec![
+        ("escalated", Json::Bool(sites.eb[0].cell.load() == DetectionMode::Full)),
+        ("batches_to_full", num(batches as f64)),
+        ("ticks_to_full", num(ticks as f64)),
+        ("wall_ms", num(round3(wall_ms))),
+    ])
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick");
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_PR4.json".into());
+
+    eprintln!("perf_policy: avx2={} quick={quick}", simd_active());
+    let modes = mode_section(quick);
+    eprintln!("perf_policy: mode throughput done");
+    let escalation = escalation_section();
+    eprintln!("perf_policy: escalation latency done");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_policy_pr4".into())),
+        (
+            "host",
+            Json::obj(vec![
+                ("avx2", Json::Bool(simd_active())),
+                (
+                    "threads",
+                    num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0) as f64),
+                ),
+            ]),
+        ),
+        ("modes", modes),
+        ("escalation", escalation),
+    ]);
+    let text = format!("{doc}");
+    std::fs::write(&out_path, &text).expect("write bench output");
+    println!("{text}");
+    eprintln!("perf_policy: wrote {out_path}");
+}

@@ -237,6 +237,25 @@ impl FusedEbAbft {
         prefetch: bool,
         out: &mut [f32],
     ) -> bool {
+        self.bag_sum_checked_scaled(table, indices, weights, prefetch, 1.0, out)
+    }
+
+    /// [`FusedEbAbft::bag_sum_checked`] with the Eq-5 relative bound
+    /// scaled by `bound_scale` — the policy layer's `BoundOnly` mode
+    /// relaxes the bound (scale ≫ 1) so only gross corruption flags,
+    /// leaving low-significance faults to the scrubber's exact integer
+    /// compare. `bound_scale == 1.0` is exactly the standard check, and
+    /// the bag output is bit-identical for every scale (the bound only
+    /// gates the verdict).
+    pub fn bag_sum_checked_scaled(
+        &self,
+        table: &QuantTable8,
+        indices: &[usize],
+        weights: Option<&[f32]>,
+        prefetch: bool,
+        bound_scale: f64,
+        out: &mut [f32],
+    ) -> bool {
         let d = table.d;
         assert_eq!(d, self.d);
         assert_eq!(out.len(), d);
@@ -265,7 +284,7 @@ impl FusedEbAbft {
         }
         let rsum: f64 = out.iter().map(|&x| x as f64).sum();
         let scale = rsum.abs().max(csum.abs()).max(1.0);
-        (rsum - csum).abs() > self.rel_bound * scale
+        (rsum - csum).abs() > self.rel_bound * bound_scale * scale
     }
 
     pub fn bytes(&self) -> usize {

@@ -125,6 +125,60 @@ impl AbftGemm {
         Verdict { corrupted_rows }
     }
 
+    /// Sampled Eq-3b verification: check only rows `i` with
+    /// `(phase + i) % every == 0` — the policy layer's `Sampled(n)` mode.
+    /// The caller advances `phase` by `m` per batch (a per-site counter),
+    /// so coverage rotates across the row space instead of pinning to
+    /// fixed indices. `every == 1` checks every row and is **identical**
+    /// to [`AbftGemm::verify`] (property-tested in `rust/tests/prop.rs`).
+    pub fn verify_sampled(&self, c_temp: &[i32], m: usize, every: u32, phase: u64) -> Verdict {
+        let every = every.max(1) as u64;
+        let nt = self.n + 1;
+        assert_eq!(c_temp.len(), m * nt);
+        let mut corrupted_rows = Vec::new();
+        let mut i = ((every - phase % every) % every) as usize;
+        while i < m {
+            if !row_ok(&c_temp[i * nt..(i + 1) * nt], self.n, self.modulus) {
+                corrupted_rows.push(i);
+            }
+            i += every as usize;
+        }
+        Verdict { corrupted_rows }
+    }
+
+    /// How many rows [`AbftGemm::verify_sampled`] checks for a given
+    /// batch height and phase (telemetry accounting; no verification).
+    pub fn sampled_rows(m: usize, every: u32, phase: u64) -> usize {
+        let every = every.max(1) as u64;
+        let first = ((every - phase % every) % every) as usize;
+        if first >= m {
+            0
+        } else {
+            1 + (m - 1 - first) / every as usize
+        }
+    }
+
+    /// Batch-aggregate Eq-3b: one congruence over the whole tile,
+    /// `Σ_i (Σ_j C[i][j] − C[i][n]) ≡ 0 (mod modulus)` — the policy
+    /// layer's `BoundOnly` mode. Strictly weaker than per-row
+    /// verification: deltas on different rows can cancel mod `modulus`,
+    /// and a failure cannot name the corrupted row (recovery is the
+    /// engine's batch-level retry, not a row recompute). Returns `true`
+    /// when the aggregate is clean.
+    pub fn verify_aggregate(&self, c_temp: &[i32], m: usize) -> bool {
+        let nt = self.n + 1;
+        assert_eq!(c_temp.len(), m * nt);
+        let mut t: i64 = 0;
+        for i in 0..m {
+            let row = &c_temp[i * nt..(i + 1) * nt];
+            for &v in &row[..self.n] {
+                t += v as i64;
+            }
+            t -= row[self.n] as i64;
+        }
+        t % self.modulus as i64 == 0
+    }
+
     /// Recompute the payload of a single corrupted row from A and the packed
     /// B (row-level recovery; the paper's deployment model is "recompute on
     /// detect" since double faults are vanishingly rare).
@@ -288,6 +342,49 @@ mod tests {
                     || m >= n
             );
         }
+    }
+
+    #[test]
+    fn sampled_verify_checks_exactly_its_stripe() {
+        let mut rng = Pcg32::new(8);
+        let (m, k, n) = (12, 48, 20);
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let (mut c, _) = abft.exec(&a, m);
+        // Corrupt every row: a sampled pass flags exactly its stripe.
+        for r in 0..m {
+            c[r * (n + 1)] ^= 1 << 9;
+        }
+        for every in [1u32, 2, 3, 4] {
+            for phase in [0u64, 1, 5, 100] {
+                let v = abft.verify_sampled(&c, m, every, phase);
+                let expect: Vec<usize> =
+                    (0..m).filter(|i| (phase + *i as u64) % every as u64 == 0).collect();
+                assert_eq!(v.corrupted_rows, expect, "every={every} phase={phase}");
+                assert_eq!(
+                    AbftGemm::sampled_rows(m, every, phase),
+                    expect.len(),
+                    "count formula every={every} phase={phase}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn aggregate_verify_catches_single_fault_and_admits_cancellation() {
+        let mut rng = Pcg32::new(9);
+        let (m, k, n) = (6, 32, 16);
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let (mut c, _) = abft.exec(&a, m);
+        assert!(abft.verify_aggregate(&c, m), "clean tile must pass");
+        c[3] += 5; // single fault → aggregate residue 5
+        assert!(!abft.verify_aggregate(&c, m));
+        // Opposing delta on another row cancels — the documented
+        // weakness that makes BoundOnly the bottom of the checked lattice.
+        c[2 * (n + 1)] -= 5;
+        assert!(abft.verify_aggregate(&c, m));
+        assert!(!abft.verify(&c, m).clean(), "per-row verify still catches it");
     }
 
     #[test]

@@ -51,9 +51,23 @@ impl Scrubber {
 
     /// Scrub the next strip of `table` against `checksum`.
     pub fn scrub_step(&mut self, table: &QuantTable8, checksum: &EbChecksum) -> ScrubReport {
+        self.scrub_step_rows(table, checksum, self.stride)
+    }
+
+    /// Scrub up to `rows` rows from the cursor (exact-budget pacing: the
+    /// strip is clipped at the table end, `rows_scanned` reports what was
+    /// actually covered, and the cursor carries across calls — the
+    /// `scrub_budget` contract). `scrub_step` is this with `rows ==
+    /// stride`.
+    pub fn scrub_step_rows(
+        &mut self,
+        table: &QuantTable8,
+        checksum: &EbChecksum,
+        rows: usize,
+    ) -> ScrubReport {
         assert_eq!(checksum.c_t.len(), table.rows);
         let mut report = ScrubReport::default();
-        let end = (self.cursor + self.stride).min(table.rows);
+        let end = (self.cursor + rows).min(table.rows);
         for row in self.cursor..end {
             if table.code_row_sum(row) != checksum.c_t[row] {
                 report.corrupted_rows.push(row);
@@ -148,6 +162,26 @@ mod tests {
         let last = s.scrub_step(&table, &cs);
         assert_eq!(last.rows_scanned, 100);
         assert!(last.wrapped);
+    }
+
+    #[test]
+    fn budgeted_rows_override_the_stride_and_carry_the_cursor() {
+        let (mut table, cs) = setup(100, 8);
+        table.data[99 * 8] ^= 0x10;
+        let mut s = Scrubber::new(10);
+        // A budget call larger than the stride scans exactly that many.
+        assert_eq!(s.scrub_step_rows(&table, &cs, 60).rows_scanned, 60);
+        assert!((s.progress(100) - 0.6).abs() < 1e-9);
+        // Clipped at the table end; the wrap is reported.
+        let r = s.scrub_step_rows(&table, &cs, 60);
+        assert_eq!(r.rows_scanned, 40);
+        assert!(r.wrapped);
+        assert_eq!(r.corrupted_rows, vec![99]);
+        // Zero-row budget is a no-op that holds the cursor.
+        assert_eq!(s.scrub_step_rows(&table, &cs, 0).rows_scanned, 0);
+        assert_eq!(s.progress(100), 0.0);
+        // And the plain scrub_step still follows the stride.
+        assert_eq!(s.scrub_step(&table, &cs).rows_scanned, 10);
     }
 
     #[test]

@@ -11,17 +11,21 @@
 //! inject/undo drills and operator repairs (tests/CLI).
 
 use crate::abft::Scrubber;
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{policy_json, Metrics};
 use crate::coordinator::request::{ScoreRequest, ScoreResponse};
 use crate::dlrm::{
     DlrmModel, DlrmRequest, EbStage, InferenceReport, InferenceScratch, LocalEbStage, Protection,
+};
+use crate::policy::{
+    build_neighbors, ControllerThread, PolicyConfig, PolicyController, PolicyHandle, PolicySites,
+    StepReport,
 };
 use crate::shard::{RepairWorker, ShardPlan, ShardRouter, ShardStore};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// The unsharded EB stage, shared by every non-sharded engine.
 static LOCAL_EB_STAGE: LocalEbStage = LocalEbStage;
@@ -77,6 +81,13 @@ impl ChaosPlan {
     }
 }
 
+/// Unsharded scrub state: per-table incremental scrubbers plus the
+/// round-robin table cursor budget-paced ticks resume from.
+struct ScrubSet {
+    scrubbers: Vec<Scrubber>,
+    next: usize,
+}
+
 /// Sharded-serving attachment: the replicated store, the router that
 /// serves EB traffic from it, and (optionally) the background repairer.
 pub struct ShardServing {
@@ -97,20 +108,45 @@ pub struct BatchOutcome {
     pub degraded: bool,
 }
 
+/// One [`Engine::scrub_tick`]'s outcome: exactly how many rows were
+/// scanned this tick (the `scrub_budget` pacing accounting) and the
+/// corrupted `(table, row)` pairs found.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ScrubTickReport {
+    pub rows_scanned: usize,
+    pub hits: Vec<(usize, usize)>,
+}
+
+/// Adaptive-detection attachment ([`Engine::with_policy`]): the shared
+/// site table, the controller (manual or background-threaded), and the
+/// scrub-pacing knob the controller writes.
+pub struct PolicyRuntime {
+    pub sites: Arc<PolicySites>,
+    controller: Arc<Mutex<PolicyController>>,
+    /// Joins the background tick thread on engine drop; `None` when the
+    /// config asked for manual ticking.
+    _thread: Option<ControllerThread>,
+}
+
 pub struct Engine {
     /// Read-mostly: shared read lock for inference, write lock only for
     /// chaos injection/undo and repair writes.
     pub model: RwLock<DlrmModel>,
     pub metrics: Metrics,
     chaos: Option<Mutex<(ChaosConfig, Pcg32)>>,
-    /// Background table scrubbers (one per table), advanced between
-    /// batches to proactively catch latent memory corruption in cold rows
-    /// (see abft::scrub). None disables scrubbing. Sharded engines scrub
-    /// the store's replicas instead (see [`Engine::scrub_tick`]).
-    scrubbers: Option<Mutex<Vec<Scrubber>>>,
+    /// Background table scrubbers (one per table) plus the round-robin
+    /// table cursor for budget-paced ticks, advanced between batches to
+    /// proactively catch latent memory corruption in cold rows (see
+    /// abft::scrub). None disables scrubbing. Sharded engines scrub the
+    /// store's replicas instead (see [`Engine::scrub_tick`]).
+    scrubbers: Option<Mutex<ScrubSet>>,
     /// When set, embedding traffic is served from the shard store via the
     /// router; the dense MLP layers stay in `model`.
     shards: Option<ShardServing>,
+    /// Adaptive detection control plane ([`Engine::with_policy`]); when
+    /// `None` every site runs `Full` — bit-identical to the pre-policy
+    /// engine.
+    policy: Option<PolicyRuntime>,
     /// Per-worker inference arenas: [`Engine::score`] checks one out for
     /// the duration of a batch and returns it, so N concurrent callers
     /// settle on N pooled arenas and steady-state scoring allocates
@@ -127,6 +163,7 @@ impl Engine {
             chaos: None,
             scrubbers: None,
             shards: None,
+            policy: None,
             scratch_pool: Mutex::new(Vec::new()),
         }
     }
@@ -139,14 +176,20 @@ impl Engine {
             chaos: Some(Mutex::new((chaos, rng))),
             scrubbers: None,
             shards: None,
+            policy: None,
             scratch_pool: Mutex::new(Vec::new()),
         }
     }
 
-    /// Enable background scrubbing, `stride` rows per table per tick.
+    /// Enable background scrubbing, `stride` rows per table per tick
+    /// (with a policy attached, the policy's `scrub_budget` paces ticks
+    /// instead — see [`Engine::scrub_tick`]).
     pub fn with_scrubbing(mut self, stride: usize) -> Self {
         let n = self.model.read().unwrap().tables.len();
-        self.scrubbers = Some(Mutex::new((0..n).map(|_| Scrubber::new(stride)).collect()));
+        self.scrubbers = Some(Mutex::new(ScrubSet {
+            scrubbers: (0..n).map(|_| Scrubber::new(stride)).collect(),
+            next: 0,
+        }));
         self
     }
 
@@ -181,6 +224,70 @@ impl Engine {
         self
     }
 
+    /// Attach the adaptive detection control plane ([`crate::policy`]):
+    /// builds one policy site per protected operator (every MLP layer +
+    /// every embedding table), threads the site table into the model's
+    /// hot paths, and starts the escalation controller — as a background
+    /// thread when `cfg.tick > 0`, else manually ticked via
+    /// [`Engine::policy_tick`] (tests, campaigns).
+    ///
+    /// Call **after** [`Engine::with_shards`] when serving sharded, so
+    /// the escalation neighbor map groups tables by the shard that owns
+    /// them (co-sharded tables share replica memory — a fault on one is
+    /// evidence about its shard-mates).
+    ///
+    /// Every site starts at `Full`: until the controller has observed a
+    /// quiet window, behavior is bit-identical to the policy-less engine.
+    pub fn with_policy(mut self, cfg: PolicyConfig) -> Self {
+        let (sites, neighbors) = {
+            let model = self.model.read().unwrap();
+            let gemm_sites = model.bottom.len() + model.top.len() + 1;
+            let eb_sites = model.tables.len();
+            let sites = Arc::new(PolicySites::new(
+                gemm_sites,
+                eb_sites,
+                cfg.bound_relax,
+                cfg.scrub_budget_base,
+            ));
+            let groups: Option<Vec<Vec<usize>>> = self
+                .shards
+                .as_ref()
+                .map(|sh| sh.store.shards().iter().map(|s| s.tables.clone()).collect());
+            let neighbors = build_neighbors(gemm_sites, eb_sites, groups.as_deref());
+            (sites, neighbors)
+        };
+        self.model.write().unwrap().policy = PolicyHandle::attached(Arc::clone(&sites));
+        let controller = Arc::new(Mutex::new(PolicyController::new(
+            Arc::clone(&sites),
+            neighbors,
+            cfg.clone(),
+        )));
+        let thread = (cfg.tick > Duration::ZERO)
+            .then(|| ControllerThread::spawn(Arc::clone(&controller), cfg.tick));
+        self.policy = Some(PolicyRuntime {
+            sites,
+            controller,
+            _thread: thread,
+        });
+        self
+    }
+
+    /// Run one controller tick synchronously (manual-tick mode; also
+    /// safe alongside a background thread — they serialize on the
+    /// controller mutex). Lifetime escalation/decay tallies live in the
+    /// site table and are mirrored into the metrics snapshot. `None`
+    /// when no policy is attached.
+    pub fn policy_tick(&self) -> Option<StepReport> {
+        let rt = self.policy.as_ref()?;
+        Some(rt.controller.lock().unwrap().step())
+    }
+
+    /// The policy site table, when a policy is attached (drills, benches,
+    /// campaign assertions).
+    pub fn policy_sites(&self) -> Option<&Arc<PolicySites>> {
+        self.policy.as_ref().map(|p| &p.sites)
+    }
+
     /// The shard store, when this engine serves sharded.
     pub fn shard_store(&self) -> Option<&Arc<ShardStore>> {
         self.shards.as_ref().map(|s| &s.store)
@@ -194,41 +301,96 @@ impl Engine {
         }
     }
 
-    /// Advance every table's scrubber by one strip. Called by the batch
-    /// loop between batches (idle slots). Returns corrupted (table, row)
-    /// pairs found this tick.
+    /// Advance the background scrub by one tick. Called by the batch
+    /// loop between batches (idle slots). Reports exactly how many rows
+    /// were scanned (the `scrub_budget` pacing accounting) plus the
+    /// corrupted `(table, row)` pairs found.
+    ///
+    /// With a policy attached, the tick scans exactly
+    /// `PolicySites::scrub_budget` rows — the controller's pacing knob,
+    /// raised under persistent faults — resuming deterministically where
+    /// the previous tick stopped (across tables, and across replicas
+    /// when sharded). Without a policy, the legacy stride behavior is
+    /// kept: every table (every replica) advances one strip.
     ///
     /// Sharded engines scrub the store's replica copies instead (that is
     /// where table traffic is served from); a scrub hit quarantines the
     /// replica and queues a repair — the proactive arm of
     /// detection-driven failover.
-    pub fn scrub_tick(&self) -> Vec<(usize, usize)> {
+    pub fn scrub_tick(&self) -> ScrubTickReport {
+        let budget = self
+            .policy
+            .as_ref()
+            .map(|p| p.sites.scrub_budget.load(Ordering::Relaxed));
         if let Some(sh) = &self.shards {
-            let hits = sh.store.scrub_tick();
+            let (rows_scanned, raw_hits) = match budget {
+                Some(b) => sh.store.scrub_tick_budget(b),
+                None => sh.store.scrub_tick(),
+            };
+            self.metrics
+                .scrubbed_rows
+                .fetch_add(rows_scanned as u64, Ordering::Relaxed);
             self.metrics
                 .scrub_hits
-                .fetch_add(hits.len() as u64, Ordering::Relaxed);
-            return hits.into_iter().map(|(_s, _r, table, row)| (table, row)).collect();
+                .fetch_add(raw_hits.len() as u64, Ordering::Relaxed);
+            return ScrubTickReport {
+                rows_scanned,
+                hits: raw_hits.into_iter().map(|(_s, _r, table, row)| (table, row)).collect(),
+            };
         }
         let Some(scrubbers) = &self.scrubbers else {
-            return Vec::new();
+            return ScrubTickReport::default();
         };
         // Scrubbing only reads table bytes; a shared lock keeps it off
         // the serving path's critical section.
         let model = self.model.read().unwrap();
-        let mut scrubbers = scrubbers.lock().unwrap();
-        let mut hits = Vec::new();
-        for (t, (table, checksum)) in model.tables.iter().zip(&model.checksums).enumerate() {
-            let report = scrubbers[t].scrub_step(table, checksum);
-            self.metrics
-                .scrubbed_rows
-                .fetch_add(report.rows_scanned as u64, Ordering::Relaxed);
-            self.metrics
-                .scrub_hits
-                .fetch_add(report.corrupted_rows.len() as u64, Ordering::Relaxed);
-            hits.extend(report.corrupted_rows.into_iter().map(|r| (t, r)));
+        let mut set = scrubbers.lock().unwrap();
+        let mut report = ScrubTickReport::default();
+        match budget {
+            Some(b) => {
+                // Exact pacing: walk tables round-robin from the carried
+                // cursor, spending the whole row budget (tables are
+                // non-empty by construction; an all-empty model exits
+                // after one idle lap).
+                let ntab = model.tables.len();
+                let mut idle = 0usize;
+                while report.rows_scanned < b && ntab > 0 && idle < ntab {
+                    let t = set.next % ntab;
+                    let r = set.scrubbers[t].scrub_step_rows(
+                        &model.tables[t],
+                        &model.checksums[t],
+                        b - report.rows_scanned,
+                    );
+                    if r.rows_scanned == 0 {
+                        set.next = (t + 1) % ntab;
+                        idle += 1;
+                        continue;
+                    }
+                    idle = 0;
+                    report.rows_scanned += r.rows_scanned;
+                    report.hits.extend(r.corrupted_rows.into_iter().map(|row| (t, row)));
+                    if r.wrapped {
+                        set.next = (t + 1) % ntab;
+                    }
+                }
+            }
+            None => {
+                for (t, (table, checksum)) in
+                    model.tables.iter().zip(&model.checksums).enumerate()
+                {
+                    let r = set.scrubbers[t].scrub_step(table, checksum);
+                    report.rows_scanned += r.rows_scanned;
+                    report.hits.extend(r.corrupted_rows.into_iter().map(|row| (t, row)));
+                }
+            }
         }
-        hits
+        self.metrics
+            .scrubbed_rows
+            .fetch_add(report.rows_scanned as u64, Ordering::Relaxed);
+        self.metrics
+            .scrub_hits
+            .fetch_add(report.hits.len() as u64, Ordering::Relaxed);
+        report
     }
 
     /// Serve one batch: forward → on detection, restore-chaos + recompute
@@ -237,6 +399,19 @@ impl Engine {
     /// Allocating front-end over [`Engine::score`] (request/response
     /// marshalling); the scoring itself is allocation-free.
     pub fn process_batch(&self, requests: Vec<ScoreRequest>) -> Vec<ScoreResponse> {
+        self.process_batch_reclaim(requests).0
+    }
+
+    /// [`Engine::process_batch`] that additionally hands the request
+    /// buffers back: the `dense`/`sparse` `Vec`s move request → scoring
+    /// → husk without a single copy, so the server's connection loops
+    /// can slab-reuse them for the next parse (the zero-allocation
+    /// boundary extended to the socket — see `coordinator::request`).
+    /// Husks are index-aligned with the responses.
+    pub fn process_batch_reclaim(
+        &self,
+        requests: Vec<ScoreRequest>,
+    ) -> (Vec<ScoreResponse>, Vec<ScoreRequest>) {
         let t0 = Instant::now();
         let ids: Vec<u64> = requests.iter().map(|r| r.id).collect();
         let dlrm_reqs: Vec<DlrmRequest> =
@@ -245,17 +420,24 @@ impl Engine {
         let outcome = self.score(&dlrm_reqs, &mut scores);
         let latency_us = t0.elapsed().as_micros() as u64;
 
-        ids.into_iter()
-            .zip(scores)
-            .map(|(id, score)| ScoreResponse {
+        let mut resps = Vec::with_capacity(ids.len());
+        let mut husks = Vec::with_capacity(ids.len());
+        for ((id, score), req) in ids.into_iter().zip(scores).zip(dlrm_reqs) {
+            resps.push(ScoreResponse {
                 id,
                 score,
                 detected: outcome.detected,
                 recomputed: outcome.recomputed,
                 degraded: outcome.degraded,
                 latency_us,
-            })
-            .collect()
+            });
+            husks.push(ScoreRequest {
+                id,
+                dense: req.dense,
+                sparse: req.sparse,
+            });
+        }
+        (resps, husks)
     }
 
     /// Score one batch into a caller-provided buffer — the zero-allocation
@@ -361,13 +543,30 @@ impl Engine {
         }
     }
 
-    /// Metrics snapshot extended with the shard store's health block when
-    /// this engine serves sharded (the `/metrics`-style payload).
+    /// Metrics snapshot extended with the shard store's health block and
+    /// the policy block (per-site modes + window stats) when attached
+    /// (the `/metrics`-style payload). The lifetime escalation/decay
+    /// tallies are mirrored from the site table into the flat
+    /// `policy_escalations` / `policy_decays` counters first, so the
+    /// snapshot is consistent whichever thread ticked the controller.
     pub fn metrics_snapshot(&self) -> Json {
+        if let Some(rt) = &self.policy {
+            self.metrics.policy_escalations.store(
+                rt.sites.escalations.load(Ordering::Relaxed),
+                Ordering::Relaxed,
+            );
+            self.metrics
+                .policy_decays
+                .store(rt.sites.decays.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
         let mut snap = self.metrics.snapshot();
-        if let Some(sh) = &self.shards {
-            if let Json::Obj(map) = &mut snap {
+        if let Json::Obj(map) = &mut snap {
+            if let Some(sh) = &self.shards {
                 map.insert("shards".to_string(), sh.store.health_json());
+            }
+            if let Some(rt) = &self.policy {
+                let controller = rt.controller.lock().unwrap();
+                map.insert("policy".to_string(), policy_json(&rt.sites, &controller));
             }
         }
         snap

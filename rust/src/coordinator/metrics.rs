@@ -1,6 +1,9 @@
 //! Serving metrics: lock-free counters and a log-bucketed latency
-//! histogram, snapshotted to JSON for the `/metrics`-style endpoint.
+//! histogram, snapshotted to JSON for the `/metrics`-style endpoint —
+//! plus the adaptive-detection policy block (per-site modes, window
+//! stats, per-mode served counters).
 
+use crate::policy::{DetectionMode, PolicyController, PolicySites};
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -90,6 +93,11 @@ pub struct Metrics {
     pub shard_detections: AtomicU64,
     pub shard_failovers: AtomicU64,
     pub shard_quarantines: AtomicU64,
+    /// Adaptive-policy controller events: sites snapped to `Full`
+    /// (escalations) and single lattice steps down (decays). Mirrored
+    /// from the policy site table at snapshot time; 0 with no policy.
+    pub policy_escalations: AtomicU64,
+    pub policy_decays: AtomicU64,
     pub latency: LatencyHistogram,
 }
 
@@ -106,6 +114,8 @@ impl Metrics {
             shard_detections: AtomicU64::new(0),
             shard_failovers: AtomicU64::new(0),
             shard_quarantines: AtomicU64::new(0),
+            policy_escalations: AtomicU64::new(0),
+            policy_decays: AtomicU64::new(0),
             latency: LatencyHistogram::new(),
         }
     }
@@ -143,6 +153,14 @@ impl Metrics {
                 "shard_quarantines",
                 Json::Num(self.shard_quarantines.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "policy_escalations",
+                Json::Num(self.policy_escalations.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "policy_decays",
+                Json::Num(self.policy_decays.load(Ordering::Relaxed) as f64),
+            ),
             ("latency_mean_us", Json::Num(self.latency.mean_us())),
             ("latency_p50_us", Json::Num(self.latency.quantile_us(0.5) as f64)),
             ("latency_p99_us", Json::Num(self.latency.quantile_us(0.99) as f64)),
@@ -154,6 +172,65 @@ impl Default for Metrics {
     fn default() -> Self {
         Self::new()
     }
+}
+
+/// The adaptive-detection policy block of the metrics snapshot: per-mode
+/// served-unit counters, lifetime controller events, the current scrub
+/// budget, and one entry per site (mode + sliding-window units /
+/// verified / flags + estimated overhead fraction).
+pub fn policy_json(sites: &PolicySites, controller: &PolicyController) -> Json {
+    let mode_json = |mode: DetectionMode| match mode {
+        DetectionMode::Sampled(n) => Json::Str(format!("sampled_1_in_{n}")),
+        m => Json::Str(m.as_str().to_string()),
+    };
+    let site_json = |flat: usize, label: String| {
+        let site = sites.site(flat);
+        let w = controller.window_stats(flat);
+        Json::obj(vec![
+            ("site", Json::Str(label)),
+            ("mode", mode_json(site.cell.load())),
+            ("window_units", Json::Num(w.units as f64)),
+            ("window_verified", Json::Num(w.verified as f64)),
+            ("window_flags", Json::Num(w.flags as f64)),
+            (
+                "overhead_est",
+                Json::Num(controller.overhead_estimate(flat)),
+            ),
+        ])
+    };
+    let mut site_rows = Vec::with_capacity(sites.len());
+    for i in 0..sites.gemm.len() {
+        site_rows.push(site_json(i, format!("gemm/{i}")));
+    }
+    for t in 0..sites.eb.len() {
+        site_rows.push(site_json(sites.eb_flat(t), format!("eb/{t}")));
+    }
+    let served = |slot: usize| Json::Num(sites.served[slot].load(Ordering::Relaxed) as f64);
+    Json::obj(vec![
+        (
+            "served",
+            Json::obj(vec![
+                ("full", served(DetectionMode::Full.slot())),
+                ("sampled", served(DetectionMode::Sampled(2).slot())),
+                ("bound_only", served(DetectionMode::BoundOnly.slot())),
+                ("off", served(DetectionMode::Off.slot())),
+            ]),
+        ),
+        (
+            "escalations",
+            Json::Num(sites.escalations.load(Ordering::Relaxed) as f64),
+        ),
+        ("decays", Json::Num(sites.decays.load(Ordering::Relaxed) as f64)),
+        (
+            "scrub_boosts",
+            Json::Num(sites.scrub_boosts.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "scrub_budget",
+            Json::Num(sites.scrub_budget.load(Ordering::Relaxed) as f64),
+        ),
+        ("sites", Json::Arr(site_rows)),
+    ])
 }
 
 #[cfg(test)]
@@ -182,6 +259,32 @@ mod tests {
     }
 
     #[test]
+    fn policy_block_reports_modes_window_stats_and_served() {
+        use crate::policy::{build_neighbors, PolicyConfig, PolicyController, PolicySites};
+        use std::sync::Arc;
+        let sites = Arc::new(PolicySites::new(2, 1, 1e3, 128));
+        sites.note_served(DetectionMode::Full, 5);
+        sites.note_served(DetectionMode::Sampled(8), 3);
+        sites.eb[0].cell.store(DetectionMode::Sampled(4));
+        let nb = build_neighbors(2, 1, None);
+        let mut c = PolicyController::new(Arc::clone(&sites), nb, PolicyConfig::default());
+        sites.eb[0].telem.record(10, 3, 0);
+        c.step();
+        let j = policy_json(&sites, &c);
+        assert_eq!(j.path(&["served", "full"]).and_then(Json::as_usize), Some(5));
+        assert_eq!(j.path(&["served", "sampled"]).and_then(Json::as_usize), Some(3));
+        assert_eq!(
+            j.path(&["sites", "2", "mode"]).and_then(Json::as_str),
+            Some("sampled_1_in_4")
+        );
+        assert_eq!(
+            j.path(&["sites", "2", "window_units"]).and_then(Json::as_usize),
+            Some(10)
+        );
+        assert_eq!(j.get("scrub_budget").and_then(Json::as_usize), Some(128));
+    }
+
+    #[test]
     fn snapshot_has_all_keys() {
         let m = Metrics::new();
         m.requests.fetch_add(3, Ordering::Relaxed);
@@ -198,6 +301,8 @@ mod tests {
             "shard_detections",
             "shard_failovers",
             "shard_quarantines",
+            "policy_escalations",
+            "policy_decays",
             "latency_mean_us",
             "latency_p50_us",
             "latency_p99_us",

@@ -11,8 +11,8 @@ pub mod request;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher, SubmitError};
-pub use engine::{BatchOutcome, ChaosConfig, Engine, ShardServing};
-pub use metrics::Metrics;
+pub use engine::{BatchOutcome, ChaosConfig, Engine, PolicyRuntime, ScrubTickReport, ShardServing};
+pub use metrics::{policy_json, Metrics};
 pub use pjrt_backend::{ArtifactShape, PjrtModelEngine};
 pub use request::{ScoreRequest, ScoreResponse};
 pub use server::{Client, Server};

@@ -5,7 +5,7 @@ use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
 /// A scoring request from a client.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ScoreRequest {
     pub id: u64,
     pub dense: Vec<f32>,
@@ -64,6 +64,233 @@ impl ScoreRequest {
         DlrmRequest {
             dense: self.dense,
             sparse: self.sparse,
+        }
+    }
+
+    /// Zero-allocation fast path for the server read loop: parse one
+    /// request line **into** this (reused) instance, recycling the
+    /// `dense` buffer and every inner `sparse` index `Vec` (grow-only —
+    /// at a steady request shape, no heap allocation after the first
+    /// request; enforced by `rust/tests/zero_alloc.rs`).
+    ///
+    /// Accepts exactly the score-request object grammar (`id`, `dense`,
+    /// `sparse` keys in any order, standard JSON numbers/whitespace).
+    /// Returns `false` — with `self` left in an unspecified reusable
+    /// state — for anything else (control ops like `{"op":…}`, unknown
+    /// keys, malformed input): the caller falls back to the generic
+    /// [`Json::parse`] path, which owns error reporting, so the two
+    /// paths stay observably identical.
+    pub fn parse_line_into(&mut self, line: &str) -> bool {
+        let mut p = FastParser { b: line.as_bytes(), s: line, i: 0 };
+        let (mut got_id, mut got_dense, mut got_sparse) = (false, false, false);
+        p.ws();
+        if !p.eat(b'{') {
+            return false;
+        }
+        loop {
+            p.ws();
+            if p.eat(b'}') {
+                break;
+            }
+            if (got_id || got_dense || got_sparse) && !p.eat(b',') {
+                return false;
+            }
+            p.ws();
+            let Some(key) = p.key() else { return false };
+            p.ws();
+            if !p.eat(b':') {
+                return false;
+            }
+            p.ws();
+            match key {
+                Key::Id => {
+                    let Some(v) = p.number() else { return false };
+                    if v.fract() != 0.0 || v < 0.0 {
+                        return false;
+                    }
+                    self.id = v as u64;
+                    got_id = true;
+                }
+                Key::Dense => {
+                    self.dense.clear();
+                    if !p.f32_array(&mut self.dense) {
+                        return false;
+                    }
+                    got_dense = true;
+                }
+                Key::Sparse => {
+                    if !p.eat(b'[') {
+                        return false;
+                    }
+                    let mut used = 0usize;
+                    p.ws();
+                    if !p.eat(b']') {
+                        loop {
+                            p.ws();
+                            if used == self.sparse.len() {
+                                self.sparse.push(Vec::new());
+                            }
+                            self.sparse[used].clear();
+                            if !p.usize_array(&mut self.sparse[used]) {
+                                return false;
+                            }
+                            used += 1;
+                            p.ws();
+                            if p.eat(b']') {
+                                break;
+                            }
+                            if !p.eat(b',') {
+                                return false;
+                            }
+                        }
+                    }
+                    // Steady-shape traffic never shrinks: this truncate
+                    // is a no-op after the first request.
+                    self.sparse.truncate(used);
+                    got_sparse = true;
+                }
+            }
+        }
+        p.ws();
+        got_id && got_dense && got_sparse && p.i == p.b.len()
+    }
+}
+
+/// Which score-request key a fast-path object member carries.
+enum Key {
+    Id,
+    Dense,
+    Sparse,
+}
+
+/// Byte-cursor recursive-descent parser for the score-request fast path.
+/// Numbers are parsed from in-place `&str` slices (no allocation).
+struct FastParser<'a> {
+    b: &'a [u8],
+    s: &'a str,
+    i: usize,
+}
+
+impl FastParser<'_> {
+    fn ws(&mut self) {
+        while matches!(self.b.get(self.i).copied(), Some(b' ' | b'\t' | b'\r' | b'\n')) {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> bool {
+        if self.b.get(self.i) == Some(&c) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// `"id"` / `"dense"` / `"sparse"`; anything else (including escapes)
+    /// aborts the fast path.
+    fn key(&mut self) -> Option<Key> {
+        for (lit, key) in [
+            (&b"\"id\""[..], Key::Id),
+            (&b"\"dense\""[..], Key::Dense),
+            (&b"\"sparse\""[..], Key::Sparse),
+        ] {
+            if self.b[self.i..].starts_with(lit) {
+                self.i += lit.len();
+                return Some(key);
+            }
+        }
+        None
+    }
+
+    /// One number token in the exact JSON grammar (`-?(0|[1-9][0-9]*)`
+    /// `(\.[0-9]+)?([eE][+-]?[0-9]+)?`), parsed from the source slice in
+    /// place. Matching the strict grammar — not everything
+    /// `f64::from_str` would take (`01`, `1.`, `+1`) — keeps the fast
+    /// path's accept set a subset of [`Json::parse`]'s, so every line
+    /// the fast path scores would have scored identically on the
+    /// generic path, and everything stricter falls back to it.
+    fn number(&mut self) -> Option<f64> {
+        let start = self.i;
+        self.eat(b'-');
+        match self.b.get(self.i).copied() {
+            Some(b'0') => self.i += 1,
+            Some(b'1'..=b'9') => {
+                while matches!(self.b.get(self.i).copied(), Some(b'0'..=b'9')) {
+                    self.i += 1;
+                }
+            }
+            _ => return None,
+        }
+        if self.eat(b'.') {
+            if !matches!(self.b.get(self.i).copied(), Some(b'0'..=b'9')) {
+                return None;
+            }
+            while matches!(self.b.get(self.i).copied(), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.b.get(self.i).copied(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if !self.eat(b'+') {
+                self.eat(b'-');
+            }
+            if !matches!(self.b.get(self.i).copied(), Some(b'0'..=b'9')) {
+                return None;
+            }
+            while matches!(self.b.get(self.i).copied(), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+        }
+        self.s.get(start..self.i)?.parse::<f64>().ok()
+    }
+
+    /// `[f, f, …]` appended to `out` (caller cleared it).
+    fn f32_array(&mut self, out: &mut Vec<f32>) -> bool {
+        if !self.eat(b'[') {
+            return false;
+        }
+        self.ws();
+        if self.eat(b']') {
+            return true;
+        }
+        loop {
+            self.ws();
+            let Some(v) = self.number() else { return false };
+            out.push(v as f32);
+            self.ws();
+            if self.eat(b']') {
+                return true;
+            }
+            if !self.eat(b',') {
+                return false;
+            }
+        }
+    }
+
+    /// `[i, i, …]` of non-negative integers appended to `out`.
+    fn usize_array(&mut self, out: &mut Vec<usize>) -> bool {
+        if !self.eat(b'[') {
+            return false;
+        }
+        self.ws();
+        if self.eat(b']') {
+            return true;
+        }
+        loop {
+            self.ws();
+            let Some(v) = self.number() else { return false };
+            if v.fract() != 0.0 || v < 0.0 {
+                return false;
+            }
+            out.push(v as usize);
+            self.ws();
+            if self.eat(b']') {
+                return true;
+            }
+            if !self.eat(b',') {
+                return false;
+            }
         }
     }
 }
@@ -145,5 +372,60 @@ mod tests {
         for s in [r#"{}"#, r#"{"id": 1}"#, r#"{"id":1,"dense":[],"sparse":"x"}"#] {
             assert!(ScoreRequest::from_json(&Json::parse(s).unwrap()).is_err());
         }
+    }
+
+    #[test]
+    fn fast_parse_matches_generic_path() {
+        let cases = [
+            r#"{"id":9,"dense":[0.5,1.25],"sparse":[[1,2,3],[]]}"#,
+            r#"{ "id" : 0 , "dense" : [ ] , "sparse" : [ ] }"#,
+            r#"{"sparse":[[7]],"id":12,"dense":[-1.5e-2,3]}"#,
+            r#"{"id":18446744073,"dense":[1e3],"sparse":[[0],[4,4,4]]}"#,
+        ];
+        let mut req = ScoreRequest::default();
+        for line in cases {
+            assert!(req.parse_line_into(line), "fast path must accept {line}");
+            let generic = ScoreRequest::from_json(&Json::parse(line).unwrap()).unwrap();
+            assert_eq!(req, generic, "{line}");
+        }
+    }
+
+    #[test]
+    fn fast_parse_falls_back_on_everything_else() {
+        let mut req = ScoreRequest::default();
+        for line in [
+            r#"{"op":"metrics"}"#,
+            r#"{"id":1,"dense":[],"sparse":[],"extra":0}"#,
+            r#"{"id":1,"dense":[]}"#,
+            r#"{"id":-1,"dense":[],"sparse":[]}"#,
+            r#"{"id":1.5,"dense":[],"sparse":[]}"#,
+            r#"{"id":1,"dense":[],"sparse":[[-3]]}"#,
+            r#"{"id":1,"dense":[],"sparse":"x"}"#,
+            r#"not json at all"#,
+            r#"{"id":1,"dense":[],"sparse":[]} trailing"#,
+            r#"{"id":1 "dense":[],"sparse":[]}"#,
+            // Strict JSON number grammar: from_str-isms must not widen
+            // the accept set past Json::parse.
+            r#"{"id":01,"dense":[],"sparse":[]}"#,
+            r#"{"id":1,"dense":[1.],"sparse":[]}"#,
+            r#"{"id":1,"dense":[+1],"sparse":[]}"#,
+            r#"{"id":1,"dense":[1e],"sparse":[]}"#,
+        ] {
+            assert!(!req.parse_line_into(line), "fast path must reject {line}");
+        }
+    }
+
+    #[test]
+    fn fast_parse_reuses_buffers_across_shapes() {
+        let mut req = ScoreRequest::default();
+        assert!(req.parse_line_into(r#"{"id":1,"dense":[1,2,3],"sparse":[[1,2],[3]]}"#));
+        assert_eq!(req.dense, vec![1.0, 2.0, 3.0]);
+        assert_eq!(req.sparse, vec![vec![1, 2], vec![3]]);
+        // A second, smaller request overwrites cleanly — stale state from
+        // the first never leaks through.
+        assert!(req.parse_line_into(r#"{"id":2,"dense":[9],"sparse":[[5]]}"#));
+        assert_eq!(req.id, 2);
+        assert_eq!(req.dense, vec![9.0]);
+        assert_eq!(req.sparse, vec![vec![5]]);
     }
 }

@@ -30,10 +30,14 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
 
-/// One queued unit: the request plus the channel its response goes back on.
+/// One queued unit: the request plus the channel its response goes back
+/// on. The reply carries the request's husk back too — the engine moves
+/// the `dense`/`sparse` buffers through scoring untouched, and the
+/// connection loop slabs them for its next parse (zero-allocation
+/// request path; see [`ScoreRequest::parse_line_into`]).
 struct Pending {
     req: ScoreRequest,
-    reply: mpsc::Sender<ScoreResponse>,
+    reply: mpsc::Sender<(ScoreResponse, ScoreRequest)>,
 }
 
 /// A running server (handle for tests and the CLI).
@@ -69,9 +73,11 @@ impl Server {
                         while let Some(batch) = batcher.next_batch() {
                             let (reqs, replies): (Vec<_>, Vec<_>) =
                                 batch.into_iter().map(|p| (p.req, p.reply)).unzip();
-                            let resps = engine.process_batch(reqs);
-                            for (resp, reply) in resps.into_iter().zip(replies) {
-                                let _ = reply.send(resp);
+                            let (resps, husks) = engine.process_batch_reclaim(reqs);
+                            for ((resp, husk), reply) in
+                                resps.into_iter().zip(husks).zip(replies)
+                            {
+                                let _ = reply.send((resp, husk));
                             }
                             // Idle-slot proactive scrubbing (incremental +
                             // thread-safe, so concurrent loops just scrub
@@ -147,14 +153,31 @@ impl Drop for Server {
 }
 
 fn handle_conn(stream: TcpStream, batcher: Arc<Batcher<Pending>>, engine: Arc<Engine>) -> Result<()> {
-    let reader = BufReader::new(stream.try_clone()?);
+    let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
+    // Per-connection slab: the line buffer and the request (with its
+    // dense/sparse Vecs) are reused across requests — the husk comes
+    // back with each response, so at a steady request shape the whole
+    // read→parse→submit path stops allocating after the first request.
+    let mut line = String::new();
+    let mut slab: Vec<ScoreRequest> = Vec::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
             continue;
         }
-        let parsed = match Json::parse(&line) {
+        let mut req = slab.pop().unwrap_or_default();
+        if req.parse_line_into(trimmed) {
+            submit_and_reply(&batcher, &mut writer, req, &mut slab)?;
+            continue;
+        }
+        slab.push(req); // unused husk back to the slab
+        // Generic path: control ops, fallback-shaped requests, errors.
+        let parsed = match Json::parse(trimmed) {
             Ok(j) => j,
             Err(e) => {
                 writeln!(writer, "{}", err_json(&format!("bad json: {e}")))?;
@@ -162,7 +185,6 @@ fn handle_conn(stream: TcpStream, batcher: Arc<Batcher<Pending>>, engine: Arc<En
                 continue;
             }
         };
-        // Control ops.
         if let Some(op) = parsed.get("op").and_then(Json::as_str) {
             match op {
                 "metrics" => writeln!(writer, "{}", engine.metrics_snapshot())?,
@@ -174,17 +196,7 @@ fn handle_conn(stream: TcpStream, batcher: Arc<Batcher<Pending>>, engine: Arc<En
         }
         match ScoreRequest::from_json(&parsed) {
             Ok(req) => {
-                let (tx, rx) = mpsc::channel();
-                if batcher.submit(Pending { req, reply: tx }).is_err() {
-                    writeln!(writer, "{}", err_json("overloaded"))?;
-                    writer.flush()?;
-                    continue;
-                }
-                match rx.recv() {
-                    Ok(resp) => writeln!(writer, "{}", resp.to_json())?,
-                    Err(_) => writeln!(writer, "{}", err_json("engine dropped request"))?,
-                }
-                writer.flush()?;
+                submit_and_reply(&batcher, &mut writer, req, &mut slab)?;
             }
             Err(e) => {
                 writeln!(writer, "{}", err_json(&format!("bad request: {e}")))?;
@@ -192,6 +204,32 @@ fn handle_conn(stream: TcpStream, batcher: Arc<Batcher<Pending>>, engine: Arc<En
             }
         }
     }
+    Ok(())
+}
+
+/// Submit one request, await its response, write it out, and return the
+/// request's husk to the connection slab (a rejected submission drops
+/// the buffers — overload is not the steady state the slab optimizes).
+fn submit_and_reply(
+    batcher: &Arc<Batcher<Pending>>,
+    writer: &mut BufWriter<TcpStream>,
+    req: ScoreRequest,
+    slab: &mut Vec<ScoreRequest>,
+) -> Result<()> {
+    let (tx, rx) = mpsc::channel();
+    if batcher.submit(Pending { req, reply: tx }).is_err() {
+        writeln!(writer, "{}", err_json("overloaded"))?;
+        writer.flush()?;
+        return Ok(());
+    }
+    match rx.recv() {
+        Ok((resp, husk)) => {
+            writeln!(writer, "{}", resp.to_json())?;
+            slab.push(husk);
+        }
+        Err(_) => writeln!(writer, "{}", err_json("engine dropped request"))?,
+    }
+    writer.flush()?;
     Ok(())
 }
 

@@ -3,9 +3,10 @@
 //! (checksum column excluded, §IV-A3), quantized ReLU, and the
 //! recompute-on-detect policy.
 
-use crate::abft::AbftGemm;
+use crate::abft::{AbftGemm, Verdict};
 use crate::dlrm::config::Protection;
 use crate::gemm::{gemm_requant_exec_into, PackedB};
+use crate::policy::{DetectionMode, SiteTelemetry};
 use crate::quant::{requantize_cols_into, QParams, RequantEpilogue, RequantParams, RequantSpec};
 use crate::util::rng::Pcg32;
 use crate::util::scratch::{grow, GemmScratch};
@@ -139,6 +140,31 @@ impl AbftLinear {
         scratch: &mut GemmScratch,
         out: &mut [u8],
     ) -> LayerReport {
+        self.forward_policied(x, m, x_qparams, DetectionMode::Full, None, scratch, out)
+    }
+
+    /// [`AbftLinear::forward_into`] under an explicit [`DetectionMode`]
+    /// (the policy layer's per-site dial). `Full` is exactly
+    /// `forward_into`; `Sampled(n)` verifies 1-in-`n` rows (phase drawn
+    /// from `telem` so coverage rotates); `BoundOnly` runs one
+    /// batch-aggregate congruence (a flag cannot name the row, so no
+    /// local recompute happens — recovery is the engine's batch retry,
+    /// reported as one flagged row); `Off` skips verification. Clean
+    /// outputs are bit-identical across all modes — verification never
+    /// writes the accumulator or the quantized payload.
+    ///
+    /// When `telem` is given, the site's units / verified-units / flags
+    /// counters are bumped (the control plane's telemetry feed).
+    pub fn forward_policied(
+        &self,
+        x: &[u8],
+        m: usize,
+        x_qparams: QParams,
+        mode: DetectionMode,
+        telem: Option<&SiteTelemetry>,
+        scratch: &mut GemmScratch,
+        out: &mut [u8],
+    ) -> LayerReport {
         assert_eq!(x.len(), m * self.k, "input shape");
         assert_eq!(out.len(), m * self.n, "output shape");
         let mut report = LayerReport::default();
@@ -162,8 +188,33 @@ impl AbftLinear {
             let nt = self.n + 1;
             let c_temp = grow(c_temp, m * nt);
             gemm_requant_exec_into(x, &self.abft.packed, m, &epi, c_temp, out);
-            let verdict = self.abft.verify(c_temp, m);
-            report.rows_flagged = verdict.err_count();
+            let mut rows_verified = m;
+            let verdict = match mode {
+                DetectionMode::Full => self.abft.verify(c_temp, m),
+                DetectionMode::Sampled(n) => {
+                    let phase = telem.map_or(0, |t| t.sample_phase(m as u64));
+                    rows_verified = AbftGemm::sampled_rows(m, n, phase);
+                    self.abft.verify_sampled(c_temp, m, n, phase)
+                }
+                DetectionMode::BoundOnly => {
+                    if self.abft.verify_aggregate(c_temp, m) {
+                        Verdict { corrupted_rows: Vec::new() }
+                    } else {
+                        // The aggregate cannot localize: report one flag
+                        // and leave recovery to the engine's batch retry.
+                        report.rows_flagged = 1;
+                        Verdict { corrupted_rows: Vec::new() }
+                    }
+                }
+                DetectionMode::Off => {
+                    rows_verified = 0;
+                    Verdict { corrupted_rows: Vec::new() }
+                }
+            };
+            report.rows_flagged += verdict.err_count();
+            if let Some(t) = telem {
+                t.record(m as u64, rows_verified as u64, report.rows_flagged as u64);
+            }
             if self.protection == Protection::DetectRecompute && !verdict.clean() {
                 for &row in &verdict.corrupted_rows {
                     self.abft.recompute_row(x, row, c_temp, m);

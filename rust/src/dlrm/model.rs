@@ -6,8 +6,9 @@ use crate::abft::{EbChecksum, FusedEbAbft};
 use crate::dlrm::config::{DlrmConfig, Protection};
 use crate::dlrm::interaction::pairwise_interaction_into;
 use crate::dlrm::layer::{AbftLinear, LayerReport};
-use crate::dlrm::scratch::{grow, EbScratch, InferenceScratch};
+use crate::dlrm::scratch::{grow, EbScratch, GemmScratch, InferenceScratch};
 use crate::embedding::{bag_sum_8, QuantTable8};
+use crate::policy::PolicyHandle;
 use crate::quant::QParams;
 use crate::util::rng::Pcg32;
 use crate::util::threadpool::EB_PAR_MIN_WORK;
@@ -169,6 +170,12 @@ pub struct DlrmModel {
     /// wastes its range and the head saturates.
     pub top_mean: Vec<f32>,
     pub top_std: Vec<f32>,
+    /// Adaptive-detection attachment ([`crate::policy`]): per-site mode
+    /// cells + telemetry, written by `Engine::with_policy`. Detached by
+    /// default — every site then behaves as `Full`, bit-identical to the
+    /// pre-policy model. GEMM site order is bottom layers, top layers,
+    /// head; EB sites are global table ids.
+    pub policy: PolicyHandle,
 }
 
 impl DlrmModel {
@@ -213,6 +220,7 @@ impl DlrmModel {
             top_qparams: QParams::fit_u8(-1.0, 1.0), // placeholder
             top_mean: Vec::new(),
             top_std: Vec::new(),
+            policy: PolicyHandle::default(),
         };
         model.calibrate(&mut rng);
         model
@@ -306,9 +314,12 @@ impl DlrmModel {
             }
         }
         let mut width = top_in_dim;
-        for layer in &self.top {
+        let nb = self.bottom.len();
+        for (j, layer) in self.top.iter().enumerate() {
             grow(&mut scratch.act_b, batch * layer.n);
-            let rep = layer.forward_into(
+            let rep = self.gemm_site_forward(
+                layer,
+                nb + j,
                 &scratch.act_a[..batch * width],
                 batch,
                 qp,
@@ -321,7 +332,9 @@ impl DlrmModel {
             std::mem::swap(&mut scratch.act_a, &mut scratch.act_b);
         }
         grow(&mut scratch.act_b, batch);
-        let rep = self.head.forward_into(
+        let rep = self.gemm_site_forward(
+            &self.head,
+            nb + self.top.len(),
             &scratch.act_a[..batch * width],
             batch,
             qp,
@@ -364,9 +377,11 @@ impl DlrmModel {
         // buffers; the current input always sits in `act_a`).
         let mut x_qp = self.dense_qparams;
         let mut width = self.cfg.num_dense;
-        for layer in &self.bottom {
+        for (i, layer) in self.bottom.iter().enumerate() {
             grow(&mut scratch.act_b, batch * layer.n);
-            let rep = layer.forward_into(
+            let rep = self.gemm_site_forward(
+                layer,
+                i,
                 &scratch.act_a[..batch * width],
                 batch,
                 x_qp,
@@ -426,29 +441,69 @@ impl DlrmModel {
         report
     }
 
+    /// One protected-layer forward under the site's current policy mode,
+    /// with telemetry + per-mode served accounting (one relaxed cell
+    /// load per layer per batch; a detached [`PolicyHandle`] compiles
+    /// down to the plain `forward_into` call).
+    fn gemm_site_forward(
+        &self,
+        layer: &AbftLinear,
+        site: usize,
+        x: &[u8],
+        m: usize,
+        x_qparams: QParams,
+        gemm: &mut GemmScratch,
+        out: &mut [u8],
+    ) -> LayerReport {
+        let mode = self.policy.gemm_mode(site);
+        if let Some(s) = self.policy.sites() {
+            s.note_served(mode, m as u64);
+        }
+        layer.forward_policied(x, m, x_qparams, mode, self.policy.gemm_telem(site), gemm, out)
+    }
+
     /// All tables' bags for one request, written into its `(1+T)·d`
-    /// feature row (slot 0 already holds the bottom-MLP output).
+    /// feature row (slot 0 already holds the bottom-MLP output). Each
+    /// table is a policy site: its [`crate::policy::DetectionMode`]
+    /// decides whether the bag runs the fused checked kernel, an
+    /// unchecked gather (`Sampled` skip / `Off`), or the relaxed-bound
+    /// check (`BoundOnly`) — all bit-identical in output on clean data.
     fn eb_for_request(&self, req: &DlrmRequest, fchunk: &mut [f32], flags: &mut EbStageReport) {
         let d = self.cfg.embedding_dim;
         for (t, (table, fused)) in self.tables.iter().zip(&self.fused).enumerate() {
             let indices = &req.sparse[t];
             let out = &mut fchunk[(t + 1) * d..(t + 2) * d];
-            if self.cfg.protection.enabled() {
-                // Fused gather+reduce+verify: same random-access streams
-                // as the unprotected bag (abft::eb §Perf).
-                let mut bad = fused.bag_sum_checked(table, indices, None, true, out);
-                if bad {
-                    flags.flagged += 1;
-                    if self.cfg.protection == Protection::DetectRecompute {
-                        flags.recomputed += 1;
-                        bad = fused.bag_sum_checked(table, indices, None, true, out);
-                        if bad {
-                            flags.unrecovered += 1;
-                        }
+            if !self.cfg.protection.enabled() {
+                bag_sum_8(table, indices, None, true, out);
+                continue;
+            }
+            let (telem, check, bound_scale) = self.policy.eb_bag_policy(t);
+            if !check {
+                bag_sum_8(table, indices, None, true, out);
+                if let Some(tl) = telem {
+                    tl.record(1, 0, 0);
+                }
+                continue;
+            }
+            // Fused gather+reduce+verify: same random-access streams
+            // as the unprotected bag (abft::eb §Perf).
+            let mut bad =
+                fused.bag_sum_checked_scaled(table, indices, None, true, bound_scale, out);
+            let mut bag_flags = 0u64;
+            if bad {
+                bag_flags = 1;
+                flags.flagged += 1;
+                if self.cfg.protection == Protection::DetectRecompute {
+                    flags.recomputed += 1;
+                    bad = fused
+                        .bag_sum_checked_scaled(table, indices, None, true, bound_scale, out);
+                    if bad {
+                        flags.unrecovered += 1;
                     }
                 }
-            } else {
-                bag_sum_8(table, indices, None, true, out);
+            }
+            if let Some(tl) = telem {
+                tl.record(1, 1, bag_flags);
             }
         }
     }

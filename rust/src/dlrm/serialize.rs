@@ -356,6 +356,7 @@ impl DlrmModel {
             top_qparams,
             top_mean,
             top_std,
+            policy: crate::policy::PolicyHandle::default(),
         })
     }
 }

@@ -6,12 +6,15 @@
 use super::{flip_i32, flip_u8, restore_u8, BitRange, FaultModel};
 use crate::abft::eb::CheckPrecision;
 use crate::abft::{AbftGemm, EbChecksum};
+use crate::coordinator::Engine;
 use crate::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
 use crate::embedding::{bag_sum_4, embedding_bag_8, QuantTable4, QuantTable8};
+use crate::policy::{DetectionMode, PolicyConfig};
 use crate::shard::{ShardPlan, ShardRouter, ShardStore};
 use crate::util::rng::Pcg32;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Where a GEMM campaign injects.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -506,6 +509,171 @@ pub fn run_shard_campaign(cfg: &ShardCampaignConfig) -> ShardCampaignResult {
     result
 }
 
+/// Configuration for the adaptive-policy campaign: the control-plane
+/// extension of the §VI-B methodology. One persistent replica fault is
+/// injected while the victim table's site is in `Sampled` mode; the
+/// drill asserts the full loop: sampled check catches the fault →
+/// same-replica retry → quarantine + failover (the corrupted values are
+/// re-served from a clean sibling) → the controller escalates the site
+/// (and its co-sharded neighbors) to `Full` within one tick → repair →
+/// quiet ticks decay the site back to the budget target.
+#[derive(Clone, Debug)]
+pub struct AdaptiveCampaignConfig {
+    pub num_tables: usize,
+    pub rows: usize,
+    pub dim: usize,
+    pub pooling: usize,
+    /// Requests per batch; keep `>= ` the EB target sample rate so every
+    /// batch checks at least one bag of the victim table.
+    pub batch: usize,
+    pub seed: u64,
+    /// Controller configuration; `tick` is forced to manual — the
+    /// campaign drives deterministic ticks itself.
+    pub policy: PolicyConfig,
+}
+
+impl Default for AdaptiveCampaignConfig {
+    fn default() -> Self {
+        Self {
+            num_tables: 2,
+            rows: 300,
+            dim: 16,
+            pooling: 8,
+            batch: 8,
+            seed: 0xADA,
+            policy: PolicyConfig {
+                cooldown_ticks: 2,
+                decay_patience: 1,
+                ..PolicyConfig::default()
+            },
+        }
+    }
+}
+
+/// Tallies and checkpoints from one adaptive campaign.
+#[derive(Clone, Debug, Default)]
+pub struct AdaptiveCampaignResult {
+    /// Budget-target sample rate of the EB class (`ceil(overhead/budget)`).
+    pub target_rate: u32,
+    /// Ticks for the quiet initial decay from `Full` to the target.
+    pub decay_ticks: usize,
+    /// Site reached the target mode before injection.
+    pub decayed: bool,
+    /// Ticks from the detecting batch to the site reading `Full`.
+    pub escalation_ticks: usize,
+    pub escalated: bool,
+    /// Co-sharded neighbor table also escalated to `Full`.
+    pub neighbor_escalated: bool,
+    /// Batches whose fault WAS detected but whose served scores differed
+    /// from clean — must be 0 (detection ⇒ failover ⇒ clean values).
+    pub detected_mismatches: usize,
+    /// Corrupt batches served undetected while sampled (coverage gap).
+    pub sampled_escapes: usize,
+    /// Ticks for the post-repair decay back to the target.
+    pub redecay_ticks: usize,
+    pub redecayed: bool,
+}
+
+/// Run the adaptive-policy campaign. See [`AdaptiveCampaignConfig`].
+pub fn run_adaptive_campaign(cfg: &AdaptiveCampaignConfig) -> AdaptiveCampaignResult {
+    let model_cfg = DlrmConfig {
+        num_dense: 4,
+        embedding_dim: cfg.dim,
+        bottom_mlp: vec![16, cfg.dim],
+        top_mlp: vec![16],
+        tables: vec![TableConfig { rows: cfg.rows, pooling: cfg.pooling }; cfg.num_tables],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed: cfg.seed ^ 0xADA7,
+    };
+    // Clean twin (same seed ⇒ bit-identical weights/tables) for
+    // reference scores.
+    let reference = DlrmModel::random(model_cfg.clone());
+    let engine = Engine::new(DlrmModel::random(model_cfg))
+        .with_shards(
+            ShardPlan::hash_placement(cfg.num_tables, 1, 2),
+            cfg.rows.max(1),
+        )
+        .with_policy(PolicyConfig { tick: Duration::ZERO, ..cfg.policy.clone() });
+    let sites = Arc::clone(engine.policy_sites().expect("policy attached"));
+    let store = Arc::clone(engine.shard_store().expect("sharded"));
+
+    let mut rng = Pcg32::new(cfg.seed);
+    let reqs = reference.synth_requests(cfg.batch, &mut rng);
+    let (clean, _) = reference.forward(&reqs);
+    let mut scores = vec![0f32; cfg.batch];
+    let mut result = AdaptiveCampaignResult::default();
+
+    // Budget math (mirrors the controller): target EB rate.
+    let target_n = ((cfg.policy.unit_costs.eb_full_overhead / cfg.policy.overhead_budget).ceil()
+        as u32)
+        .clamp(1, cfg.policy.max_sample);
+    result.target_rate = target_n;
+    let target = DetectionMode::Sampled(target_n);
+
+    // Phase 1: quiet traffic decays the victim site to the target.
+    while sites.eb[0].cell.load() != target && result.decay_ticks < 64 {
+        engine.score(&reqs, &mut scores);
+        engine.policy_tick();
+        result.decay_ticks += 1;
+    }
+    result.decayed = sites.eb[0].cell.load() == target;
+    if !result.decayed {
+        return result;
+    }
+
+    // Phase 2: persistent corruption of replica 0's copy of table 0 —
+    // the high bit of every row's first code, so any checked bag flags.
+    for row in 0..cfg.rows {
+        store.flip_table_byte(0, 0, row * cfg.dim, 0x80);
+    }
+
+    // Phase 3: serve under Sampled until the sampled check catches the
+    // fault, then verify the escalation lands within one tick.
+    for _ in 0..8 {
+        let pre = store.stats.detections.load(Ordering::Relaxed);
+        engine.score(&reqs, &mut scores);
+        let detected = store.stats.detections.load(Ordering::Relaxed) > pre;
+        let mismatch = scores != clean;
+        if detected {
+            if mismatch {
+                // Detection must imply failover to clean values.
+                result.detected_mismatches += 1;
+            }
+            while sites.eb[0].cell.load() != DetectionMode::Full && result.escalation_ticks < 3 {
+                engine.policy_tick();
+                result.escalation_ticks += 1;
+            }
+            result.escalated = sites.eb[0].cell.load() == DetectionMode::Full;
+            result.neighbor_escalated = cfg.num_tables < 2
+                || sites.eb[1].cell.load() == DetectionMode::Full;
+            break;
+        }
+        if mismatch {
+            result.sampled_escapes += 1;
+        }
+        engine.policy_tick();
+    }
+    if !result.escalated {
+        return result;
+    }
+
+    // Phase 4: repair the quarantined replica, then quiet ticks decay
+    // the site back inside the budget.
+    store.drain_repairs();
+    while sites.eb[0].cell.load() != target && result.redecay_ticks < 64 {
+        let pre = store.stats.detections.load(Ordering::Relaxed);
+        engine.score(&reqs, &mut scores);
+        if scores != clean && store.stats.detections.load(Ordering::Relaxed) > pre {
+            result.detected_mismatches += 1;
+        }
+        engine.policy_tick();
+        result.redecay_ticks += 1;
+    }
+    result.redecayed = sites.eb[0].cell.load() == target;
+    result
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -599,6 +767,23 @@ mod tests {
         assert!(r.served_detections > 0, "{r:?}");
         assert_eq!(r.detected_mismatches, 0, "{r:?}");
         assert!(r.failovers >= r.served_detections, "{r:?}");
+    }
+
+    #[test]
+    fn adaptive_campaign_escalates_within_one_tick_and_redecays() {
+        let cfg = AdaptiveCampaignConfig::default();
+        let r = run_adaptive_campaign(&cfg);
+        // ceil(0.20 / 0.05) — the default EB budget math.
+        assert_eq!(r.target_rate, 4, "{r:?}");
+        assert!(r.decayed, "site never reached the budget target: {r:?}");
+        assert!(r.escalated, "injected fault never escalated the site: {r:?}");
+        assert!(r.escalation_ticks <= 1, "escalation must land within one tick: {r:?}");
+        assert!(r.neighbor_escalated, "co-sharded table must escalate too: {r:?}");
+        // A detected corruption is never served: every detected batch
+        // failed over to the clean replica before responding.
+        assert_eq!(r.detected_mismatches, 0, "{r:?}");
+        assert!(r.redecayed, "site must decay back after repair + quiet: {r:?}");
+        assert!(r.redecay_ticks <= 16, "{r:?}");
     }
 
     #[test]

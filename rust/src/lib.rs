@@ -15,6 +15,8 @@
 //! * [`dlrm`] — the recommendation model built from the operators.
 //! * [`shard`] — replicated shard store + router: detection-driven
 //!   replica quarantine, failover, and checksum-verified repair.
+//! * [`policy`] — adaptive detection control plane: per-site detection
+//!   modes, telemetry, and the SLO-aware escalation controller.
 //! * [`coordinator`] — serving: batching, ABFT verification,
 //!   recompute-on-detect, metrics.
 //! * [`runtime`] — PJRT loader for the jax/Pallas-lowered model artifacts.
@@ -29,6 +31,7 @@ pub mod dlrm;
 pub mod embedding;
 pub mod fault;
 pub mod gemm;
+pub mod policy;
 pub mod quant;
 pub mod runtime;
 pub mod shard;

@@ -57,6 +57,7 @@ fn print_help() {
            serve        --addr 127.0.0.1:7878 [--config cfg.json | --model-path m.dlrm]\n\
                         --max-batch 32 --max-wait-ms 2 --protection detect_recompute\n\
                         --chaos-weight-p 0 --chaos-table-p 0 --scrub-stride 0\n\
+                        --policy-budget 0 --policy-tick-ms 50 --policy-bound-only false\n\
            bench        --which fig5|fig6|table2|table3|analysis|ablations|eb-fused|all\n\
                         [--quick true] [--scale N] [--runs N] [--threads N]\n\
            campaign     --op gemm|eb [--runs N] [--rows N] [--dim N]\n\
@@ -115,6 +116,36 @@ fn serve(cli: &Cli) -> Result<()> {
     if scrub_stride > 0 {
         engine = engine.with_scrubbing(scrub_stride);
         println!("background scrubbing: {scrub_stride} rows/table/batch");
+    }
+    // Adaptive detection control plane: a nonzero overhead budget
+    // attaches per-site policies + the background escalation controller.
+    let policy_budget: f64 = cli.flag("policy-budget", 0.0)?;
+    let policy_tick_ms: u64 = cli.flag("policy-tick-ms", 50u64)?;
+    let policy_bound_only: bool = cli.flag("policy-bound-only", false)?;
+    if policy_budget > 0.0 {
+        let cfg = dlrm_abft::policy::PolicyConfig {
+            overhead_budget: policy_budget,
+            allow_bound_only: policy_bound_only,
+            scrub_budget_base: cli.flag("policy-scrub-base", 256usize)?,
+            tick: Duration::from_millis(policy_tick_ms.max(1)),
+            ..Default::default()
+        };
+        if scrub_stride == 0 {
+            // The controller's scrub_budget knob (raised under
+            // persistent faults) needs scrubbers to pace; without this,
+            // the policy's proactive arm would be a silent no-op.
+            engine = engine.with_scrubbing(cfg.scrub_budget_base.max(1));
+            println!(
+                "background scrubbing auto-enabled (policy paces it at \
+                 {} rows/tick)",
+                cfg.scrub_budget_base
+            );
+        }
+        println!(
+            "adaptive detection: budget {policy_budget}, tick {policy_tick_ms}ms, \
+             bound-only {policy_bound_only}"
+        );
+        engine = engine.with_policy(cfg);
     }
     let policy = BatchPolicy {
         max_batch: cli.flag("max-batch", 32usize)?,

@@ -1,0 +1,642 @@
+//! The escalation controller: closes the loop from telemetry to
+//! detection intensity.
+//!
+//! # State machine (per site, evaluated once per tick)
+//!
+//! ```text
+//!            any flag in the tick's window delta
+//!   (any mode) ─────────────────────────────────► Full  [cooldown := C]
+//!                                                   │ + neighbors → Full
+//!        quiet tick: cooldown -= 1 … then           │
+//!        after P consecutive quiet ticks            ▼
+//!   Full → Sampled(2) → Sampled(4) → … → Sampled(n*) [→ BoundOnly [→ Off]]
+//!                 (one lattice step per P quiet ticks — never skips)
+//! ```
+//!
+//! * **Escalation is instant and contagious**: one flag snaps the site —
+//!   and its neighbors (adjacent MLP layers; co-sharded tables) — to
+//!   `Full` in the same tick, because real memory faults cluster
+//!   spatially (Ma et al., PAPERS.md) and a site that just flagged says
+//!   nothing about whether its neighbor's corruption sits below a
+//!   sampled check's coverage.
+//! * **Decay is slow and stepwise** (hysteresis): a site must be quiet
+//!   for `cooldown_ticks`, then each further `decay_patience` quiet
+//!   ticks buys exactly one lattice step down, stopping at the budget
+//!   target `n*`. A single flag resets the whole descent, so modes
+//!   cannot flap.
+//! * **Budget math**: the target sample rate is the smallest `n` with
+//!   `full_overhead / n ≤ overhead_budget`, i.e.
+//!   `n* = ceil(full_overhead / overhead_budget)` (clamped to
+//!   `max_sample`), per site class — the paper's <20% GEMM / <26% EB
+//!   ceilings become a steady-state dial instead of a compile-time
+//!   property.
+//! * **Persistent flags boost scrubbing**: a site flagging for
+//!   `persist_ticks` consecutive ticks means reactive detection keeps
+//!   hitting the same bad memory — the controller multiplies the
+//!   `scrub_budget` knob (rows per [`Engine::scrub_tick`]) by
+//!   `scrub_boost`, and restores the base rate once every site has been
+//!   quiet for a full window.
+//!
+//! [`Engine::scrub_tick`]: crate::coordinator::Engine::scrub_tick
+
+use crate::policy::mode::DetectionMode;
+use crate::policy::telemetry::{PolicySites, SiteKind, SiteSnapshot};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// Control-plane configuration. `Default` is conservative: 5% overhead
+/// budget, decay only as far as sampling (no `BoundOnly`/`Off`), and a
+/// manual tick (tests and the campaign drive [`PolicyController::step`]
+/// directly; the server passes a real interval).
+#[derive(Clone, Debug)]
+pub struct PolicyConfig {
+    /// Target per-site detection overhead fraction in quiet steady state.
+    pub overhead_budget: f64,
+    /// Calibrated overhead fraction of `Full`-mode detection per site
+    /// class (see [`UnitCosts`]; defaults follow the paper's measured
+    /// ranges).
+    pub unit_costs: UnitCosts,
+    /// Ticks a site must stay at `Full` after a flag before decay may
+    /// begin.
+    pub cooldown_ticks: u32,
+    /// Consecutive quiet ticks per single decay step (hysteresis).
+    pub decay_patience: u32,
+    /// Consecutive flagged ticks that trigger a scrub-budget boost.
+    pub persist_ticks: u32,
+    /// Multiplier applied to `scrub_budget_base` while faults persist.
+    pub scrub_boost: usize,
+    /// Baseline rows per `Engine::scrub_tick`.
+    pub scrub_budget_base: usize,
+    /// Sliding-window length in ticks (window stats in the snapshot).
+    pub window_ticks: usize,
+    /// Hard cap on the sampled rate (coverage floor: at least one unit
+    /// in `max_sample` is always verified while sampling).
+    pub max_sample: u32,
+    /// Allow decay past `Sampled(n*)` into `BoundOnly`.
+    pub allow_bound_only: bool,
+    /// Allow decay past `BoundOnly` into `Off` (requires
+    /// `allow_bound_only`).
+    pub allow_off: bool,
+    /// Eq-5 bound relaxation under `BoundOnly` on EB sites.
+    pub bound_relax: f64,
+    /// Controller tick interval; `Duration::ZERO` = manual ticking via
+    /// [`crate::coordinator::Engine::policy_tick`].
+    pub tick: Duration,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        Self {
+            overhead_budget: 0.05,
+            unit_costs: UnitCosts::default(),
+            cooldown_ticks: 4,
+            decay_patience: 2,
+            persist_ticks: 3,
+            scrub_boost: 4,
+            scrub_budget_base: 256,
+            window_ticks: 8,
+            max_sample: 64,
+            allow_bound_only: false,
+            allow_off: false,
+            bound_relax: 1e3,
+            tick: Duration::ZERO,
+        }
+    }
+}
+
+/// Calibrated full-mode detection overhead fractions per site class —
+/// the unit costs the budget math runs on. Defaults sit mid-range of the
+/// paper's measurements (§IV/§V: up to 20% GEMM, 4–26% EB depending on
+/// shape); operators calibrate them for a deployment from the
+/// `perf_policy` bench's Full-vs-Off mode rows and pass the measured
+/// ratios in their [`PolicyConfig`].
+#[derive(Clone, Copy, Debug)]
+pub struct UnitCosts {
+    /// verify-cost / gemm-cost for a `Full` protected GEMM.
+    pub gemm_full_overhead: f64,
+    /// checked-bag cost / plain-bag cost − 1 for a `Full` protected EB.
+    pub eb_full_overhead: f64,
+}
+
+impl Default for UnitCosts {
+    fn default() -> Self {
+        Self {
+            gemm_full_overhead: 0.12,
+            eb_full_overhead: 0.20,
+        }
+    }
+}
+
+impl UnitCosts {
+    fn class_overhead(&self, kind: SiteKind) -> f64 {
+        match kind {
+            SiteKind::Gemm => self.gemm_full_overhead,
+            SiteKind::Eb => self.eb_full_overhead,
+        }
+    }
+}
+
+/// What one controller tick did (folded into the serving metrics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StepReport {
+    /// Sites snapped to `Full` this tick (site itself + neighbors).
+    pub escalations: usize,
+    /// Single lattice steps down taken this tick.
+    pub decays: usize,
+    /// Scrub-budget boosts applied this tick.
+    pub scrub_boosts: usize,
+}
+
+/// Per-site controller state (controller-private; the hot path never
+/// sees this).
+#[derive(Debug, Default)]
+struct SiteCtl {
+    prev: SiteSnapshot,
+    window: VecDeque<SiteSnapshot>,
+    cooldown: u32,
+    quiet_streak: u32,
+    flagged_streak: u32,
+}
+
+/// The escalation controller. Owns the per-site window state; shares the
+/// [`PolicySites`] cells/counters with the hot path.
+pub struct PolicyController {
+    sites: Arc<PolicySites>,
+    /// Flat-index neighbor lists (gemm sites first, then eb) — escalation
+    /// fan-out targets.
+    neighbors: Vec<Vec<usize>>,
+    cfg: PolicyConfig,
+    ctl: Vec<SiteCtl>,
+    scrub_boosted: bool,
+    ticks: u64,
+}
+
+impl PolicyController {
+    pub fn new(sites: Arc<PolicySites>, neighbors: Vec<Vec<usize>>, cfg: PolicyConfig) -> Self {
+        assert_eq!(neighbors.len(), sites.len(), "one neighbor list per site");
+        let n = sites.len();
+        Self {
+            sites,
+            neighbors,
+            cfg,
+            ctl: (0..n).map(|_| SiteCtl::default()).collect(),
+            scrub_boosted: false,
+            ticks: 0,
+        }
+    }
+
+    pub fn config(&self) -> &PolicyConfig {
+        &self.cfg
+    }
+
+    /// Ticks executed so far (escalation-latency reporting).
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Budget-target sample rate for a site class:
+    /// `n* = ceil(full_overhead / budget)`, clamped to `[1, max_sample]`.
+    pub fn target_rate(&self, kind: SiteKind) -> u32 {
+        target_rate(&self.cfg, kind)
+    }
+
+    /// The mode decay lands on for a site class once fully quiet.
+    pub fn target_mode(&self, kind: SiteKind) -> DetectionMode {
+        let n = target_rate(&self.cfg, kind);
+        if self.cfg.allow_bound_only {
+            if self.cfg.allow_off {
+                DetectionMode::Off
+            } else {
+                DetectionMode::BoundOnly
+            }
+        } else if n <= 1 {
+            // Budget already satisfied at Full; nothing lower is opted in.
+            DetectionMode::Full
+        } else {
+            DetectionMode::Sampled(n)
+        }
+    }
+
+    /// Run one control tick: snapshot every site, difference into window
+    /// deltas, escalate / cool down / decay, and retune the scrub
+    /// budget. Deterministic given the telemetry stream — tests and the
+    /// adaptive campaign call this directly.
+    pub fn step(&mut self) -> StepReport {
+        self.ticks += 1;
+        let mut report = StepReport::default();
+        let n = self.sites.len();
+        let mut flagged = vec![false; n];
+
+        // Phase 1: collect this tick's deltas.
+        for i in 0..n {
+            let snap = self.sites.site(i).telem.snapshot();
+            let delta = snap.delta(&self.ctl[i].prev);
+            self.ctl[i].prev = snap;
+            self.ctl[i].window.push_back(delta);
+            while self.ctl[i].window.len() > self.cfg.window_ticks.max(1) {
+                self.ctl[i].window.pop_front();
+            }
+            flagged[i] = delta.flags > 0;
+        }
+
+        // Phase 2: escalation fan-out. A flag snaps the site and its
+        // neighbors to Full; every target gets the full cooldown.
+        let mut escalate = vec![false; n];
+        for i in 0..n {
+            if flagged[i] {
+                escalate[i] = true;
+                for &j in &self.neighbors[i] {
+                    escalate[j] = true;
+                }
+            }
+        }
+
+        // Phase 3: apply transitions. (Modes are read/written through the
+        // shared `sites` Arc; per-site controller state through `ctl` —
+        // field-disjoint borrows, no `&self` method calls in the loop.)
+        for i in 0..n {
+            let kind = if i < self.sites.gemm.len() { SiteKind::Gemm } else { SiteKind::Eb };
+            let mode = self.sites.site(i).cell.load();
+            let next = next_down(&self.cfg, mode, kind);
+            let ctl = &mut self.ctl[i];
+            if escalate[i] {
+                ctl.cooldown = self.cfg.cooldown_ticks;
+                ctl.quiet_streak = 0;
+                ctl.flagged_streak = if flagged[i] { ctl.flagged_streak + 1 } else { 0 };
+                if mode != DetectionMode::Full {
+                    self.sites.site(i).cell.store(DetectionMode::Full);
+                    report.escalations += 1;
+                }
+                continue;
+            }
+            ctl.flagged_streak = 0;
+            if ctl.cooldown > 0 {
+                ctl.cooldown -= 1;
+                ctl.quiet_streak = 0;
+                continue;
+            }
+            ctl.quiet_streak += 1;
+            if ctl.quiet_streak >= self.cfg.decay_patience.max(1) {
+                if let Some(next) = next {
+                    self.sites.site(i).cell.store(next);
+                    report.decays += 1;
+                }
+                ctl.quiet_streak = 0;
+            }
+        }
+
+        // Phase 4: scrub pacing. Persistent flags anywhere → boost; a
+        // full window of silence everywhere → back to base.
+        let persist = self
+            .ctl
+            .iter()
+            .any(|c| c.flagged_streak >= self.cfg.persist_ticks.max(1));
+        if persist && !self.scrub_boosted {
+            self.sites.scrub_budget.store(
+                self.cfg.scrub_budget_base * self.cfg.scrub_boost.max(1),
+                Ordering::Relaxed,
+            );
+            self.scrub_boosted = true;
+            report.scrub_boosts += 1;
+            self.sites.scrub_boosts.fetch_add(1, Ordering::Relaxed);
+        } else if self.scrub_boosted {
+            let all_quiet = self
+                .ctl
+                .iter()
+                .all(|c| c.window.iter().all(|d| d.flags == 0));
+            if all_quiet {
+                self.sites
+                    .scrub_budget
+                    .store(self.cfg.scrub_budget_base, Ordering::Relaxed);
+                self.scrub_boosted = false;
+            }
+        }
+
+        if report.escalations > 0 {
+            self.sites
+                .escalations
+                .fetch_add(report.escalations as u64, Ordering::Relaxed);
+        }
+        if report.decays > 0 {
+            self.sites
+                .decays
+                .fetch_add(report.decays as u64, Ordering::Relaxed);
+        }
+        report
+    }
+
+    /// Window stats of one flat site (summed deltas), for the metrics
+    /// snapshot.
+    pub fn window_stats(&self, flat: usize) -> SiteSnapshot {
+        let mut acc = SiteSnapshot::default();
+        for d in &self.ctl[flat].window {
+            acc.units += d.units;
+            acc.verified += d.verified;
+            acc.flags += d.flags;
+        }
+        acc
+    }
+
+    /// Estimated current detection-overhead fraction of one site: the
+    /// mode's relative cost × the class's calibrated full-mode overhead.
+    pub fn overhead_estimate(&self, flat: usize) -> f64 {
+        let mode = self.sites.site(flat).cell.load();
+        mode.relative_cost() * self.cfg.unit_costs.class_overhead(self.sites.kind(flat))
+    }
+}
+
+/// Budget-target sample rate: smallest `n` with `full_overhead/n ≤
+/// budget`, i.e. `ceil(full_overhead / budget)`, clamped to
+/// `[1, max_sample]`.
+fn target_rate(cfg: &PolicyConfig, kind: SiteKind) -> u32 {
+    let ovh = cfg.unit_costs.class_overhead(kind);
+    if cfg.overhead_budget <= 0.0 {
+        return 1;
+    }
+    let n = (ovh / cfg.overhead_budget).ceil() as u32;
+    n.clamp(1, cfg.max_sample)
+}
+
+/// One lattice step down from `mode` toward the class target, or `None`
+/// when already there. Never skips a level: Full → Sampled(2) → doubling
+/// → Sampled(n*) → [BoundOnly] → [Off], the latter two gated on opt-in.
+fn next_down(cfg: &PolicyConfig, mode: DetectionMode, kind: SiteKind) -> Option<DetectionMode> {
+    let target_n = target_rate(cfg, kind);
+    match mode {
+        DetectionMode::Full if target_n >= 2 => Some(DetectionMode::Sampled(2.min(target_n))),
+        DetectionMode::Full if cfg.allow_bound_only => Some(DetectionMode::BoundOnly),
+        DetectionMode::Full => None,
+        DetectionMode::Sampled(n) if n < target_n => {
+            Some(DetectionMode::Sampled((n * 2).min(target_n)))
+        }
+        DetectionMode::Sampled(_) if cfg.allow_bound_only => Some(DetectionMode::BoundOnly),
+        DetectionMode::Sampled(_) => None,
+        DetectionMode::BoundOnly if cfg.allow_off => Some(DetectionMode::Off),
+        DetectionMode::BoundOnly => None,
+        DetectionMode::Off => None,
+    }
+}
+
+/// Adjacency used for escalation fan-out: MLP layers neighbor the layers
+/// directly before/after them (a fault domain usually spans adjacent
+/// panels of one weight blob); embedding tables neighbor the tables
+/// co-located on the same shard when a placement is given (they share
+/// replica memory), else the adjacent table ids.
+pub fn build_neighbors(
+    gemm_sites: usize,
+    eb_sites: usize,
+    eb_groups: Option<&[Vec<usize>]>,
+) -> Vec<Vec<usize>> {
+    let mut out: Vec<Vec<usize>> = Vec::with_capacity(gemm_sites + eb_sites);
+    for i in 0..gemm_sites {
+        let mut nb = Vec::new();
+        if i > 0 {
+            nb.push(i - 1);
+        }
+        if i + 1 < gemm_sites {
+            nb.push(i + 1);
+        }
+        out.push(nb);
+    }
+    match eb_groups {
+        Some(groups) => {
+            // Table t's neighbors: the other tables of its group.
+            let mut by_table: Vec<Vec<usize>> = vec![Vec::new(); eb_sites];
+            for group in groups {
+                for &t in group {
+                    for &u in group {
+                        if u != t && t < eb_sites && u < eb_sites {
+                            by_table[t].push(gemm_sites + u);
+                        }
+                    }
+                }
+            }
+            out.extend(by_table);
+        }
+        None => {
+            for t in 0..eb_sites {
+                let mut nb = Vec::new();
+                if t > 0 {
+                    nb.push(gemm_sites + t - 1);
+                }
+                if t + 1 < eb_sites {
+                    nb.push(gemm_sites + t + 1);
+                }
+                out.push(nb);
+            }
+        }
+    }
+    out
+}
+
+/// Background controller thread: ticks at `cfg.tick` until dropped.
+/// The engine holds the controller in an `Arc<Mutex<_>>` so manual
+/// [`crate::coordinator::Engine::policy_tick`] calls and the thread
+/// serialize on the same state.
+pub struct ControllerThread {
+    shutdown: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl ControllerThread {
+    pub fn spawn(controller: Arc<Mutex<PolicyController>>, tick: Duration) -> Self {
+        assert!(tick > Duration::ZERO, "spawn needs a real tick interval");
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stop = Arc::clone(&shutdown);
+        let handle = thread::Builder::new()
+            .name("policy-controller".into())
+            .spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    thread::sleep(tick);
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    controller.lock().unwrap().step();
+                }
+            })
+            .expect("spawn policy controller");
+        Self {
+            shutdown,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl Drop for ControllerThread {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sites(gemm: usize, eb: usize) -> Arc<PolicySites> {
+        Arc::new(PolicySites::new(gemm, eb, 1e3, 256))
+    }
+
+    fn controller(s: &Arc<PolicySites>, cfg: PolicyConfig) -> PolicyController {
+        let nb = build_neighbors(s.gemm.len(), s.eb.len(), None);
+        PolicyController::new(Arc::clone(s), nb, cfg)
+    }
+
+    fn quick_cfg() -> PolicyConfig {
+        PolicyConfig {
+            overhead_budget: 0.05,
+            unit_costs: UnitCosts { gemm_full_overhead: 0.12, eb_full_overhead: 0.20 },
+            cooldown_ticks: 2,
+            decay_patience: 1,
+            persist_ticks: 2,
+            ..PolicyConfig::default()
+        }
+    }
+
+    #[test]
+    fn budget_math_targets() {
+        let s = sites(1, 1);
+        let c = controller(&s, quick_cfg());
+        // ceil(0.12/0.05)=3, ceil(0.20/0.05)=4
+        assert_eq!(c.target_rate(SiteKind::Gemm), 3);
+        assert_eq!(c.target_rate(SiteKind::Eb), 4);
+        assert_eq!(c.target_mode(SiteKind::Eb), DetectionMode::Sampled(4));
+    }
+
+    /// Table-driven decay: quiet ticks walk the lattice one step per
+    /// patience period, doubling the rate, capping at the target.
+    #[test]
+    fn quiet_decay_walks_lattice_without_skipping() {
+        let s = sites(0, 1);
+        let mut c = controller(&s, quick_cfg());
+        let mut seen = vec![s.eb[0].cell.load()];
+        for _ in 0..6 {
+            c.step();
+            seen.push(s.eb[0].cell.load());
+        }
+        use DetectionMode::*;
+        assert_eq!(
+            seen,
+            vec![Full, Sampled(2), Sampled(4), Sampled(4), Sampled(4), Sampled(4), Sampled(4)],
+            "decay must step Full→S2→S4 and hold at the target"
+        );
+        assert_eq!(s.decays.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn flag_escalates_site_and_neighbors_immediately() {
+        let s = sites(3, 0);
+        let mut c = controller(&s, quick_cfg());
+        // Decay everything to the target first.
+        for _ in 0..8 {
+            c.step();
+        }
+        assert_ne!(s.gemm[1].cell.load(), DetectionMode::Full);
+        // One flag on the middle site.
+        s.gemm[1].telem.record(10, 5, 1);
+        let rep = c.step();
+        assert_eq!(rep.escalations, 3, "site + both neighbors escalate");
+        for g in &s.gemm {
+            assert_eq!(g.cell.load(), DetectionMode::Full);
+        }
+        assert_eq!(s.escalations.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn cooldown_and_patience_gate_redecay() {
+        let cfg = quick_cfg(); // cooldown 2, patience 1
+        let s = sites(0, 1);
+        let mut c = controller(&s, cfg);
+        s.eb[0].telem.record(4, 4, 1);
+        c.step(); // escalation tick (already Full → no mode change, cooldown set)
+        assert_eq!(s.eb[0].cell.load(), DetectionMode::Full);
+        c.step(); // cooldown 2→1
+        c.step(); // cooldown 1→0
+        assert_eq!(s.eb[0].cell.load(), DetectionMode::Full, "still cooling");
+        c.step(); // first quiet tick past cooldown → one decay step
+        assert_eq!(s.eb[0].cell.load(), DetectionMode::Sampled(2));
+    }
+
+    #[test]
+    fn flapping_flags_pin_the_site_at_full() {
+        let s = sites(0, 1);
+        let mut c = controller(&s, quick_cfg());
+        for tick in 0..10 {
+            if tick % 2 == 0 {
+                s.eb[0].telem.record(4, 4, 1);
+            }
+            c.step();
+            assert_eq!(
+                s.eb[0].cell.load(),
+                DetectionMode::Full,
+                "alternating flags must never let the mode decay (tick {tick})"
+            );
+        }
+    }
+
+    #[test]
+    fn persistent_flags_boost_scrub_budget_then_quiet_restores() {
+        let cfg = quick_cfg(); // persist 2, boost 4, base 256
+        let s = sites(0, 1);
+        let mut c = controller(&s, cfg.clone());
+        assert_eq!(s.scrub_budget.load(Ordering::Relaxed), 256);
+        s.eb[0].telem.record(4, 4, 1);
+        c.step();
+        assert_eq!(s.scrub_budget.load(Ordering::Relaxed), 256, "one tick is not persistent");
+        s.eb[0].telem.record(4, 4, 1);
+        let rep = c.step();
+        assert_eq!(rep.scrub_boosts, 1);
+        assert_eq!(s.scrub_budget.load(Ordering::Relaxed), 256 * 4);
+        // Quiet until the whole window is silent → budget restored.
+        for _ in 0..cfg.window_ticks + 1 {
+            c.step();
+        }
+        assert_eq!(s.scrub_budget.load(Ordering::Relaxed), 256);
+        assert_eq!(s.scrub_boosts.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn bound_only_requires_opt_in() {
+        let mut cfg = quick_cfg();
+        cfg.allow_bound_only = true;
+        let s = sites(0, 1);
+        let mut c = controller(&s, cfg);
+        for _ in 0..10 {
+            c.step();
+        }
+        assert_eq!(s.eb[0].cell.load(), DetectionMode::BoundOnly);
+        // And never Off without its own opt-in.
+        for _ in 0..5 {
+            c.step();
+        }
+        assert_eq!(s.eb[0].cell.load(), DetectionMode::BoundOnly);
+    }
+
+    #[test]
+    fn shard_grouped_neighbors() {
+        let nb = build_neighbors(2, 4, Some(&[vec![0, 2], vec![1, 3]]));
+        assert_eq!(nb.len(), 6);
+        assert_eq!(nb[2], vec![2 + 2]); // table 0 ↔ table 2
+        assert_eq!(nb[3], vec![2 + 3]); // table 1 ↔ table 3
+        assert_eq!(nb[0], vec![1]); // layer adjacency untouched
+    }
+
+    #[test]
+    fn window_stats_sum_recent_deltas() {
+        let s = sites(0, 1);
+        let mut c = controller(&s, quick_cfg());
+        s.eb[0].telem.record(10, 5, 0);
+        c.step();
+        s.eb[0].telem.record(6, 3, 1);
+        c.step();
+        let w = c.window_stats(0);
+        assert_eq!(w.units, 16);
+        assert_eq!(w.verified, 8);
+        assert_eq!(w.flags, 1);
+    }
+}

@@ -1,0 +1,40 @@
+//! Adaptive detection control plane: SLO-aware per-operator detection
+//! policies with telemetry-driven escalation.
+//!
+//! The paper's detectors carry hard overhead ceilings (<20% GEMM, <26%
+//! EmbeddingBag) but run at a *compile-time fixed* intensity: every GEMM
+//! row and every bag is always fully verified regardless of the observed
+//! fault rate. This subsystem closes the loop from runtime telemetry to
+//! detection intensity, spending the overhead budget where faults
+//! actually appear (V-ABFT's adaptive-threshold insight + Ma et al.'s
+//! observation that DLRM fault impact is highly non-uniform across
+//! layers and tables — see PAPERS.md):
+//!
+//! * [`mode`] — the per-site [`DetectionMode`] lattice
+//!   (`Full > Sampled(n) > BoundOnly > Off`) and the lock-free
+//!   [`PolicyCell`] the hot path reads with one relaxed atomic load.
+//! * [`telemetry`] — per-site cumulative counters (units, verified
+//!   units, flags) fed by `AbftLinear`, the fused EB path, and the shard
+//!   router; the controller differences them into sliding windows.
+//! * [`controller`] — the background escalation state machine: quiet
+//!   sites decay stepwise toward the configured overhead budget; any
+//!   flag snaps the site and its neighbors back to `Full` for a
+//!   cooldown; persistent flags raise the shard/table scrub pacing via
+//!   the `scrub_budget` knob. Hysteresis everywhere — modes never flap.
+//!
+//! Safety invariant (tested in `rust/tests/prop.rs` and the
+//! `fused_epilogue`/`shard_integration` grids): **modes never change
+//! served values on clean data** — verification only observes
+//! accumulators and bag sums. `Full` is the default (a detached model is
+//! byte-for-byte the pre-policy engine), and `Sampled(1)` is exactly
+//! `Full` on every dispatch path.
+
+pub mod controller;
+pub mod mode;
+pub mod telemetry;
+
+pub use controller::{
+    build_neighbors, ControllerThread, PolicyConfig, PolicyController, StepReport, UnitCosts,
+};
+pub use mode::{DetectionMode, PolicyCell};
+pub use telemetry::{PolicyHandle, PolicySites, Site, SiteKind, SiteSnapshot, SiteTelemetry};

@@ -1,0 +1,181 @@
+//! Detection modes and the lock-free per-site policy cell.
+//!
+//! A **site** is one protected operator instance: an MLP layer (GEMM
+//! ABFT, Eq 3b) or an embedding table (EB ABFT, Eq 5). Each site carries
+//! a [`PolicyCell`] that the hot path reads with **one relaxed atomic
+//! load** per invocation; the background controller is the only writer.
+//!
+//! # Mode lattice (detection intensity, descending)
+//!
+//! ```text
+//!   Full  >  Sampled(2)  >  Sampled(4)  >  …  >  BoundOnly  >  Off
+//! ```
+//!
+//! * [`DetectionMode::Full`] — every row / bag verified. Bit-identical to
+//!   the pre-policy behavior and the default (a zeroed cell decodes to
+//!   `Full`, so an un-attached model is always fully protected).
+//! * [`DetectionMode::Sampled`]`(n)` — 1-in-`n` units verified, phase
+//!   carried by a per-site counter so coverage rotates across rows/bags
+//!   rather than pinning to the same indices. `Sampled(1)` is exactly
+//!   `Full` (property-tested in `rust/tests/prop.rs`).
+//! * [`DetectionMode::BoundOnly`] — the weakest still-on check: GEMM
+//!   collapses the per-row congruences into one batch-aggregate residue
+//!   (a single mod test; opposing-sign multi-fault deltas can cancel),
+//!   EB keeps the Eq-5 check but with the bound relaxed by the policy's
+//!   `bound_relax` factor (only gross corruption flags; low-significance
+//!   faults are left to the scrubber's exact integer compare).
+//! * [`DetectionMode::Off`] — no verification (the unchecked kernels).
+//!
+//! **Invariant**: on clean data every mode produces **bit-identical
+//! outputs** — verification only reads the accumulator / bag result, it
+//! never changes them — so mode changes can never move a served score.
+//! Modes trade *coverage* (detection probability and latency) against
+//! *overhead*, nothing else.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Detection intensity of one protected site. See the module docs for
+/// the lattice and semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DetectionMode {
+    /// Verify every unit (default; bit-identical to pre-policy behavior).
+    Full,
+    /// Verify 1-in-`n` units (`n >= 1`; `Sampled(1)` ≡ `Full`).
+    Sampled(u32),
+    /// Single aggregate / relaxed-bound check per invocation.
+    BoundOnly,
+    /// No verification.
+    Off,
+}
+
+/// Per-mode index used by the served-units counters (array of 4).
+pub const MODE_SLOTS: usize = 4;
+
+const TAG_FULL: u32 = 0;
+const TAG_SAMPLED: u32 = 1;
+const TAG_BOUND: u32 = 2;
+const TAG_OFF: u32 = 3;
+/// Sample rates are stored in the low 24 bits of the cell.
+const RATE_MASK: u32 = (1 << 24) - 1;
+
+impl DetectionMode {
+    /// Encode into the cell's u32. `Full` encodes to 0 so a zeroed cell
+    /// is the fully-protected default.
+    fn encode(self) -> u32 {
+        match self {
+            DetectionMode::Full => 0,
+            DetectionMode::Sampled(n) => (TAG_SAMPLED << 24) | (n.max(1) & RATE_MASK),
+            DetectionMode::BoundOnly => TAG_BOUND << 24,
+            DetectionMode::Off => TAG_OFF << 24,
+        }
+    }
+
+    fn decode(v: u32) -> Self {
+        match v >> 24 {
+            TAG_FULL => DetectionMode::Full,
+            TAG_SAMPLED => DetectionMode::Sampled((v & RATE_MASK).max(1)),
+            TAG_BOUND => DetectionMode::BoundOnly,
+            _ => DetectionMode::Off,
+        }
+    }
+
+    /// Slot in the per-mode served-units counters.
+    pub fn slot(self) -> usize {
+        match self {
+            DetectionMode::Full => 0,
+            DetectionMode::Sampled(_) => 1,
+            DetectionMode::BoundOnly => 2,
+            DetectionMode::Off => 3,
+        }
+    }
+
+    /// Human/JSON name of the mode (rate elided).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DetectionMode::Full => "full",
+            DetectionMode::Sampled(_) => "sampled",
+            DetectionMode::BoundOnly => "bound_only",
+            DetectionMode::Off => "off",
+        }
+    }
+
+    /// Estimated detection overhead of this mode relative to `Full`
+    /// (the controller's budget math): `Full` = 1, `Sampled(n)` = 1/n,
+    /// `BoundOnly` = the documented aggregate-check coefficient, `Off` =
+    /// 0. Multiply by the site class's calibrated full-mode overhead
+    /// fraction to estimate the site's current overhead.
+    pub fn relative_cost(self) -> f64 {
+        match self {
+            DetectionMode::Full => 1.0,
+            DetectionMode::Sampled(n) => 1.0 / n.max(1) as f64,
+            // One fused residue/relaxed-bound pass: reads every unit but
+            // drops the per-unit reduction + branch work.
+            DetectionMode::BoundOnly => 0.5,
+            DetectionMode::Off => 0.0,
+        }
+    }
+}
+
+/// Lock-free per-site mode cell: one relaxed load on the hot path, one
+/// relaxed store from the controller. Relaxed is sufficient — the mode
+/// only gates *whether* a check runs; it orders nothing.
+#[derive(Debug, Default)]
+pub struct PolicyCell(AtomicU32);
+
+impl PolicyCell {
+    pub fn new(mode: DetectionMode) -> Self {
+        Self(AtomicU32::new(mode.encode()))
+    }
+
+    #[inline]
+    pub fn load(&self) -> DetectionMode {
+        DetectionMode::decode(self.0.load(Ordering::Relaxed))
+    }
+
+    pub fn store(&self, mode: DetectionMode) {
+        self.0.store(mode.encode(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_roundtrip() {
+        for mode in [
+            DetectionMode::Full,
+            DetectionMode::Sampled(1),
+            DetectionMode::Sampled(2),
+            DetectionMode::Sampled(1000),
+            DetectionMode::BoundOnly,
+            DetectionMode::Off,
+        ] {
+            assert_eq!(DetectionMode::decode(mode.encode()), mode);
+        }
+    }
+
+    #[test]
+    fn zeroed_cell_is_full() {
+        let cell = PolicyCell::default();
+        assert_eq!(cell.load(), DetectionMode::Full);
+    }
+
+    #[test]
+    fn cell_store_load() {
+        let cell = PolicyCell::new(DetectionMode::Full);
+        cell.store(DetectionMode::Sampled(8));
+        assert_eq!(cell.load(), DetectionMode::Sampled(8));
+        cell.store(DetectionMode::BoundOnly);
+        assert_eq!(cell.load(), DetectionMode::BoundOnly);
+    }
+
+    #[test]
+    fn relative_costs_are_monotone_down_the_lattice() {
+        let full = DetectionMode::Full.relative_cost();
+        let s4 = DetectionMode::Sampled(4).relative_cost();
+        let off = DetectionMode::Off.relative_cost();
+        assert!(full > s4 && s4 > off);
+        assert_eq!(DetectionMode::Sampled(1).relative_cost(), full);
+    }
+}

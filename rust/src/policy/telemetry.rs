@@ -1,0 +1,317 @@
+//! Detection telemetry: the per-site counters the hot paths feed and the
+//! controller's sliding windows read.
+//!
+//! Hot-path cost is bounded by design: when no policy is attached
+//! ([`PolicyHandle`] is `None`) the only cost is an `Option` check; when
+//! attached, each protected invocation pays one relaxed mode load plus a
+//! handful of relaxed `fetch_add`s. All counters are **cumulative** —
+//! the controller snapshots them per tick and differences consecutive
+//! snapshots into its sliding window, so the hot path never touches a
+//! ring buffer or a lock.
+
+use crate::policy::mode::{DetectionMode, PolicyCell, MODE_SLOTS};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Cumulative counters of one protected site.
+#[derive(Debug, Default)]
+pub struct SiteTelemetry {
+    /// Units (GEMM rows / EB bags) that flowed through the site.
+    pub units: AtomicU64,
+    /// Units actually verified (== `units` under `Full`).
+    pub verified: AtomicU64,
+    /// Detection flags raised at this site.
+    pub flags: AtomicU64,
+    /// Sampling phase: advances by the unit count of every invocation so
+    /// `Sampled(n)` coverage rotates across rows/bags instead of pinning
+    /// to fixed indices.
+    sample_seq: AtomicU64,
+}
+
+impl SiteTelemetry {
+    /// Reserve `count` units of sampling phase; returns the old phase.
+    #[inline]
+    pub fn sample_phase(&self, count: u64) -> u64 {
+        self.sample_seq.fetch_add(count, Ordering::Relaxed)
+    }
+
+    /// Account one invocation's units / verified units / flags.
+    #[inline]
+    pub fn record(&self, units: u64, verified: u64, flags: u64) {
+        self.units.fetch_add(units, Ordering::Relaxed);
+        if verified > 0 {
+            self.verified.fetch_add(verified, Ordering::Relaxed);
+        }
+        if flags > 0 {
+            self.flags.fetch_add(flags, Ordering::Relaxed);
+        }
+    }
+
+    /// Point-in-time copy of the cumulative counters.
+    pub fn snapshot(&self) -> SiteSnapshot {
+        SiteSnapshot {
+            units: self.units.load(Ordering::Relaxed),
+            verified: self.verified.load(Ordering::Relaxed),
+            flags: self.flags.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One snapshot of a site's cumulative counters (controller-side).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SiteSnapshot {
+    pub units: u64,
+    pub verified: u64,
+    pub flags: u64,
+}
+
+impl SiteSnapshot {
+    /// Per-tick delta `self - prev` (saturating; counters never reset).
+    pub fn delta(&self, prev: &SiteSnapshot) -> SiteSnapshot {
+        SiteSnapshot {
+            units: self.units.saturating_sub(prev.units),
+            verified: self.verified.saturating_sub(prev.verified),
+            flags: self.flags.saturating_sub(prev.flags),
+        }
+    }
+}
+
+/// Which operator class a site protects (they have different calibrated
+/// full-mode overheads and therefore different budget targets).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SiteKind {
+    /// One MLP layer (bottom, top, or head — `Engine::layer_ref` order).
+    Gemm,
+    /// One embedding table.
+    Eb,
+}
+
+/// One protected site: its mode cell plus its telemetry.
+#[derive(Debug, Default)]
+pub struct Site {
+    pub cell: PolicyCell,
+    pub telem: SiteTelemetry,
+}
+
+/// The control plane's shared state: one [`Site`] per protected operator
+/// instance, the per-mode served-units counters, and the lifetime
+/// escalation/decay tallies. Shared (`Arc`) between the model (hot-path
+/// reads + telemetry writes), the controller (mode writes), and the
+/// engine (metrics snapshots).
+#[derive(Debug)]
+pub struct PolicySites {
+    /// GEMM sites in model layer order: bottom\[0..\], top\[0..\], head.
+    pub gemm: Vec<Site>,
+    /// EB sites, one per embedding table (global table id order).
+    pub eb: Vec<Site>,
+    /// Eq-5 bound relaxation factor applied under
+    /// [`DetectionMode::BoundOnly`] on EB sites.
+    pub bound_relax: f64,
+    /// Cumulative units served per mode (indexed by
+    /// [`DetectionMode::slot`]); the "per-mode served counters" in the
+    /// metrics snapshot.
+    pub served: [AtomicU64; MODE_SLOTS],
+    /// Lifetime controller events (mirrored into the metrics snapshot).
+    pub escalations: AtomicU64,
+    pub decays: AtomicU64,
+    pub scrub_boosts: AtomicU64,
+    /// Rows the scrubber may scan per `Engine::scrub_tick` (the
+    /// controller's `scrub_budget` knob; see `abft::scrub` for the exact
+    /// pacing contract).
+    pub scrub_budget: AtomicUsize,
+}
+
+impl PolicySites {
+    /// Build with every site at `Full` (the safe default).
+    pub fn new(gemm_sites: usize, eb_sites: usize, bound_relax: f64, scrub_budget: usize) -> Self {
+        Self {
+            gemm: (0..gemm_sites).map(|_| Site::default()).collect(),
+            eb: (0..eb_sites).map(|_| Site::default()).collect(),
+            bound_relax,
+            served: Default::default(),
+            escalations: AtomicU64::new(0),
+            decays: AtomicU64::new(0),
+            scrub_boosts: AtomicU64::new(0),
+            scrub_budget: AtomicUsize::new(scrub_budget),
+        }
+    }
+
+    /// Total site count (flat index space: gemm sites then eb sites —
+    /// the controller's neighbor map uses this space).
+    pub fn len(&self) -> usize {
+        self.gemm.len() + self.eb.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flat-index access (gemm sites first, then eb).
+    pub fn site(&self, flat: usize) -> &Site {
+        if flat < self.gemm.len() {
+            &self.gemm[flat]
+        } else {
+            &self.eb[flat - self.gemm.len()]
+        }
+    }
+
+    /// Flat index and kind of every site, for the controller.
+    pub fn kind(&self, flat: usize) -> SiteKind {
+        if flat < self.gemm.len() {
+            SiteKind::Gemm
+        } else {
+            SiteKind::Eb
+        }
+    }
+
+    /// Flat index of EB site `t` (global table id).
+    pub fn eb_flat(&self, t: usize) -> usize {
+        self.gemm.len() + t
+    }
+
+    /// Bump the per-mode served-units counter.
+    #[inline]
+    pub fn note_served(&self, mode: DetectionMode, units: u64) {
+        self.served[mode.slot()].fetch_add(units, Ordering::Relaxed);
+    }
+
+    /// Force every site to `mode` (benches / drills).
+    pub fn set_all(&self, mode: DetectionMode) {
+        for s in self.gemm.iter().chain(&self.eb) {
+            s.cell.store(mode);
+        }
+    }
+}
+
+/// The model's (optional) attachment to a policy table. `Default` is
+/// detached: every mode query answers `Full` and no telemetry is
+/// recorded — byte-for-byte the pre-policy behavior.
+#[derive(Clone, Debug, Default)]
+pub struct PolicyHandle(Option<Arc<PolicySites>>);
+
+impl PolicyHandle {
+    pub fn attached(sites: Arc<PolicySites>) -> Self {
+        Self(Some(sites))
+    }
+
+    #[inline]
+    pub fn sites(&self) -> Option<&Arc<PolicySites>> {
+        self.0.as_ref()
+    }
+
+    /// Mode of GEMM site `i` (model layer order); `Full` when detached.
+    #[inline]
+    pub fn gemm_mode(&self, i: usize) -> DetectionMode {
+        match &self.0 {
+            Some(s) => s.gemm[i].cell.load(),
+            None => DetectionMode::Full,
+        }
+    }
+
+    /// Telemetry of GEMM site `i`; `None` when detached.
+    #[inline]
+    pub fn gemm_telem(&self, i: usize) -> Option<&SiteTelemetry> {
+        self.0.as_ref().map(|s| &s.gemm[i].telem)
+    }
+
+    /// Mode of EB site `t` (global table id); `Full` when detached.
+    #[inline]
+    pub fn eb_mode(&self, t: usize) -> DetectionMode {
+        match &self.0 {
+            Some(s) => s.eb[t].cell.load(),
+            None => DetectionMode::Full,
+        }
+    }
+
+    #[inline]
+    pub fn eb_telem(&self, t: usize) -> Option<&SiteTelemetry> {
+        self.0.as_ref().map(|s| &s.eb[t].telem)
+    }
+
+    /// The EB bound-relaxation factor (1.0 when detached — never used on
+    /// the detached path, but a sane value regardless).
+    #[inline]
+    pub fn bound_relax(&self) -> f64 {
+        self.0.as_ref().map_or(1.0, |s| s.bound_relax)
+    }
+
+    /// One bag's policy decision at EB site `t` — the single dispatch
+    /// both the local EB stage and the shard router call, so the
+    /// sampled/bound semantics (and the Sampled(1) ≡ Full invariant)
+    /// cannot drift between serving topologies. Loads the mode, counts
+    /// the served unit, advances the sampling phase when sampling, and
+    /// returns `(site telemetry, run-the-checked-kernel, Eq-5 bound
+    /// scale)`. Detached: `(None, check, 1.0)` — the Full behavior.
+    #[inline]
+    pub fn eb_bag_policy(&self, t: usize) -> (Option<&SiteTelemetry>, bool, f64) {
+        let Some(sites) = self.sites() else {
+            return (None, true, 1.0);
+        };
+        let mode = sites.eb[t].cell.load();
+        sites.note_served(mode, 1);
+        let telem = &sites.eb[t].telem;
+        let (check, scale) = match mode {
+            DetectionMode::Full => (true, 1.0),
+            DetectionMode::Sampled(n) => (telem.sample_phase(1) % n.max(1) as u64 == 0, 1.0),
+            DetectionMode::BoundOnly => (true, sites.bound_relax),
+            DetectionMode::Off => (false, 1.0),
+        };
+        (Some(telem), check, scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detached_handle_is_full_everywhere() {
+        let h = PolicyHandle::default();
+        assert_eq!(h.gemm_mode(0), DetectionMode::Full);
+        assert_eq!(h.eb_mode(7), DetectionMode::Full);
+        assert!(h.gemm_telem(0).is_none());
+        assert!(h.sites().is_none());
+    }
+
+    #[test]
+    fn attached_handle_reads_cells() {
+        let sites = Arc::new(PolicySites::new(3, 2, 1e3, 256));
+        sites.gemm[1].cell.store(DetectionMode::Sampled(4));
+        sites.eb[0].cell.store(DetectionMode::Off);
+        let h = PolicyHandle::attached(Arc::clone(&sites));
+        assert_eq!(h.gemm_mode(0), DetectionMode::Full);
+        assert_eq!(h.gemm_mode(1), DetectionMode::Sampled(4));
+        assert_eq!(h.eb_mode(0), DetectionMode::Off);
+        assert_eq!(h.eb_mode(1), DetectionMode::Full);
+    }
+
+    #[test]
+    fn snapshots_difference_into_deltas() {
+        let t = SiteTelemetry::default();
+        t.record(10, 5, 0);
+        let a = t.snapshot();
+        t.record(6, 3, 2);
+        let b = t.snapshot();
+        let d = b.delta(&a);
+        assert_eq!(d, SiteSnapshot { units: 6, verified: 3, flags: 2 });
+    }
+
+    #[test]
+    fn sample_phase_advances_by_count() {
+        let t = SiteTelemetry::default();
+        assert_eq!(t.sample_phase(8), 0);
+        assert_eq!(t.sample_phase(3), 8);
+        assert_eq!(t.sample_phase(1), 11);
+    }
+
+    #[test]
+    fn flat_index_space_covers_both_classes() {
+        let sites = PolicySites::new(2, 3, 1e3, 128);
+        assert_eq!(sites.len(), 5);
+        assert_eq!(sites.kind(1), SiteKind::Gemm);
+        assert_eq!(sites.kind(2), SiteKind::Eb);
+        assert_eq!(sites.eb_flat(2), 4);
+        sites.set_all(DetectionMode::Sampled(2));
+        assert_eq!(sites.site(4).cell.load(), DetectionMode::Sampled(2));
+    }
+}

@@ -83,11 +83,13 @@ impl ShardRouter {
         &self,
         shard: &Shard,
         requests: &[DlrmRequest],
-        d: usize,
-        protection: Protection,
+        model: &DlrmModel,
         rep: &mut EbStageReport,
         scratch: &mut [f32],
     ) {
+        let d = model.cfg.embedding_dim;
+        let protection = model.cfg.protection;
+        let policy = &model.policy;
         let slots = shard.tables.len();
         debug_assert_eq!(scratch.len(), requests.len() * slots * d);
         let store = &*self.store;
@@ -124,19 +126,39 @@ impl ShardRouter {
                                     bag_sum_8(&data.tables[slot], indices, None, true, out);
                                     continue;
                                 }
-                                let mut bad = data.fused[slot]
-                                    .bag_sum_checked(&data.tables[slot], indices, None, true, out);
+                                // Per-site policy: the same dispatch as
+                                // the local stage (the table is the site
+                                // whichever replica serves it).
+                                let (telem, check, bound_scale) = policy.eb_bag_policy(t);
+                                if !check {
+                                    bag_sum_8(&data.tables[slot], indices, None, true, out);
+                                    if let Some(tl) = telem {
+                                        tl.record(1, 0, 0);
+                                    }
+                                    continue;
+                                }
+                                let mut bad = data.fused[slot].bag_sum_checked_scaled(
+                                    &data.tables[slot],
+                                    indices,
+                                    None,
+                                    true,
+                                    bound_scale,
+                                    out,
+                                );
+                                let mut bag_flags = 0u64;
                                 if bad {
+                                    bag_flags = 1;
                                     local.shard_detections += 1;
                                     if protection == Protection::DetectRecompute {
                                         // Same-replica retry: transient
                                         // faults clear here.
                                         local.recomputed += 1;
-                                        bad = data.fused[slot].bag_sum_checked(
+                                        bad = data.fused[slot].bag_sum_checked_scaled(
                                             &data.tables[slot],
                                             indices,
                                             None,
                                             true,
+                                            bound_scale,
                                             out,
                                         );
                                         if bad {
@@ -148,6 +170,9 @@ impl ShardRouter {
                                         // no failover).
                                         local.flagged += 1;
                                     }
+                                }
+                                if let Some(tl) = telem {
+                                    tl.record(1, 1, bag_flags);
                                 }
                             }
                         }
@@ -206,7 +231,6 @@ impl EbStage for ShardRouter {
             model.tables.len(),
             "router store was built for a different model"
         );
-        let protection = model.cfg.protection;
         let shards = self.store.shards();
 
         // Per-shard fan-out buffers + tallies come from the caller's
@@ -233,13 +257,13 @@ impl EbStage for ShardRouter {
             pool.scope(|s| {
                 for ((shard, buf), rep) in jobs {
                     let scr = &mut buf[..batch * shard.tables.len() * d];
-                    s.spawn(move || self.run_shard(shard, requests, d, protection, rep, scr));
+                    s.spawn(move || self.run_shard(shard, requests, model, rep, scr));
                 }
             });
         } else {
             for ((shard, buf), rep) in jobs {
                 let scr = &mut buf[..batch * shard.tables.len() * d];
-                self.run_shard(shard, requests, d, protection, rep, scr);
+                self.run_shard(shard, requests, model, rep, scr);
             }
         }
 

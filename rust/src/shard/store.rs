@@ -143,6 +143,10 @@ pub struct ShardStore {
     repair_q: Mutex<RepairQueue>,
     repair_cv: Condvar,
     scrub_stride: usize,
+    /// Flat (shard, replica, slot) segment cursor for the budget-paced
+    /// scrub ([`ShardStore::scrub_tick_budget`]) — carries deterministic
+    /// progress across replicas between ticks.
+    scrub_seg: Mutex<usize>,
 }
 
 impl ShardStore {
@@ -185,6 +189,7 @@ impl ShardStore {
             }),
             repair_cv: Condvar::new(),
             scrub_stride,
+            scrub_seg: Mutex::new(0),
         }
     }
 
@@ -360,10 +365,13 @@ impl ShardStore {
 
     /// Advance every healthy replica's scrubbers by one strip; corrupted
     /// rows quarantine their replica (the proactive arm of
-    /// detection-driven failover) and enqueue repairs. Returns
-    /// `(shard, replica, global_table, row)` hits.
-    pub fn scrub_tick(&self) -> Vec<(usize, usize, usize, usize)> {
+    /// detection-driven failover) and enqueue repairs. Returns the rows
+    /// scanned by **this** tick (callers must not derive it from the
+    /// shared cumulative stats — concurrent tickers would cross-count)
+    /// and the `(shard, replica, global_table, row)` hits.
+    pub fn scrub_tick(&self) -> (usize, Vec<(usize, usize, usize, usize)>) {
         let mut hits = Vec::new();
+        let mut scanned = 0usize;
         for sh in &self.shards {
             for (r, rep) in sh.replicas.iter().enumerate() {
                 if rep.state.load(Ordering::Acquire) != HEALTHY {
@@ -375,6 +383,7 @@ impl ShardStore {
                     let mut scrub = rep.scrub.lock().unwrap();
                     for (slot, &t) in sh.tables.iter().enumerate() {
                         let report = scrub[slot].scrub_step(&data.tables[slot], &self.checksums[t]);
+                        scanned += report.rows_scanned;
                         self.stats
                             .scrubbed_rows
                             .fetch_add(report.rows_scanned as u64, Ordering::Relaxed);
@@ -390,7 +399,84 @@ impl ShardStore {
                 }
             }
         }
-        hits
+        (scanned, hits)
+    }
+
+    /// Budget-paced scrub: scan up to `budget` rows total this tick,
+    /// resuming exactly where the previous tick stopped — a flat
+    /// (shard, replica, slot) segment cursor carries progress **across
+    /// replicas**, and each slot's [`Scrubber`] carries the intra-table
+    /// row cursor, so `scrub_budget` pacing is exact: every tick scans
+    /// `budget` rows (unless every segment is quarantined or empty) and
+    /// consecutive ticks tile the whole healthy store without gaps or
+    /// overlap. Segments on non-Healthy replicas are skipped (they are
+    /// already queued for repair). Corrupted rows quarantine their
+    /// replica exactly like [`ShardStore::scrub_tick`] hits. Returns
+    /// `(rows_scanned, hits)` with hits as `(shard, replica, table,
+    /// row)`.
+    pub fn scrub_tick_budget(&self, budget: usize) -> (usize, Vec<(usize, usize, usize, usize)>) {
+        let mut hits = Vec::new();
+        let segs: usize = self
+            .shards
+            .iter()
+            .map(|sh| sh.replicas.len() * sh.tables.len())
+            .sum();
+        if segs == 0 || budget == 0 {
+            return (0, hits);
+        }
+        let mut scanned = 0usize;
+        let mut cursor = self.scrub_seg.lock().unwrap();
+        let mut skipped = 0usize;
+        while scanned < budget && skipped < segs {
+            let seg = *cursor % segs;
+            let (s, r, slot) = self.seg_coords(seg);
+            let rep = &self.shards[s].replicas[r];
+            if rep.state.load(Ordering::Acquire) != HEALTHY {
+                *cursor = (seg + 1) % segs;
+                skipped += 1;
+                continue;
+            }
+            let t = self.shards[s].tables[slot];
+            let report = {
+                let data = rep.data.read().unwrap();
+                let mut scrub = rep.scrub.lock().unwrap();
+                scrub[slot].scrub_step_rows(&data.tables[slot], &self.checksums[t], budget - scanned)
+            };
+            if report.rows_scanned == 0 {
+                *cursor = (seg + 1) % segs;
+                skipped += 1;
+                continue;
+            }
+            skipped = 0;
+            scanned += report.rows_scanned;
+            self.stats
+                .scrubbed_rows
+                .fetch_add(report.rows_scanned as u64, Ordering::Relaxed);
+            let dirty = !report.corrupted_rows.is_empty();
+            for row in report.corrupted_rows {
+                self.stats.scrub_hits.fetch_add(1, Ordering::Relaxed);
+                hits.push((s, r, t, row));
+            }
+            if dirty {
+                self.quarantine(s, r);
+            }
+            if report.wrapped {
+                *cursor = (seg + 1) % segs;
+            }
+        }
+        (scanned, hits)
+    }
+
+    /// Map a flat scrub segment index to (shard, replica, slot).
+    fn seg_coords(&self, mut seg: usize) -> (usize, usize, usize) {
+        for (s, sh) in self.shards.iter().enumerate() {
+            let n = sh.replicas.len() * sh.tables.len();
+            if seg < n {
+                return (s, seg / sh.tables.len(), seg % sh.tables.len());
+            }
+            seg -= n;
+        }
+        unreachable!("scrub segment out of range")
     }
 
     /// One full scrub pass over every healthy replica (campaigns /
@@ -645,7 +731,9 @@ mod tests {
         let shard = store.flip_table_byte(1, 1, 7, 0x01);
         let mut hits = Vec::new();
         for _ in 0..16 {
-            hits.extend(store.scrub_tick());
+            let (rows, h) = store.scrub_tick();
+            assert!(rows > 0, "healthy replicas must advance");
+            hits.extend(h);
             if !hits.is_empty() {
                 break;
             }
@@ -656,6 +744,43 @@ mod tests {
         assert_eq!(store.replica_state(shard, 1), ReplicaState::Quarantined);
         assert_eq!(store.drain_repairs(), 1);
         assert_eq!(store.replica_state(shard, 1), ReplicaState::Healthy);
+    }
+
+    #[test]
+    fn budget_scrub_is_exactly_paced_and_covers_every_replica() {
+        let (_, store) = store(2, 2);
+        // Corrupt a low bit on one replica copy — only the exact scrub
+        // sees it.
+        let shard = store.flip_table_byte(2, 1, 5, 0x01);
+        // Total healthy rows: (60+40+30) tables × 2 replicas = 260.
+        let total_rows = 2 * (60 + 40 + 30);
+        let mut scanned = 0usize;
+        let mut hits = Vec::new();
+        let mut ticks = 0;
+        while scanned < total_rows {
+            let (rows, h) = store.scrub_tick_budget(25);
+            assert!(rows <= 25);
+            assert!(rows > 0, "healthy segments remain, budget must be spent");
+            scanned += rows;
+            hits.extend(h);
+            ticks += 1;
+            if !hits.is_empty() {
+                break;
+            }
+        }
+        // Exact pacing: every tick scanned the full 25 until the find.
+        assert_eq!(scanned, ticks * 25);
+        assert_eq!(hits.len(), 1);
+        let (s, r, t, _row) = hits[0];
+        assert_eq!((s, r, t), (shard, 1, 2));
+        assert_eq!(store.replica_state(shard, 1), ReplicaState::Quarantined);
+        // Quarantined segments are skipped; the budget keeps flowing to
+        // the healthy ones.
+        let (rows, h) = store.scrub_tick_budget(25);
+        assert_eq!(rows, 25);
+        assert!(h.is_empty());
+        store.drain_repairs();
+        assert_eq!(store.quarantined_replicas(), 0);
     }
 
     #[test]

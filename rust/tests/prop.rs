@@ -4,10 +4,14 @@
 //! the panic message for direct reproduction.
 
 use dlrm_abft::abft::{encode_checksum_col, AbftGemm, EbChecksum};
+use dlrm_abft::dlrm::{AbftLinear, DlrmConfig, DlrmModel, Protection, TableConfig};
 use dlrm_abft::embedding::{bag_sum_8, QuantTable8};
 use dlrm_abft::gemm::{gemm_naive, PackedB};
+use dlrm_abft::policy::{DetectionMode, PolicyHandle, PolicySites, SiteTelemetry};
 use dlrm_abft::quant::{get_nibble, pack_nibbles, QParams};
 use dlrm_abft::util::rng::Pcg32;
+use dlrm_abft::util::scratch::GemmScratch;
+use std::sync::Arc;
 
 const CASES: usize = 60;
 
@@ -204,6 +208,111 @@ fn prop_eb_weighted_linearity() {
             (s2 - s1 * c as f64).abs() <= 1e-6 * s2.abs().max(1.0),
             "case {case}: {s2} != {c} * {s1}"
         );
+    });
+}
+
+#[test]
+fn prop_sampled_rate_one_is_identical_to_full_verify() {
+    // The policy invariant: Sampled(1) checks every row with the same
+    // verdict as Full, for any corruption pattern and any phase.
+    forall("sampled1=full", |rng, case| {
+        let (m, k, n) = rand_shape(rng);
+        let (a, b) = rand_ab(rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let (mut c, _) = abft.exec(&a, m);
+        for _ in 0..rng.gen_range(0, 5) {
+            let i = rng.gen_range(0, m * (n + 1));
+            c[i] ^= 1 << rng.gen_range_u32(31);
+        }
+        let full = abft.verify(&c, m);
+        for phase in [0u64, 1, 7, rng.next_u32() as u64] {
+            let sampled = abft.verify_sampled(&c, m, 1, phase);
+            assert_eq!(sampled, full, "case {case}: phase {phase} shape ({m},{k},{n})");
+        }
+        assert_eq!(AbftGemm::sampled_rows(m, 1, 3), m, "case {case}");
+    });
+}
+
+#[test]
+fn prop_sampled_one_layer_forward_bit_identical_to_full() {
+    // Layer level, every dispatch path (scalar/SIMD/parallel all route
+    // through forward_policied): Sampled(1) output bytes and report
+    // equal Full's, clean and corrupted.
+    forall("layer-sampled1", |rng, case| {
+        let m = rng.gen_range(1, 9);
+        let k = rng.gen_range(8, 64);
+        let n = rng.gen_range(8, 48);
+        let mut layer = AbftLinear::random(k, n, true, Protection::DetectRecompute, rng);
+        if case % 2 == 1 {
+            // Corrupt a packed payload byte so detection fires.
+            let idx = layer.abft().packed.offset(rng.gen_range(0, k), rng.gen_range(0, n));
+            let data = layer.abft_mut().packed.data_mut();
+            data[idx] = (data[idx] as u8 ^ 0x40) as i8;
+        }
+        let xf: Vec<f32> = (0..m * k).map(|_| rng.next_f32()).collect();
+        let (x, xp) = dlrm_abft::quant::quantize_slice_u8(&xf);
+        let mut scratch = GemmScratch::default();
+        let mut out_full = vec![0u8; m * n];
+        let rep_full = layer.forward_into(&x, m, xp, &mut scratch, &mut out_full);
+        let telem = SiteTelemetry::default();
+        let mut out_s1 = vec![0u8; m * n];
+        let rep_s1 = layer.forward_policied(
+            &x,
+            m,
+            xp,
+            DetectionMode::Sampled(1),
+            Some(&telem),
+            &mut scratch,
+            &mut out_s1,
+        );
+        assert_eq!(out_s1, out_full, "case {case}: Sampled(1) must be bit-identical");
+        assert_eq!(rep_s1, rep_full, "case {case}: identical reports");
+    });
+}
+
+#[test]
+fn prop_model_forward_bit_identical_across_modes_on_clean_data() {
+    // Whole-model invariant: on clean data, scores do not depend on the
+    // detection mode — Sampled(1)==Full==detached, and even Off/BoundOnly
+    // only change coverage, never values.
+    forall("model-modes", |rng, case| {
+        if case >= 8 {
+            return; // model builds are expensive; 8 seeds suffice
+        }
+        let cfg = DlrmConfig {
+            num_dense: 4,
+            embedding_dim: 8,
+            bottom_mlp: vec![12, 8],
+            top_mlp: vec![12],
+            tables: vec![
+                TableConfig { rows: 60, pooling: 4 },
+                TableConfig { rows: 40, pooling: 3 },
+            ],
+            protection: Protection::DetectRecompute,
+            dense_range: (0.0, 1.0),
+            seed: 0x517E ^ case as u64,
+        };
+        let mut model = DlrmModel::random(cfg);
+        let reqs = model.synth_requests(4, rng);
+        let (want, rep) = model.forward(&reqs);
+        assert!(rep.clean());
+        let gemm_sites = model.bottom.len() + model.top.len() + 1;
+        let sites = Arc::new(PolicySites::new(gemm_sites, model.tables.len(), 1e3, 64));
+        model.policy = PolicyHandle::attached(Arc::clone(&sites));
+        for mode in [
+            DetectionMode::Sampled(1),
+            DetectionMode::Sampled(3),
+            DetectionMode::BoundOnly,
+            DetectionMode::Off,
+        ] {
+            sites.set_all(mode);
+            let (got, rep) = model.forward(&reqs);
+            assert_eq!(got, want, "case {case}: mode {mode:?} moved clean scores");
+            assert!(rep.clean(), "case {case}: clean data flagged under {mode:?}");
+        }
+        // Sampled(1) verified every unit: telemetry agrees.
+        let eb0 = &sites.eb[0].telem;
+        assert!(eb0.units.load(std::sync::atomic::Ordering::Relaxed) > 0, "case {case}");
     });
 }
 

@@ -119,7 +119,9 @@ fn scrub_tick_finds_cold_corruption_the_request_path_misses() {
     let mut hits = Vec::new();
     for _ in 0..3 {
         // 3000 rows / 1000 stride
-        hits.extend(engine.scrub_tick());
+        let tick = engine.scrub_tick();
+        assert_eq!(tick.rows_scanned, 2 * 1000, "both tables advance one strip");
+        hits.extend(tick.hits);
     }
     assert_eq!(hits, vec![(1, 2999)]);
     assert_eq!(engine.metrics.scrub_hits.load(Ordering::Relaxed), 1);

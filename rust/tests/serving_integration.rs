@@ -5,6 +5,7 @@ use dlrm_abft::coordinator::{
     BatchPolicy, ChaosConfig, Client, Engine, ScoreRequest, Server,
 };
 use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
+use dlrm_abft::policy::PolicyConfig;
 use dlrm_abft::util::json::Json;
 use dlrm_abft::util::rng::Pcg32;
 use std::sync::Arc;
@@ -130,6 +131,51 @@ fn unprotected_engine_under_chaos_shows_why_abft_matters() {
         engine.metrics.detections.load(std::sync::atomic::Ordering::Relaxed),
         0
     );
+}
+
+#[test]
+fn policy_metrics_flow_through_the_server_metrics_op() {
+    // Policy-enabled engine behind the TCP front-end: scores are served
+    // normally, and the metrics op carries the policy counters + block.
+    let model = DlrmModel::random(cfg(Protection::DetectRecompute));
+    let reqs = requests(&model, 8, 7);
+    let clean: Vec<f32> = Engine::new(DlrmModel::random(cfg(Protection::DetectRecompute)))
+        .process_batch(reqs.clone())
+        .into_iter()
+        .map(|r| r.score)
+        .collect();
+    let engine = Arc::new(
+        Engine::new(model).with_policy(PolicyConfig {
+            cooldown_ticks: 1,
+            decay_patience: 1,
+            ..PolicyConfig::default()
+        }),
+    );
+    let server = Server::start("127.0.0.1:0", Arc::clone(&engine), policy()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+    for (req, want) in reqs.iter().zip(&clean) {
+        let resp = client.score(req).unwrap();
+        assert_eq!(resp.score, *want, "policy must not move clean scores");
+        assert!(!resp.detected);
+    }
+    // Quiet ticks decay sites toward the budget target.
+    for _ in 0..4 {
+        engine.policy_tick().expect("policy attached");
+    }
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("requests").and_then(Json::as_usize), Some(8));
+    assert!(m.get("policy_escalations").is_some(), "flat escalation counter");
+    assert!(
+        m.get("policy_decays").and_then(Json::as_usize).unwrap_or(0) > 0,
+        "quiet ticks must have decayed at least one site: {m}"
+    );
+    let served_full = m
+        .path(&["policy", "served", "full"])
+        .and_then(Json::as_usize)
+        .expect("per-mode served counters in the policy block");
+    assert!(served_full > 0, "traffic before decay served under Full");
+    assert!(m.path(&["policy", "sites"]).is_some());
+    server.stop();
 }
 
 #[test]

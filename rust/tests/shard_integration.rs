@@ -180,7 +180,7 @@ fn scrub_driven_quarantine_catches_cold_low_bit_corruption() {
     let shard = store.flip_table_byte(2, 1, victim_row * d + 3, 0x01);
     let mut hits = Vec::new();
     for _ in 0..(m.tables[2].rows / 64 + 2) * 4 {
-        hits.extend(store.scrub_tick());
+        hits.extend(store.scrub_tick().1);
         if !hits.is_empty() {
             break;
         }

@@ -35,7 +35,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static A: CountingAlloc = CountingAlloc;
 
-use dlrm_abft::coordinator::Engine;
+use dlrm_abft::coordinator::{Engine, ScoreRequest};
 use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
 use dlrm_abft::shard::ShardPlan;
 use dlrm_abft::util::rng::Pcg32;
@@ -83,6 +83,35 @@ fn steady_state_allocs(engine: &Engine, batch: usize, label: &str) {
     assert!(scores.iter().all(|s| (0.0..=1.0).contains(s)));
 }
 
+/// The socket-boundary half of the invariant: after one warmup parse at
+/// the steady request shape, [`ScoreRequest::parse_line_into`] reuses the
+/// slabbed `dense`/`sparse` buffers and performs zero allocations.
+fn steady_state_parse_allocs() {
+    let lines: Vec<String> = (0..4)
+        .map(|i| {
+            format!(
+                r#"{{"id":{i},"dense":[0.25,1.5,{i}.0,2.75],"sparse":[[1,2,3,4,{i}],[6,7,8]]}}"#
+            )
+        })
+        .collect();
+    let mut req = ScoreRequest::default();
+    // Warmup: grows dense + both inner sparse Vecs to the shape's
+    // high-water mark.
+    for line in &lines {
+        assert!(req.parse_line_into(line), "fast path must accept {line}");
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..20 {
+        for line in &lines {
+            assert!(req.parse_line_into(line));
+        }
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(after - before, 0, "parse path allocated in steady state");
+    assert_eq!(req.id, 3);
+    assert_eq!(req.sparse.len(), 2);
+}
+
 #[test]
 fn engine_score_steady_state_is_allocation_free() {
     // Unsharded: local EB stage, fused MLP pipeline, pooled arena.
@@ -93,4 +122,7 @@ fn engine_score_steady_state_is_allocation_free() {
     // EbScratch — the "router scratch allocates per batch" ROADMAP item.
     let sharded = Engine::new(tiny_model(0x21)).with_shards(ShardPlan::hash_placement(2, 2, 2), 64);
     steady_state_allocs(&sharded, 4, "sharded");
+
+    // Request parsing: the zero-alloc boundary extends to the socket.
+    steady_state_parse_allocs();
 }
