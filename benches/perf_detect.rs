@@ -1,0 +1,264 @@
+//! Fault-event pipeline perf harness (PR 5): emits `BENCH_PR5.json`.
+//!
+//! * Journal — record throughput (events/s), single-threaded and with 4
+//!   concurrent writers (the lock-free ring's contention story).
+//! * Fault path — per-call latency of a persistently-flagging protected
+//!   layer with the sink attached vs detached: the cost of journaling a
+//!   detection on top of detecting it.
+//! * Ladder — per-rung recovery latencies: `RecomputeUnit` (row
+//!   recompute + re-requantize), `RetryBatch` (a full batch forward),
+//!   `FailoverReplica` (router lap restart on a corrupt replica), and
+//!   `QuarantineAndRepair` (store repair — row-granular single-row vs
+//!   whole-copy heavy corruption, the PR 5 repair satellite).
+//!
+//! Env: `QUICK=1` shrinks iteration counts; `BENCH_OUT=path` overrides
+//! the output file. Run: `cargo bench --bench perf_detect`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dlrm_abft::detect::{
+    Detector, EventSink, FaultEvent, Journal, Recovery, Resolution, Severity, SiteCtx, SiteId,
+    UnitRef,
+};
+use dlrm_abft::dlrm::{AbftLinear, DlrmConfig, DlrmModel, Protection, TableConfig};
+use dlrm_abft::gemm::simd_active;
+use dlrm_abft::policy::DetectionMode;
+use dlrm_abft::quant::QParams;
+use dlrm_abft::shard::{ShardPlan, ShardRouter, ShardStore};
+use dlrm_abft::util::json::Json;
+use dlrm_abft::util::rng::Pcg32;
+use dlrm_abft::util::scratch::GemmScratch;
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+fn sample_event(i: u32) -> FaultEvent {
+    FaultEvent {
+        tick: i as u64,
+        site: SiteId::Eb(i % 8),
+        unit: UnitRef::Bag { request: i, replica: i % 2 },
+        detector: Detector::EbBound,
+        severity: Severity::Significant,
+        resolution: Resolution::Recovered(Recovery::FailoverReplica),
+    }
+}
+
+fn journal_section(quick: bool) -> Json {
+    let events = if quick { 200_000u32 } else { 2_000_000 };
+    let journal = Journal::with_capacity(1024);
+    let t0 = Instant::now();
+    for i in 0..events {
+        journal.record(&sample_event(i));
+    }
+    let single = events as f64 / t0.elapsed().as_secs_f64();
+
+    let journal = Arc::new(Journal::with_capacity(1024));
+    let writers = 4usize;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..writers)
+        .map(|w| {
+            let j = Arc::clone(&journal);
+            std::thread::spawn(move || {
+                for i in 0..events / writers as u32 {
+                    j.record(&sample_event(w as u32 * 1_000_000 + i));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let multi = journal.total() as f64 / t0.elapsed().as_secs_f64();
+    Json::obj(vec![
+        ("capacity", num(1024.0)),
+        ("record_per_s_1thread", num(round3(single))),
+        ("record_per_s_4threads", num(round3(multi))),
+    ])
+}
+
+/// One layer whose packed B carries a persistent payload fault — every
+/// forward flags and escalates (the worst-case fault path).
+fn faulty_layer(k: usize, n: usize) -> AbftLinear {
+    let mut rng = Pcg32::new(0xFA17);
+    let mut layer = AbftLinear::random(k, n, true, Protection::DetectRecompute, &mut rng);
+    let idx = layer.abft().packed.offset(1, 1);
+    let data = layer.abft_mut().packed.data_mut();
+    data[idx] = (data[idx] as u8 ^ 0x40) as i8;
+    layer
+}
+
+fn fault_path_section(quick: bool) -> Json {
+    let iters = if quick { 200 } else { 2000 };
+    let (m, k, n) = (8usize, 256usize, 128usize);
+    let layer = faulty_layer(k, n);
+    let x = vec![200u8; m * k];
+    let xp = QParams::fit_u8(0.0, 1.0);
+    let mut out = vec![0u8; m * n];
+    let mut scratch = GemmScratch::default();
+    let mut rows = Vec::new();
+    for (label, sink) in [
+        ("sink_detached", EventSink::detached()),
+        ("sink_attached", EventSink::with_capacity(1024)),
+    ] {
+        // Warmup.
+        for _ in 0..3 {
+            layer.forward_policied(
+                &x,
+                m,
+                xp,
+                DetectionMode::Full,
+                SiteCtx::new(&sink, SiteId::Gemm(0), None),
+                &mut scratch,
+                &mut out,
+            );
+        }
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(layer.forward_policied(
+                &x,
+                m,
+                xp,
+                DetectionMode::Full,
+                SiteCtx::new(&sink, SiteId::Gemm(0), None),
+                &mut scratch,
+                &mut out,
+            ));
+        }
+        let us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+        rows.push(Json::obj(vec![
+            ("config", Json::Str(label.to_string())),
+            ("flagging_forward_us", num(round3(us))),
+        ]));
+    }
+    Json::obj(vec![
+        ("shape", Json::Str(format!("m{m} k{k} n{n}, every row flags"))),
+        ("iters", num(iters as f64)),
+        ("by_config", Json::Arr(rows)),
+    ])
+}
+
+fn ladder_section(quick: bool) -> Json {
+    let iters = if quick { 20 } else { 100 };
+
+    // RecomputeUnit + RetryBatch on a persistently-corrupt local model.
+    let mut model = DlrmModel::random(DlrmConfig {
+        num_dense: 8,
+        embedding_dim: 32,
+        bottom_mlp: vec![64, 32],
+        top_mlp: vec![64],
+        tables: vec![TableConfig { rows: 5_000, pooling: 16 }; 2],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed: 0x1AD0,
+    });
+    let mut rng = Pcg32::new(0xBEEF);
+    let reqs = model.synth_requests(8, &mut rng);
+    // Clean batch forward = the RetryBatch rung's cost.
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(model.forward(&reqs));
+    }
+    let retry_ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+
+    // Persistent table corruption: per-flagging-batch cost (detect +
+    // recompute rung + escalation emission, amortized per batch).
+    let victim = reqs[0].sparse[0][0];
+    model.tables[0].data[victim * model.cfg.embedding_dim] ^= 0x80;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(model.forward(&reqs));
+    }
+    let recompute_ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+    model.tables[0].data[victim * model.cfg.embedding_dim] ^= 0x80; // restore
+
+    // FailoverReplica: router lap restart on a corrupt replica.
+    model.events = EventSink::with_capacity(1 << 14);
+    let store = Arc::new(ShardStore::from_model(&model, ShardPlan::hash_placement(2, 1, 2), 512));
+    let router = ShardRouter::new(Arc::clone(&store));
+    let d = model.cfg.embedding_dim;
+    let mut failover_ms = 0.0;
+    for _ in 0..iters {
+        for row in 0..model.tables[0].rows {
+            store.flip_table_byte(0, 0, row * d, 0x80);
+        }
+        let t0 = Instant::now();
+        std::hint::black_box(model.forward_with(&reqs, &router));
+        failover_ms += t0.elapsed().as_secs_f64() * 1e3;
+        store.drain_repairs(); // heals replica 0 back for the next round
+    }
+    failover_ms /= iters as f64;
+
+    // QuarantineAndRepair: row-granular (1 dirty row) vs whole-copy
+    // (heavy corruption) repair latency.
+    let mut granular_ms = 0.0;
+    for _ in 0..iters {
+        store.flip_table_byte(0, 0, victim * d, 0x01);
+        store.quarantine(0, 0);
+        let t0 = Instant::now();
+        store.drain_repairs();
+        granular_ms += t0.elapsed().as_secs_f64() * 1e3;
+    }
+    granular_ms /= iters as f64;
+    let rows0 = model.tables[0].rows;
+    let mut whole_ms = 0.0;
+    for _ in 0..iters {
+        for row in 0..rows0 {
+            store.flip_table_byte(0, 0, row * d, 0x80);
+        }
+        store.quarantine(0, 0);
+        let t0 = Instant::now();
+        store.drain_repairs();
+        whole_ms += t0.elapsed().as_secs_f64() * 1e3;
+    }
+    whole_ms /= iters as f64;
+
+    Json::obj(vec![
+        ("retry_batch_forward_ms", num(round3(retry_ms))),
+        ("recompute_rung_batch_ms", num(round3(recompute_ms))),
+        ("failover_batch_ms", num(round3(failover_ms))),
+        ("repair_row_granular_ms", num(round3(granular_ms))),
+        ("repair_whole_copy_ms", num(round3(whole_ms))),
+        ("repaired_rows_total", num(store.stats.repaired_rows.load(std::sync::atomic::Ordering::Relaxed) as f64)),
+    ])
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick");
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_PR5.json".into());
+
+    eprintln!("perf_detect: avx2={} quick={quick}", simd_active());
+    let journal = journal_section(quick);
+    eprintln!("perf_detect: journal throughput done");
+    let fault_path = fault_path_section(quick);
+    eprintln!("perf_detect: fault-path latency done");
+    let ladder = ladder_section(quick);
+    eprintln!("perf_detect: ladder latencies done");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_detect_pr5".into())),
+        (
+            "host",
+            Json::obj(vec![
+                ("avx2", Json::Bool(simd_active())),
+                (
+                    "threads",
+                    num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0) as f64),
+                ),
+            ]),
+        ),
+        ("journal", journal),
+        ("fault_path", fault_path),
+        ("ladder", ladder),
+    ]);
+    let text = format!("{doc}");
+    std::fs::write(&out_path, &text).expect("write bench output");
+    println!("{text}");
+    eprintln!("perf_detect: wrote {out_path}");
+}

@@ -15,6 +15,27 @@ use crate::embedding::{QuantTable4, QuantTable8};
 /// Paper §V-D: relative bound separating round-off from soft error.
 pub const DEFAULT_REL_BOUND: f64 = 1e-5;
 
+/// The two sides of one Eq-5 comparison: the observed deviation and the
+/// bound it is compared against. Carrying both (instead of collapsing to
+/// a `bool`) lets the fault-event pipeline classify a flag's severity by
+/// its margin ratio (`detect::Severity::from_eb_margin`) without
+/// re-walking the bag.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EbCheck {
+    /// `|RSum − CSum|`.
+    pub excess: f64,
+    /// `rel_bound · bound_scale · max(|RSum|, |CSum|, 1)`.
+    pub threshold: f64,
+}
+
+impl EbCheck {
+    /// The Eq-5 verdict: `true` means a soft error is flagged.
+    #[inline]
+    pub fn flagged(&self) -> bool {
+        self.excess > self.threshold
+    }
+}
+
 /// Accumulation precision of the verifier sums.
 ///
 /// The paper's implementation accumulates RSum/CSum in f32 — its own
@@ -73,6 +94,15 @@ impl EbChecksum {
     /// Bytes of checksum storage (the §V-C `32/(p·d)` memory overhead).
     pub fn bytes(&self) -> usize {
         self.c_t.len() * 4
+    }
+
+    /// Exact integer deviation of one stored row from its canonical
+    /// checksum: `code_row_sum(row) − C_T[row]`. Zero iff the row's
+    /// code sum is intact; the magnitude is the scrub detector's
+    /// severity signal (`detect::Severity::from_code_delta` — the
+    /// Table-III high-/low-nibble significance split).
+    pub fn row_delta(&self, table: &QuantTable8, row: usize) -> i64 {
+        table.code_row_sum(row) as i64 - self.c_t[row] as i64
     }
 
     /// Checksum side of Eq 5 for one bag:
@@ -256,6 +286,24 @@ impl FusedEbAbft {
         bound_scale: f64,
         out: &mut [f32],
     ) -> bool {
+        self.bag_sum_checked_scaled_ex(table, indices, weights, prefetch, bound_scale, out)
+            .flagged()
+    }
+
+    /// [`FusedEbAbft::bag_sum_checked_scaled`] returning the full
+    /// [`EbCheck`] (deviation + bound) instead of only the verdict — the
+    /// emission path's severity signal. The bag output and the verdict
+    /// are bit-identical to the `bool` form; only the reporting is
+    /// richer.
+    pub fn bag_sum_checked_scaled_ex(
+        &self,
+        table: &QuantTable8,
+        indices: &[usize],
+        weights: Option<&[f32]>,
+        prefetch: bool,
+        bound_scale: f64,
+        out: &mut [f32],
+    ) -> EbCheck {
         let d = table.d;
         assert_eq!(d, self.d);
         assert_eq!(out.len(), d);
@@ -284,7 +332,10 @@ impl FusedEbAbft {
         }
         let rsum: f64 = out.iter().map(|&x| x as f64).sum();
         let scale = rsum.abs().max(csum.abs()).max(1.0);
-        (rsum - csum).abs() > self.rel_bound * bound_scale * scale
+        EbCheck {
+            excess: (rsum - csum).abs(),
+            threshold: self.rel_bound * bound_scale * scale,
+        }
     }
 
     pub fn bytes(&self) -> usize {

@@ -166,6 +166,14 @@ impl AbftGemm {
     /// engine's batch-level retry, not a row recompute). Returns `true`
     /// when the aggregate is clean.
     pub fn verify_aggregate(&self, c_temp: &[i32], m: usize) -> bool {
+        self.aggregate_residual(c_temp, m) % self.modulus as i64 == 0
+    }
+
+    /// The raw tile residual `Σ_i (Σ_j C[i][j] − C[i][n])` the aggregate
+    /// congruence tests — `≡ 0 (mod modulus)` on clean data, and shifted
+    /// by exactly the injected delta under corruption (the difference of
+    /// two residuals over the same inputs is mod-free).
+    pub fn aggregate_residual(&self, c_temp: &[i32], m: usize) -> i64 {
         let nt = self.n + 1;
         assert_eq!(c_temp.len(), m * nt);
         let mut t: i64 = 0;
@@ -176,7 +184,24 @@ impl AbftGemm {
             }
             t -= row[self.n] as i64;
         }
-        t % self.modulus as i64 == 0
+        t
+    }
+
+    /// The raw Eq-3b residual of one row, `Σ_j C[row][j] − C[row][n]` —
+    /// `≡ 0 (mod modulus)` on any clean row. Taken before and after a
+    /// row recompute, the residual shift is exactly the transient delta
+    /// the fault injected (mod-free), which is the fault-event
+    /// pipeline's severity signal.
+    pub fn row_residual(&self, c_temp: &[i32], m: usize, row: usize) -> i64 {
+        let nt = self.n + 1;
+        assert_eq!(c_temp.len(), m * nt);
+        assert!(row < m);
+        let r = &c_temp[row * nt..(row + 1) * nt];
+        let mut t: i64 = 0;
+        for &v in &r[..self.n] {
+            t += v as i64;
+        }
+        t - r[self.n] as i64
     }
 
     /// Recompute the payload of a single corrupted row from A and the packed
@@ -385,6 +410,26 @@ mod tests {
         c[2 * (n + 1)] -= 5;
         assert!(abft.verify_aggregate(&c, m));
         assert!(!abft.verify(&c, m).clean(), "per-row verify still catches it");
+    }
+
+    #[test]
+    fn residuals_track_injected_deltas() {
+        let mut rng = Pcg32::new(10);
+        let (m, k, n) = (4, 32, 16);
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let (mut c, _) = abft.exec(&a, m);
+        let base = abft.row_residual(&c, m, 2);
+        assert_eq!(base % 127, 0, "clean row residual is ≡ 0 (mod 127)");
+        let base_agg = abft.aggregate_residual(&c, m);
+        assert_eq!(base_agg % 127, 0, "clean aggregate residual is ≡ 0 (mod 127)");
+        c[2 * (n + 1)] += 5000;
+        assert_eq!(abft.row_residual(&c, m, 2) - base, 5000);
+        assert_eq!(
+            abft.aggregate_residual(&c, m) - base_agg,
+            5000,
+            "aggregate residual carries the injected delta mod-free"
+        );
     }
 
     #[test]

@@ -13,7 +13,9 @@ pub mod gemm;
 pub mod interaction;
 pub mod scrub;
 
-pub use eb::{CheckPrecision, EbChecksum, FusedEbAbft, FusedEbAbft4, RowMeta, DEFAULT_REL_BOUND};
+pub use eb::{
+    CheckPrecision, EbCheck, EbChecksum, FusedEbAbft, FusedEbAbft4, RowMeta, DEFAULT_REL_BOUND,
+};
 pub use full::{CorrectionOutcome, FullAbftGemm};
 pub use interaction::{protected_interaction, InteractionVerdict, INTERACTION_REL_BOUND};
 pub use scrub::{ScrubReport, Scrubber};

@@ -13,6 +13,9 @@
 use crate::abft::Scrubber;
 use crate::coordinator::metrics::{policy_json, Metrics};
 use crate::coordinator::request::{ScoreRequest, ScoreResponse};
+use crate::detect::{
+    Detector, EventSink, Journal, Resolution, Severity, SiteId, UnitRef, LOCAL_REPLICA,
+};
 use crate::dlrm::{
     DlrmModel, DlrmRequest, EbStage, InferenceReport, InferenceScratch, LocalEbStage, Protection,
 };
@@ -132,7 +135,13 @@ pub struct Engine {
     /// Read-mostly: shared read lock for inference, write lock only for
     /// chaos injection/undo and repair writes.
     pub model: RwLock<DlrmModel>,
-    pub metrics: Metrics,
+    /// Shared with the fault-event sink, which routes each detection
+    /// event into the matching counter family.
+    pub metrics: Arc<Metrics>,
+    /// The fault-event pipeline ([`crate::detect`]): every engine
+    /// carries an attached sink + journal; the model (and the shard
+    /// store built from it) emit through clones of this handle.
+    sink: EventSink,
     chaos: Option<Mutex<(ChaosConfig, Pcg32)>>,
     /// Background table scrubbers (one per table) plus the round-robin
     /// table cursor for budget-paced ticks, advanced between batches to
@@ -157,23 +166,29 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(model: DlrmModel) -> Self {
-        Self {
-            model: RwLock::new(model),
-            metrics: Metrics::new(),
-            chaos: None,
-            scrubbers: None,
-            shards: None,
-            policy: None,
-            scratch_pool: Mutex::new(Vec::new()),
-        }
+        Self::build(model, None)
     }
 
     pub fn with_chaos(model: DlrmModel, chaos: ChaosConfig) -> Self {
         let rng = Pcg32::new(chaos.seed);
+        Self::build(model, Some(Mutex::new((chaos, rng))))
+    }
+
+    /// Shared constructor: attaches the fault-event sink (journal at
+    /// [`crate::detect::DEFAULT_JOURNAL_CAPACITY`]), wires it to the
+    /// engine's metrics, and hands the model its emission handle —
+    /// anything built FROM the model afterwards (the shard store) clones
+    /// the same sink.
+    fn build(mut model: DlrmModel, chaos: Option<Mutex<(ChaosConfig, Pcg32)>>) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let sink = EventSink::attached();
+        sink.attach_metrics(Arc::clone(&metrics));
+        model.events = sink.clone();
         Self {
             model: RwLock::new(model),
-            metrics: Metrics::new(),
-            chaos: Some(Mutex::new((chaos, rng))),
+            metrics,
+            sink,
+            chaos,
             scrubbers: None,
             shards: None,
             policy: None,
@@ -293,6 +308,24 @@ impl Engine {
         self.shards.as_ref().map(|s| &s.store)
     }
 
+    /// The fault-event sink every detection site of this engine emits
+    /// through (always attached).
+    pub fn event_sink(&self) -> &EventSink {
+        &self.sink
+    }
+
+    /// The event journal (always present — engines attach a sink at
+    /// construction).
+    pub fn journal(&self) -> &Journal {
+        self.sink.journal().expect("engine sink is always attached")
+    }
+
+    /// The `events` server-op payload: journal counts plus the newest
+    /// `max` event rows.
+    pub fn events_json(&self, max: usize) -> Json {
+        self.journal().events_json(max)
+    }
+
     /// The EB-stage strategy this engine serves with.
     fn eb_stage(&self) -> &dyn EbStage {
         match &self.shards {
@@ -323,6 +356,9 @@ impl Engine {
             .as_ref()
             .map(|p| p.sites.scrub_budget.load(Ordering::Relaxed));
         if let Some(sh) = &self.shards {
+            // The store journals each hit as a `ScrubExact` event, and
+            // the sink routes it into `metrics.scrub_hits` — only the
+            // row pacing is accounted here.
             let (rows_scanned, raw_hits) = match budget {
                 Some(b) => sh.store.scrub_tick_budget(b),
                 None => sh.store.scrub_tick(),
@@ -330,9 +366,6 @@ impl Engine {
             self.metrics
                 .scrubbed_rows
                 .fetch_add(rows_scanned as u64, Ordering::Relaxed);
-            self.metrics
-                .scrub_hits
-                .fetch_add(raw_hits.len() as u64, Ordering::Relaxed);
             return ScrubTickReport {
                 rows_scanned,
                 hits: raw_hits.into_iter().map(|(_s, _r, table, row)| (table, row)).collect(),
@@ -387,9 +420,21 @@ impl Engine {
         self.metrics
             .scrubbed_rows
             .fetch_add(report.rows_scanned as u64, Ordering::Relaxed);
-        self.metrics
-            .scrub_hits
-            .fetch_add(report.hits.len() as u64, Ordering::Relaxed);
+        // Journal each unsharded hit. The engine's own tables have no
+        // replica to fail over to — repair is an operator action (the
+        // `ScrubLocal` ladder is empty), so the resolution is
+        // `DetectedOnly`; the sink routes the event into
+        // `metrics.scrub_hits`.
+        for &(t, row) in &report.hits {
+            let delta = model.checksums[t].row_delta(&model.tables[t], row);
+            self.sink.emit(
+                SiteId::Eb(t as u32),
+                UnitRef::ScrubSlot { replica: LOCAL_REPLICA, row: row as u32 },
+                Detector::ScrubExact,
+                Severity::from_code_delta(delta),
+                Resolution::DetectedOnly,
+            );
+        }
         report
     }
 
@@ -452,6 +497,9 @@ impl Engine {
     /// (injection mutates the model transiently).
     pub fn score(&self, requests: &[DlrmRequest], scores: &mut [f32]) -> BatchOutcome {
         let t0 = Instant::now();
+        // One journal tick per scored batch: events stamp the batch they
+        // occurred in.
+        self.sink.advance_tick();
         let mut scratch = self
             .scratch_pool
             .lock()
@@ -487,10 +535,15 @@ impl Engine {
         self.apply_detection_policy(&model, dlrm_reqs, scratch, scores, &report)
     }
 
-    /// Shared detect → recompute-once → flag-degraded policy (with the
-    /// metrics accounting), applied after a batch's first forward. The
-    /// caller still holds its model lock, so the retry sees the same
-    /// (restored, for chaos) operands.
+    /// The engine's rung of the recovery ladder, **RetryBatch**: applied
+    /// after a batch's first forward whenever the report is dirty — the
+    /// recovery for every flag the per-unit rungs couldn't clear (the
+    /// BoundOnly aggregate, which cannot name a row, and persistent
+    /// row/bag flags that escalated past `RecomputeUnit`; see
+    /// [`crate::detect::recovery`]). A retry that comes back dirty
+    /// exhausts the ladder: the batch is served **Degraded**, never
+    /// silently. The caller still holds its model lock, so the retry
+    /// sees the same (restored, for chaos) operands.
     fn apply_detection_policy(
         &self,
         model: &DlrmModel,
@@ -505,10 +558,9 @@ impl Engine {
             ..BatchOutcome::default()
         };
         if outcome.detected {
-            self.metrics.detections.fetch_add(
-                (report.gemm.rows_flagged + report.eb_bags_flagged) as u64,
-                Ordering::Relaxed,
-            );
+            // `metrics.detections` is fed by the event sink at emission
+            // time, one per flagged row/bag — the batch policy here only
+            // drives the RetryBatch ladder rung.
             if model.cfg.protection == Protection::DetectRecompute {
                 let report2 = model.forward_into(dlrm_reqs, self.eb_stage(), scratch, scores);
                 self.record_shard_events(&report2);
@@ -523,14 +575,11 @@ impl Engine {
         outcome
     }
 
-    /// Fold the router's transparently-recovered events into the serving
-    /// counters (they never dirty a batch, but operators must see them).
+    /// Fold the router's recovery actions into the serving counters
+    /// (they never dirty a batch, but operators must see them).
+    /// Detections themselves (`shard_detections`) are fed by the event
+    /// sink at emission time.
     fn record_shard_events(&self, report: &InferenceReport) {
-        if report.shard_detections > 0 {
-            self.metrics
-                .shard_detections
-                .fetch_add(report.shard_detections as u64, Ordering::Relaxed);
-        }
         if report.shard_failovers > 0 {
             self.metrics
                 .shard_failovers
@@ -561,6 +610,7 @@ impl Engine {
         }
         let mut snap = self.metrics.snapshot();
         if let Json::Obj(map) = &mut snap {
+            map.insert("events".to_string(), self.journal().counts_json());
             if let Some(sh) = &self.shards {
                 map.insert("shards".to_string(), sh.store.health_json());
             }

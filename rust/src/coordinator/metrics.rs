@@ -73,7 +73,11 @@ impl Default for LatencyHistogram {
 pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
-    /// Soft-error detections (GEMM rows + EB bags).
+    /// Soft-error detections at local (engine-owned) sites — GEMM rows,
+    /// the BoundOnly aggregate, and unsharded EB bags. Fed by the
+    /// fault-event sink ([`crate::detect::EventSink`]), one per emitted
+    /// event; retries that re-detect a persistent fault count again
+    /// (each detection is an event).
     pub detections: AtomicU64,
     /// Batch-level recomputations triggered by a detection.
     pub recomputes: AtomicU64,
@@ -268,7 +272,7 @@ mod tests {
         sites.eb[0].cell.store(DetectionMode::Sampled(4));
         let nb = build_neighbors(2, 1, None);
         let mut c = PolicyController::new(Arc::clone(&sites), nb, PolicyConfig::default());
-        sites.eb[0].telem.record(10, 3, 0);
+        sites.eb[0].telem.record(10, 3);
         c.step();
         let j = policy_json(&sites, &c);
         assert_eq!(j.path(&["served", "full"]).and_then(Json::as_usize), Some(5));

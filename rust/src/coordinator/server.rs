@@ -188,6 +188,13 @@ fn handle_conn(stream: TcpStream, batcher: Arc<Batcher<Pending>>, engine: Arc<En
         if let Some(op) = parsed.get("op").and_then(Json::as_str) {
             match op {
                 "metrics" => writeln!(writer, "{}", engine.metrics_snapshot())?,
+                // The fault-event journal: counts + the newest rows
+                // (newest-last). `{"op":"events","max":N}` bounds the
+                // row count; default 64.
+                "events" => {
+                    let max = parsed.get("max").and_then(Json::as_usize).unwrap_or(64);
+                    writeln!(writer, "{}", engine.events_json(max))?
+                }
                 "ping" => writeln!(writer, "{}", Json::obj(vec![("pong", Json::Bool(true))]))?,
                 _ => writeln!(writer, "{}", err_json("unknown op"))?,
             }
@@ -271,6 +278,15 @@ impl Client {
         self.reader.read_line(&mut line)?;
         Ok(Json::parse(line.trim())?)
     }
+
+    /// Query the fault-event journal (`{"op":"events"}`).
+    pub fn events(&mut self) -> Result<Json> {
+        writeln!(self.writer, "{{\"op\":\"events\"}}")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim())?)
+    }
 }
 
 #[cfg(test)]
@@ -324,6 +340,11 @@ mod tests {
         }
         let m = client.metrics().unwrap();
         assert_eq!(m.get("requests").and_then(Json::as_usize), Some(5));
+        assert!(m.get("events").is_some(), "snapshot embeds the journal counts");
+        // The events op answers too; a clean run has an empty journal.
+        let e = client.events().unwrap();
+        assert_eq!(e.path(&["counts", "total"]).and_then(Json::as_usize), Some(0));
+        assert!(matches!(e.get("events"), Some(Json::Arr(a)) if a.is_empty()));
         server.stop();
     }
 

@@ -1,0 +1,482 @@
+//! Typed fault events: the single vocabulary every detection site speaks.
+//!
+//! Before PR 5 a detection was a loose boolean / counter bump whose
+//! meaning depended on which of five sites raised it (GEMM row verify,
+//! the fused EB bag check, the shard router's per-bag loop, the
+//! scrubber, the BoundOnly batch aggregate). A [`FaultEvent`] makes the
+//! detection first-class: *where* it fired ([`SiteId`]), *what* unit was
+//! implicated ([`UnitRef`]), *which* detector tripped ([`Detector`]),
+//! *how bad* it looks ([`Severity`]), and *what the pipeline did about
+//! it* ([`Resolution`]). Every event is journaled
+//! ([`crate::detect::Journal`]) with the tick it occurred on, so fault
+//! attribution is a query instead of archaeology across counter
+//! families.
+//!
+//! # Severity classification
+//!
+//! The paper's Table III splits EB faults by bit significance; PR 5
+//! generalizes that split to every detector:
+//!
+//! * **EB (Eq 5)** — by the margin ratio `excess / threshold` of the
+//!   relative-bound check: a flag within [`EB_SIGNIFICANT_MARGIN`]× of
+//!   the bound is [`Severity::NearBound`] (plausibly a low-significance
+//!   bit riding the round-off edge); anything further out is
+//!   [`Severity::Significant`].
+//! * **GEMM (Eq 3b)** — by the **recompute-referenced delta**: the Eq-3b
+//!   residual is only meaningful mod 127 on its own, but the
+//!   `RecomputeUnit` rung yields a clean reference, and the residual
+//!   shift across it is exactly the injected corruption. Deltas below
+//!   [`GEMM_SIGNIFICANT_DELTA`] are smaller than one requantization step
+//!   at production shapes — they usually cannot move the served u8 code
+//!   ([`Severity::NearBound`]); larger deltas, and every flag without a
+//!   reference (persistent operand corruption, detect-only modes, the
+//!   aggregate), classify worst-case as [`Severity::Significant`].
+//! * **Scrub (exact `C_T` compare)** — by the integer code-sum delta:
+//!   [`SCRUB_SIGNIFICANT_DELTA`] (= 16) reproduces Table III's
+//!   high-4-bits / low-4-bits significance split.
+
+use crate::util::json::Json;
+
+/// Which protected operator instance raised the event. Indices follow
+/// the policy site spaces: GEMM sites in model layer order (bottom
+/// layers, top layers, head), EB sites by global table id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SiteId {
+    /// MLP layer `i` (flat model layer order).
+    Gemm(u32),
+    /// Embedding table `t` (global table id).
+    Eb(u32),
+}
+
+impl SiteId {
+    /// Stable human/JSON label, e.g. `gemm/2`, `eb/0`.
+    pub fn label(self) -> String {
+        match self {
+            SiteId::Gemm(i) => format!("gemm/{i}"),
+            SiteId::Eb(t) => format!("eb/{t}"),
+        }
+    }
+}
+
+/// Replica index standing for "the engine's own (unsharded) copy".
+pub const LOCAL_REPLICA: u32 = u32::MAX;
+
+/// The unit of work the detector implicated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnitRef {
+    /// One row of the protected GEMM's output tile.
+    GemmRow { row: u32 },
+    /// One pooled bag of one request. `replica` is the shard replica the
+    /// bag was computed on, or [`LOCAL_REPLICA`] for the unsharded path.
+    Bag { request: u32, replica: u32 },
+    /// One table row found by the background scrubber. `replica` as for
+    /// [`UnitRef::Bag`].
+    ScrubSlot { replica: u32, row: u32 },
+    /// The whole batch tile (the `BoundOnly` aggregate cannot name a
+    /// row).
+    BatchAggregate,
+}
+
+/// Which check tripped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Detector {
+    /// Eq-3b per-row GEMM checksum (`Full` / `Sampled` modes).
+    GemmChecksum,
+    /// Eq-3b batch-aggregate congruence (`BoundOnly` mode).
+    GemmAggregate,
+    /// Eq-5 EmbeddingBag relative float bound (fused serving check).
+    EbBound,
+    /// Exact integer `C_T` compare (the scrubber).
+    ScrubExact,
+}
+
+impl Detector {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Detector::GemmChecksum => "gemm_checksum",
+            Detector::GemmAggregate => "gemm_aggregate",
+            Detector::EbBound => "eb_bound",
+            Detector::ScrubExact => "scrub_exact",
+        }
+    }
+}
+
+/// GEMM residual magnitude at or above which a flag is
+/// [`Severity::Significant`]: at production shapes a smaller delta is
+/// below one requantization step, so it usually cannot move the served
+/// byte.
+pub const GEMM_SIGNIFICANT_DELTA: i64 = 1 << 12;
+
+/// Eq-5 `excess / threshold` ratio at or above which an EB flag is
+/// [`Severity::Significant`].
+pub const EB_SIGNIFICANT_MARGIN: f64 = 32.0;
+
+/// Scrub code-sum delta at or above which a hit is
+/// [`Severity::Significant`] — a flip in the upper 4 bits of a u8 code
+/// moves the row sum by ≥ 16 (the paper's Table-III significance
+/// split).
+pub const SCRUB_SIGNIFICANT_DELTA: i64 = 16;
+
+/// How far past its detection threshold the flag landed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    /// Barely past the threshold — plausibly a low-significance bit.
+    NearBound,
+    /// Clearly past the threshold — a significant-bit corruption.
+    Significant,
+}
+
+impl Severity {
+    /// Classify a GEMM row/aggregate residual (`Σ C − checksum`, i64).
+    pub fn from_gemm_delta(delta: i64) -> Self {
+        if delta.unsigned_abs() >= GEMM_SIGNIFICANT_DELTA as u64 {
+            Severity::Significant
+        } else {
+            Severity::NearBound
+        }
+    }
+
+    /// Classify an Eq-5 flag by its margin ratio. `threshold` is the
+    /// bound side (`rel_bound · bound_scale · scale`); callers only
+    /// invoke this on flagged bags, where `excess > threshold`.
+    pub fn from_eb_margin(excess: f64, threshold: f64) -> Self {
+        if excess >= EB_SIGNIFICANT_MARGIN * threshold.max(f64::MIN_POSITIVE) {
+            Severity::Significant
+        } else {
+            Severity::NearBound
+        }
+    }
+
+    /// Classify a scrub hit by its exact code-sum delta.
+    pub fn from_code_delta(delta: i64) -> Self {
+        if delta.unsigned_abs() >= SCRUB_SIGNIFICANT_DELTA as u64 {
+            Severity::Significant
+        } else {
+            Severity::NearBound
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::NearBound => "near_bound",
+            Severity::Significant => "significant",
+        }
+    }
+}
+
+pub use crate::detect::recovery::Recovery;
+
+/// What the pipeline did about the detection — the terminal state of the
+/// unit's walk down the recovery ladder (see [`crate::detect::recovery`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Resolution {
+    /// Detect-only protection (or the unsharded scrubber): reported, no
+    /// automatic recovery — the value was served / left as-is.
+    DetectedOnly,
+    /// The named ladder step recovered the unit (its re-check passed or
+    /// a clean replica took over).
+    Recovered(Recovery),
+    /// Local steps exhausted; the named next ladder step is owned by an
+    /// outer layer (e.g. the engine's batch retry) and will run after
+    /// this event is recorded.
+    Escalated(Recovery),
+    /// The ladder is exhausted — the corrupted unit was served and the
+    /// batch marked degraded.
+    Degraded,
+}
+
+impl Resolution {
+    /// The terminal state of a failed local rung: `Escalated(step)` when
+    /// the ladder names a next rung (owned by an outer layer), else the
+    /// explicit `Degraded` floor. The one place the escalate-or-degrade
+    /// decision lives — sites pass `recovery::next_step(..)` /
+    /// `recovery::first_step(..)` straight in.
+    pub fn escalated_or_degraded(step: Option<Recovery>) -> Self {
+        match step {
+            Some(step) => Resolution::Escalated(step),
+            None => Resolution::Degraded,
+        }
+    }
+
+    /// Human/JSON label, e.g. `recovered:failover_replica`.
+    pub fn label(self) -> String {
+        match self {
+            Resolution::DetectedOnly => "detected_only".to_string(),
+            Resolution::Recovered(r) => format!("recovered:{}", r.as_str()),
+            Resolution::Escalated(r) => format!("escalated:{}", r.as_str()),
+            Resolution::Degraded => "degraded".to_string(),
+        }
+    }
+
+    /// Aggregate-counter slot ([`RESOLUTION_SLOTS`]): the four terminal
+    /// kinds, step elided.
+    pub fn slot(self) -> usize {
+        match self {
+            Resolution::DetectedOnly => 0,
+            Resolution::Recovered(_) => 1,
+            Resolution::Escalated(_) => 2,
+            Resolution::Degraded => 3,
+        }
+    }
+
+    pub fn kind_str(self) -> &'static str {
+        RESOLUTION_KIND_NAMES[self.slot()]
+    }
+}
+
+/// Number of [`Resolution::slot`] values.
+pub const RESOLUTION_SLOTS: usize = 4;
+pub const RESOLUTION_KIND_NAMES: [&str; RESOLUTION_SLOTS] =
+    ["detected_only", "recovered", "escalated", "degraded"];
+
+/// Number of [`Detector`] variants (aggregate-counter sizing).
+pub const DETECTOR_SLOTS: usize = 4;
+
+/// One first-class detection event. Produced at the detection site,
+/// fanned out by [`crate::detect::EventSink`], persisted in the
+/// [`crate::detect::Journal`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Journal tick the event was recorded on (the engine advances the
+    /// tick once per scored batch; standalone emitters leave it at 0).
+    pub tick: u64,
+    pub site: SiteId,
+    pub unit: UnitRef,
+    pub detector: Detector,
+    pub severity: Severity,
+    pub resolution: Resolution,
+}
+
+// ---- packed wire format (journal slots are plain AtomicU64s) ----------
+//
+// meta word layout (low → high):
+//   bit  0      site kind (0 = Gemm, 1 = Eb)
+//   bits 1..25  site index (24 bits)
+//   bits 25..27 unit kind  (0 GemmRow, 1 Bag, 2 ScrubSlot, 3 Aggregate)
+//   bits 27..29 detector
+//   bit  29     severity   (0 NearBound, 1 Significant)
+//   bits 30..32 resolution kind
+//   bits 32..35 resolution step (Recovery)
+// aux word: unit payload — low u32 = row / request, high u32 = replica.
+
+const SITE_IDX_MASK: u64 = (1 << 24) - 1;
+
+impl FaultEvent {
+    /// Pack into the journal's `(meta, aux)` words. Lossless for site
+    /// indices < 2^24 and unit coordinates < 2^32 (both far above any
+    /// real deployment; asserted in debug builds).
+    pub fn encode(&self) -> (u64, u64) {
+        let (site_kind, site_idx) = match self.site {
+            SiteId::Gemm(i) => (0u64, i as u64),
+            SiteId::Eb(t) => (1u64, t as u64),
+        };
+        debug_assert!(site_idx <= SITE_IDX_MASK, "site index overflows packing");
+        let (unit_kind, lo, hi) = match self.unit {
+            UnitRef::GemmRow { row } => (0u64, row, 0),
+            UnitRef::Bag { request, replica } => (1, request, replica),
+            UnitRef::ScrubSlot { replica, row } => (2, row, replica),
+            UnitRef::BatchAggregate => (3, 0, 0),
+        };
+        let det = self.detector as u64;
+        let sev = match self.severity {
+            Severity::NearBound => 0u64,
+            Severity::Significant => 1,
+        };
+        let (res_kind, res_step) = match self.resolution {
+            Resolution::DetectedOnly => (0u64, 0u64),
+            Resolution::Recovered(r) => (1, r as u64),
+            Resolution::Escalated(r) => (2, r as u64),
+            Resolution::Degraded => (3, 0),
+        };
+        let meta = site_kind
+            | (site_idx & SITE_IDX_MASK) << 1
+            | unit_kind << 25
+            | det << 27
+            | sev << 29
+            | res_kind << 30
+            | res_step << 32;
+        (meta, lo as u64 | (hi as u64) << 32)
+    }
+
+    /// Inverse of [`FaultEvent::encode`].
+    pub fn decode(meta: u64, aux: u64, tick: u64) -> Self {
+        let site_idx = ((meta >> 1) & SITE_IDX_MASK) as u32;
+        let site = if meta & 1 == 0 {
+            SiteId::Gemm(site_idx)
+        } else {
+            SiteId::Eb(site_idx)
+        };
+        let lo = aux as u32;
+        let hi = (aux >> 32) as u32;
+        let unit = match (meta >> 25) & 0b11 {
+            0 => UnitRef::GemmRow { row: lo },
+            1 => UnitRef::Bag { request: lo, replica: hi },
+            2 => UnitRef::ScrubSlot { replica: hi, row: lo },
+            _ => UnitRef::BatchAggregate,
+        };
+        let detector = match (meta >> 27) & 0b11 {
+            0 => Detector::GemmChecksum,
+            1 => Detector::GemmAggregate,
+            2 => Detector::EbBound,
+            _ => Detector::ScrubExact,
+        };
+        let severity = if (meta >> 29) & 1 == 0 {
+            Severity::NearBound
+        } else {
+            Severity::Significant
+        };
+        let step = Recovery::from_index(((meta >> 32) & 0b111) as usize);
+        let resolution = match (meta >> 30) & 0b11 {
+            0 => Resolution::DetectedOnly,
+            1 => Resolution::Recovered(step),
+            2 => Resolution::Escalated(step),
+            _ => Resolution::Degraded,
+        };
+        Self { tick, site, unit, detector, severity, resolution }
+    }
+
+    /// JSON row for the `events` server op.
+    pub fn to_json(&self) -> Json {
+        let unit = match self.unit {
+            UnitRef::GemmRow { row } => Json::obj(vec![
+                ("kind", Json::Str("gemm_row".into())),
+                ("row", Json::Num(row as f64)),
+            ]),
+            UnitRef::Bag { request, replica } => Json::obj(vec![
+                ("kind", Json::Str("bag".into())),
+                ("request", Json::Num(request as f64)),
+                (
+                    "replica",
+                    if replica == LOCAL_REPLICA {
+                        Json::Str("local".into())
+                    } else {
+                        Json::Num(replica as f64)
+                    },
+                ),
+            ]),
+            UnitRef::ScrubSlot { replica, row } => Json::obj(vec![
+                ("kind", Json::Str("scrub_slot".into())),
+                ("row", Json::Num(row as f64)),
+                (
+                    "replica",
+                    if replica == LOCAL_REPLICA {
+                        Json::Str("local".into())
+                    } else {
+                        Json::Num(replica as f64)
+                    },
+                ),
+            ]),
+            UnitRef::BatchAggregate => {
+                Json::obj(vec![("kind", Json::Str("batch_aggregate".into()))])
+            }
+        };
+        Json::obj(vec![
+            ("tick", Json::Num(self.tick as f64)),
+            ("site", Json::Str(self.site.label())),
+            ("unit", unit),
+            ("detector", Json::Str(self.detector.as_str().into())),
+            ("severity", Json::Str(self.severity.as_str().into())),
+            ("resolution", Json::Str(self.resolution.label())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<FaultEvent> {
+        vec![
+            FaultEvent {
+                tick: 0,
+                site: SiteId::Gemm(0),
+                unit: UnitRef::GemmRow { row: 7 },
+                detector: Detector::GemmChecksum,
+                severity: Severity::Significant,
+                resolution: Resolution::Recovered(Recovery::RecomputeUnit),
+            },
+            FaultEvent {
+                tick: 42,
+                site: SiteId::Eb(3),
+                unit: UnitRef::Bag { request: 5, replica: 1 },
+                detector: Detector::EbBound,
+                severity: Severity::NearBound,
+                resolution: Resolution::Recovered(Recovery::FailoverReplica),
+            },
+            FaultEvent {
+                tick: u32::MAX as u64 + 9,
+                site: SiteId::Eb(2),
+                unit: UnitRef::ScrubSlot { replica: LOCAL_REPLICA, row: 3_999_999 },
+                detector: Detector::ScrubExact,
+                severity: Severity::Significant,
+                resolution: Resolution::DetectedOnly,
+            },
+            FaultEvent {
+                tick: 1,
+                site: SiteId::Gemm(6),
+                unit: UnitRef::BatchAggregate,
+                detector: Detector::GemmAggregate,
+                severity: Severity::NearBound,
+                resolution: Resolution::Escalated(Recovery::RetryBatch),
+            },
+            FaultEvent {
+                tick: 2,
+                site: SiteId::Eb(0),
+                unit: UnitRef::Bag { request: 0, replica: LOCAL_REPLICA },
+                detector: Detector::EbBound,
+                severity: Severity::Significant,
+                resolution: Resolution::Degraded,
+            },
+        ]
+    }
+
+    #[test]
+    fn encode_roundtrips_every_variant() {
+        for ev in sample_events() {
+            let (meta, aux) = ev.encode();
+            assert_eq!(FaultEvent::decode(meta, aux, ev.tick), ev);
+        }
+    }
+
+    #[test]
+    fn severity_thresholds_split_significance() {
+        assert_eq!(Severity::from_gemm_delta(5), Severity::NearBound);
+        assert_eq!(Severity::from_gemm_delta(-(1 << 12)), Severity::Significant);
+        assert_eq!(Severity::from_gemm_delta(1 << 20), Severity::Significant);
+        // Table-III split: upper-nibble code flips move the sum by ≥ 16.
+        assert_eq!(Severity::from_code_delta(1), Severity::NearBound);
+        assert_eq!(Severity::from_code_delta(-128), Severity::Significant);
+        assert_eq!(Severity::from_code_delta(15), Severity::NearBound);
+        assert_eq!(Severity::from_code_delta(16), Severity::Significant);
+        // EB margin ratio.
+        assert_eq!(Severity::from_eb_margin(1.5, 1.0), Severity::NearBound);
+        assert_eq!(Severity::from_eb_margin(64.0, 1.0), Severity::Significant);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(SiteId::Gemm(2).label(), "gemm/2");
+        assert_eq!(SiteId::Eb(0).label(), "eb/0");
+        assert_eq!(
+            Resolution::Recovered(Recovery::QuarantineAndRepair).label(),
+            "recovered:quarantine_and_repair"
+        );
+        assert_eq!(Resolution::Escalated(Recovery::RetryBatch).label(), "escalated:retry_batch");
+        assert_eq!(Resolution::DetectedOnly.label(), "detected_only");
+        assert_eq!(Resolution::Degraded.label(), "degraded");
+    }
+
+    #[test]
+    fn json_rows_carry_every_field() {
+        let ev = &sample_events()[1];
+        let j = ev.to_json();
+        assert_eq!(j.get("site").and_then(Json::as_str), Some("eb/3"));
+        assert_eq!(j.get("detector").and_then(Json::as_str), Some("eb_bound"));
+        assert_eq!(j.get("severity").and_then(Json::as_str), Some("near_bound"));
+        assert_eq!(
+            j.get("resolution").and_then(Json::as_str),
+            Some("recovered:failover_replica")
+        );
+        assert_eq!(j.path(&["unit", "request"]).and_then(Json::as_usize), Some(5));
+    }
+}

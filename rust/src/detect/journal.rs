@@ -1,0 +1,327 @@
+//! The event journal: a lock-free fixed-capacity ring of
+//! [`FaultEvent`]s plus cheap aggregate counters.
+//!
+//! # Design constraints (and how they are met)
+//!
+//! * **Zero steady-state allocation** — the slot array is sized once at
+//!   attach ([`Journal::with_capacity`]); recording touches only
+//!   pre-existing atomics, consistent with `rust/tests/zero_alloc.rs`
+//!   (the engine attaches a journal by default, and the zero-alloc
+//!   steady-state test runs with it attached).
+//! * **Lock-free** — recording is one `fetch_add` to claim a sequence
+//!   number plus atomic stores into the claimed slot behind a seqlock
+//!   generation stamp; queries validate the stamp before and after
+//!   reading, so a reader never blocks a writer and a torn slot is
+//!   skipped, not mis-reported. The payload words are themselves
+//!   atomics, so concurrent access is race-free by construction. Two
+//!   writers collide on one slot only when their sequences are exactly
+//!   `capacity` events apart (one writer stalled across a full ring
+//!   wrap); the stamp doubles as a per-slot claim ([`BUSY`]) so their
+//!   payloads can never interleave — the loser briefly spins, and if
+//!   the older write lands last its stamp simply hides the newer event
+//!   from ring queries (the aggregates already counted it). Readers are
+//!   always wait-free.
+//! * **Bounded** — when more than `capacity` events have ever been
+//!   recorded, the oldest are overwritten; [`Journal::total`] keeps the
+//!   lifetime count and the aggregate counters never lose events, so
+//!   "how many" queries stay exact even after wrap. (All counters are
+//!   independently monotone; a reader racing an in-flight `record` may
+//!   transiently see `total` ahead of the `by_*` sums by at most the
+//!   number of concurrent writers — they converge as soon as those
+//!   writes retire.)
+
+use crate::detect::event::{
+    FaultEvent, DETECTOR_SLOTS, RESOLUTION_KIND_NAMES, RESOLUTION_SLOTS,
+};
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Default ring capacity the engine attaches with.
+pub const DEFAULT_JOURNAL_CAPACITY: usize = 1024;
+
+/// Stamp value marking a slot mid-write (no valid `seq + 1` ever equals
+/// it — sequences are bounded far below `u64::MAX`).
+const BUSY: u64 = u64::MAX;
+
+struct Slot {
+    /// Generation stamp: `0` = empty, [`BUSY`] = mid-write, else
+    /// `seq + 1` of the event held.
+    stamp: AtomicU64,
+    meta: AtomicU64,
+    aux: AtomicU64,
+    tick: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Self {
+            stamp: AtomicU64::new(0),
+            meta: AtomicU64::new(0),
+            aux: AtomicU64::new(0),
+            tick: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The ring journal. See module docs for the concurrency contract.
+pub struct Journal {
+    slots: Box<[Slot]>,
+    /// Next sequence number == lifetime event count.
+    head: AtomicU64,
+    by_severity: [AtomicU64; 2],
+    by_detector: [AtomicU64; DETECTOR_SLOTS],
+    by_resolution: [AtomicU64; RESOLUTION_SLOTS],
+}
+
+impl Journal {
+    /// Pre-size the ring; this is the only allocation the journal ever
+    /// performs.
+    pub fn with_capacity(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            slots: (0..capacity).map(|_| Slot::new()).collect(),
+            head: AtomicU64::new(0),
+            by_severity: Default::default(),
+            by_detector: Default::default(),
+            by_resolution: Default::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Lifetime events recorded (monotone; survives wrap).
+    pub fn total(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Events currently resident in the ring.
+    pub fn len(&self) -> usize {
+        (self.total() as usize).min(self.capacity())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total() == 0
+    }
+
+    /// Events overwritten by wrap (lifetime − resident).
+    pub fn dropped(&self) -> u64 {
+        self.total().saturating_sub(self.len() as u64)
+    }
+
+    /// Record one event. Allocation-free; see the module docs for the
+    /// (only) writer-collision case that spins.
+    pub fn record(&self, ev: &FaultEvent) {
+        let (meta, aux) = ev.encode();
+        let seq = self.head.fetch_add(1, Ordering::AcqRel);
+        let slot = &self.slots[(seq % self.capacity() as u64) as usize];
+        // Claim the slot (stamp → BUSY): without this, a writer stalled
+        // for a full ring wrap could interleave its payload words with a
+        // later writer's and publish a stamp over a *mixed* payload —
+        // the one torn state a seqlock reader cannot detect.
+        loop {
+            let cur = slot.stamp.load(Ordering::Acquire);
+            if cur != BUSY
+                && slot
+                    .stamp
+                    .compare_exchange_weak(cur, BUSY, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            {
+                break;
+            }
+            std::hint::spin_loop();
+        }
+        slot.meta.store(meta, Ordering::Relaxed);
+        slot.aux.store(aux, Ordering::Relaxed);
+        slot.tick.store(ev.tick, Ordering::Relaxed);
+        // Release publishes the payload to stamp-acquiring readers.
+        slot.stamp.store(seq + 1, Ordering::Release);
+        self.by_severity[ev.severity as usize].fetch_add(1, Ordering::Relaxed);
+        self.by_detector[ev.detector as usize].fetch_add(1, Ordering::Relaxed);
+        self.by_resolution[ev.resolution.slot()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Read the event at lifetime sequence `seq`, if it is still
+    /// resident and not mid-overwrite.
+    fn read_seq(&self, seq: u64) -> Option<FaultEvent> {
+        let slot = &self.slots[(seq % self.capacity() as u64) as usize];
+        let want = seq + 1;
+        if slot.stamp.load(Ordering::Acquire) != want {
+            return None;
+        }
+        let meta = slot.meta.load(Ordering::Relaxed);
+        let aux = slot.aux.load(Ordering::Relaxed);
+        let tick = slot.tick.load(Ordering::Relaxed);
+        std::sync::atomic::fence(Ordering::Acquire);
+        if slot.stamp.load(Ordering::Relaxed) != want {
+            return None; // overwritten while reading — skip, never tear
+        }
+        Some(FaultEvent::decode(meta, aux, tick))
+    }
+
+    /// Events with lifetime sequence `>= mark`, oldest first. `mark` is
+    /// a prior [`Journal::total`] value; events that wrapped out of the
+    /// ring since then are absent (use `total() - mark` for the exact
+    /// count). This is the campaign / test query primitive.
+    pub fn since(&self, mark: u64) -> Vec<FaultEvent> {
+        let total = self.total();
+        let start = mark.max(total.saturating_sub(self.capacity() as u64));
+        (start..total).filter_map(|s| self.read_seq(s)).collect()
+    }
+
+    /// The newest `max` resident events, oldest first.
+    pub fn recent(&self, max: usize) -> Vec<FaultEvent> {
+        let total = self.total();
+        self.since(total.saturating_sub(max.min(self.capacity()) as u64))
+    }
+
+    /// Aggregate counters block for `metrics_snapshot()` — exact across
+    /// wrap (counters are fed at record time, not derived from the
+    /// ring).
+    pub fn counts_json(&self) -> Json {
+        let n = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("total", Json::Num(self.total() as f64)),
+            ("resident", Json::Num(self.len() as f64)),
+            ("capacity", Json::Num(self.capacity() as f64)),
+            ("dropped", Json::Num(self.dropped() as f64)),
+            (
+                "by_severity",
+                Json::obj(vec![
+                    ("near_bound", n(&self.by_severity[0])),
+                    ("significant", n(&self.by_severity[1])),
+                ]),
+            ),
+            (
+                "by_detector",
+                Json::obj(vec![
+                    ("gemm_checksum", n(&self.by_detector[0])),
+                    ("gemm_aggregate", n(&self.by_detector[1])),
+                    ("eb_bound", n(&self.by_detector[2])),
+                    ("scrub_exact", n(&self.by_detector[3])),
+                ]),
+            ),
+            (
+                "by_resolution",
+                Json::obj(
+                    RESOLUTION_KIND_NAMES
+                        .iter()
+                        .zip(&self.by_resolution)
+                        .map(|(&k, c)| (k, n(c)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// The `events` server-op payload: counts plus the newest `max`
+    /// event rows.
+    pub fn events_json(&self, max: usize) -> Json {
+        Json::obj(vec![
+            ("counts", self.counts_json()),
+            (
+                "events",
+                Json::Arr(self.recent(max).iter().map(FaultEvent::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detect::event::{Detector, Resolution, Severity, SiteId, UnitRef};
+    use crate::detect::Recovery;
+
+    fn ev(i: u32) -> FaultEvent {
+        FaultEvent {
+            tick: i as u64,
+            site: SiteId::Eb(i % 3),
+            unit: UnitRef::GemmRow { row: i },
+            detector: Detector::GemmChecksum,
+            severity: if i % 2 == 0 { Severity::NearBound } else { Severity::Significant },
+            resolution: Resolution::Recovered(Recovery::RecomputeUnit),
+        }
+    }
+
+    #[test]
+    fn records_and_reads_back_in_order() {
+        let j = Journal::with_capacity(16);
+        for i in 0..5 {
+            j.record(&ev(i));
+        }
+        assert_eq!(j.total(), 5);
+        assert_eq!(j.len(), 5);
+        assert_eq!(j.dropped(), 0);
+        let got = j.since(0);
+        assert_eq!(got.len(), 5);
+        for (i, e) in got.iter().enumerate() {
+            assert_eq!(*e, ev(i as u32));
+        }
+        assert_eq!(j.since(3).len(), 2);
+        assert_eq!(j.recent(2), j.since(3));
+    }
+
+    #[test]
+    fn wrap_keeps_newest_and_exact_totals() {
+        let j = Journal::with_capacity(8);
+        for i in 0..20 {
+            j.record(&ev(i));
+        }
+        assert_eq!(j.total(), 20);
+        assert_eq!(j.len(), 8);
+        assert_eq!(j.dropped(), 12);
+        let got = j.since(0);
+        assert_eq!(got.len(), 8, "only the resident tail survives wrap");
+        for (k, e) in got.iter().enumerate() {
+            assert_eq!(*e, ev(12 + k as u32), "oldest-first tail");
+        }
+        // Aggregates never lose wrapped events.
+        let c = j.counts_json();
+        assert_eq!(c.path(&["by_severity", "near_bound"]).and_then(Json::as_usize), Some(10));
+        assert_eq!(c.path(&["by_severity", "significant"]).and_then(Json::as_usize), Some(10));
+        assert_eq!(c.get("dropped").and_then(Json::as_usize), Some(12));
+    }
+
+    #[test]
+    fn concurrent_writers_never_tear_readers() {
+        use std::sync::Arc;
+        let j = Arc::new(Journal::with_capacity(32));
+        let writers: Vec<_> = (0..4)
+            .map(|w| {
+                let j = Arc::clone(&j);
+                std::thread::spawn(move || {
+                    for i in 0..500u32 {
+                        j.record(&ev(w * 1000 + i));
+                    }
+                })
+            })
+            .collect();
+        // Reader races the writers; every event it sees must decode to a
+        // value some writer actually wrote (tick == row field by
+        // construction of `ev`).
+        for _ in 0..200 {
+            for e in j.recent(32) {
+                if let UnitRef::GemmRow { row } = e.unit {
+                    assert_eq!(e.tick, row as u64, "torn slot surfaced");
+                } else {
+                    panic!("impossible unit decoded: {e:?}");
+                }
+            }
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        assert_eq!(j.total(), 2000);
+    }
+
+    #[test]
+    fn events_json_shape() {
+        let j = Journal::with_capacity(4);
+        j.record(&ev(1));
+        let doc = j.events_json(8);
+        assert_eq!(doc.path(&["counts", "total"]).and_then(Json::as_usize), Some(1));
+        assert!(matches!(doc.get("events"), Some(Json::Arr(a)) if a.len() == 1));
+    }
+}

@@ -1,0 +1,56 @@
+//! Unified fault-event pipeline (PR 5): typed detection verdicts, a
+//! severity-ranked recovery ladder, and an auditable event journal.
+//!
+//! The paper's two detectors (Eq-3b GEMM checksums, Eq-5 EmbeddingBag
+//! bounds) fire from five sites that grew up independently — GEMM row
+//! verify, the fused EB path, the shard router's retry/failover loop,
+//! the scrubber, and the BoundOnly batch aggregate. This subsystem makes
+//! a detection a **first-class event** with one vocabulary and one
+//! emission path:
+//!
+//! * [`event`] — [`FaultEvent`]: site ([`SiteId`]), implicated unit
+//!   ([`UnitRef`]), detector, [`Severity`] (classified significant-bit
+//!   vs near-bound from the detector's own margin), and [`Resolution`]
+//!   (the terminal state of the recovery walk).
+//! * [`recovery`] — the single ordered ladder `RecomputeUnit →
+//!   RetryBatch → FailoverReplica → QuarantineAndRepair → Degrade` with
+//!   per-site-class applicability; every site consults it instead of
+//!   hand-rolling its own flow.
+//! * [`journal`] — a lock-free fixed-capacity ring recording every
+//!   event with its resolution and tick; queryable via the `events`
+//!   server op, summarized in `metrics_snapshot()`, and the substrate
+//!   `fault::campaign` assertions are expressed over ("an injected
+//!   fault produces a matching event", "detected corruption is never
+//!   served").
+//! * [`sink`] — the one [`EventSink`] handle sites emit through; the
+//!   emission path fans each event to the journal, the flagged policy
+//!   site's telemetry (via [`SiteCtx`] / the site's own handle, so
+//!   escalation never depends on sink wiring), and the serving metrics
+//!   counters.
+//!
+//! # Contracts
+//!
+//! * **Clean path untouched** — emission happens only on flags; served
+//!   bytes are bit-identical to the pre-PR-5 engine on clean data, and
+//!   the steady-state zero-allocation invariant
+//!   (`rust/tests/zero_alloc.rs`) holds with the journal attached (it
+//!   is pre-sized at attach and records into fixed atomics).
+//! * **Every detection is journaled** — all five sites emit through the
+//!   sink; `rust/tests/detect_integration.rs` injects one fault per
+//!   site class and checks the single matching event.
+//! * **Resolutions are honest** — `Recovered(step)` is only recorded
+//!   when the step's re-check passed; a served-but-corrupt unit is
+//!   `Degraded`, never silent.
+
+pub mod event;
+pub mod journal;
+pub mod recovery;
+pub mod sink;
+
+pub use event::{
+    Detector, FaultEvent, Resolution, Severity, SiteId, UnitRef, EB_SIGNIFICANT_MARGIN,
+    GEMM_SIGNIFICANT_DELTA, LOCAL_REPLICA, SCRUB_SIGNIFICANT_DELTA,
+};
+pub use journal::{Journal, DEFAULT_JOURNAL_CAPACITY};
+pub use recovery::{first_step, ladder, next_step, Recovery, SiteClass};
+pub use sink::{EventSink, SiteCtx};

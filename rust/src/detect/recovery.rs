@@ -1,0 +1,219 @@
+//! The recovery ladder: one ordered menu of recovery actions, with
+//! per-site-class applicability.
+//!
+//! Before PR 5 every detection site hand-rolled its own recovery —
+//! `abft/gemm.rs` recomputed a row and re-requantized it, the shard
+//! router retried on the same replica then failed the shard-batch over,
+//! the engine retried a whole batch for the BoundOnly aggregate, the
+//! scrubber quarantined on a hit. Those are all rungs of **one** ladder,
+//! ordered cheapest-first:
+//!
+//! ```text
+//!   RecomputeUnit → RetryBatch → FailoverReplica → QuarantineAndRepair → Degrade
+//! ```
+//!
+//! A site class walks only the rungs that make sense for it
+//! ([`ladder`]): a local GEMM row cannot fail over (there is no replica
+//! of the engine's weights), a sharded bag does not batch-retry (the
+//! router's failover re-serves the shard-batch from a sibling, which
+//! dominates it), and a scrub hit goes straight to quarantine (the row
+//! was not being served, so there is nothing to recompute). The walk's
+//! terminal state is what a [`crate::detect::Resolution`] records:
+//! `Recovered(step)` when a rung's re-check passed, `Escalated(step)`
+//! when the next rung belongs to an outer layer (the engine owns
+//! `RetryBatch`), `Degraded` when the ladder is exhausted.
+//!
+//! Keeping the order and applicability *here* — and making every site
+//! consult [`next_step`] — is what lets a new scenario (a new detector,
+//! a new recovery rung) be added in one place instead of five.
+
+use crate::abft::AbftGemm;
+use crate::quant::{requantize_cols_into, RequantEpilogue};
+
+/// One rung of the recovery ladder, ordered cheapest-first. The
+/// discriminants are the wire encoding ([`crate::detect::FaultEvent`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Recovery {
+    /// Recompute the single implicated unit (GEMM row + re-requantize;
+    /// EB bag re-gather on the same replica). Clears transient
+    /// compute/bus faults.
+    RecomputeUnit = 0,
+    /// Re-run the whole batch's forward pass (the engine's rung — the
+    /// only recovery that can follow a non-localizing aggregate flag).
+    RetryBatch = 1,
+    /// Re-serve the whole shard-batch from a healthy sibling replica
+    /// (sharded EB only; everything the corrupt replica computed is
+    /// suspect).
+    FailoverReplica = 2,
+    /// Quarantine the corrupted replica and queue a checksum-verified
+    /// repair (sharded stores; pairs with [`Recovery::FailoverReplica`]
+    /// on the serving path, stands alone for scrub hits).
+    QuarantineAndRepair = 3,
+    /// Serve the value anyway and mark the batch degraded — the ladder's
+    /// explicit floor, never silent.
+    Degrade = 4,
+}
+
+/// Number of [`Recovery`] rungs (aggregate-counter sizing).
+pub const RECOVERY_STEPS: usize = 5;
+
+impl Recovery {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Recovery::RecomputeUnit => "recompute_unit",
+            Recovery::RetryBatch => "retry_batch",
+            Recovery::FailoverReplica => "failover_replica",
+            Recovery::QuarantineAndRepair => "quarantine_and_repair",
+            Recovery::Degrade => "degrade",
+        }
+    }
+
+    /// Inverse of the `repr(u8)` discriminant (wire decode).
+    pub fn from_index(i: usize) -> Self {
+        match i {
+            0 => Recovery::RecomputeUnit,
+            1 => Recovery::RetryBatch,
+            2 => Recovery::FailoverReplica,
+            3 => Recovery::QuarantineAndRepair,
+            _ => Recovery::Degrade,
+        }
+    }
+}
+
+/// The detection-site classes the ladder is filtered by.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SiteClass {
+    /// Local (engine-owned) GEMM row verification.
+    GemmRow,
+    /// The BoundOnly batch-aggregate GEMM check — cannot localize, so
+    /// no per-unit rung applies.
+    GemmAggregate,
+    /// Local (unsharded) EmbeddingBag verification.
+    EbLocal,
+    /// Shard-router EmbeddingBag verification over replicas.
+    EbSharded,
+    /// Scrubber hit on a shard replica.
+    ScrubSharded,
+    /// Scrubber hit on the engine's own tables — repair is an operator
+    /// action (see `resilience_integration.rs`), nothing automatic.
+    ScrubLocal,
+}
+
+/// The rungs applicable to one site class, in ladder order.
+pub fn ladder(class: SiteClass) -> &'static [Recovery] {
+    use Recovery::*;
+    match class {
+        SiteClass::GemmRow => &[RecomputeUnit, RetryBatch, Degrade],
+        SiteClass::GemmAggregate => &[RetryBatch, Degrade],
+        SiteClass::EbLocal => &[RecomputeUnit, RetryBatch, Degrade],
+        SiteClass::EbSharded => &[RecomputeUnit, FailoverReplica, QuarantineAndRepair, Degrade],
+        SiteClass::ScrubSharded => &[QuarantineAndRepair],
+        SiteClass::ScrubLocal => &[],
+    }
+}
+
+/// The first rung of a class's ladder, if any (an empty ladder means the
+/// event resolves [`crate::detect::Resolution::DetectedOnly`]).
+pub fn first_step(class: SiteClass) -> Option<Recovery> {
+    ladder(class).first().copied()
+}
+
+/// The rung after `after` in `class`'s ladder, or `None` when `after` is
+/// the class's last (or not applicable at all — a misuse that resolves
+/// to "nothing further").
+pub fn next_step(class: SiteClass, after: Recovery) -> Option<Recovery> {
+    let steps = ladder(class);
+    steps
+        .iter()
+        .position(|&s| s == after)
+        .and_then(|i| steps.get(i + 1).copied())
+}
+
+/// The `RecomputeUnit` rung for a flagged GEMM row, shared by every
+/// caller that used to hand-roll it: recompute the row's `C_temp` from A
+/// and the packed (encoded) B through the production kernel, re-verify
+/// Eq 3b on the repaired accumulator, and re-requantize the row so the
+/// output equals the two-pass requantize-after-recompute flow
+/// bit-for-bit. Returns whether the row verifies clean afterwards
+/// (`false` ⇒ the operand itself is corrupt; the caller escalates to the
+/// next applicable rung).
+pub fn recompute_gemm_row(
+    abft: &AbftGemm,
+    x: &[u8],
+    row: usize,
+    m: usize,
+    epi: &RequantEpilogue<'_>,
+    c_temp: &mut [i32],
+    out: &mut [u8],
+) -> bool {
+    let n = abft.n;
+    let nt = n + 1;
+    abft.recompute_row(x, row, c_temp, m);
+    requantize_cols_into(
+        &c_temp[row * nt..(row + 1) * nt],
+        1,
+        nt,
+        0..n,
+        &epi.a_row_sums[row..row + 1],
+        epi.b_col_sums,
+        &epi.spec,
+        epi.relu_floor,
+        &mut out[row * n..(row + 1) * n],
+    );
+    crate::abft::gemm::row_ok(&c_temp[row * nt..(row + 1) * nt], n, abft.modulus)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_order_is_global_and_monotone() {
+        // Every class's ladder is a subsequence of the one global order.
+        for class in [
+            SiteClass::GemmRow,
+            SiteClass::GemmAggregate,
+            SiteClass::EbLocal,
+            SiteClass::EbSharded,
+            SiteClass::ScrubSharded,
+            SiteClass::ScrubLocal,
+        ] {
+            let steps = ladder(class);
+            for w in steps.windows(2) {
+                assert!(w[0] < w[1], "{class:?}: {steps:?} out of ladder order");
+            }
+        }
+    }
+
+    #[test]
+    fn per_class_applicability() {
+        // Local sites have no replica to fail over to.
+        assert!(!ladder(SiteClass::GemmRow).contains(&Recovery::FailoverReplica));
+        assert!(!ladder(SiteClass::EbLocal).contains(&Recovery::FailoverReplica));
+        // The aggregate cannot name a row, so no per-unit recompute.
+        assert_eq!(first_step(SiteClass::GemmAggregate), Some(Recovery::RetryBatch));
+        // Sharded bags escalate recompute → failover (not batch retry).
+        assert_eq!(
+            next_step(SiteClass::EbSharded, Recovery::RecomputeUnit),
+            Some(Recovery::FailoverReplica)
+        );
+        assert_eq!(
+            next_step(SiteClass::EbSharded, Recovery::QuarantineAndRepair),
+            Some(Recovery::Degrade)
+        );
+        // Scrub hits jump straight to quarantine (sharded) or report only.
+        assert_eq!(first_step(SiteClass::ScrubSharded), Some(Recovery::QuarantineAndRepair));
+        assert_eq!(first_step(SiteClass::ScrubLocal), None);
+        // Last rungs terminate.
+        assert_eq!(next_step(SiteClass::GemmRow, Recovery::Degrade), None);
+        assert_eq!(next_step(SiteClass::ScrubSharded, Recovery::QuarantineAndRepair), None);
+    }
+
+    #[test]
+    fn from_index_roundtrip() {
+        for i in 0..RECOVERY_STEPS {
+            assert_eq!(Recovery::from_index(i) as usize, i);
+        }
+    }
+}

@@ -1,0 +1,292 @@
+//! The event sink: the single handle every detection site emits through.
+//!
+//! One emission call fans a [`FaultEvent`] out to the three consumers
+//! that were previously fed by hand at each of the five detection
+//! sites:
+//!
+//! 1. the [`Journal`] (always — the auditable record),
+//! 2. `policy::telemetry` — the flagged site's `flags` counter, which
+//!    drives the escalation controller. This leg rides the
+//!    [`SiteCtx::emit`] wrapper (or the site's own telemetry handle at
+//!    the EB sites), **not** a sink-side registry: the site already
+//!    holds its `&SiteTelemetry`, so escalation keeps working even for
+//!    a standalone model whose sink is detached. The scrubber is not a
+//!    policy site and feeds no flags.
+//! 3. `coordinator::metrics` — the `detections` / `shard_detections` /
+//!    `scrub_hits` counter families, routed by detector and unit.
+//!
+//! The handle is cheap and cloneable (`Option<Arc>` like
+//! [`PolicyHandle`]); a **detached** sink journals nothing, so
+//! standalone models (tools, unit tests) pay one `Option` check. The
+//! engine attaches one sink at construction and threads it into the
+//! model (and from there into the shard store), wiring metrics
+//! immediately.
+//!
+//! Emission happens **only on faults** — the clean path never calls
+//! `emit` — so everything here is off the latency path and the
+//! steady-state zero-allocation invariant is untouched.
+//!
+//! [`PolicyHandle`]: crate::policy::PolicyHandle
+
+use crate::coordinator::metrics::Metrics;
+use crate::detect::event::{Detector, FaultEvent, Resolution, Severity, SiteId, UnitRef};
+use crate::detect::journal::{Journal, DEFAULT_JOURNAL_CAPACITY};
+use crate::detect::LOCAL_REPLICA;
+use crate::policy::SiteTelemetry;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// Shared core of an attached sink.
+pub struct SinkCore {
+    journal: Journal,
+    /// Journal timestamp: the engine advances it once per scored batch.
+    tick: AtomicU64,
+    /// Wired by the engine at construction.
+    metrics: OnceLock<Arc<Metrics>>,
+}
+
+/// The emit handle. `Default`/[`EventSink::detached`] is a no-op.
+#[derive(Clone, Default)]
+pub struct EventSink(Option<Arc<SinkCore>>);
+
+/// The process-wide detached sink, for call sites that need a
+/// `&'static EventSink` (e.g. [`SiteCtx::bare`]).
+static DETACHED: EventSink = EventSink::detached();
+
+impl EventSink {
+    /// A no-op sink (`const`, so it can back statics).
+    pub const fn detached() -> Self {
+        Self(None)
+    }
+
+    /// An attached sink with a journal of `capacity` events.
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self(Some(Arc::new(SinkCore {
+            journal: Journal::with_capacity(capacity),
+            tick: AtomicU64::new(0),
+            metrics: OnceLock::new(),
+        })))
+    }
+
+    /// An attached sink at the default capacity
+    /// ([`DEFAULT_JOURNAL_CAPACITY`]).
+    pub fn attached() -> Self {
+        Self::with_capacity(DEFAULT_JOURNAL_CAPACITY)
+    }
+
+    pub fn is_attached(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// The journal, when attached.
+    pub fn journal(&self) -> Option<&Journal> {
+        self.0.as_deref().map(|c| &c.journal)
+    }
+
+    /// Wire the metrics counters (idempotent; first wins).
+    pub fn attach_metrics(&self, metrics: Arc<Metrics>) {
+        if let Some(core) = &self.0 {
+            let _ = core.metrics.set(metrics);
+        }
+    }
+
+    /// Advance the journal timestamp (the engine: once per batch).
+    pub fn advance_tick(&self) {
+        if let Some(core) = &self.0 {
+            core.tick.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Current journal tick (0 when detached).
+    pub fn tick(&self) -> u64 {
+        self.0.as_deref().map_or(0, |c| c.tick.load(Ordering::Relaxed))
+    }
+
+    /// Emit one detection event: journal it and route the matching
+    /// metrics counter. No-op when detached. Policy-site flags are fed
+    /// by the caller's telemetry handle (see [`SiteCtx::emit`] and the
+    /// module docs) — not here — so escalation does not depend on sink
+    /// wiring.
+    pub fn emit(
+        &self,
+        site: SiteId,
+        unit: UnitRef,
+        detector: Detector,
+        severity: Severity,
+        resolution: Resolution,
+    ) {
+        let Some(core) = &self.0 else { return };
+        let ev = FaultEvent {
+            tick: core.tick.load(Ordering::Relaxed),
+            site,
+            unit,
+            detector,
+            severity,
+            resolution,
+        };
+        core.journal.record(&ev);
+        // Metrics routing: one detection family per detector/unit.
+        if let Some(m) = core.metrics.get() {
+            match (detector, unit) {
+                (Detector::ScrubExact, _) => {
+                    m.scrub_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                (Detector::EbBound, UnitRef::Bag { replica, .. })
+                    if replica != LOCAL_REPLICA =>
+                {
+                    m.shard_detections.fetch_add(1, Ordering::Relaxed);
+                }
+                _ => {
+                    m.detections.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+/// One detection site's emission context: the sink, the site's identity,
+/// and its (optional) policy telemetry — bundled so hot-path signatures
+/// carry one argument instead of three. Constructed per layer/table
+/// invocation by the model; [`SiteCtx::bare`] gives standalone callers
+/// (layer unit tests, baselines) a detached context.
+#[derive(Clone, Copy)]
+pub struct SiteCtx<'a> {
+    pub sink: &'a EventSink,
+    pub site: SiteId,
+    pub telem: Option<&'a SiteTelemetry>,
+}
+
+impl<'a> SiteCtx<'a> {
+    pub fn new(sink: &'a EventSink, site: SiteId, telem: Option<&'a SiteTelemetry>) -> Self {
+        Self { sink, site, telem }
+    }
+
+    /// Detached-sink context (site id is a placeholder — nothing is
+    /// emitted through a detached sink).
+    pub fn bare(telem: Option<&'a SiteTelemetry>) -> Self {
+        Self { sink: &DETACHED, site: SiteId::Gemm(0), telem }
+    }
+
+    /// Emit at this site: raise the site's telemetry flag (the
+    /// escalation controller's signal — works even with a detached
+    /// sink) and fan the event to journal + metrics.
+    #[inline]
+    pub fn emit(
+        &self,
+        unit: UnitRef,
+        detector: Detector,
+        severity: Severity,
+        resolution: Resolution,
+    ) {
+        if let Some(t) = self.telem {
+            t.note_flags(1);
+        }
+        self.sink.emit(self.site, unit, detector, severity, resolution);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detect::Recovery;
+
+    #[test]
+    fn detached_sink_is_a_noop() {
+        let s = EventSink::detached();
+        assert!(!s.is_attached());
+        assert!(s.journal().is_none());
+        s.advance_tick();
+        assert_eq!(s.tick(), 0);
+        s.emit(
+            SiteId::Gemm(0),
+            UnitRef::BatchAggregate,
+            Detector::GemmAggregate,
+            Severity::NearBound,
+            Resolution::Degraded,
+        );
+    }
+
+    #[test]
+    fn emit_journals_with_tick() {
+        let s = EventSink::with_capacity(8);
+        s.advance_tick();
+        s.advance_tick();
+        s.emit(
+            SiteId::Eb(1),
+            UnitRef::Bag { request: 4, replica: 0 },
+            Detector::EbBound,
+            Severity::Significant,
+            Resolution::Recovered(Recovery::FailoverReplica),
+        );
+        let j = s.journal().unwrap();
+        assert_eq!(j.total(), 1);
+        let ev = j.recent(1)[0];
+        assert_eq!(ev.tick, 2);
+        assert_eq!(ev.site, SiteId::Eb(1));
+    }
+
+    #[test]
+    fn site_ctx_emit_raises_flags_even_with_a_detached_sink() {
+        // The escalation signal must not depend on sink wiring: a
+        // standalone model with a hand-attached policy still counts
+        // flags through its telemetry handle.
+        let telem = SiteTelemetry::default();
+        let ctx = SiteCtx::bare(Some(&telem));
+        ctx.emit(
+            UnitRef::GemmRow { row: 0 },
+            Detector::GemmChecksum,
+            Severity::Significant,
+            Resolution::DetectedOnly,
+        );
+        assert_eq!(telem.flags.load(Ordering::Relaxed), 1);
+        // And through an attached sink, the journal records too.
+        let s = EventSink::with_capacity(4);
+        let ctx = SiteCtx::new(&s, SiteId::Gemm(3), Some(&telem));
+        ctx.emit(
+            UnitRef::GemmRow { row: 1 },
+            Detector::GemmChecksum,
+            Severity::NearBound,
+            Resolution::Recovered(Recovery::RecomputeUnit),
+        );
+        assert_eq!(telem.flags.load(Ordering::Relaxed), 2);
+        assert_eq!(s.journal().unwrap().total(), 1);
+    }
+
+    #[test]
+    fn emit_routes_metrics_families() {
+        let s = EventSink::with_capacity(8);
+        let m = Arc::new(Metrics::new());
+        s.attach_metrics(Arc::clone(&m));
+        s.emit(
+            SiteId::Gemm(0),
+            UnitRef::GemmRow { row: 1 },
+            Detector::GemmChecksum,
+            Severity::Significant,
+            Resolution::Recovered(Recovery::RecomputeUnit),
+        );
+        s.emit(
+            SiteId::Eb(0),
+            UnitRef::Bag { request: 0, replica: LOCAL_REPLICA },
+            Detector::EbBound,
+            Severity::Significant,
+            Resolution::Escalated(Recovery::RetryBatch),
+        );
+        s.emit(
+            SiteId::Eb(0),
+            UnitRef::Bag { request: 0, replica: 1 },
+            Detector::EbBound,
+            Severity::Significant,
+            Resolution::Recovered(Recovery::FailoverReplica),
+        );
+        s.emit(
+            SiteId::Eb(0),
+            UnitRef::ScrubSlot { replica: 1, row: 3 },
+            Detector::ScrubExact,
+            Severity::NearBound,
+            Resolution::Escalated(Recovery::QuarantineAndRepair),
+        );
+        assert_eq!(m.detections.load(Ordering::Relaxed), 2, "gemm row + local bag");
+        assert_eq!(m.shard_detections.load(Ordering::Relaxed), 1);
+        assert_eq!(m.scrub_hits.load(Ordering::Relaxed), 1);
+    }
+}

@@ -4,10 +4,13 @@
 //! recompute-on-detect policy.
 
 use crate::abft::{AbftGemm, Verdict};
+use crate::detect::{
+    recovery, Detector, Recovery, Resolution, Severity, SiteClass, SiteCtx, UnitRef,
+};
 use crate::dlrm::config::Protection;
 use crate::gemm::{gemm_requant_exec_into, PackedB};
-use crate::policy::{DetectionMode, SiteTelemetry};
-use crate::quant::{requantize_cols_into, QParams, RequantEpilogue, RequantParams, RequantSpec};
+use crate::policy::DetectionMode;
+use crate::quant::{QParams, RequantEpilogue, RequantParams, RequantSpec};
 use crate::util::rng::Pcg32;
 use crate::util::scratch::{grow, GemmScratch};
 use std::sync::Arc;
@@ -140,28 +143,43 @@ impl AbftLinear {
         scratch: &mut GemmScratch,
         out: &mut [u8],
     ) -> LayerReport {
-        self.forward_policied(x, m, x_qparams, DetectionMode::Full, None, scratch, out)
+        self.forward_policied(
+            x,
+            m,
+            x_qparams,
+            DetectionMode::Full,
+            SiteCtx::bare(None),
+            scratch,
+            out,
+        )
     }
 
     /// [`AbftLinear::forward_into`] under an explicit [`DetectionMode`]
     /// (the policy layer's per-site dial). `Full` is exactly
     /// `forward_into`; `Sampled(n)` verifies 1-in-`n` rows (phase drawn
-    /// from `telem` so coverage rotates); `BoundOnly` runs one
-    /// batch-aggregate congruence (a flag cannot name the row, so no
+    /// from the site's telemetry so coverage rotates); `BoundOnly` runs
+    /// one batch-aggregate congruence (a flag cannot name the row, so no
     /// local recompute happens — recovery is the engine's batch retry,
     /// reported as one flagged row); `Off` skips verification. Clean
     /// outputs are bit-identical across all modes — verification never
     /// writes the accumulator or the quantized payload.
     ///
-    /// When `telem` is given, the site's units / verified-units / flags
-    /// counters are bumped (the control plane's telemetry feed).
+    /// `site` is the layer's emission context ([`SiteCtx`]): its
+    /// telemetry (units / verified units) is bumped when present, and
+    /// every detection is emitted as a [`crate::detect::FaultEvent`]
+    /// through the site's sink — severity classified from the Eq-3b
+    /// residual magnitude, resolution from the recovery-ladder walk
+    /// (`Recovered(RecomputeUnit)` when the row re-verifies after
+    /// recompute, `Escalated(RetryBatch)` when the operand itself is
+    /// corrupt and the engine's batch retry is the next applicable
+    /// rung).
     pub fn forward_policied(
         &self,
         x: &[u8],
         m: usize,
         x_qparams: QParams,
         mode: DetectionMode,
-        telem: Option<&SiteTelemetry>,
+        site: SiteCtx<'_>,
         scratch: &mut GemmScratch,
         out: &mut [u8],
     ) -> LayerReport {
@@ -189,22 +207,22 @@ impl AbftLinear {
             let c_temp = grow(c_temp, m * nt);
             gemm_requant_exec_into(x, &self.abft.packed, m, &epi, c_temp, out);
             let mut rows_verified = m;
+            let mut aggregate_flag = false;
             let verdict = match mode {
                 DetectionMode::Full => self.abft.verify(c_temp, m),
                 DetectionMode::Sampled(n) => {
-                    let phase = telem.map_or(0, |t| t.sample_phase(m as u64));
+                    let phase = site.telem.map_or(0, |t| t.sample_phase(m as u64));
                     rows_verified = AbftGemm::sampled_rows(m, n, phase);
                     self.abft.verify_sampled(c_temp, m, n, phase)
                 }
                 DetectionMode::BoundOnly => {
-                    if self.abft.verify_aggregate(c_temp, m) {
-                        Verdict { corrupted_rows: Vec::new() }
-                    } else {
+                    if !self.abft.verify_aggregate(c_temp, m) {
                         // The aggregate cannot localize: report one flag
                         // and leave recovery to the engine's batch retry.
+                        aggregate_flag = true;
                         report.rows_flagged = 1;
-                        Verdict { corrupted_rows: Vec::new() }
                     }
+                    Verdict { corrupted_rows: Vec::new() }
                 }
                 DetectionMode::Off => {
                     rows_verified = 0;
@@ -212,25 +230,70 @@ impl AbftLinear {
                 }
             };
             report.rows_flagged += verdict.err_count();
-            if let Some(t) = telem {
-                t.record(m as u64, rows_verified as u64, report.rows_flagged as u64);
+            if let Some(t) = site.telem {
+                t.record(m as u64, rows_verified as u64);
             }
-            if self.protection == Protection::DetectRecompute && !verdict.clean() {
-                for &row in &verdict.corrupted_rows {
-                    self.abft.recompute_row(x, row, c_temp, m);
+            if aggregate_flag {
+                // BoundOnly flag → the first applicable ladder rung is
+                // the engine's batch retry (recompute cannot run without
+                // a row to name). With no recompute reference the delta
+                // magnitude cannot be bounded (the residual is only
+                // meaningful mod 127), so classify worst-case.
+                let resolution = if self.protection == Protection::DetectRecompute {
+                    Resolution::escalated_or_degraded(recovery::first_step(
+                        SiteClass::GemmAggregate,
+                    ))
+                } else {
+                    Resolution::DetectedOnly
+                };
+                site.emit(
+                    UnitRef::BatchAggregate,
+                    Detector::GemmAggregate,
+                    Severity::Significant,
+                    resolution,
+                );
+            }
+            let recompute = self.protection == Protection::DetectRecompute;
+            for &row in &verdict.corrupted_rows {
+                let (severity, resolution) = if !recompute {
+                    // Detect-only: no recompute reference, so the delta
+                    // magnitude cannot be bounded — classify worst-case.
+                    (Severity::Significant, Resolution::DetectedOnly)
+                } else {
                     report.rows_recomputed += 1;
-                    requantize_cols_into(
-                        &c_temp[row * nt..(row + 1) * nt],
-                        1,
-                        nt,
-                        0..self.n,
-                        &epi.a_row_sums[row..row + 1],
-                        epi.b_col_sums,
-                        &epi.spec,
-                        epi.relu_floor,
-                        &mut out[row * self.n..(row + 1) * self.n],
-                    );
-                }
+                    // The recompute gives the severity reference: the
+                    // residual shift across the recompute IS the injected
+                    // delta when the fault was transient.
+                    let before = self.abft.row_residual(c_temp, m, row);
+                    let ok = recovery::recompute_gemm_row(&self.abft, x, row, m, &epi, c_temp, out);
+                    let after = self.abft.row_residual(c_temp, m, row);
+                    if ok && after != before {
+                        // Transient fault repaired: |before − after| is
+                        // exactly the corruption that would have been
+                        // served.
+                        (
+                            Severity::from_gemm_delta(before - after),
+                            Resolution::Recovered(Recovery::RecomputeUnit),
+                        )
+                    } else {
+                        // Recompute reproduced the flag — the operand
+                        // itself is corrupt (magnitude unbounded ⇒
+                        // Significant); escalate to the next rung.
+                        (
+                            Severity::Significant,
+                            Resolution::escalated_or_degraded(recovery::next_step(
+                                SiteClass::GemmRow,
+                                Recovery::RecomputeUnit,
+                            )),
+                        )
+                    }
+                };
+                site.emit(
+                    UnitRef::GemmRow { row: row as u32 },
+                    Detector::GemmChecksum,
+                    severity,
+                    resolution,
+                );
             }
         } else {
             let c_temp = grow(c_temp, m * self.n);

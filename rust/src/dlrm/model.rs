@@ -3,6 +3,10 @@
 //! latency operators) and a recompute-on-detect recovery policy.
 
 use crate::abft::{EbChecksum, FusedEbAbft};
+use crate::detect::{
+    recovery, Detector, EventSink, Recovery, Resolution, Severity, SiteClass, SiteCtx, SiteId,
+    UnitRef, LOCAL_REPLICA,
+};
 use crate::dlrm::config::{DlrmConfig, Protection};
 use crate::dlrm::interaction::pairwise_interaction_into;
 use crate::dlrm::layer::{AbftLinear, LayerReport};
@@ -139,7 +143,7 @@ impl EbStage for LocalEbStage {
             |req0, chunk| {
                 let mut local = EbStageReport::default();
                 for (bi, fchunk) in chunk.chunks_mut(groups * d).enumerate() {
-                    model.eb_for_request(&requests[req0 + bi], fchunk, &mut local);
+                    model.eb_for_request(req0 + bi, &requests[req0 + bi], fchunk, &mut local);
                 }
                 total.lock().unwrap().absorb(&local);
             },
@@ -176,6 +180,12 @@ pub struct DlrmModel {
     /// pre-policy model. GEMM site order is bottom layers, top layers,
     /// head; EB sites are global table ids.
     pub policy: PolicyHandle,
+    /// Fault-event emission handle ([`crate::detect`]): every detection
+    /// this model's sites raise flows through here to the journal,
+    /// policy telemetry, and serving metrics. Detached by default (a
+    /// standalone model emits nothing); the engine attaches its sink at
+    /// construction, and the shard store inherits it.
+    pub events: EventSink,
 }
 
 impl DlrmModel {
@@ -221,6 +231,7 @@ impl DlrmModel {
             top_mean: Vec::new(),
             top_std: Vec::new(),
             policy: PolicyHandle::default(),
+            events: EventSink::detached(),
         };
         model.calibrate(&mut rng);
         model
@@ -459,7 +470,12 @@ impl DlrmModel {
         if let Some(s) = self.policy.sites() {
             s.note_served(mode, m as u64);
         }
-        layer.forward_policied(x, m, x_qparams, mode, self.policy.gemm_telem(site), gemm, out)
+        let ctx = SiteCtx::new(
+            &self.events,
+            SiteId::Gemm(site as u32),
+            self.policy.gemm_telem(site),
+        );
+        layer.forward_policied(x, m, x_qparams, mode, ctx, gemm, out)
     }
 
     /// All tables' bags for one request, written into its `(1+T)·d`
@@ -468,7 +484,13 @@ impl DlrmModel {
     /// decides whether the bag runs the fused checked kernel, an
     /// unchecked gather (`Sampled` skip / `Off`), or the relaxed-bound
     /// check (`BoundOnly`) — all bit-identical in output on clean data.
-    fn eb_for_request(&self, req: &DlrmRequest, fchunk: &mut [f32], flags: &mut EbStageReport) {
+    fn eb_for_request(
+        &self,
+        req_ix: usize,
+        req: &DlrmRequest,
+        fchunk: &mut [f32],
+        flags: &mut EbStageReport,
+    ) {
         let d = self.cfg.embedding_dim;
         for (t, (table, fused)) in self.tables.iter().zip(&self.fused).enumerate() {
             let indices = &req.sparse[t];
@@ -481,29 +503,53 @@ impl DlrmModel {
             if !check {
                 bag_sum_8(table, indices, None, true, out);
                 if let Some(tl) = telem {
-                    tl.record(1, 0, 0);
+                    tl.record(1, 0);
                 }
                 continue;
             }
             // Fused gather+reduce+verify: same random-access streams
             // as the unprotected bag (abft::eb §Perf).
-            let mut bad =
-                fused.bag_sum_checked_scaled(table, indices, None, true, bound_scale, out);
-            let mut bag_flags = 0u64;
-            if bad {
-                bag_flags = 1;
+            let check0 =
+                fused.bag_sum_checked_scaled_ex(table, indices, None, true, bound_scale, out);
+            if check0.flagged() {
                 flags.flagged += 1;
-                if self.cfg.protection == Protection::DetectRecompute {
-                    flags.recomputed += 1;
-                    bad = fused
-                        .bag_sum_checked_scaled(table, indices, None, true, bound_scale, out);
-                    if bad {
-                        flags.unrecovered += 1;
-                    }
+                // Escalation signal: fed through the site's own handle,
+                // independent of sink wiring.
+                if let Some(tl) = telem {
+                    tl.note_flags(1);
                 }
+                let resolution = if self.cfg.protection == Protection::DetectRecompute {
+                    flags.recomputed += 1;
+                    let again = fused
+                        .bag_sum_checked_scaled(table, indices, None, true, bound_scale, out);
+                    if !again {
+                        // Transient: the re-gather verified clean.
+                        Resolution::Recovered(Recovery::RecomputeUnit)
+                    } else {
+                        flags.unrecovered += 1;
+                        // Persistent table corruption: locally there is
+                        // no replica; the next applicable rung is the
+                        // engine's batch retry (which re-reads the same
+                        // memory — the batch ends degraded if it also
+                        // flags, and the event trail shows the walk).
+                        Resolution::escalated_or_degraded(recovery::next_step(
+                            SiteClass::EbLocal,
+                            Recovery::RecomputeUnit,
+                        ))
+                    }
+                } else {
+                    Resolution::DetectedOnly
+                };
+                self.events.emit(
+                    SiteId::Eb(t as u32),
+                    UnitRef::Bag { request: req_ix as u32, replica: LOCAL_REPLICA },
+                    Detector::EbBound,
+                    Severity::from_eb_margin(check0.excess, check0.threshold),
+                    resolution,
+                );
             }
             if let Some(tl) = telem {
-                tl.record(1, 1, bag_flags);
+                tl.record(1, 1);
             }
         }
     }

@@ -357,6 +357,7 @@ impl DlrmModel {
             top_mean,
             top_std,
             policy: crate::policy::PolicyHandle::default(),
+            events: crate::detect::EventSink::detached(),
         })
     }
 }

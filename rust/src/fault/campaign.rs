@@ -7,6 +7,7 @@ use super::{flip_i32, flip_u8, restore_u8, BitRange, FaultModel};
 use crate::abft::eb::CheckPrecision;
 use crate::abft::{AbftGemm, EbChecksum};
 use crate::coordinator::Engine;
+use crate::detect::{Detector, EventSink, FaultEvent, Recovery, Resolution, Severity, SiteId};
 use crate::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
 use crate::embedding::{bag_sum_4, embedding_bag_8, QuantTable4, QuantTable8};
 use crate::policy::{DetectionMode, PolicyConfig};
@@ -417,14 +418,20 @@ impl Default for ShardCampaignConfig {
     }
 }
 
-/// Tallies from one shard campaign.
+/// Tallies from one shard campaign. Since PR 5 every detection-side
+/// field is a **journal query** over the store's fault-event pipeline
+/// (`detect::Journal`), not a counter diff: "the router detected" means
+/// "an `EbBound` event with the injected table's site id was journaled
+/// during the serve".
 #[derive(Clone, Debug, Default)]
 pub struct ShardCampaignResult {
     pub runs: usize,
-    /// Runs whose fault was flagged by the router while serving.
+    /// Runs whose fault was flagged by the router while serving
+    /// (journal: ≥1 `EbBound` event during the serve).
     pub served_detections: usize,
     /// Runs whose fault was caught only by the post-batch scrub sweep
-    /// (cold row, or a low-bit flip under the float bound).
+    /// (journal: ≥1 `ScrubExact` event; cold row, or a low-bit flip
+    /// under the float bound).
     pub scrub_detections: usize,
     /// Runs neither serving nor scrub caught (must be 0 — the scrubber's
     /// integer compare is exact).
@@ -434,19 +441,35 @@ pub struct ShardCampaignResult {
     pub repairs: usize,
     /// Served batches whose scores differed from the clean reference
     /// while the router HAD detected the fault (must be 0: a detected
-    /// corruption never reaches a response).
+    /// corruption never reaches a response — the journal invariant).
     pub detected_mismatches: usize,
     /// Score mismatches on runs the serving path did not detect (low-bit
     /// escapes — the paper's detection-rate story, not a failover bug).
     pub undetected_mismatches: usize,
     /// Replicas still quarantined after the end-of-run repair drain.
     pub unrepaired: usize,
+    /// Journaled events that misattribute the injected fault: wrong site
+    /// (≠ the injected table), or a serving resolution outside the
+    /// sharded-EB ladder, or a scrub resolution ≠
+    /// `Escalated(QuarantineAndRepair)` (the repair is queued, not yet
+    /// proven, when the event is journaled). Must be 0 — the event is
+    /// only useful if it names the fault correctly.
+    pub bad_attribution: usize,
+    /// Severity split of the journaled events (informational; the
+    /// Table-III-style significance classification).
+    pub significant_events: usize,
+    pub near_bound_events: usize,
 }
 
 /// Run the shard-failover campaign. Each run starts from a fully healthy,
-/// byte-identical store (the previous run's repair restored it).
+/// byte-identical store (the previous run's repair restored it). All
+/// detection assertions are journal queries: the injected fault must
+/// surface as a [`FaultEvent`] with the correct site, a ladder-legal
+/// resolution, and — when it was detected while serving — scores
+/// bit-identical to the clean reference ("detected corruption is never
+/// served").
 pub fn run_shard_campaign(cfg: &ShardCampaignConfig) -> ShardCampaignResult {
-    let model = DlrmModel::random(DlrmConfig {
+    let mut model = DlrmModel::random(DlrmConfig {
         num_dense: 4,
         embedding_dim: cfg.dim,
         bottom_mlp: vec![16, cfg.dim],
@@ -456,11 +479,17 @@ pub fn run_shard_campaign(cfg: &ShardCampaignConfig) -> ShardCampaignResult {
         dense_range: (0.0, 1.0),
         seed: cfg.seed ^ 0xD0D0,
     });
+    // Attach the fault-event pipeline BEFORE building the store, so the
+    // router (via the model) and the store's scrubbers share one
+    // journal.
+    model.events = EventSink::with_capacity(4096);
+    let sink = model.events.clone();
     let plan = ShardPlan::hash_placement(cfg.num_tables, cfg.num_shards, cfg.replicas);
     let store = Arc::new(ShardStore::from_model(&model, plan, cfg.rows.max(1)));
     let router = ShardRouter::new(Arc::clone(&store));
     let mut rng = Pcg32::new(cfg.seed);
     let mut result = ShardCampaignResult { runs: cfg.runs, ..Default::default() };
+    let journal = sink.journal().expect("campaign sink is attached");
 
     for _ in 0..cfg.runs {
         let reqs = model.synth_requests(cfg.batch, &mut rng);
@@ -473,12 +502,21 @@ pub fn run_shard_campaign(cfg: &ShardCampaignConfig) -> ShardCampaignResult {
         let bit = cfg.bit_range.pick_bit(&mut rng, 8);
         store.flip_table_byte(t, replica, byte, 1 << bit);
 
-        let pre_detect = store.stats.detections.load(Ordering::Relaxed);
         let pre_fail = store.stats.failovers.load(Ordering::Relaxed);
         let pre_quar = store.stats.quarantines.load(Ordering::Relaxed);
 
+        let mark = journal.total();
         let (scores, _report) = model.forward_with(&reqs, &router);
-        let served = store.stats.detections.load(Ordering::Relaxed) > pre_detect;
+        let serve_events = journal.since(mark);
+        // Injected-fault → matching event: every serve-time event must
+        // name the injected table and carry a sharded-EB-ladder
+        // resolution (transient retry, failover, or — only with R=1 —
+        // degrade).
+        let mut served = false;
+        for ev in &serve_events {
+            served |= ev.detector == Detector::EbBound;
+            result.note_event(ev, t, cfg.replicas);
+        }
         if scores != clean {
             if served {
                 result.detected_mismatches += 1;
@@ -492,8 +530,15 @@ pub fn run_shard_campaign(cfg: &ShardCampaignConfig) -> ShardCampaignResult {
         result.failovers += (store.stats.failovers.load(Ordering::Relaxed) - pre_fail) as usize;
 
         // Proactive sweep: whatever serving missed (untouched row or a
-        // below-bound flip), the exact integer scrub catches.
-        let scrub_found = store.scrub_full() > 0;
+        // below-bound flip), the exact integer scrub catches — as
+        // `ScrubExact` events with the quarantine resolution.
+        let mark = journal.total();
+        store.scrub_full();
+        let scrub_events = journal.since(mark);
+        for ev in &scrub_events {
+            result.note_event(ev, t, cfg.replicas);
+        }
+        let scrub_found = scrub_events.iter().any(|e| e.detector == Detector::ScrubExact);
         if !served && scrub_found {
             result.scrub_detections += 1;
         } else if !served {
@@ -507,6 +552,36 @@ pub fn run_shard_campaign(cfg: &ShardCampaignConfig) -> ShardCampaignResult {
         result.unrepaired = store.quarantined_replicas();
     }
     result
+}
+
+impl ShardCampaignResult {
+    /// Check one journaled event against the injected fault: correct
+    /// site (the injected table), a ladder-legal resolution for its
+    /// detector, and tally its severity split.
+    fn note_event(&mut self, ev: &FaultEvent, injected_table: usize, replicas: usize) {
+        let site_ok = ev.site == SiteId::Eb(injected_table as u32);
+        let resolution_ok = match ev.detector {
+            Detector::EbBound => matches!(
+                ev.resolution,
+                Resolution::Recovered(Recovery::RecomputeUnit)
+                    | Resolution::Recovered(Recovery::FailoverReplica)
+            ) || (replicas == 1 && ev.resolution == Resolution::Degraded),
+            Detector::ScrubExact => {
+                // Honest resolution: the scrub site hands off to the
+                // quarantine + repair machinery; the repair itself has
+                // not run yet when the event is journaled.
+                ev.resolution == Resolution::Escalated(Recovery::QuarantineAndRepair)
+            }
+            _ => false,
+        };
+        if !site_ok || !resolution_ok {
+            self.bad_attribution += 1;
+        }
+        match ev.severity {
+            Severity::Significant => self.significant_events += 1,
+            Severity::NearBound => self.near_bound_events += 1,
+        }
+    }
 }
 
 /// Configuration for the adaptive-policy campaign: the control-plane
@@ -597,6 +672,15 @@ pub fn run_adaptive_campaign(cfg: &AdaptiveCampaignConfig) -> AdaptiveCampaignRe
         .with_policy(PolicyConfig { tick: Duration::ZERO, ..cfg.policy.clone() });
     let sites = Arc::clone(engine.policy_sites().expect("policy attached"));
     let store = Arc::clone(engine.shard_store().expect("sharded"));
+    // Detection is observed through the engine's event journal: "the
+    // sampled check caught the fault" ⇔ "an EbBound event for the
+    // victim site was journaled during the batch".
+    let journal = engine.journal();
+    let eb_detected = |events: &[FaultEvent]| {
+        events
+            .iter()
+            .any(|e| e.detector == Detector::EbBound && e.site == SiteId::Eb(0))
+    };
 
     let mut rng = Pcg32::new(cfg.seed);
     let reqs = reference.synth_requests(cfg.batch, &mut rng);
@@ -631,9 +715,9 @@ pub fn run_adaptive_campaign(cfg: &AdaptiveCampaignConfig) -> AdaptiveCampaignRe
     // Phase 3: serve under Sampled until the sampled check catches the
     // fault, then verify the escalation lands within one tick.
     for _ in 0..8 {
-        let pre = store.stats.detections.load(Ordering::Relaxed);
+        let mark = journal.total();
         engine.score(&reqs, &mut scores);
-        let detected = store.stats.detections.load(Ordering::Relaxed) > pre;
+        let detected = eb_detected(&journal.since(mark));
         let mismatch = scores != clean;
         if detected {
             if mismatch {
@@ -662,9 +746,9 @@ pub fn run_adaptive_campaign(cfg: &AdaptiveCampaignConfig) -> AdaptiveCampaignRe
     // the site back inside the budget.
     store.drain_repairs();
     while sites.eb[0].cell.load() != target && result.redecay_ticks < 64 {
-        let pre = store.stats.detections.load(Ordering::Relaxed);
+        let mark = journal.total();
         engine.score(&reqs, &mut scores);
-        if scores != clean && store.stats.detections.load(Ordering::Relaxed) > pre {
+        if scores != clean && eb_detected(&journal.since(mark)) {
             result.detected_mismatches += 1;
         }
         engine.policy_tick();
@@ -744,8 +828,13 @@ mod tests {
         // of the two arms.
         assert_eq!(r.undetected, 0, "{r:?}");
         assert_eq!(r.served_detections + r.scrub_detections, r.runs, "{r:?}");
-        // A detected corruption never reached a served response.
+        // A detected corruption never reached a served response (journal
+        // invariant: detection events ⇒ bit-identical scores).
         assert_eq!(r.detected_mismatches, 0, "{r:?}");
+        // Every journaled event named the injected table and carried a
+        // ladder-legal resolution.
+        assert_eq!(r.bad_attribution, 0, "{r:?}");
+        assert!(r.significant_events + r.near_bound_events > 0, "{r:?}");
         // Every quarantined replica was repaired from its clean sibling.
         assert_eq!(r.unrepaired, 0, "{r:?}");
         assert_eq!(r.quarantines as u64, r.repairs as u64, "{r:?}");
@@ -766,6 +855,7 @@ mod tests {
         let r = run_shard_campaign(&cfg);
         assert!(r.served_detections > 0, "{r:?}");
         assert_eq!(r.detected_mismatches, 0, "{r:?}");
+        assert_eq!(r.bad_attribution, 0, "{r:?}");
         assert!(r.failovers >= r.served_detections, "{r:?}");
     }
 

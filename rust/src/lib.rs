@@ -11,6 +11,9 @@
 //!   substrate (FBGEMM-lite).
 //! * [`abft`] — the paper's contribution: checksum encode/verify for GEMM
 //!   (Alg 1) and EB (Alg 2), detection-probability analysis, baselines.
+//! * [`detect`] — unified fault-event pipeline: typed detection events,
+//!   the severity-ranked recovery ladder, the auditable event journal,
+//!   and the sink every detection site emits through.
 //! * [`fault`] — soft-error injection + campaign runner (§VI-B).
 //! * [`dlrm`] — the recommendation model built from the operators.
 //! * [`shard`] — replicated shard store + router: detection-driven
@@ -27,6 +30,7 @@
 pub mod abft;
 pub mod bench;
 pub mod coordinator;
+pub mod detect;
 pub mod dlrm;
 pub mod embedding;
 pub mod fault;

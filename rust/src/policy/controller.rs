@@ -30,6 +30,16 @@
 //!   `max_sample`), per site class — the paper's <20% GEMM / <26% EB
 //!   ceilings become a steady-state dial instead of a compile-time
 //!   property.
+//! * **Per-site fault-rate priors** ([`SitePriors`]): when a deployment
+//!   knows its fault history (Ma et al.'s hardware-error study shows
+//!   DLRM fault rates are highly non-uniform across layers and tables),
+//!   each site's decay target is seeded from its prior instead of the
+//!   one class-wide budget: the class budget is redistributed in
+//!   proportion to the site's normalized prior, so fault-prone sites
+//!   settle at a denser sampling rate and historically-quiet sites pay
+//!   less — at the same class-wide overhead total. `n*_i =
+//!   ceil(full_overhead / (budget · p_i / p̄))`, clamped to
+//!   `[1, max_sample]`.
 //! * **Persistent flags boost scrubbing**: a site flagging for
 //!   `persist_ticks` consecutive ticks means reactive detection keeps
 //!   hitting the same bad memory — the controller multiplies the
@@ -82,6 +92,10 @@ pub struct PolicyConfig {
     pub allow_off: bool,
     /// Eq-5 bound relaxation under `BoundOnly` on EB sites.
     pub bound_relax: f64,
+    /// Per-site fault-rate priors seeding each site's decay target (see
+    /// module docs). Empty (the default) means every site of a class
+    /// shares the class-wide budget unchanged.
+    pub site_priors: SitePriors,
     /// Controller tick interval; `Duration::ZERO` = manual ticking via
     /// [`crate::coordinator::Engine::policy_tick`].
     pub tick: Duration,
@@ -102,8 +116,43 @@ impl Default for PolicyConfig {
             allow_bound_only: false,
             allow_off: false,
             bound_relax: 1e3,
+            site_priors: SitePriors::default(),
             tick: Duration::ZERO,
         }
+    }
+}
+
+/// Per-site relative fault-rate priors (e.g. from a hardware-error
+/// history à la Ma et al.): `gemm[i]` / `eb[t]` are non-negative rates
+/// in any consistent unit — only the ratio to the class mean matters.
+/// An empty class vector disables priors for that class (weight 1.0
+/// everywhere); a missing or zero entry means "no faults ever observed
+/// here" and decays the site to the least checking the lattice allows
+/// (`Sampled(max_sample)`, still a coverage floor — never `Off` without
+/// its own opt-in).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SitePriors {
+    pub gemm: Vec<f64>,
+    pub eb: Vec<f64>,
+}
+
+impl SitePriors {
+    /// The budget weight of site `idx` within its class:
+    /// `p_i / mean(p)`, or 1.0 when the class has no priors (or a
+    /// degenerate all-zero vector).
+    pub fn weight(&self, kind: SiteKind, idx: usize) -> f64 {
+        let v = match kind {
+            SiteKind::Gemm => &self.gemm,
+            SiteKind::Eb => &self.eb,
+        };
+        if v.is_empty() {
+            return 1.0;
+        }
+        let mean = v.iter().map(|x| x.max(0.0)).sum::<f64>() / v.len() as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        v.get(idx).copied().unwrap_or(0.0).max(0.0) / mean
     }
 }
 
@@ -197,27 +246,35 @@ impl PolicyController {
         self.ticks
     }
 
-    /// Budget-target sample rate for a site class:
+    /// Budget-target sample rate for a site class (prior weight 1.0):
     /// `n* = ceil(full_overhead / budget)`, clamped to `[1, max_sample]`.
     pub fn target_rate(&self, kind: SiteKind) -> u32 {
-        target_rate(&self.cfg, kind)
+        target_rate_weighted(&self.cfg, kind, 1.0)
     }
 
-    /// The mode decay lands on for a site class once fully quiet.
-    pub fn target_mode(&self, kind: SiteKind) -> DetectionMode {
-        let n = target_rate(&self.cfg, kind);
-        if self.cfg.allow_bound_only {
-            if self.cfg.allow_off {
-                DetectionMode::Off
-            } else {
-                DetectionMode::BoundOnly
-            }
-        } else if n <= 1 {
-            // Budget already satisfied at Full; nothing lower is opted in.
-            DetectionMode::Full
+    /// Budget-target sample rate of one flat site, with its
+    /// [`SitePriors`] weight folded into the budget share:
+    /// `n*_i = ceil(full_overhead / (budget · p_i / p̄))`.
+    pub fn target_rate_site(&self, flat: usize) -> u32 {
+        let kind = self.sites.kind(flat);
+        let idx = if flat < self.sites.gemm.len() {
+            flat
         } else {
-            DetectionMode::Sampled(n)
-        }
+            flat - self.sites.gemm.len()
+        };
+        target_rate_weighted(&self.cfg, kind, self.cfg.site_priors.weight(kind, idx))
+    }
+
+    /// The mode decay lands on for a site class once fully quiet (prior
+    /// weight 1.0; see [`PolicyController::target_mode_site`]).
+    pub fn target_mode(&self, kind: SiteKind) -> DetectionMode {
+        target_mode_for(&self.cfg, self.target_rate(kind))
+    }
+
+    /// The mode one flat site decays to once fully quiet, priors
+    /// included.
+    pub fn target_mode_site(&self, flat: usize) -> DetectionMode {
+        target_mode_for(&self.cfg, self.target_rate_site(flat))
     }
 
     /// Run one control tick: snapshot every site, difference into window
@@ -258,9 +315,9 @@ impl PolicyController {
         // shared `sites` Arc; per-site controller state through `ctl` —
         // field-disjoint borrows, no `&self` method calls in the loop.)
         for i in 0..n {
-            let kind = if i < self.sites.gemm.len() { SiteKind::Gemm } else { SiteKind::Eb };
+            let target_n = self.target_rate_site(i);
             let mode = self.sites.site(i).cell.load();
-            let next = next_down(&self.cfg, mode, kind);
+            let next = next_down(&self.cfg, mode, target_n);
             let ctl = &mut self.ctl[i];
             if escalate[i] {
                 ctl.cooldown = self.cfg.cooldown_ticks;
@@ -349,22 +406,46 @@ impl PolicyController {
 }
 
 /// Budget-target sample rate: smallest `n` with `full_overhead/n ≤
-/// budget`, i.e. `ceil(full_overhead / budget)`, clamped to
-/// `[1, max_sample]`.
-fn target_rate(cfg: &PolicyConfig, kind: SiteKind) -> u32 {
+/// budget · weight`, i.e. `ceil(full_overhead / (budget · weight))`,
+/// clamped to `[1, max_sample]`. `weight` is the site's normalized
+/// fault-rate prior ([`SitePriors::weight`]; 1.0 without priors); a
+/// zero weight (no faults ever recorded at the site) decays to the
+/// least checking the lattice allows, `Sampled(max_sample)` — still a
+/// 1-in-`max_sample` coverage floor.
+fn target_rate_weighted(cfg: &PolicyConfig, kind: SiteKind, weight: f64) -> u32 {
     let ovh = cfg.unit_costs.class_overhead(kind);
     if cfg.overhead_budget <= 0.0 {
         return 1;
     }
-    let n = (ovh / cfg.overhead_budget).ceil() as u32;
+    let budget = cfg.overhead_budget * weight.max(0.0);
+    if budget <= 0.0 {
+        return cfg.max_sample.max(1);
+    }
+    let n = (ovh / budget).ceil() as u32;
     n.clamp(1, cfg.max_sample)
 }
 
-/// One lattice step down from `mode` toward the class target, or `None`
-/// when already there. Never skips a level: Full → Sampled(2) → doubling
-/// → Sampled(n*) → [BoundOnly] → [Off], the latter two gated on opt-in.
-fn next_down(cfg: &PolicyConfig, mode: DetectionMode, kind: SiteKind) -> Option<DetectionMode> {
-    let target_n = target_rate(cfg, kind);
+/// The mode a fully-quiet site settles at for a given target rate.
+fn target_mode_for(cfg: &PolicyConfig, n: u32) -> DetectionMode {
+    if cfg.allow_bound_only {
+        if cfg.allow_off {
+            DetectionMode::Off
+        } else {
+            DetectionMode::BoundOnly
+        }
+    } else if n <= 1 {
+        // Budget already satisfied at Full; nothing lower is opted in.
+        DetectionMode::Full
+    } else {
+        DetectionMode::Sampled(n)
+    }
+}
+
+/// One lattice step down from `mode` toward the site's target rate, or
+/// `None` when already there. Never skips a level: Full → Sampled(2) →
+/// doubling → Sampled(n*) → [BoundOnly] → [Off], the latter two gated
+/// on opt-in.
+fn next_down(cfg: &PolicyConfig, mode: DetectionMode, target_n: u32) -> Option<DetectionMode> {
     match mode {
         DetectionMode::Full if target_n >= 2 => Some(DetectionMode::Sampled(2.min(target_n))),
         DetectionMode::Full if cfg.allow_bound_only => Some(DetectionMode::BoundOnly),
@@ -508,6 +589,56 @@ mod tests {
         assert_eq!(c.target_mode(SiteKind::Eb), DetectionMode::Sampled(4));
     }
 
+    #[test]
+    fn site_priors_skew_per_site_targets() {
+        // Two EB sites, priors 4 : 0.25 → weights p/p̄ with p̄ = 2.125:
+        // site 0 gets a 1.882× budget share (denser sampling), site 1 a
+        // 0.118× share (sparser), both clamped to [1, max_sample].
+        let s = sites(1, 2);
+        let mut cfg = quick_cfg();
+        cfg.site_priors = SitePriors { gemm: vec![], eb: vec![4.0, 0.25] };
+        let c = controller(&s, cfg);
+        // eb flat indices are 1 and 2 (one gemm site first).
+        // ceil(0.20 / (0.05 · 4/2.125)) = ceil(2.125) = 3
+        assert_eq!(c.target_rate_site(1), 3);
+        // ceil(0.20 / (0.05 · 0.25/2.125)) = ceil(34) = 34
+        assert_eq!(c.target_rate_site(2), 34);
+        assert_eq!(c.target_mode_site(1), DetectionMode::Sampled(3));
+        assert_eq!(c.target_mode_site(2), DetectionMode::Sampled(34));
+        // The gemm class has no priors: class-wide target unchanged.
+        assert_eq!(c.target_rate_site(0), c.target_rate(SiteKind::Gemm));
+    }
+
+    #[test]
+    fn zero_prior_decays_to_the_coverage_floor_not_off() {
+        let s = sites(0, 2);
+        let mut cfg = quick_cfg();
+        cfg.max_sample = 16;
+        cfg.site_priors = SitePriors { gemm: vec![], eb: vec![1.0, 0.0] };
+        let mut c = controller(&s, cfg);
+        assert_eq!(c.target_rate_site(1), 16, "zero prior → max_sample, never Off");
+        for _ in 0..16 {
+            c.step();
+        }
+        assert_eq!(s.eb[1].cell.load(), DetectionMode::Sampled(16));
+        assert!(matches!(s.eb[0].cell.load(), DetectionMode::Sampled(_)));
+    }
+
+    #[test]
+    fn priors_decay_walk_stops_at_each_sites_own_target() {
+        // Same class, different priors → the decay walk parts ways at
+        // each site's own n* (never skipping a lattice level).
+        let s = sites(0, 2);
+        let mut cfg = quick_cfg();
+        cfg.site_priors = SitePriors { gemm: vec![], eb: vec![4.0, 0.25] };
+        let mut c = controller(&s, cfg);
+        for _ in 0..16 {
+            c.step();
+        }
+        assert_eq!(s.eb[0].cell.load(), DetectionMode::Sampled(3));
+        assert_eq!(s.eb[1].cell.load(), DetectionMode::Sampled(34));
+    }
+
     /// Table-driven decay: quiet ticks walk the lattice one step per
     /// patience period, doubling the rate, capping at the target.
     #[test]
@@ -538,7 +669,8 @@ mod tests {
         }
         assert_ne!(s.gemm[1].cell.load(), DetectionMode::Full);
         // One flag on the middle site.
-        s.gemm[1].telem.record(10, 5, 1);
+        s.gemm[1].telem.record(10, 5);
+        s.gemm[1].telem.note_flags(1);
         let rep = c.step();
         assert_eq!(rep.escalations, 3, "site + both neighbors escalate");
         for g in &s.gemm {
@@ -552,7 +684,8 @@ mod tests {
         let cfg = quick_cfg(); // cooldown 2, patience 1
         let s = sites(0, 1);
         let mut c = controller(&s, cfg);
-        s.eb[0].telem.record(4, 4, 1);
+        s.eb[0].telem.record(4, 4);
+        s.eb[0].telem.note_flags(1);
         c.step(); // escalation tick (already Full → no mode change, cooldown set)
         assert_eq!(s.eb[0].cell.load(), DetectionMode::Full);
         c.step(); // cooldown 2→1
@@ -568,7 +701,8 @@ mod tests {
         let mut c = controller(&s, quick_cfg());
         for tick in 0..10 {
             if tick % 2 == 0 {
-                s.eb[0].telem.record(4, 4, 1);
+                s.eb[0].telem.record(4, 4);
+                s.eb[0].telem.note_flags(1);
             }
             c.step();
             assert_eq!(
@@ -585,10 +719,12 @@ mod tests {
         let s = sites(0, 1);
         let mut c = controller(&s, cfg.clone());
         assert_eq!(s.scrub_budget.load(Ordering::Relaxed), 256);
-        s.eb[0].telem.record(4, 4, 1);
+        s.eb[0].telem.record(4, 4);
+        s.eb[0].telem.note_flags(1);
         c.step();
         assert_eq!(s.scrub_budget.load(Ordering::Relaxed), 256, "one tick is not persistent");
-        s.eb[0].telem.record(4, 4, 1);
+        s.eb[0].telem.record(4, 4);
+        s.eb[0].telem.note_flags(1);
         let rep = c.step();
         assert_eq!(rep.scrub_boosts, 1);
         assert_eq!(s.scrub_budget.load(Ordering::Relaxed), 256 * 4);
@@ -630,9 +766,10 @@ mod tests {
     fn window_stats_sum_recent_deltas() {
         let s = sites(0, 1);
         let mut c = controller(&s, quick_cfg());
-        s.eb[0].telem.record(10, 5, 0);
+        s.eb[0].telem.record(10, 5);
         c.step();
-        s.eb[0].telem.record(6, 3, 1);
+        s.eb[0].telem.record(6, 3);
+        s.eb[0].telem.note_flags(1);
         c.step();
         let w = c.window_stats(0);
         assert_eq!(w.units, 16);

@@ -45,13 +45,29 @@
 //!
 //! [`LocalEbStage`]: crate::dlrm::LocalEbStage
 
+use crate::detect::{
+    recovery, Detector, Recovery, Resolution, Severity, SiteClass, SiteId, UnitRef,
+};
 use crate::dlrm::scratch::grow;
 use crate::dlrm::{DlrmModel, DlrmRequest, EbScratch, EbStage, EbStageReport, Protection};
 use crate::embedding::bag_sum_8;
 use crate::shard::store::{Shard, ShardStore};
 use crate::util::threadpool::EB_PAR_MIN_WORK;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
+
+/// One bag whose flag survived the same-replica retry, staged until the
+/// failover's re-serve lap verifies clean — or the ladder exhausts —
+/// because the event's resolution is the *terminal* ladder state, and
+/// `Recovered(FailoverReplica)` may only be journaled after the
+/// re-check passed. Allocation only happens on the fault path — a
+/// clean lap never grows the staging vec.
+struct PendingBag {
+    table: u32,
+    request: u32,
+    excess: f64,
+    threshold: f64,
+}
 
 /// Routes EB traffic to shard replicas; plugs into
 /// [`DlrmModel::forward_with`] as the [`EbStage`].
@@ -93,15 +109,25 @@ impl ShardRouter {
         let slots = shard.tables.len();
         debug_assert_eq!(scratch.len(), requests.len() * slots * d);
         let store = &*self.store;
+        let sink = &model.events;
         let max_laps = shard.num_replicas() + 1;
         let mut laps = 0;
+        // Bags whose persistent flag triggered a failover, carried
+        // across laps with the replica they flagged on. Their events are
+        // deferred until a re-serve lap actually verifies clean — a
+        // `Recovered(FailoverReplica)` resolution is only journaled
+        // after the failover's re-check passed (correlated corruption on
+        // the sibling would otherwise turn the claim into a lie).
+        let mut staged: Vec<(PendingBag, usize)> = Vec::new();
         loop {
             laps += 1;
             let primary = store.serving_replica(shard.id);
             // One read guard per lap (not per bag); requests fan out on
             // the pool over disjoint scratch rows — nested scopes are
             // deadlock-free, so this composes with the per-shard spawn.
-            let persistent = AtomicUsize::new(0);
+            // Persistently-flagged bags are staged here until the lap's
+            // ladder outcome (failover vs degrade) is known.
+            let pending: Mutex<Vec<PendingBag>> = Mutex::new(Vec::new());
             let total = Mutex::new(EbStageReport::default());
             {
                 let guard = store.read_replica(shard.id, primary);
@@ -133,11 +159,11 @@ impl ShardRouter {
                                 if !check {
                                     bag_sum_8(&data.tables[slot], indices, None, true, out);
                                     if let Some(tl) = telem {
-                                        tl.record(1, 0, 0);
+                                        tl.record(1, 0);
                                     }
                                     continue;
                                 }
-                                let mut bad = data.fused[slot].bag_sum_checked_scaled(
+                                let check0 = data.fused[slot].bag_sum_checked_scaled_ex(
                                     &data.tables[slot],
                                     indices,
                                     None,
@@ -145,15 +171,28 @@ impl ShardRouter {
                                     bound_scale,
                                     out,
                                 );
-                                let mut bag_flags = 0u64;
-                                if bad {
-                                    bag_flags = 1;
+                                if check0.flagged() {
                                     local.shard_detections += 1;
+                                    // Escalation signal: fed at detection
+                                    // time through the site's handle,
+                                    // independent of the lap's outcome
+                                    // and of sink wiring.
+                                    if let Some(tl) = telem {
+                                        tl.note_flags(1);
+                                    }
+                                    let severity = Severity::from_eb_margin(
+                                        check0.excess,
+                                        check0.threshold,
+                                    );
+                                    let unit = UnitRef::Bag {
+                                        request: (req0 + bi) as u32,
+                                        replica: primary as u32,
+                                    };
                                     if protection == Protection::DetectRecompute {
                                         // Same-replica retry: transient
                                         // faults clear here.
                                         local.recomputed += 1;
-                                        bad = data.fused[slot].bag_sum_checked_scaled(
+                                        let bad = data.fused[slot].bag_sum_checked_scaled(
                                             &data.tables[slot],
                                             indices,
                                             None,
@@ -162,17 +201,40 @@ impl ShardRouter {
                                             out,
                                         );
                                         if bad {
-                                            persistent.fetch_add(1, Ordering::Relaxed);
+                                            // Terminal state unknown until
+                                            // the lap decides failover vs
+                                            // degrade — stage the event.
+                                            pending.lock().unwrap().push(PendingBag {
+                                                table: t as u32,
+                                                request: (req0 + bi) as u32,
+                                                excess: check0.excess,
+                                                threshold: check0.threshold,
+                                            });
+                                        } else {
+                                            sink.emit(
+                                                SiteId::Eb(t as u32),
+                                                unit,
+                                                Detector::EbBound,
+                                                severity,
+                                                Resolution::Recovered(Recovery::RecomputeUnit),
+                                            );
                                         }
                                     } else {
                                         // Detect-only: report, serve as-is
                                         // (the local stage's semantics —
                                         // no failover).
                                         local.flagged += 1;
+                                        sink.emit(
+                                            SiteId::Eb(t as u32),
+                                            unit,
+                                            Detector::EbBound,
+                                            severity,
+                                            Resolution::DetectedOnly,
+                                        );
                                     }
                                 }
                                 if let Some(tl) = telem {
-                                    tl.record(1, 1, bag_flags);
+                                    tl.record(1, 1);
                                 }
                             }
                         }
@@ -188,27 +250,70 @@ impl ShardRouter {
                     .detections
                     .fetch_add(lap_report.shard_detections as u64, Ordering::Relaxed);
             }
-            let persistent = persistent.into_inner();
-            if persistent == 0 {
+            let pending = pending.into_inner().unwrap();
+            if pending.is_empty() {
+                // This lap verified clean — every bag staged on an
+                // earlier (corrupt) lap was re-served here, so its
+                // failover re-check has now actually passed and the
+                // `Recovered` claim is honest.
+                for (bag, replica) in staged.drain(..) {
+                    sink.emit(
+                        SiteId::Eb(bag.table),
+                        UnitRef::Bag { request: bag.request, replica: replica as u32 },
+                        Detector::EbBound,
+                        Severity::from_eb_margin(bag.excess, bag.threshold),
+                        Resolution::Recovered(Recovery::FailoverReplica),
+                    );
+                }
                 return;
             }
+            // The same-replica retry rung failed for these bags; the
+            // ladder names the next rung for sharded EB traffic —
+            // failover to a sibling replica.
+            debug_assert_eq!(
+                recovery::next_step(SiteClass::EbSharded, Recovery::RecomputeUnit),
+                Some(Recovery::FailoverReplica)
+            );
             // Persistent corruption on `primary`: quarantine it
             // (lock-free; siblings keep serving) …
             if store.quarantine(shard.id, primary) {
                 rep.shard_quarantines += 1;
             }
             // … and re-serve the whole shard-batch from a healthy
-            // sibling, discarding everything computed this lap.
+            // sibling, discarding everything computed this lap. The
+            // events stay staged until that re-serve proves itself.
             if laps < max_laps && store.healthy_replica(shard.id).is_some() {
+                staged.extend(pending.into_iter().map(|b| (b, primary)));
                 rep.shard_failovers += 1;
                 store.stats.failovers.fetch_add(1, Ordering::Relaxed);
                 continue;
             }
-            // Nowhere to go (R=1 or every replica bad): the last computed
-            // values are served and the batch is marked dirty/degraded
-            // upstream, one count per persistently-flagged bag.
-            rep.flagged += persistent;
-            rep.unrecovered += persistent;
+            // Nowhere to go (R=1 or every replica bad): the ladder is
+            // exhausted. Everything staged — including bags whose
+            // earlier failover re-serve landed on this proven-corrupt
+            // replica — is served degraded, never silently.
+            for (bag, replica) in staged.drain(..) {
+                sink.emit(
+                    SiteId::Eb(bag.table),
+                    UnitRef::Bag { request: bag.request, replica: replica as u32 },
+                    Detector::EbBound,
+                    Severity::from_eb_margin(bag.excess, bag.threshold),
+                    Resolution::Degraded,
+                );
+            }
+            for bag in &pending {
+                sink.emit(
+                    SiteId::Eb(bag.table),
+                    UnitRef::Bag { request: bag.request, replica: primary as u32 },
+                    Detector::EbBound,
+                    Severity::from_eb_margin(bag.excess, bag.threshold),
+                    Resolution::Degraded,
+                );
+            }
+            // The batch is marked dirty upstream, one count per
+            // persistently-flagged bag of the final lap.
+            rep.flagged += pending.len();
+            rep.unrecovered += pending.len();
             return;
         }
     }

@@ -28,6 +28,7 @@
 //!   error-free, now doing double duty as the repair ground truth.
 
 use crate::abft::{EbChecksum, FusedEbAbft, Scrubber};
+use crate::detect::{Detector, EventSink, Recovery, Resolution, Severity, SiteId, UnitRef};
 use crate::dlrm::DlrmModel;
 use crate::embedding::QuantTable8;
 use crate::shard::ShardPlan;
@@ -108,6 +109,10 @@ pub struct ShardStats {
     pub failovers: AtomicU64,
     /// Successful repairs (== re-admissions).
     pub repairs: AtomicU64,
+    /// Rows actually rewritten by repairs — with row-granular repair
+    /// this is the number of `C_T`-mismatching rows, not whole-shard
+    /// copies (see [`ShardStore::repair`]).
+    pub repaired_rows: AtomicU64,
     /// Repair attempts that found no clean source or failed verification.
     pub failed_repairs: AtomicU64,
     /// Rows scanned / corrupted rows found by replica scrubbers.
@@ -139,6 +144,10 @@ pub struct ShardStore {
     /// Canonical per-table `C_T` checksums (global-table-id indexed);
     /// immutable ground truth for scrub and repair verification.
     checksums: Vec<EbChecksum>,
+    /// Fault-event emission handle, inherited from the model the store
+    /// was built from: scrub hits are journaled as `ScrubExact` events
+    /// escalating to the quarantine-and-repair rung.
+    events: EventSink,
     pub stats: ShardStats,
     repair_q: Mutex<RepairQueue>,
     repair_cv: Condvar,
@@ -182,6 +191,7 @@ impl ShardStore {
             plan,
             shards,
             checksums: model.checksums.clone(),
+            events: model.events.clone(),
             stats: ShardStats::default(),
             repair_q: Mutex::new(RepairQueue {
                 tickets: VecDeque::new(),
@@ -293,12 +303,39 @@ impl ShardStore {
         }
     }
 
-    /// Repair one quarantined replica: copy its shard's tables from a
-    /// healthy, checksum-clean sibling, verify the installed copy against
-    /// the canonical checksums, and re-admit. See module docs for the
-    /// invariants. Never holds two replica locks at once (copy out under
-    /// the source's read lock, install under the target's write lock), so
-    /// it cannot deadlock against the serving path.
+    /// Repair one quarantined replica from a healthy, checksum-clean
+    /// sibling, verify the installed bytes against the canonical
+    /// checksums, and re-admit. See module docs for the invariants.
+    /// Never holds two replica locks at once (scan under the target's
+    /// read lock, extract under the source's read lock, install under
+    /// the target's write lock), so it cannot deadlock against the
+    /// serving path.
+    ///
+    /// **Row-granular**: the target is first scanned against the
+    /// canonical `C_T` per row, and only mismatching code rows are
+    /// copied — on a multi-GB table with one flipped byte the write
+    /// amounts to one row instead of the whole shard, shrinking the
+    /// write-lock window to the verify pass. The replica's fused
+    /// (α, β, C_T) serving meta is always refreshed from the clean
+    /// source regardless (it is small relative to table data, is read
+    /// by the serving bound-check, and its corruption is invisible to
+    /// the code-sum scan). The whole-copy path is kept as the
+    /// heavy-corruption fallback (> ¼ of the rows dirty — at that point
+    /// a bulk copy is cheaper than row bookkeeping) and is what a
+    /// quarantined-source retry ends up doing after the sibling sweep
+    /// replaced wide corruption. Either way the **full** installed
+    /// replica is re-verified before re-admission: rows the scan proved
+    /// clean may have been hit between scan and install, and a repair
+    /// must never re-admit dirty bytes.
+    ///
+    /// Detectability boundary: "dirty" means the row's code sum moved.
+    /// Compensating multi-bit corruption *within* one row (+δ on one
+    /// code, −δ on another) preserves the sum and is invisible to every
+    /// detector in this system — the scrubber's exact compare, this
+    /// scan, the re-admission verify, and the serving Eq-5 bound alike
+    /// (it is the §IV-C cancellation class). Whole-copy repair used to
+    /// heal such rows incidentally; row-granular repair does not (see
+    /// the ROADMAP open item on byte-level repair rotation).
     pub fn repair(&self, shard: usize, replica: usize) -> RepairOutcome {
         let sh = &self.shards[shard];
         let rep = &sh.replicas[replica];
@@ -310,26 +347,74 @@ impl ShardStore {
             return RepairOutcome::NotQuarantined;
         }
 
-        // Find a clean source: healthy AND a full checksum pass over all
-        // of its slots (quarantine only proves the *flagged* replica bad;
-        // the source must be proven good).
-        let mut fresh: Option<ReplicaTables> = None;
+        // 1. Scan the target: which rows actually mismatch C_T? (The
+        //    replica is out of serving while Repairing, so this read
+        //    lock is uncontended.) The scan bails out as soon as the
+        //    whole-copy threshold is crossed — on a heavily-corrupted
+        //    replica there is no point finishing a full code-sum pass
+        //    whose result will be discarded.
+        let (dirty, total_rows) = {
+            let guard = rep.data.read().unwrap();
+            let total_rows: usize = guard.tables.iter().map(|t| t.rows).sum();
+            let mut dirty: Vec<(usize, usize)> = Vec::new(); // (slot, row)
+            'scan: for (slot, &t) in sh.tables.iter().enumerate() {
+                let table = &guard.tables[slot];
+                for row in 0..table.rows {
+                    if table.code_row_sum(row) != self.checksums[t].c_t[row] {
+                        dirty.push((slot, row));
+                        if dirty.len() * 4 > total_rows {
+                            break 'scan; // whole-copy is already certain
+                        }
+                    }
+                }
+            }
+            (dirty, total_rows)
+        };
+        let row_granular = dirty.len() * 4 <= total_rows;
+
+        // 2. Find a proven-good source and extract the payload under the
+        //    SAME read guard the proof ran under (no verify-to-copy
+        //    race). A silently-corrupted candidate is itself quarantined
+        //    and queued.
+        enum Payload {
+            /// Mismatching code rows plus a fresh copy of the fused
+            /// (α, β, C_T) serving meta. The meta must be refreshed even
+            /// when no code row is dirty: the per-replica meta is read
+            /// by the serving bound-check, can itself take a soft error,
+            /// and is invisible to the code-sum scan — leaving it in
+            /// place would re-admit a replica that flags forever.
+            Rows(Vec<(usize, usize, Vec<u8>)>, Vec<FusedEbAbft>),
+            Whole(ReplicaTables),
+        }
+        let mut payload: Option<Payload> = None;
         for (r, src) in sh.replicas.iter().enumerate() {
             if r == replica || src.state.load(Ordering::Acquire) != HEALTHY {
                 continue;
             }
             let guard = src.data.read().unwrap();
-            let clean = self.replica_tables_clean(sh, &guard);
-            if clean {
-                fresh = Some(guard.clone());
-                break;
+            if !self.replica_tables_clean(sh, &guard) {
+                drop(guard);
+                self.quarantine(shard, r);
+                continue;
             }
-            drop(guard);
-            // A silently-corrupted source is itself quarantined + queued.
-            self.quarantine(shard, r);
+            payload = Some(if row_granular {
+                Payload::Rows(
+                    dirty
+                        .iter()
+                        .map(|&(slot, row)| {
+                            let table = &guard.tables[slot];
+                            (slot, row, table.data[row * table.d..(row + 1) * table.d].to_vec())
+                        })
+                        .collect(),
+                    guard.fused.clone(),
+                )
+            } else {
+                Payload::Whole(guard.clone())
+            });
+            break;
         }
 
-        let Some(fresh) = fresh else {
+        let Some(payload) = payload else {
             rep.state.store(QUARANTINED, Ordering::Release);
             self.stats.failed_repairs.fetch_add(1, Ordering::Relaxed);
             return RepairOutcome::NoCleanSource;
@@ -337,15 +422,32 @@ impl ShardStore {
 
         {
             let mut guard = rep.data.write().unwrap();
-            *guard = fresh;
-            // Re-verify the *installed* bytes before re-admission: the
-            // copy itself crossed memory that can fault too.
+            let rows_written = match payload {
+                Payload::Rows(rows, fused) => {
+                    let n = rows.len();
+                    for (slot, row, bytes) in rows {
+                        let d = guard.tables[slot].d;
+                        guard.tables[slot].data[row * d..(row + 1) * d]
+                            .copy_from_slice(&bytes);
+                    }
+                    guard.fused = fused;
+                    n
+                }
+                Payload::Whole(fresh) => {
+                    *guard = fresh;
+                    total_rows
+                }
+            };
+            // Re-verify the FULL installed replica before re-admission:
+            // the copy crossed faultable memory, and rows outside the
+            // scan may have been corrupted since.
             if !self.replica_tables_clean(sh, &guard) {
                 drop(guard);
                 rep.state.store(QUARANTINED, Ordering::Release);
                 self.stats.failed_repairs.fetch_add(1, Ordering::Relaxed);
                 return RepairOutcome::NoCleanSource;
             }
+            self.stats.repaired_rows.fetch_add(rows_written as u64, Ordering::Relaxed);
         }
         // Fresh data ⇒ fresh scrub pass.
         *rep.scrub.lock().unwrap() =
@@ -353,6 +455,23 @@ impl ShardStore {
         rep.state.store(HEALTHY, Ordering::Release);
         self.stats.repairs.fetch_add(1, Ordering::Relaxed);
         RepairOutcome::Repaired
+    }
+
+    /// Journal one scrub hit: `ScrubExact` detector, severity from the
+    /// exact code-sum delta (Table-III significance split), resolution
+    /// `Escalated(QuarantineAndRepair)` — the quarantine is applied by
+    /// the caller right after and the repair queue owns the rest, so
+    /// the event never claims a repair that has not run yet (with no
+    /// clean source it may never succeed; `failed_repairs` and the
+    /// health block carry that outcome).
+    fn emit_scrub_hit(&self, table: usize, replica: usize, row: usize, delta: i64) {
+        self.events.emit(
+            SiteId::Eb(table as u32),
+            UnitRef::ScrubSlot { replica: replica as u32, row: row as u32 },
+            Detector::ScrubExact,
+            Severity::from_code_delta(delta),
+            Resolution::Escalated(Recovery::QuarantineAndRepair),
+        );
     }
 
     /// Full checksum pass over every slot of one replica's tables.
@@ -390,6 +509,8 @@ impl ShardStore {
                         for row in report.corrupted_rows {
                             dirty = true;
                             self.stats.scrub_hits.fetch_add(1, Ordering::Relaxed);
+                            let delta = self.checksums[t].row_delta(&data.tables[slot], row);
+                            self.emit_scrub_hit(t, r, row, delta);
                             hits.push((sh.id, r, t, row));
                         }
                     }
@@ -437,10 +558,20 @@ impl ShardStore {
                 continue;
             }
             let t = self.shards[s].tables[slot];
-            let report = {
+            let (report, deltas) = {
                 let data = rep.data.read().unwrap();
                 let mut scrub = rep.scrub.lock().unwrap();
-                scrub[slot].scrub_step_rows(&data.tables[slot], &self.checksums[t], budget - scanned)
+                let report = scrub[slot].scrub_step_rows(
+                    &data.tables[slot],
+                    &self.checksums[t],
+                    budget - scanned,
+                );
+                let deltas: Vec<i64> = report
+                    .corrupted_rows
+                    .iter()
+                    .map(|&row| self.checksums[t].row_delta(&data.tables[slot], row))
+                    .collect();
+                (report, deltas)
             };
             if report.rows_scanned == 0 {
                 *cursor = (seg + 1) % segs;
@@ -453,8 +584,9 @@ impl ShardStore {
                 .scrubbed_rows
                 .fetch_add(report.rows_scanned as u64, Ordering::Relaxed);
             let dirty = !report.corrupted_rows.is_empty();
-            for row in report.corrupted_rows {
+            for (row, delta) in report.corrupted_rows.into_iter().zip(deltas) {
                 self.stats.scrub_hits.fetch_add(1, Ordering::Relaxed);
+                self.emit_scrub_hit(t, r, row, delta);
                 hits.push((s, r, t, row));
             }
             if dirty {
@@ -492,13 +624,15 @@ impl ShardStore {
                 }
                 let dirty_rows = {
                     let data = rep.data.read().unwrap();
-                    sh.tables
-                        .iter()
-                        .enumerate()
-                        .map(|(slot, &t)| {
-                            Scrubber::full_pass(&data.tables[slot], &self.checksums[t]).len()
-                        })
-                        .sum::<usize>()
+                    let mut count = 0usize;
+                    for (slot, &t) in sh.tables.iter().enumerate() {
+                        for row in Scrubber::full_pass(&data.tables[slot], &self.checksums[t]) {
+                            count += 1;
+                            let delta = self.checksums[t].row_delta(&data.tables[slot], row);
+                            self.emit_scrub_hit(t, r, row, delta);
+                        }
+                    }
+                    count
                 };
                 if dirty_rows > 0 {
                     found += dirty_rows;
@@ -617,6 +751,7 @@ impl ShardStore {
             ("quarantines", n(&self.stats.quarantines)),
             ("failovers", n(&self.stats.failovers)),
             ("repairs", n(&self.stats.repairs)),
+            ("repaired_rows", n(&self.stats.repaired_rows)),
             ("failed_repairs", n(&self.stats.failed_repairs)),
             ("scrubbed_rows", n(&self.stats.scrubbed_rows)),
             ("scrub_hits", n(&self.stats.scrub_hits)),
@@ -694,6 +829,44 @@ mod tests {
         assert_eq!(store.replica_state(0, 1), ReplicaState::Healthy);
         assert_eq!(store.table_bytes(t, 1), model.tables[t].data);
         assert_eq!(store.stats.repairs.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn row_granular_repair_copies_only_mismatching_rows() {
+        let (model, store) = store(1, 2);
+        let d = 8;
+        // Two dirty rows (one high-bit, one low-bit flip) out of 130.
+        store.flip_table_byte(0, 1, 0, 0x80);
+        store.flip_table_byte(0, 1, 3 * d, 0x01);
+        assert!(store.quarantine(0, 1));
+        assert_eq!(store.repair(0, 1), RepairOutcome::Repaired);
+        assert_eq!(store.replica_state(0, 1), ReplicaState::Healthy);
+        assert_eq!(store.table_bytes(0, 1), model.tables[0].data);
+        assert_eq!(
+            store.stats.repaired_rows.load(Ordering::Relaxed),
+            2,
+            "only the C_T-mismatching rows are rewritten"
+        );
+    }
+
+    #[test]
+    fn heavy_corruption_falls_back_to_whole_copy() {
+        let (model, store) = store(1, 2);
+        let d = 8;
+        // 60 of the shard's 130 rows dirty (> ¼): bulk copy wins.
+        for row in 0..60 {
+            store.flip_table_byte(0, 1, row * d, 0x80);
+        }
+        assert!(store.quarantine(0, 1));
+        assert_eq!(store.repair(0, 1), RepairOutcome::Repaired);
+        for t in 0..model.tables.len() {
+            assert_eq!(store.table_bytes(t, 1), model.tables[t].data);
+        }
+        assert_eq!(
+            store.stats.repaired_rows.load(Ordering::Relaxed),
+            60 + 40 + 30,
+            "whole-copy path rewrites the full shard"
+        );
     }
 
     #[test]

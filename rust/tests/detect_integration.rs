@@ -1,0 +1,400 @@
+//! Integration tests for the unified fault-event pipeline (PR 5):
+//! inject one fault per detection-site class and assert the journal
+//! records exactly the matching [`FaultEvent`] — correct site, detector,
+//! severity, and ladder resolution — plus journal wrap behavior and the
+//! engine-level retry trail.
+//!
+//! Site classes covered: GEMM row verify, the BoundOnly batch aggregate,
+//! the local (unsharded) fused EB check, the shard router
+//! (failover and R=1 degrade), and the scrubber (sharded quarantine and
+//! local report-only). The steady-state zero-allocation property with
+//! the journal attached is enforced separately in
+//! `rust/tests/zero_alloc.rs` (engines always attach a sink).
+
+use dlrm_abft::abft::AbftGemm;
+use dlrm_abft::coordinator::Engine;
+use dlrm_abft::detect::{
+    recovery, Detector, EventSink, Recovery, Resolution, Severity, SiteClass, SiteCtx, SiteId,
+    UnitRef, LOCAL_REPLICA,
+};
+use dlrm_abft::dlrm::{AbftLinear, DlrmConfig, DlrmModel, Protection, TableConfig};
+use dlrm_abft::policy::DetectionMode;
+use dlrm_abft::quant::{QParams, RequantEpilogue, RequantSpec};
+use dlrm_abft::shard::{ShardPlan, ShardRouter, ShardStore};
+use dlrm_abft::util::json::Json;
+use dlrm_abft::util::rng::Pcg32;
+use dlrm_abft::util::scratch::GemmScratch;
+use std::sync::Arc;
+
+/// A layer whose packed-B payload byte at logical (p, j) is XORed with
+/// `mask` — a deterministic persistent operand fault.
+fn corrupted_layer(k: usize, n: usize, mask: u8, protection: Protection) -> AbftLinear {
+    let mut rng = Pcg32::new(0x5EED5);
+    let mut layer = AbftLinear::random(k, n, false, protection, &mut rng);
+    let idx = layer.abft().packed.offset(3, 5);
+    let data = layer.abft_mut().packed.data_mut();
+    data[idx] = (data[idx] as u8 ^ mask) as i8;
+    layer
+}
+
+#[test]
+fn gemm_row_fault_journals_one_escalated_event() {
+    // m = 1, x = const 200: the B-payload flip of bit 6 shifts the row
+    // residual by 200·(±64) = ∓12800 — detected (12800 % 127 ≠ 0), and
+    // the recompute re-reads the same corrupt operand, so the ladder
+    // escalates to the engine's batch retry with worst-case severity.
+    let (k, n, m) = (32usize, 16usize, 1usize);
+    let layer = corrupted_layer(k, n, 0x40, Protection::DetectRecompute);
+    let sink = EventSink::with_capacity(16);
+    let x = vec![200u8; m * k];
+    let mut out = vec![0u8; m * n];
+    let mut scratch = GemmScratch::default();
+    let rep = layer.forward_policied(
+        &x,
+        m,
+        QParams::fit_u8(0.0, 1.0),
+        DetectionMode::Full,
+        SiteCtx::new(&sink, SiteId::Gemm(7), None),
+        &mut scratch,
+        &mut out,
+    );
+    assert_eq!(rep.rows_flagged, 1);
+    assert_eq!(rep.rows_recomputed, 1);
+    let j = sink.journal().unwrap();
+    assert_eq!(j.total(), 1, "exactly one event for one injected fault");
+    let ev = j.recent(1)[0];
+    assert_eq!(ev.site, SiteId::Gemm(7));
+    assert_eq!(ev.unit, UnitRef::GemmRow { row: 0 });
+    assert_eq!(ev.detector, Detector::GemmChecksum);
+    assert_eq!(ev.severity, Severity::Significant, "operand corruption is worst-case");
+    assert_eq!(ev.resolution, Resolution::Escalated(Recovery::RetryBatch));
+}
+
+#[test]
+fn gemm_detect_only_fault_journals_detected_only() {
+    let (k, n, m) = (32usize, 16usize, 1usize);
+    let layer = corrupted_layer(k, n, 0x40, Protection::Detect);
+    let sink = EventSink::with_capacity(16);
+    let x = vec![200u8; m * k];
+    let mut out = vec![0u8; m * n];
+    let mut scratch = GemmScratch::default();
+    let rep = layer.forward_policied(
+        &x,
+        m,
+        QParams::fit_u8(0.0, 1.0),
+        DetectionMode::Full,
+        SiteCtx::new(&sink, SiteId::Gemm(0), None),
+        &mut scratch,
+        &mut out,
+    );
+    assert_eq!(rep.rows_flagged, 1);
+    assert_eq!(rep.rows_recomputed, 0);
+    let ev = sink.journal().unwrap().recent(1)[0];
+    assert_eq!(ev.resolution, Resolution::DetectedOnly);
+    assert_eq!(ev.detector, Detector::GemmChecksum);
+}
+
+#[test]
+fn bound_only_aggregate_journals_batch_aggregate_event() {
+    let (k, n, m) = (32usize, 16usize, 4usize);
+    let layer = corrupted_layer(k, n, 0x40, Protection::DetectRecompute);
+    let sink = EventSink::with_capacity(16);
+    // Same x for every row: the per-row deltas share a sign, so they
+    // cannot cancel in the aggregate.
+    let x = vec![200u8; m * k];
+    let mut out = vec![0u8; m * n];
+    let mut scratch = GemmScratch::default();
+    let rep = layer.forward_policied(
+        &x,
+        m,
+        QParams::fit_u8(0.0, 1.0),
+        DetectionMode::BoundOnly,
+        SiteCtx::new(&sink, SiteId::Gemm(2), None),
+        &mut scratch,
+        &mut out,
+    );
+    assert_eq!(rep.rows_flagged, 1, "aggregate reports one flag");
+    assert_eq!(rep.rows_recomputed, 0, "the aggregate cannot name a row");
+    let j = sink.journal().unwrap();
+    assert_eq!(j.total(), 1);
+    let ev = j.recent(1)[0];
+    assert_eq!(ev.site, SiteId::Gemm(2));
+    assert_eq!(ev.unit, UnitRef::BatchAggregate);
+    assert_eq!(ev.detector, Detector::GemmAggregate);
+    assert_eq!(ev.severity, Severity::Significant);
+    assert_eq!(ev.resolution, Resolution::Escalated(Recovery::RetryBatch));
+}
+
+#[test]
+fn transient_gemm_fault_recovers_at_the_recompute_rung() {
+    // The `RecomputeUnit` rung in isolation: corrupt the 32-bit
+    // accumulator (a transient compute fault), recompute the row through
+    // `recovery::recompute_gemm_row`, and verify the residual shift it
+    // classifies severity from is exactly the injected delta.
+    let mut rng = Pcg32::new(0x7A31);
+    let (m, k, n) = (3usize, 24usize, 12usize);
+    let mut b = vec![0i8; k * n];
+    rng.fill_i8(&mut b);
+    let mut x = vec![0u8; m * k];
+    rng.fill_u8(&mut x);
+    let abft = AbftGemm::new(&b, k, n);
+    let (mut c_temp, verdict) = abft.exec(&x, m);
+    assert!(verdict.clean());
+    let clean = c_temp.clone();
+    let before_clean = abft.row_residual(&c_temp, m, 1);
+    c_temp[(n + 1) + 2] += 5_000; // row 1, transient delta +5000
+    let before = abft.row_residual(&c_temp, m, 1);
+    assert_eq!(before - before_clean, 5_000);
+    // Re-requantization target for the repaired row.
+    let a_row_sums: Vec<i32> = (0..m)
+        .map(|i| x[i * k..(i + 1) * k].iter().map(|&v| v as i32).sum())
+        .collect();
+    let spec = RequantSpec::new(
+        QParams::fit_u8(0.0, 1.0),
+        QParams::fit_u8(-1.0, 1.0),
+        QParams::fit_u8(-4.0, 4.0),
+        k,
+    );
+    let mut b_col_sums = vec![0i32; n];
+    for p in 0..k {
+        for jj in 0..n {
+            b_col_sums[jj] += b[p * n + jj] as i32;
+        }
+    }
+    let mut out = vec![0u8; m * n];
+    let epi = RequantEpilogue {
+        spec,
+        a_row_sums: &a_row_sums,
+        b_col_sums: &b_col_sums,
+        n_out: n,
+        relu_floor: 0,
+    };
+    let ok = recovery::recompute_gemm_row(&abft, &x, 1, m, &epi, &mut c_temp, &mut out);
+    assert!(ok, "a transient accumulator fault must clear on recompute");
+    assert_eq!(c_temp, clean, "recompute restores the exact accumulator");
+    let after = abft.row_residual(&c_temp, m, 1);
+    assert_eq!(before - after, 5_000, "the residual shift is the injected delta");
+    assert_eq!(Severity::from_gemm_delta(before - after), Severity::Significant);
+    assert_eq!(Severity::from_gemm_delta(7), Severity::NearBound);
+}
+
+fn eb_model(tables: usize, protection: Protection) -> DlrmModel {
+    DlrmModel::random(DlrmConfig {
+        num_dense: 4,
+        embedding_dim: 8,
+        bottom_mlp: vec![12, 8],
+        top_mlp: vec![12],
+        tables: vec![TableConfig { rows: 120, pooling: 4 }; tables],
+        protection,
+        dense_range: (0.0, 1.0),
+        seed: 0xEB5,
+    })
+}
+
+#[test]
+fn local_eb_fault_journals_one_escalated_event() {
+    let mut model = eb_model(1, Protection::DetectRecompute);
+    model.events = EventSink::with_capacity(16);
+    let sink = model.events.clone();
+    let mut rng = Pcg32::new(1);
+    let reqs = model.synth_requests(1, &mut rng);
+    // Corrupt a code the single request's bag actually reads: high bit
+    // of the first touched row's first code — Δ = α·128 against a 1e-5
+    // relative bound, far past the EB significance margin.
+    let victim = reqs[0].sparse[0][0];
+    model.tables[0].data[victim * model.cfg.embedding_dim] ^= 0x80;
+    let (_, rep) = model.forward(&reqs);
+    assert_eq!(rep.eb_bags_flagged, 1);
+    assert_eq!(rep.eb_bags_unrecovered, 1, "memory corruption survives the re-gather");
+    let j = sink.journal().unwrap();
+    assert_eq!(j.total(), 1, "one fault, one event");
+    let ev = j.recent(1)[0];
+    assert_eq!(ev.site, SiteId::Eb(0));
+    assert_eq!(ev.unit, UnitRef::Bag { request: 0, replica: LOCAL_REPLICA });
+    assert_eq!(ev.detector, Detector::EbBound);
+    assert_eq!(ev.severity, Severity::Significant);
+    assert_eq!(ev.resolution, Resolution::Escalated(Recovery::RetryBatch));
+}
+
+#[test]
+fn shard_router_fault_journals_failover_event_and_serves_clean() {
+    let mut model = eb_model(2, Protection::DetectRecompute);
+    model.events = EventSink::with_capacity(64);
+    let sink = model.events.clone();
+    let plan = ShardPlan::hash_placement(2, 1, 2);
+    let store = Arc::new(ShardStore::from_model(&model, plan, 120));
+    let router = ShardRouter::new(Arc::clone(&store));
+    let mut rng = Pcg32::new(2);
+    let reqs = model.synth_requests(1, &mut rng);
+    let (clean, _) = model.forward(&reqs);
+    assert_eq!(sink.journal().unwrap().total(), 0, "clean forward journals nothing");
+    // Smash every row of table 0 in replica 0: the bag detects
+    // persistently, the shard fails over to replica 1.
+    let d = model.cfg.embedding_dim;
+    for row in 0..model.tables[0].rows {
+        store.flip_table_byte(0, 0, row * d, 0x80);
+    }
+    let (got, rep) = model.forward_with(&reqs, &router);
+    assert_eq!(got, clean, "failover serves the clean value");
+    assert!(rep.clean());
+    let j = sink.journal().unwrap();
+    assert_eq!(j.total(), 1, "one persistent bag, one event");
+    let ev = j.recent(1)[0];
+    assert_eq!(ev.site, SiteId::Eb(0));
+    assert_eq!(ev.unit, UnitRef::Bag { request: 0, replica: 0 });
+    assert_eq!(ev.detector, Detector::EbBound);
+    assert_eq!(ev.severity, Severity::Significant);
+    assert_eq!(ev.resolution, Resolution::Recovered(Recovery::FailoverReplica));
+}
+
+#[test]
+fn r1_router_fault_journals_degraded_event() {
+    let mut model = eb_model(1, Protection::DetectRecompute);
+    model.events = EventSink::with_capacity(16);
+    let sink = model.events.clone();
+    let store = Arc::new(ShardStore::from_model(&model, ShardPlan::hash_placement(1, 1, 1), 120));
+    let router = ShardRouter::new(Arc::clone(&store));
+    let mut rng = Pcg32::new(3);
+    let reqs = model.synth_requests(1, &mut rng);
+    let d = model.cfg.embedding_dim;
+    for row in 0..model.tables[0].rows {
+        store.flip_table_byte(0, 0, row * d, 0x80);
+    }
+    let (_, rep) = model.forward_with(&reqs, &router);
+    assert!(rep.eb_bags_unrecovered > 0);
+    let ev = sink.journal().unwrap().recent(1)[0];
+    assert_eq!(ev.resolution, Resolution::Degraded, "R=1 exhausts the ladder — never silent");
+    assert_eq!(ev.site, SiteId::Eb(0));
+}
+
+#[test]
+fn scrub_hits_journal_quarantine_and_local_report_events() {
+    // Sharded: a low-bit flip (Δ = 1, below the Table-III significance
+    // split) in a replica → ScrubExact event with the quarantine
+    // resolution.
+    let mut model = eb_model(2, Protection::DetectRecompute);
+    model.events = EventSink::with_capacity(16);
+    let sink = model.events.clone();
+    let store = Arc::new(ShardStore::from_model(&model, ShardPlan::hash_placement(2, 1, 2), 120));
+    store.flip_table_byte(1, 1, 5 * model.cfg.embedding_dim + 2, 0x01);
+    assert_eq!(store.scrub_full(), 1);
+    let j = sink.journal().unwrap();
+    assert_eq!(j.total(), 1);
+    let ev = j.recent(1)[0];
+    assert_eq!(ev.site, SiteId::Eb(1));
+    assert_eq!(ev.unit, UnitRef::ScrubSlot { replica: 1, row: 5 });
+    assert_eq!(ev.detector, Detector::ScrubExact);
+    assert_eq!(ev.severity, Severity::NearBound, "Δ=1 is below the significance split");
+    // Escalated, not Recovered: the repair is queued, not yet proven.
+    assert_eq!(ev.resolution, Resolution::Escalated(Recovery::QuarantineAndRepair));
+
+    // Local (unsharded) scrubber: the engine's own tables have no
+    // replica — the ladder is empty and the event is report-only.
+    let engine = Engine::new(eb_model(1, Protection::DetectRecompute)).with_scrubbing(1000);
+    {
+        let mut m = engine.model.write().unwrap();
+        let d = m.cfg.embedding_dim;
+        m.tables[0].data[7 * d] ^= 0x80; // high bit: significant
+    }
+    let tick = engine.scrub_tick();
+    assert_eq!(tick.hits, vec![(0, 7)]);
+    let j = engine.journal();
+    assert_eq!(j.total(), 1);
+    let ev = j.recent(1)[0];
+    assert_eq!(ev.site, SiteId::Eb(0));
+    assert_eq!(ev.unit, UnitRef::ScrubSlot { replica: LOCAL_REPLICA, row: 7 });
+    assert_eq!(ev.severity, Severity::Significant);
+    assert_eq!(ev.resolution, Resolution::DetectedOnly);
+    assert_eq!(
+        engine.metrics.scrub_hits.load(std::sync::atomic::Ordering::Relaxed),
+        1,
+        "the sink routes scrub events into the scrub_hits counter"
+    );
+}
+
+#[test]
+fn engine_retry_trail_and_snapshot_counts() {
+    // Persistent local EB corruption through the engine: the batch
+    // detects, retries (the RetryBatch rung re-reads the same bad
+    // memory), and degrades — the journal records the detection from
+    // BOTH passes, and the metrics snapshot embeds the counts.
+    let mut rng = Pcg32::new(4);
+    let engine = Engine::new(eb_model(1, Protection::DetectRecompute));
+    let (reqs, victim) = {
+        let model = engine.model.read().unwrap();
+        let reqs = model.synth_requests(1, &mut rng);
+        (reqs.clone(), reqs[0].sparse[0][0])
+    };
+    {
+        let mut model = engine.model.write().unwrap();
+        let d = model.cfg.embedding_dim;
+        model.tables[0].data[victim * d] ^= 0x80;
+    }
+    let mut scores = vec![0f32; 1];
+    let outcome = engine.score(&reqs, &mut scores);
+    assert!(outcome.detected && outcome.recomputed && outcome.degraded);
+    let j = engine.journal();
+    assert_eq!(j.total(), 2, "one detection event per forward pass");
+    for ev in j.recent(2) {
+        assert_eq!(ev.site, SiteId::Eb(0));
+        assert_eq!(ev.resolution, Resolution::Escalated(Recovery::RetryBatch));
+        assert_eq!(ev.tick, 1, "both events stamp the batch's journal tick");
+    }
+    let snap = engine.metrics_snapshot();
+    assert_eq!(snap.path(&["events", "total"]).and_then(Json::as_usize), Some(2));
+    assert_eq!(
+        snap.path(&["events", "by_detector", "eb_bound"]).and_then(Json::as_usize),
+        Some(2)
+    );
+    assert_eq!(
+        snap.path(&["events", "by_resolution", "escalated"]).and_then(Json::as_usize),
+        Some(2)
+    );
+    assert_eq!(snap.get("detections").and_then(Json::as_usize), Some(2));
+}
+
+#[test]
+fn journal_wraps_without_losing_aggregate_truth() {
+    // Capacity-4 sink under repeated faults: the ring keeps the newest 4
+    // events, the aggregates keep the lifetime truth.
+    let mut model = eb_model(1, Protection::DetectRecompute);
+    model.events = EventSink::with_capacity(4);
+    let sink = model.events.clone();
+    let mut rng = Pcg32::new(5);
+    let reqs = model.synth_requests(1, &mut rng);
+    let victim = reqs[0].sparse[0][0];
+    model.tables[0].data[victim * model.cfg.embedding_dim] ^= 0x80;
+    for _ in 0..6 {
+        model.forward(&reqs);
+    }
+    let j = sink.journal().unwrap();
+    assert_eq!(j.total(), 6);
+    assert_eq!(j.len(), 4);
+    assert_eq!(j.dropped(), 2);
+    assert_eq!(j.recent(16).len(), 4, "only the resident tail is readable");
+    let c = j.counts_json();
+    assert_eq!(c.path(&["by_detector", "eb_bound"]).and_then(Json::as_usize), Some(6));
+    assert_eq!(c.path(&["by_severity", "significant"]).and_then(Json::as_usize), Some(6));
+}
+
+#[test]
+fn ladder_shape_matches_the_site_flows() {
+    // The declarative ladder the sites consult — one global order,
+    // per-class applicability (the five-site surgery this PR removes).
+    assert_eq!(
+        recovery::ladder(SiteClass::EbSharded),
+        [
+            Recovery::RecomputeUnit,
+            Recovery::FailoverReplica,
+            Recovery::QuarantineAndRepair,
+            Recovery::Degrade
+        ]
+        .as_slice()
+    );
+    assert_eq!(
+        recovery::ladder(SiteClass::GemmRow),
+        [Recovery::RecomputeUnit, Recovery::RetryBatch, Recovery::Degrade].as_slice()
+    );
+    assert_eq!(recovery::first_step(SiteClass::GemmAggregate), Some(Recovery::RetryBatch));
+    assert_eq!(recovery::first_step(SiteClass::ScrubLocal), None);
+}

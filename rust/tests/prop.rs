@@ -7,6 +7,7 @@ use dlrm_abft::abft::{encode_checksum_col, AbftGemm, EbChecksum};
 use dlrm_abft::dlrm::{AbftLinear, DlrmConfig, DlrmModel, Protection, TableConfig};
 use dlrm_abft::embedding::{bag_sum_8, QuantTable8};
 use dlrm_abft::gemm::{gemm_naive, PackedB};
+use dlrm_abft::detect::SiteCtx;
 use dlrm_abft::policy::{DetectionMode, PolicyHandle, PolicySites, SiteTelemetry};
 use dlrm_abft::quant::{get_nibble, pack_nibbles, QParams};
 use dlrm_abft::util::rng::Pcg32;
@@ -261,7 +262,7 @@ fn prop_sampled_one_layer_forward_bit_identical_to_full() {
             m,
             xp,
             DetectionMode::Sampled(1),
-            Some(&telem),
+            SiteCtx::bare(Some(&telem)),
             &mut scratch,
             &mut out_s1,
         );

@@ -114,9 +114,13 @@ fn steady_state_parse_allocs() {
 
 #[test]
 fn engine_score_steady_state_is_allocation_free() {
-    // Unsharded: local EB stage, fused MLP pipeline, pooled arena.
+    // Unsharded: local EB stage, fused MLP pipeline, pooled arena. The
+    // engine always carries an attached fault-event sink (PR 5), so this
+    // also proves the journal holds the zero-alloc contract: it is
+    // pre-sized at attach and the clean path never emits.
     let engine = Engine::new(tiny_model(0x21));
     steady_state_allocs(&engine, 4, "unsharded");
+    assert_eq!(engine.journal().total(), 0, "clean traffic journals nothing");
 
     // Sharded: the router's per-shard fan-out buffers pool in the arena's
     // EbScratch — the "router scratch allocates per batch" ROADMAP item.
