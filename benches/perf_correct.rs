@@ -1,0 +1,306 @@
+//! Correction perf harness (PR 6): emits `BENCH_PR6.json`.
+//!
+//! * Rungs — per-flagged-row latency of the recovery options for a
+//!   corrupt GEMM row: `CorrectInPlace` (group localization + one
+//!   algebraic entry fix + re-requantize + re-verify) vs `RecomputeUnit`
+//!   (full row dot products + re-requantize), plus the batch-level
+//!   `FailoverReplica` rung on a sharded store for scale.
+//! * EB dual checksum — build and scrub cost of the (C_T, C_W) pair
+//!   against a plain single-sum baseline (the pre-PR6 checksum), and the
+//!   R=1 self-heal latency on top of a clean scrub pass.
+//! * Protected GEMM — measured overhead of the checksum + group columns
+//!   over the unprotected kernel vs the §V < 20% budget, next to the
+//!   closed-form `AbftGemm::localized_overhead`.
+//!
+//! Env: `QUICK=1` shrinks iteration counts; `BENCH_OUT=path` overrides
+//! the output file. Run: `cargo bench --bench perf_correct`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dlrm_abft::abft::{AbftGemm, EbChecksum, Scrubber};
+use dlrm_abft::detect::recovery;
+use dlrm_abft::dlrm::{AbftLinear, DlrmConfig, DlrmModel, Protection, TableConfig};
+use dlrm_abft::embedding::QuantTable8;
+use dlrm_abft::gemm::{gemm_exec_into, simd_active, PackedB};
+use dlrm_abft::quant::{quantize_slice_u8, RequantEpilogue};
+use dlrm_abft::shard::{ShardPlan, ShardRouter, ShardStore};
+use dlrm_abft::util::json::Json;
+use dlrm_abft::util::rng::Pcg32;
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+/// CorrectInPlace vs RecomputeUnit on the same flagged rows, plus the
+/// FailoverReplica batch rung for scale. The corrected buffer ends
+/// bit-identical to clean after every fix, so each iteration corrupts a
+/// fresh random (row, col, bit) without re-copying the accumulator.
+fn rungs_section(quick: bool) -> Json {
+    let iters = if quick { 300 } else { 3000 };
+    let (m, k, n) = (8usize, 256usize, 128usize);
+    let mut rng = Pcg32::new(0xC0DE);
+    let layer = AbftLinear::random(k, n, false, Protection::DetectRecompute, &mut rng);
+    let xf: Vec<f32> = (0..m * k).map(|_| rng.next_f32()).collect();
+    let (x, xp) = quantize_slice_u8(&xf);
+    let (clean_out, _) = layer.forward(&x, m, xp);
+    let (clean_c, _) = layer.forward_raw(&x, m);
+    let params = layer.requant_params(&x, m, xp);
+    let epi = RequantEpilogue {
+        spec: params.spec(),
+        a_row_sums: &params.a_row_sums,
+        b_col_sums: &params.b_col_sums,
+        n_out: n,
+        relu_floor: 0,
+    };
+    let abft = layer.abft();
+    let nt = abft.n_total();
+
+    let mut c = clean_c.clone();
+    let mut out = clean_out.clone();
+    let mut t_correct = 0.0;
+    for _ in 0..iters {
+        let row = rng.gen_range(0, m);
+        let col = rng.gen_range(0, n);
+        c[row * nt + col] ^= 1 << rng.gen_range_u32(32);
+        let t0 = Instant::now();
+        let got = recovery::correct_gemm_row(abft, &x, row, m, &epi, &mut c, &mut out);
+        t_correct += t0.elapsed().as_secs_f64();
+        assert!(got.corrected(), "single flip must correct");
+    }
+    assert_eq!(c, clean_c, "corrections must restore the clean accumulator");
+    let correct_us = t_correct * 1e6 / iters as f64;
+
+    let mut t_recompute = 0.0;
+    for _ in 0..iters {
+        let row = rng.gen_range(0, m);
+        let col = rng.gen_range(0, n);
+        c[row * nt + col] ^= 1 << rng.gen_range_u32(32);
+        let t0 = Instant::now();
+        let ok = recovery::recompute_gemm_row(abft, &x, row, m, &epi, &mut c, &mut out);
+        t_recompute += t0.elapsed().as_secs_f64();
+        assert!(ok, "recompute must re-verify clean");
+    }
+    assert_eq!(c, clean_c);
+    let recompute_us = t_recompute * 1e6 / iters as f64;
+
+    // FailoverReplica: whole-batch lap restart on a corrupt replica —
+    // the rung a sharded EB site falls to when no row can be named.
+    let f_iters = if quick { 5 } else { 25 };
+    let mut model = DlrmModel::random(DlrmConfig {
+        num_dense: 8,
+        embedding_dim: 32,
+        bottom_mlp: vec![64, 32],
+        top_mlp: vec![64],
+        tables: vec![TableConfig { rows: 2_000, pooling: 16 }; 2],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed: 0xFA11,
+    });
+    let reqs = model.synth_requests(8, &mut rng);
+    let store = Arc::new(ShardStore::from_model(&model, ShardPlan::hash_placement(2, 1, 2), 256));
+    let router = ShardRouter::new(Arc::clone(&store));
+    let d = model.cfg.embedding_dim;
+    let mut failover_ms = 0.0;
+    for _ in 0..f_iters {
+        for row in 0..model.tables[0].rows {
+            store.flip_table_byte(0, 0, row * d, 0x80);
+        }
+        let t0 = Instant::now();
+        std::hint::black_box(model.forward_with(&reqs, &router));
+        failover_ms += t0.elapsed().as_secs_f64() * 1e3;
+        store.drain_repairs();
+    }
+    failover_ms /= f_iters as f64;
+
+    Json::obj(vec![
+        ("shape", Json::Str(format!("m{m} k{k} n{n}"))),
+        ("iters", num(iters as f64)),
+        ("correct_in_place_row_us", num(round3(correct_us))),
+        ("recompute_unit_row_us", num(round3(recompute_us))),
+        ("recompute_over_correct", num(round3(recompute_us / correct_us))),
+        ("failover_replica_batch_ms", num(round3(failover_ms))),
+    ])
+}
+
+/// Dual (C_T, C_W) checksum vs the single plain sum it replaced: build
+/// throughput, scrub-scan throughput, and the R=1 self-heal latency on
+/// top of a clean full pass.
+fn eb_section(quick: bool) -> Json {
+    let (rows, dim) = if quick { (20_000usize, 64usize) } else { (200_000, 64) };
+    let iters = if quick { 3 } else { 10 };
+    let mut rng = Pcg32::new(0xEB6);
+    let table = QuantTable8::random(rows, dim, &mut rng);
+
+    let t0 = Instant::now();
+    let mut checksum = EbChecksum::build_8(&table);
+    for _ in 1..iters {
+        checksum = EbChecksum::build_8(&table);
+    }
+    let dual_build_s = t0.elapsed().as_secs_f64() / iters as f64;
+
+    // Single-sum baseline: the pre-PR6 checksum walked the same bytes
+    // but accumulated only the plain sum.
+    let mut c_t = vec![0i32; rows];
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        for (row, slot) in c_t.iter_mut().enumerate() {
+            let mut s = 0i32;
+            for &q in table.row(row) {
+                s += q as i32;
+            }
+            *slot = s;
+        }
+        std::hint::black_box(&c_t);
+    }
+    let single_build_s = t0.elapsed().as_secs_f64() / iters as f64;
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        assert!(Scrubber::full_pass(&table, &checksum).is_empty());
+    }
+    let dual_scan_s = t0.elapsed().as_secs_f64() / iters as f64;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        for (row, want) in c_t.iter().enumerate() {
+            let mut s = 0i32;
+            for &q in table.row(row) {
+                s += q as i32;
+            }
+            assert_eq!(s, *want);
+        }
+    }
+    let single_scan_s = t0.elapsed().as_secs_f64() / iters as f64;
+
+    // Self-heal: one corrupt slot per full pass on an R=1 store — the
+    // delta over the clean pass is the localize + rewrite + re-verify.
+    let heal_rows = 4_000usize;
+    let h_iters = if quick { 5 } else { 20 };
+    let model = DlrmModel::random(DlrmConfig {
+        num_dense: 4,
+        embedding_dim: dim,
+        bottom_mlp: vec![16, dim],
+        top_mlp: vec![16],
+        tables: vec![TableConfig { rows: heal_rows, pooling: 8 }],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed: 0x5E1F,
+    });
+    let store = ShardStore::from_model(&model, ShardPlan::hash_placement(1, 1, 1), heal_rows);
+    let t0 = Instant::now();
+    for _ in 0..h_iters {
+        assert_eq!(store.scrub_full(), 0);
+    }
+    let clean_pass_ms = t0.elapsed().as_secs_f64() * 1e3 / h_iters as f64;
+    let mut heal_ms = 0.0;
+    for i in 0..h_iters {
+        store.flip_table_byte(0, 0, (i * 997) % (heal_rows * dim), 0x04);
+        let t0 = Instant::now();
+        assert_eq!(store.scrub_full(), 1);
+        heal_ms += t0.elapsed().as_secs_f64() * 1e3;
+    }
+    heal_ms /= h_iters as f64;
+    assert_eq!(store.quarantined_replicas(), 0, "every flip must self-heal");
+
+    Json::obj(vec![
+        ("table", Json::Str(format!("{rows}x{dim}"))),
+        ("dual_build_mrows_s", num(round3(rows as f64 / dual_build_s / 1e6))),
+        ("single_build_mrows_s", num(round3(rows as f64 / single_build_s / 1e6))),
+        ("dual_over_single_build", num(round3(dual_build_s / single_build_s))),
+        ("dual_scan_mrows_s", num(round3(rows as f64 / dual_scan_s / 1e6))),
+        ("single_scan_mrows_s", num(round3(rows as f64 / single_scan_s / 1e6))),
+        ("dual_over_single_scan", num(round3(dual_scan_s / single_scan_s))),
+        ("clean_full_pass_ms", num(round3(clean_pass_ms))),
+        ("self_heal_full_pass_ms", num(round3(heal_ms))),
+        ("self_heal_extra_ms", num(round3(heal_ms - clean_pass_ms))),
+    ])
+}
+
+/// Measured protected-GEMM overhead (Eq-3b + group checksum columns +
+/// verify) over the unprotected kernel, against the § V < 20% budget.
+fn gemm_overhead_section(quick: bool) -> Json {
+    let iters = if quick { 5 } else { 30 };
+    let shapes = [(128usize, 256usize, 512usize), (16, 128, 256), (4, 512, 64)];
+    let mut rng = Pcg32::new(0x63E);
+    let mut rows = Vec::new();
+    let mut worst = 0.0f64;
+    for (m, n, k) in shapes {
+        let mut a = vec![0u8; m * k];
+        let mut b = vec![0i8; k * n];
+        rng.fill_u8(&mut a);
+        rng.fill_i8(&mut b);
+        let plain = PackedB::pack(&b, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let mut c_plain = vec![0i32; m * n];
+        let mut c_prot = vec![0i32; m * abft.n_total()];
+        for _ in 0..2 {
+            gemm_exec_into(&a, &plain, m, &mut c_plain);
+            abft.exec_into(&a, m, &mut c_prot);
+        }
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            gemm_exec_into(&a, &plain, m, &mut c_plain);
+            std::hint::black_box(&c_plain);
+        }
+        let plain_s = t0.elapsed().as_secs_f64() / iters as f64;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            assert!(abft.exec_into(&a, m, &mut c_prot).clean());
+        }
+        let prot_s = t0.elapsed().as_secs_f64() / iters as f64;
+        let measured = prot_s / plain_s - 1.0;
+        worst = worst.max(measured);
+        rows.push(Json::obj(vec![
+            ("shape", Json::Str(format!("m{m} n{n} k{k}"))),
+            ("plain_us", num(round3(plain_s * 1e6))),
+            ("protected_us", num(round3(prot_s * 1e6))),
+            ("measured_overhead", num(round3(measured))),
+            ("closed_form", num(round3(AbftGemm::localized_overhead(m, n, k)))),
+        ]));
+    }
+    Json::obj(vec![
+        ("budget", num(0.20)),
+        ("worst_measured_overhead", num(round3(worst))),
+        ("within_budget", Json::Bool(worst < 0.20)),
+        ("by_shape", Json::Arr(rows)),
+    ])
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick");
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_PR6.json".into());
+
+    eprintln!("perf_correct: avx2={} quick={quick}", simd_active());
+    let rungs = rungs_section(quick);
+    eprintln!("perf_correct: rung latencies done");
+    let eb = eb_section(quick);
+    eprintln!("perf_correct: EB dual-checksum done");
+    let gemm = gemm_overhead_section(quick);
+    eprintln!("perf_correct: protected-GEMM overhead done");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_correct_pr6".into())),
+        (
+            "host",
+            Json::obj(vec![
+                ("avx2", Json::Bool(simd_active())),
+                (
+                    "threads",
+                    num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0) as f64),
+                ),
+            ]),
+        ),
+        ("rungs", rungs),
+        ("eb_dual_checksum", eb),
+        ("gemm_overhead", gemm),
+    ]);
+    let text = format!("{doc}");
+    std::fs::write(&out_path, &text).expect("write bench output");
+    println!("{text}");
+    eprintln!("perf_correct: wrote {out_path}");
+}

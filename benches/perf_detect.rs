@@ -41,6 +41,7 @@ fn round3(x: f64) -> f64 {
 fn sample_event(i: u32) -> FaultEvent {
     FaultEvent {
         tick: i as u64,
+        ctl_tick: 0,
         site: SiteId::Eb(i % 8),
         unit: UnitRef::Bag { request: i, replica: i % 2 },
         detector: Detector::EbBound,

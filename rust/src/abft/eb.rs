@@ -9,6 +9,19 @@
 //! compared under a *relative round-off bound* (1e-5 in the paper §V-D —
 //! deliberately loose: small float fluctuations don't move inference
 //! results, so trading low-bit sensitivity for a low false-positive rate).
+//!
+//! # Dual checksum (PR 6)
+//!
+//! A plain row sum is blind to the §IV-C cancellation class: two intra-row
+//! code corruptions of +δ/−δ preserve `Σ_j codes[i][j]` exactly. The
+//! second per-row checksum `C_W[i] = Σ_j (j+1)·codes[i][j]` uses an
+//! independent (index) weight vector, so the same corruption moves `C_W`
+//! by `δ·(j₂−j₁) ≠ 0` — detectable. For a *single*-slot corruption the
+//! pair also **localizes**: with `S = Σcodes − C_T` and
+//! `W = Σ(j+1)·codes − C_W`, a lone fault at slot `j` gives `W = (j+1)·S`,
+//! so `j = W/S − 1` and the original code is `current − S` — the scrubber
+//! rewrites the slot and re-verifies both sums before re-admitting the
+//! row (the R=1 self-heal; see [`EbChecksum::localize_slot`]).
 
 use crate::embedding::{QuantTable4, QuantTable8};
 
@@ -55,6 +68,11 @@ pub enum CheckPrecision {
 pub struct EbChecksum {
     /// Integer code row sums (the `C_T` column).
     pub c_t: Vec<i32>,
+    /// Index-weighted integer code row sums (the `C_W` column):
+    /// `C_W[i] = Σ_j (j+1)·codes[i][j]` — the independent-weight dual
+    /// checksum that closes the sum-preserving cancellation class and
+    /// localizes single-slot corruption (module docs).
+    pub c_w: Vec<i32>,
     pub d: usize,
     pub rel_bound: f64,
     pub precision: CheckPrecision,
@@ -66,6 +84,7 @@ impl EbChecksum {
     pub fn build_8(table: &QuantTable8) -> Self {
         Self {
             c_t: (0..table.rows).map(|i| table.code_row_sum(i)).collect(),
+            c_w: (0..table.rows).map(|i| table.weighted_code_row_sum(i)).collect(),
             d: table.d,
             rel_bound: DEFAULT_REL_BOUND,
             precision: CheckPrecision::F64,
@@ -75,6 +94,7 @@ impl EbChecksum {
     pub fn build_4(table: &QuantTable4) -> Self {
         Self {
             c_t: (0..table.rows).map(|i| table.code_row_sum(i)).collect(),
+            c_w: (0..table.rows).map(|i| table.weighted_code_row_sum(i)).collect(),
             d: table.d,
             rel_bound: DEFAULT_REL_BOUND,
             precision: CheckPrecision::F64,
@@ -91,9 +111,10 @@ impl EbChecksum {
         self
     }
 
-    /// Bytes of checksum storage (the §V-C `32/(p·d)` memory overhead).
+    /// Bytes of checksum storage (the §V-C `32/(p·d)` memory overhead
+    /// per column; the PR 6 dual checksum stores two columns).
     pub fn bytes(&self) -> usize {
-        self.c_t.len() * 4
+        (self.c_t.len() + self.c_w.len()) * 4
     }
 
     /// Exact integer deviation of one stored row from its canonical
@@ -103,6 +124,66 @@ impl EbChecksum {
     /// Table-III high-/low-nibble significance split).
     pub fn row_delta(&self, table: &QuantTable8, row: usize) -> i64 {
         table.code_row_sum(row) as i64 - self.c_t[row] as i64
+    }
+
+    /// Exact integer deviation of the *index-weighted* sum from `C_W`:
+    /// `Σ_j (j+1)·codes[row][j] − C_W[row]`. Independent of
+    /// [`EbChecksum::row_delta`]'s weight vector, so sum-preserving
+    /// intra-row corruption (which leaves `row_delta == 0`) still moves
+    /// this one (module docs).
+    pub fn weighted_row_delta(&self, table: &QuantTable8, row: usize) -> i64 {
+        table.weighted_code_row_sum(row) as i64 - self.c_w[row] as i64
+    }
+
+    /// Both exact integer checks: `true` iff the stored row matches
+    /// `C_T` **and** `C_W`. This is the re-admission gate after an
+    /// in-place slot rewrite — a self-healed row is only served once
+    /// both sums verify again.
+    pub fn row_clean(&self, table: &QuantTable8, row: usize) -> bool {
+        self.row_delta(table, row) == 0 && self.weighted_row_delta(table, row) == 0
+    }
+
+    /// Single-slot localization over a corrupt stored row (module docs):
+    /// with `S = Σcodes − C_T` and `W = Σ(j+1)·codes − C_W`, a lone
+    /// corrupt slot `j` satisfies `W = (j+1)·S`, so the slot is
+    /// `W/S − 1` and its original code is `current − S`.
+    ///
+    /// Returns `Some((slot, original_code))` only when the residual pair
+    /// resolves to exactly one in-range slot whose implied original is a
+    /// valid byte. Returns `None` for a clean row, for corruption that
+    /// spans multiple slots (non-divisible `W/S`, slot out of `0..d`, or
+    /// implied original outside `0..=255`), and for the cancellation
+    /// class (`S == 0, W ≠ 0` — detected but not localizable) — in every
+    /// `None` case the caller falls down the recovery ladder
+    /// (quarantine + repair from a replica) instead of rewriting.
+    ///
+    /// Note a multi-slot corruption can in principle alias a single-slot
+    /// one; the rewrite is therefore always re-verified against **both**
+    /// sums via [`EbChecksum::row_clean`] before the row is re-admitted,
+    /// and an aliased rewrite that still fails verification falls
+    /// through to quarantine unchanged-in-spirit (the slot write is
+    /// reverted by the repair path's full-row rewrite).
+    pub fn localize_slot(&self, table: &QuantTable8, row: usize) -> Option<(usize, u8)> {
+        let s = self.row_delta(table, row);
+        let w = self.weighted_row_delta(table, row);
+        if s == 0 {
+            // Clean (w == 0) or pure cancellation (w != 0): nothing a
+            // single-slot rewrite can fix.
+            return None;
+        }
+        if w % s != 0 {
+            return None;
+        }
+        let q = w / s;
+        if q < 1 || q > self.d as i64 {
+            return None;
+        }
+        let j = (q - 1) as usize;
+        let original = table.row(row)[j] as i64 - s;
+        if !(0..=255).contains(&original) {
+            return None;
+        }
+        Some((j, original as u8))
     }
 
     /// Checksum side of Eq 5 for one bag:
@@ -204,15 +285,20 @@ impl EbChecksum {
 }
 
 /// Per-row metadata interleaved for the fused protected bag: one 16-byte
-/// record instead of three parallel arrays, so the row's α, β and C_T
-/// arrive on a single cache line with one miss.
+/// record instead of three parallel arrays, so the row's α, β, C_T and
+/// C_W arrive on a single cache line with one miss. The dual checksum
+/// (PR 6) rides in what used to be the record's padding word — the
+/// record size and the fused path's traffic are unchanged.
 #[derive(Clone, Copy, Debug)]
 #[repr(C)]
 pub struct RowMeta {
     pub alpha: f32,
     pub beta: f32,
     pub c_t: i32,
-    _pad: i32,
+    /// Index-weighted checksum (`C_W`) — not consulted by the Eq-5
+    /// serving check (which needs only `C_T`), but kept resident so the
+    /// scrubber's localization reads come from the same record.
+    pub c_w: i32,
 }
 
 /// Cache-optimal protected EmbeddingBag (§Perf optimization).
@@ -236,12 +322,13 @@ pub struct FusedEbAbft {
 impl FusedEbAbft {
     pub fn new(table: &QuantTable8, checksum: EbChecksum) -> Self {
         assert_eq!(checksum.c_t.len(), table.rows);
+        assert_eq!(checksum.c_w.len(), table.rows);
         let meta = (0..table.rows)
             .map(|i| RowMeta {
                 alpha: table.alpha[i],
                 beta: table.beta[i],
                 c_t: checksum.c_t[i],
-                _pad: 0,
+                c_w: checksum.c_w[i],
             })
             .collect();
         Self {
@@ -356,12 +443,13 @@ pub struct FusedEbAbft4 {
 impl FusedEbAbft4 {
     pub fn new(table: &QuantTable4, checksum: EbChecksum) -> Self {
         assert_eq!(checksum.c_t.len(), table.rows);
+        assert_eq!(checksum.c_w.len(), table.rows);
         let meta = (0..table.rows)
             .map(|i| RowMeta {
                 alpha: table.alpha[i],
                 beta: table.beta[i],
                 c_t: checksum.c_t[i],
-                _pad: 0,
+                c_w: checksum.c_w[i],
             })
             .collect();
         Self {
@@ -588,6 +676,56 @@ mod tests {
         let mut r_plain = vec![0f32; 32];
         crate::embedding::bag_sum_8(&table, &indices, Some(&weights), false, &mut r_plain);
         assert_eq!(r_fused, r_plain);
+    }
+
+    #[test]
+    fn dual_checksum_catches_sum_preserving_corruption() {
+        // §IV-C cancellation class: +δ at one slot, −δ at another keeps
+        // the plain row sum intact — row_delta is blind, the
+        // index-weighted delta is not, and two-slot corruption must NOT
+        // localize to a slot (else the "fix" would corrupt a third value).
+        let (mut table, _, _) = setup(200, 64, 51);
+        let row = 17;
+        let base = row * 64;
+        table.data[base + 9] = 100;
+        table.data[base + 40] = 100;
+        let cs = EbChecksum::build_8(&table);
+        assert!(cs.row_clean(&table, row));
+        table.data[base + 9] -= 5;
+        table.data[base + 40] += 5;
+        assert_eq!(cs.row_delta(&table, row), 0, "single checksum is blind");
+        assert_ne!(cs.weighted_row_delta(&table, row), 0, "dual checksum flags");
+        assert!(!cs.row_clean(&table, row));
+        assert_eq!(cs.localize_slot(&table, row), None, "two-slot must not localize");
+    }
+
+    #[test]
+    fn single_slot_corruption_localizes_and_heals() {
+        let (mut table, cs, _) = setup(200, 64, 52);
+        for &(row, slot, flip) in &[(3usize, 0usize, 0x01u8), (90, 63, 0x80), (150, 31, 0x42)] {
+            let original = table.data[row * 64 + slot];
+            table.data[row * 64 + slot] = original ^ flip;
+            assert!(!cs.row_clean(&table, row));
+            let (got_slot, got_original) =
+                cs.localize_slot(&table, row).expect("single-slot fault localizes");
+            assert_eq!((got_slot, got_original), (slot, original));
+            // The R=1 self-heal: rewrite the named slot, both sums verify.
+            table.data[row * 64 + got_slot] = got_original;
+            assert!(cs.row_clean(&table, row));
+            assert_eq!(cs.localize_slot(&table, row), None, "clean row localizes nothing");
+        }
+    }
+
+    #[test]
+    fn fused_meta_carries_both_checksums_in_16_bytes() {
+        assert_eq!(std::mem::size_of::<RowMeta>(), 16);
+        let (table, cs, _) = setup(50, 32, 53);
+        let fused = cs.clone().fuse(&table);
+        for i in 0..50 {
+            assert_eq!(fused.meta[i].c_t, cs.c_t[i]);
+            assert_eq!(fused.meta[i].c_w, cs.c_w[i]);
+        }
+        assert_eq!(cs.bytes(), 50 * 8, "dual checksum stores two i32 columns");
     }
 
     #[test]

@@ -15,8 +15,39 @@
 //! `Σ_j C_temp[i][j] ≡ C_temp[i][n]  (mod 127)`.
 //! The row sum is accumulated in i64 — with n up to 3200 and entries up to
 //! ~1e8, an i32 accumulator would overflow (the paper elides this detail).
+//!
+//! # Localization + in-place correction (PR 6)
+//!
+//! Beyond the Eq-3b column, the pack carries **column-group partial
+//! checksums**: `G = ⌈n/32⌉` extra columns, one per [`GROUP_WIDTH`]-wide
+//! payload column group, built by the same mod-127 row-sum construction
+//! restricted to the group. The encoded layout is
+//!
+//! ```text
+//! cols [0, n)              payload
+//! col  [n]                 Eq-3b full row-sum checksum
+//! cols [n+1, n+1+G)        group partial checksums (group g = payload
+//!                          columns [g·32, min((g+1)·32, n)))
+//! ```
+//!
+//! All extra columns ride the panel-interleaved pack and the same kernel
+//! call; the requantize epilogue skips everything past `n_out = n` exactly
+//! as it always skipped the single checksum column. On an Eq-3b-flagged
+//! row, the intersection of the row residual with the (single) non-zero
+//! group residual *names* the faulty column group; [`AbftGemm::correct_row`]
+//! then re-derives only that group's ≤32 candidate entries (k MACs each —
+//! `GROUP_WIDTH/n` of a full row recompute), fixes the one mismatching i32
+//! accumulator entry in place, and re-checks Eq 3b. Anything other than
+//! exactly-one-group/exactly-one-entry (multi-fault, operand corruption
+//! where re-derivation reproduces the corrupt value) is declined and falls
+//! down the recovery ladder.
 
+use crate::gemm::packed::NR;
 use crate::gemm::{gemm_exec_into, PackedB};
+
+/// Payload columns covered by one group partial checksum — the microkernel
+/// panel width, so a group residual names exactly one register tile.
+pub const GROUP_WIDTH: usize = NR;
 
 /// Paper's modulus: the largest odd number in the i8 range, and prime —
 /// odd catches all single-bit flips, primality maximizes coverage of the
@@ -40,6 +71,76 @@ pub fn encode_checksum_col(b: &[i8], k: usize, n: usize, modulus: i32) -> Vec<i8
     col
 }
 
+/// Number of column-group partial checksums for a payload width `n`.
+pub const fn group_count(n: usize) -> usize {
+    n.div_ceil(GROUP_WIDTH)
+}
+
+/// Encode the `G = ⌈n/32⌉` column-group partial checksum columns of a
+/// k×n i8 matrix: column `g` holds `(Σ_{j ∈ group g} B[p][j]) mod modulus`
+/// per row `p` — the same Algorithm-1 construction as
+/// [`encode_checksum_col`], restricted to one [`GROUP_WIDTH`]-wide group.
+pub fn encode_group_checksum_cols(b: &[i8], k: usize, n: usize, modulus: i32) -> Vec<Vec<i8>> {
+    assert_eq!(b.len(), k * n);
+    assert!((1..=127).contains(&modulus), "modulus must fit i8");
+    let groups = group_count(n);
+    let mut cols = vec![vec![0i8; k]; groups];
+    for p in 0..k {
+        for (g, col) in cols.iter_mut().enumerate() {
+            let j0 = g * GROUP_WIDTH;
+            let j1 = n.min(j0 + GROUP_WIDTH);
+            let mut s = 0i32;
+            for &v in &b[p * n + j0..p * n + j1] {
+                s += v as i32;
+            }
+            col[p] = (s % modulus) as i8;
+        }
+    }
+    cols
+}
+
+/// Outcome of one attempted algebraic in-place row correction
+/// ([`AbftGemm::correct_row`]) — the `CorrectInPlace` ladder rung's
+/// mechanism. Distinct from `abft::full::CorrectionOutcome`, which is the
+/// classic both-sides Huang–Abraham ablation; this one works on the
+/// production row-checksum layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowCorrection {
+    /// Exactly one accumulator entry was wrong: it has been rewritten in
+    /// place and the row re-verifies clean under Eq 3b. `col` is the
+    /// logical C column fixed (may be `n` — the checksum entry itself);
+    /// `delta` is the corruption removed (`corrupt − correct`).
+    Corrected { col: usize, delta: i64 },
+    /// Correction declined; the caller must fall down the recovery ladder.
+    Declined(CorrectionDecline),
+}
+
+impl RowCorrection {
+    pub fn corrected(&self) -> bool {
+        matches!(self, RowCorrection::Corrected { .. })
+    }
+}
+
+/// Why [`AbftGemm::correct_row`] declined (each is a distinct multi-fault
+/// or operand-fault signature; campaigns assert on them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorrectionDecline {
+    /// The pack carries no group checksum columns (legacy layout).
+    NoGroups,
+    /// More than one group residual is non-zero: ≥2 corrupted groups.
+    MultiGroup,
+    /// Re-deriving the candidate columns reproduced the stored values
+    /// exactly — the fault is in the packed operand (re-derivation reads
+    /// the same corrupt bytes), so only a true recompute/failover helps.
+    NoMismatch,
+    /// More than one candidate entry mismatched: multi-fault inside one
+    /// group.
+    MultiMismatch,
+    /// The row still fails Eq 3b after the single-entry fix (faults
+    /// beyond the single-corruption model).
+    ReverifyFailed,
+}
+
 /// Outcome of one protected GEMM.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Verdict {
@@ -58,49 +159,74 @@ impl Verdict {
 }
 
 /// An ABFT-protected packed GEMM operand: B packed together with its
-/// checksum column, ready for repeated protected multiplications.
+/// checksum column and group partial checksum columns, ready for repeated
+/// protected multiplications.
 #[derive(Clone, Debug)]
 pub struct AbftGemm {
     pub packed: PackedB,
     pub modulus: i32,
     pub k: usize,
     pub n: usize,
+    /// Column-group partial checksum columns carried by the pack
+    /// (`group_count(n)`, or 0 for a legacy checksum-only pack — then
+    /// [`AbftGemm::correct_row`] always declines).
+    pub groups: usize,
 }
 
 impl AbftGemm {
-    /// Encode + pack (Algorithm 1 lines 1-6). Done once per weight matrix.
+    /// Encode + pack (Algorithm 1 lines 1-6, plus the PR-6 group partial
+    /// checksum columns). Done once per weight matrix.
     pub fn new(b: &[i8], k: usize, n: usize) -> Self {
         Self::with_modulus(b, k, n, DEFAULT_MODULUS)
     }
 
     pub fn with_modulus(b: &[i8], k: usize, n: usize, modulus: i32) -> Self {
         let col = encode_checksum_col(b, k, n, modulus);
+        let gcols = encode_group_checksum_cols(b, k, n, modulus);
+        let mut extras: Vec<&[i8]> = Vec::with_capacity(1 + gcols.len());
+        extras.push(&col);
+        extras.extend(gcols.iter().map(|c| c.as_slice()));
         Self {
-            packed: PackedB::pack_with_extra_col(b, k, n, &col),
+            packed: PackedB::pack_with_extra_cols(b, k, n, &extras),
             modulus,
             k,
             n,
+            groups: gcols.len(),
         }
     }
 
     /// Wrap an already-packed encoded operand (used by fault campaigns that
-    /// corrupt the packed bytes *after* encoding).
+    /// corrupt the packed bytes *after* encoding). Accepts both the full
+    /// layout (checksum + group columns) and the legacy checksum-only one.
     pub fn from_packed(packed: PackedB, modulus: i32) -> Self {
-        assert_eq!(packed.extra_cols, 1, "needs a checksum column");
         let (k, n) = (packed.k, packed.n);
+        let groups = packed.extra_cols.checked_sub(1).expect("needs a checksum column");
+        assert!(
+            groups == 0 || groups == group_count(n),
+            "extra columns must be 1 (legacy) or 1 + ⌈n/{GROUP_WIDTH}⌉"
+        );
         Self {
             packed,
             modulus,
             k,
             n,
+            groups,
         }
     }
 
-    /// Protected GEMM (Algorithm 1 lines 7-16): compute `C_temp[m×(n+1)]`
-    /// and verify every row. Returns the intermediate matrix (checksum
-    /// column included — requantization must exclude it) and the verdict.
+    /// Total C_temp columns per row: payload + Eq-3b checksum + group
+    /// partial checksums — the stride of every buffer this type touches.
+    #[inline]
+    pub fn n_total(&self) -> usize {
+        self.n + 1 + self.groups
+    }
+
+    /// Protected GEMM (Algorithm 1 lines 7-16): compute
+    /// `C_temp[m×n_total]` and verify every row. Returns the intermediate
+    /// matrix (checksum columns included — requantization must exclude
+    /// them) and the verdict.
     pub fn exec(&self, a: &[u8], m: usize) -> (Vec<i32>, Verdict) {
-        let mut c = vec![0i32; m * (self.n + 1)];
+        let mut c = vec![0i32; m * self.n_total()];
         let verdict = self.exec_into(a, m, &mut c);
         (c, verdict)
     }
@@ -111,9 +237,9 @@ impl AbftGemm {
         self.verify(c_temp, m)
     }
 
-    /// Check Eq 3b on an already-computed `C_temp[m×(n+1)]`.
+    /// Check Eq 3b on an already-computed `C_temp[m×n_total]`.
     pub fn verify(&self, c_temp: &[i32], m: usize) -> Verdict {
-        let nt = self.n + 1;
+        let nt = self.n_total();
         assert_eq!(c_temp.len(), m * nt);
         let mut corrupted_rows = Vec::new();
         for i in 0..m {
@@ -133,7 +259,7 @@ impl AbftGemm {
     /// to [`AbftGemm::verify`] (property-tested in `rust/tests/prop.rs`).
     pub fn verify_sampled(&self, c_temp: &[i32], m: usize, every: u32, phase: u64) -> Verdict {
         let every = every.max(1) as u64;
-        let nt = self.n + 1;
+        let nt = self.n_total();
         assert_eq!(c_temp.len(), m * nt);
         let mut corrupted_rows = Vec::new();
         let mut i = ((every - phase % every) % every) as usize;
@@ -174,7 +300,7 @@ impl AbftGemm {
     /// by exactly the injected delta under corruption (the difference of
     /// two residuals over the same inputs is mod-free).
     pub fn aggregate_residual(&self, c_temp: &[i32], m: usize) -> i64 {
-        let nt = self.n + 1;
+        let nt = self.n_total();
         assert_eq!(c_temp.len(), m * nt);
         let mut t: i64 = 0;
         for i in 0..m {
@@ -193,7 +319,7 @@ impl AbftGemm {
     /// the fault injected (mod-free), which is the fault-event
     /// pipeline's severity signal.
     pub fn row_residual(&self, c_temp: &[i32], m: usize, row: usize) -> i64 {
-        let nt = self.n + 1;
+        let nt = self.n_total();
         assert_eq!(c_temp.len(), m * nt);
         assert!(row < m);
         let r = &c_temp[row * nt..(row + 1) * nt];
@@ -208,7 +334,7 @@ impl AbftGemm {
     /// B (row-level recovery; the paper's deployment model is "recompute on
     /// detect" since double faults are vanishingly rare).
     pub fn recompute_row(&self, a: &[u8], row: usize, c_temp: &mut [i32], m: usize) {
-        let nt = self.n + 1;
+        let nt = self.n_total();
         assert!(row < m);
         let arow = &a[row * self.k..(row + 1) * self.k];
         let out = &mut c_temp[row * nt..(row + 1) * nt];
@@ -217,10 +343,132 @@ impl AbftGemm {
         crate::gemm::gemm_exec_into_scalar(arow, &self.packed, 1, out);
     }
 
+    /// The raw group-`g` partial residual of one row,
+    /// `Σ_{j ∈ group g} C[row][j] − C[row][n+1+g]` — `≡ 0 (mod modulus)`
+    /// on a clean row; a non-zero residual names group `g` as corrupt.
+    pub fn group_residual(&self, c_temp: &[i32], m: usize, row: usize, g: usize) -> i64 {
+        let nt = self.n_total();
+        assert_eq!(c_temp.len(), m * nt);
+        assert!(row < m && g < self.groups);
+        let r = &c_temp[row * nt..(row + 1) * nt];
+        let j0 = g * GROUP_WIDTH;
+        let j1 = self.n.min(j0 + GROUP_WIDTH);
+        let mut t: i64 = 0;
+        for &v in &r[j0..j1] {
+            t += v as i64;
+        }
+        t - r[self.n + 1 + g] as i64
+    }
+
+    /// Localize the faulty column group of an Eq-3b-flagged row: returns
+    /// `Some(g)` when exactly one group residual is non-zero mod
+    /// `modulus`, `None` otherwise (clean, multi-group, or a fault in the
+    /// Eq-3b checksum entry itself — which leaves every group residual
+    /// clean because column `n` is outside all groups).
+    pub fn localize_row(&self, c_temp: &[i32], m: usize, row: usize) -> Option<usize> {
+        let md = self.modulus as i64;
+        let mut hit = None;
+        for g in 0..self.groups {
+            if self.group_residual(c_temp, m, row, g) % md != 0 {
+                if hit.is_some() {
+                    return None;
+                }
+                hit = Some(g);
+            }
+        }
+        hit
+    }
+
+    /// Algebraic in-place correction of a single Eq-3b-flagged row — the
+    /// `CorrectInPlace` rung's mechanism. Intersects the row residual with
+    /// the group residuals to name the faulty group, re-derives only that
+    /// group's ≤[`GROUP_WIDTH`] candidate entries from A and the packed B
+    /// (the mod-127 residual exposes δ only mod 127, so the exact corrupt
+    /// value is pinned by a k-MAC column re-derivation — `GROUP_WIDTH/n`
+    /// of a full row recompute), rewrites the one mismatching i32
+    /// accumulator entry, and re-checks Eq 3b. If *no* group flags, the
+    /// single-fault hypothesis puts the corruption in the checksum entry
+    /// `C[row][n]` itself, and that lone column is the candidate set.
+    ///
+    /// Declines (leaving `c_temp` corrupt for the next rung) on any
+    /// multi-fault signature and on operand faults, where re-derivation
+    /// reads the same corrupt packed bytes and reproduces the stored
+    /// values — see [`CorrectionDecline`].
+    pub fn correct_row(&self, a: &[u8], row: usize, c_temp: &mut [i32], m: usize) -> RowCorrection {
+        let nt = self.n_total();
+        assert_eq!(c_temp.len(), m * nt);
+        assert_eq!(a.len(), m * self.k);
+        assert!(row < m);
+        if self.groups == 0 {
+            return RowCorrection::Declined(CorrectionDecline::NoGroups);
+        }
+        let md = self.modulus as i64;
+        let mut flagged = None;
+        for g in 0..self.groups {
+            if self.group_residual(c_temp, m, row, g) % md != 0 {
+                if flagged.is_some() {
+                    return RowCorrection::Declined(CorrectionDecline::MultiGroup);
+                }
+                flagged = Some(g);
+            }
+        }
+        let (j0, j1) = match flagged {
+            Some(g) => (g * GROUP_WIDTH, self.n.min(g * GROUP_WIDTH + GROUP_WIDTH)),
+            // Eq 3b fails but every group is clean: the corrupt entry is
+            // the checksum column itself (single-fault hypothesis).
+            None => (self.n, self.n + 1),
+        };
+        let arow = &a[row * self.k..(row + 1) * self.k];
+        let mut fix: Option<(usize, i32)> = None;
+        for j in j0..j1 {
+            let want = self.rederive_entry(arow, j);
+            if c_temp[row * nt + j] != want {
+                if fix.is_some() {
+                    return RowCorrection::Declined(CorrectionDecline::MultiMismatch);
+                }
+                fix = Some((j, want));
+            }
+        }
+        let Some((col, want)) = fix else {
+            return RowCorrection::Declined(CorrectionDecline::NoMismatch);
+        };
+        let delta = c_temp[row * nt + col] as i64 - want as i64;
+        c_temp[row * nt + col] = want;
+        if row_ok(&c_temp[row * nt..(row + 1) * nt], self.n, self.modulus) {
+            RowCorrection::Corrected { col, delta }
+        } else {
+            // Beyond the single-corruption model: restore nothing (the
+            // rewritten entry is provably the A·B value) but report the
+            // failure so the caller recomputes the whole row.
+            RowCorrection::Declined(CorrectionDecline::ReverifyFailed)
+        }
+    }
+
+    /// Re-derive one logical C entry `A[row]·B[:, j]` by walking the
+    /// packed column — i32 accumulation, bit-identical to every kernel
+    /// dispatch path (integer adds commute).
+    fn rederive_entry(&self, arow: &[u8], j: usize) -> i32 {
+        let mut acc = 0i32;
+        for p in 0..self.k {
+            acc = acc.wrapping_add(arow[p] as i32 * self.packed.at(p, j) as i32);
+        }
+        acc
+    }
+
     /// Theoretical FLOP overhead of encode+verify for one GEMM of shape
     /// (m, n, k): `1/(2m) + 1/n + 1/(2k)` (§IV-A1, encoding-B row).
+    /// The PR-6 group checksum columns add `≈ 1/GROUP_WIDTH` of kernel
+    /// work on top (`G/n` extra columns); see
+    /// [`AbftGemm::localized_overhead`].
     pub fn theoretical_overhead(m: usize, n: usize, k: usize) -> f64 {
         1.0 / (2.0 * m as f64) + 1.0 / n as f64 + 1.0 / (2.0 * k as f64)
+    }
+
+    /// Theoretical overhead including the group partial checksum columns:
+    /// the detect-only terms plus `G/n` extra kernel columns — still far
+    /// inside the paper's <20% budget for DLRM shapes (≈ +3.2%).
+    pub fn localized_overhead(m: usize, n: usize, k: usize) -> f64 {
+        Self::theoretical_overhead(m, n, k) + group_count(n) as f64 / n as f64
     }
 }
 
@@ -269,10 +517,11 @@ mod tests {
         let (m, k, n) = (5, 128, 40);
         let (a, b) = rand_ab(&mut rng, m, k, n);
         let abft = AbftGemm::new(&b, k, n);
+        let nt = abft.n_total();
         let (c, _) = abft.exec(&a, m);
         let plain = crate::gemm::gemm_naive(&a, &b, m, k, n);
         for i in 0..m {
-            assert_eq!(&c[i * (n + 1)..i * (n + 1) + n], &plain[i * n..(i + 1) * n]);
+            assert_eq!(&c[i * nt..i * nt + n], &plain[i * n..(i + 1) * n]);
         }
     }
 
@@ -282,9 +531,10 @@ mod tests {
         let (m, k, n) = (8, 100, 50);
         let (a, b) = rand_ab(&mut rng, m, k, n);
         let abft = AbftGemm::new(&b, k, n);
+        let nt = abft.n_total();
         let (mut c, _) = abft.exec(&a, m);
         // Flip a high bit in row 5.
-        c[5 * (n + 1) + 7] ^= 1 << 20;
+        c[5 * nt + 7] ^= 1 << 20;
         let verdict = abft.verify(&c, m);
         assert_eq!(verdict.corrupted_rows, vec![5]);
     }
@@ -295,9 +545,10 @@ mod tests {
         let (m, k, n) = (10, 64, 30);
         let (a, b) = rand_ab(&mut rng, m, k, n);
         let abft = AbftGemm::new(&b, k, n);
+        let nt = abft.n_total();
         let (mut c, _) = abft.exec(&a, m);
         for &r in &[1usize, 4, 9] {
-            c[r * (n + 1)] ^= 1 << 10;
+            c[r * nt] ^= 1 << 10;
         }
         let verdict = abft.verify(&c, m);
         assert_eq!(verdict.corrupted_rows, vec![1, 4, 9]);
@@ -324,13 +575,110 @@ mod tests {
         let (m, k, n) = (6, 80, 24);
         let (a, b) = rand_ab(&mut rng, m, k, n);
         let abft = AbftGemm::new(&b, k, n);
+        let nt = abft.n_total();
         let (mut c, _) = abft.exec(&a, m);
         let clean = c.clone();
-        c[2 * (n + 1) + 3] ^= 1 << 13;
+        c[2 * nt + 3] ^= 1 << 13;
         assert_eq!(abft.verify(&c, m).corrupted_rows, vec![2]);
         abft.recompute_row(&a, 2, &mut c, m);
         assert!(abft.verify(&c, m).clean());
         assert_eq!(c, clean);
+    }
+
+    #[test]
+    fn correct_row_names_and_fixes_single_fault() {
+        let mut rng = Pcg32::new(20);
+        // n = 70: three groups, the last one ragged (width 6).
+        let (m, k, n) = (6, 80, 70);
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        assert_eq!(abft.groups, group_count(n));
+        let nt = abft.n_total();
+        let (mut c, _) = abft.exec(&a, m);
+        let clean = c.clone();
+        for &(row, col) in &[(0usize, 0usize), (2, 33), (4, 69)] {
+            c[row * nt + col] ^= 1 << 17;
+            assert_eq!(abft.verify(&c, m).corrupted_rows, vec![row]);
+            assert_eq!(abft.localize_row(&c, m, row), Some(col / GROUP_WIDTH));
+            let got = abft.correct_row(&a, row, &mut c, m);
+            assert_eq!(
+                got,
+                RowCorrection::Corrected { col, delta: (clean[row * nt + col] ^ (1 << 17)) as i64 - clean[row * nt + col] as i64 }
+            );
+            assert!(abft.verify(&c, m).clean());
+            assert_eq!(c, clean, "corrected ≠ clean recompute at ({row},{col})");
+        }
+    }
+
+    #[test]
+    fn correct_row_fixes_checksum_entry_fault() {
+        // Corruption in C[row][n] itself: Eq 3b flags, no group flags —
+        // the checksum entry is the candidate and gets re-derived.
+        let mut rng = Pcg32::new(21);
+        let (m, k, n) = (4, 64, 40);
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let nt = abft.n_total();
+        let (mut c, _) = abft.exec(&a, m);
+        let clean = c.clone();
+        c[nt + n] += 9;
+        assert_eq!(abft.verify(&c, m).corrupted_rows, vec![1]);
+        assert_eq!(abft.localize_row(&c, m, 1), None);
+        let got = abft.correct_row(&a, 1, &mut c, m);
+        assert_eq!(got, RowCorrection::Corrected { col: n, delta: 9 });
+        assert_eq!(c, clean);
+    }
+
+    #[test]
+    fn correct_row_declines_multi_fault() {
+        let mut rng = Pcg32::new(22);
+        let (m, k, n) = (4, 48, 70);
+        let (a, b) = rand_ab(&mut rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let nt = abft.n_total();
+        let (c0, _) = abft.exec(&a, m);
+
+        // Two corrupt entries in different groups → MultiGroup.
+        let mut c = c0.clone();
+        c[2 * nt + 1] += 3;
+        c[2 * nt + 40] += 5;
+        assert_eq!(
+            abft.correct_row(&a, 2, &mut c, m),
+            RowCorrection::Declined(CorrectionDecline::MultiGroup)
+        );
+
+        // Two corrupt entries in the same group → MultiMismatch (the
+        // group flags once, the candidate scan finds two bad slots).
+        let mut c = c0.clone();
+        c[2 * nt + 1] += 3;
+        c[2 * nt + 2] += 5;
+        assert_eq!(
+            abft.correct_row(&a, 2, &mut c, m),
+            RowCorrection::Declined(CorrectionDecline::MultiMismatch)
+        );
+        // The decline left the row corrupt for the next rung.
+        assert_eq!(abft.verify(&c, m).corrupted_rows, vec![2]);
+    }
+
+    #[test]
+    fn correct_row_declines_operand_fault() {
+        // Corrupt the packed operand: C is consistent with the corrupt
+        // bytes, so re-derivation reproduces the stored values exactly
+        // and correction must decline (only recompute/failover helps).
+        let mut rng = Pcg32::new(23);
+        let (m, k, n) = (3, 32, 40);
+        let (mut a, b) = rand_ab(&mut rng, m, k, n);
+        a[5] = 1; // pin A[0][5] so the flipped B[5][7] is surely visible
+        let mut abft = AbftGemm::new(&b, k, n);
+        let off = abft.packed.offset(5, 7);
+        abft.packed.data_mut()[off] ^= 0x40;
+        let (mut c, verdict) = abft.exec(&a, m);
+        assert!(!verdict.clean(), "operand corruption must be detected");
+        let row = verdict.corrupted_rows[0];
+        assert_eq!(
+            abft.correct_row(&a, row, &mut c, m),
+            RowCorrection::Declined(CorrectionDecline::NoMismatch)
+        );
     }
 
     #[test]
@@ -375,10 +723,11 @@ mod tests {
         let (m, k, n) = (12, 48, 20);
         let (a, b) = rand_ab(&mut rng, m, k, n);
         let abft = AbftGemm::new(&b, k, n);
+        let nt = abft.n_total();
         let (mut c, _) = abft.exec(&a, m);
         // Corrupt every row: a sampled pass flags exactly its stripe.
         for r in 0..m {
-            c[r * (n + 1)] ^= 1 << 9;
+            c[r * nt] ^= 1 << 9;
         }
         for every in [1u32, 2, 3, 4] {
             for phase in [0u64, 1, 5, 100] {
@@ -401,13 +750,14 @@ mod tests {
         let (m, k, n) = (6, 32, 16);
         let (a, b) = rand_ab(&mut rng, m, k, n);
         let abft = AbftGemm::new(&b, k, n);
+        let nt = abft.n_total();
         let (mut c, _) = abft.exec(&a, m);
         assert!(abft.verify_aggregate(&c, m), "clean tile must pass");
         c[3] += 5; // single fault → aggregate residue 5
         assert!(!abft.verify_aggregate(&c, m));
         // Opposing delta on another row cancels — the documented
         // weakness that makes BoundOnly the bottom of the checked lattice.
-        c[2 * (n + 1)] -= 5;
+        c[2 * nt] -= 5;
         assert!(abft.verify_aggregate(&c, m));
         assert!(!abft.verify(&c, m).clean(), "per-row verify still catches it");
     }
@@ -418,12 +768,13 @@ mod tests {
         let (m, k, n) = (4, 32, 16);
         let (a, b) = rand_ab(&mut rng, m, k, n);
         let abft = AbftGemm::new(&b, k, n);
+        let nt = abft.n_total();
         let (mut c, _) = abft.exec(&a, m);
         let base = abft.row_residual(&c, m, 2);
         assert_eq!(base % 127, 0, "clean row residual is ≡ 0 (mod 127)");
         let base_agg = abft.aggregate_residual(&c, m);
         assert_eq!(base_agg % 127, 0, "clean aggregate residual is ≡ 0 (mod 127)");
-        c[2 * (n + 1)] += 5000;
+        c[2 * nt] += 5000;
         assert_eq!(abft.row_residual(&c, m, 2) - base, 5000);
         assert_eq!(
             abft.aggregate_residual(&c, m) - base_agg,

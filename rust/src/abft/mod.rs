@@ -19,4 +19,7 @@ pub use eb::{
 pub use full::{CorrectionOutcome, FullAbftGemm};
 pub use interaction::{protected_interaction, InteractionVerdict, INTERACTION_REL_BOUND};
 pub use scrub::{ScrubReport, Scrubber};
-pub use gemm::{encode_checksum_col, AbftGemm, Verdict, DEFAULT_MODULUS};
+pub use gemm::{
+    encode_checksum_col, encode_group_checksum_cols, group_count, AbftGemm, CorrectionDecline,
+    RowCorrection, Verdict, DEFAULT_MODULUS, GROUP_WIDTH,
+};

@@ -7,8 +7,14 @@
 //! hours. The scrubber closes that gap: it re-walks the table in fixed-
 //! size strips (budgeted per serving idle slot) and compares each row's
 //! code sum against the `C_T` checksum — the same invariant, applied
-//! proactively. Detected rows are reported for re-fetch from the model
-//! store (here: recorded + optionally repaired from a shadow checksum).
+//! proactively. Since PR 6 the same walk also accumulates the
+//! index-weighted sum and compares it against `C_W`, so the
+//! sum-preserving cancellation class (±δ at two slots) is caught too,
+//! and a flagged row carries enough residual information for the store
+//! to attempt the R=1 single-slot self-heal
+//! ([`EbChecksum::localize_slot`]). Detected rows are reported for
+//! re-fetch from the model store (here: recorded + optionally repaired
+//! from a shadow checksum).
 
 use crate::abft::EbChecksum;
 use crate::embedding::QuantTable8;
@@ -66,10 +72,18 @@ impl Scrubber {
         rows: usize,
     ) -> ScrubReport {
         assert_eq!(checksum.c_t.len(), table.rows);
+        assert_eq!(checksum.c_w.len(), table.rows);
         let mut report = ScrubReport::default();
         let end = (self.cursor + rows).min(table.rows);
         for row in self.cursor..end {
-            if table.code_row_sum(row) != checksum.c_t[row] {
+            // One fused walk accumulates both sums — the dual check adds
+            // no extra pass over the row bytes.
+            let (mut s, mut w) = (0i32, 0i32);
+            for (j, &q) in table.row(row).iter().enumerate() {
+                s += q as i32;
+                w += (j as i32 + 1) * q as i32;
+            }
+            if s != checksum.c_t[row] || w != checksum.c_w[row] {
                 report.corrupted_rows.push(row);
             }
         }
@@ -182,6 +196,22 @@ mod tests {
         assert_eq!(s.progress(100), 0.0);
         // And the plain scrub_step still follows the stride.
         assert_eq!(s.scrub_step(&table, &cs).rows_scanned, 10);
+    }
+
+    #[test]
+    fn sum_preserving_two_slot_corruption_is_caught() {
+        // +δ/−δ at two slots leaves the plain code sum intact; only the
+        // index-weighted C_W comparison notices. Pin the victim slots so
+        // the crafted deltas stay in byte range.
+        let (mut table, _) = setup(300, 32);
+        let r = 42;
+        table.data[r * 32 + 2] = 100;
+        table.data[r * 32 + 20] = 100;
+        let cs = EbChecksum::build_8(&table);
+        table.data[r * 32 + 2] += 9;
+        table.data[r * 32 + 20] -= 9;
+        assert_eq!(table.code_row_sum(r), cs.c_t[r], "plain sum is blind");
+        assert_eq!(Scrubber::full_pass(&table, &cs), vec![r]);
     }
 
     #[test]

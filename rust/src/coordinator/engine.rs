@@ -21,7 +21,7 @@ use crate::dlrm::{
 };
 use crate::policy::{
     build_neighbors, ControllerThread, PolicyConfig, PolicyController, PolicyHandle, PolicySites,
-    StepReport,
+    PolicyState, StepReport,
 };
 use crate::shard::{RepairWorker, ShardPlan, ShardRouter, ShardStore};
 use crate::util::json::Json;
@@ -272,13 +272,23 @@ impl Engine {
             (sites, neighbors)
         };
         self.model.write().unwrap().policy = PolicyHandle::attached(Arc::clone(&sites));
+        if let Some(sh) = &self.shards {
+            // The store's scrubber routes its detections into the owning
+            // table's telemetry through this handle (the proactive arm
+            // feeds the same escalation loop the serving path does).
+            sh.store.attach_policy(PolicyHandle::attached(Arc::clone(&sites)));
+        }
         let controller = Arc::new(Mutex::new(PolicyController::new(
             Arc::clone(&sites),
             neighbors,
             cfg.clone(),
         )));
-        let thread = (cfg.tick > Duration::ZERO)
-            .then(|| ControllerThread::spawn(Arc::clone(&controller), cfg.tick));
+        let thread = (cfg.tick > Duration::ZERO).then(|| {
+            let sink = self.sink.clone();
+            ControllerThread::spawn_with(Arc::clone(&controller), cfg.tick, move |t| {
+                sink.set_ctl_tick(t)
+            })
+        });
         self.policy = Some(PolicyRuntime {
             sites,
             controller,
@@ -294,13 +304,39 @@ impl Engine {
     /// when no policy is attached.
     pub fn policy_tick(&self) -> Option<StepReport> {
         let rt = self.policy.as_ref()?;
-        Some(rt.controller.lock().unwrap().step())
+        let mut controller = rt.controller.lock().unwrap();
+        let report = controller.step();
+        // Stamp the sink with the controller epoch so every subsequent
+        // fault event records which escalation state it happened under
+        // (`ctl_tick` in `events_json` — journal ↔ controller
+        // correlation).
+        self.sink.set_ctl_tick(controller.ticks());
+        Some(report)
     }
 
     /// The policy site table, when a policy is attached (drills, benches,
     /// campaign assertions).
     pub fn policy_sites(&self) -> Option<&Arc<PolicySites>> {
         self.policy.as_ref().map(|p| &p.sites)
+    }
+
+    /// Serialize the controller's warm-start state
+    /// ([`PolicyController::snapshot`] in its versioned text form);
+    /// `None` without an attached policy. The serve CLI persists this to
+    /// `--policy-state`.
+    pub fn policy_state(&self) -> Option<String> {
+        let rt = self.policy.as_ref()?;
+        Some(rt.controller.lock().unwrap().snapshot().encode())
+    }
+
+    /// Restore a previously persisted controller state (the
+    /// `--policy-state` file) into the attached policy. Errors — no
+    /// policy attached, unparseable text, site-shape mismatch — leave the
+    /// controller cold-started and untouched.
+    pub fn restore_policy_state(&self, text: &str) -> Result<(), String> {
+        let rt = self.policy.as_ref().ok_or("no policy attached")?;
+        let state = PolicyState::parse(text)?;
+        rt.controller.lock().unwrap().restore(&state)
     }
 
     /// The shard store, when this engine serves sharded.
@@ -427,6 +463,12 @@ impl Engine {
         // `metrics.scrub_hits`.
         for &(t, row) in &report.hits {
             let delta = model.checksums[t].row_delta(&model.tables[t], row);
+            // Scrub detections count against the victim table's policy
+            // site: a proactive hit is the same evidence of bad memory a
+            // serving-path flag is, so it drives the same escalation.
+            if let Some(telem) = model.policy.eb_telem(t) {
+                telem.note_flags(1);
+            }
             self.sink.emit(
                 SiteId::Eb(t as u32),
                 UnitRef::ScrubSlot { replica: LOCAL_REPLICA, row: row as u32 },

@@ -240,6 +240,12 @@ pub struct FaultEvent {
     /// Journal tick the event was recorded on (the engine advances the
     /// tick once per scored batch; standalone emitters leave it at 0).
     pub tick: u64,
+    /// Controller tick the event was recorded under — the policy
+    /// controller's step counter at emit time, stamped by the sink so a
+    /// journal row correlates directly with the controller decision
+    /// window that saw it (0 when no controller is attached). Truncated
+    /// to [`CTL_TICK_MASK`] on the wire.
+    pub ctl_tick: u64,
     pub site: SiteId,
     pub unit: UnitRef,
     pub detector: Detector,
@@ -257,9 +263,15 @@ pub struct FaultEvent {
 //   bit  29     severity   (0 NearBound, 1 Significant)
 //   bits 30..32 resolution kind
 //   bits 32..35 resolution step (Recovery)
+//   bits 35..64 controller tick (29 bits, truncated)
 // aux word: unit payload — low u32 = row / request, high u32 = replica.
 
 const SITE_IDX_MASK: u64 = (1 << 24) - 1;
+
+/// Controller-tick wire width: 29 bits. At one controller step per
+/// policy interval this wraps after ~537M steps — far beyond any serve
+/// lifetime; correlation queries only care about recency anyway.
+pub const CTL_TICK_MASK: u64 = (1 << 29) - 1;
 
 impl FaultEvent {
     /// Pack into the journal's `(meta, aux)` words. Lossless for site
@@ -288,13 +300,15 @@ impl FaultEvent {
             Resolution::Escalated(r) => (2, r as u64),
             Resolution::Degraded => (3, 0),
         };
+        debug_assert!(res_step <= 0b111, "resolution step overflows packing");
         let meta = site_kind
             | (site_idx & SITE_IDX_MASK) << 1
             | unit_kind << 25
             | det << 27
             | sev << 29
             | res_kind << 30
-            | res_step << 32;
+            | res_step << 32
+            | (self.ctl_tick & CTL_TICK_MASK) << 35;
         (meta, lo as u64 | (hi as u64) << 32)
     }
 
@@ -332,7 +346,8 @@ impl FaultEvent {
             2 => Resolution::Escalated(step),
             _ => Resolution::Degraded,
         };
-        Self { tick, site, unit, detector, severity, resolution }
+        let ctl_tick = meta >> 35;
+        Self { tick, ctl_tick, site, unit, detector, severity, resolution }
     }
 
     /// JSON row for the `events` server op.
@@ -372,6 +387,7 @@ impl FaultEvent {
         };
         Json::obj(vec![
             ("tick", Json::Num(self.tick as f64)),
+            ("ctl_tick", Json::Num(self.ctl_tick as f64)),
             ("site", Json::Str(self.site.label())),
             ("unit", unit),
             ("detector", Json::Str(self.detector.as_str().into())),
@@ -389,14 +405,16 @@ mod tests {
         vec![
             FaultEvent {
                 tick: 0,
+                ctl_tick: 0,
                 site: SiteId::Gemm(0),
                 unit: UnitRef::GemmRow { row: 7 },
                 detector: Detector::GemmChecksum,
                 severity: Severity::Significant,
-                resolution: Resolution::Recovered(Recovery::RecomputeUnit),
+                resolution: Resolution::Recovered(Recovery::CorrectInPlace),
             },
             FaultEvent {
                 tick: 42,
+                ctl_tick: 17,
                 site: SiteId::Eb(3),
                 unit: UnitRef::Bag { request: 5, replica: 1 },
                 detector: Detector::EbBound,
@@ -405,6 +423,7 @@ mod tests {
             },
             FaultEvent {
                 tick: u32::MAX as u64 + 9,
+                ctl_tick: CTL_TICK_MASK,
                 site: SiteId::Eb(2),
                 unit: UnitRef::ScrubSlot { replica: LOCAL_REPLICA, row: 3_999_999 },
                 detector: Detector::ScrubExact,
@@ -413,6 +432,7 @@ mod tests {
             },
             FaultEvent {
                 tick: 1,
+                ctl_tick: 3,
                 site: SiteId::Gemm(6),
                 unit: UnitRef::BatchAggregate,
                 detector: Detector::GemmAggregate,
@@ -421,6 +441,7 @@ mod tests {
             },
             FaultEvent {
                 tick: 2,
+                ctl_tick: 0,
                 site: SiteId::Eb(0),
                 unit: UnitRef::Bag { request: 0, replica: LOCAL_REPLICA },
                 detector: Detector::EbBound,
@@ -461,6 +482,10 @@ mod tests {
             Resolution::Recovered(Recovery::QuarantineAndRepair).label(),
             "recovered:quarantine_and_repair"
         );
+        assert_eq!(
+            Resolution::Recovered(Recovery::CorrectInPlace).label(),
+            "recovered:correct_in_place"
+        );
         assert_eq!(Resolution::Escalated(Recovery::RetryBatch).label(), "escalated:retry_batch");
         assert_eq!(Resolution::DetectedOnly.label(), "detected_only");
         assert_eq!(Resolution::Degraded.label(), "degraded");
@@ -470,6 +495,7 @@ mod tests {
     fn json_rows_carry_every_field() {
         let ev = &sample_events()[1];
         let j = ev.to_json();
+        assert_eq!(j.get("ctl_tick").and_then(Json::as_usize), Some(17));
         assert_eq!(j.get("site").and_then(Json::as_str), Some("eb/3"));
         assert_eq!(j.get("detector").and_then(Json::as_str), Some("eb_bound"));
         assert_eq!(j.get("severity").and_then(Json::as_str), Some("near_bound"));

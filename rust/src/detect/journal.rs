@@ -237,6 +237,7 @@ mod tests {
     fn ev(i: u32) -> FaultEvent {
         FaultEvent {
             tick: i as u64,
+            ctl_tick: (i / 4) as u64,
             site: SiteId::Eb(i % 3),
             unit: UnitRef::GemmRow { row: i },
             detector: Detector::GemmChecksum,

@@ -12,10 +12,13 @@
 //!   ([`UnitRef`]), detector, [`Severity`] (classified significant-bit
 //!   vs near-bound from the detector's own margin), and [`Resolution`]
 //!   (the terminal state of the recovery walk).
-//! * [`recovery`] — the single ordered ladder `RecomputeUnit →
-//!   RetryBatch → FailoverReplica → QuarantineAndRepair → Degrade` with
-//!   per-site-class applicability; every site consults it instead of
-//!   hand-rolling its own flow.
+//! * [`recovery`] — the single ordered ladder `CorrectInPlace →
+//!   RecomputeUnit → RetryBatch → FailoverReplica → QuarantineAndRepair
+//!   → Degrade` with per-site-class applicability; every site consults
+//!   it instead of hand-rolling its own flow. `CorrectInPlace` (PR 6)
+//!   is the algebraic rung: where partial checksums localize the fault
+//!   to one unit slot, it is rewritten in place and re-verified — the
+//!   only rung cheaper than the unit's original computation.
 //! * [`journal`] — a lock-free fixed-capacity ring recording every
 //!   event with its resolution and tick; queryable via the `events`
 //!   server op, summarized in `metrics_snapshot()`, and the substrate

@@ -9,8 +9,16 @@
 //! ordered cheapest-first:
 //!
 //! ```text
-//!   RecomputeUnit → RetryBatch → FailoverReplica → QuarantineAndRepair → Degrade
+//!   CorrectInPlace → RecomputeUnit → RetryBatch → FailoverReplica
+//!                  → QuarantineAndRepair → Degrade
 //! ```
+//!
+//! PR 6 added `CorrectInPlace` at the top: where the detector layout can
+//! *localize* the fault (GEMM group partial checksums naming the corrupt
+//! accumulator entry, the dual EB checksum resolving a corrupt store row
+//! to one slot), the fix is algebraic and in place — no recompute, no
+//! failover — and is always re-verified before anything is served. A
+//! failed re-verify (multi-fault) falls to the next rung like any other.
 //!
 //! A site class walks only the rungs that make sense for it
 //! ([`ladder`]): a local GEMM row cannot fail over (there is no replica
@@ -35,32 +43,39 @@ use crate::quant::{requantize_cols_into, RequantEpilogue};
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Recovery {
+    /// Fix the localized fault algebraically in place (GEMM: rewrite the
+    /// one corrupt i32 accumulator entry named by the group partial
+    /// checksums; EB store: rewrite the one corrupt row slot the dual
+    /// checksum resolves) and re-verify. The only rung that costs less
+    /// than the unit's original computation.
+    CorrectInPlace = 0,
     /// Recompute the single implicated unit (GEMM row + re-requantize;
     /// EB bag re-gather on the same replica). Clears transient
     /// compute/bus faults.
-    RecomputeUnit = 0,
+    RecomputeUnit = 1,
     /// Re-run the whole batch's forward pass (the engine's rung — the
     /// only recovery that can follow a non-localizing aggregate flag).
-    RetryBatch = 1,
+    RetryBatch = 2,
     /// Re-serve the whole shard-batch from a healthy sibling replica
     /// (sharded EB only; everything the corrupt replica computed is
     /// suspect).
-    FailoverReplica = 2,
+    FailoverReplica = 3,
     /// Quarantine the corrupted replica and queue a checksum-verified
     /// repair (sharded stores; pairs with [`Recovery::FailoverReplica`]
     /// on the serving path, stands alone for scrub hits).
-    QuarantineAndRepair = 3,
+    QuarantineAndRepair = 4,
     /// Serve the value anyway and mark the batch degraded — the ladder's
     /// explicit floor, never silent.
-    Degrade = 4,
+    Degrade = 5,
 }
 
 /// Number of [`Recovery`] rungs (aggregate-counter sizing).
-pub const RECOVERY_STEPS: usize = 5;
+pub const RECOVERY_STEPS: usize = 6;
 
 impl Recovery {
     pub fn as_str(self) -> &'static str {
         match self {
+            Recovery::CorrectInPlace => "correct_in_place",
             Recovery::RecomputeUnit => "recompute_unit",
             Recovery::RetryBatch => "retry_batch",
             Recovery::FailoverReplica => "failover_replica",
@@ -72,10 +87,11 @@ impl Recovery {
     /// Inverse of the `repr(u8)` discriminant (wire decode).
     pub fn from_index(i: usize) -> Self {
         match i {
-            0 => Recovery::RecomputeUnit,
-            1 => Recovery::RetryBatch,
-            2 => Recovery::FailoverReplica,
-            3 => Recovery::QuarantineAndRepair,
+            0 => Recovery::CorrectInPlace,
+            1 => Recovery::RecomputeUnit,
+            2 => Recovery::RetryBatch,
+            3 => Recovery::FailoverReplica,
+            4 => Recovery::QuarantineAndRepair,
             _ => Recovery::Degrade,
         }
     }
@@ -104,11 +120,11 @@ pub enum SiteClass {
 pub fn ladder(class: SiteClass) -> &'static [Recovery] {
     use Recovery::*;
     match class {
-        SiteClass::GemmRow => &[RecomputeUnit, RetryBatch, Degrade],
+        SiteClass::GemmRow => &[CorrectInPlace, RecomputeUnit, RetryBatch, Degrade],
         SiteClass::GemmAggregate => &[RetryBatch, Degrade],
         SiteClass::EbLocal => &[RecomputeUnit, RetryBatch, Degrade],
         SiteClass::EbSharded => &[RecomputeUnit, FailoverReplica, QuarantineAndRepair, Degrade],
-        SiteClass::ScrubSharded => &[QuarantineAndRepair],
+        SiteClass::ScrubSharded => &[CorrectInPlace, QuarantineAndRepair],
         SiteClass::ScrubLocal => &[],
     }
 }
@@ -148,7 +164,7 @@ pub fn recompute_gemm_row(
     out: &mut [u8],
 ) -> bool {
     let n = abft.n;
-    let nt = n + 1;
+    let nt = abft.n_total();
     abft.recompute_row(x, row, c_temp, m);
     requantize_cols_into(
         &c_temp[row * nt..(row + 1) * nt],
@@ -162,6 +178,41 @@ pub fn recompute_gemm_row(
         &mut out[row * n..(row + 1) * n],
     );
     crate::abft::gemm::row_ok(&c_temp[row * nt..(row + 1) * nt], n, abft.modulus)
+}
+
+/// The `CorrectInPlace` rung for a flagged GEMM row: algebraic
+/// localization + single-entry fix ([`AbftGemm::correct_row`]), then —
+/// only when the fix re-verified clean — re-requantize the row so the
+/// served bytes equal the recompute flow bit-for-bit. Returns the
+/// [`RowCorrection`] so the caller can emit the delta as severity
+/// evidence; on any decline `out` is untouched and the caller falls to
+/// [`recompute_gemm_row`].
+pub fn correct_gemm_row(
+    abft: &AbftGemm,
+    x: &[u8],
+    row: usize,
+    m: usize,
+    epi: &RequantEpilogue<'_>,
+    c_temp: &mut [i32],
+    out: &mut [u8],
+) -> crate::abft::RowCorrection {
+    let n = abft.n;
+    let nt = abft.n_total();
+    let got = abft.correct_row(x, row, c_temp, m);
+    if got.corrected() {
+        requantize_cols_into(
+            &c_temp[row * nt..(row + 1) * nt],
+            1,
+            nt,
+            0..n,
+            &epi.a_row_sums[row..row + 1],
+            epi.b_col_sums,
+            &epi.spec,
+            epi.relu_floor,
+            &mut out[row * n..(row + 1) * n],
+        );
+    }
+    got
 }
 
 #[cfg(test)]
@@ -202,9 +253,20 @@ mod tests {
             next_step(SiteClass::EbSharded, Recovery::QuarantineAndRepair),
             Some(Recovery::Degrade)
         );
-        // Scrub hits jump straight to quarantine (sharded) or report only.
-        assert_eq!(first_step(SiteClass::ScrubSharded), Some(Recovery::QuarantineAndRepair));
+        // Scrub hits try the algebraic self-heal first (sharded), then
+        // quarantine; local scrub reports only.
+        assert_eq!(first_step(SiteClass::ScrubSharded), Some(Recovery::CorrectInPlace));
+        assert_eq!(
+            next_step(SiteClass::ScrubSharded, Recovery::CorrectInPlace),
+            Some(Recovery::QuarantineAndRepair)
+        );
         assert_eq!(first_step(SiteClass::ScrubLocal), None);
+        // Flagged GEMM rows try the in-place fix before recomputing.
+        assert_eq!(first_step(SiteClass::GemmRow), Some(Recovery::CorrectInPlace));
+        assert_eq!(
+            next_step(SiteClass::GemmRow, Recovery::CorrectInPlace),
+            Some(Recovery::RecomputeUnit)
+        );
         // Last rungs terminate.
         assert_eq!(next_step(SiteClass::GemmRow, Recovery::Degrade), None);
         assert_eq!(next_step(SiteClass::ScrubSharded, Recovery::QuarantineAndRepair), None);

@@ -41,6 +41,11 @@ pub struct SinkCore {
     journal: Journal,
     /// Journal timestamp: the engine advances it once per scored batch.
     tick: AtomicU64,
+    /// Controller timestamp: the engine stamps the policy controller's
+    /// step counter here on every `policy_tick`, so emitted events
+    /// correlate with the controller decision window that saw them
+    /// (stays 0 when no controller runs).
+    ctl_tick: AtomicU64,
     /// Wired by the engine at construction.
     metrics: OnceLock<Arc<Metrics>>,
 }
@@ -64,6 +69,7 @@ impl EventSink {
         Self(Some(Arc::new(SinkCore {
             journal: Journal::with_capacity(capacity),
             tick: AtomicU64::new(0),
+            ctl_tick: AtomicU64::new(0),
             metrics: OnceLock::new(),
         })))
     }
@@ -102,6 +108,19 @@ impl EventSink {
         self.0.as_deref().map_or(0, |c| c.tick.load(Ordering::Relaxed))
     }
 
+    /// Record the policy controller's step counter (the engine: on every
+    /// `policy_tick`); emitted events carry it as their `ctl_tick`.
+    pub fn set_ctl_tick(&self, ctl_tick: u64) {
+        if let Some(core) = &self.0 {
+            core.ctl_tick.store(ctl_tick, Ordering::Relaxed);
+        }
+    }
+
+    /// Current controller tick (0 when detached or controller-less).
+    pub fn ctl_tick(&self) -> u64 {
+        self.0.as_deref().map_or(0, |c| c.ctl_tick.load(Ordering::Relaxed))
+    }
+
     /// Emit one detection event: journal it and route the matching
     /// metrics counter. No-op when detached. Policy-site flags are fed
     /// by the caller's telemetry handle (see [`SiteCtx::emit`] and the
@@ -118,6 +137,7 @@ impl EventSink {
         let Some(core) = &self.0 else { return };
         let ev = FaultEvent {
             tick: core.tick.load(Ordering::Relaxed),
+            ctl_tick: core.ctl_tick.load(Ordering::Relaxed),
             site,
             unit,
             detector,
@@ -222,7 +242,19 @@ mod tests {
         assert_eq!(j.total(), 1);
         let ev = j.recent(1)[0];
         assert_eq!(ev.tick, 2);
+        assert_eq!(ev.ctl_tick, 0, "no controller stamped yet");
         assert_eq!(ev.site, SiteId::Eb(1));
+
+        // Once the engine stamps the controller step, events carry it.
+        s.set_ctl_tick(9);
+        s.emit(
+            SiteId::Eb(1),
+            UnitRef::Bag { request: 5, replica: 0 },
+            Detector::EbBound,
+            Severity::Significant,
+            Resolution::Recovered(Recovery::FailoverReplica),
+        );
+        assert_eq!(j.recent(1)[0].ctl_tick, 9);
     }
 
     #[test]

@@ -19,12 +19,16 @@ use std::sync::Arc;
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct LayerReport {
     pub rows_flagged: usize,
+    /// Rows fixed by the algebraic `CorrectInPlace` rung (group partial
+    /// checksum localization; no recompute ran).
+    pub rows_corrected: usize,
     pub rows_recomputed: usize,
 }
 
 impl LayerReport {
     pub fn merge(&mut self, other: &LayerReport) {
         self.rows_flagged += other.rows_flagged;
+        self.rows_corrected += other.rows_corrected;
         self.rows_recomputed += other.rows_recomputed;
     }
 }
@@ -203,7 +207,7 @@ impl AbftLinear {
         };
 
         if self.protection.enabled() {
-            let nt = self.n + 1;
+            let nt = self.abft.n_total();
             let c_temp = grow(c_temp, m * nt);
             gemm_requant_exec_into(x, &self.abft.packed, m, &epi, c_temp, out);
             let mut rows_verified = m;
@@ -259,11 +263,26 @@ impl AbftLinear {
                     // Detect-only: no recompute reference, so the delta
                     // magnitude cannot be bounded — classify worst-case.
                     (Severity::Significant, Resolution::DetectedOnly)
+                } else if let crate::abft::RowCorrection::Corrected { delta, .. } =
+                    recovery::correct_gemm_row(&self.abft, x, row, m, &epi, c_temp, out)
+                {
+                    // CorrectInPlace rung: the group partial checksums
+                    // localized the fault to one accumulator entry, the
+                    // algebraic fix re-verified under Eq 3b, and the row
+                    // was re-requantized — `delta` is exactly the
+                    // corruption that would have been served.
+                    report.rows_corrected += 1;
+                    (
+                        Severity::from_gemm_delta(delta),
+                        Resolution::Recovered(Recovery::CorrectInPlace),
+                    )
                 } else {
                     report.rows_recomputed += 1;
-                    // The recompute gives the severity reference: the
-                    // residual shift across the recompute IS the injected
-                    // delta when the fault was transient.
+                    // Correction declined (multi-fault or operand fault):
+                    // fall to the RecomputeUnit rung. The recompute gives
+                    // the severity reference: the residual shift across
+                    // it IS the injected delta when the fault was
+                    // transient.
                     let before = self.abft.row_residual(c_temp, m, row);
                     let ok = recovery::recompute_gemm_row(&self.abft, x, row, m, &epi, c_temp, out);
                     let after = self.abft.row_residual(c_temp, m, row);
@@ -395,11 +414,44 @@ mod tests {
         let (x, _xp) = quantize_input(&mut rng, m, k);
         let (mut c_temp, verdict) = layer.forward_raw(&x, m);
         assert!(verdict.clean());
+        let nt = layer.abft().n_total();
         let clean = c_temp.clone();
-        c_temp[2 * (n + 1) + 4] ^= 1 << 19;
+        c_temp[2 * nt + 4] ^= 1 << 19;
         let v2 = layer.abft().verify(&c_temp, m);
         assert_eq!(v2.corrupted_rows, vec![2]);
         layer.abft().recompute_row(&x, 2, &mut c_temp, m);
         assert_eq!(c_temp, clean);
+    }
+
+    #[test]
+    fn policied_forward_corrects_in_place_and_matches_clean_output() {
+        // A transient single-entry fault injected into the shared scratch
+        // is corrected by the CorrectInPlace rung: the served bytes equal
+        // the clean forward bit-for-bit and the report shows a correction,
+        // not a recompute. (End-to-end single-fault flows are covered by
+        // the correction campaign; this pins the layer-level walk.)
+        let mut rng = Pcg32::new(85);
+        let (m, k, n) = (5, 40, 20);
+        let layer = AbftLinear::random(k, n, false, Protection::DetectRecompute, &mut rng);
+        let (x, xp) = quantize_input(&mut rng, m, k);
+        let (clean_y, rep) = layer.forward(&x, m, xp);
+        assert_eq!(rep, LayerReport::default());
+        let (mut c_temp, _) = layer.forward_raw(&x, m);
+        let nt = layer.abft().n_total();
+        c_temp[3 * nt + 11] ^= 1 << 21;
+        // Drive the correction rung directly over the corrupt tile.
+        let params = layer.requant_params(&x, m, xp);
+        let epi = RequantEpilogue {
+            spec: RequantSpec::new(xp, layer.w_qparams, layer.out_qparams, k),
+            a_row_sums: &params.a_row_sums,
+            b_col_sums: &params.b_col_sums,
+            n_out: n,
+            relu_floor: 0,
+        };
+        let mut out = clean_y.clone();
+        let got = recovery::correct_gemm_row(layer.abft(), &x, 3, m, &epi, &mut c_temp, &mut out);
+        assert!(got.corrected(), "single fault must correct: {got:?}");
+        assert!(layer.abft().verify(&c_temp, m).clean());
+        assert_eq!(out, clean_y, "corrected row must re-requantize to the clean bytes");
     }
 }

@@ -78,6 +78,17 @@ impl QuantTable8 {
         self.row(i).iter().map(|&q| q as i32).sum()
     }
 
+    /// Index-weighted integer row sum `Σ_j (j+1)·codes[i][j]` (what the
+    /// dual checksum's `C_W` holds). Max value `255·d(d+1)/2` stays well
+    /// inside i32 for any realistic embedding dimension.
+    pub fn weighted_code_row_sum(&self, i: usize) -> i32 {
+        self.row(i)
+            .iter()
+            .enumerate()
+            .map(|(j, &q)| (j as i32 + 1) * q as i32)
+            .sum()
+    }
+
     /// Bytes used by codes + qparams.
     pub fn bytes(&self) -> usize {
         self.data.len() + self.rows * 8
@@ -158,6 +169,11 @@ impl QuantTable4 {
 
     pub fn code_row_sum(&self, i: usize) -> i32 {
         (0..self.d).map(|j| self.code(i, j) as i32).sum()
+    }
+
+    /// Index-weighted row sum (see [`QuantTable8::weighted_code_row_sum`]).
+    pub fn weighted_code_row_sum(&self, i: usize) -> i32 {
+        (0..self.d).map(|j| (j as i32 + 1) * self.code(i, j) as i32).sum()
     }
 
     pub fn bytes(&self) -> usize {

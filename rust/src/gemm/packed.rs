@@ -53,7 +53,8 @@ pub struct PackedB {
     pub k: usize,
     /// Logical (payload) column count, excluding any extra column.
     pub n: usize,
-    /// Number of appended extra columns (0 or 1).
+    /// Number of appended extra columns (0 = plain, 1 = Eq-3b checksum,
+    /// 1 + G = checksum plus G column-group partial checksums).
     pub extra_cols: usize,
 }
 
@@ -94,21 +95,34 @@ impl PackedB {
     /// Pack B together with one extra i8 column (e.g. the mod-127 row-sum
     /// checksum): logical layout is `k × (n+1)`, stored panel-interleaved.
     pub fn pack_with_extra_col(b: &[i8], k: usize, n: usize, extra: &[i8]) -> Self {
+        Self::pack_with_extra_cols(b, k, n, &[extra])
+    }
+
+    /// Pack B together with any number of extra i8 columns (the Eq-3b
+    /// row-sum checksum plus the column-group partial checksums): logical
+    /// layout is `k × (n + extras.len())`, stored panel-interleaved so the
+    /// extra columns ride in the trailing panel(s) and the protected GEMM
+    /// stays a single kernel call.
+    pub fn pack_with_extra_cols(b: &[i8], k: usize, n: usize, extras: &[&[i8]]) -> Self {
         assert_eq!(b.len(), k * n);
-        assert_eq!(extra.len(), k);
-        let nt = n + 1;
+        for extra in extras {
+            assert_eq!(extra.len(), k, "extra column length");
+        }
+        let nt = n + extras.len();
         let mut data = vec![0i8; k * nt];
         for p in 0..k {
             for j in 0..n {
                 data[panel_offset(k, nt, p, j)] = b[p * n + j];
             }
-            data[panel_offset(k, nt, p, n)] = extra[p];
+            for (e, extra) in extras.iter().enumerate() {
+                data[panel_offset(k, nt, p, n + e)] = extra[p];
+            }
         }
         Self {
             data,
             k,
             n,
-            extra_cols: 1,
+            extra_cols: extras.len(),
         }
     }
 
@@ -527,6 +541,35 @@ mod tests {
             gemm_exec(&a, &packed, m),
             gemm_naive(&a, &b_aug, m, k, n + 1)
         );
+    }
+
+    #[test]
+    fn multi_extra_cols_behave_like_augmented_matrix() {
+        let mut rng = Pcg32::new(12);
+        // n = 70 ⇒ the 4 extras straddle the ragged tail panel boundary.
+        let (m, k, n) = (5, 53, 70);
+        let (a, b) = rand_case(&mut rng, m, k, n);
+        let mut extras = vec![vec![0i8; k]; 4];
+        for e in extras.iter_mut() {
+            rng.fill_i8(e);
+        }
+        let refs: Vec<&[i8]> = extras.iter().map(|e| e.as_slice()).collect();
+        let ne = n + refs.len();
+        let mut b_aug = vec![0i8; k * ne];
+        for p in 0..k {
+            b_aug[p * ne..p * ne + n].copy_from_slice(&b[p * n..(p + 1) * n]);
+            for (e, extra) in extras.iter().enumerate() {
+                b_aug[p * ne + n + e] = extra[p];
+            }
+        }
+        let packed = PackedB::pack_with_extra_cols(&b, k, n, &refs);
+        assert_eq!(packed.n_total(), ne);
+        assert_eq!(gemm_exec(&a, &packed, m), gemm_naive(&a, &b_aug, m, k, ne));
+        for p in 0..k {
+            for (e, extra) in extras.iter().enumerate() {
+                assert_eq!(packed.at(p, n + e), extra[p]);
+            }
+        }
     }
 
     #[test]

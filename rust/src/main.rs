@@ -58,6 +58,7 @@ fn print_help() {
                         --max-batch 32 --max-wait-ms 2 --protection detect_recompute\n\
                         --chaos-weight-p 0 --chaos-table-p 0 --scrub-stride 0\n\
                         --policy-budget 0 --policy-tick-ms 50 --policy-bound-only false\n\
+                        --policy-state policy.state  (controller warm-start file)\n\
            bench        --which fig5|fig6|table2|table3|analysis|ablations|eb-fused|all\n\
                         [--quick true] [--scale N] [--runs N] [--threads N]\n\
            campaign     --op gemm|eb [--runs N] [--rows N] [--dim N]\n\
@@ -122,6 +123,10 @@ fn serve(cli: &Cli) -> Result<()> {
     let policy_budget: f64 = cli.flag("policy-budget", 0.0)?;
     let policy_tick_ms: u64 = cli.flag("policy-tick-ms", 50u64)?;
     let policy_bound_only: bool = cli.flag("policy-bound-only", false)?;
+    // Controller warm-start file: loaded (if present) right after the
+    // policy attaches, re-written periodically from the serve loop so
+    // quiet sites aren't re-learned after every deploy.
+    let policy_state_path = cli.get("policy-state").map(str::to_string);
     if policy_budget > 0.0 {
         let cfg = dlrm_abft::policy::PolicyConfig {
             overhead_budget: policy_budget,
@@ -146,6 +151,17 @@ fn serve(cli: &Cli) -> Result<()> {
              bound-only {policy_bound_only}"
         );
         engine = engine.with_policy(cfg);
+        if let Some(path) = &policy_state_path {
+            match std::fs::read_to_string(path) {
+                Ok(text) => match engine.restore_policy_state(&text) {
+                    Ok(()) => println!("policy state warm-started from {path}"),
+                    Err(e) => println!("policy state {path} ignored ({e}); starting cold"),
+                },
+                Err(_) => println!("policy state {path} not found; starting cold"),
+            }
+        }
+    } else if policy_state_path.is_some() {
+        println!("--policy-state has no effect without --policy-budget > 0");
     }
     let policy = BatchPolicy {
         max_batch: cli.flag("max-batch", 32usize)?,
@@ -157,11 +173,24 @@ fn serve(cli: &Cli) -> Result<()> {
     };
     println!("batch loops: {}", policy.effective_loops());
     cli.reject_unknown()?;
-    let server = Server::start(&addr, Arc::new(engine), policy)?;
+    let engine = Arc::new(engine);
+    let server = Server::start(&addr, Arc::clone(&engine), policy)?;
     println!("serving on {}", server.addr);
     println!("protocol: newline-delimited JSON; try {{\"op\":\"ping\"}}");
     loop {
-        std::thread::sleep(Duration::from_secs(3600));
+        match &policy_state_path {
+            Some(path) if engine.policy_sites().is_some() => {
+                // Periodic best-effort persistence: a hard kill loses at
+                // most a few seconds of controller learning.
+                std::thread::sleep(Duration::from_secs(5));
+                if let Some(state) = engine.policy_state() {
+                    if let Err(e) = std::fs::write(path, state) {
+                        println!("policy state write to {path} failed: {e}");
+                    }
+                }
+            }
+            _ => std::thread::sleep(Duration::from_secs(3600)),
+        }
     }
 }
 

@@ -403,6 +403,213 @@ impl PolicyController {
         let mode = self.sites.site(flat).cell.load();
         mode.relative_cost() * self.cfg.unit_costs.class_overhead(self.sites.kind(flat))
     }
+
+    /// Serialize the controller's warm-start state — per-site mode,
+    /// streaks and window deltas, plus the tick counter — as a
+    /// [`PolicyState`]. The serve CLI persists it to `--policy-state` so
+    /// a redeploy does not re-learn which sites are quiet.
+    pub fn snapshot(&self) -> PolicyState {
+        PolicyState {
+            gemm_sites: self.sites.gemm.len(),
+            eb_sites: self.sites.eb.len(),
+            ticks: self.ticks,
+            sites: self
+                .ctl
+                .iter()
+                .enumerate()
+                .map(|(i, ctl)| SiteState {
+                    mode: self.sites.site(i).cell.load(),
+                    cooldown: ctl.cooldown,
+                    quiet_streak: ctl.quiet_streak,
+                    flagged_streak: ctl.flagged_streak,
+                    window: ctl.window.iter().copied().collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Restore a [`PolicyController::snapshot`]: site modes, streaks and
+    /// windows resume where the previous process left them. The telemetry
+    /// delta baseline is re-anchored at the **live** counters (they
+    /// restart with the process), so the first tick after restore sees
+    /// only new activity rather than a bogus giant delta. Rejected — with
+    /// the controller untouched — when the state's site shape does not
+    /// match this model.
+    pub fn restore(&mut self, state: &PolicyState) -> Result<(), String> {
+        if state.gemm_sites != self.sites.gemm.len() || state.eb_sites != self.sites.eb.len() {
+            return Err(format!(
+                "policy-state shape {}+{} sites does not match model {}+{}",
+                state.gemm_sites,
+                state.eb_sites,
+                self.sites.gemm.len(),
+                self.sites.eb.len()
+            ));
+        }
+        self.ticks = state.ticks;
+        for (i, s) in state.sites.iter().enumerate() {
+            self.sites.site(i).cell.store(s.mode);
+            let ctl = &mut self.ctl[i];
+            ctl.cooldown = s.cooldown;
+            ctl.quiet_streak = s.quiet_streak;
+            ctl.flagged_streak = s.flagged_streak;
+            ctl.window = s.window.iter().copied().collect();
+            ctl.prev = self.sites.site(i).telem.snapshot();
+        }
+        Ok(())
+    }
+}
+
+/// Versioned, human-readable serialization of the controller's
+/// warm-start state (see [`PolicyController::snapshot`]). The wire form
+/// is line-oriented text with a `dlrm-abft-policy-state v1` header —
+/// trivially diffable in a deploy artifact, no external codec:
+///
+/// ```text
+/// dlrm-abft-policy-state v1
+/// sites <gemm> <eb>
+/// ticks <n>
+/// site <flat> <mode> <cooldown> <quiet> <flagged> <u/v/f,...|->
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PolicyState {
+    pub gemm_sites: usize,
+    pub eb_sites: usize,
+    pub ticks: u64,
+    /// Flat site order: gemm sites first, then eb — the same order the
+    /// controller's `ctl` vector uses.
+    pub sites: Vec<SiteState>,
+}
+
+/// One site's persisted controller state.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SiteState {
+    pub mode: DetectionMode,
+    pub cooldown: u32,
+    pub quiet_streak: u32,
+    pub flagged_streak: u32,
+    /// Sliding-window per-tick deltas, oldest first.
+    pub window: Vec<SiteSnapshot>,
+}
+
+impl PolicyState {
+    pub const MAGIC: &'static str = "dlrm-abft-policy-state";
+    pub const VERSION: u32 = 1;
+
+    pub fn encode(&self) -> String {
+        use std::fmt::Write;
+        let mut out = format!("{} v{}\n", Self::MAGIC, Self::VERSION);
+        let _ = writeln!(out, "sites {} {}", self.gemm_sites, self.eb_sites);
+        let _ = writeln!(out, "ticks {}", self.ticks);
+        for (i, s) in self.sites.iter().enumerate() {
+            let window = if s.window.is_empty() {
+                "-".to_string()
+            } else {
+                s.window
+                    .iter()
+                    .map(|d| format!("{}/{}/{}", d.units, d.verified, d.flags))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
+            let _ = writeln!(
+                out,
+                "site {} {} {} {} {} {}",
+                i,
+                mode_state_str(s.mode),
+                s.cooldown,
+                s.quiet_streak,
+                s.flagged_streak,
+                window
+            );
+        }
+        out
+    }
+
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().ok_or("empty policy state")?;
+        let expect = format!("{} v{}", Self::MAGIC, Self::VERSION);
+        if header.trim() != expect {
+            return Err(format!("bad policy-state header {header:?} (want {expect:?})"));
+        }
+        let (mut shape, mut ticks, mut sites) = (None, 0u64, Vec::new());
+        for line in lines {
+            let mut f = line.split_whitespace();
+            match f.next() {
+                Some("sites") => {
+                    shape = Some((field(f.next())?, field(f.next())?));
+                }
+                Some("ticks") => ticks = field(f.next())?,
+                Some("site") => {
+                    let idx: usize = field(f.next())?;
+                    if idx != sites.len() {
+                        return Err(format!("site line {idx} out of order"));
+                    }
+                    sites.push(SiteState {
+                        mode: parse_mode(f.next().ok_or("missing mode")?)?,
+                        cooldown: field(f.next())?,
+                        quiet_streak: field(f.next())?,
+                        flagged_streak: field(f.next())?,
+                        window: parse_window(f.next().unwrap_or("-"))?,
+                    });
+                }
+                Some(other) => return Err(format!("unknown policy-state record {other:?}")),
+                None => {}
+            }
+        }
+        let (gemm_sites, eb_sites) = shape.ok_or("missing sites line")?;
+        if sites.len() != gemm_sites + eb_sites {
+            return Err(format!(
+                "{} site lines, expected {}",
+                sites.len(),
+                gemm_sites + eb_sites
+            ));
+        }
+        Ok(Self { gemm_sites, eb_sites, ticks, sites })
+    }
+}
+
+fn mode_state_str(mode: DetectionMode) -> String {
+    match mode {
+        DetectionMode::Full => "full".into(),
+        DetectionMode::Sampled(n) => format!("sampled:{n}"),
+        DetectionMode::BoundOnly => "bound_only".into(),
+        DetectionMode::Off => "off".into(),
+    }
+}
+
+fn parse_mode(s: &str) -> Result<DetectionMode, String> {
+    match s {
+        "full" => Ok(DetectionMode::Full),
+        "bound_only" => Ok(DetectionMode::BoundOnly),
+        "off" => Ok(DetectionMode::Off),
+        _ => s
+            .strip_prefix("sampled:")
+            .and_then(|n| n.parse().ok())
+            .map(DetectionMode::Sampled)
+            .ok_or_else(|| format!("bad mode {s:?}")),
+    }
+}
+
+fn parse_window(s: &str) -> Result<Vec<SiteSnapshot>, String> {
+    if s == "-" {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|d| {
+            let mut p = d.split('/');
+            Ok(SiteSnapshot {
+                units: field(p.next())?,
+                verified: field(p.next())?,
+                flags: field(p.next())?,
+            })
+        })
+        .collect()
+}
+
+fn field<T: std::str::FromStr>(s: Option<&str>) -> Result<T, String> {
+    s.ok_or("truncated policy-state line")?
+        .parse()
+        .map_err(|_| format!("bad policy-state field {:?}", s.unwrap_or("")))
 }
 
 /// Budget-target sample rate: smallest `n` with `full_overhead/n ≤
@@ -524,6 +731,19 @@ pub struct ControllerThread {
 
 impl ControllerThread {
     pub fn spawn(controller: Arc<Mutex<PolicyController>>, tick: Duration) -> Self {
+        Self::spawn_with(controller, tick, |_| {})
+    }
+
+    /// [`ControllerThread::spawn`] with a per-tick observer, called with
+    /// the controller's tick counter after each background step while the
+    /// lock is already released — the engine uses it to stamp the
+    /// fault-event sink's `ctl_tick` so journal events correlate with
+    /// controller epochs in both ticking modes.
+    pub fn spawn_with(
+        controller: Arc<Mutex<PolicyController>>,
+        tick: Duration,
+        on_tick: impl Fn(u64) + Send + 'static,
+    ) -> Self {
         assert!(tick > Duration::ZERO, "spawn needs a real tick interval");
         let shutdown = Arc::new(AtomicBool::new(false));
         let stop = Arc::clone(&shutdown);
@@ -535,7 +755,12 @@ impl ControllerThread {
                     if stop.load(Ordering::Acquire) {
                         break;
                     }
-                    controller.lock().unwrap().step();
+                    let t = {
+                        let mut c = controller.lock().unwrap();
+                        c.step();
+                        c.ticks()
+                    };
+                    on_tick(t);
                 }
             })
             .expect("spawn policy controller");
@@ -760,6 +985,56 @@ mod tests {
         assert_eq!(nb[2], vec![2 + 2]); // table 0 ↔ table 2
         assert_eq!(nb[3], vec![2 + 3]); // table 1 ↔ table 3
         assert_eq!(nb[0], vec![1]); // layer adjacency untouched
+    }
+
+    #[test]
+    fn policy_state_roundtrips_through_text() {
+        let s = sites(1, 2);
+        let mut c = controller(&s, quick_cfg());
+        s.eb[0].telem.record(10, 5);
+        s.eb[0].telem.note_flags(1);
+        for _ in 0..5 {
+            c.step();
+        }
+        let state = c.snapshot();
+        assert_eq!(PolicyState::parse(&state.encode()).unwrap(), state);
+    }
+
+    #[test]
+    fn restore_resumes_modes_and_streaks_in_a_fresh_process() {
+        let s = sites(0, 1);
+        let mut c = controller(&s, quick_cfg());
+        for _ in 0..2 {
+            c.step();
+        }
+        assert_eq!(s.eb[0].cell.load(), DetectionMode::Sampled(4), "decayed to target");
+        let state = c.snapshot();
+        // A fresh process: new site table (cells default to Full) and a
+        // new controller — restore must not re-learn the quiet sites.
+        let s2 = sites(0, 1);
+        let mut c2 = controller(&s2, quick_cfg());
+        assert_eq!(s2.eb[0].cell.load(), DetectionMode::Full);
+        c2.restore(&state).unwrap();
+        assert_eq!(s2.eb[0].cell.load(), DetectionMode::Sampled(4));
+        assert_eq!(c2.ticks(), 2);
+        // The re-anchored telemetry baseline keeps the first post-restore
+        // tick quiet (no bogus counter delta → no spurious escalation).
+        let rep = c2.step();
+        assert_eq!(rep.escalations, 0);
+        assert_eq!(s2.eb[0].cell.load(), DetectionMode::Sampled(4));
+    }
+
+    #[test]
+    fn restore_rejects_shape_mismatch_and_bad_text() {
+        let s = sites(1, 1);
+        let state = controller(&s, quick_cfg()).snapshot();
+        let s2 = sites(2, 1);
+        let mut c2 = controller(&s2, quick_cfg());
+        assert!(c2.restore(&state).is_err(), "site-shape mismatch must be rejected");
+        assert!(PolicyState::parse("bogus v9\n").is_err());
+        let mut text = state.encode();
+        text.push_str("wat 1\n");
+        assert!(PolicyState::parse(&text).is_err());
     }
 
     #[test]

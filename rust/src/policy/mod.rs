@@ -34,8 +34,8 @@ pub mod mode;
 pub mod telemetry;
 
 pub use controller::{
-    build_neighbors, ControllerThread, PolicyConfig, PolicyController, SitePriors, StepReport,
-    UnitCosts,
+    build_neighbors, ControllerThread, PolicyConfig, PolicyController, PolicyState, SitePriors,
+    SiteState, StepReport, UnitCosts,
 };
 pub use mode::{DetectionMode, PolicyCell};
 pub use telemetry::{PolicyHandle, PolicySites, Site, SiteKind, SiteSnapshot, SiteTelemetry};

@@ -7,9 +7,10 @@
 //! ```text
 //!            detection (router persistent-flag, scrub hit)
 //!   Healthy ───────────────────────────────────────────────► Quarantined
-//!      ▲                                                          │
-//!      │ re-admit (copy installed AND checksum-verified)          │ repair
-//!      │                                                          ▼
+//!      ▲   \                                                      │
+//!      │    └─ R=1 self-heal (scrub hit localized to one slot,    │ repair
+//!      │       rewritten in place, both sums re-verified —        │
+//!      │       no quarantine; PR 6)                               ▼
 //!      └───────────────────────────────────────────────────── Repairing
 //!                 (verify failure / no clean source → back to Quarantined)
 //! ```
@@ -31,11 +32,12 @@ use crate::abft::{EbChecksum, FusedEbAbft, Scrubber};
 use crate::detect::{Detector, EventSink, Recovery, Resolution, Severity, SiteId, UnitRef};
 use crate::dlrm::DlrmModel;
 use crate::embedding::QuantTable8;
+use crate::policy::PolicyHandle;
 use crate::shard::ShardPlan;
 use crate::util::json::Json;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
-use std::sync::{Condvar, Mutex, RwLock, RwLockReadGuard};
+use std::sync::{Condvar, Mutex, OnceLock, RwLock, RwLockReadGuard};
 
 /// Per-replica serving state (stored as an `AtomicU8`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -118,6 +120,12 @@ pub struct ShardStats {
     /// Rows scanned / corrupted rows found by replica scrubbers.
     pub scrubbed_rows: AtomicU64,
     pub scrub_hits: AtomicU64,
+    /// Scrub hits healed in place: the dual checksum localized the
+    /// corruption to one slot, the slot was rewritten algebraically, and
+    /// both sums re-verified — no quarantine, no replica round-trip.
+    /// This is what keeps an R=1 store serving through single-slot
+    /// corruption instead of degrading.
+    pub self_heals: AtomicU64,
 }
 
 /// What [`ShardStore::repair`] did.
@@ -145,9 +153,17 @@ pub struct ShardStore {
     /// immutable ground truth for scrub and repair verification.
     checksums: Vec<EbChecksum>,
     /// Fault-event emission handle, inherited from the model the store
-    /// was built from: scrub hits are journaled as `ScrubExact` events
+    /// was built from: scrub hits are journaled as `ScrubExact` events —
+    /// `Recovered(CorrectInPlace)` when the self-heal lands, else
     /// escalating to the quarantine-and-repair rung.
     events: EventSink,
+    /// Policy handle for routing scrub detections into the victim
+    /// table's `eb/<table>` site telemetry (so proactively-found
+    /// corruption drives the escalation controller exactly like a
+    /// serving-path flag). Set at build time when the model already has
+    /// a policy, else post-hoc by `Engine::with_policy` — the engine
+    /// builds the store before the control plane.
+    policy: OnceLock<PolicyHandle>,
     pub stats: ShardStats,
     repair_q: Mutex<RepairQueue>,
     repair_cv: Condvar,
@@ -187,11 +203,16 @@ impl ShardStore {
                 Shard { id: s, tables, replicas }
             })
             .collect();
+        let policy = OnceLock::new();
+        if model.policy.sites().is_some() {
+            let _ = policy.set(model.policy.clone());
+        }
         Self {
             plan,
             shards,
             checksums: model.checksums.clone(),
             events: model.events.clone(),
+            policy,
             stats: ShardStats::default(),
             repair_q: Mutex::new(RepairQueue {
                 tickets: VecDeque::new(),
@@ -205,6 +226,15 @@ impl ShardStore {
 
     pub fn shards(&self) -> &[Shard] {
         &self.shards
+    }
+
+    /// Attach the policy handle after construction (idempotent; first
+    /// wins). Called by `Engine::with_policy`, which necessarily runs
+    /// after `with_shards` built this store from a then-detached model.
+    pub fn attach_policy(&self, policy: PolicyHandle) {
+        if policy.sites().is_some() {
+            let _ = self.policy.set(policy);
+        }
     }
 
     pub fn replica_state(&self, shard: usize, replica: usize) -> ReplicaState {
@@ -328,14 +358,13 @@ impl ShardStore {
     /// clean may have been hit between scan and install, and a repair
     /// must never re-admit dirty bytes.
     ///
-    /// Detectability boundary: "dirty" means the row's code sum moved.
-    /// Compensating multi-bit corruption *within* one row (+δ on one
-    /// code, −δ on another) preserves the sum and is invisible to every
-    /// detector in this system — the scrubber's exact compare, this
-    /// scan, the re-admission verify, and the serving Eq-5 bound alike
-    /// (it is the §IV-C cancellation class). Whole-copy repair used to
-    /// heal such rows incidentally; row-granular repair does not (see
-    /// the ROADMAP open item on byte-level repair rotation).
+    /// Detectability boundary: "dirty" means the row fails the dual
+    /// exact check ([`EbChecksum::row_clean`] — plain `C_T` **or**
+    /// index-weighted `C_W` mismatch). The §IV-C cancellation class
+    /// (+δ on one code, −δ on another, which preserves the plain sum)
+    /// was invisible to every detector before PR 6; the independent
+    /// weight vector of `C_W` closes it, so row-granular repair now
+    /// rewrites such rows too instead of silently skipping them.
     pub fn repair(&self, shard: usize, replica: usize) -> RepairOutcome {
         let sh = &self.shards[shard];
         let rep = &sh.replicas[replica];
@@ -360,7 +389,7 @@ impl ShardStore {
             'scan: for (slot, &t) in sh.tables.iter().enumerate() {
                 let table = &guard.tables[slot];
                 for row in 0..table.rows {
-                    if table.code_row_sum(row) != self.checksums[t].c_t[row] {
+                    if !self.checksums[t].row_clean(table, row) {
                         dirty.push((slot, row));
                         if dirty.len() * 4 > total_rows {
                             break 'scan; // whole-copy is already certain
@@ -458,20 +487,63 @@ impl ShardStore {
     }
 
     /// Journal one scrub hit: `ScrubExact` detector, severity from the
-    /// exact code-sum delta (Table-III significance split), resolution
+    /// exact code-sum delta (Table-III significance split). Resolution
+    /// is `Recovered(CorrectInPlace)` when the caller's self-heal
+    /// rewrote the slot and re-verified, else
     /// `Escalated(QuarantineAndRepair)` — the quarantine is applied by
     /// the caller right after and the repair queue owns the rest, so
     /// the event never claims a repair that has not run yet (with no
     /// clean source it may never succeed; `failed_repairs` and the
-    /// health block carry that outcome).
-    fn emit_scrub_hit(&self, table: usize, replica: usize, row: usize, delta: i64) {
+    /// health block carry that outcome). Either way the hit is routed
+    /// into the victim table's `eb/<table>` policy telemetry, so
+    /// scrub-found corruption drives the escalation controller like a
+    /// serving-path flag.
+    fn emit_scrub_hit(
+        &self,
+        table: usize,
+        replica: usize,
+        row: usize,
+        delta: i64,
+        resolution: Resolution,
+    ) {
+        if let Some(policy) = self.policy.get() {
+            if let Some(telem) = policy.eb_telem(table) {
+                telem.note_flags(1);
+            }
+        }
         self.events.emit(
             SiteId::Eb(table as u32),
             UnitRef::ScrubSlot { replica: replica as u32, row: row as u32 },
             Detector::ScrubExact,
             Severity::from_code_delta(delta),
-            Resolution::Escalated(Recovery::QuarantineAndRepair),
+            resolution,
         );
+    }
+
+    /// Attempt the R=1 self-heal on one scrub-flagged row: localize the
+    /// corruption to a single slot via the dual-checksum residual pair
+    /// ([`EbChecksum::localize_slot`]), rewrite that slot algebraically
+    /// under the replica's write lock, and re-verify **both** sums
+    /// before declaring success. A failed re-verify reverts the byte —
+    /// the caller falls down the ladder to quarantine-and-repair, and no
+    /// half-corrected row is ever served. Returns whether the row
+    /// healed.
+    fn try_self_heal(&self, shard: usize, replica: usize, slot: usize, table: usize, row: usize) -> bool {
+        let rep = &self.shards[shard].replicas[replica];
+        let cs = &self.checksums[table];
+        let mut guard = rep.data.write().unwrap();
+        let t = &mut guard.tables[slot];
+        let Some((j, original)) = cs.localize_slot(t, row) else {
+            return false;
+        };
+        let prev = t.data[row * t.d + j];
+        t.data[row * t.d + j] = original;
+        if cs.row_clean(t, row) {
+            true
+        } else {
+            t.data[row * t.d + j] = prev;
+            false
+        }
     }
 
     /// Full checksum pass over every slot of one replica's tables.
@@ -482,12 +554,15 @@ impl ShardStore {
             .all(|(slot, &t)| Scrubber::full_pass(&data.tables[slot], &self.checksums[t]).is_empty())
     }
 
-    /// Advance every healthy replica's scrubbers by one strip; corrupted
-    /// rows quarantine their replica (the proactive arm of
+    /// Advance every healthy replica's scrubbers by one strip. Each
+    /// corrupted row first attempts the in-place self-heal
+    /// ([`ShardStore::try_self_heal`]); rows that cannot be localized to
+    /// one slot quarantine their replica (the proactive arm of
     /// detection-driven failover) and enqueue repairs. Returns the rows
     /// scanned by **this** tick (callers must not derive it from the
     /// shared cumulative stats — concurrent tickers would cross-count)
-    /// and the `(shard, replica, global_table, row)` hits.
+    /// and the `(shard, replica, global_table, row)` hits (healed rows
+    /// included — they were real detections).
     pub fn scrub_tick(&self) -> (usize, Vec<(usize, usize, usize, usize)>) {
         let mut hits = Vec::new();
         let mut scanned = 0usize;
@@ -496,7 +571,9 @@ impl ShardStore {
                 if rep.state.load(Ordering::Acquire) != HEALTHY {
                     continue; // quarantined replicas are already pending repair
                 }
-                let mut dirty = false;
+                // Collect under the read lock, resolve after dropping it
+                // (the self-heal needs the write lock).
+                let mut found: Vec<(usize, usize, usize, i64)> = Vec::new();
                 {
                     let data = rep.data.read().unwrap();
                     let mut scrub = rep.scrub.lock().unwrap();
@@ -507,13 +584,23 @@ impl ShardStore {
                             .scrubbed_rows
                             .fetch_add(report.rows_scanned as u64, Ordering::Relaxed);
                         for row in report.corrupted_rows {
-                            dirty = true;
-                            self.stats.scrub_hits.fetch_add(1, Ordering::Relaxed);
                             let delta = self.checksums[t].row_delta(&data.tables[slot], row);
-                            self.emit_scrub_hit(t, r, row, delta);
-                            hits.push((sh.id, r, t, row));
+                            found.push((slot, t, row, delta));
                         }
                     }
+                }
+                let mut dirty = false;
+                for (slot, t, row, delta) in found {
+                    self.stats.scrub_hits.fetch_add(1, Ordering::Relaxed);
+                    let resolution = if self.try_self_heal(sh.id, r, slot, t, row) {
+                        self.stats.self_heals.fetch_add(1, Ordering::Relaxed);
+                        Resolution::Recovered(Recovery::CorrectInPlace)
+                    } else {
+                        dirty = true;
+                        Resolution::Escalated(Recovery::QuarantineAndRepair)
+                    };
+                    self.emit_scrub_hit(t, r, row, delta, resolution);
+                    hits.push((sh.id, r, t, row));
                 }
                 if dirty {
                     self.quarantine(sh.id, r);
@@ -531,8 +618,9 @@ impl ShardStore {
     /// `budget` rows (unless every segment is quarantined or empty) and
     /// consecutive ticks tile the whole healthy store without gaps or
     /// overlap. Segments on non-Healthy replicas are skipped (they are
-    /// already queued for repair). Corrupted rows quarantine their
-    /// replica exactly like [`ShardStore::scrub_tick`] hits. Returns
+    /// already queued for repair). Corrupted rows self-heal or
+    /// quarantine their replica exactly like [`ShardStore::scrub_tick`]
+    /// hits. Returns
     /// `(rows_scanned, hits)` with hits as `(shard, replica, table,
     /// row)`.
     pub fn scrub_tick_budget(&self, budget: usize) -> (usize, Vec<(usize, usize, usize, usize)>) {
@@ -583,10 +671,17 @@ impl ShardStore {
             self.stats
                 .scrubbed_rows
                 .fetch_add(report.rows_scanned as u64, Ordering::Relaxed);
-            let dirty = !report.corrupted_rows.is_empty();
+            let mut dirty = false;
             for (row, delta) in report.corrupted_rows.into_iter().zip(deltas) {
                 self.stats.scrub_hits.fetch_add(1, Ordering::Relaxed);
-                self.emit_scrub_hit(t, r, row, delta);
+                let resolution = if self.try_self_heal(s, r, slot, t, row) {
+                    self.stats.self_heals.fetch_add(1, Ordering::Relaxed);
+                    Resolution::Recovered(Recovery::CorrectInPlace)
+                } else {
+                    dirty = true;
+                    Resolution::Escalated(Recovery::QuarantineAndRepair)
+                };
+                self.emit_scrub_hit(t, r, row, delta, resolution);
                 hits.push((s, r, t, row));
             }
             if dirty {
@@ -612,9 +707,9 @@ impl ShardStore {
     }
 
     /// One full scrub pass over every healthy replica (campaigns /
-    /// offline verification); corrupted replicas are quarantined and
-    /// queued exactly like [`ShardStore::scrub_tick`] hits. Returns the
-    /// number of corrupted rows found.
+    /// offline verification); corrupted rows self-heal or quarantine
+    /// their replica exactly like [`ShardStore::scrub_tick`] hits.
+    /// Returns the number of corrupted rows found (healed included).
     pub fn scrub_full(&self) -> usize {
         let mut found = 0;
         for sh in &self.shards {
@@ -622,21 +717,36 @@ impl ShardStore {
                 if rep.state.load(Ordering::Acquire) != HEALTHY {
                     continue;
                 }
-                let dirty_rows = {
+                let rows: Vec<(usize, usize, usize, i64)> = {
                     let data = rep.data.read().unwrap();
-                    let mut count = 0usize;
-                    for (slot, &t) in sh.tables.iter().enumerate() {
-                        for row in Scrubber::full_pass(&data.tables[slot], &self.checksums[t]) {
-                            count += 1;
-                            let delta = self.checksums[t].row_delta(&data.tables[slot], row);
-                            self.emit_scrub_hit(t, r, row, delta);
-                        }
-                    }
-                    count
+                    sh.tables
+                        .iter()
+                        .enumerate()
+                        .flat_map(|(slot, &t)| {
+                            Scrubber::full_pass(&data.tables[slot], &self.checksums[t])
+                                .into_iter()
+                                .map(move |row| (slot, t, row))
+                                .collect::<Vec<_>>()
+                        })
+                        .map(|(slot, t, row)| {
+                            (slot, t, row, self.checksums[t].row_delta(&data.tables[slot], row))
+                        })
+                        .collect()
                 };
-                if dirty_rows > 0 {
-                    found += dirty_rows;
-                    self.stats.scrub_hits.fetch_add(dirty_rows as u64, Ordering::Relaxed);
+                let mut dirty = false;
+                for (slot, t, row, delta) in rows {
+                    found += 1;
+                    self.stats.scrub_hits.fetch_add(1, Ordering::Relaxed);
+                    let resolution = if self.try_self_heal(sh.id, r, slot, t, row) {
+                        self.stats.self_heals.fetch_add(1, Ordering::Relaxed);
+                        Resolution::Recovered(Recovery::CorrectInPlace)
+                    } else {
+                        dirty = true;
+                        Resolution::Escalated(Recovery::QuarantineAndRepair)
+                    };
+                    self.emit_scrub_hit(t, r, row, delta, resolution);
+                }
+                if dirty {
                     self.quarantine(sh.id, r);
                 }
             }
@@ -755,6 +865,7 @@ impl ShardStore {
             ("failed_repairs", n(&self.stats.failed_repairs)),
             ("scrubbed_rows", n(&self.stats.scrubbed_rows)),
             ("scrub_hits", n(&self.stats.scrub_hits)),
+            ("self_heals", n(&self.stats.self_heals)),
             (
                 "quarantined_replicas",
                 Json::Num(self.quarantined_replicas() as f64),
@@ -898,9 +1009,11 @@ mod tests {
     }
 
     #[test]
-    fn scrub_tick_finds_cold_corruption_and_quarantines() {
-        let (_, store) = store(2, 2);
-        // Low-bit flip: invisible to float bounds, exact to the scrubber.
+    fn scrub_tick_self_heals_single_slot_corruption_in_place() {
+        let (model, store) = store(2, 2);
+        // Low-bit flip: invisible to float bounds, exact to the scrubber
+        // — and single-slot, so the dual checksum localizes it and the
+        // R-independent self-heal fixes it without quarantine.
         let shard = store.flip_table_byte(1, 1, 7, 0x01);
         let mut hits = Vec::new();
         for _ in 0..16 {
@@ -914,16 +1027,63 @@ mod tests {
         assert_eq!(hits.len(), 1);
         let (s, r, t, _row) = hits[0];
         assert_eq!((s, r, t), (shard, 1, 1));
+        assert_eq!(store.replica_state(shard, 1), ReplicaState::Healthy, "healed, not quarantined");
+        assert_eq!(store.table_bytes(1, 1), model.tables[1].data, "byte restored exactly");
+        assert_eq!(store.stats.self_heals.load(Ordering::Relaxed), 1);
+        assert_eq!(store.pending_repairs(), 0);
+        assert_eq!(store.scrub_full(), 0, "nothing left to find");
+    }
+
+    #[test]
+    fn scrub_tick_quarantines_unlocalizable_corruption() {
+        let (model, store) = store(2, 2);
+        // §IV-C cancellation corruption (+5/−5 in one row): detected by
+        // the dual checksum but NOT single-slot, so the self-heal
+        // declines and the ladder falls to quarantine-and-repair.
+        let d = model.tables[1].d;
+        let bytes = store.table_bytes(1, 1);
+        let row = (0..model.tables[1].rows)
+            .find(|&row| bytes[row * d + 1] <= 250 && bytes[row * d + 6] >= 5)
+            .expect("some row admits a +5/-5 pair");
+        let (a, b) = (bytes[row * d + 1], bytes[row * d + 6]);
+        let shard = store.flip_table_byte(1, 1, row * d + 1, a ^ (a + 5));
+        store.flip_table_byte(1, 1, row * d + 6, b ^ (b - 5));
+        let mut hits = Vec::new();
+        for _ in 0..16 {
+            let (_, h) = store.scrub_tick();
+            hits.extend(h);
+            if !hits.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(hits.len(), 1);
         assert_eq!(store.replica_state(shard, 1), ReplicaState::Quarantined);
+        assert_eq!(store.stats.self_heals.load(Ordering::Relaxed), 0);
         assert_eq!(store.drain_repairs(), 1);
         assert_eq!(store.replica_state(shard, 1), ReplicaState::Healthy);
+        assert_eq!(store.table_bytes(1, 1), model.tables[1].data);
+    }
+
+    #[test]
+    fn r1_store_self_heals_where_repair_has_no_source() {
+        // With R=1 there is no sibling to repair from — pre-PR-6 a scrub
+        // hit meant quarantine forever (stale-serve). Single-slot
+        // corruption now heals in place and the store keeps serving.
+        let (model, store) = store(1, 1);
+        store.flip_table_byte(0, 0, 3, 0x40);
+        assert_eq!(store.scrub_full(), 1);
+        assert_eq!(store.replica_state(0, 0), ReplicaState::Healthy);
+        assert_eq!(store.table_bytes(0, 0), model.tables[0].data);
+        assert_eq!(store.stats.self_heals.load(Ordering::Relaxed), 1);
+        assert_eq!(store.stats.quarantines.load(Ordering::Relaxed), 0);
+        assert_eq!(store.scrub_full(), 0);
     }
 
     #[test]
     fn budget_scrub_is_exactly_paced_and_covers_every_replica() {
-        let (_, store) = store(2, 2);
+        let (model, store) = store(2, 2);
         // Corrupt a low bit on one replica copy — only the exact scrub
-        // sees it.
+        // sees it, and the self-heal fixes it in place.
         let shard = store.flip_table_byte(2, 1, 5, 0x01);
         // Total healthy rows: (60+40+30) tables × 2 replicas = 260.
         let total_rows = 2 * (60 + 40 + 30);
@@ -946,24 +1106,26 @@ mod tests {
         assert_eq!(hits.len(), 1);
         let (s, r, t, _row) = hits[0];
         assert_eq!((s, r, t), (shard, 1, 2));
-        assert_eq!(store.replica_state(shard, 1), ReplicaState::Quarantined);
-        // Quarantined segments are skipped; the budget keeps flowing to
-        // the healthy ones.
+        // Single-slot hit: healed in place, replica never left serving.
+        assert_eq!(store.replica_state(shard, 1), ReplicaState::Healthy);
+        assert_eq!(store.table_bytes(2, 1), model.tables[2].data);
+        assert_eq!(store.stats.self_heals.load(Ordering::Relaxed), 1);
+        // The budget keeps flowing afterwards, with nothing left to find.
         let (rows, h) = store.scrub_tick_budget(25);
         assert_eq!(rows, 25);
         assert!(h.is_empty());
-        store.drain_repairs();
         assert_eq!(store.quarantined_replicas(), 0);
     }
 
     #[test]
     fn scrub_full_covers_everything_at_once() {
-        let (_, store) = store(2, 2);
+        let (model, store) = store(2, 2);
         store.flip_table_byte(2, 0, 0, 0x02);
         assert_eq!(store.scrub_full(), 1);
+        // Healed in place (single slot), so no quarantine round-trip.
         let (shard, _) = store.plan.slot_of(2);
-        assert_eq!(store.replica_state(shard, 0), ReplicaState::Quarantined);
-        store.drain_repairs();
+        assert_eq!(store.replica_state(shard, 0), ReplicaState::Healthy);
+        assert_eq!(store.table_bytes(2, 0), model.tables[2].data);
         assert_eq!(store.quarantined_replicas(), 0);
         assert_eq!(store.scrub_full(), 0);
     }

@@ -1,9 +1,11 @@
 //! Integration: ABFT-GEMM over the full Fig-5 shape grid — clean runs,
 //! injected runs, and payload equivalence with the unprotected kernel.
 
-use dlrm_abft::abft::AbftGemm;
+use dlrm_abft::abft::{AbftGemm, RowCorrection, GROUP_WIDTH};
 use dlrm_abft::fault::campaign::fig5_shapes;
-use dlrm_abft::gemm::{gemm_exec, PackedB};
+use dlrm_abft::gemm::{
+    gemm_exec, gemm_exec_into, gemm_exec_into_scalar, gemm_exec_into_st, PackedB,
+};
 use dlrm_abft::util::rng::Pcg32;
 
 #[test]
@@ -18,12 +20,13 @@ fn full_fig5_grid_clean_and_equivalent() {
         rng.fill_u8(&mut a);
         rng.fill_i8(&mut b);
         let abft = AbftGemm::new(&b, k, n);
+        let nt = abft.n_total();
         let (c, verdict) = abft.exec(&a, m);
         assert!(verdict.clean(), "shape ({m},{n},{k}) false positive");
         let plain = gemm_exec(&a, &PackedB::pack(&b, k, n), m);
         for i in 0..m {
             assert_eq!(
-                &c[i * (n + 1)..i * (n + 1) + n],
+                &c[i * nt..i * nt + n],
                 &plain[i * n..(i + 1) * n],
                 "payload mismatch at shape ({m},{n},{k}) row {i}"
             );
@@ -44,7 +47,7 @@ fn grid_injected_bitflips_detected() {
         rng.fill_i8(&mut b);
         let abft = AbftGemm::new(&b, k, n);
         let (mut c, _) = abft.exec(&a, m);
-        let idx = rng.gen_range(0, m) * (n + 1) + rng.gen_range(0, n);
+        let idx = rng.gen_range(0, m) * abft.n_total() + rng.gen_range(0, n);
         c[idx] ^= 1 << rng.gen_range_u32(31);
         total += 1;
         if !abft.verify(&c, m).clean() {
@@ -53,6 +56,70 @@ fn grid_injected_bitflips_detected() {
     }
     // §IV-C2 model 1: bit flips in C_temp are detected with certainty.
     assert_eq!(detected, total);
+}
+
+#[test]
+fn correction_grid_boundary_columns_all_dispatch_paths() {
+    // PR-6 correction at the layout boundaries that could break the
+    // group algebra: the first column, the last column of the first
+    // panel/group and the first of the next, the ragged tail of n, and
+    // the Eq-3b checksum column itself — under every kernel dispatch
+    // path (parallel + SIMD, single-thread SIMD, scalar). The integer
+    // accumulators must agree bit-for-bit across paths, and a corrected
+    // row must equal both the full recompute and the clean run exactly.
+    let mut rng = Pcg32::new(0xF167);
+    // n exactly one group; one past; ragged last group; multi-group;
+    // odd (pair-tail) k; k = 1 (degenerate pair tail).
+    let shapes = [
+        (4usize, 32usize, 48usize),
+        (4, 33, 48),
+        (3, 95, 37),
+        (8, 256, 64),
+        (5, 64, 31),
+        (2, 40, 1),
+    ];
+    let paths: [fn(&[u8], &PackedB, usize, &mut [i32]); 3] =
+        [gemm_exec_into, gemm_exec_into_st, gemm_exec_into_scalar];
+    for (m, n, k) in shapes {
+        let mut a = vec![0u8; m * k];
+        let mut b = vec![0i8; k * n];
+        rng.fill_u8(&mut a);
+        rng.fill_i8(&mut b);
+        let abft = AbftGemm::new(&b, k, n);
+        let nt = abft.n_total();
+        let clean = abft.exec(&a, m).0;
+        let mut cols = vec![0, n - 1, n];
+        if n > GROUP_WIDTH {
+            cols.extend([GROUP_WIDTH - 1, GROUP_WIDTH]);
+        }
+        for exec in paths {
+            let mut c = vec![0i32; m * nt];
+            exec(&a, &abft.packed, m, &mut c);
+            assert_eq!(c, clean, "dispatch paths disagree at ({m},{n},{k})");
+            for &col in &cols {
+                let row = rng.gen_range(0, m);
+                let mut corrupt = c.clone();
+                corrupt[row * nt + col] ^= 1 << rng.gen_range_u32(31);
+                assert_eq!(
+                    abft.verify(&corrupt, m).corrupted_rows,
+                    vec![row],
+                    "({m},{n},{k}) col {col} not flagged"
+                );
+                let mut recomputed = corrupt.clone();
+                abft.recompute_row(&a, row, &mut recomputed, m);
+                let got = abft.correct_row(&a, row, &mut corrupt, m);
+                assert!(
+                    matches!(got, RowCorrection::Corrected { col: named, .. } if named == col),
+                    "({m},{n},{k}) col {col}: {got:?}"
+                );
+                assert_eq!(
+                    corrupt, recomputed,
+                    "corrected != recomputed at ({m},{n},{k}) col {col}"
+                );
+                assert_eq!(corrupt, clean, "corrected != clean at ({m},{n},{k}) col {col}");
+            }
+        }
+    }
 }
 
 #[test]

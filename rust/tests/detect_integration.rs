@@ -6,8 +6,8 @@
 //!
 //! Site classes covered: GEMM row verify, the BoundOnly batch aggregate,
 //! the local (unsharded) fused EB check, the shard router
-//! (failover and R=1 degrade), and the scrubber (sharded quarantine and
-//! local report-only). The steady-state zero-allocation property with
+//! (failover and R=1 degrade), and the scrubber (sharded self-heal,
+//! sharded quarantine, and local report-only). The steady-state zero-allocation property with
 //! the journal attached is enforced separately in
 //! `rust/tests/zero_alloc.rs` (engines always attach a sink).
 
@@ -142,7 +142,7 @@ fn transient_gemm_fault_recovers_at_the_recompute_rung() {
     assert!(verdict.clean());
     let clean = c_temp.clone();
     let before_clean = abft.row_residual(&c_temp, m, 1);
-    c_temp[(n + 1) + 2] += 5_000; // row 1, transient delta +5000
+    c_temp[abft.n_total() + 2] += 5_000; // row 1, transient delta +5000
     let before = abft.row_residual(&c_temp, m, 1);
     assert_eq!(before - before_clean, 5_000);
     // Re-requantization target for the repaired row.
@@ -268,14 +268,16 @@ fn r1_router_fault_journals_degraded_event() {
 }
 
 #[test]
-fn scrub_hits_journal_quarantine_and_local_report_events() {
+fn scrub_hits_journal_self_heal_quarantine_and_local_report_events() {
     // Sharded: a low-bit flip (Δ = 1, below the Table-III significance
-    // split) in a replica → ScrubExact event with the quarantine
-    // resolution.
+    // split) in a replica → ScrubExact event that self-heals in place —
+    // the dual checksum names the slot, the algebraic rewrite
+    // re-verifies, and the replica is never quarantined (PR 6).
     let mut model = eb_model(2, Protection::DetectRecompute);
     model.events = EventSink::with_capacity(16);
     let sink = model.events.clone();
     let store = Arc::new(ShardStore::from_model(&model, ShardPlan::hash_placement(2, 1, 2), 120));
+    let reference = store.table_bytes(1, 1);
     store.flip_table_byte(1, 1, 5 * model.cfg.embedding_dim + 2, 0x01);
     assert_eq!(store.scrub_full(), 1);
     let j = sink.journal().unwrap();
@@ -285,8 +287,29 @@ fn scrub_hits_journal_quarantine_and_local_report_events() {
     assert_eq!(ev.unit, UnitRef::ScrubSlot { replica: 1, row: 5 });
     assert_eq!(ev.detector, Detector::ScrubExact);
     assert_eq!(ev.severity, Severity::NearBound, "Δ=1 is below the significance split");
+    assert_eq!(ev.resolution, Resolution::Recovered(Recovery::CorrectInPlace));
+    assert_eq!(store.quarantined_replicas(), 0, "healed in place, not quarantined");
+    assert_eq!(store.table_bytes(1, 1), reference, "heal restores the exact bytes");
+    assert_eq!(store.stats.self_heals.load(std::sync::atomic::Ordering::Relaxed), 1);
+
+    // A sum-preserving pair (+1/−1 in one row) defeats single-slot
+    // localization — the same scrub site must fall down the ladder to
+    // quarantine + repair instead of guessing a rewrite.
+    let d = model.cfg.embedding_dim;
+    let bytes = store.table_bytes(1, 1);
+    let idx = (0..bytes.len())
+        .step_by(d)
+        .find(|&i| bytes[i] <= 254 && bytes[i + 1] >= 1)
+        .expect("some row admits a ±1 pair");
+    store.flip_table_byte(1, 1, idx, bytes[idx] ^ (bytes[idx] + 1));
+    store.flip_table_byte(1, 1, idx + 1, bytes[idx + 1] ^ (bytes[idx + 1] - 1));
+    assert_eq!(store.scrub_full(), 1);
+    let ev = j.recent(1)[0];
+    assert_eq!(ev.detector, Detector::ScrubExact);
+    assert_eq!(ev.unit, UnitRef::ScrubSlot { replica: 1, row: (idx / d) as u32 });
     // Escalated, not Recovered: the repair is queued, not yet proven.
     assert_eq!(ev.resolution, Resolution::Escalated(Recovery::QuarantineAndRepair));
+    assert_eq!(store.quarantined_replicas(), 1, "unlocalizable corruption quarantines");
 
     // Local (unsharded) scrubber: the engine's own tables have no
     // replica — the ladder is empty and the event is report-only.
@@ -393,8 +416,19 @@ fn ladder_shape_matches_the_site_flows() {
     );
     assert_eq!(
         recovery::ladder(SiteClass::GemmRow),
-        [Recovery::RecomputeUnit, Recovery::RetryBatch, Recovery::Degrade].as_slice()
+        [
+            Recovery::CorrectInPlace,
+            Recovery::RecomputeUnit,
+            Recovery::RetryBatch,
+            Recovery::Degrade
+        ]
+        .as_slice()
     );
+    assert_eq!(
+        recovery::ladder(SiteClass::ScrubSharded),
+        [Recovery::CorrectInPlace, Recovery::QuarantineAndRepair].as_slice()
+    );
+    assert_eq!(recovery::first_step(SiteClass::GemmRow), Some(Recovery::CorrectInPlace));
     assert_eq!(recovery::first_step(SiteClass::GemmAggregate), Some(Recovery::RetryBatch));
     assert_eq!(recovery::first_step(SiteClass::ScrubLocal), None);
 }

@@ -11,8 +11,7 @@ use dlrm_abft::gemm::{
     gemm_exec, gemm_requant_exec_into, gemm_requant_exec_into_scalar, simd_active, PackedB,
 };
 use dlrm_abft::quant::{
-    quantize_slice_u8, requantize, requantize_exclude_last_col, QParams, RequantEpilogue,
-    RequantParams,
+    quantize_slice_u8, requantize, requantize_cols_into, QParams, RequantEpilogue, RequantParams,
 };
 use dlrm_abft::util::rng::Pcg32;
 
@@ -42,10 +41,24 @@ fn two_pass_reference(
 ) -> (Vec<i32>, Vec<u8>) {
     let c_temp = gemm_exec(a, packed, m);
     let n = packed.n;
-    let mut out = if packed.extra_cols == 1 {
-        requantize_exclude_last_col(&c_temp, m, n + 1, p)
-    } else {
+    let mut out = if packed.extra_cols == 0 {
         requantize(&c_temp, m, n, p)
+    } else {
+        // Payload columns only: the Eq-3b checksum column and the PR-6
+        // group checksum columns are computed but never requantized.
+        let mut out = vec![0u8; m * n];
+        requantize_cols_into(
+            &c_temp,
+            m,
+            packed.n_total(),
+            0..n,
+            &p.a_row_sums,
+            &p.b_col_sums,
+            &p.spec(),
+            0,
+            &mut out,
+        );
+        out
     };
     for v in &mut out {
         if *v < relu_floor {
@@ -164,12 +177,13 @@ fn abft_linear_fused_matches_manual_two_pass() {
                 // Manual two-pass: protected GEMM (or plain), scalar
                 // requantize excluding the checksum column, then ReLU.
                 let p = layer.requant_params(&x, m, xp);
+                let nt = layer.abft().packed.n_total();
                 let packed = if protection.enabled() {
                     layer.abft().packed.clone()
                 } else {
                     PackedB::pack(
-                        &layer.abft().packed.to_row_major()[..] // row-major k×(n+1)
-                            .chunks(n + 1)
+                        &layer.abft().packed.to_row_major()[..] // row-major k×nt
+                            .chunks(nt)
                             .flat_map(|r| r[..n].iter().copied())
                             .collect::<Vec<i8>>(),
                         k,

@@ -3,7 +3,7 @@
 //! from a seeded PCG stream; on failure the failing case parameters are in
 //! the panic message for direct reproduction.
 
-use dlrm_abft::abft::{encode_checksum_col, AbftGemm, EbChecksum};
+use dlrm_abft::abft::{encode_checksum_col, AbftGemm, EbChecksum, RowCorrection};
 use dlrm_abft::dlrm::{AbftLinear, DlrmConfig, DlrmModel, Protection, TableConfig};
 use dlrm_abft::embedding::{bag_sum_8, QuantTable8};
 use dlrm_abft::gemm::{gemm_naive, PackedB};
@@ -73,6 +73,7 @@ fn prop_any_nondivisible_delta_is_detected() {
         let (m, k, n) = rand_shape(rng);
         let (a, b) = rand_ab(rng, m, k, n);
         let abft = AbftGemm::new(&b, k, n);
+        let nt = abft.n_total();
         let (mut c, _) = abft.exec(&a, m);
         let row = rng.gen_range(0, m);
         let col = rng.gen_range(0, n);
@@ -80,7 +81,7 @@ fn prop_any_nondivisible_delta_is_detected() {
         if delta == 0 {
             return;
         }
-        c[row * (n + 1) + col] = c[row * (n + 1) + col].wrapping_add(delta);
+        c[row * nt + col] = c[row * nt + col].wrapping_add(delta);
         let verdict = abft.verify(&c, m);
         if delta % 127 == 0 {
             assert!(verdict.clean(), "case {case}: delta {delta} divisible by 127 must escape");
@@ -119,13 +120,15 @@ fn prop_recompute_row_restores_exact_values() {
         let (m, k, n) = rand_shape(rng);
         let (a, b) = rand_ab(rng, m, k, n);
         let abft = AbftGemm::new(&b, k, n);
+        let nt = abft.n_total();
         let (mut c, _) = abft.exec(&a, m);
         let clean = c.clone();
-        // Corrupt up to 3 elements of one row.
+        // Corrupt up to 3 elements of one row — payload, Eq-3b checksum,
+        // or group checksum columns; the recompute restores them all.
         let row = rng.gen_range(0, m);
         for _ in 0..rng.gen_range(1, 4) {
-            let col = rng.gen_range(0, n + 1);
-            c[row * (n + 1) + col] ^= 1 << rng.gen_range_u32(31);
+            let col = rng.gen_range(0, nt);
+            c[row * nt + col] ^= 1 << rng.gen_range_u32(31);
         }
         abft.recompute_row(&a, row, &mut c, m);
         assert_eq!(c, clean, "case {case}");
@@ -213,6 +216,94 @@ fn prop_eb_weighted_linearity() {
 }
 
 #[test]
+fn prop_eb_cancellation_class_needs_the_dual_checksum() {
+    // §IV-C cancellation class, store-side: corrupt two slots of one row
+    // by +t and −t. The plain sum checksum (C_T) is blind to the entire
+    // class; the index-weighted sum (C_W) moves by t·(j1−j2) ≠ 0, so the
+    // dual check flags the row — and the localizer correctly refuses to
+    // name a slot (S = 0 admits no single-slot explanation).
+    forall("eb-cancel", |rng, case| {
+        let rows = rng.gen_range(20, 200);
+        let d = [8, 16, 32, 64][rng.gen_range(0, 4)];
+        let mut table = QuantTable8::random(rows, d, rng);
+        let row = rng.gen_range(0, rows);
+        let j1 = rng.gen_range(0, d);
+        let mut j2 = rng.gen_range(0, d);
+        while j2 == j1 {
+            j2 = rng.gen_range(0, d);
+        }
+        // Pin the victims to mid-range BEFORE building the checksums so
+        // the ±t pair below can never overflow a u8 code.
+        let (i1, i2) = (row * d + j1, row * d + j2);
+        table.data[i1] = 100;
+        table.data[i2] = 100;
+        let cs = EbChecksum::build_8(&table);
+        let t = rng.gen_range(1, 100) as u8;
+        table.data[i1] += t;
+        table.data[i2] -= t;
+        assert_eq!(
+            cs.row_delta(&table, row),
+            0,
+            "case {case}: the plain checksum must be blind to cancellation"
+        );
+        let w = cs.weighted_row_delta(&table, row);
+        assert_eq!(
+            w,
+            t as i64 * (j1 as i64 - j2 as i64),
+            "case {case}: weighted residual is the closed form"
+        );
+        assert_ne!(w, 0, "case {case}: the dual checksum must flag");
+        assert!(!cs.row_clean(&table, row), "case {case}");
+        assert_eq!(
+            cs.localize_slot(&table, row),
+            None,
+            "case {case}: no single-slot rewrite explains S = 0"
+        );
+        // Undo one side: a lone corrupt slot IS localized exactly.
+        table.data[i2] += t;
+        assert_eq!(
+            cs.localize_slot(&table, row),
+            Some((j1, 100)),
+            "case {case}: single-slot corruption must be named"
+        );
+    });
+}
+
+#[test]
+fn prop_single_gemm_fault_corrected_bit_exactly() {
+    // PR-6 correction property: ANY single detectable delta — any
+    // magnitude, any payload column or the Eq-3b checksum column itself,
+    // any shape — is localized by the group partial checksums and fixed
+    // to the bit-exact clean accumulator.
+    forall("gemm-correct", |rng, case| {
+        let (m, k, n) = rand_shape(rng);
+        let (a, b) = rand_ab(rng, m, k, n);
+        let abft = AbftGemm::new(&b, k, n);
+        let nt = abft.n_total();
+        let (mut c, _) = abft.exec(&a, m);
+        let clean = c.clone();
+        let row = rng.gen_range(0, m);
+        let col = rng.gen_range(0, n + 1);
+        let delta = rng.next_u32() as i32 % 100_000;
+        if delta == 0 || delta % 127 == 0 {
+            return; // undetectable by construction (§IV-C)
+        }
+        c[row * nt + col] = c[row * nt + col].wrapping_add(delta);
+        assert_eq!(abft.verify(&c, m).corrupted_rows, vec![row], "case {case}");
+        match abft.correct_row(&a, row, &mut c, m) {
+            RowCorrection::Corrected { col: got, delta: d } => {
+                assert_eq!(got, col, "case {case}: wrong column named");
+                assert_eq!(d, delta as i64, "case {case}: wrong delta");
+            }
+            RowCorrection::Declined(why) => {
+                panic!("case {case}: declined ({why:?}) shape ({m},{k},{n}) col {col}")
+            }
+        }
+        assert_eq!(c, clean, "case {case}: correction must be bit-exact");
+    });
+}
+
+#[test]
 fn prop_sampled_rate_one_is_identical_to_full_verify() {
     // The policy invariant: Sampled(1) checks every row with the same
     // verdict as Full, for any corruption pattern and any phase.
@@ -222,7 +313,7 @@ fn prop_sampled_rate_one_is_identical_to_full_verify() {
         let abft = AbftGemm::new(&b, k, n);
         let (mut c, _) = abft.exec(&a, m);
         for _ in 0..rng.gen_range(0, 5) {
-            let i = rng.gen_range(0, m * (n + 1));
+            let i = rng.gen_range(0, m * abft.n_total());
             c[i] ^= 1 << rng.gen_range_u32(31);
         }
         let full = abft.verify(&c, m);
@@ -325,7 +416,7 @@ fn prop_verdict_rows_sorted_and_unique() {
         let abft = AbftGemm::new(&b, k, n);
         let (mut c, _) = abft.exec(&a, m);
         for _ in 0..rng.gen_range(1, 6) {
-            let i = rng.gen_range(0, m * (n + 1));
+            let i = rng.gen_range(0, m * abft.n_total());
             c[i] ^= 1 << rng.gen_range_u32(31);
         }
         let v = abft.verify(&c, m);

@@ -169,12 +169,15 @@ fn degenerate_r1_has_no_failover_target_and_degrades() {
 }
 
 #[test]
-fn scrub_driven_quarantine_catches_cold_low_bit_corruption() {
+fn scrub_catches_cold_corruption_self_heal_then_quarantine() {
     let m = model(Protection::DetectRecompute, 0xD4);
     let (store, router) = router(&m, 2, 2);
     // One low-bit flip in one cold row of replica 1: under the float
     // bound and likely untouched — the request path can miss it, the
-    // exact integer scrubber cannot.
+    // exact integer scrubber cannot. Since PR 6 the dual checksum
+    // localizes the single corrupt slot, so the scrubber self-heals in
+    // place instead of quarantining: the replica never leaves service
+    // and no repair copy is needed.
     let d = m.cfg.embedding_dim;
     let victim_row = m.tables[2].rows - 1;
     let shard = store.flip_table_byte(2, 1, victim_row * d + 3, 0x01);
@@ -188,13 +191,36 @@ fn scrub_driven_quarantine_catches_cold_low_bit_corruption() {
     assert_eq!(hits.len(), 1);
     let (s, r, t, row) = hits[0];
     assert_eq!((s, r, t, row), (shard, 1, 2, victim_row));
-    assert_eq!(store.replica_state(shard, 1), ReplicaState::Quarantined);
+    assert_eq!(store.replica_state(shard, 1), ReplicaState::Healthy);
+    assert_eq!(store.table_bytes(2, 1), m.tables[2].data, "heal must restore bytes");
+    assert!(store.stats.self_heals.load(Ordering::Relaxed) >= 1);
+    assert_eq!(store.pending_repairs(), 0, "self-heal needs no repair copy");
     // Serving was never interrupted and still matches the unsharded path.
     let reqs = requests(&m, 4, 4);
     let (want, _) = m.forward(&reqs);
     let (got, rep) = m.forward_with(&reqs, &router);
     assert_eq!(got, want);
     assert!(rep.clean());
+
+    // A sum-preserving pair (+1/-1 in one row) defeats localization —
+    // the scrubber falls back to quarantine + repair as before PR 6.
+    let bytes = store.table_bytes(2, 1);
+    let idx = (0..bytes.len())
+        .step_by(d)
+        .find(|&i| bytes[i] <= 254 && bytes[i + 1] >= 1)
+        .expect("some row admits a +1/-1 pair");
+    store.flip_table_byte(2, 1, idx, bytes[idx] ^ (bytes[idx] + 1));
+    store.flip_table_byte(2, 1, idx + 1, bytes[idx + 1] ^ (bytes[idx + 1] - 1));
+    let mut hits = Vec::new();
+    for _ in 0..(m.tables[2].rows / 64 + 2) * 4 {
+        hits.extend(store.scrub_tick().1);
+        if !hits.is_empty() {
+            break;
+        }
+    }
+    assert_eq!(hits.len(), 1);
+    assert_eq!(hits[0], (shard, 1, 2, idx / d));
+    assert_eq!(store.replica_state(shard, 1), ReplicaState::Quarantined);
     // Repair re-admits with pristine bytes.
     store.drain_repairs();
     assert_eq!(store.replica_state(shard, 1), ReplicaState::Healthy);
