@@ -1,0 +1,185 @@
+//! Observability-plane perf harness (PR 7): emits `BENCH_PR7.json`.
+//!
+//! * Sampling cost — engine `score` req/s and p50/p99 latency with the
+//!   span profiler off vs 1-in-64 sampled vs always-on, every policy
+//!   site at `Full`. The 1-in-64 column is the production setting; its
+//!   req/s cost versus off is the headline number.
+//! * Measured overhead — after the always-on leg every site is warm:
+//!   the live per-site verify-cost ÷ operator-cost EWMAs from the
+//!   policy block, checked against the paper's ceilings (<20% GEMM,
+//!   <26% EmbeddingBag).
+//! * Stage breakdown — the per-stage span histograms (count, total,
+//!   p50/p99) accumulated over the profiled legs.
+//!
+//! Env: `QUICK=1` shrinks iteration counts; `BENCH_OUT=path` overrides
+//! the output file. Run: `cargo bench --bench perf_obs`.
+
+use std::time::Instant;
+
+use dlrm_abft::coordinator::Engine;
+use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, DlrmRequest, Protection, TableConfig};
+use dlrm_abft::gemm::simd_active;
+use dlrm_abft::policy::PolicyConfig;
+use dlrm_abft::util::json::Json;
+use dlrm_abft::util::rng::Pcg32;
+
+/// Paper §V: full GEMM detection stays below 20% of the operator.
+const GEMM_BUDGET: f64 = 0.20;
+/// Paper §V: checked EmbeddingBag stays below 26% over a plain gather.
+const EB_BUDGET: f64 = 0.26;
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+/// Same shape family as perf_policy's engine model.
+fn engine_model() -> DlrmModel {
+    DlrmModel::random(DlrmConfig {
+        num_dense: 13,
+        embedding_dim: 64,
+        bottom_mlp: vec![128, 64],
+        top_mlp: vec![128],
+        tables: vec![TableConfig { rows: 50_000, pooling: 20 }; 4],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed: 0x9047,
+    })
+}
+
+fn synth(model: &DlrmModel, batch: usize, seed: u64) -> Vec<DlrmRequest> {
+    let mut rng = Pcg32::new(seed);
+    model.synth_requests(batch, &mut rng)
+}
+
+fn quantile_us(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx] * 1e6
+}
+
+/// Throughput with the profiler off / sampled / always-on. Returns the
+/// section plus the engine, left warm at sampling 1 for the
+/// measured-overhead and stage-breakdown sections.
+fn sampling_section(quick: bool) -> (Json, Engine) {
+    let iters = if quick { 20 } else { 200 };
+    let batch = 16usize;
+    let engine = Engine::new(engine_model()).with_policy(PolicyConfig::default());
+    let reqs = {
+        let model = engine.model.read().unwrap();
+        synth(&model, batch, 0x0B57)
+    };
+    let mut scores = vec![0f32; batch];
+    let mut rows = Vec::new();
+    let mut rps = Vec::new();
+    for (label, n) in [("off", 0u32), ("sampled_1_in_64", 64), ("always_on", 1)] {
+        engine.obs().set_sampling(n);
+        for _ in 0..3 {
+            engine.score(&reqs, &mut scores);
+        }
+        let mut lats = Vec::with_capacity(iters);
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(engine.score(&reqs, &mut scores));
+            lats.push(t.elapsed().as_secs_f64());
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let r = (iters * batch) as f64 / wall;
+        rps.push(r);
+        rows.push(Json::obj(vec![
+            ("sampling", Json::Str(label.to_string())),
+            ("req_per_s", num(round3(r))),
+            ("p50_us", num(round3(quantile_us(&lats, 0.50)))),
+            ("p99_us", num(round3(quantile_us(&lats, 0.99)))),
+        ]));
+    }
+    // Throughput cost of each profiled setting vs off, in percent
+    // (negative = measured faster than off, i.e. run-to-run noise).
+    let cost_pct = |r: f64| if r > 0.0 { (rps[0] / r - 1.0) * 100.0 } else { 0.0 };
+    let section = Json::obj(vec![
+        ("batch", num(batch as f64)),
+        ("iters", num(iters as f64)),
+        ("by_sampling", Json::Arr(rows)),
+        ("sampled_1_in_64_cost_pct", num(round3(cost_pct(rps[1])))),
+        ("always_on_cost_pct", num(round3(cost_pct(rps[2])))),
+    ]);
+    (section, engine)
+}
+
+/// The live measured per-site overheads from the policy block, against
+/// the paper's class budgets.
+fn measured_section(engine: &Engine) -> Json {
+    let snap = engine.metrics_snapshot();
+    let mut site_rows = Vec::new();
+    let (mut gemm_max, mut eb_max) = (0.0f64, 0.0f64);
+    if let Some(sites) = snap.path(&["policy", "sites"]).and_then(Json::as_arr) {
+        for row in sites {
+            let label = row.get("site").and_then(Json::as_str).unwrap_or("?");
+            let measured = row.get("overhead_measured").and_then(Json::as_f64);
+            if let Some(m) = measured {
+                if label.starts_with("gemm/") {
+                    gemm_max = gemm_max.max(m);
+                } else {
+                    eb_max = eb_max.max(m);
+                }
+            }
+            site_rows.push(Json::obj(vec![
+                ("site", Json::Str(label.to_string())),
+                (
+                    "overhead_measured",
+                    measured.map_or(Json::Null, |m| num(round3(m))),
+                ),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        ("gemm_budget", num(GEMM_BUDGET)),
+        ("eb_budget", num(EB_BUDGET)),
+        ("gemm_max_overhead", num(round3(gemm_max))),
+        ("eb_max_overhead", num(round3(eb_max))),
+        ("gemm_within_budget", Json::Bool(gemm_max > 0.0 && gemm_max <= GEMM_BUDGET)),
+        ("eb_within_budget", Json::Bool(eb_max > 0.0 && eb_max <= EB_BUDGET)),
+        ("sites", Json::Arr(site_rows)),
+    ])
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick");
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_PR7.json".into());
+
+    eprintln!("perf_obs: avx2={} quick={quick}", simd_active());
+    let (sampling, engine) = sampling_section(quick);
+    eprintln!("perf_obs: sampling throughput done");
+    let measured = measured_section(&engine);
+    let breakdown = engine.obs().stages_json();
+    eprintln!("perf_obs: measured overhead + stage breakdown done");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_obs_pr7".into())),
+        (
+            "host",
+            Json::obj(vec![
+                ("avx2", Json::Bool(simd_active())),
+                (
+                    "threads",
+                    num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0) as f64),
+                ),
+            ]),
+        ),
+        ("sampling", sampling),
+        ("measured_overhead", measured),
+        ("stage_breakdown", breakdown),
+    ]);
+    let text = format!("{doc}");
+    std::fs::write(&out_path, &text).expect("write bench output");
+    println!("{text}");
+    eprintln!("perf_obs: wrote {out_path}");
+}

@@ -3,6 +3,7 @@
 //! request has aged past `max_wait` — the standard latency/throughput
 //! trade-off every serving stack (vLLM, DLRM inference tiers) exposes.
 
+use crate::obs::{ObsHandle, Stage};
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -63,6 +64,10 @@ pub struct Batcher<T> {
     state: Mutex<State<T>>,
     cv: Condvar,
     pub policy: BatchPolicy,
+    /// Span profiler: each item's queue wait is timed at batch cut.
+    /// Detached by default; the server threads the engine's handle in
+    /// via [`Batcher::with_obs`].
+    obs: ObsHandle,
 }
 
 /// Why `submit` failed.
@@ -81,7 +86,15 @@ impl<T> Batcher<T> {
             }),
             cv: Condvar::new(),
             policy,
+            obs: ObsHandle::detached(),
         }
+    }
+
+    /// Thread a profiler handle in (builder-style; `new` keeps its
+    /// signature for standalone users).
+    pub fn with_obs(mut self, obs: ObsHandle) -> Self {
+        self.obs = obs;
+        self
     }
 
     /// Enqueue one request.
@@ -113,6 +126,11 @@ impl<T> Batcher<T> {
                     || st.closed
                 {
                     let n = st.queue.len().min(self.policy.max_batch);
+                    if let Some(p) = self.obs.probe() {
+                        for q in st.queue.iter().take(n) {
+                            p.span(Stage::QueueWait, 0, q.enqueued);
+                        }
+                    }
                     return Some(st.queue.drain(..n).map(|q| q.item).collect());
                 }
                 // Wait out the remaining aging time (or a new arrival).

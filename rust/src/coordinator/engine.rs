@@ -19,6 +19,7 @@ use crate::detect::{
 use crate::dlrm::{
     DlrmModel, DlrmRequest, EbStage, InferenceReport, InferenceScratch, LocalEbStage, Protection,
 };
+use crate::obs::{render_prometheus, ObsHandle, Stage};
 use crate::policy::{
     build_neighbors, ControllerThread, PolicyConfig, PolicyController, PolicyHandle, PolicySites,
     PolicyState, StepReport,
@@ -142,6 +143,11 @@ pub struct Engine {
     /// carries an attached sink + journal; the model (and the shard
     /// store built from it) emit through clones of this handle.
     sink: EventSink,
+    /// The span profiler + overhead accounting plane ([`crate::obs`]):
+    /// always attached (sized to the model's sites), sampling off by
+    /// default — a disabled probe is one relaxed load. The model and the
+    /// shard store built from it time through clones of this handle.
+    obs: ObsHandle,
     chaos: Option<Mutex<(ChaosConfig, Pcg32)>>,
     /// Background table scrubbers (one per table) plus the round-robin
     /// table cursor for budget-paced ticks, advanced between batches to
@@ -184,10 +190,18 @@ impl Engine {
         let sink = EventSink::attached();
         sink.attach_metrics(Arc::clone(&metrics));
         model.events = sink.clone();
+        // Profiler plane: attached (so `set_sampling` works at runtime)
+        // but sampling off — the default serving path pays one relaxed
+        // load per probe site.
+        let gemm_sites = model.bottom.len() + model.top.len() + 1;
+        let eb_sites = model.tables.len();
+        let obs = ObsHandle::attached(gemm_sites, eb_sites, 0);
+        model.obs = obs.clone();
         Self {
             model: RwLock::new(model),
             metrics,
             sink,
+            obs,
             chaos,
             scrubbers: None,
             shards: None,
@@ -278,11 +292,15 @@ impl Engine {
             // feeds the same escalation loop the serving path does).
             sh.store.attach_policy(PolicyHandle::attached(Arc::clone(&sites)));
         }
-        let controller = Arc::new(Mutex::new(PolicyController::new(
-            Arc::clone(&sites),
-            neighbors,
-            cfg.clone(),
-        )));
+        let mut controller = PolicyController::new(Arc::clone(&sites), neighbors, cfg.clone());
+        // Feed the controller the live verify-cost measurements: once a
+        // site's EWMA is warm, its measured overhead replaces the static
+        // `UnitCosts` prior in the sampling-rate budget math (unless
+        // `cfg.pin_unit_costs` pins the prior).
+        if let Some(m) = self.obs.measured() {
+            controller.attach_measured(m);
+        }
+        let controller = Arc::new(Mutex::new(controller));
         let thread = (cfg.tick > Duration::ZERO).then(|| {
             let sink = self.sink.clone();
             ControllerThread::spawn_with(Arc::clone(&controller), cfg.tick, move |t| {
@@ -360,6 +378,30 @@ impl Engine {
     /// `max` event rows.
     pub fn events_json(&self, max: usize) -> Json {
         self.journal().events_json(max)
+    }
+
+    /// The cursored `events` payload: only rows strictly after the
+    /// journal sequence `since` (capped at the newest `max`), plus
+    /// `next_cursor` for the follower's next call.
+    pub fn events_json_since(&self, since: u64, max: usize) -> Json {
+        self.journal().events_json_since(since, max)
+    }
+
+    /// The span profiler handle (sampling control, measured costs).
+    pub fn obs(&self) -> &ObsHandle {
+        &self.obs
+    }
+
+    /// The `trace` server-op payload: the newest sampled spans plus the
+    /// per-stage latency quantiles.
+    pub fn trace_json(&self, max: usize) -> Json {
+        self.obs.trace_json(max)
+    }
+
+    /// The full metrics snapshot rendered as Prometheus text exposition
+    /// (the `prom` server op).
+    pub fn prom_text(&self) -> String {
+        render_prometheus(&self.metrics_snapshot())
     }
 
     /// The EB-stage strategy this engine serves with.
@@ -604,7 +646,15 @@ impl Engine {
             // time, one per flagged row/bag — the batch policy here only
             // drives the RetryBatch ladder rung.
             if model.cfg.protection == Protection::DetectRecompute {
+                // Ladder-rung span: batch retries are far too rare for
+                // 1-in-n sampling, so the probe bypasses it (off still
+                // wins).
+                let probe = self.obs.probe_rare();
+                let t0 = probe.map(|_| Instant::now());
                 let report2 = model.forward_into(dlrm_reqs, self.eb_stage(), scratch, scores);
+                if let (Some(p), Some(t0)) = (probe, t0) {
+                    p.span(Stage::RetryBatch, 0, t0);
+                }
                 self.record_shard_events(&report2);
                 outcome.recomputed = true;
                 self.metrics.recomputes.fetch_add(1, Ordering::Relaxed);
@@ -653,6 +703,7 @@ impl Engine {
         let mut snap = self.metrics.snapshot();
         if let Json::Obj(map) = &mut snap {
             map.insert("events".to_string(), self.journal().counts_json());
+            map.insert("obs".to_string(), self.obs.stages_json());
             if let Some(sh) = &self.shards {
                 map.insert("shards".to_string(), sh.store.health_json());
             }

@@ -1,65 +1,45 @@
-//! Serving metrics: lock-free counters and a log-bucketed latency
+//! Serving metrics: lock-free counters and a log-linear latency
 //! histogram, snapshotted to JSON for the `/metrics`-style endpoint —
 //! plus the adaptive-detection policy block (per-site modes, window
-//! stats, per-mode served counters).
+//! stats, per-mode served counters, measured vs. estimated overhead).
 
+use crate::obs::LogLinHist;
 use crate::policy::{DetectionMode, PolicyController, PolicySites};
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Log2-bucketed latency histogram: bucket i holds samples in
-/// `[2^i, 2^{i+1})` microseconds, 0..=31.
+/// Request-latency histogram in microseconds, backed by the shared
+/// log-linear histogram ([`crate::obs::LogLinHist`]: 4 linear
+/// sub-buckets per octave, interpolated quantiles). The old pure-log2
+/// buckets reported the bucket upper bound, making p99 wrong by up to
+/// 2×; the API (`record_us`/`count`/`mean_us`/`quantile_us`) is
+/// unchanged and still lock-free.
 pub struct LatencyHistogram {
-    buckets: Vec<AtomicU64>,
-    sum_us: AtomicU64,
-    count: AtomicU64,
+    hist: LogLinHist,
 }
 
 impl LatencyHistogram {
     pub fn new() -> Self {
         Self {
-            buckets: (0..32).map(|_| AtomicU64::new(0)).collect(),
-            sum_us: AtomicU64::new(0),
-            count: AtomicU64::new(0),
+            hist: LogLinHist::new(),
         }
     }
 
     pub fn record_us(&self, us: u64) {
-        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
-        self.buckets[b].fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
+        self.hist.record(us);
     }
 
     pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
+        self.hist.count()
     }
 
     pub fn mean_us(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            0.0
-        } else {
-            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
-        }
+        self.hist.mean()
     }
 
-    /// Approximate quantile from the bucket histogram (upper bound of the
-    /// bucket containing the q-th sample).
+    /// Interpolated quantile in microseconds.
     pub fn quantile_us(&self, q: f64) -> u64 {
-        let total = self.count();
-        if total == 0 {
-            return 0;
-        }
-        let target = ((total as f64) * q).ceil() as u64;
-        let mut seen = 0;
-        for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 1u64 << (i + 1);
-            }
-        }
-        u64::MAX
+        self.hist.quantile(q)
     }
 }
 
@@ -181,7 +161,10 @@ impl Default for Metrics {
 /// The adaptive-detection policy block of the metrics snapshot: per-mode
 /// served-unit counters, lifetime controller events, the current scrub
 /// budget, and one entry per site (mode + sliding-window units /
-/// verified / flags + estimated overhead fraction).
+/// verified / flags + estimated overhead fraction + the live *measured*
+/// full-detection overhead when the profiler has warmed that site —
+/// `overhead_measured` is what the controller budgets `n*` against
+/// unless `PolicyConfig::pin_unit_costs` pins the static prior).
 pub fn policy_json(sites: &PolicySites, controller: &PolicyController) -> Json {
     let mode_json = |mode: DetectionMode| match mode {
         DetectionMode::Sampled(n) => Json::Str(format!("sampled_1_in_{n}")),
@@ -199,6 +182,13 @@ pub fn policy_json(sites: &PolicySites, controller: &PolicyController) -> Json {
             (
                 "overhead_est",
                 Json::Num(controller.overhead_estimate(flat)),
+            ),
+            (
+                "overhead_measured",
+                match controller.measured_overhead(flat) {
+                    Some(x) => Json::Num(x),
+                    None => Json::Null,
+                },
             ),
         ])
     };
@@ -251,6 +241,20 @@ mod tests {
         assert!(h.mean_us() > 0.0);
         assert!(h.quantile_us(0.5) <= 256);
         assert!(h.quantile_us(1.0) >= 100_000);
+    }
+
+    #[test]
+    fn interpolated_p99_is_no_longer_bucket_upper_bound() {
+        // 1000 samples uniform in [1000, 2000) µs: the old log2
+        // histogram reported p99 = 2048 (the bucket upper bound, ~3%
+        // high at best, 2× at worst). Interpolated log-linear must land
+        // within 15% of the true 1990.
+        let h = LatencyHistogram::new();
+        for i in 0..1000u64 {
+            h.record_us(1000 + i);
+        }
+        let p99 = h.quantile_us(0.99) as f64;
+        assert!((p99 - 1990.0).abs() / 1990.0 < 0.15, "p99 = {p99}");
     }
 
     #[test]

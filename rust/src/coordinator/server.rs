@@ -3,8 +3,20 @@
 //!
 //! Protocol (one JSON object per line):
 //!   → `{"id": 1, "dense": [...], "sparse": [[...], ...]}`
-//!   → `{"op": "metrics"}`            (returns the metrics snapshot)
 //!   ← `{"id": 1, "score": 0.42, "detected": false, ...}`
+//!
+//! Control ops (each answers with one JSON line):
+//!   → `{"op": "metrics"}`                  — the full metrics snapshot
+//!     (counters, latency quantiles, events/shards/policy/obs blocks)
+//!   → `{"op": "events", "max": N}`         — journal counts + newest rows
+//!   → `{"op": "events", "since_tick": S}`  — only rows past journal
+//!     sequence `S` (the reply's `next_cursor` feeds the next call, so a
+//!     follower never re-reads or misses a row; `max` still caps)
+//!   → `{"op": "trace", "max": N}`          — newest sampled profiler
+//!     spans + per-stage latency quantiles (see `crate::obs`)
+//!   → `{"op": "prom"}`                     — the metrics snapshot as
+//!     Prometheus text exposition, in `{"text": "..."}`
+//!   → `{"op": "ping"}`                     — liveness
 //!
 //! # Sharded batch loops
 //!
@@ -58,7 +70,7 @@ impl Server {
         let shutdown = Arc::new(AtomicBool::new(false));
         let loops = policy.effective_loops().max(1);
         let batchers: Vec<Arc<Batcher<Pending>>> = (0..loops)
-            .map(|_| Arc::new(Batcher::<Pending>::new(policy)))
+            .map(|_| Arc::new(Batcher::<Pending>::new(policy).with_obs(engine.obs().clone())))
             .collect();
 
         // Batch loops: drain batches, run the engine, fan responses out.
@@ -171,7 +183,13 @@ fn handle_conn(stream: TcpStream, batcher: Arc<Batcher<Pending>>, engine: Arc<En
             continue;
         }
         let mut req = slab.pop().unwrap_or_default();
-        if req.parse_line_into(trimmed) {
+        let probe = engine.obs().probe();
+        let t0 = probe.map(|_| std::time::Instant::now());
+        let parsed_fast = req.parse_line_into(trimmed);
+        if let (Some(p), Some(t0)) = (probe, t0) {
+            p.span(crate::obs::Stage::Parse, 0, t0);
+        }
+        if parsed_fast {
             submit_and_reply(&batcher, &mut writer, req, &mut slab)?;
             continue;
         }
@@ -190,10 +208,30 @@ fn handle_conn(stream: TcpStream, batcher: Arc<Batcher<Pending>>, engine: Arc<En
                 "metrics" => writeln!(writer, "{}", engine.metrics_snapshot())?,
                 // The fault-event journal: counts + the newest rows
                 // (newest-last). `{"op":"events","max":N}` bounds the
-                // row count; default 64.
+                // row count; default 64. With `since_tick`, only rows
+                // past that journal sequence come back, plus the
+                // `next_cursor` to resume from.
                 "events" => {
                     let max = parsed.get("max").and_then(Json::as_usize).unwrap_or(64);
-                    writeln!(writer, "{}", engine.events_json(max))?
+                    match parsed.get("since_tick").and_then(Json::as_usize) {
+                        Some(since) => {
+                            writeln!(writer, "{}", engine.events_json_since(since as u64, max))?
+                        }
+                        None => writeln!(writer, "{}", engine.events_json(max))?,
+                    }
+                }
+                // Profiler spans + per-stage quantiles.
+                "trace" => {
+                    let max = parsed.get("max").and_then(Json::as_usize).unwrap_or(64);
+                    writeln!(writer, "{}", engine.trace_json(max))?
+                }
+                // Prometheus text exposition of the whole snapshot.
+                "prom" => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        Json::obj(vec![("text", Json::Str(engine.prom_text()))])
+                    )?
                 }
                 "ping" => writeln!(writer, "{}", Json::obj(vec![("pong", Json::Bool(true))]))?,
                 _ => writeln!(writer, "{}", err_json("unknown op"))?,
@@ -286,6 +324,35 @@ impl Client {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Ok(Json::parse(line.trim())?)
+    }
+
+    /// Cursored journal follow: only rows past `since` (a previous
+    /// reply's `next_cursor`), so a poller never re-reads or misses one.
+    pub fn events_since(&mut self, since: u64) -> Result<Json> {
+        writeln!(self.writer, "{{\"op\":\"events\",\"since_tick\":{since}}}")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim())?)
+    }
+
+    /// Recent profiler spans + per-stage quantiles (`{"op":"trace"}`).
+    pub fn trace(&mut self, max: usize) -> Result<Json> {
+        writeln!(self.writer, "{{\"op\":\"trace\",\"max\":{max}}}")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim())?)
+    }
+
+    /// The Prometheus text exposition (`{"op":"prom"}`), unwrapped.
+    pub fn prom(&mut self) -> Result<String> {
+        writeln!(self.writer, "{{\"op\":\"prom\"}}")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let j = Json::parse(line.trim())?;
+        Ok(j.get("text").and_then(Json::as_str).unwrap_or_default().to_string())
     }
 }
 

@@ -216,13 +216,34 @@ impl Journal {
     }
 
     /// The `events` server-op payload: counts plus the newest `max`
-    /// event rows.
+    /// event rows, and the cursor (`next_cursor`) a poller passes back
+    /// as `since_tick` to read only what's new next time.
     pub fn events_json(&self, max: usize) -> Json {
         Json::obj(vec![
             ("counts", self.counts_json()),
+            ("next_cursor", Json::Num(self.total() as f64)),
             (
                 "events",
                 Json::Arr(self.recent(max).iter().map(FaultEvent::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// The cursored `events` payload: only events with lifetime sequence
+    /// `>= since` (a prior `next_cursor`), newest `max` of them. Pollers
+    /// stop re-reading the whole ring every scrape; events that wrapped
+    /// out between polls are reflected in `counts.dropped`/`total`.
+    pub fn events_json_since(&self, since: u64, max: usize) -> Json {
+        let mut rows = self.since(since);
+        if rows.len() > max {
+            rows.drain(..rows.len() - max);
+        }
+        Json::obj(vec![
+            ("counts", self.counts_json()),
+            ("next_cursor", Json::Num(self.total() as f64)),
+            (
+                "events",
+                Json::Arr(rows.iter().map(FaultEvent::to_json).collect()),
             ),
         ])
     }
@@ -324,5 +345,31 @@ mod tests {
         let doc = j.events_json(8);
         assert_eq!(doc.path(&["counts", "total"]).and_then(Json::as_usize), Some(1));
         assert!(matches!(doc.get("events"), Some(Json::Arr(a)) if a.len() == 1));
+        assert_eq!(doc.get("next_cursor").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn cursored_events_return_only_whats_new() {
+        let j = Journal::with_capacity(16);
+        for i in 0..5 {
+            j.record(&ev(i));
+        }
+        let first = j.events_json_since(0, 100);
+        assert_eq!(first.get("events").and_then(Json::as_arr).unwrap().len(), 5);
+        let cursor = first.get("next_cursor").and_then(Json::as_usize).unwrap() as u64;
+        assert_eq!(cursor, 5);
+        // Nothing new → empty page, cursor unchanged.
+        let empty = j.events_json_since(cursor, 100);
+        assert!(empty.get("events").and_then(Json::as_arr).unwrap().is_empty());
+        assert_eq!(empty.get("next_cursor").and_then(Json::as_usize), Some(5));
+        // Two more events → exactly those two.
+        j.record(&ev(5));
+        j.record(&ev(6));
+        let page = j.events_json_since(cursor, 100);
+        let rows = page.get("events").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        // `max` keeps the newest rows of the page.
+        let capped = j.events_json_since(0, 2);
+        assert_eq!(capped.get("events").and_then(Json::as_arr).unwrap().len(), 2);
     }
 }

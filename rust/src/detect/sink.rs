@@ -32,6 +32,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::detect::event::{Detector, FaultEvent, Resolution, Severity, SiteId, UnitRef};
 use crate::detect::journal::{Journal, DEFAULT_JOURNAL_CAPACITY};
 use crate::detect::LOCAL_REPLICA;
+use crate::obs::ObsHandle;
 use crate::policy::SiteTelemetry;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
@@ -165,26 +166,37 @@ impl EventSink {
 }
 
 /// One detection site's emission context: the sink, the site's identity,
-/// and its (optional) policy telemetry — bundled so hot-path signatures
-/// carry one argument instead of three. Constructed per layer/table
-/// invocation by the model; [`SiteCtx::bare`] gives standalone callers
-/// (layer unit tests, baselines) a detached context.
+/// its (optional) policy telemetry, and the span profiler — bundled so
+/// hot-path signatures carry one argument instead of four. Constructed
+/// per layer/table invocation by the model; [`SiteCtx::bare`] gives
+/// standalone callers (layer unit tests, baselines) a detached context.
 #[derive(Clone, Copy)]
 pub struct SiteCtx<'a> {
     pub sink: &'a EventSink,
     pub site: SiteId,
     pub telem: Option<&'a SiteTelemetry>,
+    /// Span profiler handle; defaults to the detached no-op so existing
+    /// constructors stay two/three-argument. The model threads its own
+    /// handle in via [`SiteCtx::with_obs`].
+    pub obs: &'a ObsHandle,
 }
 
 impl<'a> SiteCtx<'a> {
     pub fn new(sink: &'a EventSink, site: SiteId, telem: Option<&'a SiteTelemetry>) -> Self {
-        Self { sink, site, telem }
+        Self { sink, site, telem, obs: ObsHandle::detached_ref() }
     }
 
     /// Detached-sink context (site id is a placeholder — nothing is
     /// emitted through a detached sink).
     pub fn bare(telem: Option<&'a SiteTelemetry>) -> Self {
-        Self { sink: &DETACHED, site: SiteId::Gemm(0), telem }
+        Self { sink: &DETACHED, site: SiteId::Gemm(0), telem, obs: ObsHandle::detached_ref() }
+    }
+
+    /// Thread a profiler handle into the context (builder-style, so the
+    /// existing constructors keep their signatures).
+    pub fn with_obs(mut self, obs: &'a ObsHandle) -> Self {
+        self.obs = obs;
+        self
     }
 
     /// Emit at this site: raise the site's telemetry flag (the

@@ -5,15 +5,17 @@
 
 use crate::abft::{AbftGemm, Verdict};
 use crate::detect::{
-    recovery, Detector, Recovery, Resolution, Severity, SiteClass, SiteCtx, UnitRef,
+    recovery, Detector, Recovery, Resolution, Severity, SiteClass, SiteCtx, SiteId, UnitRef,
 };
 use crate::dlrm::config::Protection;
 use crate::gemm::{gemm_requant_exec_into, PackedB};
+use crate::obs::Stage;
 use crate::policy::DetectionMode;
 use crate::quant::{QParams, RequantEpilogue, RequantParams, RequantSpec};
 use crate::util::rng::Pcg32;
 use crate::util::scratch::{grow, GemmScratch};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Detection/recovery events from one layer invocation.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -206,12 +208,32 @@ impl AbftLinear {
             relu_floor,
         };
 
+        // One sampling decision covers the whole layer pass: the
+        // operator span, the verify span, and the measured-overhead
+        // EWMA all come from the same timed invocation (detached obs or
+        // an unsampled pass takes no timestamps at all).
+        let probe = site.obs.probe();
+        let site_idx = match site.site {
+            SiteId::Gemm(i) => i,
+            SiteId::Eb(t) => t,
+        };
+
         if self.protection.enabled() {
             let nt = self.abft.n_total();
             let c_temp = grow(c_temp, m * nt);
+            let t_op = probe.map(|_| Instant::now());
             gemm_requant_exec_into(x, &self.abft.packed, m, &epi, c_temp, out);
+            let op_ns = match (probe, t_op) {
+                (Some(p), Some(t0)) => {
+                    let ns = t0.elapsed().as_nanos() as u64;
+                    p.span_ns(Stage::MlpLayer, site_idx, ns);
+                    ns
+                }
+                _ => 0,
+            };
             let mut rows_verified = m;
             let mut aggregate_flag = false;
+            let t_verify = probe.map(|_| Instant::now());
             let verdict = match mode {
                 DetectionMode::Full => self.abft.verify(c_temp, m),
                 DetectionMode::Sampled(n) => {
@@ -233,6 +255,22 @@ impl AbftLinear {
                     Verdict { corrupted_rows: Vec::new() }
                 }
             };
+            if let (Some(p), Some(t0)) = (probe, t_verify) {
+                let verify_ns = t0.elapsed().as_nanos() as u64;
+                p.span_ns(Stage::Verify, site_idx, verify_ns);
+                // Feed the measured full-detection overhead only from
+                // modes that ran the real per-row verify (BoundOnly's
+                // aggregate check is a different, cheaper detector).
+                if matches!(mode, DetectionMode::Full | DetectionMode::Sampled(_)) {
+                    p.measured().note_gemm(
+                        site_idx as usize,
+                        op_ns,
+                        verify_ns,
+                        m as u64,
+                        rows_verified as u64,
+                    );
+                }
+            }
             report.rows_flagged += verdict.err_count();
             if let Some(t) = site.telem {
                 t.record(m as u64, rows_verified as u64);
@@ -259,6 +297,10 @@ impl AbftLinear {
             }
             let recompute = self.protection == Protection::DetectRecompute;
             for &row in &verdict.corrupted_rows {
+                // Fault-path spans bypass the 1-in-n gate (probe_rare):
+                // a once-per-outage rung would otherwise never sample.
+                let rung_probe = site.obs.probe_rare();
+                let t_rung = rung_probe.map(|_| Instant::now());
                 let (severity, resolution) = if !recompute {
                     // Detect-only: no recompute reference, so the delta
                     // magnitude cannot be bounded — classify worst-case.
@@ -307,6 +349,22 @@ impl AbftLinear {
                         )
                     }
                 };
+                if let (Some(p), Some(t0)) = (rung_probe, t_rung) {
+                    if recompute {
+                        // CorrectInPlace when the algebraic fix landed;
+                        // otherwise the walk fell to (and ran) the
+                        // RecomputeUnit rung.
+                        let stage = if matches!(
+                            resolution,
+                            Resolution::Recovered(Recovery::CorrectInPlace)
+                        ) {
+                            Stage::CorrectInPlace
+                        } else {
+                            Stage::RecomputeUnit
+                        };
+                        p.span(stage, site_idx, t0);
+                    }
+                }
                 site.emit(
                     UnitRef::GemmRow { row: row as u32 },
                     Detector::GemmChecksum,
@@ -316,7 +374,11 @@ impl AbftLinear {
             }
         } else {
             let c_temp = grow(c_temp, m * self.n);
+            let t_op = probe.map(|_| Instant::now());
             gemm_requant_exec_into(x, &self.plain, m, &epi, c_temp, out);
+            if let (Some(p), Some(t0)) = (probe, t_op) {
+                p.span(Stage::MlpLayer, site_idx, t0);
+            }
         }
         report
     }

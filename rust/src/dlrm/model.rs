@@ -12,11 +12,13 @@ use crate::dlrm::interaction::pairwise_interaction_into;
 use crate::dlrm::layer::{AbftLinear, LayerReport};
 use crate::dlrm::scratch::{grow, EbScratch, GemmScratch, InferenceScratch};
 use crate::embedding::{bag_sum_8, QuantTable8};
+use crate::obs::{ObsHandle, Stage};
 use crate::policy::PolicyHandle;
 use crate::quant::QParams;
 use crate::util::rng::Pcg32;
 use crate::util::threadpool::EB_PAR_MIN_WORK;
 use std::sync::Mutex;
+use std::time::Instant;
 
 /// One inference request: dense features + per-table index lists.
 #[derive(Clone, Debug)]
@@ -186,6 +188,11 @@ pub struct DlrmModel {
     /// standalone model emits nothing); the engine attaches its sink at
     /// construction, and the shard store inherits it.
     pub events: EventSink,
+    /// Span-profiler handle ([`crate::obs`]): pipeline stages and
+    /// detection verifies time themselves through here when sampling is
+    /// on. Detached by default (every probe is one branch); the engine
+    /// attaches one at construction, and the shard store inherits it.
+    pub obs: ObsHandle,
 }
 
 impl DlrmModel {
@@ -232,6 +239,7 @@ impl DlrmModel {
             top_std: Vec::new(),
             policy: PolicyHandle::default(),
             events: EventSink::detached(),
+            obs: ObsHandle::detached(),
         };
         model.calibrate(&mut rng);
         model
@@ -316,6 +324,8 @@ impl DlrmModel {
 
         // 5. Standardize per column (calibrated stats), then quantize onto
         // the static lattice and run the top MLP + scalar head.
+        let probe = self.obs.probe();
+        let t0 = probe.map(|_| Instant::now());
         let mut qp = self.top_qparams;
         let xq = grow(&mut scratch.act_a, batch * top_in_dim);
         for b in 0..batch {
@@ -323,6 +333,9 @@ impl DlrmModel {
                 let z = (scratch.top_in[b * top_in_dim + j] - self.top_mean[j]) / self.top_std[j];
                 xq[b * top_in_dim + j] = qp.quantize_u8(z);
             }
+        }
+        if let (Some(p), Some(t0)) = (probe, t0) {
+            p.span(Stage::Requantize, 0, t0);
         }
         let mut width = top_in_dim;
         let nb = self.bottom.len();
@@ -418,12 +431,17 @@ impl DlrmModel {
             feats[b * groups * d..b * groups * d + d]
                 .copy_from_slice(&scratch.bottom_f[b * d..(b + 1) * d]);
         }
+        let probe = self.obs.probe();
+        let t0 = probe.map(|_| Instant::now());
         let eb = stage.run(
             self,
             requests,
             &mut scratch.feats[..batch * groups * d],
             &mut scratch.eb,
         );
+        if let (Some(p), Some(t0)) = (probe, t0) {
+            p.span(Stage::EbGather, 0, t0);
+        }
         report.eb_bags_flagged += eb.flagged;
         report.eb_bags_recomputed += eb.recomputed;
         report.eb_bags_unrecovered += eb.unrecovered;
@@ -433,6 +451,8 @@ impl DlrmModel {
 
         // 4. Pairwise interactions + concat with bottom output.
         let pairs = crate::dlrm::interaction::interaction_dim(groups);
+        let probe = self.obs.probe();
+        let t0 = probe.map(|_| Instant::now());
         pairwise_interaction_into(
             &scratch.feats[..batch * groups * d],
             batch,
@@ -440,6 +460,9 @@ impl DlrmModel {
             d,
             grow(&mut scratch.inter, batch * pairs),
         );
+        if let (Some(p), Some(t0)) = (probe, t0) {
+            p.span(Stage::Interaction, 0, t0);
+        }
         let top_in_dim = d + pairs;
         debug_assert_eq!(top_in_dim, self.cfg.top_input_dim());
         let top_in = grow(&mut scratch.top_in, batch * top_in_dim);
@@ -474,7 +497,8 @@ impl DlrmModel {
             &self.events,
             SiteId::Gemm(site as u32),
             self.policy.gemm_telem(site),
-        );
+        )
+        .with_obs(&self.obs);
         layer.forward_policied(x, m, x_qparams, mode, ctx, gemm, out)
     }
 
@@ -501,16 +525,38 @@ impl DlrmModel {
             }
             let (telem, check, bound_scale) = self.policy.eb_bag_policy(t);
             if !check {
+                let probe = self.obs.probe();
+                let t0 = probe.map(|_| Instant::now());
                 bag_sum_8(table, indices, None, true, out);
+                if let (Some(p), Some(t0)) = (probe, t0) {
+                    p.measured().note_eb_unchecked(t, t0.elapsed().as_nanos() as u64);
+                }
                 if let Some(tl) = telem {
                     tl.record(1, 0);
                 }
                 continue;
             }
+            let probe = self.obs.probe();
+            if let Some(p) = probe {
+                // Calibration: time one unchecked gather of the same bag
+                // so the checked/unchecked cost ratio is measured under
+                // `Full` too (where no bag otherwise runs unchecked).
+                // The checked gather below overwrites `out`, so served
+                // bytes stay bit-identical.
+                let t0 = Instant::now();
+                bag_sum_8(table, indices, None, true, out);
+                p.measured().note_eb_unchecked(t, t0.elapsed().as_nanos() as u64);
+            }
             // Fused gather+reduce+verify: same random-access streams
             // as the unprotected bag (abft::eb §Perf).
+            let t0 = probe.map(|_| Instant::now());
             let check0 =
                 fused.bag_sum_checked_scaled_ex(table, indices, None, true, bound_scale, out);
+            if let (Some(p), Some(t0)) = (probe, t0) {
+                let ns = t0.elapsed().as_nanos() as u64;
+                p.measured().note_eb_checked(t, ns);
+                p.span_ns(Stage::EbBagChecked, t as u32, ns);
+            }
             if check0.flagged() {
                 flags.flagged += 1;
                 // Escalation signal: fed through the site's own handle,

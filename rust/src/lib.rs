@@ -20,6 +20,9 @@
 //!   replica quarantine, failover, and checksum-verified repair.
 //! * [`policy`] — adaptive detection control plane: per-site detection
 //!   modes, telemetry, and the SLO-aware escalation controller.
+//! * [`obs`] — observability plane: sampled hot-path span profiler,
+//!   live measured detection-overhead accounting feeding the policy
+//!   controller, Prometheus exposition.
 //! * [`coordinator`] — serving: batching, ABFT verification,
 //!   recompute-on-detect, metrics.
 //! * [`runtime`] — PJRT loader for the jax/Pallas-lowered model artifacts.
@@ -35,6 +38,7 @@ pub mod dlrm;
 pub mod embedding;
 pub mod fault;
 pub mod gemm;
+pub mod obs;
 pub mod policy;
 pub mod quant;
 pub mod runtime;

@@ -59,6 +59,8 @@ fn print_help() {
                         --chaos-weight-p 0 --chaos-table-p 0 --scrub-stride 0\n\
                         --policy-budget 0 --policy-tick-ms 50 --policy-bound-only false\n\
                         --policy-state policy.state  (controller warm-start file)\n\
+                        --policy-pin-costs false  (pin static unit-cost priors)\n\
+                        --obs-sample 0  (span profiler: 0 off, 1 all, n = 1-in-n)\n\
            bench        --which fig5|fig6|table2|table3|analysis|ablations|eb-fused|all\n\
                         [--quick true] [--scale N] [--runs N] [--threads N]\n\
            campaign     --op gemm|eb [--runs N] [--rows N] [--dim N]\n\
@@ -133,6 +135,9 @@ fn serve(cli: &Cli) -> Result<()> {
             allow_bound_only: policy_bound_only,
             scrub_budget_base: cli.flag("policy-scrub-base", 256usize)?,
             tick: Duration::from_millis(policy_tick_ms.max(1)),
+            // Pin the static UnitCosts priors (reproducible runs);
+            // default is to let warm measured overheads replace them.
+            pin_unit_costs: cli.flag("policy-pin-costs", false)?,
             ..Default::default()
         };
         if scrub_stride == 0 {
@@ -172,6 +177,14 @@ fn serve(cli: &Cli) -> Result<()> {
         loops: cli.flag("batch-loops", 0usize)?,
     };
     println!("batch loops: {}", policy.effective_loops());
+    // Span profiler sampling: 0 = off (default; probes cost one relaxed
+    // load), 1 = every pass, n = 1-in-n. Runtime-settable knob; the
+    // `trace`/`prom` server ops expose what it captures.
+    let obs_sample: u32 = cli.flag("obs-sample", 0u32)?;
+    if obs_sample > 0 {
+        engine.obs().set_sampling(obs_sample);
+        println!("span profiler on: sampling 1-in-{obs_sample}");
+    }
     cli.reject_unknown()?;
     let engine = Arc::new(engine);
     let server = Server::start(&addr, Arc::clone(&engine), policy)?;

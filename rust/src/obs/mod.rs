@@ -1,0 +1,31 @@
+//! Observability plane: hot-path span profiler, live detection-overhead
+//! accounting, and Prometheus exposition.
+//!
+//! The paper's claims are *overhead* claims (GEMM detection < 20%,
+//! EmbeddingBag < 26%); this module is how the system measures its own
+//! detection cost instead of assuming it:
+//!
+//! - [`profiler`] — thread-local, zero-steady-state-alloc span timers
+//!   over every pipeline stage (parse, queue-wait, EB gather,
+//!   interaction, per-layer GEMM, *verify as its own span*, requantize,
+//!   and each recovery-ladder rung), 1-in-n sampled, aggregated into
+//!   lock-free per-stage log-linear histograms.
+//! - [`overhead`] — per-site EWMAs of measured verify-cost ÷
+//!   operator-cost ([`MeasuredUnitCosts`]) consumed by the policy
+//!   controller in place of the static `UnitCosts` prior, plus the
+//!   scrubber's measured self-heal cost ([`HealCost`]).
+//! - [`hist`] — the shared log-linear histogram (4 linear sub-buckets
+//!   per octave, interpolated quantiles) that also fixes the serving
+//!   latency histogram's log2 p99 coarseness.
+//! - [`prom`] — Prometheus text rendering of the whole metrics
+//!   snapshot for the server's `{"op":"prom"}`.
+
+pub mod hist;
+pub mod overhead;
+pub mod profiler;
+pub mod prom;
+
+pub use hist::{LogLinHist, NUM_BUCKETS, SUB_BUCKETS};
+pub use overhead::{HealCost, MeasuredUnitCosts, DEFAULT_HEAL_COST_ROWS, MIN_SAMPLES};
+pub use profiler::{ObsCore, ObsHandle, Probe, Stage, STAGES, STAGE_COUNT};
+pub use prom::render_prometheus;

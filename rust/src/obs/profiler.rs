@@ -1,0 +1,525 @@
+//! Hot-path span profiler: thread-local, zero-steady-state-alloc span
+//! timers over every pipeline stage.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Disabled is a branch.** Every instrumentation point starts with
+//!    [`ObsHandle::probe`]: detached handles return `None` on one
+//!    branch; attached handles do one relaxed load of the sampling
+//!    knob. No `Instant::now()` is taken unless the probe fired.
+//! 2. **Zero steady-state allocation.** Span records are single packed
+//!    `u64`s written with relaxed stores into pre-sized per-lane rings
+//!    ([`OBS_LANES`] cache-line-padded lanes, threads assigned
+//!    round-robin like the policy telemetry); per-stage histograms are
+//!    fixed atomic arrays. Nothing on the record path touches the heap.
+//! 3. **1-in-n sampling.** `sample_n == 0` disables capture, `1`
+//!    captures everything, `n` captures exactly every n-th probe per
+//!    lane (a per-lane counter, so single-threaded capture is exact —
+//!    tested). Rare fault-path spans (recovery rungs, repairs) use
+//!    [`ObsHandle::probe_rare`], which bypasses the 1-in-n gate — a
+//!    once-per-outage event would otherwise almost never be sampled.
+//!
+//! A span record packs `stage (6 bits) | site (14 bits) | dur_ns
+//! (44 bits)` into one `u64` (stage stored +1 so an empty slot is 0),
+//! so readers never see a torn record — no seqlock needed.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+use super::hist::LogLinHist;
+use super::overhead::{HealCost, MeasuredUnitCosts};
+
+/// Pipeline stages a span can cover. One histogram per stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    /// Request line → `ScoreRequest` (server fast path).
+    Parse = 0,
+    /// Time a request sat in the batcher queue before being drained.
+    QueueWait,
+    /// Whole EmbeddingBag stage for one batch (local or sharded).
+    EbGather,
+    /// One fused checked bag gather (detection cost calibration).
+    EbBagChecked,
+    /// Pairwise feature interaction.
+    Interaction,
+    /// One MLP layer's GEMM + requantize epilogue (site = layer).
+    MlpLayer,
+    /// Detection verify, distinct from the operator it protects.
+    Verify,
+    /// Top-input standardize + requantize between EB and top MLP.
+    Requantize,
+    /// Recovery ladder rung: algebraic in-place correction.
+    CorrectInPlace,
+    /// Recovery ladder rung: recompute one unit.
+    RecomputeUnit,
+    /// Recovery ladder rung: retry a batch through detection.
+    RetryBatch,
+    /// Recovery ladder rung: shard-batch failover re-serve lap.
+    FailoverReplica,
+    /// Recovery ladder rung: background quarantine + verified repair.
+    QuarantineRepair,
+}
+
+pub const STAGE_COUNT: usize = 13;
+
+pub const STAGES: [Stage; STAGE_COUNT] = [
+    Stage::Parse,
+    Stage::QueueWait,
+    Stage::EbGather,
+    Stage::EbBagChecked,
+    Stage::Interaction,
+    Stage::MlpLayer,
+    Stage::Verify,
+    Stage::Requantize,
+    Stage::CorrectInPlace,
+    Stage::RecomputeUnit,
+    Stage::RetryBatch,
+    Stage::FailoverReplica,
+    Stage::QuarantineRepair,
+];
+
+impl Stage {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Parse => "parse",
+            Stage::QueueWait => "queue_wait",
+            Stage::EbGather => "eb_gather",
+            Stage::EbBagChecked => "eb_bag_checked",
+            Stage::Interaction => "interaction",
+            Stage::MlpLayer => "mlp_layer",
+            Stage::Verify => "verify",
+            Stage::Requantize => "requantize",
+            Stage::CorrectInPlace => "correct_in_place",
+            Stage::RecomputeUnit => "recompute_unit",
+            Stage::RetryBatch => "retry_batch",
+            Stage::FailoverReplica => "failover_replica",
+            Stage::QuarantineRepair => "quarantine_repair",
+        }
+    }
+
+    fn from_index(i: usize) -> Option<Stage> {
+        STAGES.get(i).copied()
+    }
+}
+
+/// Worker lanes for ring capture (same shape as the policy telemetry).
+pub const OBS_LANES: usize = 16;
+
+/// Span records retained per lane.
+pub const RING_PER_LANE: usize = 256;
+
+const STAGE_BITS: u32 = 6;
+const SITE_BITS: u32 = 14;
+const SITE_MASK: u64 = (1 << SITE_BITS) - 1;
+const DUR_MASK: u64 = (1 << (64 - STAGE_BITS - SITE_BITS)) - 1;
+
+#[inline]
+fn pack(stage: Stage, site: u32, dur_ns: u64) -> u64 {
+    (stage as u64 + 1)
+        | ((site as u64).min(SITE_MASK) << STAGE_BITS)
+        | (dur_ns.min(DUR_MASK) << (STAGE_BITS + SITE_BITS))
+}
+
+fn unpack(rec: u64) -> Option<(Stage, u32, u64)> {
+    let tag = rec & ((1 << STAGE_BITS) - 1);
+    if tag == 0 {
+        return None;
+    }
+    let stage = Stage::from_index(tag as usize - 1)?;
+    let site = ((rec >> STAGE_BITS) & SITE_MASK) as u32;
+    let dur_ns = rec >> (STAGE_BITS + SITE_BITS);
+    Some((stage, site, dur_ns))
+}
+
+/// One worker lane: a head counter, the 1-in-n sampling phase, and a
+/// ring of packed span records. Cache-line aligned so lanes don't
+/// false-share.
+#[repr(align(64))]
+struct Lane {
+    head: AtomicU64,
+    phase: AtomicU64,
+    ring: [AtomicU64; RING_PER_LANE],
+}
+
+impl Lane {
+    fn new() -> Self {
+        Self {
+            head: AtomicU64::new(0),
+            phase: AtomicU64::new(0),
+            ring: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+static NEXT_LANE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static OBS_LANE: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+#[inline]
+fn lane_id() -> usize {
+    OBS_LANE.with(|c| {
+        let v = c.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = NEXT_LANE.fetch_add(1, Ordering::Relaxed) % OBS_LANES;
+        c.set(v);
+        v
+    })
+}
+
+/// Shared profiler state: sampling knob, per-stage histograms, capture
+/// rings, and the measured-cost accumulators.
+pub struct ObsCore {
+    sample_n: AtomicU32,
+    stages: [LogLinHist; STAGE_COUNT],
+    lanes: Box<[Lane]>,
+    measured: Arc<MeasuredUnitCosts>,
+    heal: HealCost,
+}
+
+impl ObsCore {
+    pub fn new(gemm_sites: usize, eb_sites: usize, sample_n: u32) -> Self {
+        Self {
+            sample_n: AtomicU32::new(sample_n),
+            stages: std::array::from_fn(|_| LogLinHist::new()),
+            lanes: (0..OBS_LANES).map(|_| Lane::new()).collect(),
+            measured: Arc::new(MeasuredUnitCosts::new(gemm_sites, eb_sites)),
+            heal: HealCost::new(),
+        }
+    }
+
+    #[inline]
+    fn record(&self, stage: Stage, site: u32, dur_ns: u64) {
+        self.stages[stage as usize].record(dur_ns);
+        let lane = &self.lanes[lane_id()];
+        let h = lane.head.fetch_add(1, Ordering::Relaxed);
+        lane.ring[(h % RING_PER_LANE as u64) as usize]
+            .store(pack(stage, site, dur_ns), Ordering::Relaxed);
+    }
+
+    /// 1-in-n gate; `None` when this probe is not sampled.
+    #[inline]
+    fn gate(&self) -> Option<Probe<'_>> {
+        let n = self.sample_n.load(Ordering::Relaxed);
+        if n == 0 {
+            return None;
+        }
+        if n > 1 {
+            let lane = &self.lanes[lane_id()];
+            let prev = lane.phase.fetch_add(1, Ordering::Relaxed);
+            if prev % n as u64 != 0 {
+                return None;
+            }
+        }
+        Some(Probe { core: self })
+    }
+
+    pub fn per_stage_hist(&self, stage: Stage) -> &LogLinHist {
+        &self.stages[stage as usize]
+    }
+}
+
+/// An armed sampling decision. Holding one means "this pass is being
+/// profiled" — take timestamps and report spans through it.
+#[derive(Clone, Copy)]
+pub struct Probe<'a> {
+    core: &'a ObsCore,
+}
+
+impl Probe<'_> {
+    /// Record a span that started at `t0` and ends now.
+    #[inline]
+    pub fn span(&self, stage: Stage, site: u32, t0: Instant) {
+        self.span_ns(stage, site, t0.elapsed().as_nanos() as u64);
+    }
+
+    /// Record a span with an already-measured duration.
+    #[inline]
+    pub fn span_ns(&self, stage: Stage, site: u32, dur_ns: u64) {
+        self.core.record(stage, site, dur_ns);
+    }
+
+    /// The measured-cost accumulators, for feeding overhead EWMAs from
+    /// the same timings the spans captured.
+    #[inline]
+    pub fn measured(&self) -> &MeasuredUnitCosts {
+        &self.core.measured
+    }
+}
+
+/// Cloneable handle to the profiler; `detached()` is a permanent no-op
+/// whose probe path is a single branch. Mirrors `EventSink`.
+#[derive(Clone)]
+pub struct ObsHandle(Option<Arc<ObsCore>>);
+
+static DETACHED_OBS: ObsHandle = ObsHandle::detached();
+
+impl ObsHandle {
+    pub const fn detached() -> Self {
+        ObsHandle(None)
+    }
+
+    /// A `&'static` detached handle for contexts that hold a borrow.
+    pub fn detached_ref() -> &'static ObsHandle {
+        &DETACHED_OBS
+    }
+
+    /// Create an attached profiler sized for the model's detection
+    /// sites. `sample_n = 0` starts disabled (capture off, zero cost
+    /// beyond one relaxed load per probe point).
+    pub fn attached(gemm_sites: usize, eb_sites: usize, sample_n: u32) -> Self {
+        ObsHandle(Some(Arc::new(ObsCore::new(gemm_sites, eb_sites, sample_n))))
+    }
+
+    pub fn is_attached(&self) -> bool {
+        self.0.is_some()
+    }
+
+    pub fn core(&self) -> Option<&ObsCore> {
+        self.0.as_deref()
+    }
+
+    /// Set the sampling knob: 0 = off, 1 = every pass, n = 1-in-n.
+    pub fn set_sampling(&self, n: u32) {
+        if let Some(core) = &self.0 {
+            core.sample_n.store(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn sampling(&self) -> u32 {
+        self.0
+            .as_ref()
+            .map_or(0, |c| c.sample_n.load(Ordering::Relaxed))
+    }
+
+    /// Sampled probe for steady-state stages. `None` = not profiling
+    /// this pass; the caller takes no timestamps.
+    #[inline]
+    pub fn probe(&self) -> Option<Probe<'_>> {
+        match &self.0 {
+            Some(core) => core.gate(),
+            None => None,
+        }
+    }
+
+    /// Probe for rare fault-path spans (recovery rungs, repairs):
+    /// bypasses the 1-in-n gate but still respects off (`sample_n == 0`).
+    #[inline]
+    pub fn probe_rare(&self) -> Option<Probe<'_>> {
+        match &self.0 {
+            Some(core) if core.sample_n.load(Ordering::Relaxed) != 0 => {
+                Some(Probe { core })
+            }
+            _ => None,
+        }
+    }
+
+    /// Measured-cost accumulators (shared with the policy controller).
+    pub fn measured(&self) -> Option<Arc<MeasuredUnitCosts>> {
+        self.0.as_ref().map(|c| Arc::clone(&c.measured))
+    }
+
+    /// Record a scrub scan segment for heal-cost calibration.
+    pub fn note_scan(&self, rows: usize, ns: u64) {
+        if let Some(core) = &self.0 {
+            core.heal.note_scan(rows, ns);
+        }
+    }
+
+    /// Record one self-heal duration for heal-cost calibration.
+    pub fn note_heal(&self, ns: u64) {
+        if let Some(core) = &self.0 {
+            core.heal.note_heal(ns);
+        }
+    }
+
+    /// Budget charge for one self-healed slot, in scan-row equivalents
+    /// (default constant until measured; see [`HealCost`]).
+    pub fn heal_rows_equiv(&self) -> usize {
+        match &self.0 {
+            Some(core) => core.heal.rows_equiv(),
+            None => super::overhead::DEFAULT_HEAL_COST_ROWS,
+        }
+    }
+
+    /// Per-stage histogram block for the metrics snapshot: count,
+    /// total, and interpolated p50/p99 per stage (µs).
+    pub fn stages_json(&self) -> Json {
+        let mut arr = Vec::new();
+        if let Some(core) = &self.0 {
+            for stage in STAGES {
+                let h = core.per_stage_hist(stage);
+                let count = h.count();
+                if count == 0 {
+                    continue;
+                }
+                arr.push(Json::obj(vec![
+                    ("stage", Json::Str(stage.as_str().to_string())),
+                    ("count", Json::Num(count as f64)),
+                    ("total_us", Json::Num(h.sum() as f64 / 1e3)),
+                    ("p50_us", Json::Num(h.quantile(0.5) as f64 / 1e3)),
+                    ("p99_us", Json::Num(h.quantile(0.99) as f64 / 1e3)),
+                ]));
+            }
+        }
+        Json::obj(vec![
+            ("sample_1_in", Json::Num(self.sampling() as f64)),
+            ("stages", Json::Arr(arr)),
+        ])
+    }
+
+    /// Recent sampled spans (newest-ish; per-lane order is exact, lane
+    /// interleaving is not) plus the per-stage quantile block — the
+    /// payload of the server's `{"op":"trace"}`.
+    pub fn trace_json(&self, max: usize) -> Json {
+        let mut spans = Vec::new();
+        if let Some(core) = &self.0 {
+            'outer: for lane in core.lanes.iter() {
+                let head = lane.head.load(Ordering::Relaxed);
+                let resident = head.min(RING_PER_LANE as u64);
+                // Oldest resident record first within the lane.
+                for i in 0..resident {
+                    let slot = ((head - resident + i) % RING_PER_LANE as u64) as usize;
+                    let rec = lane.ring[slot].load(Ordering::Relaxed);
+                    if let Some((stage, site, dur_ns)) = unpack(rec) {
+                        spans.push(Json::obj(vec![
+                            ("stage", Json::Str(stage.as_str().to_string())),
+                            ("site", Json::Num(site as f64)),
+                            ("dur_us", Json::Num(dur_ns as f64 / 1e3)),
+                        ]));
+                        if spans.len() >= max {
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+        }
+        Json::obj(vec![
+            ("spans", Json::Arr(spans)),
+            ("stages", self.stages_json()),
+        ])
+    }
+}
+
+impl Default for ObsHandle {
+    fn default() -> Self {
+        Self::detached()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detached_probe_is_none_and_all_ops_are_noops() {
+        let h = ObsHandle::detached();
+        assert!(h.probe().is_none());
+        assert!(h.probe_rare().is_none());
+        h.set_sampling(1);
+        assert_eq!(h.sampling(), 0);
+        h.note_heal(100);
+        assert_eq!(
+            h.heal_rows_equiv(),
+            super::super::overhead::DEFAULT_HEAL_COST_ROWS
+        );
+        assert!(h.measured().is_none());
+    }
+
+    #[test]
+    fn pack_unpack_round_trips_and_zero_is_empty() {
+        assert!(unpack(0).is_none());
+        for (stage, site, ns) in [
+            (Stage::Parse, 0u32, 0u64),
+            (Stage::Verify, 5, 123_456),
+            (Stage::QuarantineRepair, 16_000, (1 << 44) - 1),
+        ] {
+            let (s2, site2, ns2) = unpack(pack(stage, site, ns)).unwrap();
+            assert_eq!(s2, stage);
+            assert_eq!(site2, site.min(SITE_MASK as u32));
+            assert_eq!(ns2, ns);
+        }
+        // Durations saturate rather than corrupt the stage tag.
+        let (s, _, ns) = unpack(pack(Stage::Parse, 1, u64::MAX)).unwrap();
+        assert_eq!(s, Stage::Parse);
+        assert_eq!(ns, DUR_MASK);
+    }
+
+    #[test]
+    fn sampled_capture_is_exactly_one_in_n_per_lane() {
+        let core = ObsCore::new(4, 2, 4);
+        let mut fired = 0;
+        for _ in 0..64 {
+            if let Some(p) = core.gate() {
+                p.span_ns(Stage::MlpLayer, 0, 1000);
+                fired += 1;
+            }
+        }
+        assert_eq!(fired, 16, "1-in-4 over 64 probes must fire exactly 16");
+        assert_eq!(core.per_stage_hist(Stage::MlpLayer).count(), 16);
+    }
+
+    #[test]
+    fn sampling_zero_disables_and_one_captures_all() {
+        let h = ObsHandle::attached(2, 1, 0);
+        assert!(h.probe().is_none());
+        assert!(h.probe_rare().is_none());
+        h.set_sampling(1);
+        for _ in 0..10 {
+            let p = h.probe().expect("always-on probe");
+            p.span_ns(Stage::Parse, 0, 500);
+        }
+        assert!(h.probe_rare().is_some());
+        let core = h.core().unwrap();
+        assert_eq!(core.per_stage_hist(Stage::Parse).count(), 10);
+    }
+
+    #[test]
+    fn trace_json_surfaces_recent_spans_and_stage_quantiles() {
+        let h = ObsHandle::attached(2, 1, 1);
+        let p = h.probe().unwrap();
+        p.span_ns(Stage::Verify, 3, 2_000);
+        p.span_ns(Stage::MlpLayer, 3, 10_000);
+        let doc = h.trace_json(100);
+        let spans = doc.get("spans").and_then(Json::as_arr).unwrap();
+        assert_eq!(spans.len(), 2);
+        let stages = doc
+            .path(&["stages", "stages"])
+            .and_then(Json::as_arr)
+            .unwrap();
+        assert!(stages
+            .iter()
+            .any(|s| s.get("stage").and_then(Json::as_str) == Some("verify")));
+        // max truncates.
+        let doc2 = h.trace_json(1);
+        assert_eq!(doc2.get("spans").and_then(Json::as_arr).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn ring_overwrites_but_histograms_keep_lifetime_counts() {
+        let h = ObsHandle::attached(1, 1, 1);
+        let p = h.probe().unwrap();
+        for i in 0..(RING_PER_LANE as u64 + 50) {
+            p.span_ns(Stage::Parse, 0, i);
+        }
+        let resident = h
+            .trace_json(usize::MAX)
+            .get("spans")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .len();
+        assert!(resident <= OBS_LANES * RING_PER_LANE);
+        assert_eq!(
+            h.core().unwrap().per_stage_hist(Stage::Parse).count(),
+            RING_PER_LANE as u64 + 50
+        );
+    }
+}

@@ -1,0 +1,193 @@
+//! Prometheus text-format rendering of the metrics snapshot.
+//!
+//! One generic walker over the snapshot [`Json`] tree, so every
+//! existing counter, histogram quantile, policy site, shard health
+//! block, journal aggregate — and anything a future PR adds to the
+//! snapshot — shows up in a scrape without a hand-maintained mapping:
+//!
+//! - object keys extend the metric name (`policy.scrub_budget` →
+//!   `dlrm_policy_scrub_budget`);
+//! - array elements become labels: an element object is labeled by its
+//!   `site`/`stage`/`id`/`op` field when present, else by index, and
+//!   nested arrays accumulate labels;
+//! - numbers and booleans (0/1) emit sample lines; strings and nulls
+//!   are identifiers, not samples, and are skipped.
+
+use crate::util::json::Json;
+
+/// Metric-name prefix for every emitted sample.
+pub const PROM_PREFIX: &str = "dlrm";
+
+/// Keys that identify an array element and become its label instead of
+/// a bare index.
+const LABEL_KEYS: [&str; 4] = ["site", "stage", "id", "op"];
+
+/// Render a snapshot document as Prometheus text format.
+pub fn render_prometheus(root: &Json) -> String {
+    let mut out = String::new();
+    walk(&mut out, &mut String::from(PROM_PREFIX), &mut Vec::new(), root);
+    out
+}
+
+fn walk(out: &mut String, name: &mut String, labels: &mut Vec<(String, String)>, j: &Json) {
+    match j {
+        Json::Num(x) => emit(out, name, labels, *x),
+        Json::Bool(b) => emit(out, name, labels, if *b { 1.0 } else { 0.0 }),
+        Json::Obj(map) => {
+            for (k, v) in map {
+                let len = name.len();
+                name.push('_');
+                push_sanitized(name, k);
+                walk(out, name, labels, v);
+                name.truncate(len);
+            }
+        }
+        Json::Arr(arr) => {
+            for (i, el) in arr.iter().enumerate() {
+                let label = element_label(el, i);
+                labels.push(label);
+                walk(out, name, labels, el);
+                labels.pop();
+            }
+        }
+        Json::Str(_) | Json::Null => {}
+    }
+}
+
+/// Label for one array element: its identifying field when it has one,
+/// else its index.
+fn element_label(el: &Json, index: usize) -> (String, String) {
+    if let Json::Obj(map) = el {
+        for key in LABEL_KEYS {
+            match map.get(key) {
+                Some(Json::Str(s)) => return (key.to_string(), s.clone()),
+                Some(Json::Num(x)) => return (key.to_string(), fmt_num(*x)),
+                _ => {}
+            }
+        }
+    }
+    ("idx".to_string(), index.to_string())
+}
+
+fn emit(out: &mut String, name: &str, labels: &[(String, String)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            for c in v.chars() {
+                match c {
+                    '"' | '\\' => {
+                        out.push('\\');
+                        out.push(c);
+                    }
+                    '\n' => out.push_str("\\n"),
+                    _ => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(&fmt_num(value));
+    out.push('\n');
+}
+
+fn fmt_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 9e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Append `key` with any character outside `[a-zA-Z0-9_:]` replaced by
+/// an underscore (Prometheus metric-name charset).
+fn push_sanitized(name: &mut String, key: &str) {
+    for c in key.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+            name.push(c);
+        } else {
+            name.push('_');
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_nested_objects_and_name_sanitizing() {
+        let doc = Json::obj(vec![
+            ("requests", Json::Num(42.0)),
+            ("ratio", Json::Num(0.25)),
+            ("enabled", Json::Bool(true)),
+            ("label", Json::Str("skipped".to_string())),
+            (
+                "policy",
+                Json::obj(vec![("scrub-budget", Json::Num(128.0))]),
+            ),
+        ]);
+        let text = render_prometheus(&doc);
+        assert!(text.contains("dlrm_requests 42\n"), "{text}");
+        assert!(text.contains("dlrm_ratio 0.25\n"), "{text}");
+        assert!(text.contains("dlrm_enabled 1\n"), "{text}");
+        assert!(text.contains("dlrm_policy_scrub_budget 128\n"), "{text}");
+        assert!(!text.contains("skipped"), "{text}");
+    }
+
+    #[test]
+    fn arrays_label_by_site_key_or_index() {
+        let doc = Json::obj(vec![(
+            "sites",
+            Json::Arr(vec![
+                Json::obj(vec![
+                    ("site", Json::Str("gemm/0".to_string())),
+                    ("overhead", Json::Num(0.12)),
+                ]),
+                Json::obj(vec![("overhead", Json::Num(0.2))]),
+            ]),
+        )]);
+        let text = render_prometheus(&doc);
+        assert!(
+            text.contains("dlrm_sites_overhead{site=\"gemm/0\"} 0.12\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("dlrm_sites_overhead{idx=\"1\"} 0.2\n"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn nested_arrays_accumulate_labels_and_numeric_ids_work() {
+        let doc = Json::obj(vec![(
+            "shards",
+            Json::Arr(vec![Json::obj(vec![
+                ("id", Json::Num(3.0)),
+                ("tables", Json::Arr(vec![Json::Num(7.0)])),
+            ])]),
+        )]);
+        let text = render_prometheus(&doc);
+        assert!(
+            text.contains("dlrm_shards_tables{id=\"3\",idx=\"0\"} 7\n"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let doc = Json::Arr(vec![Json::obj(vec![
+            ("site", Json::Str("a\"b\\c".to_string())),
+            ("v", Json::Num(1.0)),
+        ])]);
+        let text = render_prometheus(&doc);
+        assert!(text.contains("site=\"a\\\"b\\\\c\""), "{text}");
+    }
+}

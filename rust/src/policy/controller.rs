@@ -49,6 +49,7 @@
 //!
 //! [`Engine::scrub_tick`]: crate::coordinator::Engine::scrub_tick
 
+use crate::obs::MeasuredUnitCosts;
 use crate::policy::mode::DetectionMode;
 use crate::policy::telemetry::{PolicySites, SiteKind, SiteSnapshot};
 use std::collections::VecDeque;
@@ -67,8 +68,13 @@ pub struct PolicyConfig {
     pub overhead_budget: f64,
     /// Calibrated overhead fraction of `Full`-mode detection per site
     /// class (see [`UnitCosts`]; defaults follow the paper's measured
-    /// ranges).
+    /// ranges). With a profiler attached these are only the cold-start
+    /// prior — live per-site measurements override them once warm.
     pub unit_costs: UnitCosts,
+    /// Pin the budget math to the static `unit_costs` prior even when
+    /// live measured overheads are available (reproducible runs: the
+    /// controller's decisions stop depending on machine timing).
+    pub pin_unit_costs: bool,
     /// Ticks a site must stay at `Full` after a flag before decay may
     /// begin.
     pub cooldown_ticks: u32,
@@ -106,6 +112,7 @@ impl Default for PolicyConfig {
         Self {
             overhead_budget: 0.05,
             unit_costs: UnitCosts::default(),
+            pin_unit_costs: false,
             cooldown_ticks: 4,
             decay_patience: 2,
             persist_ticks: 3,
@@ -221,6 +228,9 @@ pub struct PolicyController {
     ctl: Vec<SiteCtl>,
     scrub_boosted: bool,
     ticks: u64,
+    /// Live measured per-site overheads from the span profiler; `None`
+    /// (or `pin_unit_costs`) keeps the static `unit_costs` prior.
+    measured: Option<Arc<MeasuredUnitCosts>>,
 }
 
 impl PolicyController {
@@ -234,7 +244,36 @@ impl PolicyController {
             ctl: (0..n).map(|_| SiteCtl::default()).collect(),
             scrub_boosted: false,
             ticks: 0,
+            measured: None,
         }
+    }
+
+    /// Attach the profiler's measured-cost accumulators: once a site is
+    /// warm, its budget math (`n*`, `overhead_est`) runs on the live
+    /// measured full-detection overhead instead of the static prior,
+    /// unless `cfg.pin_unit_costs` pins the prior.
+    pub fn attach_measured(&mut self, measured: Arc<MeasuredUnitCosts>) {
+        self.measured = Some(measured);
+    }
+
+    /// The live measured full-detection overhead of one flat site, when
+    /// the profiler has warmed it (reported in the policy block even
+    /// when `pin_unit_costs` keeps it out of the budget math, so drift
+    /// between prior and reality stays visible).
+    pub fn measured_overhead(&self, flat: usize) -> Option<f64> {
+        self.measured.as_ref()?.site_overhead(flat)
+    }
+
+    /// Full-detection overhead the budget math runs on for one flat
+    /// site: the measured value when available and not pinned, else the
+    /// calibrated class prior.
+    fn site_full_overhead(&self, flat: usize) -> f64 {
+        if !self.cfg.pin_unit_costs {
+            if let Some(m) = self.measured_overhead(flat) {
+                return m;
+            }
+        }
+        self.cfg.unit_costs.class_overhead(self.sites.kind(flat))
     }
 
     pub fn config(&self) -> &PolicyConfig {
@@ -254,7 +293,9 @@ impl PolicyController {
 
     /// Budget-target sample rate of one flat site, with its
     /// [`SitePriors`] weight folded into the budget share:
-    /// `n*_i = ceil(full_overhead / (budget · p_i / p̄))`.
+    /// `n*_i = ceil(full_overhead / (budget · p_i / p̄))` — where
+    /// `full_overhead` is the live measured value once the profiler has
+    /// warmed the site (unless pinned), else the class prior.
     pub fn target_rate_site(&self, flat: usize) -> u32 {
         let kind = self.sites.kind(flat);
         let idx = if flat < self.sites.gemm.len() {
@@ -262,7 +303,11 @@ impl PolicyController {
         } else {
             flat - self.sites.gemm.len()
         };
-        target_rate_weighted(&self.cfg, kind, self.cfg.site_priors.weight(kind, idx))
+        target_rate_for(
+            &self.cfg,
+            self.site_full_overhead(flat),
+            self.cfg.site_priors.weight(kind, idx),
+        )
     }
 
     /// The mode decay lands on for a site class once fully quiet (prior
@@ -398,10 +443,11 @@ impl PolicyController {
     }
 
     /// Estimated current detection-overhead fraction of one site: the
-    /// mode's relative cost × the class's calibrated full-mode overhead.
+    /// mode's relative cost × the site's full-mode overhead (measured
+    /// when warm and not pinned, else the calibrated class prior).
     pub fn overhead_estimate(&self, flat: usize) -> f64 {
         let mode = self.sites.site(flat).cell.load();
-        mode.relative_cost() * self.cfg.unit_costs.class_overhead(self.sites.kind(flat))
+        mode.relative_cost() * self.site_full_overhead(flat)
     }
 
     /// Serialize the controller's warm-start state — per-site mode,
@@ -620,7 +666,13 @@ fn field<T: std::str::FromStr>(s: Option<&str>) -> Result<T, String> {
 /// least checking the lattice allows, `Sampled(max_sample)` — still a
 /// 1-in-`max_sample` coverage floor.
 fn target_rate_weighted(cfg: &PolicyConfig, kind: SiteKind, weight: f64) -> u32 {
-    let ovh = cfg.unit_costs.class_overhead(kind);
+    target_rate_for(cfg, cfg.unit_costs.class_overhead(kind), weight)
+}
+
+/// [`target_rate_weighted`] with the full-mode overhead supplied by the
+/// caller — the class prior for class-level queries, the live measured
+/// value for per-site queries when the profiler has warmed the site.
+fn target_rate_for(cfg: &PolicyConfig, full_overhead: f64, weight: f64) -> u32 {
     if cfg.overhead_budget <= 0.0 {
         return 1;
     }
@@ -628,7 +680,7 @@ fn target_rate_weighted(cfg: &PolicyConfig, kind: SiteKind, weight: f64) -> u32 
     if budget <= 0.0 {
         return cfg.max_sample.max(1);
     }
-    let n = (ovh / budget).ceil() as u32;
+    let n = (full_overhead / budget).ceil() as u32;
     n.clamp(1, cfg.max_sample)
 }
 
@@ -812,6 +864,34 @@ mod tests {
         assert_eq!(c.target_rate(SiteKind::Gemm), 3);
         assert_eq!(c.target_rate(SiteKind::Eb), 4);
         assert_eq!(c.target_mode(SiteKind::Eb), DetectionMode::Sampled(4));
+    }
+
+    #[test]
+    fn measured_overhead_overrides_prior_unless_pinned() {
+        use crate::obs::MIN_SAMPLES;
+        let s = sites(1, 1);
+        let mut c = controller(&s, quick_cfg());
+        let m = Arc::new(MeasuredUnitCosts::new(1, 1));
+        c.attach_measured(Arc::clone(&m));
+        // Cold accumulators: everything still runs on the prior.
+        assert_eq!(c.measured_overhead(0), None);
+        assert_eq!(c.target_rate_site(0), 3); // ceil(0.12/0.05)
+        // Warm the GEMM site at a measured 0.30 overhead (2.5× prior).
+        for _ in 0..MIN_SAMPLES {
+            m.note_gemm(0, 1000, 300, 8, 8);
+        }
+        assert!((c.measured_overhead(0).unwrap() - 0.30).abs() < 1e-9);
+        assert_eq!(c.target_rate_site(0), 6, "ceil(0.30/0.05) from measured");
+        assert!((c.overhead_estimate(0) - 0.30).abs() < 1e-9, "Full mode estimate");
+        // Pinning restores the prior for budget math but keeps the
+        // measured value visible.
+        let mut pinned_cfg = quick_cfg();
+        pinned_cfg.pin_unit_costs = true;
+        let mut cp = controller(&s, pinned_cfg);
+        cp.attach_measured(m);
+        assert_eq!(cp.target_rate_site(0), 3);
+        assert!((cp.overhead_estimate(0) - 0.12).abs() < 1e-9);
+        assert!(cp.measured_overhead(0).is_some());
     }
 
     #[test]

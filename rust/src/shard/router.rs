@@ -121,6 +121,11 @@ impl ShardRouter {
         let mut staged: Vec<(PendingBag, usize)> = Vec::new();
         loop {
             laps += 1;
+            // A lap after the first is the FailoverReplica rung's
+            // re-serve: time it as a fault-path span (rare — bypasses
+            // the 1-in-n gate).
+            let rung_probe = if laps > 1 { model.obs.probe_rare() } else { None };
+            let t_lap = rung_probe.map(|_| std::time::Instant::now());
             let primary = store.serving_replica(shard.id);
             // One read guard per lap (not per bag); requests fan out on
             // the pool over disjoint scratch rows — nested scopes are
@@ -241,6 +246,9 @@ impl ShardRouter {
                         total.lock().unwrap().absorb(&local);
                     },
                 );
+            }
+            if let (Some(p), Some(t0)) = (rung_probe, t_lap) {
+                p.span(crate::obs::Stage::FailoverReplica, shard.id as u32, t0);
             }
             let lap_report = total.into_inner().unwrap();
             rep.absorb(&lap_report);

@@ -32,12 +32,14 @@ use crate::abft::{EbChecksum, FusedEbAbft, Scrubber};
 use crate::detect::{Detector, EventSink, Recovery, Resolution, Severity, SiteId, UnitRef};
 use crate::dlrm::DlrmModel;
 use crate::embedding::QuantTable8;
+use crate::obs::{ObsHandle, Stage};
 use crate::policy::PolicyHandle;
 use crate::shard::ShardPlan;
 use crate::util::json::Json;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock, RwLock, RwLockReadGuard};
+use std::time::Instant;
 
 /// Per-replica serving state (stored as an `AtomicU8`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -157,6 +159,10 @@ pub struct ShardStore {
     /// `Recovered(CorrectInPlace)` when the self-heal lands, else
     /// escalating to the quarantine-and-repair rung.
     events: EventSink,
+    /// Span profiler, inherited from the model like `events`: scrub
+    /// scans calibrate the heal-cost EWMA, self-heals and repairs time
+    /// their ladder rungs. Detached when the model's is.
+    obs: ObsHandle,
     /// Policy handle for routing scrub detections into the victim
     /// table's `eb/<table>` site telemetry (so proactively-found
     /// corruption drives the escalation controller exactly like a
@@ -212,6 +218,7 @@ impl ShardStore {
             shards,
             checksums: model.checksums.clone(),
             events: model.events.clone(),
+            obs: model.obs.clone(),
             policy,
             stats: ShardStats::default(),
             repair_q: Mutex::new(RepairQueue {
@@ -375,6 +382,9 @@ impl ShardStore {
         {
             return RepairOutcome::NotQuarantined;
         }
+        // Ladder-rung span (recorded on successful re-admission below).
+        let probe = self.obs.probe_rare();
+        let t_repair = probe.map(|_| Instant::now());
 
         // 1. Scan the target: which rows actually mismatch C_T? (The
         //    replica is out of serving while Repairing, so this read
@@ -483,6 +493,9 @@ impl ShardStore {
             sh.tables.iter().map(|_| Scrubber::new(self.scrub_stride)).collect();
         rep.state.store(HEALTHY, Ordering::Release);
         self.stats.repairs.fetch_add(1, Ordering::Relaxed);
+        if let (Some(p), Some(t0)) = (probe, t_repair) {
+            p.span(Stage::QuarantineRepair, shard as u32, t0);
+        }
         RepairOutcome::Repaired
     }
 
@@ -529,6 +542,11 @@ impl ShardStore {
     /// half-corrected row is ever served. Returns whether the row
     /// healed.
     fn try_self_heal(&self, shard: usize, replica: usize, slot: usize, table: usize, row: usize) -> bool {
+        // Fault-path span: rare enough to bypass the 1-in-n gate. A
+        // landed heal also feeds the heal-cost EWMA the budget-paced
+        // scrub charges from.
+        let probe = self.obs.probe_rare();
+        let t0 = probe.map(|_| Instant::now());
         let rep = &self.shards[shard].replicas[replica];
         let cs = &self.checksums[table];
         let mut guard = rep.data.write().unwrap();
@@ -539,6 +557,11 @@ impl ShardStore {
         let prev = t.data[row * t.d + j];
         t.data[row * t.d + j] = original;
         if cs.row_clean(t, row) {
+            if let (Some(p), Some(t0)) = (probe, t0) {
+                let ns = t0.elapsed().as_nanos() as u64;
+                p.span_ns(Stage::CorrectInPlace, table as u32, ns);
+                self.obs.note_heal(ns);
+            }
             true
         } else {
             t.data[row * t.d + j] = prev;
@@ -623,6 +646,15 @@ impl ShardStore {
     /// hits. Returns
     /// `(rows_scanned, hits)` with hits as `(shard, replica, table,
     /// row)`.
+    ///
+    /// # Heal-aware pacing
+    ///
+    /// A self-heal is not free: localize + rewrite + dual re-verify costs
+    /// a measured multiple of one scan row (the profiler's heal-cost
+    /// EWMA; [`crate::obs::DEFAULT_HEAL_COST_ROWS`] until measured). Each
+    /// landed heal is **charged against the same budget**, so a tick that
+    /// heals returns fewer scanned rows and the tick's total work — not
+    /// just its scanning — is what the controller's `scrub_budget` paces.
     pub fn scrub_tick_budget(&self, budget: usize) -> (usize, Vec<(usize, usize, usize, usize)>) {
         let mut hits = Vec::new();
         let segs: usize = self
@@ -633,10 +665,14 @@ impl ShardStore {
         if segs == 0 || budget == 0 {
             return (0, hits);
         }
+        // `scanned` is what this tick actually scanned (returned);
+        // `charged` additionally counts heal work in scan-row
+        // equivalents and is what the budget caps.
         let mut scanned = 0usize;
+        let mut charged = 0usize;
         let mut cursor = self.scrub_seg.lock().unwrap();
         let mut skipped = 0usize;
-        while scanned < budget && skipped < segs {
+        while charged < budget && skipped < segs {
             let seg = *cursor % segs;
             let (s, r, slot) = self.seg_coords(seg);
             let rep = &self.shards[s].replicas[r];
@@ -646,13 +682,15 @@ impl ShardStore {
                 continue;
             }
             let t = self.shards[s].tables[slot];
+            let probe = self.obs.probe();
+            let t_scan = probe.map(|_| Instant::now());
             let (report, deltas) = {
                 let data = rep.data.read().unwrap();
                 let mut scrub = rep.scrub.lock().unwrap();
                 let report = scrub[slot].scrub_step_rows(
                     &data.tables[slot],
                     &self.checksums[t],
-                    budget - scanned,
+                    budget - charged,
                 );
                 let deltas: Vec<i64> = report
                     .corrupted_rows
@@ -666,8 +704,14 @@ impl ShardStore {
                 skipped += 1;
                 continue;
             }
+            // Scan-cost calibration for the heal charge denominator.
+            if let (Some(_), Some(t0)) = (probe, t_scan) {
+                self.obs
+                    .note_scan(report.rows_scanned, t0.elapsed().as_nanos() as u64);
+            }
             skipped = 0;
             scanned += report.rows_scanned;
+            charged += report.rows_scanned;
             self.stats
                 .scrubbed_rows
                 .fetch_add(report.rows_scanned as u64, Ordering::Relaxed);
@@ -676,6 +720,7 @@ impl ShardStore {
                 self.stats.scrub_hits.fetch_add(1, Ordering::Relaxed);
                 let resolution = if self.try_self_heal(s, r, slot, t, row) {
                     self.stats.self_heals.fetch_add(1, Ordering::Relaxed);
+                    charged += self.obs.heal_rows_equiv();
                     Resolution::Recovered(Recovery::CorrectInPlace)
                 } else {
                     dirty = true;
@@ -1095,14 +1140,17 @@ mod tests {
             assert!(rows <= 25);
             assert!(rows > 0, "healthy segments remain, budget must be spent");
             scanned += rows;
-            hits.extend(h);
             ticks += 1;
-            if !hits.is_empty() {
+            if !h.is_empty() {
+                hits.extend(h);
                 break;
             }
+            // Exact pacing: every clean tick scans the full budget. (The
+            // hit tick may come in under it — the self-heal is charged
+            // against the same budget in scan-row equivalents.)
+            assert_eq!(rows, 25);
         }
-        // Exact pacing: every tick scanned the full 25 until the find.
-        assert_eq!(scanned, ticks * 25);
+        assert!(scanned >= (ticks - 1) * 25);
         assert_eq!(hits.len(), 1);
         let (s, r, t, _row) = hits[0];
         assert_eq!((s, r, t), (shard, 1, 2));
@@ -1115,6 +1163,22 @@ mod tests {
         assert_eq!(rows, 25);
         assert!(h.is_empty());
         assert_eq!(store.quarantined_replicas(), 0);
+    }
+
+    #[test]
+    fn self_heal_work_is_charged_against_the_scan_budget() {
+        // One shard, one replica, segment order 60/40/30 rows. The flip
+        // sits in table 0's first row, so a 70-row tick scans the whole
+        // first segment (60, wrapping), heals — which charges
+        // DEFAULT_HEAL_COST_ROWS against the remaining budget — and the
+        // second segment then only gets what is left: the tick returns
+        // 70 − heal_charge scanned rows.
+        let (_, store) = store(1, 1);
+        store.flip_table_byte(0, 0, 3, 0x01);
+        let (rows, hits) = store.scrub_tick_budget(70);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(store.stats.self_heals.load(Ordering::Relaxed), 1);
+        assert_eq!(rows, 70 - crate::obs::DEFAULT_HEAL_COST_ROWS);
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! Integration: the observability plane — span profiler wired through
+//! the serving pipeline, live measured-overhead accounting feeding the
+//! policy block, and the `trace` / `prom` / cursored-`events` server
+//! ops.
+//!
+//! The profiler's own mechanics (packing, 1-in-n exactness, ring wrap)
+//! are unit-tested in `obs::profiler`; this file checks the wiring:
+//! spans really cover the scoring pipeline, measured overheads really
+//! reach the controller's budget math, and the exposition ops really
+//! round-trip over TCP.
+
+use dlrm_abft::coordinator::{BatchPolicy, Client, Engine, ScoreRequest, Server};
+use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, DlrmRequest, Protection, TableConfig};
+use dlrm_abft::policy::PolicyConfig;
+use dlrm_abft::shard::ShardPlan;
+use dlrm_abft::util::json::Json;
+use dlrm_abft::util::rng::Pcg32;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn model(seed: u64) -> DlrmModel {
+    DlrmModel::random(DlrmConfig {
+        num_dense: 8,
+        embedding_dim: 16,
+        bottom_mlp: vec![32, 16],
+        top_mlp: vec![32],
+        tables: vec![
+            TableConfig { rows: 2_000, pooling: 8 },
+            TableConfig { rows: 1_000, pooling: 5 },
+        ],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed,
+    })
+}
+
+/// Engine-level batches (`Engine::score` takes `DlrmRequest`s).
+fn requests(model: &DlrmModel, n: usize, seed: u64) -> Vec<DlrmRequest> {
+    let mut rng = Pcg32::new(seed);
+    model.synth_requests(n, &mut rng)
+}
+
+/// Wire-level requests for the TCP round-trip test.
+fn score_requests(model: &DlrmModel, n: usize, seed: u64) -> Vec<ScoreRequest> {
+    requests(model, n, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| ScoreRequest { id: i as u64, dense: r.dense, sparse: r.sparse })
+        .collect()
+}
+
+/// Per-stage `total_us` from the engine's stage-histogram block.
+fn stage_totals(engine: &Engine) -> HashMap<String, f64> {
+    let doc = engine.obs().stages_json();
+    let mut out = HashMap::new();
+    if let Some(stages) = doc.get("stages").and_then(Json::as_arr) {
+        for s in stages {
+            let name = s.get("stage").and_then(Json::as_str).unwrap().to_string();
+            let total = s.get("total_us").and_then(Json::as_f64).unwrap();
+            out.insert(name, total);
+        }
+    }
+    out
+}
+
+/// The steady-state pipeline stages, all timed on the scoring thread
+/// over disjoint intervals — their span totals must bracket the wall
+/// time of a scoring loop. (`eb_bag_checked` nests inside `eb_gather`
+/// and would double-count; the rare recovery rungs never fire here.)
+const PIPELINE_STAGES: [&str; 5] =
+    ["eb_gather", "interaction", "mlp_layer", "verify", "requantize"];
+
+#[test]
+fn pipeline_spans_account_for_scoring_wall_time() {
+    let m = model(0x71);
+    let reqs = requests(&m, 8, 1);
+    let engine = Engine::new(m);
+    engine.obs().set_sampling(1);
+    let mut scores = vec![0f32; reqs.len()];
+    for _ in 0..2 {
+        let outcome = engine.score(&reqs, &mut scores);
+        assert!(!outcome.detected, "clean model must not detect");
+    }
+
+    let before = stage_totals(&engine);
+    let t0 = Instant::now();
+    for _ in 0..12 {
+        engine.score(&reqs, &mut scores);
+    }
+    let wall_us = t0.elapsed().as_nanos() as f64 / 1e3;
+    let after = stage_totals(&engine);
+
+    let mut sum_us = 0.0;
+    for stage in PIPELINE_STAGES {
+        let d = after.get(stage).copied().unwrap_or(0.0)
+            - before.get(stage).copied().unwrap_or(0.0);
+        assert!(d > 0.0, "stage {stage} recorded nothing under 1-in-1 sampling");
+        sum_us += d;
+    }
+    // Disjoint sub-intervals of the loop can't exceed its wall time
+    // (small slack for histogram rounding), and the five stages are the
+    // bulk of `score` — a loose floor catches spans measuring the wrong
+    // thing without making the test timing-sensitive.
+    assert!(
+        sum_us <= wall_us * 1.10,
+        "stage spans ({sum_us:.0}µs) exceed the scoring wall time ({wall_us:.0}µs)"
+    );
+    assert!(
+        sum_us >= wall_us * 0.15,
+        "stage spans ({sum_us:.0}µs) cover almost none of the scoring wall time ({wall_us:.0}µs)"
+    );
+}
+
+#[test]
+fn sampling_off_by_default_records_nothing() {
+    let m = model(0x72);
+    let reqs = requests(&m, 4, 2);
+    let engine = Engine::new(m);
+    assert_eq!(engine.obs().sampling(), 0, "profiling must default off");
+    let mut scores = vec![0f32; reqs.len()];
+    for _ in 0..3 {
+        engine.score(&reqs, &mut scores);
+    }
+    let doc = engine.obs().stages_json();
+    assert!(
+        doc.get("stages").and_then(Json::as_arr).unwrap().is_empty(),
+        "sampling 0 must capture no stage histograms"
+    );
+    let trace = engine.trace_json(16);
+    assert!(
+        trace.get("spans").and_then(Json::as_arr).unwrap().is_empty(),
+        "sampling 0 must capture no spans"
+    );
+}
+
+#[test]
+fn measured_overhead_reaches_the_policy_block_and_its_budget_math() {
+    let m = model(0x73);
+    let reqs = requests(&m, 8, 3);
+    let mut scores = vec![0f32; reqs.len()];
+
+    // Unpinned: after enough profiled batches every site is warm, and —
+    // with every site still at Full (no controller tick ran) — the
+    // estimated overhead IS the measured value: the budget math runs on
+    // live numbers, not the static class prior.
+    let engine = Engine::new(model(0x73)).with_policy(PolicyConfig::default());
+    engine.obs().set_sampling(1);
+    for _ in 0..6 {
+        engine.score(&reqs, &mut scores);
+    }
+    let snap = engine.metrics_snapshot();
+    let sites = snap.path(&["policy", "sites"]).and_then(Json::as_arr).unwrap();
+    assert!(!sites.is_empty());
+    for row in sites {
+        let label = row.get("site").and_then(Json::as_str).unwrap();
+        let measured = row
+            .get("overhead_measured")
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("site {label} still cold after 6 profiled batches"));
+        assert!(
+            (0.0..=10.0).contains(&measured),
+            "site {label}: measured overhead {measured} out of range"
+        );
+        assert_eq!(row.get("mode").and_then(Json::as_str), Some("full"));
+        let est = row.get("overhead_est").and_then(Json::as_f64).unwrap();
+        assert!(
+            (est - measured).abs() < 1e-12,
+            "site {label}: overhead_est {est} must equal the live measured {measured}"
+        );
+    }
+
+    // Pinned: the budget math stays on the static prior, but the
+    // measured value remains visible so prior/reality drift can be seen.
+    let pinned = Engine::new(model(0x73)).with_policy(PolicyConfig {
+        pin_unit_costs: true,
+        ..PolicyConfig::default()
+    });
+    pinned.obs().set_sampling(1);
+    for _ in 0..6 {
+        pinned.score(&reqs, &mut scores);
+    }
+    let snap = pinned.metrics_snapshot();
+    let cfg = PolicyConfig::default();
+    for row in snap.path(&["policy", "sites"]).and_then(Json::as_arr).unwrap() {
+        let label = row.get("site").and_then(Json::as_str).unwrap();
+        assert!(
+            row.get("overhead_measured").and_then(Json::as_f64).is_some(),
+            "site {label}: pinning must not hide the measured overhead"
+        );
+        let est = row.get("overhead_est").and_then(Json::as_f64).unwrap();
+        let prior = if label.starts_with("gemm/") {
+            cfg.unit_costs.gemm_full_overhead
+        } else {
+            cfg.unit_costs.eb_full_overhead
+        };
+        assert!(
+            (est - prior).abs() < 1e-12,
+            "pinned site {label} must budget on the static prior, got est {est}"
+        );
+    }
+}
+
+#[test]
+fn server_exposes_trace_prom_and_cursored_events() {
+    let m = model(0x74);
+    let reqs = score_requests(&m, 6, 4);
+    let engine = Arc::new(Engine::new(m));
+    engine.obs().set_sampling(1);
+    let server = Server::start(
+        "127.0.0.1:0",
+        Arc::clone(&engine),
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            max_queue: 64,
+            loops: 1,
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+    for req in &reqs {
+        let resp = client.score(req).unwrap();
+        assert_eq!(resp.id, req.id);
+    }
+
+    // trace: the profiled request path left spans, including the two
+    // server-side stages (request parse, batcher queue wait).
+    let trace = client.trace(128).unwrap();
+    assert!(!trace.get("spans").and_then(Json::as_arr).unwrap().is_empty());
+    let names: Vec<&str> = trace
+        .path(&["stages", "stages"])
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(|s| s.get("stage").and_then(Json::as_str))
+        .collect();
+    assert!(names.contains(&"parse"), "stages seen: {names:?}");
+    assert!(names.contains(&"queue_wait"), "stages seen: {names:?}");
+
+    // prom: the whole snapshot as text exposition, one round trip.
+    let text = client.prom().unwrap();
+    assert!(text.contains("dlrm_requests 6"), "{text}");
+    assert!(text.contains("dlrm_obs_sample_1_in 1"), "{text}");
+
+    // events cursor: clean traffic journals nothing, cursor sits at 0.
+    let ev = client.events_since(0).unwrap();
+    assert!(ev.get("events").and_then(Json::as_arr).unwrap().is_empty());
+    assert_eq!(ev.get("next_cursor").and_then(Json::as_usize), Some(0));
+    server.stop();
+}
+
+fn has_num(j: &Json) -> bool {
+    match j {
+        Json::Num(_) | Json::Bool(_) => true,
+        Json::Obj(m) => m.iter().any(|(_, v)| has_num(v)),
+        Json::Arr(a) => a.iter().any(has_num),
+        _ => false,
+    }
+}
+
+#[test]
+fn prom_text_covers_every_numeric_snapshot_block() {
+    let m = model(0x75);
+    let reqs = requests(&m, 8, 5);
+    let engine = Engine::new(model(0x75))
+        .with_shards(ShardPlan::hash_placement(2, 2, 2), 64)
+        .with_policy(PolicyConfig::default());
+    engine.obs().set_sampling(1);
+    let mut scores = vec![0f32; reqs.len()];
+    for _ in 0..3 {
+        engine.score(&reqs, &mut scores);
+    }
+    let snap = engine.metrics_snapshot();
+    let text = engine.prom_text();
+    let Json::Obj(map) = &snap else {
+        panic!("snapshot must be an object")
+    };
+    // The walker is generic: every snapshot block with a numeric leaf —
+    // counters, latency, events, obs, shards, policy — must surface
+    // under its own `dlrm_<block>` prefix.
+    for (key, val) in map {
+        if has_num(val) {
+            let prefix = format!("dlrm_{key}");
+            assert!(text.contains(&prefix), "snapshot block {key} missing from prom text");
+        }
+    }
+    // Per-site policy rows keep their identity as a label.
+    assert!(
+        text.contains("dlrm_policy_sites_overhead_est{site=\"gemm/0\"}"),
+        "{text}"
+    );
+}

@@ -127,6 +127,14 @@ fn engine_score_steady_state_is_allocation_free() {
     let sharded = Engine::new(tiny_model(0x21)).with_shards(ShardPlan::hash_placement(2, 2, 2), 64);
     steady_state_allocs(&sharded, 4, "sharded");
 
+    // Profiled: full-rate span sampling (1-in-1) exercises every probe,
+    // ring write, stage histogram record, and measured-cost EWMA update
+    // on the hot path — the span profiler records into pre-sized rings
+    // and packed atomics, so profiling must not break the invariant.
+    let profiled = Engine::new(tiny_model(0x21));
+    profiled.obs().set_sampling(1);
+    steady_state_allocs(&profiled, 4, "profiled");
+
     // Request parsing: the zero-alloc boundary extends to the socket.
     steady_state_parse_allocs();
 }
