@@ -1,0 +1,269 @@
+//! Kernel-tier perf harness for the tier-2 dispatch PR: emits
+//! `BENCH_PR8.json` so the bench trajectory stays machine-readable.
+//! Covers:
+//!
+//! * GEMM per tier — short-k DLRM shapes (k ∈ {64, 128, 256}) with
+//!   acc16-certifiable weights, single-thread GFLOP/s under each kernel
+//!   tier cap (scalar / avx2 / acc16 / avx512) plus the resolved tier
+//!   each cap actually dispatches on this host. The acceptance headline
+//!   is `speedup_acc16_vs_avx2` on the short-k rows (target ≥ 1.5×
+//!   where the tier is available).
+//! * Protected-GEMM overhead per tier — interleaved A/B samples
+//!   (plain exec vs ABFT exec + verify) against the paper's 20% budget.
+//! * Engine — end-to-end req/s with the default (highest) tier vs
+//!   capped at avx2, protection on.
+//!
+//! Env: `QUICK=1` shrinks iteration counts; `BENCH_OUT=path` overrides
+//! the output file. Run: `cargo bench --bench perf_kernel`.
+
+use dlrm_abft::abft::AbftGemm;
+use dlrm_abft::bench::harness::{measure, measure_pair, overhead_pct, BenchConfig};
+use dlrm_abft::coordinator::{Engine, ScoreRequest};
+use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
+use dlrm_abft::gemm::{
+    gemm_exec_into, gemm_exec_into_st, select_tier, set_kernel_tier_override, simd_active,
+    KernelTier, PackedB,
+};
+use dlrm_abft::util::json::Json;
+use dlrm_abft::util::rng::Pcg32;
+use std::sync::Arc;
+use std::time::Instant;
+
+const ALL_TIERS: [KernelTier; 4] = [
+    KernelTier::Scalar,
+    KernelTier::Avx2,
+    KernelTier::Acc16,
+    KernelTier::Avx512,
+];
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+/// Weights in [-8, 8] so every pack carries an acc16 saturation proof
+/// (worst pair 255·16 per window slot — certifiable at spill cadence 8)
+/// while still exercising signed arithmetic on every tier.
+fn small_weights(rng: &mut Pcg32, len: usize) -> Vec<i8> {
+    (0..len)
+        .map(|_| (rng.gen_range(0, 17) as i32 - 8) as i8)
+        .collect()
+}
+
+/// Short-k DLRM shapes: MLP layers after feature interaction sit in
+/// this k range, which is exactly where the acc16 tier is admissible.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 64, 256),
+    (1, 128, 512),
+    (16, 64, 256),
+    (16, 128, 256),
+    (16, 256, 512),
+    (64, 128, 512),
+    (64, 256, 512),
+];
+
+fn tier_section(cfg: &BenchConfig, rng: &mut Pcg32) -> Json {
+    let mut rows = Vec::new();
+    for &(m, k, n) in SHAPES {
+        let mut a = vec![0u8; m * k];
+        rng.fill_u8(&mut a);
+        let b = small_weights(rng, k * n);
+        let packed = PackedB::pack(&b, k, n);
+        assert!(
+            packed.acc16_proof().is_some(),
+            "bench weights must certify acc16 ({m},{k},{n})"
+        );
+        let mut c = vec![0i32; m * packed.n_total()];
+
+        let flops = 2.0 * (m * k * n) as f64;
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("m", num(m as f64)),
+            ("k", num(k as f64)),
+            ("n", num(n as f64)),
+        ];
+        let mut medians = [0.0f64; 4];
+        for (i, cap) in ALL_TIERS.iter().enumerate() {
+            set_kernel_tier_override(Some(*cap));
+            let resolved = select_tier(&packed);
+            let t = measure(cfg, || {}, || gemm_exec_into_st(&a, &packed, m, &mut c));
+            medians[i] = t.median();
+            match cap {
+                KernelTier::Scalar => {
+                    fields.push(("gflops_scalar", num(round3(flops / medians[i] / 1e9))))
+                }
+                KernelTier::Avx2 => {
+                    fields.push(("gflops_avx2", num(round3(flops / medians[i] / 1e9))))
+                }
+                KernelTier::Acc16 => {
+                    fields.push(("resolved_acc16", Json::Str(resolved.as_str().into())));
+                    fields.push(("gflops_acc16", num(round3(flops / medians[i] / 1e9))));
+                }
+                KernelTier::Avx512 => {
+                    fields.push(("resolved_avx512", Json::Str(resolved.as_str().into())));
+                    fields.push(("gflops_avx512", num(round3(flops / medians[i] / 1e9))));
+                }
+            }
+        }
+        set_kernel_tier_override(None);
+        fields.push(("speedup_acc16_vs_avx2", num(round3(medians[1] / medians[2]))));
+        fields.push((
+            "speedup_avx512_vs_avx2",
+            num(round3(medians[1] / medians[3])),
+        ));
+        rows.push(Json::obj(fields));
+    }
+    Json::Arr(rows)
+}
+
+fn overhead_section(cfg: &BenchConfig, rng: &mut Pcg32) -> Json {
+    // One representative short-k shape per the paper's serving regime.
+    let (m, k, n) = (16usize, 256usize, 512usize);
+    let mut a = vec![0u8; m * k];
+    rng.fill_u8(&mut a);
+    let b = small_weights(rng, k * n);
+    let packed = PackedB::pack(&b, k, n);
+    let abft = AbftGemm::new(&b, k, n);
+    let mut c = vec![0i32; m * packed.n_total()];
+    let mut c_abft = vec![0i32; m * abft.packed.n_total()];
+
+    let mut rows = Vec::new();
+    for cap in ALL_TIERS {
+        set_kernel_tier_override(Some(cap));
+        let resolved = select_tier(&abft.packed);
+        let (plain, protected) = measure_pair(
+            cfg,
+            || {},
+            || gemm_exec_into(&a, &packed, m, &mut c),
+            || {
+                let verdict = abft.exec_into(&a, m, &mut c_abft);
+                std::hint::black_box(verdict.clean());
+            },
+        );
+        let oh = overhead_pct(&plain, &protected);
+        rows.push(Json::obj(vec![
+            ("cap", Json::Str(cap.as_str().into())),
+            ("resolved", Json::Str(resolved.as_str().into())),
+            ("plain_us", num(round3(plain.median() * 1e6))),
+            ("protected_us", num(round3(protected.median() * 1e6))),
+            ("overhead_pct", num(round3(oh))),
+            ("within_20pct_budget", Json::Bool(oh < 20.0)),
+        ]));
+    }
+    set_kernel_tier_override(None);
+    Json::obj(vec![
+        ("m", num(m as f64)),
+        ("k", num(k as f64)),
+        ("n", num(n as f64)),
+        ("budget_pct", num(20.0)),
+        ("by_tier", Json::Arr(rows)),
+    ])
+}
+
+/// Short-k MLP stack so the acc16 tier is admissible end-to-end.
+fn engine_model() -> DlrmModel {
+    DlrmModel::random(DlrmConfig {
+        num_dense: 13,
+        embedding_dim: 64,
+        bottom_mlp: vec![128, 64],
+        top_mlp: vec![128],
+        tables: vec![TableConfig { rows: 50_000, pooling: 20 }; 4],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed: 0xE88,
+    })
+}
+
+fn engine_req_per_s(engine: &Arc<Engine>, iters: usize, batch: usize) -> f64 {
+    let reqs: Vec<ScoreRequest> = {
+        let model = engine.model.read().unwrap();
+        let mut rng = Pcg32::new(0x8000);
+        model
+            .synth_requests(batch, &mut rng)
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| ScoreRequest { id: i as u64, dense: r.dense, sparse: r.sparse })
+            .collect()
+    };
+    engine.process_batch(reqs.clone()); // warmup
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(engine.process_batch(reqs.clone()));
+    }
+    (iters * batch) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn engine_section(quick: bool) -> Json {
+    let iters = if quick { 4 } else { 20 };
+    let batch = 16;
+    let engine = Arc::new(Engine::new(engine_model()));
+
+    set_kernel_tier_override(None);
+    let best = engine_req_per_s(&engine, iters, batch);
+    set_kernel_tier_override(Some(KernelTier::Avx2));
+    let avx2 = engine_req_per_s(&engine, iters, batch);
+    set_kernel_tier_override(None);
+
+    Json::obj(vec![
+        ("batch", num(batch as f64)),
+        ("iters", num(iters as f64)),
+        ("best_tier_req_per_s", num(round3(best))),
+        ("avx2_cap_req_per_s", num(round3(avx2))),
+        ("speedup_best_vs_avx2", num(round3(best / avx2))),
+    ])
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick");
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_PR8.json".into());
+    let cfg = if quick {
+        BenchConfig { warmup_iters: 1, sample_iters: 3, inner_reps: 1 }
+    } else {
+        BenchConfig { warmup_iters: 3, sample_iters: 11, inner_reps: 1 }
+    };
+    let mut rng = Pcg32::new(0xC0FFEE);
+
+    // Which tier would the host dispatch with no cap? Probe on a small
+    // certified pack so acc16 eligibility is visible too.
+    let probe_b = small_weights(&mut rng, 64 * 32);
+    let probe = PackedB::pack(&probe_b, 64, 32);
+    set_kernel_tier_override(None);
+    let host_tier = select_tier(&probe);
+
+    eprintln!(
+        "perf_kernel: avx2={} host_tier={} quick={quick}",
+        simd_active(),
+        host_tier.as_str()
+    );
+    let tiers = tier_section(&cfg, &mut rng);
+    eprintln!("perf_kernel: tier grid done");
+    let overhead = overhead_section(&cfg, &mut rng);
+    eprintln!("perf_kernel: overhead done");
+    let engine = engine_section(quick);
+    eprintln!("perf_kernel: engine done");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_kernel_pr8".into())),
+        (
+            "host",
+            Json::obj(vec![
+                ("avx2", Json::Bool(simd_active())),
+                ("best_tier", Json::Str(host_tier.as_str().into())),
+                (
+                    "threads",
+                    num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0) as f64),
+                ),
+            ]),
+        ),
+        ("gemm_tiers", tiers),
+        ("protected_overhead", overhead),
+        ("engine", engine),
+    ]);
+    let text = format!("{doc}");
+    std::fs::write(&out_path, &text).expect("write bench output");
+    println!("{text}");
+    eprintln!("perf_kernel: wrote {out_path}");
+}

@@ -239,6 +239,24 @@ impl Engine {
         self
     }
 
+    /// [`Engine::with_shards`] with the plan materialized from a
+    /// pluggable [`crate::shard::PlacementPolicy`] over the model's own
+    /// table count — the builder-level seam for alternative placements
+    /// (the default hash policy is `ShardPlan::hash_placement`).
+    pub fn with_placement(
+        self,
+        policy: &dyn crate::shard::PlacementPolicy,
+        num_shards: usize,
+        replicas: usize,
+        scrub_stride: usize,
+    ) -> Self {
+        let plan = {
+            let model = self.model.read().unwrap();
+            ShardPlan::from_policy(policy, model.tables.len(), num_shards, replicas)
+        };
+        self.with_shards(plan, scrub_stride)
+    }
+
     /// Spawn the background [`RepairWorker`] over the shard store's
     /// repair queue. Must be called **after** [`Engine::with_shards`]
     /// (panics otherwise — a silently worker-less store would let
@@ -704,6 +722,7 @@ impl Engine {
         if let Json::Obj(map) = &mut snap {
             map.insert("events".to_string(), self.journal().counts_json());
             map.insert("obs".to_string(), self.obs.stages_json());
+            map.insert("kernel".to_string(), self.kernel_json());
             if let Some(sh) = &self.shards {
                 map.insert("shards".to_string(), sh.store.health_json());
             }
@@ -713,6 +732,34 @@ impl Engine {
             }
         }
         snap
+    }
+
+    /// Dispatched GEMM kernel tier per protected layer, in policy site
+    /// order (`gemm/0..` = bottom layers, then top layers, then the
+    /// head): the host-resolved answer to "which kernel is this model
+    /// actually running on this box". Tier codes are numeric so the
+    /// prom rendering carries them as samples; names ride as the site
+    /// label.
+    fn kernel_json(&self) -> Json {
+        let model = self.model.read().unwrap();
+        let rows: Vec<Json> = model
+            .bottom
+            .iter()
+            .chain(model.top.iter())
+            .chain(std::iter::once(&model.head))
+            .enumerate()
+            .map(|(i, l)| {
+                let tier = l.kernel_tier();
+                Json::obj(vec![
+                    ("site", Json::Str(format!("gemm/{i}"))),
+                    ("tier", Json::Str(tier.as_str().to_string())),
+                    ("tier_code", Json::Num(tier.code() as f64)),
+                    ("k", Json::Num(l.k as f64)),
+                    ("n", Json::Num(l.n as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("sites", Json::Arr(rows))])
     }
 
     /// Chaos-drill path. All of a batch's RNG draws — the dice AND the
@@ -976,6 +1023,41 @@ mod tests {
         let snap = sharded.metrics_snapshot();
         assert!(snap.get("shards").is_some(), "sharded snapshot must carry health");
         assert!(plain.metrics_snapshot().get("shards").is_none());
+    }
+
+    #[test]
+    fn placement_policy_plugs_into_the_engine_unchanged() {
+        // A non-default placement serves bit-identically (tables are
+        // placed whole, so routing is the only thing that moves) and its
+        // name surfaces in the health block.
+        let reqs = make_requests(&tiny_model(Protection::DetectRecompute), 6, 31);
+        let plain = Engine::new(tiny_model(Protection::DetectRecompute));
+        let rr = Engine::new(tiny_model(Protection::DetectRecompute)).with_placement(
+            &crate::shard::RoundRobinPlacement,
+            2,
+            2,
+            64,
+        );
+        let want = plain.process_batch(reqs.clone());
+        let got = rr.process_batch(reqs);
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.score, g.score, "placement must not change scores");
+            assert!(!g.detected);
+        }
+        let snap = rr.metrics_snapshot();
+        assert_eq!(
+            snap.path(&["shards", "placement"]).and_then(Json::as_str),
+            Some("round_robin")
+        );
+        assert_eq!(
+            plain
+                .metrics_snapshot()
+                .path(&["kernel", "sites"])
+                .and_then(Json::as_arr)
+                .map(|a| a.len()),
+            Some(4),
+            "kernel block lists every MLP site (bottom 2 + top 1 + head)"
+        );
     }
 
     #[test]

@@ -217,6 +217,12 @@ impl AbftLinear {
             SiteId::Gemm(i) => i,
             SiteId::Eb(t) => t,
         };
+        if probe.is_some() {
+            // Stamp the dispatched kernel tier into the obs registry so
+            // sampled traces and the engine's kernel block reflect what
+            // actually ran (a few atomic/feature reads — alloc-free).
+            site.obs.note_gemm_tier(site_idx, self.kernel_tier().code());
+        }
 
         if self.protection.enabled() {
             let nt = self.abft.n_total();
@@ -401,6 +407,20 @@ impl AbftLinear {
             b_col_sums: Arc::clone(&self.w_col_sums),
             k: self.k,
         }
+    }
+
+    /// The GEMM kernel tier the dispatcher selects for this layer on
+    /// this host — a function of CPU features, the active pack's
+    /// pack-time acc16 certificate, the layer's k, and any tier cap
+    /// (env/override). Output bytes are identical on every tier; this
+    /// exists for observability (`metrics_snapshot`'s `kernel` block).
+    pub fn kernel_tier(&self) -> crate::gemm::KernelTier {
+        let packed = if self.protection.enabled() {
+            &self.abft.packed
+        } else {
+            &self.plain
+        };
+        crate::gemm::select_tier(packed)
     }
 
     /// Packed-weight bytes (protected layout).

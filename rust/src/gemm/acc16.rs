@@ -1,0 +1,292 @@
+//! Int16-accumulation AVX2 microkernel (the short-k "acc16" tier).
+//!
+//! Same panel-interleaved pack, same output bytes as the scalar and
+//! AVX2 kernels — but the inner loop is one `_mm256_maddubs_epi16` per
+//! 16 columns × 2 k-rows with the pair sums **accumulated in i16
+//! lanes**, spilling (sign-extend + add) into the i32 accumulators only
+//! every `spill_pairs` pair blocks. That halves the per-pair op count
+//! versus the AVX2 i32 path (no widening loads, one madd feeding a
+//! 16-lane add instead of two 8-lane i32 adds), which is where the
+//! roughly-2× madd throughput on short-k layers comes from.
+//!
+//! `maddubs` saturates its i16 pair sum and the i16 adds can wrap, so
+//! this kernel is **only dispatched under a pack-time proof**
+//! (`quant::acc16`) that for every stored column and every aligned
+//! spill window, `Σ 255·(|b_even|+|b_odd|) ≤ 32767` — which bounds
+//! every pair term and every in-window partial sum for any u8
+//! activations. Under that proof the arithmetic is exact, so the tier
+//! is bit-identical to scalar by construction. The odd trailing k-row
+//! is folded in exact i32 (shared `fold_tail_row`), and ragged tail
+//! panels (checksum columns on non-multiple-of-32 widths) go through
+//! the shared scalar panel kernel, exactly like the AVX2 tier.
+
+#![allow(clippy::missing_safety_doc)]
+
+use core::arch::x86_64::*;
+
+use super::avx2::fold_tail_row;
+use super::packed::{panel_rows_scalar, PackedB, NR};
+
+/// Multiply a row block with i16 accumulation: `c[rows × nt] = a · B`.
+/// `c` must be pre-zeroed (ragged panels accumulate). `spill_pairs` is
+/// the pack's certified spill cadence (≥ 1).
+///
+/// # Safety
+/// Caller must ensure AVX2 support and that `packed` carries an
+/// [`crate::quant::Acc16Proof`] for `spill_pairs` (the dispatcher
+/// checks both).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gemm_rows(
+    a: &[u8],
+    packed: &PackedB,
+    rows: usize,
+    c: &mut [i32],
+    spill_pairs: usize,
+) {
+    let k = packed.k;
+    let nt = packed.n_total();
+    debug_assert_eq!(a.len(), rows * k);
+    debug_assert_eq!(c.len(), rows * nt);
+    debug_assert!(spill_pairs >= 1);
+    let data = packed.data().as_ptr();
+    let mut j0 = 0usize;
+    while j0 < nt {
+        let w = NR.min(nt - j0);
+        if w < NR {
+            panel_rows_scalar(a, packed.data(), k, nt, rows, c, j0, w);
+            j0 += w;
+            continue;
+        }
+        let panel = data.add(j0 * k);
+        let mut i = 0usize;
+        while i + 2 <= rows {
+            let (acc0, acc1) = panel_acc16_pair(
+                a.as_ptr().add(i * k),
+                a.as_ptr().add((i + 1) * k),
+                panel,
+                k,
+                spill_pairs,
+            );
+            store_tile(&acc0, c.as_mut_ptr().add(i * nt + j0));
+            store_tile(&acc1, c.as_mut_ptr().add((i + 1) * nt + j0));
+            i += 2;
+        }
+        if i < rows {
+            let acc = panel_acc16_single(a.as_ptr().add(i * k), panel, k, spill_pairs);
+            store_tile(&acc, c.as_mut_ptr().add(i * nt + j0));
+        }
+        j0 += NR;
+    }
+}
+
+/// Store one finished 32-column i32 tile (same layout as the AVX2 tier:
+/// `acc[q]` holds columns `[8q, 8q+8)`).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn store_tile(acc: &[__m256i; 4], crow: *mut i32) {
+    for (q, v) in acc.iter().enumerate() {
+        _mm256_storeu_si256((crow as *mut __m256i).add(q), *v);
+    }
+}
+
+/// Broadcast the (a[2pp], a[2pp+1]) u8 pair into every i16 lane, low
+/// byte = even k-row — matching the pack's per-column byte order, so
+/// `maddubs(va, b)` lane j is exactly `a₀·B[2pp][j] + a₁·B[2pp+1][j]`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn broadcast_a_pair_u8(arow: *const u8, pp: usize) -> __m256i {
+    let lo = *arow.add(2 * pp) as u16;
+    let hi = *arow.add(2 * pp + 1) as u16;
+    _mm256_set1_epi16((lo | (hi << 8)) as i16)
+}
+
+/// Sign-extend the two 16-lane i16 accumulators (columns [0,16) and
+/// [16,32)) and add them into the four i32 accumulators.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn spill_i16(acc: &mut [__m256i; 4], s0: __m256i, s1: __m256i) {
+    acc[0] = _mm256_add_epi32(
+        acc[0],
+        _mm256_cvtepi16_epi32(_mm256_castsi256_si128(s0)),
+    );
+    acc[1] = _mm256_add_epi32(
+        acc[1],
+        _mm256_cvtepi16_epi32(_mm256_extracti128_si256(s0, 1)),
+    );
+    acc[2] = _mm256_add_epi32(
+        acc[2],
+        _mm256_cvtepi16_epi32(_mm256_castsi256_si128(s1)),
+    );
+    acc[3] = _mm256_add_epi32(
+        acc[3],
+        _mm256_cvtepi16_epi32(_mm256_extracti128_si256(s1, 1)),
+    );
+}
+
+/// Accumulate one full-width panel for one row: maddubs pair sums in
+/// i16, spilled to i32 every `spill` pair blocks and at loop end, odd-k
+/// tail folded in exact i32.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn panel_acc16_single(
+    a0: *const u8,
+    panel: *const i8,
+    k: usize,
+    spill: usize,
+) -> [__m256i; 4] {
+    let kp = k & !1;
+    let mut acc = [_mm256_setzero_si256(); 4];
+    let mut s0 = _mm256_setzero_si256();
+    let mut s1 = _mm256_setzero_si256();
+    let mut since = 0usize;
+    for pp in 0..kp / 2 {
+        let b0 = _mm256_loadu_si256(panel.add(pp * 2 * NR) as *const __m256i);
+        let b1 = _mm256_loadu_si256(panel.add(pp * 2 * NR + 32) as *const __m256i);
+        let va = broadcast_a_pair_u8(a0, pp);
+        s0 = _mm256_add_epi16(s0, _mm256_maddubs_epi16(va, b0));
+        s1 = _mm256_add_epi16(s1, _mm256_maddubs_epi16(va, b1));
+        since += 1;
+        if since == spill {
+            spill_i16(&mut acc, s0, s1);
+            s0 = _mm256_setzero_si256();
+            s1 = _mm256_setzero_si256();
+            since = 0;
+        }
+    }
+    if since > 0 {
+        spill_i16(&mut acc, s0, s1);
+    }
+    if k % 2 == 1 {
+        fold_tail_row(&mut acc, panel.add(kp * NR), *a0.add(k - 1) as i32);
+    }
+    acc
+}
+
+/// Row-pair variant of [`panel_acc16_single`]: both rows share the two
+/// panel loads per pair block.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn panel_acc16_pair(
+    a0: *const u8,
+    a1: *const u8,
+    panel: *const i8,
+    k: usize,
+    spill: usize,
+) -> ([__m256i; 4], [__m256i; 4]) {
+    let kp = k & !1;
+    let mut acc0 = [_mm256_setzero_si256(); 4];
+    let mut acc1 = [_mm256_setzero_si256(); 4];
+    let mut s00 = _mm256_setzero_si256();
+    let mut s01 = _mm256_setzero_si256();
+    let mut s10 = _mm256_setzero_si256();
+    let mut s11 = _mm256_setzero_si256();
+    let mut since = 0usize;
+    for pp in 0..kp / 2 {
+        let b0 = _mm256_loadu_si256(panel.add(pp * 2 * NR) as *const __m256i);
+        let b1 = _mm256_loadu_si256(panel.add(pp * 2 * NR + 32) as *const __m256i);
+        let va0 = broadcast_a_pair_u8(a0, pp);
+        let va1 = broadcast_a_pair_u8(a1, pp);
+        s00 = _mm256_add_epi16(s00, _mm256_maddubs_epi16(va0, b0));
+        s01 = _mm256_add_epi16(s01, _mm256_maddubs_epi16(va0, b1));
+        s10 = _mm256_add_epi16(s10, _mm256_maddubs_epi16(va1, b0));
+        s11 = _mm256_add_epi16(s11, _mm256_maddubs_epi16(va1, b1));
+        since += 1;
+        if since == spill {
+            spill_i16(&mut acc0, s00, s01);
+            spill_i16(&mut acc1, s10, s11);
+            s00 = _mm256_setzero_si256();
+            s01 = _mm256_setzero_si256();
+            s10 = _mm256_setzero_si256();
+            s11 = _mm256_setzero_si256();
+            since = 0;
+        }
+    }
+    if since > 0 {
+        spill_i16(&mut acc0, s00, s01);
+        spill_i16(&mut acc1, s10, s11);
+    }
+    if k % 2 == 1 {
+        let tail = panel.add(kp * NR);
+        fold_tail_row(&mut acc0, tail, *a0.add(k - 1) as i32);
+        fold_tail_row(&mut acc1, tail, *a1.add(k - 1) as i32);
+    }
+    (acc0, acc1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::gemm_naive;
+    use crate::util::rng::Pcg32;
+
+    fn small_weights(rng: &mut Pcg32, k: usize, n: usize, mag: i8) -> Vec<i8> {
+        (0..k * n)
+            .map(|_| {
+                let span = 2 * mag as i32 + 1;
+                ((rng.next_u32() % span as u32) as i32 - mag as i32) as i8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn acc16_matches_naive_on_certified_packs() {
+        if !super::super::avx2::available() {
+            eprintln!("SKIP: host has no AVX2");
+            return;
+        }
+        let mut rng = Pcg32::new(0xAC16);
+        for &(m, k, n) in &[
+            (1usize, 2usize, 32usize),
+            (3, 63, 64),  // odd k
+            (5, 256, 33), // full panel + 1-col ragged tail
+            (4, 200, 96),
+        ] {
+            let mut a = vec![0u8; m * k];
+            rng.fill_u8(&mut a);
+            let b = small_weights(&mut rng, k, n, 8);
+            let packed = PackedB::pack(&b, k, n);
+            let proof = packed.acc16_proof().expect("±8 weights must certify");
+            let mut c = vec![0i32; m * n];
+            c.fill(0);
+            unsafe { gemm_rows(&a, &packed, m, &mut c, proof.spill_pairs as usize) };
+            assert_eq!(c, gemm_naive(&a, &b, m, k, n), "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn acc16_exact_at_the_saturation_boundary() {
+        // Max-magnitude certifiable operand: uniform +64 weights give
+        // |b0|+|b1| = 128 per pair (proof window 1) and, with all-255
+        // activations, every pair sum is exactly +32640 — 127 shy of
+        // the i16 cliff. Any cadence looser than the certified
+        // window-1 spill would wrap (two sums reach 65280), so this
+        // run is exact only because the proof-driven spill fires after
+        // every pair block. A per-pair-block sign flip exercises the
+        // −32640 side the same way. (Alternating signs *within* a pair
+        // would cancel to 0 and test nothing.)
+        if !super::super::avx2::available() {
+            eprintln!("SKIP: host has no AVX2");
+            return;
+        }
+        let (m, k, n) = (2usize, 256usize, 64usize);
+        let a = vec![255u8; m * k];
+        for flip_blocks in [false, true] {
+            let b: Vec<i8> = (0..k * n)
+                .map(|idx| {
+                    let p = idx / n;
+                    if flip_blocks && (p / 2) % 2 == 1 {
+                        -64
+                    } else {
+                        64
+                    }
+                })
+                .collect();
+            let packed = PackedB::pack(&b, k, n);
+            let proof = packed.acc16_proof().expect("boundary operand certifies");
+            assert_eq!(proof.spill_pairs, 1, "boundary operand needs window 1");
+            let mut c = vec![0i32; m * n];
+            unsafe { gemm_rows(&a, &packed, m, &mut c, 1) };
+            assert_eq!(c, gemm_naive(&a, &b, m, k, n), "flip_blocks={flip_blocks}");
+        }
+    }
+}

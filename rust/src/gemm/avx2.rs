@@ -191,6 +191,67 @@ pub(crate) unsafe fn gemm_rows_fused(
     }
 }
 
+/// Requantize the payload columns of an already-computed `rows × nt`
+/// i32 block to u8 — the epilogue half of [`gemm_rows_fused`], sourced
+/// from memory instead of live registers. The acc16 and AVX-512 kernel
+/// tiers route through this after filling `c`, so every tier shares the
+/// single epilogue implementation (and therefore the exact bytes): full
+/// 32-column payload runs replay [`epilogue_panel_row`] on reloaded
+/// tiles, and the ragged payload tail goes through the shared scalar
+/// core, exactly like the fused path's boundary arm.
+///
+/// # Safety
+/// Caller must ensure the host supports AVX2 (`available()`).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn requant_rows(
+    c: &[i32],
+    rows: usize,
+    nt: usize,
+    epi: &RequantEpilogue<'_>,
+    out: &mut [u8],
+) {
+    debug_assert_eq!(c.len(), rows * nt);
+    debug_assert_eq!(out.len(), rows * epi.n_out);
+    debug_assert_eq!(epi.a_row_sums.len(), rows);
+    let ec = EpiConsts::new(epi);
+    let mut j0 = 0usize;
+    while j0 + NR <= epi.n_out {
+        let bcols = epi.b_col_sums.as_ptr().add(j0);
+        for i in 0..rows {
+            let crow = c.as_ptr().add(i * nt + j0);
+            let acc = [
+                _mm256_loadu_si256(crow as *const __m256i),
+                _mm256_loadu_si256((crow as *const __m256i).add(1)),
+                _mm256_loadu_si256((crow as *const __m256i).add(2)),
+                _mm256_loadu_si256((crow as *const __m256i).add(3)),
+            ];
+            epilogue_panel_row(
+                &acc,
+                out.as_mut_ptr().add(i * epi.n_out + j0),
+                bcols,
+                *epi.a_row_sums.get_unchecked(i),
+                &ec,
+            );
+        }
+        j0 += NR;
+    }
+    if j0 < epi.n_out {
+        for i in 0..rows {
+            requantize_cols_into(
+                &c[i * nt..(i + 1) * nt],
+                1,
+                nt,
+                j0..epi.n_out,
+                &epi.a_row_sums[i..i + 1],
+                epi.b_col_sums,
+                &epi.spec,
+                epi.relu_floor,
+                &mut out[i * epi.n_out + j0..(i + 1) * epi.n_out],
+            );
+        }
+    }
+}
+
 /// Store one finished 32-column i32 tile.
 #[inline]
 #[target_feature(enable = "avx2")]
@@ -232,9 +293,10 @@ unsafe fn broadcast_a_pair(arow: *const u8, pp: usize) -> __m256i {
 /// Fold the odd trailing k-row (when k is odd) into the accumulators:
 /// widen 8 tail bytes at a time to i32 and `mullo` by the broadcast A
 /// value — exact (products ≤ 255·128), so still bit-identical to scalar.
+/// Shared with the acc16 tier, whose odd tail is folded in i32 too.
 #[inline]
 #[target_feature(enable = "avx2")]
-unsafe fn fold_tail_row(acc: &mut [__m256i; 4], tail: *const i8, a_last: i32) {
+pub(crate) unsafe fn fold_tail_row(acc: &mut [__m256i; 4], tail: *const i8, a_last: i32) {
     let av = _mm256_set1_epi32(a_last);
     for (q, slot) in acc.iter_mut().enumerate() {
         let b8 = _mm_loadl_epi64(tail.add(8 * q) as *const __m128i);

@@ -1,0 +1,267 @@
+//! AVX-512/VNNI microkernel (`vpdpbusd`) for the panel-interleaved
+//! u8×i8→i32 GEMM — the top dispatch tier.
+//!
+//! `vpdpbusd` computes, per i32 lane, the exact dot product of 4
+//! adjacent unsigned bytes with 4 adjacent signed bytes accumulated
+//! into i32 — **non-saturating** (unlike its `vpdpbusds` sibling), so
+//! the tier is bit-identical to the scalar kernel with no side
+//! conditions: every 4-deep u8×i8 dot fits i32 with enormous headroom.
+//!
+//! The pack stays canonical (pair-interleaved; see `packed` module
+//! docs) so ABFT offsets and fault-injection targets are unchanged; the
+//! 4-deep quad layout VNNI wants is assembled **at runtime** from two
+//! adjacent pair blocks with two 256-bit `unpacklo/hi_epi16` shuffles —
+//! a pair block's i16 element j is column j's (even,odd) byte pair, so
+//! interleaving the i16 elements of pair blocks pp and pp+1 yields
+//! exactly the 4 consecutive k-bytes per column that `vpdpbusd` wants,
+//! in the permuted column order `[0-3, 8-11 | 4-7, 12-15]`. The
+//! accumulators live their whole life in that permuted order; a single
+//! self-inverse `vpermd` at store time restores column order.
+//!
+//! k-remainder rows (k mod 4: a leftover pair block and/or the odd tail
+//! row) are folded into the stored tile by exact scalar i32 adds —
+//! integer adds commute, so the result is still bit-identical. Ragged
+//! tail panels (checksum columns) go through the shared scalar panel
+//! kernel like every other tier.
+//!
+//! 512-bit memory intrinsics (`_mm512_loadu_si512` & co.) are avoided
+//! on purpose: the kernel builds zmm values from 256-bit loads
+//! (`inserti64x4`) and stores through 256-bit halves (`extracti64x4`),
+//! sidestepping the historically unstable pointer-type signatures of
+//! the 512-bit load/store intrinsics.
+
+#![allow(clippy::missing_safety_doc)]
+
+use core::arch::x86_64::*;
+
+use super::packed::{panel_rows_scalar, PackedB, NR};
+
+/// Cached runtime check: AVX-512 foundation + VNNI (`vpdpbusd`), plus
+/// AVX2 for the 256-bit shuffle/load halves (implied by F on every real
+/// part, but checked for rigor).
+#[inline]
+pub(crate) fn available() -> bool {
+    std::arch::is_x86_feature_detected!("avx512f")
+        && std::arch::is_x86_feature_detected!("avx512vnni")
+        && std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// Multiply a row block: `c[rows × nt] = a[rows × k] · B` via VNNI for
+/// the full panels; ragged tail panels accumulate via the shared scalar
+/// kernel, so `c` must be pre-zeroed by the caller (the dispatcher
+/// does).
+///
+/// # Safety
+/// Caller must ensure the host passes [`available`].
+#[target_feature(enable = "avx2,avx512f,avx512vnni")]
+pub(crate) unsafe fn gemm_rows(a: &[u8], packed: &PackedB, rows: usize, c: &mut [i32]) {
+    let k = packed.k;
+    let nt = packed.n_total();
+    debug_assert_eq!(a.len(), rows * k);
+    debug_assert_eq!(c.len(), rows * nt);
+    let data = packed.data().as_ptr();
+    let mut j0 = 0usize;
+    while j0 < nt {
+        let w = NR.min(nt - j0);
+        if w < NR {
+            panel_rows_scalar(a, packed.data(), k, nt, rows, c, j0, w);
+            j0 += w;
+            continue;
+        }
+        let panel = data.add(j0 * k);
+        let mut i = 0usize;
+        while i + 2 <= rows {
+            panel_vnni_pair(
+                a.as_ptr().add(i * k),
+                a.as_ptr().add((i + 1) * k),
+                panel,
+                k,
+                c.as_mut_ptr().add(i * nt + j0),
+                c.as_mut_ptr().add((i + 1) * nt + j0),
+            );
+            i += 2;
+        }
+        if i < rows {
+            panel_vnni_single(a.as_ptr().add(i * k), panel, k, c.as_mut_ptr().add(i * nt + j0));
+        }
+        j0 += NR;
+    }
+}
+
+/// Assemble the two VNNI quad operands for pair blocks `pp` and `pp+1`
+/// (k-rows `2pp..2pp+4`): z0 covers columns 0..16, z1 columns 16..32,
+/// both in the permuted lane order `[0-3, 8-11 | 4-7, 12-15]` (each
+/// i32 lane = 4 consecutive k-bytes of one column).
+#[inline]
+#[target_feature(enable = "avx2,avx512f,avx512vnni")]
+unsafe fn load_quad(panel: *const i8, pp: usize) -> (__m512i, __m512i) {
+    let p0 = _mm256_loadu_si256(panel.add(pp * 2 * NR) as *const __m256i);
+    let p1 = _mm256_loadu_si256(panel.add(pp * 2 * NR + 32) as *const __m256i);
+    let q0 = _mm256_loadu_si256(panel.add((pp + 1) * 2 * NR) as *const __m256i);
+    let q1 = _mm256_loadu_si256(panel.add((pp + 1) * 2 * NR + 32) as *const __m256i);
+    let z0 = _mm512_inserti64x4::<1>(
+        _mm512_castsi256_si512(_mm256_unpacklo_epi16(p0, q0)),
+        _mm256_unpackhi_epi16(p0, q0),
+    );
+    let z1 = _mm512_inserti64x4::<1>(
+        _mm512_castsi256_si512(_mm256_unpacklo_epi16(p1, q1)),
+        _mm256_unpackhi_epi16(p1, q1),
+    );
+    (z0, z1)
+}
+
+/// Broadcast 4 consecutive activation bytes (k-rows `p..p+4`) into
+/// every i32 lane, byte order matching [`load_quad`]'s quads.
+#[inline]
+#[target_feature(enable = "avx2,avx512f,avx512vnni")]
+unsafe fn broadcast_a_quad(arow: *const u8, p: usize) -> __m512i {
+    let bytes = [
+        *arow.add(p),
+        *arow.add(p + 1),
+        *arow.add(p + 2),
+        *arow.add(p + 3),
+    ];
+    _mm512_set1_epi32(i32::from_le_bytes(bytes))
+}
+
+/// Undo the quad lane permutation and store 16 finished i32 columns.
+#[inline]
+#[target_feature(enable = "avx2,avx512f,avx512vnni")]
+unsafe fn store_permuted(acc: __m512i, crow: *mut i32) {
+    // The quad layout's column order [0-3, 8-11, 4-7, 12-15] is a
+    // self-inverse permutation, so the same index vector restores it.
+    let idx = _mm512_setr_epi32(0, 1, 2, 3, 8, 9, 10, 11, 4, 5, 6, 7, 12, 13, 14, 15);
+    let v = _mm512_permutexvar_epi32(idx, acc);
+    _mm256_storeu_si256(crow as *mut __m256i, _mm512_castsi512_si256(v));
+    _mm256_storeu_si256(
+        (crow as *mut __m256i).add(1),
+        _mm512_extracti64x4_epi64::<1>(v),
+    );
+}
+
+/// Fold the k-rows `[from, k)` of one full panel into an already-stored
+/// 32-column row of C by exact scalar adds — the ≤ 3 rows VNNI's 4-deep
+/// quads could not cover (a leftover pair block and/or the odd tail
+/// row). Adds commute, so folding after the store is bit-identical.
+#[inline]
+unsafe fn fold_tail_scalar(arow: *const u8, panel: *const i8, k: usize, from: usize, crow: *mut i32) {
+    let kp = k & !1;
+    for p in from..k {
+        let av = *arow.add(p) as i32;
+        let (base, stride) = if p >= kp {
+            // Odd trailing k-row: w contiguous bytes.
+            (kp * NR, 1usize)
+        } else {
+            // Inside pair block p/2: column c at byte 2c + (p & 1).
+            ((p / 2) * 2 * NR + (p % 2), 2usize)
+        };
+        for cix in 0..NR {
+            *crow.add(cix) += av * *panel.add(base + cix * stride) as i32;
+        }
+    }
+}
+
+/// One row × one full panel: dot 4 k-rows at a time with `vpdpbusd`,
+/// store the permuted accumulators, then fold the k-remainder.
+#[inline]
+#[target_feature(enable = "avx2,avx512f,avx512vnni")]
+unsafe fn panel_vnni_single(a0: *const u8, panel: *const i8, k: usize, crow: *mut i32) {
+    let quads = (k & !1) / 4; // complete 4-row groups = 2 pair blocks each
+    let mut acc0 = _mm512_setzero_si512();
+    let mut acc1 = _mm512_setzero_si512();
+    for q in 0..quads {
+        let (z0, z1) = load_quad(panel, 2 * q);
+        let va = broadcast_a_quad(a0, 4 * q);
+        acc0 = _mm512_dpbusd_epi32(acc0, va, z0);
+        acc1 = _mm512_dpbusd_epi32(acc1, va, z1);
+    }
+    store_permuted(acc0, crow);
+    store_permuted(acc1, crow.add(16));
+    fold_tail_scalar(a0, panel, k, 4 * quads, crow);
+}
+
+/// Row-pair variant of [`panel_vnni_single`]: both rows share the quad
+/// loads (4 zmm accumulators + 2 operands + 2 broadcasts in flight).
+#[inline]
+#[target_feature(enable = "avx2,avx512f,avx512vnni")]
+unsafe fn panel_vnni_pair(
+    a0: *const u8,
+    a1: *const u8,
+    panel: *const i8,
+    k: usize,
+    crow0: *mut i32,
+    crow1: *mut i32,
+) {
+    let quads = (k & !1) / 4;
+    let mut acc00 = _mm512_setzero_si512();
+    let mut acc01 = _mm512_setzero_si512();
+    let mut acc10 = _mm512_setzero_si512();
+    let mut acc11 = _mm512_setzero_si512();
+    for q in 0..quads {
+        let (z0, z1) = load_quad(panel, 2 * q);
+        let va0 = broadcast_a_quad(a0, 4 * q);
+        let va1 = broadcast_a_quad(a1, 4 * q);
+        acc00 = _mm512_dpbusd_epi32(acc00, va0, z0);
+        acc01 = _mm512_dpbusd_epi32(acc01, va0, z1);
+        acc10 = _mm512_dpbusd_epi32(acc10, va1, z0);
+        acc11 = _mm512_dpbusd_epi32(acc11, va1, z1);
+    }
+    store_permuted(acc00, crow0);
+    store_permuted(acc01, crow0.add(16));
+    store_permuted(acc10, crow1);
+    store_permuted(acc11, crow1.add(16));
+    fold_tail_scalar(a0, panel, k, 4 * quads, crow0);
+    fold_tail_scalar(a1, panel, k, 4 * quads, crow1);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::gemm_naive;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn vnni_matches_naive_bitwise() {
+        if !available() {
+            eprintln!("SKIP: host has no AVX-512 VNNI");
+            return;
+        }
+        let mut rng = Pcg32::new(0x512);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 32usize), // odd-tail-only panel
+            (1, 2, 32),                // leftover-pair-only
+            (2, 3, 32),                // pair + odd tail
+            (3, 4, 64),                // one clean quad
+            (5, 129, 96),              // quads + pair + odd tail
+            (4, 64, 33),               // full panel + 1-col ragged tail (ABFT shape)
+            (7, 255, 160),
+            (16, 512, 513),
+        ] {
+            let mut a = vec![0u8; m * k];
+            let mut b = vec![0i8; k * n];
+            rng.fill_u8(&mut a);
+            rng.fill_i8(&mut b);
+            let packed = PackedB::pack(&b, k, n);
+            let mut c = vec![0i32; m * n];
+            unsafe { gemm_rows(&a, &packed, m, &mut c) };
+            assert_eq!(c, gemm_naive(&a, &b, m, k, n), "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn vnni_extreme_operands_stay_exact() {
+        if !available() {
+            eprintln!("SKIP: host has no AVX-512 VNNI");
+            return;
+        }
+        let (m, k, n) = (2usize, 64usize, 64usize);
+        let a = vec![255u8; m * k];
+        for fill in [127i8, -128, -127] {
+            let b = vec![fill; k * n];
+            let packed = PackedB::pack(&b, k, n);
+            let mut c = vec![0i32; m * n];
+            unsafe { gemm_rows(&a, &packed, m, &mut c) };
+            assert_eq!(c, gemm_naive(&a, &b, m, k, n), "fill {fill}");
+        }
+    }
+}

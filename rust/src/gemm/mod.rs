@@ -5,9 +5,64 @@
 //!   extra-column packing hook the ABFT layer builds on.
 //! * [`QuantizedLinear`] — a full FC layer: packed weights + requantization
 //!   (Fig 1 pipeline), the unit the DLRM MLPs are made of.
+//!
+//! # Dispatch-tier contract
+//!
+//! [`gemm_exec_into`] / [`gemm_requant_exec_into`] route each row block
+//! through one of four kernel tiers, chosen per pack by [`select_tier`]:
+//!
+//! | tier | inner op | gate |
+//! |------|----------|------|
+//! | [`KernelTier::Scalar`]  | portable i32 loops | always available |
+//! | [`KernelTier::Avx2`]    | i16-widened `_mm256_madd_epi16` (exact) | `avx2` |
+//! | [`KernelTier::Acc16`]   | `_mm256_maddubs_epi16` pair sums held in i16 | `avx2` + pack-time saturation proof + `k ≤ 256` |
+//! | [`KernelTier::Avx512`]  | VNNI `vpdpbusd` 4-deep u8×i8 dot (exact) | `avx512f` + `avx512vnni` |
+//!
+//! The contract every tier must uphold, and the tier-parameterized test
+//! grids enforce:
+//!
+//! 1. **Bit-identical i32 output.** All tiers walk the *same*
+//!    panel-interleaved pack (no per-tier repacking) and accumulate in
+//!    exact integer arithmetic, so `C_temp` is byte-identical to the
+//!    scalar kernel on every tier — including under row-parallel
+//!    fan-out (integer adds commute). AVX2/AVX-512 are exact by
+//!    construction; acc16 is exact *conditionally*, guarded by the
+//!    pack-time proof below.
+//! 2. **Checksum columns always packed.** The ABFT Eq-3b checksum and
+//!    group-checksum columns ride the trailing panel(s) of the same
+//!    pack on every tier, so protected GEMM remains one kernel call
+//!    and `verify`/`correct_row` stay tier-agnostic: they only read
+//!    `C_temp` and the logical pack layout, never the kernel.
+//! 3. **One rounding core.** Requantization goes through a single
+//!    scalar-specified pipeline (`quant::requantize_cols_into`): the
+//!    AVX2 fused epilogue replays its exact f32 op order in-register,
+//!    and the acc16/AVX-512 tiers reuse that same epilogue from memory
+//!    — so output bytes never depend on the dispatched tier.
+//!
+//! ## The i16 saturation argument (acc16 tier)
+//!
+//! `maddubs` pair sums `a₀b₀ + a₁b₁` (a ∈ u8, b ∈ i8) accumulated in
+//! i16 can saturate/wrap, so the acc16 tier is only dispatched when the
+//! pack carries a proof that for every stored column and every aligned
+//! spill window of `spill_pairs` pair blocks,
+//! `Σ 255·(|b_even| + |b_odd|) ≤ 32767`. Since every pair term and
+//! every in-window partial sum is bounded in magnitude by that total,
+//! neither `maddubs` nor the i16 adds can leave the i16 range for *any*
+//! u8 activations — see `quant::acc16`. Ineligible packs (most
+//! full-range weight layers) silently use the exact AVX2/AVX-512 tiers.
+//!
+//! Tier choice can be **capped** (never forced) via the
+//! `DLRM_ABFT_KERNEL_TIER` env knob (`scalar|avx2|acc16|avx512`, read
+//! once) or [`set_kernel_tier_override`] (tests/benches; takes
+//! precedence): selection falls back tier by tier below the cap, so a
+//! cap can disable hardware paths but never select an unsupported one.
 
 #[cfg(target_arch = "x86_64")]
+pub(crate) mod acc16;
+#[cfg(target_arch = "x86_64")]
 pub(crate) mod avx2;
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx512;
 pub mod naive;
 pub mod packed;
 
@@ -16,6 +71,123 @@ pub use packed::{
     gemm_exec, gemm_exec_into, gemm_exec_into_scalar, gemm_exec_into_st, gemm_requant_exec_into,
     gemm_requant_exec_into_scalar, simd_active, PackedB,
 };
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// The kernel tiers, in dispatch-priority order (highest wins when its
+/// gate passes). See the module docs for the per-tier contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum KernelTier {
+    /// Portable scalar loops — the bit-exactness reference.
+    Scalar = 0,
+    /// AVX2 i16-widened madd (PR 1 microkernel).
+    Avx2 = 1,
+    /// AVX2 maddubs with i16 accumulation + pack-time saturation proof.
+    Acc16 = 2,
+    /// AVX-512 VNNI `vpdpbusd`.
+    Avx512 = 3,
+}
+
+impl KernelTier {
+    /// Stable lowercase name (metrics label / env-knob value).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Avx2 => "avx2",
+            KernelTier::Acc16 => "acc16",
+            KernelTier::Avx512 => "avx512",
+        }
+    }
+
+    /// Numeric code for metrics export (`Scalar = 0 … Avx512 = 3`).
+    #[inline]
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`KernelTier::code`].
+    pub fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(KernelTier::Scalar),
+            1 => Some(KernelTier::Avx2),
+            2 => Some(KernelTier::Acc16),
+            3 => Some(KernelTier::Avx512),
+            _ => None,
+        }
+    }
+
+    fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelTier::Scalar),
+            "avx2" => Some(KernelTier::Avx2),
+            "acc16" => Some(KernelTier::Acc16),
+            "avx512" => Some(KernelTier::Avx512),
+            _ => None,
+        }
+    }
+}
+
+/// `TIER_OVERRIDE` sentinel: no override installed.
+const NO_OVERRIDE: u8 = u8::MAX;
+
+/// Process-wide test/bench cap, above the env knob in precedence.
+static TIER_OVERRIDE: AtomicU8 = AtomicU8::new(NO_OVERRIDE);
+
+/// Install (or clear, with `None`) a process-wide kernel-tier **cap**
+/// for tests and benches. Selection still falls back normally below the
+/// cap, so capping at an unavailable tier degrades instead of breaking;
+/// use [`select_tier`] to observe what actually dispatches.
+pub fn set_kernel_tier_override(tier: Option<KernelTier>) {
+    TIER_OVERRIDE.store(tier.map_or(NO_OVERRIDE, KernelTier::code), Ordering::Relaxed);
+}
+
+/// The effective tier cap: the test override when installed, else the
+/// `DLRM_ABFT_KERNEL_TIER` env knob (read once), else no cap.
+fn tier_cap() -> KernelTier {
+    if let Some(t) = KernelTier::from_code(TIER_OVERRIDE.load(Ordering::Relaxed)) {
+        return t;
+    }
+    static ENV_CAP: OnceLock<KernelTier> = OnceLock::new();
+    *ENV_CAP.get_or_init(|| {
+        std::env::var("DLRM_ABFT_KERNEL_TIER")
+            .ok()
+            .and_then(|s| KernelTier::parse(&s))
+            .unwrap_or(KernelTier::Avx512)
+    })
+}
+
+/// Resolve the kernel tier that will serve this pack on this host:
+/// the highest tier, up to the active cap, whose gate passes (AVX-512
+/// needs `avx512f`+`avx512vnni`; acc16 needs AVX2, a pack-time
+/// saturation proof, and short k; AVX2 needs `avx2`). Deterministic per
+/// (pack, host, cap) — the same answer the row-block dispatchers use,
+/// so callers can label spans/metrics with it.
+pub fn select_tier(packed: &PackedB) -> KernelTier {
+    let cap = tier_cap();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if cap >= KernelTier::Avx512 && avx512::available() {
+            return KernelTier::Avx512;
+        }
+        if cap >= KernelTier::Acc16
+            && avx2::available()
+            && packed.acc16_proof().is_some()
+            && packed.k <= crate::quant::ACC16_SHORT_K_MAX
+        {
+            return KernelTier::Acc16;
+        }
+        if cap >= KernelTier::Avx2 && avx2::available() {
+            return KernelTier::Avx2;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (cap, packed);
+    }
+    KernelTier::Scalar
+}
 
 use crate::quant::{QParams, RequantEpilogue, RequantParams, RequantSpec};
 use crate::util::scratch::{grow, GemmScratch};

@@ -56,6 +56,14 @@ pub struct PackedB {
     /// Number of appended extra columns (0 = plain, 1 = Eq-3b checksum,
     /// 1 + G = checksum plus G column-group partial checksums).
     pub extra_cols: usize,
+    /// Pack-time int16-accumulation certificate (see `quant::acc16`):
+    /// present iff the acc16 kernel tier is bit-exact for this operand
+    /// at the recorded spill cadence, over every stored column —
+    /// checksum columns included. Weight corruption via [`PackedB::
+    /// data_mut`] can invalidate it, which at worst turns an injected
+    /// fault into a detected-then-recomputed fault (the ladder verifies
+    /// after every correction), never a silent one.
+    pub(crate) acc16: Option<crate::quant::Acc16Proof>,
 }
 
 /// Byte offset of logical element `(p, j)` in the panel-interleaved
@@ -84,12 +92,16 @@ impl PackedB {
                 data[panel_offset(k, n, p, j)] = b[p * n + j];
             }
         }
-        Self {
+        let mut packed = Self {
             data,
             k,
             n,
             extra_cols: 0,
-        }
+            acc16: None,
+        };
+        let proof = crate::quant::acc16_saturation_proof(k, n, |p, j| packed.at(p, j));
+        packed.acc16 = proof;
+        packed
     }
 
     /// Pack B together with one extra i8 column (e.g. the mod-127 row-sum
@@ -118,12 +130,23 @@ impl PackedB {
                 data[panel_offset(k, nt, p, n + e)] = extra[p];
             }
         }
-        Self {
+        let mut packed = Self {
             data,
             k,
             n,
             extra_cols: extras.len(),
-        }
+            acc16: None,
+        };
+        let proof = crate::quant::acc16_saturation_proof(k, nt, |p, j| packed.at(p, j));
+        packed.acc16 = proof;
+        packed
+    }
+
+    /// The pack-time int16-accumulation certificate, when one exists
+    /// (see `quant::acc16` for the saturation argument).
+    #[inline]
+    pub fn acc16_proof(&self) -> Option<crate::quant::Acc16Proof> {
+        self.acc16
     }
 
     /// Total stored columns (payload + extra).
@@ -319,8 +342,12 @@ fn fused_prologue(
     true
 }
 
-/// One fused row block: SIMD kernel+epilogue when available, else the
-/// scalar kernel followed by the shared requantization core.
+/// One fused row block, routed by [`crate::gemm::select_tier`]. The
+/// AVX2 tier fuses the epilogue in-register; the acc16 and AVX-512
+/// tiers compute the i32 block with their own kernels and then replay
+/// the identical epilogue from memory (`avx2::requant_rows`), so every
+/// tier emits the same bytes; the scalar tier runs the shared scalar
+/// requantization core.
 fn gemm_requant_rows_dispatch(
     a: &[u8],
     packed: &PackedB,
@@ -331,10 +358,36 @@ fn gemm_requant_rows_dispatch(
 ) {
     #[cfg(target_arch = "x86_64")]
     {
-        if crate::gemm::avx2::available() {
-            // SAFETY: AVX2 presence just checked.
-            unsafe { crate::gemm::avx2::gemm_rows_fused(a, packed, rows, c, out, epi) };
-            return;
+        use crate::gemm::KernelTier;
+        match crate::gemm::select_tier(packed) {
+            KernelTier::Avx512 => {
+                // SAFETY: select_tier verified AVX-512F+VNNI (and AVX2
+                // for the epilogue) on this host.
+                unsafe {
+                    crate::gemm::avx512::gemm_rows(a, packed, rows, c);
+                    crate::gemm::avx2::requant_rows(c, rows, packed.n_total(), epi, out);
+                }
+                return;
+            }
+            KernelTier::Acc16 => {
+                let spill = packed
+                    .acc16
+                    .expect("acc16 tier selected without proof")
+                    .spill_pairs as usize;
+                // SAFETY: select_tier verified AVX2; the pack carries a
+                // saturation proof for this spill cadence.
+                unsafe {
+                    crate::gemm::acc16::gemm_rows(a, packed, rows, c, spill);
+                    crate::gemm::avx2::requant_rows(c, rows, packed.n_total(), epi, out);
+                }
+                return;
+            }
+            KernelTier::Avx2 => {
+                // SAFETY: select_tier verified AVX2 on this host.
+                unsafe { crate::gemm::avx2::gemm_rows_fused(a, packed, rows, c, out, epi) };
+                return;
+            }
+            KernelTier::Scalar => {}
         }
     }
     gemm_rows_scalar(a, packed, rows, c);
@@ -387,14 +440,35 @@ pub fn simd_active() -> bool {
     }
 }
 
-/// One row block, SIMD when available. `c` must be pre-zeroed.
+/// One row block, routed by [`crate::gemm::select_tier`]. Every tier
+/// walks the same panel layout and produces bit-identical i32 results.
+/// `c` must be pre-zeroed.
 fn gemm_rows_dispatch(a: &[u8], packed: &PackedB, rows: usize, c: &mut [i32]) {
     #[cfg(target_arch = "x86_64")]
     {
-        if crate::gemm::avx2::available() {
-            // SAFETY: AVX2 presence just checked.
-            unsafe { crate::gemm::avx2::gemm_rows(a, packed, rows, c) };
-            return;
+        use crate::gemm::KernelTier;
+        match crate::gemm::select_tier(packed) {
+            KernelTier::Avx512 => {
+                // SAFETY: select_tier verified AVX-512F+VNNI support.
+                unsafe { crate::gemm::avx512::gemm_rows(a, packed, rows, c) };
+                return;
+            }
+            KernelTier::Acc16 => {
+                let spill = packed
+                    .acc16
+                    .expect("acc16 tier selected without proof")
+                    .spill_pairs as usize;
+                // SAFETY: select_tier verified AVX2; the pack carries a
+                // saturation proof for this spill cadence.
+                unsafe { crate::gemm::acc16::gemm_rows(a, packed, rows, c, spill) };
+                return;
+            }
+            KernelTier::Avx2 => {
+                // SAFETY: select_tier verified AVX2 on this host.
+                unsafe { crate::gemm::avx2::gemm_rows(a, packed, rows, c) };
+                return;
+            }
+            KernelTier::Scalar => {}
         }
     }
     gemm_rows_scalar(a, packed, rows, c);

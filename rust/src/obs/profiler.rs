@@ -24,7 +24,7 @@
 //! so readers never see a torn record — no seqlock needed.
 
 use std::cell::Cell;
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -183,7 +183,15 @@ pub struct ObsCore {
     lanes: Box<[Lane]>,
     measured: Arc<MeasuredUnitCosts>,
     heal: HealCost,
+    /// Last-dispatched GEMM kernel tier per gemm site
+    /// (`gemm::KernelTier::code()`, [`TIER_UNKNOWN`] until stamped) —
+    /// lets traces and the metrics snapshot say *which* kernel the
+    /// sampled spans were measuring.
+    gemm_tiers: Box<[AtomicU8]>,
 }
+
+/// Sentinel for a gemm site whose kernel tier has not been stamped yet.
+pub const TIER_UNKNOWN: u8 = u8::MAX;
 
 impl ObsCore {
     pub fn new(gemm_sites: usize, eb_sites: usize, sample_n: u32) -> Self {
@@ -193,6 +201,7 @@ impl ObsCore {
             lanes: (0..OBS_LANES).map(|_| Lane::new()).collect(),
             measured: Arc::new(MeasuredUnitCosts::new(gemm_sites, eb_sites)),
             heal: HealCost::new(),
+            gemm_tiers: (0..gemm_sites.max(1)).map(|_| AtomicU8::new(TIER_UNKNOWN)).collect(),
         }
     }
 
@@ -327,6 +336,27 @@ impl ObsHandle {
         self.0.as_ref().map(|c| Arc::clone(&c.measured))
     }
 
+    /// Stamp the kernel tier dispatched at a gemm site (out-of-range
+    /// sites and detached handles are no-ops). One relaxed store.
+    #[inline]
+    pub fn note_gemm_tier(&self, site: u32, code: u8) {
+        if let Some(core) = &self.0 {
+            if let Some(slot) = core.gemm_tiers.get(site as usize) {
+                slot.store(code, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Last-stamped kernel tier code for a gemm site; `None` when
+    /// detached, out of range, or never stamped.
+    pub fn gemm_tier(&self, site: u32) -> Option<u8> {
+        self.0
+            .as_ref()
+            .and_then(|c| c.gemm_tiers.get(site as usize))
+            .map(|s| s.load(Ordering::Relaxed))
+            .filter(|&c| c != TIER_UNKNOWN)
+    }
+
     /// Record a scrub scan segment for heal-cost calibration.
     pub fn note_scan(&self, rows: usize, ns: u64) {
         if let Some(core) = &self.0 {
@@ -390,11 +420,32 @@ impl ObsHandle {
                     let slot = ((head - resident + i) % RING_PER_LANE as u64) as usize;
                     let rec = lane.ring[slot].load(Ordering::Relaxed);
                     if let Some((stage, site, dur_ns)) = unpack(rec) {
-                        spans.push(Json::obj(vec![
+                        let mut fields = vec![
                             ("stage", Json::Str(stage.as_str().to_string())),
                             ("site", Json::Num(site as f64)),
                             ("dur_us", Json::Num(dur_ns as f64 / 1e3)),
-                        ]));
+                        ];
+                        // GEMM-backed spans carry the dispatched kernel
+                        // tier, so a trace says which kernel the span
+                        // actually timed.
+                        if matches!(
+                            stage,
+                            Stage::MlpLayer
+                                | Stage::Verify
+                                | Stage::CorrectInPlace
+                                | Stage::RecomputeUnit
+                        ) {
+                            if let Some(tier) = core
+                                .gemm_tiers
+                                .get(site as usize)
+                                .map(|s| s.load(Ordering::Relaxed))
+                                .filter(|&c| c != TIER_UNKNOWN)
+                                .and_then(crate::gemm::KernelTier::from_code)
+                            {
+                                fields.push(("tier", Json::Str(tier.as_str().to_string())));
+                            }
+                        }
+                        spans.push(Json::obj(fields));
                         if spans.len() >= max {
                             break 'outer;
                         }
@@ -501,6 +552,36 @@ mod tests {
         // max truncates.
         let doc2 = h.trace_json(1);
         assert_eq!(doc2.get("spans").and_then(Json::as_arr).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn gemm_tier_registry_stamps_and_labels_traces() {
+        let h = ObsHandle::attached(3, 1, 1);
+        assert_eq!(h.gemm_tier(0), None, "unstamped site has no tier");
+        h.note_gemm_tier(0, crate::gemm::KernelTier::Avx2.code());
+        assert_eq!(h.gemm_tier(0), Some(crate::gemm::KernelTier::Avx2.code()));
+        h.note_gemm_tier(99, 1); // out of range: no-op, no panic
+        assert_eq!(h.gemm_tier(99), None);
+        let p = h.probe().unwrap();
+        p.span_ns(Stage::MlpLayer, 0, 5_000);
+        p.span_ns(Stage::Parse, 0, 1_000);
+        let spans = h.trace_json(10);
+        let spans = spans.get("spans").and_then(Json::as_arr).unwrap();
+        let mlp = spans
+            .iter()
+            .find(|s| s.get("stage").and_then(Json::as_str) == Some("mlp_layer"))
+            .unwrap();
+        assert_eq!(mlp.get("tier").and_then(Json::as_str), Some("avx2"));
+        let parse = spans
+            .iter()
+            .find(|s| s.get("stage").and_then(Json::as_str) == Some("parse"))
+            .unwrap();
+        assert!(parse.get("tier").is_none(), "non-GEMM spans carry no tier");
+
+        // Detached: all tier ops are no-ops.
+        let d = ObsHandle::detached();
+        d.note_gemm_tier(0, 1);
+        assert_eq!(d.gemm_tier(0), None);
     }
 
     #[test]

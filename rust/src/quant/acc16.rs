@@ -1,0 +1,182 @@
+//! Static i16-saturation proof for the int16-accumulation GEMM tier.
+//!
+//! The acc16 kernel (`gemm::acc16`) computes `maddubs`-style pair sums —
+//! `a_even·b_even + a_odd·b_odd` with `a ∈ u8`, `b ∈ i8` — and keeps
+//! accumulating them in **i16 lanes**, spilling (sign-extending and
+//! adding) into the i32 accumulators only every `spill_pairs` pair
+//! blocks. That is twice the madd throughput of the i32 AVX2 path, but
+//! it is only *bit-identical* to the scalar kernel if neither the
+//! `maddubs` pair sum nor any in-window i16 partial sum can leave
+//! `[-32768, 32767]`.
+//!
+//! Weights are the long-lived operand and known at pack time, while
+//! activations are only bounded (`a ≤ 255`), so we prove saturation
+//! freedom **statically per pack**: for every column `j` and every
+//! aligned window of `spill_pairs` consecutive pair blocks,
+//!
+//! ```text
+//!   Σ_window 255 · (|b[2pp][j]| + |b[2pp+1][j]|)  ≤  32767  (i16::MAX)
+//! ```
+//!
+//! Since each pair term `t_pp = a₀·b₀ + a₁·b₁` satisfies
+//! `|t_pp| ≤ 255·(|b₀| + |b₁|)`, the bound implies (a) every single
+//! pair sum fits i16, so `maddubs`' saturating add never saturates, and
+//! (b) every partial sum inside a window has magnitude at most the
+//! window's term-magnitude total, so the i16 accumulation never wraps —
+//! for **any** u8 activation values. The odd trailing k-row (when k is
+//! odd) is excluded: the kernel folds it in exact i32 arithmetic.
+//!
+//! The proof is per-column over *all* stored columns, so the ABFT Eq-3b
+//! checksum and group-checksum columns are covered by the same argument
+//! and keep riding the same panels (protected GEMM stays one kernel
+//! call on every tier).
+
+/// Largest spill window the prover will certify (pair blocks between
+/// i16→i32 spills). Beyond this the spill cost is already amortized to
+/// noise, and larger windows only make eligibility rarer.
+pub const ACC16_MAX_SPILL_PAIRS: usize = 16;
+
+/// The acc16 tier only pays off on short-k GEMMs (the spill and the
+/// extra i32 adds are per-panel-pass overhead); above this depth the
+/// dispatcher prefers the plain AVX2 i32 path.
+pub const ACC16_SHORT_K_MAX: usize = 256;
+
+/// A pack-time certificate that the int16-accumulation kernel is exact
+/// for this operand: accumulating `spill_pairs` consecutive `maddubs`
+/// pair sums in i16 cannot saturate or wrap, for any u8 activations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Acc16Proof {
+    /// Certified spill cadence: pair blocks accumulated in i16 between
+    /// i16→i32 spills. Always ≥ 1 and ≤ [`ACC16_MAX_SPILL_PAIRS`].
+    pub spill_pairs: u8,
+}
+
+/// Try to certify a `k × nt` operand for int16 accumulation, reading
+/// elements through `at(row, col)` (any layout). Returns the proof with
+/// the **largest** certifiable spill window from `{16, 8, 4, 2, 1}`
+/// (fewest spills wins), or `None` when even window 1 — i.e. a single
+/// `maddubs` pair sum — can exceed `i16::MAX` in magnitude, in which
+/// case the dispatcher must fall back to the exact i32 tiers.
+pub fn acc16_saturation_proof(
+    k: usize,
+    nt: usize,
+    at: impl Fn(usize, usize) -> i8,
+) -> Option<Acc16Proof> {
+    let pairs = k / 2;
+    if pairs == 0 || nt == 0 {
+        // No pair blocks: nothing for an i16 accumulator to do.
+        return None;
+    }
+    // Per (pair block, column) worst-case term magnitude over u8
+    // activations: 255·(|b_even| + |b_odd|). Computed once, reused for
+    // every candidate window.
+    let mut term = vec![0u32; pairs * nt];
+    for pp in 0..pairs {
+        for j in 0..nt {
+            let b0 = (at(2 * pp, j) as i32).unsigned_abs();
+            let b1 = (at(2 * pp + 1, j) as i32).unsigned_abs();
+            term[pp * nt + j] = 255 * (b0 + b1);
+        }
+    }
+    let cap = pairs.min(ACC16_MAX_SPILL_PAIRS);
+    let mut candidates = [0usize; 5];
+    let mut nc = 0;
+    candidates[nc] = cap;
+    nc += 1;
+    for w in [8usize, 4, 2, 1] {
+        if w < cap {
+            candidates[nc] = w;
+            nc += 1;
+        }
+    }
+    'cand: for &w in &candidates[..nc] {
+        // Aligned windows (the kernel spills every w pair blocks from
+        // pair 0), including the final partial window.
+        for j in 0..nt {
+            let mut pp = 0;
+            while pp < pairs {
+                let end = (pp + w).min(pairs);
+                let sum: u64 = (pp..end).map(|q| term[q * nt + j] as u64).sum();
+                if sum > i16::MAX as u64 {
+                    continue 'cand;
+                }
+                pp = end;
+            }
+        }
+        return Some(Acc16Proof {
+            spill_pairs: w as u8,
+        });
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_magnitude_pair_is_window_one() {
+        // |b0|+|b1| = 128 ⇒ 255·128 = 32640 ≤ 32767: certifiable, but
+        // only with a window of a single pair.
+        let proof = acc16_saturation_proof(64, 8, |p, _| if p % 2 == 0 { 64 } else { -64 });
+        assert_eq!(proof, Some(Acc16Proof { spill_pairs: 1 }));
+    }
+
+    #[test]
+    fn one_over_the_line_is_rejected() {
+        // |b0|+|b1| = 129 ⇒ 255·129 = 32895 > 32767: a single maddubs
+        // pair sum can saturate, so no proof exists.
+        let proof = acc16_saturation_proof(64, 8, |p, _| if p % 2 == 0 { 65 } else { -64 });
+        assert_eq!(proof, None);
+        // ...even if only ONE column is hot.
+        let proof = acc16_saturation_proof(64, 8, |p, j| {
+            if j == 7 && p < 2 {
+                if p == 0 {
+                    65
+                } else {
+                    64
+                }
+            } else {
+                1
+            }
+        });
+        assert_eq!(proof, None);
+    }
+
+    #[test]
+    fn small_weights_earn_wide_windows() {
+        // |b0|+|b1| = 4 ⇒ per-pair term 1020; 16 pairs sum to 16320,
+        // well under 32767 ⇒ the full 16-pair window certifies.
+        let proof = acc16_saturation_proof(200, 33, |_, _| 2);
+        assert_eq!(proof, Some(Acc16Proof { spill_pairs: 16 }));
+        // |b0|+|b1| = 16 ⇒ per-pair 4080; ×8 = 32640 ok, ×16 = 65280
+        // over ⇒ window 8.
+        let proof = acc16_saturation_proof(200, 33, |_, _| 8);
+        assert_eq!(proof, Some(Acc16Proof { spill_pairs: 8 }));
+    }
+
+    #[test]
+    fn odd_tail_row_is_not_part_of_the_proof() {
+        // k = 3: one pair block + the odd tail row. The tail row holds a
+        // huge value but the kernel folds it in i32, so only the pair
+        // block must certify.
+        let proof = acc16_saturation_proof(3, 4, |p, _| if p == 2 { -128 } else { 1 });
+        assert_eq!(proof, Some(Acc16Proof { spill_pairs: 1 }));
+    }
+
+    #[test]
+    fn degenerate_shapes_decline() {
+        assert_eq!(acc16_saturation_proof(1, 8, |_, _| 1), None);
+        assert_eq!(acc16_saturation_proof(0, 8, |_, _| 1), None);
+        assert_eq!(acc16_saturation_proof(8, 0, |_, _| 1), None);
+    }
+
+    #[test]
+    fn partial_final_window_is_checked() {
+        // pairs = 5, cap window 5: columns are tiny except the last
+        // pair, which alone exceeds the bound ⇒ every candidate window
+        // fails on its final (partial or aligned) window.
+        let proof = acc16_saturation_proof(10, 2, |p, _| if p >= 8 { 127 } else { 0 });
+        assert_eq!(proof, None);
+    }
+}

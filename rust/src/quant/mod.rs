@@ -8,8 +8,10 @@
 //! `C_temp = A_I · B_I` plus rank-1 correction terms, followed by a
 //! *requantization* step producing the 8-bit output tuple `(C_I, α_C, β_C)`.
 
+pub mod acc16;
 pub mod requantize;
 
+pub use acc16::{acc16_saturation_proof, Acc16Proof, ACC16_MAX_SPILL_PAIRS, ACC16_SHORT_K_MAX};
 pub use requantize::{
     requantize, requantize_cols_into, requantize_exclude_last_col, RequantEpilogue, RequantParams,
     RequantSpec,

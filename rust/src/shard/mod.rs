@@ -23,7 +23,7 @@ pub mod repair;
 pub mod router;
 pub mod store;
 
-pub use plan::ShardPlan;
+pub use plan::{HashPlacement, PlacementPolicy, RoundRobinPlacement, ShardPlan};
 pub use repair::RepairWorker;
 pub use router::ShardRouter;
 pub use store::{RepairOutcome, ReplicaState, ReplicaTables, Shard, ShardStats, ShardStore};

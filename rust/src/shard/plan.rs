@@ -1,15 +1,70 @@
 //! Placement: which shard owns each embedding table.
 //!
-//! Tables are placed **whole** (hash-of-table-id, not row ranges): a bag
-//! reads exactly one table, so whole-table placement keeps every bag's
-//! gather inside a single shard and makes the sharded reduction trivially
-//! bit-identical to the unsharded one — merging is a copy, never a
-//! float re-association. Row-range sharding (the NUMA item on the
-//! ROADMAP) would split a bag's sum across shards and force a float
-//! merge order; it stays future work.
+//! Tables are placed **whole** (not row ranges): a bag reads exactly one
+//! table, so whole-table placement keeps every bag's gather inside a
+//! single shard and makes the sharded reduction trivially bit-identical
+//! to the unsharded one — merging is a copy, never a float
+//! re-association. Row-range sharding (the NUMA item on the ROADMAP)
+//! would split a bag's sum across shards and force a float merge order;
+//! it stays future work.
+//!
+//! *Which* shard owns a table is a [`PlacementPolicy`] (PR 8): the plan
+//! builder takes any `table → shard` assignment strategy, while the plan
+//! itself stays a frozen, validated lookup structure — router, store,
+//! scrubber and repair never see the policy, only the materialized plan,
+//! so a new policy (size-balanced, traffic-aware, NUMA-topology…) plugs
+//! in without touching the serving path. [`HashPlacement`] is the
+//! default and reproduces the original hash-of-table-id layout
+//! byte-for-byte.
 
 use crate::util::json::Json;
 use crate::util::rng::splitmix64;
+
+/// A table→shard assignment strategy. Implementations must be
+/// deterministic (two calls with the same arguments return the same
+/// assignment) — plan equality, repair re-derivation and test
+/// reproducibility all lean on it.
+pub trait PlacementPolicy {
+    /// Return `assignment[t]` = owning shard for each of `num_tables`
+    /// tables; every entry must be `< num_shards`.
+    fn assign(&self, num_tables: usize, num_shards: usize) -> Vec<usize>;
+
+    /// Stable identifier surfaced in shard health/metrics output.
+    fn name(&self) -> &'static str;
+}
+
+/// Default policy: `shard(t) = splitmix64(t) mod num_shards`. Stateless
+/// and uniform-ish for any table count; identical to the pre-trait
+/// `hash_placement` layout.
+pub struct HashPlacement;
+
+impl PlacementPolicy for HashPlacement {
+    fn assign(&self, num_tables: usize, num_shards: usize) -> Vec<usize> {
+        (0..num_tables)
+            .map(|t| (splitmix64(t as u64) % num_shards as u64) as usize)
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "hash"
+    }
+}
+
+/// Round-robin policy: `shard(t) = t mod num_shards`. Deliberately
+/// boring — it exists to prove the seam is real (a second policy routes
+/// traffic correctly with zero serving-path changes) and as the shape
+/// a capacity-balanced policy would take.
+pub struct RoundRobinPlacement;
+
+impl PlacementPolicy for RoundRobinPlacement {
+    fn assign(&self, num_tables: usize, num_shards: usize) -> Vec<usize> {
+        (0..num_tables).map(|t| t % num_shards).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+}
 
 /// The shard topology: N shards × R replicas, plus the table→shard map.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -23,22 +78,39 @@ pub struct ShardPlan {
     shard_tables: Vec<Vec<usize>>,
     /// `slot[t]` = (shard, index of `t` within `shard_tables[shard]`).
     slot: Vec<(usize, usize)>,
+    /// Name of the policy that produced `assignment` (observability only
+    /// — routing reads the materialized maps, never the policy).
+    policy_name: &'static str,
 }
 
 impl ShardPlan {
-    /// Hash-of-table-id placement over `num_shards` shards with
-    /// `replicas` copies of each shard. Deterministic; shards may end up
-    /// empty when `num_shards` exceeds the table count (legal — the
-    /// router skips them).
-    pub fn hash_placement(num_tables: usize, num_shards: usize, replicas: usize) -> Self {
+    /// Materialize a plan from any [`PlacementPolicy`]: runs the policy
+    /// once, validates its assignment, and freezes the derived lookup
+    /// structures (per-shard table lists, table→slot map).
+    pub fn from_policy(
+        policy: &dyn PlacementPolicy,
+        num_tables: usize,
+        num_shards: usize,
+        replicas: usize,
+    ) -> Self {
         assert!(num_shards >= 1, "need at least one shard");
         assert!(replicas >= 1, "need at least one replica");
-        let assignment: Vec<usize> = (0..num_tables)
-            .map(|t| (splitmix64(t as u64) % num_shards as u64) as usize)
-            .collect();
+        let assignment = policy.assign(num_tables, num_shards);
+        assert_eq!(
+            assignment.len(),
+            num_tables,
+            "policy {} returned {} assignments for {num_tables} tables",
+            policy.name(),
+            assignment.len()
+        );
         let mut shard_tables = vec![Vec::new(); num_shards];
         let mut slot = vec![(0usize, 0usize); num_tables];
         for (t, &s) in assignment.iter().enumerate() {
+            assert!(
+                s < num_shards,
+                "policy {} placed table {t} on shard {s} of {num_shards}",
+                policy.name()
+            );
             slot[t] = (s, shard_tables[s].len());
             shard_tables[s].push(t);
         }
@@ -48,7 +120,17 @@ impl ShardPlan {
             assignment,
             shard_tables,
             slot,
+            policy_name: policy.name(),
         }
+    }
+
+    /// Hash-of-table-id placement over `num_shards` shards with
+    /// `replicas` copies of each shard — [`HashPlacement`] through
+    /// [`ShardPlan::from_policy`]. Deterministic; shards may end up
+    /// empty when `num_shards` exceeds the table count (legal — the
+    /// router skips them).
+    pub fn hash_placement(num_tables: usize, num_shards: usize, replicas: usize) -> Self {
+        Self::from_policy(&HashPlacement, num_tables, num_shards, replicas)
     }
 
     pub fn num_tables(&self) -> usize {
@@ -75,10 +157,16 @@ impl ShardPlan {
         self.shard_tables.iter().filter(|t| !t.is_empty()).count()
     }
 
+    /// Name of the policy that produced this plan.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy_name
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("num_shards", Json::Num(self.num_shards as f64)),
             ("replicas", Json::Num(self.replicas as f64)),
+            ("policy", Json::Str(self.policy_name.to_string())),
             (
                 "assignment",
                 Json::Arr(self.assignment.iter().map(|&s| Json::Num(s as f64)).collect()),
@@ -119,6 +207,17 @@ mod tests {
     }
 
     #[test]
+    fn hash_placement_layout_is_frozen() {
+        // The trait refactor must not move a single table: the default
+        // policy reproduces the original splitmix64 layout exactly.
+        let plan = ShardPlan::hash_placement(12, 4, 1);
+        for t in 0..12 {
+            assert_eq!(plan.shard_of(t), (splitmix64(t as u64) % 4) as usize);
+        }
+        assert_eq!(plan.policy_name(), "hash");
+    }
+
+    #[test]
     fn single_shard_owns_everything() {
         let plan = ShardPlan::hash_placement(5, 1, 1);
         assert_eq!(plan.tables_of(0), &[0, 1, 2, 3, 4]);
@@ -131,5 +230,39 @@ mod tests {
         assert!(plan.occupied_shards() <= 2);
         let total: usize = (0..16).map(|s| plan.tables_of(s).len()).sum();
         assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn alternate_policies_plug_in() {
+        let plan = ShardPlan::from_policy(&RoundRobinPlacement, 10, 3, 2);
+        assert_eq!(plan.policy_name(), "round_robin");
+        for t in 0..10 {
+            assert_eq!(plan.shard_of(t), t % 3);
+        }
+        // Derived structures hold for any legal policy.
+        let mut seen = vec![false; 10];
+        for s in 0..3 {
+            for &t in plan.tables_of(s) {
+                assert!(!seen[t]);
+                seen[t] = true;
+                assert_eq!(plan.slot_of(t).0, s);
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    #[should_panic(expected = "placed table")]
+    fn out_of_range_assignment_is_rejected() {
+        struct Broken;
+        impl PlacementPolicy for Broken {
+            fn assign(&self, num_tables: usize, num_shards: usize) -> Vec<usize> {
+                vec![num_shards; num_tables] // one past the end
+            }
+            fn name(&self) -> &'static str {
+                "broken"
+            }
+        }
+        ShardPlan::from_policy(&Broken, 3, 2, 1);
     }
 }

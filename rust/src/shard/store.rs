@@ -902,6 +902,7 @@ impl ShardStore {
         Json::obj(vec![
             ("num_shards", Json::Num(self.plan.num_shards as f64)),
             ("replicas_per_shard", Json::Num(self.plan.replicas as f64)),
+            ("placement", Json::Str(self.plan.policy_name().to_string())),
             ("detections", n(&self.stats.detections)),
             ("quarantines", n(&self.stats.quarantines)),
             ("failovers", n(&self.stats.failovers)),

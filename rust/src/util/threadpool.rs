@@ -8,7 +8,7 @@
 //! * Workers run jobs under `catch_unwind`, so a panicking job no longer
 //!   kills its worker thread (the pool keeps its full width for the life
 //!   of the process).
-//! * The queue is a `Mutex<VecDeque> + Condvar` rather than an `mpsc`
+//! * The queue is a mutex-guarded ring + condvar rather than an `mpsc`
 //!   channel: an idle `Receiver::recv` would pin the shared-receiver
 //!   mutex, and waiting threads could not *help* drain the queue. With
 //!   the condvar queue, [`ThreadPool::scope`]'s join loop pops and runs
@@ -18,8 +18,23 @@
 //!   completion edge is what makes a job's writes visible to the waiter)
 //!   and `Relaxed` for the pure count-up; scope joins are monitor-based
 //!   (mutex + condvar), so their happens-before comes from the lock.
+//!
+//! # Zero-allocation fan-out (PR 8)
+//!
+//! Submitting a job allocates **nothing** in steady state: jobs are
+//! type-erased into fixed [`SlotJob`] slots (closure bytes inlined up to
+//! [`SLOT_DATA`] bytes; larger closures fall back to one thin box) and
+//! queued on a fixed-capacity ring allocated once at pool construction,
+//! with an overflow deque only for burst spills past the ring. Scope
+//! joins are tracked by a [`ScopeSync`] + panic slot living **on the
+//! scope's stack frame** (no per-scope `Arc`s). Every fan-out closure in
+//! the crate's hot paths (GEMM row blocks, the EB stage) captures a few
+//! references and indices — far under [`SLOT_DATA`] — so large-batch
+//! fan-out performs zero steady-state allocations, which
+//! `rust/tests/zero_alloc.rs` asserts with a counting global allocator.
 
 use std::collections::VecDeque;
+use std::mem::{align_of, size_of, ManuallyDrop, MaybeUninit};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -28,13 +43,15 @@ use std::thread;
 /// First panic payload captured from a scope's jobs, re-raised at the
 /// scope boundary so the original message (e.g. an out-of-range-index
 /// assert from a parallel bag) is not replaced by a generic one.
-type PanicSlot = Arc<Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>>;
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
 
 /// Per-scope completion tracking: a counted mutex + condvar, so the
 /// joining thread can *block* once there is nothing left to steal,
 /// instead of yield-spinning a core while the last jobs finish on
 /// workers. The wait is time-bounded (see `Waiter`) so a nested scope
 /// whose jobs land on the queue after we block still gets stolen.
+/// Lives on the [`ThreadPool::scope`] stack frame — the scope's join
+/// guarantee is exactly what makes the borrow sound.
 struct ScopeSync {
     pending: Mutex<usize>,
     cv: Condvar,
@@ -42,9 +59,9 @@ struct ScopeSync {
 
 /// Decrements a scope's pending count on drop (panic-safe) and wakes
 /// the joiner when the count reaches zero.
-struct ScopeGuard(Arc<ScopeSync>);
+struct ScopeGuard<'a>(&'a ScopeSync);
 
-impl Drop for ScopeGuard {
+impl Drop for ScopeGuard<'_> {
     fn drop(&mut self) {
         let mut pending = self.0.pending.lock().unwrap();
         *pending -= 1;
@@ -65,16 +82,131 @@ pub const GEMM_PAR_MIN_WORK: usize = 1 << 21;
 /// EmbeddingBag — or the model's request-parallel EB stage — fans out.
 pub const EB_PAR_MIN_WORK: usize = 1 << 17;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+/// Inline closure capacity of a [`SlotJob`], in bytes. Sized so every
+/// hot-path fan-out closure (a handful of references plus indices,
+/// wrapped with the scope guard's two references) fits with headroom;
+/// oversized closures still work through one boxed indirection.
+const SLOT_DATA: usize = 96;
+
+/// Fixed-size closure payload. 16-byte aligned so any closure whose
+/// alignment is ≤ 16 (all of ours — captures are references, integers
+/// and small Copy structs) can be stored in place.
+#[repr(align(16))]
+struct JobPayload([MaybeUninit<u8>; SLOT_DATA]);
+
+/// A type-erased `FnOnce() + Send` in a fixed-size slot: the closure's
+/// bytes live inline when they fit (size ≤ [`SLOT_DATA`], align ≤ 16),
+/// else a thin `Box<F>` pointer does. `call`/`drop_fn` are monomorphized
+/// per closure type, so no fat vtable pointer and no per-job allocation
+/// on the inline path.
+struct SlotJob {
+    /// Consumes the payload and runs the closure.
+    call: unsafe fn(*mut JobPayload),
+    /// Drops the payload *without* running it (queue teardown).
+    drop_fn: unsafe fn(*mut JobPayload),
+    data: JobPayload,
+}
+
+// SAFETY: `SlotJob::new` only ever stores an `F: Send` (or a `Box<F>` of
+// one), and the payload is accessed by exactly one thread at a time.
+unsafe impl Send for SlotJob {}
+
+impl SlotJob {
+    /// Erase `f` into a slot.
+    ///
+    /// # Safety
+    /// The caller must guarantee the closure's captures outlive its
+    /// execution (or destruction) — the erased type may borrow non-
+    /// `'static` data, as [`Scope::spawn`] jobs do under the scope-join
+    /// guarantee.
+    unsafe fn new<F: FnOnce() + Send>(f: F) -> Self {
+        unsafe fn call_inline<F: FnOnce()>(p: *mut JobPayload) {
+            (p as *mut F).read()();
+        }
+        unsafe fn drop_inline<F>(p: *mut JobPayload) {
+            std::ptr::drop_in_place(p as *mut F);
+        }
+        unsafe fn call_boxed<F: FnOnce()>(p: *mut JobPayload) {
+            (p as *mut Box<F>).read()();
+        }
+        unsafe fn drop_boxed<F>(p: *mut JobPayload) {
+            std::ptr::drop_in_place(p as *mut Box<F>);
+        }
+        let mut data = JobPayload([MaybeUninit::uninit(); SLOT_DATA]);
+        if size_of::<F>() <= SLOT_DATA && align_of::<F>() <= align_of::<JobPayload>() {
+            (data.0.as_mut_ptr() as *mut F).write(f);
+            SlotJob {
+                call: call_inline::<F>,
+                drop_fn: drop_inline::<F>,
+                data,
+            }
+        } else {
+            (data.0.as_mut_ptr() as *mut Box<F>).write(Box::new(f));
+            SlotJob {
+                call: call_boxed::<F>,
+                drop_fn: drop_boxed::<F>,
+                data,
+            }
+        }
+    }
+
+    /// Run (and consume) the job.
+    fn run(self) {
+        let mut me = ManuallyDrop::new(self);
+        // SAFETY: the payload was initialized by `new` and `ManuallyDrop`
+        // prevents the destructor from double-dropping it.
+        unsafe { (me.call)(&mut me.data) };
+    }
+}
+
+impl Drop for SlotJob {
+    fn drop(&mut self) {
+        // Only reached for jobs destroyed without running (pool
+        // teardown with a non-empty queue).
+        unsafe { (self.drop_fn)(&mut self.data) };
+    }
+}
 
 struct Queue {
     state: Mutex<QueueState>,
     cv: Condvar,
 }
 
+/// FIFO job queue: a fixed ring (allocated once, never resized) with an
+/// overflow deque for bursts past the ring's capacity. Strict FIFO: the
+/// ring always holds the oldest jobs, so pops drain the ring first and
+/// pushes divert to overflow whenever overflow is non-empty.
 struct QueueState {
-    jobs: VecDeque<Job>,
+    ring: Box<[Option<SlotJob>]>,
+    head: usize,
+    len: usize,
+    overflow: VecDeque<SlotJob>,
     shutdown: bool,
+}
+
+impl QueueState {
+    fn push(&mut self, job: SlotJob) {
+        let cap = self.ring.len();
+        if self.overflow.is_empty() && self.len < cap {
+            let slot = (self.head + self.len) % cap;
+            self.ring[slot] = Some(job);
+            self.len += 1;
+        } else {
+            self.overflow.push_back(job);
+        }
+    }
+
+    fn pop(&mut self) -> Option<SlotJob> {
+        if self.len > 0 {
+            let job = self.ring[self.head].take();
+            debug_assert!(job.is_some(), "ring slot empty at head");
+            self.head = (self.head + 1) % self.ring.len();
+            self.len -= 1;
+            job
+        } else {
+            self.overflow.pop_front()
+        }
+    }
 }
 
 pub struct ThreadPool {
@@ -96,19 +228,27 @@ impl Drop for CountGuard {
     }
 }
 
-fn run_job(job: Job) {
+fn run_job(job: SlotJob) {
     // A panicking job must neither kill the worker nor leak the count
     // (the count is guarded by the caller). Swallow the payload; the
     // submitter observes the panic through `Scope` or its own channel.
-    let _ = catch_unwind(AssertUnwindSafe(job));
+    let _ = catch_unwind(AssertUnwindSafe(|| job.run()));
 }
 
 impl ThreadPool {
     pub fn new(size: usize) -> Self {
         assert!(size > 0);
+        // Ring capacity: every simultaneous scope_chunks fan-out spawns
+        // at most `size` jobs, so 4× size (min 64) keeps steady-state
+        // traffic — including a few nested scopes — off the overflow
+        // deque entirely.
+        let cap = (4 * size).next_power_of_two().max(64);
         let queue = Arc::new(Queue {
             state: Mutex::new(QueueState {
-                jobs: VecDeque::new(),
+                ring: (0..cap).map(|_| None).collect(),
+                head: 0,
+                len: 0,
+                overflow: VecDeque::new(),
                 shutdown: false,
             }),
             cv: Condvar::new(),
@@ -124,7 +264,7 @@ impl ThreadPool {
                         let job = {
                             let mut st = queue.state.lock().unwrap();
                             loop {
-                                if let Some(job) = st.jobs.pop_front() {
+                                if let Some(job) = st.pop() {
                                     break Some(job);
                                 }
                                 if st.shutdown {
@@ -157,20 +297,29 @@ impl ThreadPool {
         self.size
     }
 
-    fn submit(&self, job: Job) {
+    /// Erase and enqueue a job. Allocation-free whenever the closure
+    /// fits a [`SlotJob`] slot and the ring has room.
+    ///
+    /// # Safety
+    /// The closure's captures must outlive its execution/destruction;
+    /// `'static` closures ([`ThreadPool::execute`]) satisfy this
+    /// trivially, scope jobs via the scope-join guarantee.
+    unsafe fn submit_erased<F: FnOnce() + Send>(&self, f: F) {
         // Relaxed is enough for the increment: the queue mutex orders the
         // push against the pop, and completion (the edge that matters to
         // waiters) is Release in CountGuard.
         self.in_flight.fetch_add(1, Ordering::Relaxed);
+        let job = SlotJob::new(f);
         let mut st = self.queue.state.lock().unwrap();
         assert!(!st.shutdown, "pool shut down");
-        st.jobs.push_back(job);
+        st.push(job);
         drop(st);
         self.queue.cv.notify_one();
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.submit(Box::new(f));
+        // SAFETY: `'static` captures outlive everything.
+        unsafe { self.submit_erased(f) };
     }
 
     /// Jobs submitted but not yet finished.
@@ -185,7 +334,7 @@ impl ThreadPool {
     /// scopes deadlock-free (the waiter can always run its own
     /// outstanding jobs even when every worker is busy).
     fn try_run_one(&self) -> bool {
-        let job = self.queue.state.lock().unwrap().jobs.pop_front();
+        let job = self.queue.state.lock().unwrap().pop();
         match job {
             Some(job) => {
                 let _guard = CountGuard(Arc::clone(&self.in_flight));
@@ -219,20 +368,20 @@ impl ThreadPool {
     where
         F: FnOnce(&Scope<'_, 'env>) -> R,
     {
-        let scope = Scope {
-            pool: self,
-            sync: Arc::new(ScopeSync {
-                pending: Mutex::new(0),
-                cv: Condvar::new(),
-            }),
-            panic: Arc::new(Mutex::new(None)),
-            _env: std::marker::PhantomData,
+        // Join-tracking state lives on this frame (not in Arcs): the
+        // Waiter below guarantees every spawned job — which borrows
+        // these — completes before the frame is left, normally or by
+        // unwind.
+        let sync = ScopeSync {
+            pending: Mutex::new(0),
+            cv: Condvar::new(),
         };
+        let panic_slot: Mutex<Option<PanicPayload>> = Mutex::new(None);
         // The join must run even if `f` unwinds: jobs borrow `'env` data
         // and may not outlive this frame.
         struct Waiter<'a> {
             pool: &'a ThreadPool,
-            sync: Arc<ScopeSync>,
+            sync: &'a ScopeSync,
         }
         impl Drop for Waiter<'_> {
             fn drop(&mut self) {
@@ -267,11 +416,17 @@ impl ThreadPool {
         }
         let waiter = Waiter {
             pool: self,
-            sync: Arc::clone(&scope.sync),
+            sync: &sync,
+        };
+        let scope = Scope {
+            pool: self,
+            sync: &sync,
+            panic: &panic_slot,
+            _env: std::marker::PhantomData,
         };
         let r = f(&scope);
         drop(waiter); // join all spawned jobs
-        if let Some(payload) = scope.panic.lock().unwrap().take() {
+        if let Some(payload) = panic_slot.lock().unwrap().take() {
             std::panic::resume_unwind(payload);
         }
         r
@@ -376,42 +531,38 @@ impl ThreadPool {
 }
 
 /// Handle for spawning borrowed-data jobs inside [`ThreadPool::scope`].
-pub struct Scope<'pool, 'env> {
-    pool: &'pool ThreadPool,
-    sync: Arc<ScopeSync>,
-    panic: PanicSlot,
+pub struct Scope<'scope, 'env> {
+    pool: &'scope ThreadPool,
+    sync: &'scope ScopeSync,
+    panic: &'scope Mutex<Option<PanicPayload>>,
     // Invariant over 'env: closures may borrow anything outliving the
     // scope call, mutably or not.
     _env: std::marker::PhantomData<&'env mut &'env ()>,
 }
 
-impl<'pool, 'env> Scope<'pool, 'env> {
+impl<'scope, 'env> Scope<'scope, 'env> {
     pub fn spawn<F>(&self, f: F)
     where
         F: FnOnce() + Send + 'env,
     {
         *self.sync.pending.lock().unwrap() += 1;
-        let guard_sync = Arc::clone(&self.sync);
-        let panic = Arc::clone(&self.panic);
-        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
-            let _guard = ScopeGuard(guard_sync);
-            if let Err(payload) = catch_unwind(AssertUnwindSafe(f)) {
-                let mut slot = panic.lock().unwrap();
-                if slot.is_none() {
-                    *slot = Some(payload);
-                }
-            }
-        });
+        let sync = self.sync;
+        let panic = self.panic;
         // SAFETY: the scope's Waiter joins every spawned job before the
-        // 'env frame can be left (normally or by unwind), so the closure
-        // never outlives its borrows. Erasing the lifetime is what lets it
-        // ride the pool's 'static queue.
-        let job: Job = unsafe {
-            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Box<dyn FnOnce() + Send + 'static>>(
-                job,
-            )
-        };
-        self.pool.submit(job);
+        // scope frame (which owns `sync`/`panic` and bounds every 'env
+        // borrow) can be left, normally or by unwind — so neither the
+        // wrapper's captured references nor `f`'s captures can dangle.
+        unsafe {
+            self.pool.submit_erased(move || {
+                let _guard = ScopeGuard(sync);
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(f)) {
+                    let mut slot = panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+            });
+        }
     }
 }
 
@@ -618,5 +769,90 @@ mod tests {
             }
         });
         assert_eq!(x.iter().sum::<usize>(), (1..=16).sum());
+    }
+
+    #[test]
+    fn oversized_closures_run_through_the_boxed_path() {
+        // A capture far past SLOT_DATA must still execute correctly
+        // (thin-boxed into the slot) and drop cleanly when unexecuted.
+        let pool = ThreadPool::new(2);
+        let big = [7u64; 64]; // 512 bytes — way over the 96-byte slot
+        let sum = Arc::new(AtomicUsize::new(0));
+        let s2 = Arc::clone(&sum);
+        pool.execute(move || {
+            s2.fetch_add(big.iter().sum::<u64>() as usize, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(sum.load(Ordering::SeqCst), 7 * 64);
+    }
+
+    #[test]
+    fn queued_jobs_drop_their_captures_on_pool_teardown() {
+        // Jobs destroyed without running (shutdown with a full queue)
+        // must drop captures exactly once — both inline and boxed.
+        struct DropCounter(Arc<AtomicUsize>);
+        impl Drop for DropCounter {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let drops = Arc::new(AtomicUsize::new(0));
+        let ran = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(1);
+            // One slow job keeps the worker busy; everything behind it
+            // runs (or is dropped at teardown) — either way each
+            // DropCounter must fire exactly once.
+            pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(20)));
+            for i in 0..16 {
+                let d = DropCounter(Arc::clone(&drops));
+                let r = Arc::clone(&ran);
+                let big = [1u8; 200]; // force the boxed path for half of them
+                if i % 2 == 0 {
+                    pool.execute(move || {
+                        let _hold = &d;
+                        r.fetch_add(1, Ordering::SeqCst);
+                    });
+                } else {
+                    pool.execute(move || {
+                        let _hold = (&d, &big);
+                        r.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            }
+            pool.wait_idle();
+        }
+        assert_eq!(drops.load(Ordering::SeqCst), 16, "each capture drops once");
+        assert_eq!(ran.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn ring_overflow_keeps_fifo_order() {
+        // Push far more jobs than the ring holds while the lone worker
+        // is blocked; completion order must match submission order.
+        let pool = ThreadPool::new(1);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = Arc::clone(&gate);
+        pool.execute(move || {
+            let (lock, cv) = &*g2;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        });
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let total = 200usize; // ring cap is 64 for a 1-wide pool
+        for i in 0..total {
+            let order = Arc::clone(&order);
+            pool.execute(move || order.lock().unwrap().push(i));
+        }
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        pool.wait_idle();
+        let order = order.lock().unwrap();
+        assert_eq!(*order, (0..total).collect::<Vec<_>>());
     }
 }

@@ -8,7 +8,8 @@
 use dlrm_abft::abft::AbftGemm;
 use dlrm_abft::dlrm::{AbftLinear, Protection};
 use dlrm_abft::gemm::{
-    gemm_exec, gemm_requant_exec_into, gemm_requant_exec_into_scalar, simd_active, PackedB,
+    gemm_exec, gemm_requant_exec_into, gemm_requant_exec_into_scalar, set_kernel_tier_override,
+    simd_active, KernelTier, PackedB,
 };
 use dlrm_abft::quant::{
     quantize_slice_u8, requantize, requantize_cols_into, QParams, RequantEpilogue, RequantParams,
@@ -68,10 +69,32 @@ fn two_pass_reference(
     (c_temp, out)
 }
 
+/// RAII tier cap for the tier-parameterized grid: always restores "no
+/// override" on drop so a failing grid can't leak a cap into the other
+/// tests in this binary (which are cap-agnostic anyway — every tier is
+/// bit-identical).
+struct TierCap;
+
+impl TierCap {
+    fn set(tier: KernelTier) -> Self {
+        set_kernel_tier_override(Some(tier));
+        TierCap
+    }
+}
+
+impl Drop for TierCap {
+    fn drop(&mut self) {
+        set_kernel_tier_override(None);
+    }
+}
+
 /// The grid: shapes covering m=1, row pairs + odd row, panel boundaries
 /// (n = 31 / 32 / 33 / 64 / 65), odd k (in-register tail fold), and the
 /// GEMM_PAR_MIN_WORK crossing (row-parallel fused path); each × {plain,
-/// checksum-augmented} × {ReLU on, off}.
+/// checksum-augmented} × {ReLU on, off} — and the whole battery under
+/// every kernel-tier cap (PR 8), since the fused flow now runs
+/// tier-kernel + shared memory-sourced epilogue on the acc16/AVX-512
+/// tiers and must keep producing the same bytes.
 #[test]
 fn fused_epilogue_bit_identical_to_two_pass() {
     let mut rng = Pcg32::new(0xF05E);
@@ -87,41 +110,52 @@ fn fused_epilogue_bit_identical_to_two_pass() {
         (8, 255, 96),
         (19, 384, 320), // crosses GEMM_PAR_MIN_WORK → row-parallel fused
     ];
-    for &(m, k, n) in shapes {
-        for with_checksum in [false, true] {
-            for relu in [false, true] {
-                let (a, b) = rand_case(&mut rng, m, k, n);
-                let (qa, qb, qc) = qparams(&mut rng);
-                let packed = if with_checksum {
-                    AbftGemm::new(&b, k, n).packed
-                } else {
-                    PackedB::pack(&b, k, n)
-                };
-                let p = RequantParams::prepare(&a, &b, m, k, n, qa, qb, qc);
-                let relu_floor = if relu { qc.quantize_u8(0.0) } else { 0 };
-                let (want_c, want_out) = two_pass_reference(&a, &packed, m, &p, relu_floor);
+    for cap in [
+        KernelTier::Scalar,
+        KernelTier::Avx2,
+        KernelTier::Acc16,
+        KernelTier::Avx512,
+    ] {
+        let _cap = TierCap::set(cap);
+        for &(m, k, n) in shapes {
+            for with_checksum in [false, true] {
+                for relu in [false, true] {
+                    let (a, b) = rand_case(&mut rng, m, k, n);
+                    let (qa, qb, qc) = qparams(&mut rng);
+                    let packed = if with_checksum {
+                        AbftGemm::new(&b, k, n).packed
+                    } else {
+                        PackedB::pack(&b, k, n)
+                    };
+                    let p = RequantParams::prepare(&a, &b, m, k, n, qa, qb, qc);
+                    let relu_floor = if relu { qc.quantize_u8(0.0) } else { 0 };
+                    let (want_c, want_out) = two_pass_reference(&a, &packed, m, &p, relu_floor);
 
-                let nt = packed.n_total();
-                let epi = RequantEpilogue {
-                    spec: p.spec(),
-                    a_row_sums: &p.a_row_sums,
-                    b_col_sums: &p.b_col_sums,
-                    n_out: n,
-                    relu_floor,
-                };
-                let tag = format!("({m},{k},{n}) checksum={with_checksum} relu={relu}");
+                    let nt = packed.n_total();
+                    let epi = RequantEpilogue {
+                        spec: p.spec(),
+                        a_row_sums: &p.a_row_sums,
+                        b_col_sums: &p.b_col_sums,
+                        n_out: n,
+                        relu_floor,
+                    };
+                    let tag =
+                        format!("cap={cap:?} ({m},{k},{n}) checksum={with_checksum} relu={relu}");
 
-                let mut c_fused = vec![0i32; m * nt];
-                let mut out_fused = vec![0u8; m * n];
-                gemm_requant_exec_into(&a, &packed, m, &epi, &mut c_fused, &mut out_fused);
-                assert_eq!(c_fused, want_c, "fused C_temp diverged {tag}");
-                assert_eq!(out_fused, want_out, "fused output diverged {tag}");
+                    let mut c_fused = vec![0i32; m * nt];
+                    let mut out_fused = vec![0u8; m * n];
+                    gemm_requant_exec_into(&a, &packed, m, &epi, &mut c_fused, &mut out_fused);
+                    assert_eq!(c_fused, want_c, "fused C_temp diverged {tag}");
+                    assert_eq!(out_fused, want_out, "fused output diverged {tag}");
 
-                let mut c_scalar = vec![0i32; m * nt];
-                let mut out_scalar = vec![0u8; m * n];
-                gemm_requant_exec_into_scalar(&a, &packed, m, &epi, &mut c_scalar, &mut out_scalar);
-                assert_eq!(c_scalar, want_c, "scalar-forced C_temp diverged {tag}");
-                assert_eq!(out_scalar, want_out, "scalar-forced output diverged {tag}");
+                    let mut c_scalar = vec![0i32; m * nt];
+                    let mut out_scalar = vec![0u8; m * n];
+                    gemm_requant_exec_into_scalar(
+                        &a, &packed, m, &epi, &mut c_scalar, &mut out_scalar,
+                    );
+                    assert_eq!(c_scalar, want_c, "scalar-forced C_temp diverged {tag}");
+                    assert_eq!(out_scalar, want_out, "scalar-forced output diverged {tag}");
+                }
             }
         }
     }

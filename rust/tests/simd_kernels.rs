@@ -1,15 +1,66 @@
-//! Property tests for the vectorized hot path: the AVX2 GEMM microkernel,
-//! the scalar panel fallback, and the SIMD EmbeddingBag must be
-//! **bit-identical** to their reference implementations across a shape
-//! sweep that straddles every tiling boundary (NR panels, k pairing,
-//! m-row pairing, the ABFT extra column, and the m=1 serving case) — on
-//! hosts without AVX2 the dispatch degenerates to scalar and the same
-//! assertions hold for the fallback.
+//! Property tests for the vectorized hot path: every GEMM kernel tier
+//! (scalar, AVX2, int16-accumulation, AVX-512/VNNI), the scalar panel
+//! fallback, and the SIMD EmbeddingBag must be **bit-identical** to
+//! their reference implementations across a shape sweep that straddles
+//! every tiling boundary (NR panels, k pairing, m-row pairing, the ABFT
+//! extra column, and the m=1 serving case) — on hosts without the
+//! features the dispatch degenerates tier by tier and the same
+//! assertions hold for whatever actually runs. The tier-capped grids
+//! at the bottom pin each tier explicitly via the dispatch override.
 
 use dlrm_abft::abft::{AbftGemm, EbChecksum};
 use dlrm_abft::embedding::{bag_sum_8, bag_sum_8_scalar, QuantTable8};
-use dlrm_abft::gemm::{gemm_exec, gemm_exec_into, gemm_exec_into_scalar, gemm_naive, PackedB};
+use dlrm_abft::gemm::{
+    gemm_exec, gemm_exec_into, gemm_exec_into_scalar, gemm_naive, select_tier,
+    set_kernel_tier_override, simd_active, KernelTier, PackedB,
+};
 use dlrm_abft::util::rng::Pcg32;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Serializes tests that set the process-global kernel-tier override.
+/// The override is a *cap*, never a force — a concurrent test that
+/// doesn't take this lock still computes bit-identical results on
+/// whatever tier it lands on — so the lock only keeps the capped grids
+/// below from trampling each other's caps.
+fn tier_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    match LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// RAII tier cap: sets the override on construction, always restores
+/// "no override" on drop (panic-safe, so one failing grid can't leak a
+/// scalar cap into later tests).
+struct TierCap(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl TierCap {
+    fn set(tier: KernelTier) -> Self {
+        let guard = tier_lock();
+        set_kernel_tier_override(Some(tier));
+        TierCap(guard)
+    }
+}
+
+impl Drop for TierCap {
+    fn drop(&mut self) {
+        set_kernel_tier_override(None);
+    }
+}
+
+const ALL_TIERS: [KernelTier; 4] = [
+    KernelTier::Scalar,
+    KernelTier::Avx2,
+    KernelTier::Acc16,
+    KernelTier::Avx512,
+];
+
+/// Small-magnitude weights (±8) that always earn an acc16 certificate,
+/// so the `Acc16` cap actually reaches the int16 kernel on short-k packs.
+fn small_weights(rng: &mut Pcg32, len: usize) -> Vec<i8> {
+    (0..len).map(|_| (rng.gen_range(0, 17) as i32 - 8) as i8).collect()
+}
 
 fn rand_ab(rng: &mut Pcg32, m: usize, k: usize, n: usize) -> (Vec<u8>, Vec<i8>) {
     let mut a = vec![0u8; m * k];
@@ -196,4 +247,202 @@ fn parallel_gemm_matches_serial_on_large_batch() {
     let mut ser = vec![0i32; m * n];
     gemm_exec_into_scalar(&a, &packed, m, &mut ser);
     assert_eq!(par, ser);
+}
+
+// ---------------------------------------------------------------------
+// Tier-capped grids (PR 8): pin every dispatch tier explicitly.
+// ---------------------------------------------------------------------
+
+#[test]
+fn gemm_grid_bit_identical_on_every_tier_cap() {
+    // The full boundary battery under each tier cap, with both
+    // full-range weights (exercises AVX2/VNNI; acc16 ineligible, falls
+    // through) and small-magnitude weights (acc16-certified, so the
+    // Acc16 cap genuinely runs the int16 kernel on short-k packs) —
+    // plus the ABFT extra column on every shape.
+    let mut rng = Pcg32::new(0x7139);
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 5, 33),    // m=1 serving, odd k, ragged panel
+        (31, 64, 64),  // odd m tail under the pair blocking
+        (32, 65, 96),  // even m, odd k
+        (33, 63, 32),  // both odd, single panel
+        (2, 256, 33),  // acc16 k ceiling, full panel + 1-col tail
+        (16, 512, 513), // past the acc16 k ceiling (falls to AVX2)
+    ];
+    for cap in ALL_TIERS {
+        let _cap = TierCap::set(cap);
+        for &(m, k, n) in shapes {
+            for small in [false, true] {
+                let mut a = vec![0u8; m * k];
+                rng.fill_u8(&mut a);
+                let b = if small {
+                    small_weights(&mut rng, k * n)
+                } else {
+                    let mut b = vec![0i8; k * n];
+                    rng.fill_i8(&mut b);
+                    b
+                };
+                let mut extra = vec![0i8; k];
+                rng.fill_i8(&mut extra);
+                let packed = PackedB::pack_with_extra_col(&b, k, n, &extra);
+                let mut b_aug = vec![0i8; k * (n + 1)];
+                for p in 0..k {
+                    b_aug[p * (n + 1)..p * (n + 1) + n].copy_from_slice(&b[p * n..(p + 1) * n]);
+                    b_aug[p * (n + 1) + n] = extra[p];
+                }
+                let tag = format!("cap={cap:?} ({m},{k},{n}) small={small}");
+                // The cap only ever lowers the tier.
+                assert!(select_tier(&packed) <= cap, "{tag}: cap must bound the tier");
+                if cap == KernelTier::Acc16 && small && k <= 256 && simd_active() {
+                    assert!(
+                        packed.acc16_proof().is_some(),
+                        "{tag}: ±8 weights must certify"
+                    );
+                    assert_eq!(
+                        select_tier(&packed),
+                        KernelTier::Acc16,
+                        "{tag}: certified short-k pack must reach acc16"
+                    );
+                }
+                assert_eq!(
+                    gemm_exec(&a, &packed, m),
+                    gemm_naive(&a, &b_aug, m, k, n + 1),
+                    "{tag}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn acc16_saturation_certificate_gates_dispatch() {
+    // Adversarial i16-saturation battery from max-magnitude operands:
+    // (1) a weight pair one past the certifiable line must yield *no*
+    // certificate, and the Acc16 cap must fall through to an exact
+    // lower tier; (2) the max certifiable operand (|b0|+|b1| = 128,
+    // a = 255 everywhere — every pair term ±32640, 127 short of the i16
+    // cliff) must certify at spill window 1 and stay bit-exact through
+    // dispatch; (3) small weights earn a wide window and stay exact.
+    let _cap = TierCap::set(KernelTier::Acc16);
+
+    // (1) |64| + |65| = 129 ⇒ 255·129 = 32895 > 32767: rejected.
+    let (m, k, n) = (3usize, 64usize, 64usize);
+    let a = vec![255u8; m * k];
+    let b: Vec<i8> = (0..k * n)
+        .map(|idx| if (idx / n) % 2 == 0 { 65 } else { -64 })
+        .collect();
+    let packed = PackedB::pack(&b, k, n);
+    assert!(
+        packed.acc16_proof().is_none(),
+        "pair magnitude 129 must not certify"
+    );
+    assert_ne!(
+        select_tier(&packed),
+        KernelTier::Acc16,
+        "uncertified pack must never dispatch to acc16"
+    );
+    assert_eq!(gemm_exec(&a, &packed, m), gemm_naive(&a, &b, m, k, n));
+
+    // (2) |b0| + |b1| = 128 ⇒ 255·128 = 32640 ≤ 32767: certifies with
+    // the tightest window, and with all-255 activations every pair sum
+    // really is ±32640 — 127 short of the i16 cliff, exact only
+    // because the window-1 spill fires after every pair block (two
+    // same-sign sums would reach 65280 and wrap). Uniform +64 stresses
+    // the positive rail; a per-pair-block sign flip stresses both.
+    // (Alternating signs *within* a pair would cancel to 0 and test
+    // nothing.)
+    let (m, k, n) = (4usize, 256usize, 96usize);
+    let a = vec![255u8; m * k];
+    for flip_blocks in [false, true] {
+        let b: Vec<i8> = (0..k * n)
+            .map(|idx| {
+                let p = idx / n;
+                if flip_blocks && (p / 2) % 2 == 1 {
+                    -64
+                } else {
+                    64
+                }
+            })
+            .collect();
+        let packed = PackedB::pack(&b, k, n);
+        let proof = packed.acc16_proof().expect("boundary operand certifies");
+        assert_eq!(proof.spill_pairs, 1, "boundary operand needs spill window 1");
+        if simd_active() {
+            assert_eq!(select_tier(&packed), KernelTier::Acc16);
+        }
+        assert_eq!(
+            gemm_exec(&a, &packed, m),
+            gemm_naive(&a, &b, m, k, n),
+            "flip_blocks={flip_blocks}"
+        );
+    }
+
+    // (3) ±8 weights, max activations, odd k: wide spill window, exact.
+    let mut rng = Pcg32::new(0xACCE);
+    let (m, k, n) = (5usize, 199usize, 64usize);
+    let a = vec![255u8; m * k];
+    let b = small_weights(&mut rng, k * n);
+    let packed = PackedB::pack(&b, k, n);
+    let proof = packed.acc16_proof().expect("±8 weights certify");
+    assert!(proof.spill_pairs >= 4, "small weights earn a wide window");
+    assert_eq!(gemm_exec(&a, &packed, m), gemm_naive(&a, &b, m, k, n));
+}
+
+#[test]
+fn abft_verify_and_detect_hold_on_every_tier_cap() {
+    // The protected GEMM (checksum + group columns packed in) must
+    // verify clean and catch an injected payload flip on every tier —
+    // verify/correct read the stored accumulator and the pack's logical
+    // offsets, so they are tier-agnostic by construction; this pins it.
+    let mut rng = Pcg32::new(0xAB77);
+    for cap in ALL_TIERS {
+        let _cap = TierCap::set(cap);
+        for &(m, k, n, small) in &[
+            (4usize, 100usize, 33usize, false),
+            (6, 128, 64, true), // acc16-certified under the Acc16 cap
+            (16, 512, 512, false),
+        ] {
+            let mut a = vec![0u8; m * k];
+            rng.fill_u8(&mut a);
+            let b = if small {
+                small_weights(&mut rng, k * n)
+            } else {
+                let mut b = vec![0i8; k * n];
+                rng.fill_i8(&mut b);
+                b
+            };
+            let mut abft = AbftGemm::new(&b, k, n);
+            let (_, verdict) = abft.exec(&a, m);
+            assert!(verdict.clean(), "cap={cap:?} clean ({m},{k},{n})");
+            let p = rng.gen_range(0, k);
+            let j = rng.gen_range(0, n);
+            let idx = abft.packed.offset(p, j);
+            let old = abft.packed.at(p, j);
+            abft.packed.data_mut()[idx] = (old as u8 ^ 0x40) as i8;
+            let (_, verdict) = abft.exec(&a, m);
+            assert!(!verdict.clean(), "cap={cap:?} corrupt ({m},{k},{n}) escaped");
+        }
+    }
+}
+
+#[test]
+fn parallel_gemm_matches_serial_on_every_tier_cap() {
+    // The row-parallel crossing under each cap: fan-out chunking must
+    // compose with every kernel tier bit-identically. Small weights so
+    // the Acc16 cap actually runs the int16 kernel (k = 200 ≤ 256).
+    let mut rng = Pcg32::new(0x9AA);
+    let (m, k, n) = (64usize, 200usize, 256usize);
+    let mut a = vec![0u8; m * k];
+    rng.fill_u8(&mut a);
+    let b = small_weights(&mut rng, k * n);
+    let packed = PackedB::pack(&b, k, n);
+    assert!(m * k * n >= 1 << 21, "shape must cross GEMM_PAR_MIN_WORK");
+    let mut ser = vec![0i32; m * n];
+    gemm_exec_into_scalar(&a, &packed, m, &mut ser);
+    for cap in ALL_TIERS {
+        let _cap = TierCap::set(cap);
+        let mut par = vec![0i32; m * n];
+        gemm_exec_into(&a, &packed, m, &mut par);
+        assert_eq!(par, ser, "cap={cap:?}");
+    }
 }

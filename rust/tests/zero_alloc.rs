@@ -2,11 +2,13 @@
 //! after warmup, `Engine::score` must perform **zero** heap allocations
 //! on the clean serving path — unsharded and sharded.
 //!
-//! A counting global allocator tallies every `alloc`/`realloc`. The test
-//! keeps batches below the kernel fan-out gates so the whole pass runs
-//! inline on the caller thread (pool workers would otherwise allocate
-//! job boxes — kernel parallelism is amortized differently and measured
-//! by the perf benches, not this invariant). This file holds exactly one
+//! A counting global allocator tallies every `alloc`/`realloc`. The
+//! invariant covers the kernel fan-out path too (PR 8): the thread pool
+//! type-erases jobs into fixed slots on a pre-allocated ring and tracks
+//! scope joins on the scope's stack frame, so a batch large enough to
+//! cross the GEMM/EB parallelism gates still scores with zero steady-
+//! state allocations. Small-batch phases prove the inline path, the
+//! `fanout` phase proves the parallel one. This file holds exactly one
 //! `#[test]` so no concurrent test case can pollute the counter.
 
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -49,6 +51,27 @@ fn tiny_model(seed: u64) -> DlrmModel {
         tables: vec![
             TableConfig { rows: 400, pooling: 6 },
             TableConfig { rows: 300, pooling: 4 },
+        ],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed,
+    })
+}
+
+/// A model + batch shape that crosses BOTH kernel fan-out gates, so the
+/// scored pass exercises pool submission, the slot ring, and stack-frame
+/// scope joins: bottom layer 0 is m·k·n_total = 128·64·(256+extras)
+/// ≥ `GEMM_PAR_MIN_WORK` (2^21) MACs, and the EB stage sums
+/// Σ pooling·d·batch = 70·16·128 = 143,360 ≥ `EB_PAR_MIN_WORK` (2^17).
+fn fanout_model(seed: u64) -> DlrmModel {
+    DlrmModel::random(DlrmConfig {
+        num_dense: 64,
+        embedding_dim: 16,
+        bottom_mlp: vec![256, 16],
+        top_mlp: vec![32],
+        tables: vec![
+            TableConfig { rows: 400, pooling: 40 },
+            TableConfig { rows: 300, pooling: 30 },
         ],
         protection: Protection::DetectRecompute,
         dense_range: (0.0, 1.0),
@@ -134,6 +157,15 @@ fn engine_score_steady_state_is_allocation_free() {
     let profiled = Engine::new(tiny_model(0x21));
     profiled.obs().set_sampling(1);
     steady_state_allocs(&profiled, 4, "profiled");
+
+    // Fan-out: a batch crossing the GEMM and EB parallelism gates runs
+    // row blocks and request chunks on the global pool. The fixed-slot
+    // job ring + stack-frame scope state (PR 8) make pool submission
+    // allocation-free, so the invariant now holds through parallel
+    // scoring too — this was the "workers box one closure per job"
+    // carve-out in earlier revisions of this test.
+    let fanout = Engine::new(fanout_model(0x21));
+    steady_state_allocs(&fanout, 128, "fanout");
 
     // Request parsing: the zero-alloc boundary extends to the socket.
     steady_state_parse_allocs();
