@@ -42,6 +42,7 @@ fn sample_event(i: u32) -> FaultEvent {
     FaultEvent {
         tick: i as u64,
         ctl_tick: 0,
+        flow: i as u64 + 1,
         site: SiteId::Eb(i % 8),
         unit: UnitRef::Bag { request: i, replica: i % 2 },
         detector: Detector::EbBound,

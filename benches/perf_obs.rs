@@ -11,8 +11,15 @@
 //! * Stage breakdown — the per-stage span histograms (count, total,
 //!   p50/p99) accumulated over the profiled legs.
 //!
-//! Env: `QUICK=1` shrinks iteration counts; `BENCH_OUT=path` overrides
-//! the output file. Run: `cargo bench --bench perf_obs`.
+//! * Flight-recorder idle cost (PR 9, emitted as `BENCH_PR9.json`) —
+//!   armed-vs-disarmed `score` throughput on clean traffic, interleaved
+//!   A/B legs. Arming must be free when idle: the freeze path hangs off
+//!   the fault-only sink emit, so the clean path never consults the
+//!   recorder. Acceptance: overhead < 1%.
+//!
+//! Env: `QUICK=1` shrinks iteration counts; `BENCH_OUT=path` /
+//! `BENCH_OUT_PR9=path` override the output files. Run:
+//! `cargo bench --bench perf_obs`.
 
 use std::time::Instant;
 
@@ -150,10 +157,66 @@ fn measured_section(engine: &Engine) -> Json {
     ])
 }
 
+/// Armed-vs-disarmed flight recorder on clean traffic: twin engines,
+/// interleaved A/B rounds so drift (thermal, frequency, page cache)
+/// hits both legs equally. The armed engine carries a full capture pool
+/// but never faults, so any measured delta is the cost of *being armed*.
+fn flightrec_section(quick: bool) -> Json {
+    let iters = if quick { 20 } else { 200 };
+    let batch = 16usize;
+    let disarmed = Engine::new(engine_model());
+    let armed = Engine::new(engine_model());
+    armed.arm_flightrec(
+        dlrm_abft::obs::DEFAULT_CAPTURES,
+        dlrm_abft::detect::Severity::Significant,
+    );
+    let reqs = {
+        let model = disarmed.model.read().unwrap();
+        synth(&model, batch, 0x0B58)
+    };
+    let mut scores = vec![0f32; batch];
+    for _ in 0..3 {
+        disarmed.score(&reqs, &mut scores);
+        armed.score(&reqs, &mut scores);
+    }
+    let mut wall = [0f64; 2];
+    for _ in 0..iters {
+        for (i, engine) in [&disarmed, &armed].into_iter().enumerate() {
+            let t = Instant::now();
+            std::hint::black_box(engine.score(&reqs, &mut scores));
+            wall[i] += t.elapsed().as_secs_f64();
+        }
+    }
+    let rps = |w: f64| (iters * batch) as f64 / w;
+    let overhead_pct = (wall[1] / wall[0] - 1.0) * 100.0;
+    Json::obj(vec![
+        ("batch", num(batch as f64)),
+        ("iters", num(iters as f64)),
+        ("disarmed_req_per_s", num(round3(rps(wall[0])))),
+        ("armed_req_per_s", num(round3(rps(wall[1])))),
+        ("armed_idle_overhead_pct", num(round3(overhead_pct))),
+        // Acceptance: armed-but-idle < 1%. Measured on shared CI iron,
+        // so the flag is advisory (noise can exceed the margin); the
+        // recorded percentage is the number that matters.
+        ("within_1pct", Json::Bool(overhead_pct < 1.0)),
+    ])
+}
+
+fn host_json() -> Json {
+    Json::obj(vec![
+        ("avx2", Json::Bool(simd_active())),
+        (
+            "threads",
+            num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0) as f64),
+        ),
+    ])
+}
+
 fn main() {
     let quick = std::env::var("QUICK").map(|v| v == "1").unwrap_or(false)
         || std::env::args().any(|a| a == "--quick");
     let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_PR7.json".into());
+    let out_path_pr9 = std::env::var("BENCH_OUT_PR9").unwrap_or_else(|_| "BENCH_PR9.json".into());
 
     eprintln!("perf_obs: avx2={} quick={quick}", simd_active());
     let (sampling, engine) = sampling_section(quick);
@@ -164,16 +227,7 @@ fn main() {
 
     let doc = Json::obj(vec![
         ("bench", Json::Str("perf_obs_pr7".into())),
-        (
-            "host",
-            Json::obj(vec![
-                ("avx2", Json::Bool(simd_active())),
-                (
-                    "threads",
-                    num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0) as f64),
-                ),
-            ]),
-        ),
+        ("host", host_json()),
         ("sampling", sampling),
         ("measured_overhead", measured),
         ("stage_breakdown", breakdown),
@@ -182,4 +236,16 @@ fn main() {
     std::fs::write(&out_path, &text).expect("write bench output");
     println!("{text}");
     eprintln!("perf_obs: wrote {out_path}");
+
+    let flightrec = flightrec_section(quick);
+    eprintln!("perf_obs: flight-recorder idle overhead done");
+    let doc9 = Json::obj(vec![
+        ("bench", Json::Str("perf_flightrec_pr9".into())),
+        ("host", host_json()),
+        ("flightrec_idle", flightrec),
+    ]);
+    let text9 = format!("{doc9}");
+    std::fs::write(&out_path_pr9, &text9).expect("write bench output");
+    println!("{text9}");
+    eprintln!("perf_obs: wrote {out_path_pr9}");
 }

@@ -19,7 +19,7 @@ use crate::detect::{
 use crate::dlrm::{
     DlrmModel, DlrmRequest, EbStage, InferenceReport, InferenceScratch, LocalEbStage, Protection,
 };
-use crate::obs::{render_prometheus, ObsHandle, Stage};
+use crate::obs::{render_prometheus, FlightRecorder, ObsHandle, Stage};
 use crate::policy::{
     build_neighbors, ControllerThread, PolicyConfig, PolicyController, PolicyHandle, PolicySites,
     PolicyState, StepReport,
@@ -375,6 +375,45 @@ impl Engine {
         rt.controller.lock().unwrap().restore(&state)
     }
 
+    /// Arm the fault flight recorder ([`crate::obs::flightrec`]): every
+    /// event the sink journals at or above `min_severity` freezes a
+    /// `BlackBox` capture (span rings + policy plane + shard health +
+    /// kernel tiers) into a pool of `captures` slots. Call **after**
+    /// `with_policy` / `with_shards` so their snapshot closures get
+    /// wired; arming is idempotent at the sink (first recorder wins).
+    /// The clean path never consults the recorder — armed-but-idle cost
+    /// is zero beyond the probes that already exist.
+    pub fn arm_flightrec(&self, captures: usize, min_severity: Severity) -> Arc<FlightRecorder> {
+        let gemm_sites = self.obs.core().map_or(1, |c| c.num_gemm_sites());
+        let rec = Arc::new(FlightRecorder::new(captures, min_severity, gemm_sites));
+        if let Some(core) = self.obs.core_arc() {
+            rec.attach_obs(Arc::clone(core));
+        }
+        if let Some(rt) = &self.policy {
+            let sites = Arc::clone(&rt.sites);
+            let controller = Arc::clone(&rt.controller);
+            rec.attach_policy_snapshot(Box::new(move || {
+                // try_lock: a freeze racing a controller tick skips the
+                // policy block rather than ever stalling the fault path.
+                match controller.try_lock() {
+                    Ok(c) => policy_json(&sites, &c),
+                    Err(_) => Json::Null,
+                }
+            }));
+        }
+        if let Some(sh) = &self.shards {
+            let store = Arc::clone(&sh.store);
+            rec.attach_shard_snapshot(Box::new(move || store.health_json()));
+        }
+        self.sink.attach_recorder(Arc::clone(&rec));
+        rec
+    }
+
+    /// The armed flight recorder, when [`Engine::arm_flightrec`] ran.
+    pub fn flightrec(&self) -> Option<&Arc<FlightRecorder>> {
+        self.sink.recorder()
+    }
+
     /// The shard store, when this engine serves sharded.
     pub fn shard_store(&self) -> Option<&Arc<ShardStore>> {
         self.shards.as_ref().map(|s| &s.store)
@@ -599,6 +638,11 @@ impl Engine {
     /// (injection mutates the model transiently).
     pub fn score(&self, requests: &[DlrmRequest], scores: &mut [f32]) -> BatchOutcome {
         let t0 = Instant::now();
+        // Each scored batch is one causal flow: every span this thread
+        // records and every fault the sink journals until the guard
+        // drops carries this ID, so a flight-recorder capture can
+        // reconstruct the batch's timeline.
+        let _flow = crate::obs::flow::FlowGuard::enter(crate::obs::flow::mint());
         // One journal tick per scored batch: events stamp the batch they
         // occurred in.
         self.sink.advance_tick();
@@ -729,6 +773,9 @@ impl Engine {
             if let Some(rt) = &self.policy {
                 let controller = rt.controller.lock().unwrap();
                 map.insert("policy".to_string(), policy_json(&rt.sites, &controller));
+            }
+            if let Some(rec) = self.sink.recorder() {
+                map.insert("flightrec".to_string(), rec.status_json());
             }
         }
         snap

@@ -10,12 +10,17 @@
 //!     (counters, latency quantiles, events/shards/policy/obs blocks)
 //!   → `{"op": "events", "max": N}`         — journal counts + newest rows
 //!   → `{"op": "events", "since_tick": S}`  — only rows past journal
-//!     sequence `S` (the reply's `next_cursor` feeds the next call, so a
-//!     follower never re-reads or misses a row; `max` still caps)
+//!     sequence `S` (the reply's `next_cursor` feeds the next call; the
+//!     reply's `gap` counts rows the ring already overwrote past the
+//!     cursor — 0 means the follower lost nothing; `max` still caps)
 //!   → `{"op": "trace", "max": N}`          — newest sampled profiler
 //!     spans + per-stage latency quantiles (see `crate::obs`)
 //!   → `{"op": "prom"}`                     — the metrics snapshot as
 //!     Prometheus text exposition, in `{"text": "..."}`
+//!   → `{"op": "flightrec"}`                — flight-recorder capture
+//!     index; with `"id": N` the full `BlackBox` JSON for capture `N`,
+//!     with `"clear": true` drop resident captures (see
+//!     `crate::obs::flightrec`; errors when the recorder is not armed)
 //!   → `{"op": "ping"}`                     — liveness
 //!
 //! # Sharded batch loops
@@ -183,6 +188,10 @@ fn handle_conn(stream: TcpStream, batcher: Arc<Batcher<Pending>>, engine: Arc<En
             continue;
         }
         let mut req = slab.pop().unwrap_or_default();
+        // Each inbound line is one causal flow: the parse span this
+        // thread records carries it (scoring spans carry the batch's
+        // flow, minted in `Engine::score` on the batch-loop thread).
+        let _flow = crate::obs::flow::FlowGuard::enter(crate::obs::flow::mint());
         let probe = engine.obs().probe();
         let t0 = probe.map(|_| std::time::Instant::now());
         let parsed_fast = req.parse_line_into(trimmed);
@@ -233,6 +242,23 @@ fn handle_conn(stream: TcpStream, batcher: Arc<Batcher<Pending>>, engine: Arc<En
                         Json::obj(vec![("text", Json::Str(engine.prom_text()))])
                     )?
                 }
+                // Flight-recorder index / capture fetch / clear.
+                "flightrec" => match engine.flightrec() {
+                    None => writeln!(writer, "{}", err_json("flight recorder not armed"))?,
+                    Some(rec) => {
+                        if parsed.get("clear").and_then(Json::as_bool) == Some(true) {
+                            rec.clear();
+                            writeln!(writer, "{}", rec.status_json())?;
+                        } else if let Some(id) = parsed.get("id").and_then(Json::as_usize) {
+                            match rec.capture_json(id as u64) {
+                                Some(j) => writeln!(writer, "{}", j)?,
+                                None => writeln!(writer, "{}", err_json("no such capture"))?,
+                            }
+                        } else {
+                            writeln!(writer, "{}", rec.list_json())?;
+                        }
+                    }
+                },
                 "ping" => writeln!(writer, "{}", Json::obj(vec![("pong", Json::Bool(true))]))?,
                 _ => writeln!(writer, "{}", err_json("unknown op"))?,
             }
@@ -339,6 +365,34 @@ impl Client {
     /// Recent profiler spans + per-stage quantiles (`{"op":"trace"}`).
     pub fn trace(&mut self, max: usize) -> Result<Json> {
         writeln!(self.writer, "{{\"op\":\"trace\",\"max\":{max}}}")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim())?)
+    }
+
+    /// The flight-recorder capture index (`{"op":"flightrec"}`).
+    pub fn flightrec_list(&mut self) -> Result<Json> {
+        writeln!(self.writer, "{{\"op\":\"flightrec\"}}")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim())?)
+    }
+
+    /// One full `BlackBox` capture by id (`{"op":"flightrec","id":N}`).
+    pub fn flightrec_capture(&mut self, id: u64) -> Result<Json> {
+        writeln!(self.writer, "{{\"op\":\"flightrec\",\"id\":{id}}}")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim())?)
+    }
+
+    /// Drop resident captures (`{"op":"flightrec","clear":true}`);
+    /// returns the post-clear recorder status.
+    pub fn flightrec_clear(&mut self) -> Result<Json> {
+        writeln!(self.writer, "{{\"op\":\"flightrec\",\"clear\":true}}")?;
         self.writer.flush()?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
@@ -465,6 +519,54 @@ mod tests {
         assert_eq!(
             engine.metrics.requests.load(std::sync::atomic::Ordering::Relaxed),
             36
+        );
+        server.stop();
+    }
+
+    #[test]
+    fn flightrec_op_lists_fetches_and_clears_captures() {
+        use crate::detect::{Detector, Resolution, Severity, SiteId, UnitRef};
+        // Disarmed: explicit error, connection stays usable.
+        let server = Server::start("127.0.0.1:0", tiny_engine(), fast_policy()).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let r = client.flightrec_list().unwrap();
+        assert_eq!(
+            r.get("error").and_then(Json::as_str),
+            Some("flight recorder not armed")
+        );
+        server.stop();
+
+        // Armed: a Significant event freezes a capture the op serves.
+        let engine = tiny_engine();
+        engine.arm_flightrec(4, Severity::Significant);
+        engine.event_sink().emit(
+            SiteId::Gemm(0),
+            UnitRef::GemmRow { row: 3 },
+            Detector::GemmChecksum,
+            Severity::Significant,
+            Resolution::DetectedOnly,
+        );
+        let server = Server::start("127.0.0.1:0", Arc::clone(&engine), fast_policy()).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let list = client.flightrec_list().unwrap();
+        assert_eq!(
+            list.path(&["status", "captures"]).and_then(Json::as_usize),
+            Some(1)
+        );
+        let rows = list.get("captures").and_then(Json::as_arr).unwrap();
+        let id = rows[0].get("id").and_then(Json::as_usize).unwrap() as u64;
+        let cap = client.flightrec_capture(id).unwrap();
+        assert_eq!(
+            cap.path(&["event", "severity"]).and_then(Json::as_str),
+            Some("significant")
+        );
+        assert!(client.flightrec_capture(999).unwrap().get("error").is_some());
+        let cleared = client.flightrec_clear().unwrap();
+        assert_eq!(cleared.get("resident").and_then(Json::as_usize), Some(0));
+        let m = client.metrics().unwrap();
+        assert!(
+            m.get("flightrec").is_some(),
+            "snapshot embeds recorder status when armed"
         );
         server.stop();
     }

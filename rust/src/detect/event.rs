@@ -117,8 +117,10 @@ pub const EB_SIGNIFICANT_MARGIN: f64 = 32.0;
 /// split).
 pub const SCRUB_SIGNIFICANT_DELTA: i64 = 16;
 
-/// How far past its detection threshold the flag landed.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// How far past its detection threshold the flag landed. Ordered:
+/// `NearBound < Significant`, so severity floors (e.g. the flight
+/// recorder's freeze threshold) are plain comparisons.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Severity {
     /// Barely past the threshold — plausibly a low-significance bit.
     NearBound,
@@ -160,6 +162,15 @@ impl Severity {
         match self {
             Severity::NearBound => "near_bound",
             Severity::Significant => "significant",
+        }
+    }
+
+    /// Inverse of [`Severity::as_str`] (CLI / config parsing).
+    pub fn from_label(s: &str) -> Option<Severity> {
+        match s {
+            "near_bound" => Some(Severity::NearBound),
+            "significant" => Some(Severity::Significant),
+            _ => None,
         }
     }
 }
@@ -246,6 +257,13 @@ pub struct FaultEvent {
     /// window that saw it (0 when no controller is attached). Truncated
     /// to [`CTL_TICK_MASK`] on the wire.
     pub ctl_tick: u64,
+    /// Flow (request/batch) ID the emitting thread was working under
+    /// ([`crate::obs::flow`]), stamped by the sink at emit time; 0 when
+    /// unattributed (background scrubbers, standalone emitters). This is
+    /// what correlates an event with its request's span timeline in a
+    /// flight-recorder capture. Carried in its own journal word — the
+    /// `(meta, aux)` pair is fully packed.
+    pub flow: u64,
     pub site: SiteId,
     pub unit: UnitRef,
     pub detector: Detector,
@@ -265,6 +283,8 @@ pub struct FaultEvent {
 //   bits 32..35 resolution step (Recovery)
 //   bits 35..64 controller tick (29 bits, truncated)
 // aux word: unit payload — low u32 = row / request, high u32 = replica.
+// The flow ID does not fit here; journal slots carry it in a dedicated
+// word, threaded back through `decode`'s `flow` parameter.
 
 const SITE_IDX_MASK: u64 = (1 << 24) - 1;
 
@@ -312,8 +332,9 @@ impl FaultEvent {
         (meta, lo as u64 | (hi as u64) << 32)
     }
 
-    /// Inverse of [`FaultEvent::encode`].
-    pub fn decode(meta: u64, aux: u64, tick: u64) -> Self {
+    /// Inverse of [`FaultEvent::encode`]; `tick` and `flow` ride their
+    /// own journal words.
+    pub fn decode(meta: u64, aux: u64, tick: u64, flow: u64) -> Self {
         let site_idx = ((meta >> 1) & SITE_IDX_MASK) as u32;
         let site = if meta & 1 == 0 {
             SiteId::Gemm(site_idx)
@@ -347,7 +368,7 @@ impl FaultEvent {
             _ => Resolution::Degraded,
         };
         let ctl_tick = meta >> 35;
-        Self { tick, ctl_tick, site, unit, detector, severity, resolution }
+        Self { tick, ctl_tick, flow, site, unit, detector, severity, resolution }
     }
 
     /// JSON row for the `events` server op.
@@ -388,6 +409,7 @@ impl FaultEvent {
         Json::obj(vec![
             ("tick", Json::Num(self.tick as f64)),
             ("ctl_tick", Json::Num(self.ctl_tick as f64)),
+            ("flow", Json::Num(self.flow as f64)),
             ("site", Json::Str(self.site.label())),
             ("unit", unit),
             ("detector", Json::Str(self.detector.as_str().into())),
@@ -406,6 +428,7 @@ mod tests {
             FaultEvent {
                 tick: 0,
                 ctl_tick: 0,
+                flow: 11,
                 site: SiteId::Gemm(0),
                 unit: UnitRef::GemmRow { row: 7 },
                 detector: Detector::GemmChecksum,
@@ -415,6 +438,7 @@ mod tests {
             FaultEvent {
                 tick: 42,
                 ctl_tick: 17,
+                flow: 12,
                 site: SiteId::Eb(3),
                 unit: UnitRef::Bag { request: 5, replica: 1 },
                 detector: Detector::EbBound,
@@ -424,6 +448,7 @@ mod tests {
             FaultEvent {
                 tick: u32::MAX as u64 + 9,
                 ctl_tick: CTL_TICK_MASK,
+                flow: 0,
                 site: SiteId::Eb(2),
                 unit: UnitRef::ScrubSlot { replica: LOCAL_REPLICA, row: 3_999_999 },
                 detector: Detector::ScrubExact,
@@ -433,6 +458,7 @@ mod tests {
             FaultEvent {
                 tick: 1,
                 ctl_tick: 3,
+                flow: 13,
                 site: SiteId::Gemm(6),
                 unit: UnitRef::BatchAggregate,
                 detector: Detector::GemmAggregate,
@@ -442,6 +468,7 @@ mod tests {
             FaultEvent {
                 tick: 2,
                 ctl_tick: 0,
+                flow: 14,
                 site: SiteId::Eb(0),
                 unit: UnitRef::Bag { request: 0, replica: LOCAL_REPLICA },
                 detector: Detector::EbBound,
@@ -455,7 +482,7 @@ mod tests {
     fn encode_roundtrips_every_variant() {
         for ev in sample_events() {
             let (meta, aux) = ev.encode();
-            assert_eq!(FaultEvent::decode(meta, aux, ev.tick), ev);
+            assert_eq!(FaultEvent::decode(meta, aux, ev.tick, ev.flow), ev);
         }
     }
 
@@ -496,6 +523,7 @@ mod tests {
         let ev = &sample_events()[1];
         let j = ev.to_json();
         assert_eq!(j.get("ctl_tick").and_then(Json::as_usize), Some(17));
+        assert_eq!(j.get("flow").and_then(Json::as_usize), Some(12));
         assert_eq!(j.get("site").and_then(Json::as_str), Some("eb/3"));
         assert_eq!(j.get("detector").and_then(Json::as_str), Some("eb_bound"));
         assert_eq!(j.get("severity").and_then(Json::as_str), Some("near_bound"));

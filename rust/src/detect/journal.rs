@@ -50,6 +50,10 @@ struct Slot {
     meta: AtomicU64,
     aux: AtomicU64,
     tick: AtomicU64,
+    /// Full 64-bit flow ID — the `(meta, aux)` pair is fully packed, so
+    /// the request correlation rides its own word (see
+    /// [`FaultEvent::flow`]).
+    flow: AtomicU64,
 }
 
 impl Slot {
@@ -59,6 +63,7 @@ impl Slot {
             meta: AtomicU64::new(0),
             aux: AtomicU64::new(0),
             tick: AtomicU64::new(0),
+            flow: AtomicU64::new(0),
         }
     }
 }
@@ -135,6 +140,7 @@ impl Journal {
         slot.meta.store(meta, Ordering::Relaxed);
         slot.aux.store(aux, Ordering::Relaxed);
         slot.tick.store(ev.tick, Ordering::Relaxed);
+        slot.flow.store(ev.flow, Ordering::Relaxed);
         // Release publishes the payload to stamp-acquiring readers.
         slot.stamp.store(seq + 1, Ordering::Release);
         self.by_severity[ev.severity as usize].fetch_add(1, Ordering::Relaxed);
@@ -153,11 +159,12 @@ impl Journal {
         let meta = slot.meta.load(Ordering::Relaxed);
         let aux = slot.aux.load(Ordering::Relaxed);
         let tick = slot.tick.load(Ordering::Relaxed);
+        let flow = slot.flow.load(Ordering::Relaxed);
         std::sync::atomic::fence(Ordering::Acquire);
         if slot.stamp.load(Ordering::Relaxed) != want {
             return None; // overwritten while reading — skip, never tear
         }
-        Some(FaultEvent::decode(meta, aux, tick))
+        Some(FaultEvent::decode(meta, aux, tick, flow))
     }
 
     /// Events with lifetime sequence `>= mark`, oldest first. `mark` is
@@ -229,10 +236,22 @@ impl Journal {
         ])
     }
 
+    /// Events that can no longer be served to a cursor at `since`
+    /// because the ring wrapped past it: the count of lost events a
+    /// poller would otherwise silently skip.
+    pub fn gap_since(&self, since: u64) -> u64 {
+        let oldest_resident = self.total().saturating_sub(self.capacity() as u64);
+        oldest_resident.saturating_sub(since)
+    }
+
     /// The cursored `events` payload: only events with lifetime sequence
     /// `>= since` (a prior `next_cursor`), newest `max` of them. Pollers
-    /// stop re-reading the whole ring every scrape; events that wrapped
-    /// out between polls are reflected in `counts.dropped`/`total`.
+    /// stop re-reading the whole ring every scrape. When the ring has
+    /// wrapped past the cursor, `gap` reports exactly how many events
+    /// between the cursor and the oldest resident row were lost —
+    /// resuming is explicit, never silent (`gap` is 0 when nothing was
+    /// missed; rows trimmed by `max` are still resident, so they are
+    /// pageable, not gapped).
     pub fn events_json_since(&self, since: u64, max: usize) -> Json {
         let mut rows = self.since(since);
         if rows.len() > max {
@@ -241,6 +260,7 @@ impl Journal {
         Json::obj(vec![
             ("counts", self.counts_json()),
             ("next_cursor", Json::Num(self.total() as f64)),
+            ("gap", Json::Num(self.gap_since(since) as f64)),
             (
                 "events",
                 Json::Arr(rows.iter().map(FaultEvent::to_json).collect()),
@@ -259,6 +279,7 @@ mod tests {
         FaultEvent {
             tick: i as u64,
             ctl_tick: (i / 4) as u64,
+            flow: (i as u64) * 3,
             site: SiteId::Eb(i % 3),
             unit: UnitRef::GemmRow { row: i },
             detector: Detector::GemmChecksum,
@@ -371,5 +392,36 @@ mod tests {
         // `max` keeps the newest rows of the page.
         let capped = j.events_json_since(0, 2);
         assert_eq!(capped.get("events").and_then(Json::as_arr).unwrap().len(), 2);
+        // Nothing wrapped in any of these queries.
+        assert_eq!(first.get("gap").and_then(Json::as_usize), Some(0));
+        assert_eq!(capped.get("gap").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
+    fn wrapped_cursor_reports_an_explicit_gap() {
+        let j = Journal::with_capacity(8);
+        for i in 0..3 {
+            j.record(&ev(i));
+        }
+        let cursor = j.total(); // 3
+        // 13 more events: ring holds seqs 8..16, so 8 − 3 = 5 events the
+        // cursor can never see.
+        for i in 3..16 {
+            j.record(&ev(i));
+        }
+        let page = j.events_json_since(cursor, 100);
+        assert_eq!(page.get("gap").and_then(Json::as_usize), Some(5));
+        let rows = page.get("events").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 8, "resident tail still served");
+        assert_eq!(
+            rows[0].get("tick").and_then(Json::as_usize),
+            Some(8),
+            "page resumes at the oldest resident event"
+        );
+        // A fresh cursor at total sees no gap.
+        let fresh = j.events_json_since(j.total(), 100);
+        assert_eq!(fresh.get("gap").and_then(Json::as_usize), Some(0));
+        // Flow IDs survive the journal round trip.
+        assert_eq!(rows[0].get("flow").and_then(Json::as_usize), Some(24));
     }
 }

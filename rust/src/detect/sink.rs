@@ -32,7 +32,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::detect::event::{Detector, FaultEvent, Resolution, Severity, SiteId, UnitRef};
 use crate::detect::journal::{Journal, DEFAULT_JOURNAL_CAPACITY};
 use crate::detect::LOCAL_REPLICA;
-use crate::obs::ObsHandle;
+use crate::obs::{FlightRecorder, ObsHandle};
 use crate::policy::SiteTelemetry;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
@@ -49,6 +49,10 @@ pub struct SinkCore {
     ctl_tick: AtomicU64,
     /// Wired by the engine at construction.
     metrics: OnceLock<Arc<Metrics>>,
+    /// Armed flight recorder, wired by the engine when `--flightrec` is
+    /// on. Consulted only here — emission runs exclusively on faults, so
+    /// the probe/clean path never touches it.
+    recorder: OnceLock<Arc<FlightRecorder>>,
 }
 
 /// The emit handle. `Default`/[`EventSink::detached`] is a no-op.
@@ -72,6 +76,7 @@ impl EventSink {
             tick: AtomicU64::new(0),
             ctl_tick: AtomicU64::new(0),
             metrics: OnceLock::new(),
+            recorder: OnceLock::new(),
         })))
     }
 
@@ -95,6 +100,20 @@ impl EventSink {
         if let Some(core) = &self.0 {
             let _ = core.metrics.set(metrics);
         }
+    }
+
+    /// Arm a flight recorder: every journaled event at or above its
+    /// severity floor freezes a `BlackBox` capture (idempotent; first
+    /// wins).
+    pub fn attach_recorder(&self, recorder: Arc<FlightRecorder>) {
+        if let Some(core) = &self.0 {
+            let _ = core.recorder.set(recorder);
+        }
+    }
+
+    /// The armed recorder, when attached.
+    pub fn recorder(&self) -> Option<&Arc<FlightRecorder>> {
+        self.0.as_deref().and_then(|c| c.recorder.get())
     }
 
     /// Advance the journal timestamp (the engine: once per batch).
@@ -139,6 +158,9 @@ impl EventSink {
         let ev = FaultEvent {
             tick: core.tick.load(Ordering::Relaxed),
             ctl_tick: core.ctl_tick.load(Ordering::Relaxed),
+            // The emitting thread's flow (0 off-request, e.g. background
+            // scrub) — the capture/journal correlation key.
+            flow: crate::obs::flow::current(),
             site,
             unit,
             detector,
@@ -146,6 +168,12 @@ impl EventSink {
             resolution,
         };
         core.journal.record(&ev);
+        // Freeze-on-fault: the recorder sees every journaled event and
+        // applies its own severity floor. Fault path only — never the
+        // clean path.
+        if let Some(rec) = core.recorder.get() {
+            rec.maybe_freeze(&ev);
+        }
         // Metrics routing: one detection family per detector/unit.
         if let Some(m) = core.metrics.get() {
             match (detector, unit) {
@@ -332,5 +360,45 @@ mod tests {
         assert_eq!(m.detections.load(Ordering::Relaxed), 2, "gemm row + local bag");
         assert_eq!(m.shard_detections.load(Ordering::Relaxed), 1);
         assert_eq!(m.scrub_hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn emit_stamps_the_current_flow_and_triggers_the_recorder() {
+        let s = EventSink::with_capacity(8);
+        let rec = Arc::new(crate::obs::FlightRecorder::new(
+            2,
+            Severity::Significant,
+            1,
+        ));
+        s.attach_recorder(Arc::clone(&rec));
+        let flow_id = crate::obs::flow::mint();
+        {
+            let _g = crate::obs::flow::FlowGuard::enter(flow_id);
+            s.emit(
+                SiteId::Gemm(0),
+                UnitRef::GemmRow { row: 2 },
+                Detector::GemmChecksum,
+                Severity::Significant,
+                Resolution::Recovered(Recovery::RecomputeUnit),
+            );
+        }
+        let ev = s.journal().unwrap().recent(1)[0];
+        assert_eq!(ev.flow, flow_id, "journaled event carries the flow");
+        assert_eq!(rec.captures_taken(), 1, "Severe event froze a capture");
+        let cap = rec.capture_json(1).unwrap();
+        assert_eq!(
+            cap.path(&["event", "flow"]).and_then(crate::util::json::Json::as_usize),
+            Some(flow_id as usize)
+        );
+        // Below the floor: journaled but not frozen; off-flow: flow 0.
+        s.emit(
+            SiteId::Gemm(0),
+            UnitRef::GemmRow { row: 3 },
+            Detector::GemmChecksum,
+            Severity::NearBound,
+            Resolution::DetectedOnly,
+        );
+        assert_eq!(s.journal().unwrap().recent(1)[0].flow, 0);
+        assert_eq!(rec.captures_taken(), 1);
     }
 }

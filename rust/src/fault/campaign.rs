@@ -16,6 +16,7 @@ use crate::embedding::{bag_sum_4, embedding_bag_8, QuantTable4, QuantTable8};
 use crate::policy::{DetectionMode, PolicyConfig};
 use crate::quant::{quantize_slice_u8, requantize_cols_into, RequantEpilogue, RequantSpec};
 use crate::shard::{ShardPlan, ShardRouter, ShardStore};
+use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -770,6 +771,168 @@ pub fn run_adaptive_campaign(cfg: &AdaptiveCampaignConfig) -> AdaptiveCampaignRe
     result
 }
 
+/// Configuration for the flight-recorder campaign: the black-box drill.
+/// Persistent replica corruption drives Severe (`Significant`) fault
+/// events through a serving engine with the recorder armed; every
+/// resident capture must be a self-contained post-mortem — the
+/// triggering event, the causally-correlated span timeline of the
+/// faulting batch's flow, and the policy/shard control-plane snapshots.
+#[derive(Clone, Debug)]
+pub struct FlightRecCampaignConfig {
+    pub num_tables: usize,
+    pub rows: usize,
+    pub dim: usize,
+    pub pooling: usize,
+    /// Requests per batch.
+    pub batch: usize,
+    /// Max batches to serve while collecting Severe events.
+    pub batches: usize,
+    /// Recorder pool size (capture slots).
+    pub captures: usize,
+    pub seed: u64,
+    /// When set, dump the resident black boxes here as
+    /// `blackbox_<id>.json` (the `--flightrec-dump-dir` artifact shape).
+    pub dump_dir: Option<String>,
+}
+
+impl Default for FlightRecCampaignConfig {
+    fn default() -> Self {
+        Self {
+            num_tables: 2,
+            rows: 300,
+            dim: 16,
+            pooling: 8,
+            batch: 8,
+            batches: 32,
+            captures: 8,
+            seed: 0xB1AC2,
+            dump_dir: None,
+        }
+    }
+}
+
+/// Tallies from one flight-recorder campaign.
+#[derive(Clone, Debug, Default)]
+pub struct FlightRecCampaignResult {
+    /// Severe (`Significant`) events journaled while armed.
+    pub severe_events: usize,
+    /// Freeze attempts the recorder made (captures taken, incl. those
+    /// since evicted) — one per Severe event by construction.
+    pub captures_taken: u64,
+    /// Freezes skipped because the slot was busy under a reader (must
+    /// stay 0 here — nothing reads captures mid-campaign).
+    pub captures_missed: u64,
+    /// Resident captures inspected post-campaign.
+    pub resident: usize,
+    /// ...containing the triggering event at/above the severity floor.
+    pub with_trigger: usize,
+    /// ...whose causal flow timeline is non-empty (spans recorded by
+    /// the faulting batch under the same flow tag).
+    pub with_flow_timeline: usize,
+    /// ...carrying a policy-plane snapshot.
+    pub with_policy: usize,
+    /// ...carrying a shard-health snapshot.
+    pub with_shards: usize,
+    /// Black boxes written to `dump_dir`.
+    pub dumped: usize,
+}
+
+impl FlightRecCampaignResult {
+    /// Every resident capture is a complete post-mortem.
+    pub fn all_complete(&self) -> bool {
+        self.resident > 0
+            && self.with_trigger == self.resident
+            && self.with_flow_timeline == self.resident
+            && self.with_policy == self.resident
+            && self.with_shards == self.resident
+    }
+}
+
+/// Run the flight-recorder campaign. See [`FlightRecCampaignConfig`].
+pub fn run_flightrec_campaign(cfg: &FlightRecCampaignConfig) -> FlightRecCampaignResult {
+    let model_cfg = DlrmConfig {
+        num_dense: 4,
+        embedding_dim: cfg.dim,
+        bottom_mlp: vec![16, cfg.dim],
+        top_mlp: vec![16],
+        tables: vec![TableConfig { rows: cfg.rows, pooling: cfg.pooling }; cfg.num_tables],
+        protection: Protection::DetectRecompute,
+        dense_range: (0.0, 1.0),
+        seed: cfg.seed ^ 0xB0B,
+    };
+    let reference = DlrmModel::random(model_cfg.clone());
+    let engine = Engine::new(DlrmModel::random(model_cfg))
+        .with_shards(
+            ShardPlan::hash_placement(cfg.num_tables, 1, 2),
+            cfg.rows.max(1),
+        )
+        .with_policy(PolicyConfig { tick: Duration::ZERO, ..PolicyConfig::default() });
+    // Always-on spans so the faulting batch's flow timeline is populated
+    // (recovery-rung spans record before the staged events emit).
+    engine.obs().set_sampling(1);
+    let rec = engine.arm_flightrec(cfg.captures, Severity::Significant);
+    let store = Arc::clone(engine.shard_store().expect("sharded"));
+    let journal = engine.journal();
+
+    // Persistent corruption of replica 0's copy of table 0: the high bit
+    // of every row's first code, so any checked bag flags hard.
+    for row in 0..cfg.rows {
+        store.flip_table_byte(0, 0, row * cfg.dim, 0x80);
+    }
+
+    let mut rng = Pcg32::new(cfg.seed);
+    let mut scores = vec![0f32; cfg.batch];
+    let mut result = FlightRecCampaignResult::default();
+    for _ in 0..cfg.batches {
+        let mark = journal.total();
+        let reqs = reference.synth_requests(cfg.batch, &mut rng);
+        engine.score(&reqs, &mut scores);
+        result.severe_events += journal
+            .since(mark)
+            .iter()
+            .filter(|e| e.severity >= Severity::Significant)
+            .count();
+        engine.policy_tick();
+        if result.severe_events >= cfg.captures {
+            break;
+        }
+    }
+    result.captures_taken = rec.captures_taken();
+    result.captures_missed = rec
+        .status_json()
+        .get("missed")
+        .and_then(Json::as_usize)
+        .unwrap_or(0) as u64;
+
+    // Post-mortem audit: every resident black box must carry the
+    // triggering event, a non-empty causal flow timeline, and the
+    // control-plane snapshots.
+    if let Some(rows) = rec.list_json().get("captures").and_then(Json::as_arr) {
+        for row in rows {
+            let id = row.get("id").and_then(Json::as_usize).unwrap_or(0) as u64;
+            let Some(cap) = rec.capture_json(id) else { continue };
+            result.resident += 1;
+            if cap.path(&["event", "severity"]).and_then(Json::as_str) == Some("significant") {
+                result.with_trigger += 1;
+            }
+            if matches!(cap.get("flow_timeline"), Some(Json::Arr(a)) if !a.is_empty()) {
+                result.with_flow_timeline += 1;
+            }
+            if cap.get("policy").is_some_and(|p| *p != Json::Null) {
+                result.with_policy += 1;
+            }
+            if cap.get("shards").is_some_and(|s| *s != Json::Null) {
+                result.with_shards += 1;
+            }
+        }
+    }
+    if let Some(dir) = &cfg.dump_dir {
+        let _ = std::fs::create_dir_all(dir);
+        result.dumped = rec.dump_new(std::path::Path::new(dir)).unwrap_or(0);
+    }
+    result
+}
+
 /// Configuration for the correction campaign: the §VI-B methodology
 /// aimed at the PR-6 `CorrectInPlace` rung. Single-fault runs must be
 /// *localized and algebraically fixed in place* on both correction
@@ -1236,6 +1399,30 @@ mod tests {
         assert_eq!(r.detected_mismatches, 0, "{r:?}");
         assert!(r.redecayed, "site must decay back after repair + quiet: {r:?}");
         assert!(r.redecay_ticks <= 16, "{r:?}");
+    }
+
+    #[test]
+    fn flightrec_campaign_black_boxes_are_complete_post_mortems() {
+        let dir = std::env::temp_dir().join("dlrm_abft_flightrec_campaign_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = FlightRecCampaignConfig {
+            batches: 16,
+            dump_dir: Some(dir.to_string_lossy().into_owned()),
+            ..Default::default()
+        };
+        let r = run_flightrec_campaign(&cfg);
+        assert!(r.severe_events > 0, "persistent corruption must journal Severe events: {r:?}");
+        // Every Severe event froze a capture; none were dropped on a
+        // busy slot (nothing reads captures mid-campaign).
+        assert_eq!(r.captures_taken, r.severe_events as u64, "{r:?}");
+        assert_eq!(r.captures_missed, 0, "{r:?}");
+        // Each resident black box is a complete post-mortem: trigger,
+        // causal flow timeline, policy plane, shard health.
+        assert!(r.all_complete(), "incomplete black box: {r:?}");
+        // Dump wrote one self-contained artifact per resident capture.
+        assert_eq!(r.dumped, r.resident, "{r:?}");
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), r.dumped, "{r:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

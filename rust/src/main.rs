@@ -10,7 +10,9 @@ use dlrm_abft::bench::harness::BenchConfig;
 use dlrm_abft::bench::trace::{generate_trace, read_trace, write_trace, TraceGenConfig};
 use dlrm_abft::coordinator::{BatchPolicy, ChaosConfig, Client, Engine, ScoreRequest, Server};
 use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, Protection};
-use dlrm_abft::fault::campaign::{EbCampaignConfig, GemmCampaignConfig};
+use dlrm_abft::fault::campaign::{
+    run_flightrec_campaign, EbCampaignConfig, FlightRecCampaignConfig, GemmCampaignConfig,
+};
 use dlrm_abft::runtime::PjrtEngine;
 use dlrm_abft::util::cli::Cli;
 use dlrm_abft::util::rng::Pcg32;
@@ -61,9 +63,14 @@ fn print_help() {
                         --policy-state policy.state  (controller warm-start file)\n\
                         --policy-pin-costs false  (pin static unit-cost priors)\n\
                         --obs-sample 0  (span profiler: 0 off, 1 all, n = 1-in-n)\n\
+                        --flightrec false  (arm the fault flight recorder)\n\
+                        --flightrec-severity significant|near_bound  (freeze floor)\n\
+                        --flightrec-captures 8  (black-box pool slots)\n\
+                        --flightrec-dump-dir DIR  (write blackbox_<id>.json; implies arm)\n\
            bench        --which fig5|fig6|table2|table3|analysis|ablations|eb-fused|all\n\
                         [--quick true] [--scale N] [--runs N] [--threads N]\n\
-           campaign     --op gemm|eb [--runs N] [--rows N] [--dim N]\n\
+           campaign     --op gemm|eb|flightrec [--runs N] [--rows N] [--dim N]\n\
+                        [--batches N] [--captures N] [--dump-dir DIR]  (flightrec)\n\
            artifacts    --dir artifacts     (load + compile PJRT artifacts)\n\
            snapshot     --out model.dlrm [--config cfg.json]  (build + save)\n\
            trace-gen    --out trace.jsonl [--requests N] [--rate R] [--zipf S]\n\
@@ -185,24 +192,58 @@ fn serve(cli: &Cli) -> Result<()> {
         engine.obs().set_sampling(obs_sample);
         println!("span profiler on: sampling 1-in-{obs_sample}");
     }
+    // Fault flight recorder: freeze-on-fault black boxes, exposed via
+    // {"op":"flightrec"} and optionally dumped from the serve loop.
+    // A dump dir implies arming. Armed-but-idle costs nothing on the
+    // clean path — the recorder is consulted only when a fault journals.
+    let flightrec_on: bool = cli.flag("flightrec", false)?;
+    let flightrec_dump = cli.get("flightrec-dump-dir").map(str::to_string);
+    let flightrec_captures: usize =
+        cli.flag("flightrec-captures", dlrm_abft::obs::DEFAULT_CAPTURES)?;
+    let flightrec_sev: String = cli.flag("flightrec-severity", "significant".to_string())?;
+    if flightrec_on || flightrec_dump.is_some() {
+        let sev = dlrm_abft::detect::Severity::from_label(&flightrec_sev)
+            .context("--flightrec-severity must be near_bound or significant")?;
+        engine.arm_flightrec(flightrec_captures, sev);
+        println!(
+            "flight recorder armed: {flightrec_captures} capture slots, \
+             severity >= {flightrec_sev}"
+        );
+        if let Some(dir) = &flightrec_dump {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating --flightrec-dump-dir {dir}"))?;
+            println!("black boxes dump to {dir}");
+        }
+    }
     cli.reject_unknown()?;
     let engine = Arc::new(engine);
     let server = Server::start(&addr, Arc::clone(&engine), policy)?;
     println!("serving on {}", server.addr);
     println!("protocol: newline-delimited JSON; try {{\"op\":\"ping\"}}");
+    // Serve-loop housekeeping: periodic best-effort policy-state
+    // persistence and flight-recorder dumps (a hard kill loses at most a
+    // few seconds of controller learning / undumped black boxes).
+    let persist_policy = policy_state_path.is_some() && engine.policy_sites().is_some();
+    let tick = if persist_policy || flightrec_dump.is_some() {
+        Duration::from_secs(5)
+    } else {
+        Duration::from_secs(3600)
+    };
     loop {
-        match &policy_state_path {
-            Some(path) if engine.policy_sites().is_some() => {
-                // Periodic best-effort persistence: a hard kill loses at
-                // most a few seconds of controller learning.
-                std::thread::sleep(Duration::from_secs(5));
-                if let Some(state) = engine.policy_state() {
-                    if let Err(e) = std::fs::write(path, state) {
-                        println!("policy state write to {path} failed: {e}");
-                    }
+        std::thread::sleep(tick);
+        if persist_policy {
+            if let (Some(path), Some(state)) = (&policy_state_path, engine.policy_state()) {
+                if let Err(e) = std::fs::write(path, state) {
+                    println!("policy state write to {path} failed: {e}");
                 }
             }
-            _ => std::thread::sleep(Duration::from_secs(3600)),
+        }
+        if let (Some(dir), Some(rec)) = (&flightrec_dump, engine.flightrec()) {
+            match rec.dump_new(std::path::Path::new(dir)) {
+                Ok(0) => {}
+                Ok(n) => println!("flight recorder: dumped {n} black box(es) to {dir}"),
+                Err(e) => println!("flight recorder dump to {dir} failed: {e}"),
+            }
         }
     }
 }
@@ -276,6 +317,31 @@ fn campaign(cli: &Cli) -> Result<()> {
                 ..Default::default()
             };
             figures::run_table3(&cfg, 1, &mut out);
+        }
+        // Flight-recorder drill: persistent corruption under an armed
+        // recorder; fails unless every black box is a complete
+        // post-mortem. --dump-dir writes the blackbox_<id>.json artifacts.
+        "flightrec" => {
+            let cfg = FlightRecCampaignConfig {
+                batches: cli.flag("batches", 32usize)?,
+                captures: cli.flag("captures", 8usize)?,
+                dump_dir: cli.get("dump-dir").map(str::to_string),
+                ..Default::default()
+            };
+            let r = run_flightrec_campaign(&cfg);
+            println!(
+                "flightrec campaign: {} severe events, {} captures taken \
+                 ({} resident, {} missed), complete post-mortems: {}, dumped {}",
+                r.severe_events,
+                r.captures_taken,
+                r.resident,
+                r.captures_missed,
+                r.all_complete(),
+                r.dumped
+            );
+            if !r.all_complete() {
+                bail!("incomplete black boxes: {r:?}");
+            }
         }
         other => bail!("unknown campaign {other:?}"),
     }

@@ -1,0 +1,539 @@
+//! Fault flight recorder: freeze-on-fault black box with causal
+//! request timelines and post-mortem export.
+//!
+//! The detectors say *that* a soft error fired; triage needs to know
+//! *what the system was doing when it fired*. The span rings
+//! ([`super::profiler`]) hold exactly that context — but they are
+//! scrape-only and get silently overwritten within milliseconds. The
+//! recorder closes the loop: when the [`crate::detect::EventSink`]
+//! journals a [`FaultEvent`] at or above a configured
+//! [`Severity`] floor, it calls [`FlightRecorder::freeze`], which
+//! snapshots
+//!
+//! * the per-lane span rings (the recent-past timeline, with per-lane
+//!   recorded/fill/overwritten watermarks so sampling loss is explicit),
+//! * the policy plane (per-site `DetectionMode`, budgeted `n*`, measured
+//!   overheads — via a closure the engine wires in),
+//! * shard health (replica states, self-heal/repair counters — same),
+//! * kernel dispatch state (last-stamped tier per gemm site),
+//!
+//! into one slot of a bounded pool of immutable `BlackBox` captures.
+//!
+//! # Hot-path contract
+//!
+//! *Armed but idle is free.* The recorder is only ever consulted from
+//! the sink's `emit` fan-out, which runs **exclusively on faults** —
+//! the probe path never sees it, so the disarmed/armed-idle cost at a
+//! probe point stays exactly one relaxed load (the profiler's sampling
+//! knob). Ring-copy buffers are preallocated at arm time, so freezing
+//! reuses them; the JSON snapshot closures allocate, but only on the
+//! (rare) fault path. `freeze` takes a slot via `try_lock` — if a
+//! reader is serializing that capture concurrently, the freeze is
+//! counted as missed rather than ever blocking the serving thread.
+//!
+//! # Eviction
+//!
+//! Captures are identified by a monotone id (1, 2, …). The pool holds
+//! the newest `captures` of them; slot `(id − 1) % captures` is simply
+//! overwritten, so pool exhaustion evicts the oldest capture and never
+//! stalls. [`FlightRecorder::dump_new`] keeps a cursor of ids already
+//! written to disk, so exporting is decoupled from freezing (the serve
+//! loop / campaign calls it off the fault path).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::detect::{FaultEvent, Severity};
+use crate::util::json::Json;
+
+use super::profiler::{
+    unpack_record, ObsCore, Stage, OBS_LANES, RING_PER_LANE, TIER_UNKNOWN,
+};
+
+/// Default capture-pool size.
+pub const DEFAULT_CAPTURES: usize = 8;
+
+/// A snapshot closure the engine wires in (policy plane, shard health).
+pub type SnapshotFn = Box<dyn Fn() -> Json + Send + Sync>;
+
+/// One reusable capture slot. `id == 0` means never filled.
+struct CaptureSlot {
+    id: u64,
+    event: Option<FaultEvent>,
+    /// Lifetime head per lane at freeze time.
+    heads: Box<[u64]>,
+    /// Lane-major ring copy (`OBS_LANES * RING_PER_LANE` words).
+    rings: Box<[u64]>,
+    /// Kernel tier code per gemm site at freeze time.
+    tiers: Box<[u8]>,
+    sample_1_in: u32,
+    policy: Json,
+    shards: Json,
+}
+
+impl CaptureSlot {
+    fn new(gemm_sites: usize) -> Self {
+        Self {
+            id: 0,
+            event: None,
+            heads: vec![0u64; OBS_LANES].into_boxed_slice(),
+            rings: vec![0u64; OBS_LANES * RING_PER_LANE].into_boxed_slice(),
+            tiers: vec![TIER_UNKNOWN; gemm_sites.max(1)].into_boxed_slice(),
+            sample_1_in: 0,
+            policy: Json::Null,
+            shards: Json::Null,
+        }
+    }
+}
+
+/// The recorder. Constructed and armed by the engine; triggered by the
+/// sink; read by the `{"op":"flightrec"}` server op and the dump loop.
+pub struct FlightRecorder {
+    min_severity: Severity,
+    slots: Box<[Mutex<CaptureSlot>]>,
+    /// Next capture id − 1 (ids are 1-based so 0 can mean "empty").
+    seq: AtomicU64,
+    /// Freezes skipped because the target slot was locked by a reader.
+    missed: AtomicU64,
+    /// Capture ids `<= dumped_through` have been written to disk.
+    dumped_through: AtomicU64,
+    obs: OnceLock<Arc<ObsCore>>,
+    policy_snap: OnceLock<SnapshotFn>,
+    shard_snap: OnceLock<SnapshotFn>,
+}
+
+impl FlightRecorder {
+    /// Preallocates every capture buffer; nothing on the freeze path
+    /// grows them.
+    pub fn new(captures: usize, min_severity: Severity, gemm_sites: usize) -> Self {
+        let captures = captures.max(1);
+        Self {
+            min_severity,
+            slots: (0..captures)
+                .map(|_| Mutex::new(CaptureSlot::new(gemm_sites)))
+                .collect(),
+            seq: AtomicU64::new(0),
+            missed: AtomicU64::new(0),
+            dumped_through: AtomicU64::new(0),
+            obs: OnceLock::new(),
+            policy_snap: OnceLock::new(),
+            shard_snap: OnceLock::new(),
+        }
+    }
+
+    pub fn min_severity(&self) -> Severity {
+        self.min_severity
+    }
+
+    pub fn pool_size(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Lifetime captures taken.
+    pub fn captures_taken(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Wire the profiler core whose rings get snapshotted (once).
+    pub fn attach_obs(&self, core: Arc<ObsCore>) {
+        let _ = self.obs.set(core);
+    }
+
+    /// Wire the policy-plane snapshot closure (once).
+    pub fn attach_policy_snapshot(&self, f: SnapshotFn) {
+        let _ = self.policy_snap.set(f);
+    }
+
+    /// Wire the shard-health snapshot closure (once).
+    pub fn attach_shard_snapshot(&self, f: SnapshotFn) {
+        let _ = self.shard_snap.set(f);
+    }
+
+    /// Severity-gated trigger, called by the sink for every journaled
+    /// event. Below the floor: one comparison. At/above: take the next
+    /// pool slot (evicting its previous capture) and snapshot into it.
+    /// Never blocks — a slot busy under a reader just counts `missed`.
+    pub fn maybe_freeze(&self, ev: &FaultEvent) {
+        if ev.severity >= self.min_severity {
+            self.freeze(ev);
+        }
+    }
+
+    /// Unconditional freeze (the severity gate lives in
+    /// [`Self::maybe_freeze`]).
+    pub fn freeze(&self, ev: &FaultEvent) {
+        let id = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let idx = ((id - 1) % self.slots.len() as u64) as usize;
+        let Ok(mut slot) = self.slots[idx].try_lock() else {
+            self.missed.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        slot.id = id;
+        slot.event = Some(*ev);
+        if let Some(core) = self.obs.get() {
+            core.snapshot_rings(&mut slot.heads, &mut slot.rings);
+            slot.sample_1_in = core.sample_n_relaxed();
+            for (site, t) in slot.tiers.iter_mut().enumerate() {
+                *t = core.gemm_tier_code(site);
+            }
+        } else {
+            slot.heads.fill(0);
+            slot.sample_1_in = 0;
+        }
+        slot.policy = match self.policy_snap.get() {
+            Some(f) => f(),
+            None => Json::Null,
+        };
+        slot.shards = match self.shard_snap.get() {
+            Some(f) => f(),
+            None => Json::Null,
+        };
+    }
+
+    /// Status block for `metrics_snapshot()`: armed config + counters.
+    pub fn status_json(&self) -> Json {
+        Json::obj(vec![
+            ("pool", Json::Num(self.pool_size() as f64)),
+            ("captures", Json::Num(self.captures_taken() as f64)),
+            (
+                "resident",
+                Json::Num(self.resident_ids().len() as f64),
+            ),
+            ("missed", Json::Num(self.missed.load(Ordering::Relaxed) as f64)),
+            (
+                "dumped_through",
+                Json::Num(self.dumped_through.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "min_severity",
+                Json::Str(self.min_severity.as_str().to_string()),
+            ),
+        ])
+    }
+
+    /// Ids of the captures currently resident, oldest first.
+    fn resident_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .slots
+            .iter()
+            .filter_map(|s| {
+                let slot = s.lock().unwrap();
+                (slot.id != 0).then_some(slot.id)
+            })
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// The `flightrec` list payload: status + one summary row per
+    /// resident capture.
+    pub fn list_json(&self) -> Json {
+        let mut rows = Vec::new();
+        for id in self.resident_ids() {
+            let idx = ((id - 1) % self.slots.len() as u64) as usize;
+            let slot = self.slots[idx].lock().unwrap();
+            if slot.id != id {
+                continue; // evicted between listing and locking
+            }
+            let ev = match &slot.event {
+                Some(ev) => ev,
+                None => continue,
+            };
+            rows.push(Json::obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("tick", Json::Num(ev.tick as f64)),
+                ("flow", Json::Num(ev.flow as f64)),
+                ("site", Json::Str(ev.site.label())),
+                ("severity", Json::Str(ev.severity.as_str().into())),
+                (
+                    "dumped",
+                    Json::Bool(id <= self.dumped_through.load(Ordering::Relaxed)),
+                ),
+            ]));
+        }
+        Json::obj(vec![
+            ("status", self.status_json()),
+            ("captures", Json::Arr(rows)),
+        ])
+    }
+
+    /// One full `BlackBox` capture as self-contained JSON, or `None` if
+    /// `id` was never taken or has been evicted.
+    pub fn capture_json(&self, id: u64) -> Option<Json> {
+        if id == 0 {
+            return None;
+        }
+        let idx = ((id - 1) % self.slots.len() as u64) as usize;
+        let slot = self.slots[idx].lock().unwrap();
+        if slot.id != id {
+            return None;
+        }
+        Some(Self::blackbox_json(&slot))
+    }
+
+    /// Build the export document from a filled slot: the triggering
+    /// event, the full recent-past span timeline, the causal per-flow
+    /// timeline (spans whose flow tag matches the event's flow), lane
+    /// watermarks, kernel tiers, and the policy/shard snapshots.
+    fn blackbox_json(slot: &CaptureSlot) -> Json {
+        let ev = slot.event.as_ref().expect("filled slot has an event");
+        let want_tag = super::flow::tag(ev.flow);
+        let mut spans = Vec::new();
+        let mut flow_timeline = Vec::new();
+        let mut lanes = Vec::new();
+        for li in 0..OBS_LANES {
+            let head = slot.heads[li];
+            if head == 0 {
+                continue;
+            }
+            let fill = head.min(RING_PER_LANE as u64);
+            lanes.push(Json::obj(vec![
+                ("id", Json::Num(li as f64)),
+                ("recorded", Json::Num(head as f64)),
+                ("fill", Json::Num(fill as f64)),
+                ("overwritten", Json::Num((head - fill) as f64)),
+            ]));
+            let base = li * RING_PER_LANE;
+            // Oldest resident record first within the lane — per-lane
+            // order is exact, so a single-threaded flow's spans come out
+            // causally ordered.
+            for i in 0..fill {
+                let pos = ((head - fill + i) % RING_PER_LANE as u64) as usize;
+                let Some((stage, site, flow_tag, dur_ns)) =
+                    unpack_record(slot.rings[base + pos])
+                else {
+                    continue;
+                };
+                let mut fields = vec![
+                    ("lane", Json::Num(li as f64)),
+                    ("stage", Json::Str(stage.as_str().to_string())),
+                    ("site", Json::Num(site as f64)),
+                    ("dur_us", Json::Num(dur_ns as f64 / 1e3)),
+                ];
+                if flow_tag != 0 {
+                    fields.push(("flow", Json::Num(flow_tag as f64)));
+                }
+                if matches!(
+                    stage,
+                    Stage::MlpLayer
+                        | Stage::Verify
+                        | Stage::CorrectInPlace
+                        | Stage::RecomputeUnit
+                ) {
+                    if let Some(tier) = slot
+                        .tiers
+                        .get(site as usize)
+                        .copied()
+                        .filter(|&c| c != TIER_UNKNOWN)
+                        .and_then(crate::gemm::KernelTier::from_code)
+                    {
+                        fields.push(("tier", Json::Str(tier.as_str().to_string())));
+                    }
+                }
+                let row = Json::obj(fields);
+                if want_tag != 0 && flow_tag == want_tag {
+                    flow_timeline.push(row.clone());
+                }
+                spans.push(row);
+            }
+        }
+        let tiers = slot
+            .tiers
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c != TIER_UNKNOWN)
+            .filter_map(|(site, &c)| {
+                crate::gemm::KernelTier::from_code(c).map(|t| {
+                    Json::obj(vec![
+                        ("site", Json::Num(site as f64)),
+                        ("tier", Json::Str(t.as_str().to_string())),
+                    ])
+                })
+            })
+            .collect();
+        Json::obj(vec![
+            ("id", Json::Num(slot.id as f64)),
+            ("event", ev.to_json()),
+            ("flow", Json::Num(ev.flow as f64)),
+            ("flow_tag", Json::Num(want_tag as f64)),
+            ("sample_1_in", Json::Num(slot.sample_1_in as f64)),
+            ("flow_timeline", Json::Arr(flow_timeline)),
+            ("spans", Json::Arr(spans)),
+            ("lanes", Json::Arr(lanes)),
+            ("kernel_tiers", Json::Arr(tiers)),
+            ("policy", slot.policy.clone()),
+            ("shards", slot.shards.clone()),
+        ])
+    }
+
+    /// Drop every resident capture (the `clear` sub-op). Ids stay
+    /// monotone; the dump cursor advances past everything cleared so a
+    /// later dump doesn't resurrect them.
+    pub fn clear(&self) {
+        for s in self.slots.iter() {
+            let mut slot = s.lock().unwrap();
+            slot.id = 0;
+            slot.event = None;
+            slot.policy = Json::Null;
+            slot.shards = Json::Null;
+        }
+        let taken = self.captures_taken();
+        self.dumped_through.fetch_max(taken, Ordering::Relaxed);
+    }
+
+    /// Write every not-yet-dumped resident capture to
+    /// `dir/blackbox_<id>.json` and advance the dump cursor. Returns the
+    /// number written. Runs off the fault path (serve loop / campaign
+    /// epilogue), so file I/O and allocation are fine here.
+    pub fn dump_new(&self, dir: &Path) -> std::io::Result<usize> {
+        let through = self.dumped_through.load(Ordering::Relaxed);
+        let mut written = 0usize;
+        let mut max_id = through;
+        for id in self.resident_ids() {
+            if id <= through {
+                continue;
+            }
+            if let Some(doc) = self.capture_json(id) {
+                std::fs::create_dir_all(dir)?;
+                std::fs::write(dir.join(format!("blackbox_{id}.json")), format!("{doc}"))?;
+                written += 1;
+                max_id = max_id.max(id);
+            }
+        }
+        self.dumped_through.fetch_max(max_id, Ordering::Relaxed);
+        Ok(written)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detect::{Detector, Resolution, SiteId, UnitRef};
+    use crate::obs::ObsHandle;
+
+    fn ev(flow: u64, severity: Severity) -> FaultEvent {
+        FaultEvent {
+            tick: 9,
+            ctl_tick: 2,
+            flow,
+            site: SiteId::Gemm(0),
+            unit: UnitRef::GemmRow { row: 4 },
+            detector: Detector::GemmChecksum,
+            severity,
+            resolution: Resolution::Recovered(crate::detect::Recovery::RecomputeUnit),
+        }
+    }
+
+    #[test]
+    fn severity_floor_gates_freezing() {
+        let rec = FlightRecorder::new(4, Severity::Significant, 2);
+        rec.maybe_freeze(&ev(1, Severity::NearBound));
+        assert_eq!(rec.captures_taken(), 0);
+        rec.maybe_freeze(&ev(1, Severity::Significant));
+        assert_eq!(rec.captures_taken(), 1);
+        // Floor at NearBound records everything.
+        let all = FlightRecorder::new(4, Severity::NearBound, 2);
+        all.maybe_freeze(&ev(1, Severity::NearBound));
+        assert_eq!(all.captures_taken(), 1);
+    }
+
+    #[test]
+    fn capture_reconstructs_the_flow_timeline() {
+        let h = ObsHandle::attached(2, 1, 1);
+        let flow_id = crate::obs::flow::mint();
+        let p = h.probe().unwrap();
+        p.span_ns(Stage::Parse, 0, 1_000); // pre-flow noise
+        {
+            let _g = crate::obs::flow::FlowGuard::enter(flow_id);
+            p.span_ns(Stage::EbGather, 0, 2_000);
+            p.span_ns(Stage::MlpLayer, 1, 3_000);
+            p.span_ns(Stage::Verify, 1, 400);
+        }
+        h.note_gemm_tier(1, crate::gemm::KernelTier::Avx2.code());
+
+        let rec = FlightRecorder::new(2, Severity::Significant, 2);
+        rec.attach_obs(Arc::clone(h.core_arc().unwrap()));
+        rec.attach_policy_snapshot(Box::new(|| {
+            Json::obj(vec![("sites", Json::Arr(vec![]))])
+        }));
+        rec.maybe_freeze(&ev(flow_id, Severity::Significant));
+
+        let doc = rec.capture_json(1).expect("capture 1 resident");
+        assert_eq!(doc.path(&["event", "site"]).and_then(Json::as_str), Some("gemm/0"));
+        assert_eq!(doc.get("flow").and_then(Json::as_usize), Some(flow_id as usize));
+        let tl = doc.get("flow_timeline").and_then(Json::as_arr).unwrap();
+        let stages: Vec<_> = tl
+            .iter()
+            .map(|s| s.get("stage").and_then(Json::as_str).unwrap().to_string())
+            .collect();
+        assert_eq!(stages, ["eb_gather", "mlp_layer", "verify"], "causal order, flow-filtered");
+        let mlp = &tl[1];
+        assert_eq!(mlp.get("tier").and_then(Json::as_str), Some("avx2"));
+        let spans = doc.get("spans").and_then(Json::as_arr).unwrap();
+        assert_eq!(spans.len(), 4, "full timeline keeps unattributed spans");
+        assert!(doc.path(&["policy", "sites"]).is_some());
+        assert_eq!(doc.get("shards"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn pool_evicts_oldest_and_ids_stay_monotone() {
+        let rec = FlightRecorder::new(2, Severity::Significant, 1);
+        for f in 1..=5u64 {
+            rec.freeze(&ev(f, Severity::Significant));
+        }
+        assert_eq!(rec.captures_taken(), 5);
+        assert!(rec.capture_json(3).is_none(), "evicted");
+        assert!(rec.capture_json(4).is_some());
+        assert!(rec.capture_json(5).is_some());
+        let list = rec.list_json();
+        let rows = list.get("captures").and_then(Json::as_arr).unwrap();
+        let ids: Vec<_> = rows
+            .iter()
+            .map(|r| r.get("id").and_then(Json::as_usize).unwrap())
+            .collect();
+        assert_eq!(ids, [4, 5], "oldest first, newest retained");
+    }
+
+    #[test]
+    fn busy_slot_is_skipped_never_blocked_on() {
+        let rec = FlightRecorder::new(1, Severity::Significant, 1);
+        let guard = rec.slots[0].lock().unwrap();
+        rec.freeze(&ev(1, Severity::Significant));
+        drop(guard);
+        assert_eq!(rec.captures_taken(), 1, "id was still consumed");
+        assert_eq!(rec.missed.load(Ordering::Relaxed), 1);
+        assert!(rec.capture_json(1).is_none(), "missed capture holds no data");
+    }
+
+    #[test]
+    fn dump_writes_each_capture_once_and_clear_resets() {
+        let dir = std::env::temp_dir().join(format!(
+            "flightrec_test_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let rec = FlightRecorder::new(4, Severity::Significant, 1);
+        rec.freeze(&ev(1, Severity::Significant));
+        rec.freeze(&ev(2, Severity::Significant));
+        assert_eq!(rec.dump_new(&dir).unwrap(), 2);
+        assert!(dir.join("blackbox_1.json").is_file());
+        assert!(dir.join("blackbox_2.json").is_file());
+        // Nothing new → nothing written.
+        assert_eq!(rec.dump_new(&dir).unwrap(), 0);
+        rec.freeze(&ev(3, Severity::Significant));
+        assert_eq!(rec.dump_new(&dir).unwrap(), 1);
+        // The artifact is self-contained JSON with the trigger inside.
+        let text = std::fs::read_to_string(dir.join("blackbox_3.json")).unwrap();
+        let doc = Json::parse(&text).expect("artifact parses");
+        assert_eq!(doc.path(&["event", "severity"]).and_then(Json::as_str), Some("significant"));
+        rec.clear();
+        assert!(rec.capture_json(3).is_none());
+        assert_eq!(
+            rec.list_json().get("captures").and_then(Json::as_arr).unwrap().len(),
+            0
+        );
+        assert_eq!(rec.dump_new(&dir).unwrap(), 0, "clear advances the dump cursor");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

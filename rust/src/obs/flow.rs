@@ -1,0 +1,115 @@
+//! Request/batch flow-ID minting and thread-local propagation.
+//!
+//! A *flow* is one causal unit of work moving through the pipeline —
+//! one scored batch inside the engine, or one client request on a
+//! server connection. Flow IDs are minted from a process-global
+//! counter and carried in a thread-local, so span records and fault
+//! events get stamped without widening any hot-path signature: the
+//! scorer enters a [`FlowGuard`] once per batch and every probe fired
+//! under it inherits the ID. Spans pack the flow as a 14-bit rolling
+//! tag ([`tag`]); fault events carry the full 64-bit ID, which is what
+//! lets a flight-recorder capture match an event to its spans.
+//!
+//! Work handed to pool workers (row-block GEMM fan-out) runs outside
+//! the guard and records flow 0 ("unattributed") — per-flow timelines
+//! are built from the scoring thread's spans, which cover every stage.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bits of flow identity carried inside a packed span record.
+pub const FLOW_TAG_BITS: u32 = 14;
+
+/// Largest span flow tag; full IDs fold onto `1..=FLOW_TAG_MAX`.
+pub const FLOW_TAG_MAX: u64 = (1 << FLOW_TAG_BITS) - 1;
+
+static NEXT_FLOW: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static CURRENT_FLOW: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Mint a fresh process-unique flow ID (never 0).
+#[inline]
+pub fn mint() -> u64 {
+    NEXT_FLOW.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The flow the current thread is working under; 0 = unattributed.
+#[inline]
+pub fn current() -> u64 {
+    CURRENT_FLOW.with(Cell::get)
+}
+
+/// Fold a full flow ID onto its span tag. 0 stays 0 (unattributed);
+/// real IDs land on `1..=FLOW_TAG_MAX`, so a tag only collides with a
+/// flow `FLOW_TAG_MAX` mints away — far wider than any span ring.
+#[inline]
+pub fn tag(id: u64) -> u64 {
+    if id == 0 {
+        0
+    } else {
+        (id - 1) % FLOW_TAG_MAX + 1
+    }
+}
+
+/// Scope guard: sets the current thread's flow for its lifetime and
+/// restores the previous flow on drop, so nested scopes (a request
+/// guard around a batch guard) unwind correctly.
+pub struct FlowGuard {
+    prev: u64,
+}
+
+impl FlowGuard {
+    #[inline]
+    pub fn enter(id: u64) -> FlowGuard {
+        let prev = CURRENT_FLOW.with(|c| c.replace(id));
+        FlowGuard { prev }
+    }
+}
+
+impl Drop for FlowGuard {
+    fn drop(&mut self) {
+        CURRENT_FLOW.with(|c| c.set(self.prev));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mint_is_monotonic_and_never_zero() {
+        let a = mint();
+        let b = mint();
+        assert!(a > 0);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn guard_sets_and_restores_nested_flows() {
+        assert_eq!(current(), 0);
+        {
+            let _outer = FlowGuard::enter(7);
+            assert_eq!(current(), 7);
+            {
+                let _inner = FlowGuard::enter(9);
+                assert_eq!(current(), 9);
+            }
+            assert_eq!(current(), 7);
+        }
+        assert_eq!(current(), 0);
+    }
+
+    #[test]
+    fn tag_folds_ids_onto_nonzero_range() {
+        assert_eq!(tag(0), 0);
+        assert_eq!(tag(1), 1);
+        assert_eq!(tag(FLOW_TAG_MAX), FLOW_TAG_MAX);
+        assert_eq!(tag(FLOW_TAG_MAX + 1), 1);
+        for id in 1..200u64 {
+            let t = tag(id);
+            assert!((1..=FLOW_TAG_MAX).contains(&t));
+        }
+    }
+}

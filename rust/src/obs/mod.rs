@@ -19,12 +19,25 @@
 //!   latency histogram's log2 p99 coarseness.
 //! - [`prom`] — Prometheus text rendering of the whole metrics
 //!   snapshot for the server's `{"op":"prom"}`.
+//! - [`flow`] — request/batch flow IDs minted per unit of causal work
+//!   and carried in a thread-local, stamped into span records (14-bit
+//!   rolling tag) and fault events (full ID) so a capture reconstructs
+//!   the per-request timeline.
+//! - [`flightrec`] — the fault flight recorder: a severity-gated,
+//!   bounded pool of immutable `BlackBox` captures (span rings + policy
+//!   plane + shard health + kernel tiers) frozen by the event sink at
+//!   fault time, exported via `{"op":"flightrec"}` and
+//!   `--flightrec-dump-dir`.
 
+pub mod flightrec;
+pub mod flow;
 pub mod hist;
 pub mod overhead;
 pub mod profiler;
 pub mod prom;
 
+pub use flightrec::{FlightRecorder, SnapshotFn, DEFAULT_CAPTURES};
+pub use flow::{FlowGuard, FLOW_TAG_BITS, FLOW_TAG_MAX};
 pub use hist::{LogLinHist, NUM_BUCKETS, SUB_BUCKETS};
 pub use overhead::{HealCost, MeasuredUnitCosts, DEFAULT_HEAL_COST_ROWS, MIN_SAMPLES};
 pub use profiler::{ObsCore, ObsHandle, Probe, Stage, STAGES, STAGE_COUNT};

@@ -19,9 +19,14 @@
 //!    [`ObsHandle::probe_rare`], which bypasses the 1-in-n gate — a
 //!    once-per-outage event would otherwise almost never be sampled.
 //!
-//! A span record packs `stage (6 bits) | site (14 bits) | dur_ns
-//! (44 bits)` into one `u64` (stage stored +1 so an empty slot is 0),
-//! so readers never see a torn record — no seqlock needed.
+//! A span record packs `stage (6 bits) | site (12 bits) | flow tag
+//! (14 bits) | dur_ns (32 bits)` into one `u64` (stage stored +1 so an
+//! empty slot is 0), so readers never see a torn record — no seqlock
+//! needed. The flow tag is the rolling fold of the thread's current
+//! flow ID (see [`super::flow`]); durations saturate at ~4.3 s, far
+//! above any span this profiler times. Ring overwrite is *not* silent:
+//! each lane's lifetime head doubles as its drop counter, surfaced per
+//! lane in the metrics snapshot (and therefore in `{"op":"prom"}`).
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
@@ -114,26 +119,34 @@ pub const OBS_LANES: usize = 16;
 pub const RING_PER_LANE: usize = 256;
 
 const STAGE_BITS: u32 = 6;
-const SITE_BITS: u32 = 14;
+const SITE_BITS: u32 = 12;
 const SITE_MASK: u64 = (1 << SITE_BITS) - 1;
-const DUR_MASK: u64 = (1 << (64 - STAGE_BITS - SITE_BITS)) - 1;
+const FLOW_BITS: u32 = super::flow::FLOW_TAG_BITS;
+const FLOW_SHIFT: u32 = STAGE_BITS + SITE_BITS;
+const DUR_SHIFT: u32 = STAGE_BITS + SITE_BITS + FLOW_BITS;
+const DUR_MASK: u64 = (1 << (64 - DUR_SHIFT)) - 1;
 
 #[inline]
-fn pack(stage: Stage, site: u32, dur_ns: u64) -> u64 {
+fn pack(stage: Stage, site: u32, flow_tag: u64, dur_ns: u64) -> u64 {
     (stage as u64 + 1)
         | ((site as u64).min(SITE_MASK) << STAGE_BITS)
-        | (dur_ns.min(DUR_MASK) << (STAGE_BITS + SITE_BITS))
+        | (flow_tag << FLOW_SHIFT)
+        | (dur_ns.min(DUR_MASK) << DUR_SHIFT)
 }
 
-fn unpack(rec: u64) -> Option<(Stage, u32, u64)> {
+/// Decode one packed span record: `(stage, site, flow_tag, dur_ns)`.
+/// `None` for an empty (never-written) ring slot. Public so the flight
+/// recorder can rebuild timelines from a ring snapshot.
+pub fn unpack_record(rec: u64) -> Option<(Stage, u32, u64, u64)> {
     let tag = rec & ((1 << STAGE_BITS) - 1);
     if tag == 0 {
         return None;
     }
     let stage = Stage::from_index(tag as usize - 1)?;
     let site = ((rec >> STAGE_BITS) & SITE_MASK) as u32;
-    let dur_ns = rec >> (STAGE_BITS + SITE_BITS);
-    Some((stage, site, dur_ns))
+    let flow_tag = (rec >> FLOW_SHIFT) & super::flow::FLOW_TAG_MAX;
+    let dur_ns = rec >> DUR_SHIFT;
+    Some((stage, site, flow_tag, dur_ns))
 }
 
 /// One worker lane: a head counter, the 1-in-n sampling phase, and a
@@ -208,10 +221,11 @@ impl ObsCore {
     #[inline]
     fn record(&self, stage: Stage, site: u32, dur_ns: u64) {
         self.stages[stage as usize].record(dur_ns);
+        let flow_tag = super::flow::tag(super::flow::current());
         let lane = &self.lanes[lane_id()];
         let h = lane.head.fetch_add(1, Ordering::Relaxed);
         lane.ring[(h % RING_PER_LANE as u64) as usize]
-            .store(pack(stage, site, dur_ns), Ordering::Relaxed);
+            .store(pack(stage, site, flow_tag, dur_ns), Ordering::Relaxed);
     }
 
     /// 1-in-n gate; `None` when this probe is not sampled.
@@ -233,6 +247,44 @@ impl ObsCore {
 
     pub fn per_stage_hist(&self, stage: Stage) -> &LogLinHist {
         &self.stages[stage as usize]
+    }
+
+    /// Copy every lane's lifetime head into `heads` (length
+    /// [`OBS_LANES`]) and every lane's ring into `rings` (lane-major,
+    /// `OBS_LANES * RING_PER_LANE` words). Records are single words, so
+    /// relaxed loads can't tear them; the copy is a consistent-enough
+    /// recent-past snapshot for post-mortem timelines (a lane written
+    /// concurrently may be off by the in-flight record). Writes only
+    /// into caller-owned buffers — the flight recorder preallocates
+    /// them so freezing allocates nothing.
+    pub fn snapshot_rings(&self, heads: &mut [u64], rings: &mut [u64]) {
+        debug_assert!(heads.len() >= self.lanes.len());
+        debug_assert!(rings.len() >= self.lanes.len() * RING_PER_LANE);
+        for (li, lane) in self.lanes.iter().enumerate() {
+            heads[li] = lane.head.load(Ordering::Relaxed);
+            let base = li * RING_PER_LANE;
+            for (si, slot) in lane.ring.iter().enumerate() {
+                rings[base + si] = slot.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Current sampling knob (one relaxed load).
+    pub fn sample_n_relaxed(&self) -> u32 {
+        self.sample_n.load(Ordering::Relaxed)
+    }
+
+    /// Number of gemm sites the tier registry was sized for.
+    pub fn num_gemm_sites(&self) -> usize {
+        self.gemm_tiers.len()
+    }
+
+    /// Last-stamped kernel tier code at a gemm site
+    /// ([`TIER_UNKNOWN`] until stamped or out of range).
+    pub fn gemm_tier_code(&self, site: usize) -> u8 {
+        self.gemm_tiers
+            .get(site)
+            .map_or(TIER_UNKNOWN, |s| s.load(Ordering::Relaxed))
     }
 }
 
@@ -294,6 +346,12 @@ impl ObsHandle {
 
     pub fn core(&self) -> Option<&ObsCore> {
         self.0.as_deref()
+    }
+
+    /// The shared core itself, for components that hold their own
+    /// reference (the flight recorder snapshots its rings).
+    pub fn core_arc(&self) -> Option<&Arc<ObsCore>> {
+        self.0.as_ref()
     }
 
     /// Set the sampling knob: 0 = off, 1 = every pass, n = 1-in-n.
@@ -381,7 +439,9 @@ impl ObsHandle {
     }
 
     /// Per-stage histogram block for the metrics snapshot: count,
-    /// total, and interpolated p50/p99 per stage (µs).
+    /// total, and interpolated p50/p99 per stage (µs), plus the
+    /// per-lane ring watermarks ([`lanes_json`](Self::lanes_json)) so
+    /// span loss is visible wherever the snapshot is scraped.
     pub fn stages_json(&self) -> Json {
         let mut arr = Vec::new();
         if let Some(core) = &self.0 {
@@ -403,6 +463,40 @@ impl ObsHandle {
         Json::obj(vec![
             ("sample_1_in", Json::Num(self.sampling() as f64)),
             ("stages", Json::Arr(arr)),
+            ("rings", self.lanes_json()),
+        ])
+    }
+
+    /// Per-lane span-ring watermarks: lifetime `recorded` (the lane
+    /// head), `fill` high-watermark (resident records — rings never
+    /// shrink, so resident *is* the watermark), and `overwritten`
+    /// (records lost to ring wrap — the previously-silent drop
+    /// counter). Lanes that never recorded are elided; `id` labels the
+    /// lane in Prometheus output.
+    pub fn lanes_json(&self) -> Json {
+        let mut lanes = Vec::new();
+        let mut overwritten_total = 0u64;
+        if let Some(core) = &self.0 {
+            for (li, lane) in core.lanes.iter().enumerate() {
+                let head = lane.head.load(Ordering::Relaxed);
+                if head == 0 {
+                    continue;
+                }
+                let fill = head.min(RING_PER_LANE as u64);
+                let overwritten = head - fill;
+                overwritten_total += overwritten;
+                lanes.push(Json::obj(vec![
+                    ("id", Json::Num(li as f64)),
+                    ("recorded", Json::Num(head as f64)),
+                    ("fill", Json::Num(fill as f64)),
+                    ("overwritten", Json::Num(overwritten as f64)),
+                ]));
+            }
+        }
+        Json::obj(vec![
+            ("per_lane_capacity", Json::Num(RING_PER_LANE as f64)),
+            ("overwritten_total", Json::Num(overwritten_total as f64)),
+            ("lanes", Json::Arr(lanes)),
         ])
     }
 
@@ -419,12 +513,15 @@ impl ObsHandle {
                 for i in 0..resident {
                     let slot = ((head - resident + i) % RING_PER_LANE as u64) as usize;
                     let rec = lane.ring[slot].load(Ordering::Relaxed);
-                    if let Some((stage, site, dur_ns)) = unpack(rec) {
+                    if let Some((stage, site, flow_tag, dur_ns)) = unpack_record(rec) {
                         let mut fields = vec![
                             ("stage", Json::Str(stage.as_str().to_string())),
                             ("site", Json::Num(site as f64)),
                             ("dur_us", Json::Num(dur_ns as f64 / 1e3)),
                         ];
+                        if flow_tag != 0 {
+                            fields.push(("flow", Json::Num(flow_tag as f64)));
+                        }
                         // GEMM-backed spans carry the dispatched kernel
                         // tier, so a trace says which kernel the span
                         // actually timed.
@@ -487,21 +584,105 @@ mod tests {
 
     #[test]
     fn pack_unpack_round_trips_and_zero_is_empty() {
-        assert!(unpack(0).is_none());
-        for (stage, site, ns) in [
-            (Stage::Parse, 0u32, 0u64),
-            (Stage::Verify, 5, 123_456),
-            (Stage::QuarantineRepair, 16_000, (1 << 44) - 1),
+        assert!(unpack_record(0).is_none());
+        for (stage, site, flow, ns) in [
+            (Stage::Parse, 0u32, 0u64, 0u64),
+            (Stage::Verify, 5, 77, 123_456),
+            (
+                Stage::QuarantineRepair,
+                SITE_MASK as u32,
+                crate::obs::flow::FLOW_TAG_MAX,
+                (1 << 32) - 1,
+            ),
         ] {
-            let (s2, site2, ns2) = unpack(pack(stage, site, ns)).unwrap();
+            let (s2, site2, flow2, ns2) = unpack_record(pack(stage, site, flow, ns)).unwrap();
             assert_eq!(s2, stage);
-            assert_eq!(site2, site.min(SITE_MASK as u32));
+            assert_eq!(site2, site);
+            assert_eq!(flow2, flow);
             assert_eq!(ns2, ns);
         }
+        // Oversized sites clamp instead of corrupting neighbors.
+        let (_, site, flow, _) = unpack_record(pack(Stage::Verify, 16_000, 3, 9)).unwrap();
+        assert_eq!(site, SITE_MASK as u32);
+        assert_eq!(flow, 3);
         // Durations saturate rather than corrupt the stage tag.
-        let (s, _, ns) = unpack(pack(Stage::Parse, 1, u64::MAX)).unwrap();
+        let (s, _, _, ns) = unpack_record(pack(Stage::Parse, 1, 0, u64::MAX)).unwrap();
         assert_eq!(s, Stage::Parse);
         assert_eq!(ns, DUR_MASK);
+    }
+
+    #[test]
+    fn spans_inherit_the_threads_current_flow() {
+        let h = ObsHandle::attached(1, 1, 1);
+        let p = h.probe().unwrap();
+        p.span_ns(Stage::Parse, 0, 100);
+        let flow_id = crate::obs::flow::mint();
+        {
+            let _g = crate::obs::flow::FlowGuard::enter(flow_id);
+            p.span_ns(Stage::Verify, 0, 200);
+        }
+        p.span_ns(Stage::Requantize, 0, 300);
+        let doc = h.trace_json(16);
+        let spans = doc.get("spans").and_then(Json::as_arr).unwrap();
+        let flow_of = |stage: &str| {
+            spans
+                .iter()
+                .find(|s| s.get("stage").and_then(Json::as_str) == Some(stage))
+                .unwrap()
+                .get("flow")
+                .and_then(Json::as_f64)
+        };
+        assert_eq!(flow_of("parse"), None, "pre-guard span is unattributed");
+        assert_eq!(
+            flow_of("verify"),
+            Some(crate::obs::flow::tag(flow_id) as f64),
+            "guarded span carries the flow tag"
+        );
+        assert_eq!(flow_of("requantize"), None, "guard restored on drop");
+    }
+
+    #[test]
+    fn lane_watermarks_expose_overwrites() {
+        let h = ObsHandle::attached(1, 1, 1);
+        let p = h.probe().unwrap();
+        for i in 0..(RING_PER_LANE as u64 + 30) {
+            p.span_ns(Stage::Parse, 0, i);
+        }
+        let rings = h.lanes_json();
+        assert_eq!(
+            rings.get("overwritten_total").and_then(Json::as_f64),
+            Some(30.0)
+        );
+        let lanes = rings.get("lanes").and_then(Json::as_arr).unwrap();
+        let lane = lanes
+            .iter()
+            .find(|l| l.get("overwritten").and_then(Json::as_f64) == Some(30.0))
+            .expect("the hot lane reports its overwrites");
+        assert_eq!(
+            lane.get("fill").and_then(Json::as_f64),
+            Some(RING_PER_LANE as f64)
+        );
+        assert_eq!(
+            lane.get("recorded").and_then(Json::as_f64),
+            Some(RING_PER_LANE as f64 + 30.0)
+        );
+        // The snapshot block embeds the same rows.
+        let obs = h.stages_json();
+        assert!(obs.path(&["rings", "overwritten_total"]).is_some());
+    }
+
+    #[test]
+    fn ring_snapshot_copies_heads_and_records() {
+        let h = ObsHandle::attached(1, 1, 1);
+        let p = h.probe().unwrap();
+        p.span_ns(Stage::Verify, 2, 4_000);
+        let core = h.core().unwrap();
+        let mut heads = vec![0u64; OBS_LANES];
+        let mut rings = vec![0u64; OBS_LANES * RING_PER_LANE];
+        core.snapshot_rings(&mut heads, &mut rings);
+        assert_eq!(heads.iter().sum::<u64>(), 1);
+        let decoded: Vec<_> = rings.iter().filter_map(|&r| unpack_record(r)).collect();
+        assert_eq!(decoded, vec![(Stage::Verify, 2, 0, 4_000)]);
     }
 
     #[test]

@@ -243,11 +243,142 @@ fn server_exposes_trace_prom_and_cursored_events() {
     assert!(text.contains("dlrm_requests 6"), "{text}");
     assert!(text.contains("dlrm_obs_sample_1_in 1"), "{text}");
 
-    // events cursor: clean traffic journals nothing, cursor sits at 0.
+    // events cursor: clean traffic journals nothing, cursor sits at 0 —
+    // and the wrap marker is explicit even then: gap 0 means "the ring
+    // never overwrote past your cursor", not "field absent".
     let ev = client.events_since(0).unwrap();
     assert!(ev.get("events").and_then(Json::as_arr).unwrap().is_empty());
     assert_eq!(ev.get("next_cursor").and_then(Json::as_usize), Some(0));
+    assert_eq!(ev.get("gap").and_then(Json::as_usize), Some(0));
     server.stop();
+}
+
+#[test]
+fn flight_recorder_freezes_a_complete_black_box_on_severe_fault() {
+    use dlrm_abft::detect::Severity;
+    let m = model(0x76);
+    let reqs = requests(&m, 8, 6);
+    // tick ZERO = manual controller ticks: the policy lock is
+    // uncontended, so the freeze-time snapshot closure always lands.
+    let engine = Engine::new(model(0x76))
+        .with_shards(ShardPlan::hash_placement(2, 1, 2), 64)
+        .with_policy(PolicyConfig { tick: Duration::ZERO, ..PolicyConfig::default() });
+    engine.obs().set_sampling(1);
+    let rec = engine.arm_flightrec(4, Severity::Significant);
+    let mut scores = vec![0f32; reqs.len()];
+    // Warm clean batches: spans (per-layer GEMM + verify, with kernel
+    // tier labels) populate the rings before any fault.
+    for _ in 0..2 {
+        engine.score(&reqs, &mut scores);
+    }
+    assert_eq!(rec.captures_taken(), 0, "clean traffic must not freeze");
+
+    // Persistent corruption of replica 0's copy of table 0: every
+    // checked bag flags hard, fails same-replica retry, and recovers by
+    // failover — Severe events with the batch's flow stamped.
+    let store = engine.shard_store().unwrap();
+    for row in 0..2_000 {
+        store.flip_table_byte(0, 0, row * 16, 0x80);
+    }
+    let mark = engine.journal().total();
+    for _ in 0..4 {
+        engine.score(&reqs, &mut scores);
+        if rec.captures_taken() > 0 {
+            break;
+        }
+    }
+    let severe = engine
+        .journal()
+        .since(mark)
+        .iter()
+        .filter(|e| e.severity >= Severity::Significant)
+        .count();
+    assert!(severe > 0, "corruption must journal Severe events");
+    assert_eq!(rec.captures_taken(), severe as u64, "one freeze per Severe event");
+
+    // The newest capture is a complete, self-contained post-mortem.
+    let cap = rec.capture_json(rec.captures_taken()).expect("newest capture resident");
+    assert_eq!(
+        cap.path(&["event", "severity"]).and_then(Json::as_str),
+        Some("significant"),
+        "capture must embed the triggering event"
+    );
+    let flow = cap.get("flow").and_then(Json::as_usize).unwrap();
+    assert!(flow > 0, "event must carry the scoring batch's flow id");
+    // Causal timeline: non-empty, every span shares the event's flow
+    // tag, and the faulting request's recovery rung is on it.
+    let tag = cap.get("flow_tag").and_then(Json::as_usize).unwrap();
+    let timeline = cap.get("flow_timeline").and_then(Json::as_arr).unwrap();
+    assert!(!timeline.is_empty(), "flow timeline must hold the faulting batch's spans");
+    let mut stages = Vec::new();
+    for span in timeline {
+        assert_eq!(span.get("flow").and_then(Json::as_usize), Some(tag));
+        stages.push(span.get("stage").and_then(Json::as_str).unwrap().to_string());
+    }
+    assert!(
+        stages.iter().any(|s| s == "failover_replica"),
+        "recovery rung span must correlate by flow: {stages:?}"
+    );
+    // The wider span window keeps the warm batches' verify spans, each
+    // labeled with the dispatched kernel tier.
+    let spans = cap.get("spans").and_then(Json::as_arr).unwrap();
+    assert!(
+        spans.iter().any(|s| {
+            s.get("stage").and_then(Json::as_str) == Some("verify") && s.get("tier").is_some()
+        }),
+        "verify spans must carry kernel tier labels"
+    );
+    // Control planes rode along: policy modes + shard health + the
+    // per-layer kernel dispatch snapshot.
+    assert!(cap.get("policy").is_some_and(|p| *p != Json::Null), "policy snapshot missing");
+    assert!(cap.get("shards").is_some_and(|s| *s != Json::Null), "shard snapshot missing");
+    assert!(
+        !cap.get("kernel_tiers").and_then(Json::as_arr).unwrap().is_empty(),
+        "kernel tier snapshot missing"
+    );
+    // And the armed recorder surfaces in the metrics snapshot.
+    let snap = engine.metrics_snapshot();
+    assert!(
+        snap.path(&["flightrec", "captures"]).and_then(Json::as_usize).unwrap() >= 1,
+        "metrics snapshot must carry the recorder status"
+    );
+}
+
+#[test]
+fn capture_pool_evicts_oldest_and_never_blocks() {
+    use dlrm_abft::detect::{Detector, Resolution, Severity, SiteId, UnitRef};
+    let engine = Engine::new(model(0x77));
+    let rec = engine.arm_flightrec(2, Severity::Significant);
+    for i in 0..5u32 {
+        engine.event_sink().emit(
+            SiteId::Gemm(i % 2),
+            UnitRef::GemmRow { row: i },
+            Detector::GemmChecksum,
+            Severity::Significant,
+            Resolution::DetectedOnly,
+        );
+    }
+    assert_eq!(rec.captures_taken(), 5);
+    // Pool of 2: the newest two captures are resident; older ones were
+    // evicted by slot reuse — never blocked on, never grown.
+    assert!(rec.capture_json(4).is_some());
+    assert!(rec.capture_json(5).is_some());
+    for id in 1..=3u64 {
+        assert!(rec.capture_json(id).is_none(), "capture {id} must be evicted");
+    }
+    let status = rec.status_json();
+    assert_eq!(status.get("resident").and_then(Json::as_usize), Some(2));
+    assert_eq!(status.get("missed").and_then(Json::as_usize), Some(0));
+    // Below the severity floor: journaled, never frozen.
+    engine.event_sink().emit(
+        SiteId::Gemm(0),
+        UnitRef::GemmRow { row: 9 },
+        Detector::GemmChecksum,
+        Severity::NearBound,
+        Resolution::DetectedOnly,
+    );
+    assert_eq!(rec.captures_taken(), 5, "below-floor events must not freeze");
+    assert_eq!(engine.journal().total(), 6, "every event still journals");
 }
 
 fn has_num(j: &Json) -> bool {
@@ -289,5 +420,15 @@ fn prom_text_covers_every_numeric_snapshot_block() {
     assert!(
         text.contains("dlrm_policy_sites_overhead_est{site=\"gemm/0\"}"),
         "{text}"
+    );
+    // Span-ring health rides the obs block: per-lane fill watermarks and
+    // drop/overwrite counters are first-class prom series.
+    assert!(
+        text.contains("dlrm_obs_rings_overwritten_total"),
+        "ring overwrite counter missing from prom text:\n{text}"
+    );
+    assert!(
+        text.contains("dlrm_obs_rings_lanes_fill{id="),
+        "per-lane fill watermark missing from prom text:\n{text}"
     );
 }

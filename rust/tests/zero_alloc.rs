@@ -167,6 +167,18 @@ fn engine_score_steady_state_is_allocation_free() {
     let fanout = Engine::new(fanout_model(0x21));
     steady_state_allocs(&fanout, 128, "fanout");
 
+    // Armed flight recorder, clean traffic: arming preallocates the
+    // capture pool up front (PR 9); with no faults the freeze path is
+    // never consulted — probes stay one relaxed load and the scored
+    // batch's flow guard is two thread-local stores — so the recorder
+    // must not break the invariant. Sampling stays on to prove the
+    // armed + profiled combination.
+    let armed = Engine::new(tiny_model(0x21));
+    armed.obs().set_sampling(1);
+    let rec = armed.arm_flightrec(4, dlrm_abft::detect::Severity::Significant);
+    steady_state_allocs(&armed, 4, "armed recorder");
+    assert_eq!(rec.captures_taken(), 0, "clean traffic must not freeze captures");
+
     // Request parsing: the zero-alloc boundary extends to the socket.
     steady_state_parse_allocs();
 }
