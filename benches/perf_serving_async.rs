@@ -1,0 +1,318 @@
+//! Serving front-end bench (PR 10, emitted as `BENCH_PR10.json`):
+//!
+//! * **Concurrency sweep** — the threaded (thread-per-connection) server
+//!   at C closed-loop connections vs the epoll event-loop server at 4·C
+//!   connections, same model, same per-connection request count.
+//!   Acceptance: the async front end sustains 4× the connections at
+//!   equal-or-better client-side p99 (`p99_ok`).
+//! * **Overload drill** — an SLO-armed engine behind the async server
+//!   under sustained closed-loop pressure. A sampler watches the
+//!   overload floor and the shed counter: detection must step down
+//!   (floor > 0) strictly before the first shed
+//!   (`degrade_before_shed`). The connection count stays below the
+//!   admission queue bound so every shed is the controller's, not a
+//!   queue-full bounce.
+//!
+//! Env: `QUICK=1` (or `--quick`) shrinks connection counts and the
+//! drill duration; `BENCH_OUT=path` overrides the output file. Run:
+//! `cargo bench --bench perf_serving_async`.
+
+#[cfg(target_os = "linux")]
+mod run {
+    use dlrm_abft::coordinator::{
+        AsyncServer, BatchPolicy, Client, Engine, ReactorOptions, ScoreRequest, Server,
+    };
+    use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
+    use dlrm_abft::gemm::simd_active;
+    use dlrm_abft::policy::{OverloadConfig, PolicyConfig};
+    use dlrm_abft::util::json::Json;
+    use dlrm_abft::util::rng::Pcg32;
+    use std::net::SocketAddr;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::thread;
+    use std::time::{Duration, Instant};
+
+    fn num(x: f64) -> Json {
+        Json::Num(x)
+    }
+
+    /// Medium model: large enough that batch latency is measurable,
+    /// small enough that 30+ closed-loop connections stay responsive.
+    fn model() -> DlrmModel {
+        DlrmModel::random(DlrmConfig {
+            num_dense: 13,
+            embedding_dim: 32,
+            bottom_mlp: vec![128, 64, 32],
+            top_mlp: vec![64, 32],
+            tables: vec![TableConfig { rows: 20_000, pooling: 30 }; 4],
+            protection: Protection::DetectRecompute,
+            dense_range: (0.0, 1.0),
+            seed: 99,
+        })
+    }
+
+    fn requests(m: &DlrmModel, n: usize, seed: u64) -> Vec<ScoreRequest> {
+        let mut rng = Pcg32::new(seed);
+        m.synth_requests(n, &mut rng)
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| ScoreRequest { id: i as u64, dense: r.dense, sparse: r.sparse })
+            .collect()
+    }
+
+    fn quantile_us(sorted: &[f64], q: f64) -> f64 {
+        if sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len()) - 1;
+        sorted[idx] * 1e6
+    }
+
+    /// Closed-loop load: `conns` connections, each scoring `per_conn`
+    /// requests back to back. Returns sorted client-side latencies (s)
+    /// and the wall time (s).
+    fn drive_conns(
+        addr: SocketAddr,
+        conns: usize,
+        per_conn: usize,
+        reqs: &Arc<Vec<ScoreRequest>>,
+    ) -> (Vec<f64>, f64) {
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..conns)
+            .map(|c| {
+                let reqs = Arc::clone(reqs);
+                thread::spawn(move || {
+                    let mut client = Client::connect(&addr).expect("connect");
+                    let mut lats = Vec::with_capacity(per_conn);
+                    for i in 0..per_conn {
+                        let req = &reqs[(c * 31 + i) % reqs.len()];
+                        let t = Instant::now();
+                        client.score(req).expect("score");
+                        lats.push(t.elapsed().as_secs_f64());
+                    }
+                    lats
+                })
+            })
+            .collect();
+        let mut all: Vec<f64> = handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("load thread"))
+            .collect();
+        let wall = t0.elapsed().as_secs_f64();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (all, wall)
+    }
+
+    fn leg_json(label: &str, conns: usize, lats: &[f64], wall: f64) -> Json {
+        Json::obj(vec![
+            ("front_end", Json::Str(label.into())),
+            ("conns", num(conns as f64)),
+            ("requests", num(lats.len() as f64)),
+            ("qps", num(lats.len() as f64 / wall)),
+            ("p50_us", num(quantile_us(lats, 0.50))),
+            ("p99_us", num(quantile_us(lats, 0.99))),
+            ("p999_us", num(quantile_us(lats, 0.999))),
+        ])
+    }
+
+    fn sweep_section(quick: bool) -> Json {
+        let base_conns = if quick { 4 } else { 8 };
+        let per_conn = if quick { 40 } else { 200 };
+        let reqs = Arc::new(requests(&model(), 64, 7));
+        let bp = BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+            max_queue: 1024,
+            loops: 2,
+        };
+
+        let t_engine = Arc::new(Engine::new(model()));
+        let t_server = Server::start("127.0.0.1:0", Arc::clone(&t_engine), bp).expect("threaded");
+        let (t_lats, t_wall) = drive_conns(t_server.addr, base_conns, per_conn, &reqs);
+        t_server.stop();
+        eprintln!(
+            "perf_serving_async: threaded {base_conns} conns p99 {:.0} us",
+            quantile_us(&t_lats, 0.99)
+        );
+
+        let a_engine = Arc::new(Engine::new(model()));
+        let a_server =
+            AsyncServer::start("127.0.0.1:0", Arc::clone(&a_engine), bp, ReactorOptions::default())
+                .expect("async");
+        let (a_lats, a_wall) = drive_conns(a_server.addr, base_conns * 4, per_conn, &reqs);
+        a_server.stop();
+        eprintln!(
+            "perf_serving_async: async {} conns p99 {:.0} us",
+            base_conns * 4,
+            quantile_us(&a_lats, 0.99)
+        );
+
+        let t_p99 = quantile_us(&t_lats, 0.99);
+        let a_p99 = quantile_us(&a_lats, 0.99);
+        Json::obj(vec![
+            ("threaded", leg_json("threaded", base_conns, &t_lats, t_wall)),
+            ("async_4x", leg_json("epoll", base_conns * 4, &a_lats, a_wall)),
+            // Advisory (noise can exceed the margin on shared CI
+            // runners); the recorded quantiles are the numbers that
+            // matter.
+            ("p99_ok", Json::Bool(a_p99 <= t_p99 * 1.05)),
+        ])
+    }
+
+    /// Sustained overload against an SLO-armed engine. 24 closed-loop
+    /// connections against a queue bound of 32: in-flight never reaches
+    /// the bound (no queue-full bounce — every shed is the
+    /// controller's), while the standing depth sits above the
+    /// `queue_frac` pressure line and `should_shed`'s depth watermark,
+    /// so the floor walk is observable strictly before the first shed.
+    fn drill_section(quick: bool) -> Json {
+        let conns = 24usize;
+        let secs = if quick { 3.0 } else { 8.0 };
+        let engine = Arc::new(
+            Engine::new(model())
+                .with_policy(PolicyConfig::default())
+                .with_overload(OverloadConfig::for_slo_ms(1)),
+        );
+        let ctl = Arc::clone(engine.overload().expect("overload armed"));
+        let bp = BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            max_queue: 32,
+            loops: 1,
+        };
+        let server =
+            AsyncServer::start("127.0.0.1:0", Arc::clone(&engine), bp, ReactorOptions::default())
+                .expect("async");
+        let addr = server.addr;
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let sampler = {
+            let ctl = Arc::clone(&ctl);
+            let engine = Arc::clone(&engine);
+            let stop = Arc::clone(&stop);
+            thread::spawn(move || {
+                let t0 = Instant::now();
+                let (mut first_degrade_ms, mut first_shed_ms) = (-1.0f64, -1.0f64);
+                let mut floor_max = 0u32;
+                while !stop.load(Ordering::Relaxed) {
+                    let ms = t0.elapsed().as_secs_f64() * 1e3;
+                    let lvl = ctl.floor().level();
+                    if lvl > 0 && first_degrade_ms < 0.0 {
+                        first_degrade_ms = ms;
+                    }
+                    if engine.metrics.shed.load(Ordering::Relaxed) > 0 && first_shed_ms < 0.0 {
+                        first_shed_ms = ms;
+                    }
+                    floor_max = floor_max.max(lvl);
+                    thread::sleep(Duration::from_millis(10));
+                }
+                (first_degrade_ms, first_shed_ms, floor_max)
+            })
+        };
+
+        let reqs = Arc::new(requests(&model(), 64, 11));
+        let workers: Vec<_> = (0..conns)
+            .map(|c| {
+                let reqs = Arc::clone(&reqs);
+                let stop = Arc::clone(&stop);
+                thread::spawn(move || {
+                    let mut client = Client::connect(&addr).expect("connect");
+                    let (mut served, mut rejected) = (0u64, 0u64);
+                    let mut i = 0usize;
+                    while !stop.load(Ordering::Relaxed) {
+                        let req = &reqs[(c * 17 + i) % reqs.len()];
+                        i += 1;
+                        match client.score(req) {
+                            Ok(_) => served += 1,
+                            Err(_) => {
+                                // Overload bounce: back off briefly and
+                                // keep pressing.
+                                rejected += 1;
+                                thread::sleep(Duration::from_millis(5));
+                            }
+                        }
+                    }
+                    (served, rejected)
+                })
+            })
+            .collect();
+
+        thread::sleep(Duration::from_secs_f64(secs));
+        stop.store(true, Ordering::Relaxed);
+        let (mut served, mut rejected) = (0u64, 0u64);
+        for w in workers {
+            let (s, r) = w.join().expect("drill worker");
+            served += s;
+            rejected += r;
+        }
+        let (first_degrade_ms, first_shed_ms, floor_max) = sampler.join().expect("sampler");
+        let shed = engine.metrics.shed.load(Ordering::Relaxed);
+        let state = ctl.state().as_str().to_string();
+        let p99_us = ctl.last_p99_us();
+        server.stop();
+        eprintln!(
+            "perf_serving_async: drill served={served} shed={shed} floor_max={floor_max} \
+             first_degrade={first_degrade_ms:.0}ms first_shed={first_shed_ms:.0}ms"
+        );
+
+        let degrade_before_shed =
+            first_degrade_ms >= 0.0 && (first_shed_ms < 0.0 || first_degrade_ms < first_shed_ms);
+        Json::obj(vec![
+            ("conns", num(conns as f64)),
+            ("duration_s", num(secs)),
+            ("served", num(served as f64)),
+            ("client_rejected", num(rejected as f64)),
+            ("shed", num(shed as f64)),
+            ("floor_max", num(floor_max as f64)),
+            ("first_degrade_ms", num(first_degrade_ms)),
+            ("first_shed_ms", num(first_shed_ms)),
+            ("final_state", Json::Str(state)),
+            ("window_p99_us", num(p99_us as f64)),
+            ("degrade_before_shed", Json::Bool(degrade_before_shed)),
+        ])
+    }
+
+    fn host_json() -> Json {
+        Json::obj(vec![
+            ("avx2", Json::Bool(simd_active())),
+            (
+                "threads",
+                num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0) as f64),
+            ),
+        ])
+    }
+
+    pub fn main_impl() {
+        let quick = std::env::var("QUICK").map(|v| v == "1").unwrap_or(false)
+            || std::env::args().any(|a| a == "--quick");
+        let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_PR10.json".into());
+        eprintln!("perf_serving_async: avx2={} quick={quick}", simd_active());
+
+        let sweep = sweep_section(quick);
+        eprintln!("perf_serving_async: concurrency sweep done");
+        let drill = drill_section(quick);
+        eprintln!("perf_serving_async: overload drill done");
+
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("perf_serving_async_pr10".into())),
+            ("host", host_json()),
+            ("concurrency", sweep),
+            ("overload_drill", drill),
+        ]);
+        let text = format!("{doc}");
+        std::fs::write(&out_path, &text).expect("write bench output");
+        println!("{text}");
+        eprintln!("perf_serving_async: wrote {out_path}");
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn main() {
+    run::main_impl();
+}
+
+#[cfg(not(target_os = "linux"))]
+fn main() {
+    eprintln!("perf_serving_async: the epoll front end is linux-only; nothing to measure");
+}

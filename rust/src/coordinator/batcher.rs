@@ -3,7 +3,7 @@
 //! request has aged past `max_wait` — the standard latency/throughput
 //! trade-off every serving stack (vLLM, DLRM inference tiers) exposes.
 
-use crate::obs::{ObsHandle, Stage};
+use crate::obs::{flow, FlowGuard, ObsHandle, Stage};
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -52,6 +52,11 @@ impl BatchPolicy {
 struct Queued<T> {
     item: T,
     enqueued: Instant,
+    /// Flow the submitter was working under at `submit` time; re-entered
+    /// when the queue-wait span records at batch cut, so per-request
+    /// attribution survives the batcher boundary instead of collapsing
+    /// to flow 0.
+    flow: u64,
 }
 
 struct State<T> {
@@ -109,6 +114,7 @@ impl<T> Batcher<T> {
         st.queue.push_back(Queued {
             item,
             enqueued: Instant::now(),
+            flow: flow::current(),
         });
         self.cv.notify_one();
         Ok(())
@@ -128,6 +134,7 @@ impl<T> Batcher<T> {
                     let n = st.queue.len().min(self.policy.max_batch);
                     if let Some(p) = self.obs.probe() {
                         for q in st.queue.iter().take(n) {
+                            let _flow = FlowGuard::enter(q.flow);
                             p.span(Stage::QueueWait, 0, q.enqueued);
                         }
                     }

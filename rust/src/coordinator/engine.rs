@@ -11,7 +11,7 @@
 //! inject/undo drills and operator repairs (tests/CLI).
 
 use crate::abft::Scrubber;
-use crate::coordinator::metrics::{policy_json, Metrics};
+use crate::coordinator::metrics::{overload_json, policy_json, Metrics};
 use crate::coordinator::request::{ScoreRequest, ScoreResponse};
 use crate::detect::{
     Detector, EventSink, Journal, Resolution, Severity, SiteId, UnitRef, LOCAL_REPLICA,
@@ -21,8 +21,8 @@ use crate::dlrm::{
 };
 use crate::obs::{render_prometheus, FlightRecorder, ObsHandle, Stage};
 use crate::policy::{
-    build_neighbors, ControllerThread, PolicyConfig, PolicyController, PolicyHandle, PolicySites,
-    PolicyState, StepReport,
+    build_neighbors, ControllerThread, OverloadConfig, OverloadCtl, PolicyConfig, PolicyController,
+    PolicyHandle, PolicySites, PolicyState, StepReport,
 };
 use crate::shard::{RepairWorker, ShardPlan, ShardRouter, ShardStore};
 use crate::util::json::Json;
@@ -162,6 +162,10 @@ pub struct Engine {
     /// `None` every site runs `Full` — bit-identical to the pre-policy
     /// engine.
     policy: Option<PolicyRuntime>,
+    /// Serve-side overload controller ([`Engine::with_overload`]): under
+    /// sustained p99/queue pressure it presses detection sites down the
+    /// lattice before admission sheds anything. `None` = no `--slo-p99-ms`.
+    overload: Option<Arc<OverloadCtl>>,
     /// Per-worker inference arenas: [`Engine::score`] checks one out for
     /// the duration of a batch and returns it, so N concurrent callers
     /// settle on N pooled arenas and steady-state scoring allocates
@@ -206,6 +210,7 @@ impl Engine {
             scrubbers: None,
             shards: None,
             policy: None,
+            overload: None,
             scratch_pool: Mutex::new(Vec::new()),
         }
     }
@@ -331,6 +336,41 @@ impl Engine {
             _thread: thread,
         });
         self
+    }
+
+    /// Attach the serve-side overload controller (PR 10): `tick`s press
+    /// detection sites down the policy lattice under sustained
+    /// p99/queue pressure — strictly before admission sheds — and
+    /// restore them with hysteresis. Call after [`Engine::with_policy`];
+    /// without a policy the state machine still runs (admission gating
+    /// only) but has no detection dial to turn.
+    pub fn with_overload(mut self, cfg: OverloadConfig) -> Self {
+        self.overload = Some(Arc::new(OverloadCtl::new(cfg)));
+        self
+    }
+
+    /// The overload controller, when attached.
+    pub fn overload(&self) -> Option<&Arc<OverloadCtl>> {
+        self.overload.as_ref()
+    }
+
+    /// One overload control tick: roll the latency window against the
+    /// SLO, advance the Normal/Degrading/Shedding machine, and apply the
+    /// resulting detection floor through the policy controller. The
+    /// controller lock is `try_lock` — an overload tick racing a policy
+    /// tick skips floor application this round rather than stalling the
+    /// server's control loop; the floor is re-applied every tick, so a
+    /// skipped round heals on the next. `None` when no overload
+    /// controller is attached.
+    pub fn overload_tick(&self, queue_depth: usize, queue_bound: usize) -> Option<()> {
+        let ctl = self.overload.as_ref()?;
+        let floor = ctl.tick(self.metrics.latency.hist(), queue_depth, queue_bound);
+        if let Some(rt) = &self.policy {
+            if let Ok(mut c) = rt.controller.try_lock() {
+                ctl.note_pressed(c.apply_overload_floor(floor));
+            }
+        }
+        Some(())
     }
 
     /// Run one controller tick synchronously (manual-tick mode; also
@@ -771,8 +811,19 @@ impl Engine {
                 map.insert("shards".to_string(), sh.store.health_json());
             }
             if let Some(rt) = &self.policy {
-                let controller = rt.controller.lock().unwrap();
-                map.insert("policy".to_string(), policy_json(&rt.sites, &controller));
+                // try_lock: snapshots are served from the reactor's
+                // control worker and must stay bounded — a snapshot
+                // racing a controller tick reports the policy block as
+                // null (same contract as the flight recorder's freeze)
+                // instead of blocking behind the tick.
+                let block = match rt.controller.try_lock() {
+                    Ok(controller) => policy_json(&rt.sites, &controller),
+                    Err(_) => Json::Null,
+                };
+                map.insert("policy".to_string(), block);
+            }
+            if let Some(ctl) = &self.overload {
+                map.insert("overload".to_string(), overload_json(ctl));
             }
             if let Some(rec) = self.sink.recorder() {
                 map.insert("flightrec".to_string(), rec.status_json());

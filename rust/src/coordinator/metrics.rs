@@ -41,6 +41,12 @@ impl LatencyHistogram {
     pub fn quantile_us(&self, q: f64) -> u64 {
         self.hist.quantile(q)
     }
+
+    /// The backing histogram (for windowed readers like the overload
+    /// controller's [`crate::obs::HistWindow`]).
+    pub fn hist(&self) -> &LogLinHist {
+        &self.hist
+    }
 }
 
 impl Default for LatencyHistogram {
@@ -82,6 +88,14 @@ pub struct Metrics {
     /// from the policy site table at snapshot time; 0 with no policy.
     pub policy_escalations: AtomicU64,
     pub policy_decays: AtomicU64,
+    /// Admission control (PR 10): requests accepted into a batch queue,
+    /// requests refused with `{"error":"overloaded"}` (queue watermark
+    /// or shedding state), and a gauge of the deepest batch queue as of
+    /// the last submit — all fed from the serve path with relaxed
+    /// atomics, no new hot-path locks.
+    pub admitted: AtomicU64,
+    pub shed: AtomicU64,
+    pub queue_depth: AtomicU64,
     pub latency: LatencyHistogram,
 }
 
@@ -100,6 +114,9 @@ impl Metrics {
             shard_quarantines: AtomicU64::new(0),
             policy_escalations: AtomicU64::new(0),
             policy_decays: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
             latency: LatencyHistogram::new(),
         }
     }
@@ -144,6 +161,12 @@ impl Metrics {
             (
                 "policy_decays",
                 Json::Num(self.policy_decays.load(Ordering::Relaxed) as f64),
+            ),
+            ("admitted", Json::Num(self.admitted.load(Ordering::Relaxed) as f64)),
+            ("shed", Json::Num(self.shed.load(Ordering::Relaxed) as f64)),
+            (
+                "queue_depth",
+                Json::Num(self.queue_depth.load(Ordering::Relaxed) as f64),
             ),
             ("latency_mean_us", Json::Num(self.latency.mean_us())),
             ("latency_p50_us", Json::Num(self.latency.quantile_us(0.5) as f64)),
@@ -224,6 +247,30 @@ pub fn policy_json(sites: &PolicySites, controller: &PolicyController) -> Json {
             Json::Num(sites.scrub_budget.load(Ordering::Relaxed) as f64),
         ),
         ("sites", Json::Arr(site_rows)),
+    ])
+}
+
+/// The overload block of the metrics snapshot (PR 10): serve-side
+/// pressure state, the detection floor in force, and the lifetime
+/// degrade/restore tallies. Strings are skipped by the Prometheus
+/// walker, so state and floor carry numeric codes alongside their
+/// names.
+pub fn overload_json(ctl: &crate::policy::OverloadCtl) -> Json {
+    let state = ctl.state();
+    let floor = ctl.floor();
+    Json::obj(vec![
+        ("state", Json::Str(state.as_str().to_string())),
+        ("state_code", Json::Num(state.code() as f64)),
+        ("floor", Json::Str(floor.as_str().to_string())),
+        ("floor_level", Json::Num(floor.level() as f64)),
+        ("window_p99_us", Json::Num(ctl.last_p99_us() as f64)),
+        (
+            "slo_p99_us",
+            Json::Num(ctl.config().slo_p99_us as f64),
+        ),
+        ("degrade_steps", Json::Num(ctl.degrade_steps() as f64)),
+        ("restore_steps", Json::Num(ctl.restore_steps() as f64)),
+        ("pressed_sites", Json::Num(ctl.pressed_sites() as f64)),
     ])
 }
 
@@ -311,6 +358,9 @@ mod tests {
             "shard_quarantines",
             "policy_escalations",
             "policy_decays",
+            "admitted",
+            "shed",
+            "queue_depth",
             "latency_mean_us",
             "latency_p50_us",
             "latency_p99_us",

@@ -7,12 +7,17 @@ pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod pjrt_backend;
+/// Readiness-driven (epoll) serving front end; linux-only, `--async-io`.
+#[cfg(target_os = "linux")]
+pub mod reactor;
 pub mod request;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher, SubmitError};
 pub use engine::{BatchOutcome, ChaosConfig, Engine, PolicyRuntime, ScrubTickReport, ShardServing};
-pub use metrics::{policy_json, Metrics};
+pub use metrics::{overload_json, policy_json, Metrics};
+#[cfg(target_os = "linux")]
+pub use reactor::{AsyncServer, ReactorOptions};
 pub use pjrt_backend::{ArtifactShape, PjrtModelEngine};
 pub use request::{ScoreRequest, ScoreResponse};
 pub use server::{Client, Server};

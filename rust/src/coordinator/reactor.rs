@@ -1,0 +1,894 @@
+//! Readiness-driven serving front end (PR 10): one epoll event loop in
+//! place of thread-per-connection, for million-connection fan-in.
+//!
+//! The threaded front end in [`crate::coordinator::server`] spends one
+//! OS thread (stack, scheduler slot, wakeup) per connection; past a few
+//! thousand mostly-idle connections the machine is scheduling threads,
+//! not scoring requests. This module keeps the whole protocol surface —
+//! newline-delimited JSON, the same control ops, the same batcher →
+//! engine pipeline — but multiplexes every connection onto **one
+//! reactor thread** over raw `epoll` (hand-rolled `extern "C"` syscall
+//! bindings; the offline build budget of this repo does not admit mio
+//! or tokio, and the loop needs ~4 syscalls anyway).
+//!
+//! Data flow:
+//!
+//! * The reactor owns the listener and every connection. Per-connection
+//!   state is a small machine: a read buffer accumulating bytes until a
+//!   newline (parsed with the same zero-alloc
+//!   [`ScoreRequest::parse_line_into`] + husk slab as the threaded
+//!   path), and a write buffer drained as the socket accepts bytes.
+//! * Parsed requests are **admitted** — or not — into the same bounded
+//!   [`Batcher`] queues the threaded server uses. A full queue, or an
+//!   overload controller in its shedding state
+//!   ([`crate::policy::OverloadCtl::should_shed`]), answers
+//!   `{"error":"overloaded"}` on the spot; nothing about an overloaded
+//!   request ever reaches the engine.
+//! * Batch loops (same count, same policy as threaded) score batches
+//!   and push `(token, response, husk)` completions onto a shared
+//!   vector, then wake the reactor via a self-pipe (a nonblocking
+//!   `UnixStream` pair registered in the epoll set).
+//! * Control ops (`{"op":"metrics"}` and friends) run on a dedicated
+//!   control worker, never on the reactor thread, so a snapshot or a
+//!   flight-recorder dump cannot stall a tick. Their replies ride the
+//!   same completion queue. Consequence (documented contract): a
+//!   pipelined client can see a control reply overtake an in-flight
+//!   score; per-connection *score* order is always preserved (each
+//!   connection sticks to one FIFO batch loop).
+//! * Write backpressure: a connection whose write buffer passes the
+//!   high-water mark stops being read (its `EPOLLIN` interest is
+//!   dropped) until the buffer drains below the low-water mark — a slow
+//!   reader throttles itself, not the server.
+//!
+//! The reactor thread doubles as the overload pacer: every
+//! [`ReactorOptions::tick`] it feeds the deepest queue and the measured
+//! p99 window to [`crate::coordinator::engine::Engine::overload_tick`],
+//! which presses detection sites down the mode lattice *before*
+//! admission sheds anything (degrade-before-drop; see
+//! `crate::policy::overload`).
+//!
+//! Linux-only (`epoll`); the threaded server remains the default and
+//! the portable fallback. `--async-io` opts in.
+
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::request::{ScoreRequest, ScoreResponse};
+use crate::coordinator::server::{control_reply, err_json};
+use crate::obs::flow::{self, FlowGuard};
+use crate::obs::Stage;
+use crate::util::json::Json;
+use crate::util::rng::splitmix64;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Minimal epoll bindings. These symbols live in the C library every
+/// Rust binary on Linux already links; no crate needed.
+mod sys {
+    use std::io;
+    use std::os::fd::RawFd;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    /// Kernel `struct epoll_event`. Packed on x86 (the kernel ABI there
+    /// has no padding between `events` and `data`); naturally aligned
+    /// elsewhere.
+    #[cfg_attr(any(target_arch = "x86", target_arch = "x86_64"), repr(C, packed))]
+    #[cfg_attr(not(any(target_arch = "x86", target_arch = "x86_64")), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout_ms: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    pub struct Epoll {
+        fd: RawFd,
+    }
+
+    impl Epoll {
+        pub fn new() -> io::Result<Epoll> {
+            let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if fd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Epoll { fd })
+        }
+
+        pub fn add(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, events, token)
+        }
+
+        pub fn modify(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, events, token)
+        }
+
+        pub fn del(&self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+            let mut ev = EpollEvent { events, data: token };
+            let rc = unsafe { epoll_ctl(self.fd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Wait for readiness; retries on `EINTR`.
+        pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+            loop {
+                let rc = unsafe {
+                    epoll_wait(self.fd, events.as_mut_ptr(), events.len() as i32, timeout_ms)
+                };
+                if rc >= 0 {
+                    return Ok(rc as usize);
+                }
+                let e = io::Error::last_os_error();
+                if e.kind() != io::ErrorKind::Interrupted {
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    impl Drop for Epoll {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.fd);
+            }
+        }
+    }
+}
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKE: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// One `read(2)` granularity.
+const READ_CHUNK: usize = 16 * 1024;
+/// A read buffer past this with pipelined-but-unprocessed input (or one
+/// unterminated line) marks the peer as abusive; the connection drops.
+const MAX_RBUF: usize = 4 << 20;
+/// Write backpressure: stop reading a connection above HIGH pending
+/// output bytes, resume below LOW.
+const WBUF_HIGH: usize = 256 * 1024;
+const WBUF_LOW: usize = 64 * 1024;
+/// Husk-slab depth per connection (buffers recycled across requests).
+const SLAB_CAP: usize = 64;
+
+/// Reactor knobs (`--max-conns`; the tick paces the overload
+/// controller and the queue-depth gauge).
+#[derive(Clone, Copy, Debug)]
+pub struct ReactorOptions {
+    /// Registered-connection ceiling; an accept past it is answered
+    /// `{"error":"overloaded"}` and closed. `0` = unlimited.
+    pub max_conns: usize,
+    /// Overload/housekeeping cadence (also the epoll wait timeout).
+    pub tick: Duration,
+}
+
+impl Default for ReactorOptions {
+    fn default() -> Self {
+        Self { max_conns: 4096, tick: Duration::from_millis(50) }
+    }
+}
+
+/// One queued unit on the async path: the request plus the token of the
+/// connection its response goes back to (no per-request channel — the
+/// batch loop pushes a completion and wakes the reactor).
+struct AsyncPending {
+    req: ScoreRequest,
+    token: u64,
+}
+
+enum Completion {
+    Score { token: u64, resp: ScoreResponse, husk: ScoreRequest },
+    Line { token: u64, text: String },
+}
+
+/// Completion queue + self-pipe shared by batch loops, the control
+/// worker, and the reactor.
+struct Shared {
+    completions: Mutex<Vec<Completion>>,
+    wake_tx: UnixStream,
+}
+
+impl Shared {
+    fn push(&self, c: Completion) {
+        self.completions.lock().unwrap().push(c);
+    }
+
+    /// Nudge the reactor out of `epoll_wait`. A `WouldBlock` here means
+    /// the pipe already holds an undrained wake byte — same effect.
+    fn wake(&self) {
+        let mut tx = &self.wake_tx;
+        let _ = tx.write(&[1u8]);
+    }
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes read but not yet consumed up to a newline.
+    rbuf: Vec<u8>,
+    /// Bytes queued for the socket; `wpos..` is still unwritten.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Recycled request husks (same zero-alloc contract as the threaded
+    /// per-connection slab).
+    slab: Vec<ScoreRequest>,
+    /// Batch loop this connection hashes to (sticky for its lifetime,
+    /// which keeps per-connection score order).
+    lix: usize,
+    /// Responses not yet queued to `wbuf` (scores in the engine +
+    /// control ops on the worker).
+    inflight: usize,
+    /// Interest set currently registered with epoll.
+    interest: u32,
+    /// Reads suspended: write backpressure.
+    paused: bool,
+    /// Peer sent EOF; the connection closes once `inflight` and `wbuf`
+    /// drain.
+    peer_closed: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, lix: usize) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            slab: Vec::new(),
+            lix,
+            inflight: 0,
+            interest: sys::EPOLLIN | sys::EPOLLRDHUP,
+            paused: false,
+            peer_closed: false,
+        }
+    }
+
+    fn pending_write(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+}
+
+/// Everything the event loop needs besides the connection table.
+struct Ctx {
+    engine: Arc<Engine>,
+    batchers: Vec<Arc<Batcher<AsyncPending>>>,
+    control_tx: mpsc::Sender<(u64, Json)>,
+    shared: Arc<Shared>,
+    shutdown: Arc<AtomicBool>,
+    epoll: sys::Epoll,
+    opts: ReactorOptions,
+    /// Per-loop queue bound (admission watermark input).
+    max_queue: usize,
+}
+
+/// A running async server (reactor + batch loops + control worker).
+/// Same wire protocol as [`crate::coordinator::server::Server`]; the
+/// [`crate::coordinator::server::Client`] works against either.
+pub struct AsyncServer {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    shared: Arc<Shared>,
+    batchers: Vec<Arc<Batcher<AsyncPending>>>,
+    threads: Vec<thread::JoinHandle<()>>,
+}
+
+impl AsyncServer {
+    /// Bind and start serving on `addr` (port 0 for ephemeral).
+    pub fn start(
+        addr: &str,
+        engine: Arc<Engine>,
+        policy: BatchPolicy,
+        opts: ReactorOptions,
+    ) -> Result<AsyncServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let loops = policy.effective_loops().max(1);
+        let batchers: Vec<Arc<Batcher<AsyncPending>>> = (0..loops)
+            .map(|_| Arc::new(Batcher::<AsyncPending>::new(policy).with_obs(engine.obs().clone())))
+            .collect();
+        let (wake_rx, wake_tx) = UnixStream::pair()?;
+        wake_rx.set_nonblocking(true)?;
+        wake_tx.set_nonblocking(true)?;
+        let shared = Arc::new(Shared { completions: Mutex::new(Vec::new()), wake_tx });
+
+        let mut threads = Vec::with_capacity(loops + 2);
+        // Batch loops: identical engine path to the threaded server;
+        // responses leave as completions instead of per-request channels.
+        for (l, batcher) in batchers.iter().enumerate() {
+            let batcher = Arc::clone(batcher);
+            let engine = Arc::clone(&engine);
+            let shared = Arc::clone(&shared);
+            threads.push(
+                thread::Builder::new()
+                    .name(format!("abatch-loop-{l}"))
+                    .spawn(move || {
+                        while let Some(batch) = batcher.next_batch() {
+                            let (reqs, tokens): (Vec<_>, Vec<_>) =
+                                batch.into_iter().map(|p| (p.req, p.token)).unzip();
+                            let (resps, husks) = engine.process_batch_reclaim(reqs);
+                            {
+                                let mut q = shared.completions.lock().unwrap();
+                                for ((resp, husk), token) in
+                                    resps.into_iter().zip(husks).zip(tokens)
+                                {
+                                    q.push(Completion::Score { token, resp, husk });
+                                }
+                            }
+                            shared.wake();
+                            engine.scrub_tick();
+                        }
+                    })?,
+            );
+        }
+
+        // Control worker: ops execute here, off the reactor thread.
+        let (control_tx, control_rx) = mpsc::channel::<(u64, Json)>();
+        {
+            let engine = Arc::clone(&engine);
+            let shared = Arc::clone(&shared);
+            threads.push(thread::Builder::new().name("control".into()).spawn(move || {
+                while let Ok((token, parsed)) = control_rx.recv() {
+                    let text = control_reply(&engine, &parsed).to_string();
+                    shared.push(Completion::Line { token, text });
+                    shared.wake();
+                }
+            })?);
+        }
+
+        // The reactor itself.
+        let ctx = Ctx {
+            engine,
+            batchers: batchers.clone(),
+            control_tx,
+            shared: Arc::clone(&shared),
+            shutdown: Arc::clone(&shutdown),
+            epoll: sys::Epoll::new()?,
+            opts,
+            max_queue: policy.max_queue,
+        };
+        threads.push(thread::Builder::new().name("reactor".into()).spawn(move || {
+            if let Err(e) = run_reactor(ctx, listener, wake_rx) {
+                eprintln!("reactor exited with error: {e}");
+            }
+        })?);
+
+        Ok(AsyncServer { addr: local, shutdown, shared, batchers, threads })
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.shared.wake();
+        for b in &self.batchers {
+            b.close();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for AsyncServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.shared.wake();
+        for b in &self.batchers {
+            b.close();
+        }
+    }
+}
+
+fn run_reactor(ctx: Ctx, listener: TcpListener, wake_rx: UnixStream) -> std::io::Result<()> {
+    ctx.epoll.add(listener.as_raw_fd(), sys::EPOLLIN, TOKEN_LISTENER)?;
+    ctx.epoll.add(wake_rx.as_raw_fd(), sys::EPOLLIN, TOKEN_WAKE)?;
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 256];
+    let mut scratch = vec![0u8; READ_CHUNK];
+    let mut next_token = FIRST_CONN_TOKEN;
+    let mut conn_seq = 0u64;
+    let mut last_tick = Instant::now();
+    let timeout_ms = ctx.opts.tick.as_millis().clamp(1, 1000) as i32;
+    loop {
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let n = ctx.epoll.wait(&mut events, timeout_ms)?;
+        for i in 0..n {
+            let ev = events[i];
+            let token = ev.data;
+            let revents = ev.events;
+            match token {
+                TOKEN_LISTENER => {
+                    accept_ready(&ctx, &listener, &mut conns, &mut next_token, &mut conn_seq)
+                }
+                TOKEN_WAKE => drain_wake(&wake_rx),
+                token => {
+                    if let Some(mut conn) = conns.remove(&token) {
+                        if conn_event(&ctx, token, &mut conn, revents, &mut scratch) {
+                            conns.insert(token, conn);
+                        } else {
+                            let _ = ctx.epoll.del(conn.stream.as_raw_fd());
+                        }
+                    }
+                }
+            }
+        }
+        // Deliver whatever the batch loops / control worker finished —
+        // cheap no-op when the queue is empty.
+        deliver_completions(&ctx, &mut conns);
+        // Overload pacing: deepest queue + measured p99 window → the
+        // detection floor; admission consults the resulting state on
+        // every submit.
+        if last_tick.elapsed() >= ctx.opts.tick {
+            last_tick = Instant::now();
+            let depth = ctx.batchers.iter().map(|b| b.queue_len()).max().unwrap_or(0);
+            ctx.engine.metrics.queue_depth.store(depth as u64, Ordering::Relaxed);
+            ctx.engine.overload_tick(depth, ctx.max_queue);
+        }
+    }
+}
+
+fn accept_ready(
+    ctx: &Ctx,
+    listener: &TcpListener,
+    conns: &mut HashMap<u64, Conn>,
+    next_token: &mut u64,
+    conn_seq: &mut u64,
+) {
+    loop {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                if ctx.opts.max_conns > 0 && conns.len() >= ctx.opts.max_conns {
+                    // Connection-count admission: answer and close. The
+                    // accepted socket is still blocking, but 24 bytes
+                    // into a fresh send buffer cannot stall.
+                    ctx.engine.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    let _ = stream.write_all(b"{\"error\":\"overloaded\"}\n");
+                    continue;
+                }
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                let token = *next_token;
+                *next_token += 1;
+                let lix = (splitmix64(*conn_seq) % ctx.batchers.len() as u64) as usize;
+                *conn_seq += 1;
+                if ctx
+                    .epoll
+                    .add(stream.as_raw_fd(), sys::EPOLLIN | sys::EPOLLRDHUP, token)
+                    .is_err()
+                {
+                    continue;
+                }
+                conns.insert(token, Conn::new(stream, lix));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+}
+
+fn drain_wake(wake_rx: &UnixStream) {
+    let mut buf = [0u8; 256];
+    let mut rx = wake_rx;
+    loop {
+        match rx.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => continue,
+        }
+    }
+}
+
+/// Dispatch one readiness event for a connection. Returns `false` when
+/// the connection should be dropped.
+fn conn_event(ctx: &Ctx, token: u64, conn: &mut Conn, revents: u32, scratch: &mut [u8]) -> bool {
+    if revents & (sys::EPOLLERR | sys::EPOLLHUP) != 0 {
+        return false;
+    }
+    if revents & sys::EPOLLOUT != 0 && flush_writes(conn).is_err() {
+        return false;
+    }
+    if revents & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0 && !conn.paused {
+        if read_ready(conn, scratch).is_err() {
+            return false;
+        }
+        if process_lines(ctx, token, conn).is_err() {
+            return false;
+        }
+    }
+    flush_and_continue(ctx, token, conn)
+}
+
+/// Flush, resume a backpressured reader if the buffer drained, and
+/// decide whether the connection stays registered.
+fn flush_and_continue(ctx: &Ctx, token: u64, conn: &mut Conn) -> bool {
+    if flush_writes(conn).is_err() {
+        return false;
+    }
+    if conn.paused && conn.pending_write() <= WBUF_LOW {
+        conn.paused = false;
+        if process_lines(ctx, token, conn).is_err() || flush_writes(conn).is_err() {
+            return false;
+        }
+    }
+    if conn.peer_closed && conn.inflight == 0 && conn.pending_write() == 0 {
+        return false;
+    }
+    update_interest(&ctx.epoll, token, conn).is_ok()
+}
+
+fn read_ready(conn: &mut Conn, scratch: &mut [u8]) -> Result<(), ()> {
+    loop {
+        match conn.stream.read(scratch) {
+            Ok(0) => {
+                conn.peer_closed = true;
+                return Ok(());
+            }
+            Ok(n) => {
+                conn.rbuf.extend_from_slice(&scratch[..n]);
+                if conn.rbuf.len() > MAX_RBUF {
+                    return Err(());
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return Err(()),
+        }
+    }
+}
+
+/// Consume complete lines from the read buffer, stopping early if write
+/// backpressure engages mid-burst.
+fn process_lines(ctx: &Ctx, token: u64, conn: &mut Conn) -> Result<(), ()> {
+    let mut start = 0usize;
+    loop {
+        if conn.pending_write() > WBUF_HIGH {
+            conn.paused = true;
+            break;
+        }
+        let Some(nl) = conn.rbuf[start..].iter().position(|&b| b == b'\n') else {
+            break;
+        };
+        let end = start + nl;
+        match std::str::from_utf8(&conn.rbuf[start..end]) {
+            Err(_) => queue_line(&mut conn.wbuf, &err_json("bad utf-8").to_string()),
+            Ok(raw) => {
+                let line = raw.trim();
+                if !line.is_empty() {
+                    handle_line(
+                        ctx,
+                        token,
+                        line,
+                        conn.lix,
+                        &mut conn.wbuf,
+                        &mut conn.slab,
+                        &mut conn.inflight,
+                    );
+                }
+            }
+        }
+        start = end + 1;
+    }
+    if start > 0 {
+        conn.rbuf.drain(..start);
+    }
+    if conn.rbuf.len() > MAX_RBUF {
+        return Err(());
+    }
+    Ok(())
+}
+
+/// One inbound line: fast-path score parse (zero-alloc at steady
+/// shape), else control op (handed to the worker), else generic-JSON
+/// request, else error reply. Mirrors the threaded `handle_conn` body.
+fn handle_line(
+    ctx: &Ctx,
+    token: u64,
+    line: &str,
+    lix: usize,
+    wbuf: &mut Vec<u8>,
+    slab: &mut Vec<ScoreRequest>,
+    inflight: &mut usize,
+) {
+    let mut req = slab.pop().unwrap_or_default();
+    // Each inbound line is one causal flow, same contract as the
+    // threaded path; the id rides the batcher queue into the worker
+    // spans (PR 10 flow propagation).
+    let _flow = FlowGuard::enter(flow::mint());
+    let probe = ctx.engine.obs().probe();
+    let t0 = probe.map(|_| Instant::now());
+    let parsed_fast = req.parse_line_into(line);
+    if let (Some(p), Some(t0)) = (probe, t0) {
+        p.span(Stage::Parse, 0, t0);
+    }
+    if parsed_fast {
+        submit_score(ctx, token, lix, wbuf, inflight, req);
+        return;
+    }
+    slab.push(req); // unused husk back to the slab
+    let parsed = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            queue_line(wbuf, &err_json(&format!("bad json: {e}")).to_string());
+            return;
+        }
+    };
+    if parsed.get("op").and_then(Json::as_str).is_some() {
+        *inflight += 1;
+        if ctx.control_tx.send((token, parsed)).is_err() {
+            *inflight -= 1;
+            queue_line(wbuf, &err_json("server shutting down").to_string());
+        }
+        return;
+    }
+    match ScoreRequest::from_json(&parsed) {
+        Ok(req) => submit_score(ctx, token, lix, wbuf, inflight, req),
+        Err(e) => queue_line(wbuf, &err_json(&format!("bad request: {e}")).to_string()),
+    }
+}
+
+/// Admission control + submit. A shed — controller-driven or
+/// queue-full — is the same one-line `{"error":"overloaded"}` the
+/// threaded path produces, counted in `metrics.shed`; an accepted
+/// submission counts in `metrics.admitted` and bumps the connection's
+/// inflight tally.
+fn submit_score(
+    ctx: &Ctx,
+    token: u64,
+    lix: usize,
+    wbuf: &mut Vec<u8>,
+    inflight: &mut usize,
+    req: ScoreRequest,
+) {
+    let batcher = &ctx.batchers[lix];
+    let depth = batcher.queue_len();
+    ctx.engine.metrics.queue_depth.store(depth as u64, Ordering::Relaxed);
+    let shed = ctx
+        .engine
+        .overload()
+        .is_some_and(|c| c.should_shed(depth, batcher.policy.max_queue));
+    if shed || batcher.submit(AsyncPending { req, token }).is_err() {
+        ctx.engine.metrics.shed.fetch_add(1, Ordering::Relaxed);
+        queue_line(wbuf, &err_json("overloaded").to_string());
+        return;
+    }
+    ctx.engine.metrics.admitted.fetch_add(1, Ordering::Relaxed);
+    *inflight += 1;
+}
+
+/// Drain the completion queue into the owning connections' write
+/// buffers, then flush every touched connection.
+fn deliver_completions(ctx: &Ctx, conns: &mut HashMap<u64, Conn>) {
+    let batch = std::mem::take(&mut *ctx.shared.completions.lock().unwrap());
+    if batch.is_empty() {
+        return;
+    }
+    let mut touched: Vec<u64> = Vec::with_capacity(batch.len());
+    for c in batch {
+        let (token, text, husk) = match c {
+            Completion::Score { token, resp, husk } => {
+                (token, resp.to_json().to_string(), Some(husk))
+            }
+            Completion::Line { token, text } => (token, text, None),
+        };
+        // A completion for a token that already hung up is dropped —
+        // the response was computed, the socket is gone.
+        let Some(conn) = conns.get_mut(&token) else { continue };
+        conn.inflight = conn.inflight.saturating_sub(1);
+        if let Some(h) = husk {
+            if conn.slab.len() < SLAB_CAP {
+                conn.slab.push(h);
+            }
+        }
+        queue_line(&mut conn.wbuf, &text);
+        touched.push(token);
+    }
+    touched.sort_unstable();
+    touched.dedup();
+    for token in touched {
+        if let Some(mut conn) = conns.remove(&token) {
+            if flush_and_continue(ctx, token, &mut conn) {
+                conns.insert(token, conn);
+            } else {
+                let _ = ctx.epoll.del(conn.stream.as_raw_fd());
+            }
+        }
+    }
+}
+
+fn queue_line(wbuf: &mut Vec<u8>, text: &str) {
+    wbuf.extend_from_slice(text.as_bytes());
+    wbuf.push(b'\n');
+}
+
+/// Write as much of the pending buffer as the socket accepts.
+fn flush_writes(conn: &mut Conn) -> Result<(), ()> {
+    while conn.wpos < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => return Err(()),
+            Ok(n) => conn.wpos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return Err(()),
+        }
+    }
+    if conn.wpos == conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+    } else if conn.wpos > WBUF_LOW {
+        // Compact occasionally so a slow reader doesn't pin the prefix.
+        conn.wbuf.drain(..conn.wpos);
+        conn.wpos = 0;
+    }
+    Ok(())
+}
+
+/// Re-register the epoll interest set when it changed: reads unless
+/// backpressured or past EOF, writes while output is pending.
+fn update_interest(epoll: &sys::Epoll, token: u64, conn: &mut Conn) -> std::io::Result<()> {
+    let mut want = sys::EPOLLRDHUP;
+    if !conn.paused && !conn.peer_closed {
+        want |= sys::EPOLLIN;
+    }
+    if conn.pending_write() > 0 {
+        want |= sys::EPOLLOUT;
+    }
+    if want != conn.interest {
+        epoll.modify(conn.stream.as_raw_fd(), want, token)?;
+        conn.interest = want;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::Client;
+    use crate::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
+    use crate::util::rng::Pcg32;
+    use std::io::{BufRead, BufReader, BufWriter};
+
+    fn tiny_engine() -> Arc<Engine> {
+        let model = DlrmModel::random(DlrmConfig {
+            num_dense: 4,
+            embedding_dim: 8,
+            bottom_mlp: vec![16, 8],
+            top_mlp: vec![16],
+            tables: vec![TableConfig { rows: 200, pooling: 4 }],
+            protection: Protection::DetectRecompute,
+            dense_range: (0.0, 1.0),
+            seed: 5,
+        });
+        Arc::new(Engine::new(model))
+    }
+
+    fn sample_request(id: u64) -> ScoreRequest {
+        let mut rng = Pcg32::new(id);
+        ScoreRequest {
+            id,
+            dense: (0..4).map(|_| rng.next_f32()).collect(),
+            sparse: vec![(0..4).map(|_| rng.gen_range(0, 200)).collect()],
+        }
+    }
+
+    fn fast_policy() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            max_queue: 64,
+            loops: 1,
+        }
+    }
+
+    #[test]
+    fn async_end_to_end_scores_and_control_ops() {
+        let engine = tiny_engine();
+        let server = AsyncServer::start(
+            "127.0.0.1:0",
+            Arc::clone(&engine),
+            fast_policy(),
+            ReactorOptions::default(),
+        )
+        .unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        for id in 0..5 {
+            let resp = client.score(&sample_request(id)).unwrap();
+            assert_eq!(resp.id, id);
+            assert!((0.0..=1.0).contains(&resp.score));
+            assert!(!resp.detected);
+        }
+        // Control ops answer off-thread through the completion queue.
+        let m = client.metrics().unwrap();
+        assert_eq!(m.get("requests").and_then(Json::as_usize), Some(5));
+        assert_eq!(m.get("admitted").and_then(Json::as_usize), Some(5));
+        assert_eq!(m.get("shed").and_then(Json::as_usize), Some(0));
+        assert!(client.prom().unwrap().contains("requests"));
+        let e = client.events().unwrap();
+        assert_eq!(e.path(&["counts", "total"]).and_then(Json::as_usize), Some(0));
+        server.stop();
+    }
+
+    #[test]
+    fn async_conn_cap_sheds_at_accept() {
+        let engine = tiny_engine();
+        let server = AsyncServer::start(
+            "127.0.0.1:0",
+            Arc::clone(&engine),
+            fast_policy(),
+            ReactorOptions { max_conns: 1, ..Default::default() },
+        )
+        .unwrap();
+        // First connection registers (the score round-trip proves it).
+        let mut c1 = Client::connect(&server.addr).unwrap();
+        c1.score(&sample_request(1)).unwrap();
+        // Second connection is turned away with the one-line reply.
+        let s2 = TcpStream::connect(server.addr).unwrap();
+        let mut r = BufReader::new(s2);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("overloaded"), "got {line:?}");
+        // The surviving connection keeps serving.
+        let resp = c1.score(&sample_request(2)).unwrap();
+        assert_eq!(resp.id, 2);
+        assert!(engine.metrics.shed.load(Ordering::Relaxed) >= 1);
+        server.stop();
+    }
+
+    #[test]
+    fn async_malformed_lines_get_error_not_crash() {
+        let server = AsyncServer::start(
+            "127.0.0.1:0",
+            tiny_engine(),
+            fast_policy(),
+            ReactorOptions::default(),
+        )
+        .unwrap();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        let mut r = BufReader::new(stream);
+        writeln!(w, "not json at all").unwrap();
+        w.flush().unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("error"));
+        // Connection still usable afterwards.
+        writeln!(w, "{}", sample_request(1).to_json()).unwrap();
+        w.flush().unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("score"));
+        server.stop();
+    }
+}

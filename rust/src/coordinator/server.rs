@@ -64,6 +64,9 @@ pub struct Server {
     accept_thread: Option<thread::JoinHandle<()>>,
     batch_threads: Vec<thread::JoinHandle<()>>,
     batchers: Vec<Arc<Batcher<Pending>>>,
+    /// Overload-controller pacing thread; spawned only when the engine
+    /// carries an [`crate::policy::OverloadCtl`] (`--slo-p99-ms`).
+    tick_thread: Option<thread::JoinHandle<()>>,
 }
 
 impl Server {
@@ -137,12 +140,41 @@ impl Server {
             })?
         };
 
+        // Overload pacing: when the engine carries an `OverloadCtl`, a
+        // low-rate ticker feeds it the deepest queue + the measured p99
+        // window so detection degrades (and admission eventually sheds)
+        // under sustained pressure. No controller → no thread.
+        let tick_thread = if engine.overload().is_some() {
+            let shutdown = Arc::clone(&shutdown);
+            let batchers = batchers.clone();
+            let engine = Arc::clone(&engine);
+            Some(
+                thread::Builder::new()
+                    .name("overload-tick".into())
+                    .spawn(move || {
+                        while !shutdown.load(Ordering::SeqCst) {
+                            thread::sleep(std::time::Duration::from_millis(50));
+                            let depth =
+                                batchers.iter().map(|b| b.queue_len()).max().unwrap_or(0);
+                            engine
+                                .metrics
+                                .queue_depth
+                                .store(depth as u64, Ordering::Relaxed);
+                            engine.overload_tick(depth, batchers[0].policy.max_queue);
+                        }
+                    })?,
+            )
+        } else {
+            None
+        };
+
         Ok(Server {
             addr: local,
             shutdown,
             accept_thread: Some(accept_thread),
             batch_threads,
             batchers,
+            tick_thread,
         })
     }
 
@@ -155,6 +187,9 @@ impl Server {
             let _ = t.join();
         }
         for t in self.batch_threads.drain(..) {
+            let _ = t.join();
+        }
+        if let Some(t) = self.tick_thread.take() {
             let _ = t.join();
         }
     }
@@ -199,7 +234,7 @@ fn handle_conn(stream: TcpStream, batcher: Arc<Batcher<Pending>>, engine: Arc<En
             p.span(crate::obs::Stage::Parse, 0, t0);
         }
         if parsed_fast {
-            submit_and_reply(&batcher, &mut writer, req, &mut slab)?;
+            submit_and_reply(&engine, &batcher, &mut writer, req, &mut slab)?;
             continue;
         }
         slab.push(req); // unused husk back to the slab
@@ -212,62 +247,14 @@ fn handle_conn(stream: TcpStream, batcher: Arc<Batcher<Pending>>, engine: Arc<En
                 continue;
             }
         };
-        if let Some(op) = parsed.get("op").and_then(Json::as_str) {
-            match op {
-                "metrics" => writeln!(writer, "{}", engine.metrics_snapshot())?,
-                // The fault-event journal: counts + the newest rows
-                // (newest-last). `{"op":"events","max":N}` bounds the
-                // row count; default 64. With `since_tick`, only rows
-                // past that journal sequence come back, plus the
-                // `next_cursor` to resume from.
-                "events" => {
-                    let max = parsed.get("max").and_then(Json::as_usize).unwrap_or(64);
-                    match parsed.get("since_tick").and_then(Json::as_usize) {
-                        Some(since) => {
-                            writeln!(writer, "{}", engine.events_json_since(since as u64, max))?
-                        }
-                        None => writeln!(writer, "{}", engine.events_json(max))?,
-                    }
-                }
-                // Profiler spans + per-stage quantiles.
-                "trace" => {
-                    let max = parsed.get("max").and_then(Json::as_usize).unwrap_or(64);
-                    writeln!(writer, "{}", engine.trace_json(max))?
-                }
-                // Prometheus text exposition of the whole snapshot.
-                "prom" => {
-                    writeln!(
-                        writer,
-                        "{}",
-                        Json::obj(vec![("text", Json::Str(engine.prom_text()))])
-                    )?
-                }
-                // Flight-recorder index / capture fetch / clear.
-                "flightrec" => match engine.flightrec() {
-                    None => writeln!(writer, "{}", err_json("flight recorder not armed"))?,
-                    Some(rec) => {
-                        if parsed.get("clear").and_then(Json::as_bool) == Some(true) {
-                            rec.clear();
-                            writeln!(writer, "{}", rec.status_json())?;
-                        } else if let Some(id) = parsed.get("id").and_then(Json::as_usize) {
-                            match rec.capture_json(id as u64) {
-                                Some(j) => writeln!(writer, "{}", j)?,
-                                None => writeln!(writer, "{}", err_json("no such capture"))?,
-                            }
-                        } else {
-                            writeln!(writer, "{}", rec.list_json())?;
-                        }
-                    }
-                },
-                "ping" => writeln!(writer, "{}", Json::obj(vec![("pong", Json::Bool(true))]))?,
-                _ => writeln!(writer, "{}", err_json("unknown op"))?,
-            }
+        if parsed.get("op").and_then(Json::as_str).is_some() {
+            writeln!(writer, "{}", control_reply(&engine, &parsed))?;
             writer.flush()?;
             continue;
         }
         match ScoreRequest::from_json(&parsed) {
             Ok(req) => {
-                submit_and_reply(&batcher, &mut writer, req, &mut slab)?;
+                submit_and_reply(&engine, &batcher, &mut writer, req, &mut slab)?;
             }
             Err(e) => {
                 writeln!(writer, "{}", err_json(&format!("bad request: {e}")))?;
@@ -278,21 +265,86 @@ fn handle_conn(stream: TcpStream, batcher: Arc<Batcher<Pending>>, engine: Arc<En
     Ok(())
 }
 
+/// Answer one control op (`{"op": ...}`) with its one-line JSON reply.
+/// Shared by the threaded connection loop and the reactor's control
+/// worker — the reactor runs it *off* the event thread, so a metrics
+/// snapshot (whose policy block is itself try-lock bounded) never stalls
+/// a reactor tick.
+pub(crate) fn control_reply(engine: &Engine, parsed: &Json) -> Json {
+    let op = match parsed.get("op").and_then(Json::as_str) {
+        Some(op) => op,
+        None => return err_json("missing op"),
+    };
+    match op {
+        "metrics" => engine.metrics_snapshot(),
+        // The fault-event journal: counts + the newest rows
+        // (newest-last). `{"op":"events","max":N}` bounds the row
+        // count; default 64. With `since_tick`, only rows past that
+        // journal sequence come back, plus the `next_cursor` to resume
+        // from.
+        "events" => {
+            let max = parsed.get("max").and_then(Json::as_usize).unwrap_or(64);
+            match parsed.get("since_tick").and_then(Json::as_usize) {
+                Some(since) => engine.events_json_since(since as u64, max),
+                None => engine.events_json(max),
+            }
+        }
+        // Profiler spans + per-stage quantiles.
+        "trace" => {
+            let max = parsed.get("max").and_then(Json::as_usize).unwrap_or(64);
+            engine.trace_json(max)
+        }
+        // Prometheus text exposition of the whole snapshot.
+        "prom" => Json::obj(vec![("text", Json::Str(engine.prom_text()))]),
+        // Flight-recorder index / capture fetch / clear.
+        "flightrec" => match engine.flightrec() {
+            None => err_json("flight recorder not armed"),
+            Some(rec) => {
+                if parsed.get("clear").and_then(Json::as_bool) == Some(true) {
+                    rec.clear();
+                    rec.status_json()
+                } else if let Some(id) = parsed.get("id").and_then(Json::as_usize) {
+                    match rec.capture_json(id as u64) {
+                        Some(j) => j,
+                        None => err_json("no such capture"),
+                    }
+                } else {
+                    rec.list_json()
+                }
+            }
+        },
+        "ping" => Json::obj(vec![("pong", Json::Bool(true))]),
+        _ => err_json("unknown op"),
+    }
+}
+
 /// Submit one request, await its response, write it out, and return the
 /// request's husk to the connection slab (a rejected submission drops
 /// the buffers — overload is not the steady state the slab optimizes).
+///
+/// Admission control (PR 10): a full queue rejects as before, and when
+/// the engine carries an overload controller in its `Shedding` state the
+/// request is turned away *before* touching the queue. Both outcomes are
+/// the same one-line `{"error":"overloaded"}` reply, counted in
+/// `metrics.shed`; accepted submissions count in `metrics.admitted`.
 fn submit_and_reply(
+    engine: &Arc<Engine>,
     batcher: &Arc<Batcher<Pending>>,
     writer: &mut BufWriter<TcpStream>,
     req: ScoreRequest,
     slab: &mut Vec<ScoreRequest>,
 ) -> Result<()> {
+    let shed = engine
+        .overload()
+        .is_some_and(|c| c.should_shed(batcher.queue_len(), batcher.policy.max_queue));
     let (tx, rx) = mpsc::channel();
-    if batcher.submit(Pending { req, reply: tx }).is_err() {
+    if shed || batcher.submit(Pending { req, reply: tx }).is_err() {
+        engine.metrics.shed.fetch_add(1, Ordering::Relaxed);
         writeln!(writer, "{}", err_json("overloaded"))?;
         writer.flush()?;
         return Ok(());
     }
+    engine.metrics.admitted.fetch_add(1, Ordering::Relaxed);
     match rx.recv() {
         Ok((resp, husk)) => {
             writeln!(writer, "{}", resp.to_json())?;
@@ -304,7 +356,7 @@ fn submit_and_reply(
     Ok(())
 }
 
-fn err_json(msg: &str) -> Json {
+pub(crate) fn err_json(msg: &str) -> Json {
     Json::obj(vec![("error", Json::Str(msg.to_string()))])
 }
 

@@ -58,6 +58,10 @@ fn print_help() {
          COMMANDS:\n\
            serve        --addr 127.0.0.1:7878 [--config cfg.json | --model-path m.dlrm]\n\
                         --max-batch 32 --max-wait-ms 2 --protection detect_recompute\n\
+                        --async-io false  (epoll event loop front end; linux only)\n\
+                        --max-conns 4096  (async connection ceiling; 0 = unlimited)\n\
+                        --admit-queue 0  (admission queue bound; 0 = --max-queue)\n\
+                        --slo-p99-ms 0  (p99 SLO; arms overload-adaptive detection)\n\
                         --chaos-weight-p 0 --chaos-table-p 0 --scrub-stride 0\n\
                         --policy-budget 0 --policy-tick-ms 50 --policy-bound-only false\n\
                         --policy-state policy.state  (controller warm-start file)\n\
@@ -175,10 +179,27 @@ fn serve(cli: &Cli) -> Result<()> {
     } else if policy_state_path.is_some() {
         println!("--policy-state has no effect without --policy-budget > 0");
     }
+    // PR 10 front-end knobs: async event loop, connection ceiling,
+    // admission watermark, and the p99 SLO that arms the overload
+    // controller (detection degrades toward its budget *before*
+    // admission sheds a single request; see `policy::overload`).
+    let async_io: bool = cli.flag("async-io", false)?;
+    let max_conns: usize = cli.flag("max-conns", 4096usize)?;
+    let admit_queue: usize = cli.flag("admit-queue", 0usize)?;
+    let slo_p99_ms: u64 = cli.flag("slo-p99-ms", 0u64)?;
+    if slo_p99_ms > 0 {
+        engine = engine
+            .with_overload(dlrm_abft::policy::OverloadConfig::for_slo_ms(slo_p99_ms));
+        println!(
+            "overload control armed: p99 SLO {slo_p99_ms}ms — detection degrades \
+             before admission sheds"
+        );
+    }
+    let max_queue: usize = cli.flag("max-queue", 4096usize)?;
     let policy = BatchPolicy {
         max_batch: cli.flag("max-batch", 32usize)?,
         max_wait: Duration::from_millis(cli.flag("max-wait-ms", 2u64)?),
-        max_queue: cli.flag("max-queue", 4096usize)?,
+        max_queue: if admit_queue > 0 { admit_queue } else { max_queue },
         // 0 = auto (min(4, cores)): connections hash across per-core
         // batch loops so the accept path doesn't funnel into one thread.
         loops: cli.flag("batch-loops", 0usize)?,
@@ -217,12 +238,44 @@ fn serve(cli: &Cli) -> Result<()> {
     }
     cli.reject_unknown()?;
     let engine = Arc::new(engine);
+    #[cfg(target_os = "linux")]
+    {
+        if async_io {
+            let server = dlrm_abft::coordinator::AsyncServer::start(
+                &addr,
+                Arc::clone(&engine),
+                policy,
+                dlrm_abft::coordinator::ReactorOptions { max_conns, ..Default::default() },
+            )?;
+            println!("serving on {} (epoll event loop, max {max_conns} conns)", server.addr);
+            println!("protocol: newline-delimited JSON; try {{\"op\":\"ping\"}}");
+            serve_housekeeping(&engine, policy_state_path.as_deref(), flightrec_dump.as_deref());
+        }
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        if async_io {
+            println!(
+                "--async-io needs linux epoll; using the threaded accept loop \
+                 (--max-conns {max_conns} ignored)"
+            );
+        }
+    }
     let server = Server::start(&addr, Arc::clone(&engine), policy)?;
     println!("serving on {}", server.addr);
     println!("protocol: newline-delimited JSON; try {{\"op\":\"ping\"}}");
-    // Serve-loop housekeeping: periodic best-effort policy-state
-    // persistence and flight-recorder dumps (a hard kill loses at most a
-    // few seconds of controller learning / undumped black boxes).
+    serve_housekeeping(&engine, policy_state_path.as_deref(), flightrec_dump.as_deref())
+}
+
+/// Serve-loop housekeeping (shared by the threaded and async front
+/// ends): periodic best-effort policy-state persistence and
+/// flight-recorder dumps (a hard kill loses at most a few seconds of
+/// controller learning / undumped black boxes). Never returns.
+fn serve_housekeeping(
+    engine: &Engine,
+    policy_state_path: Option<&str>,
+    flightrec_dump: Option<&str>,
+) -> ! {
     let persist_policy = policy_state_path.is_some() && engine.policy_sites().is_some();
     let tick = if persist_policy || flightrec_dump.is_some() {
         Duration::from_secs(5)
@@ -232,13 +285,13 @@ fn serve(cli: &Cli) -> Result<()> {
     loop {
         std::thread::sleep(tick);
         if persist_policy {
-            if let (Some(path), Some(state)) = (&policy_state_path, engine.policy_state()) {
+            if let (Some(path), Some(state)) = (policy_state_path, engine.policy_state()) {
                 if let Err(e) = std::fs::write(path, state) {
                     println!("policy state write to {path} failed: {e}");
                 }
             }
         }
-        if let (Some(dir), Some(rec)) = (&flightrec_dump, engine.flightrec()) {
+        if let (Some(dir), Some(rec)) = (flightrec_dump, engine.flightrec()) {
             match rec.dump_new(std::path::Path::new(dir)) {
                 Ok(0) => {}
                 Ok(n) => println!("flight recorder: dumped {n} black box(es) to {dir}"),

@@ -10,9 +10,12 @@
 //! tag ([`tag`]); fault events carry the full 64-bit ID, which is what
 //! lets a flight-recorder capture match an event to its spans.
 //!
-//! Work handed to pool workers (row-block GEMM fan-out) runs outside
-//! the guard and records flow 0 ("unattributed") — per-flow timelines
-//! are built from the scoring thread's spans, which cover every stage.
+//! Flows survive both thread handoffs in the pipeline: `Batcher::submit`
+//! records the submitter's flow with the queued item and re-enters it
+//! when the queue-wait span is cut, and `Scope::spawn` captures the
+//! spawning thread's flow into the job so pool workers (row-block GEMM,
+//! EB bag fan-out) record their batch's flow instead of 0 — per-request
+//! timelines attribute across the batcher boundary and the fan-out.
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, Ordering};

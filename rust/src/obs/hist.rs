@@ -130,6 +130,62 @@ impl Default for LogLinHist {
     }
 }
 
+/// Windowed quantiles over a cumulative [`LogLinHist`]: remembers the
+/// per-bucket counts seen at the last roll and resolves quantiles over
+/// only the samples recorded since. A cumulative p99 never comes back
+/// down after a burst, so anything reacting to *current* pressure (the
+/// overload controller) needs the delta view; one fixed array, no
+/// allocation after construction.
+pub struct HistWindow {
+    last: [u64; NUM_BUCKETS],
+}
+
+impl HistWindow {
+    pub fn new() -> Self {
+        Self {
+            last: [0; NUM_BUCKETS],
+        }
+    }
+
+    /// Quantile over the samples recorded since the previous roll, then
+    /// advance the window. `None` when no new samples arrived (racing
+    /// recorders may make individual buckets transiently regress; those
+    /// deltas clamp to 0).
+    pub fn roll_quantile(&mut self, hist: &LogLinHist, q: f64) -> Option<u64> {
+        let mut delta = [0u64; NUM_BUCKETS];
+        let mut total = 0u64;
+        for (i, b) in hist.buckets.iter().enumerate() {
+            let now = b.load(Ordering::Relaxed);
+            delta[i] = now.saturating_sub(self.last[i]);
+            self.last[i] = now;
+            total += delta[i];
+        }
+        if total == 0 {
+            return None;
+        }
+        let target = ((total as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in delta.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            if seen + n >= target {
+                let (lo, hi) = bucket_bounds(i);
+                let frac = (target - seen) as f64 / n as f64;
+                return Some(lo + ((hi - lo) as f64 * frac).round() as u64);
+            }
+            seen += n;
+        }
+        Some(bucket_bounds(NUM_BUCKETS - 1).1)
+    }
+}
+
+impl Default for HistWindow {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,6 +235,27 @@ mod tests {
         h.record(0);
         assert_eq!(h.count(), 1);
         assert!(h.quantile(1.0) <= 1);
+    }
+
+    #[test]
+    fn window_quantile_tracks_recent_samples_only() {
+        let h = LogLinHist::new();
+        let mut w = HistWindow::new();
+        assert_eq!(w.roll_quantile(&h, 0.99), None);
+        for _ in 0..100 {
+            h.record(100_000);
+        }
+        let burst = w.roll_quantile(&h, 0.99).unwrap();
+        assert!(burst >= 90_000, "burst window p99 = {burst}");
+        // The cumulative p99 never recovers from the burst; the window
+        // resolves the calm that followed.
+        for _ in 0..100 {
+            h.record(100);
+        }
+        assert!(h.quantile(0.99) >= 90_000);
+        let calm = w.roll_quantile(&h, 0.99).unwrap();
+        assert!(calm < 200, "calm window p99 = {calm}");
+        assert_eq!(w.roll_quantile(&h, 0.99), None);
     }
 
     #[test]

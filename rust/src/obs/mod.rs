@@ -38,7 +38,7 @@ pub mod prom;
 
 pub use flightrec::{FlightRecorder, SnapshotFn, DEFAULT_CAPTURES};
 pub use flow::{FlowGuard, FLOW_TAG_BITS, FLOW_TAG_MAX};
-pub use hist::{LogLinHist, NUM_BUCKETS, SUB_BUCKETS};
+pub use hist::{HistWindow, LogLinHist, NUM_BUCKETS, SUB_BUCKETS};
 pub use overhead::{HealCost, MeasuredUnitCosts, DEFAULT_HEAL_COST_ROWS, MIN_SAMPLES};
 pub use profiler::{ObsCore, ObsHandle, Probe, Stage, STAGES, STAGE_COUNT};
 pub use prom::render_prometheus;

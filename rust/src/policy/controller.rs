@@ -51,6 +51,7 @@
 
 use crate::obs::MeasuredUnitCosts;
 use crate::policy::mode::DetectionMode;
+use crate::policy::overload::OverloadFloor;
 use crate::policy::telemetry::{PolicySites, SiteKind, SiteSnapshot};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -428,6 +429,65 @@ impl PolicyController {
                 .fetch_add(report.decays as u64, Ordering::Relaxed);
         }
         report
+    }
+
+    /// Apply the serve-side overload floor (PR 10) to every site *not*
+    /// held by an escalation cooldown. The floor walks the same lattice
+    /// direction as quiet decay, minus the patience: `Budgeted` presses
+    /// sites sampling denser than their budget target straight to
+    /// `Sampled(n*)`, `BoundOnly` presses anything stronger down to the
+    /// single aggregate check — the overload dial is an explicit
+    /// operator opt-in (`--slo-p99-ms`), so it may go below what
+    /// `allow_bound_only` lets quiet decay reach. Cooldown sites are
+    /// exempt: an injected fault still snaps its site to `Full` within
+    /// one [`PolicyController::step`] even while the front end is
+    /// degraded. Lifting the floor raises only modes the policy itself
+    /// could never have chosen (`BoundOnly` without `allow_bound_only`,
+    /// `Off` without `allow_off`) back to the budgeted target;
+    /// policy-legal modes are left to the normal escalate/decay walk.
+    /// Returns the number of sites changed.
+    pub fn apply_overload_floor(&mut self, floor: OverloadFloor) -> usize {
+        let mut changed = 0;
+        for i in 0..self.sites.len() {
+            if self.ctl[i].cooldown > 0 {
+                continue;
+            }
+            let mode = self.sites.site(i).cell.load();
+            let policy_legal = match mode {
+                DetectionMode::BoundOnly => self.cfg.allow_bound_only,
+                DetectionMode::Off => self.cfg.allow_off,
+                _ => true,
+            };
+            let n = self.target_rate_site(i);
+            let budgeted = if n <= 1 {
+                DetectionMode::Full
+            } else {
+                DetectionMode::Sampled(n)
+            };
+            let target = match floor {
+                OverloadFloor::None => {
+                    if policy_legal {
+                        continue;
+                    }
+                    budgeted
+                }
+                OverloadFloor::Budgeted => match mode {
+                    DetectionMode::Full => budgeted,
+                    DetectionMode::Sampled(cur) if cur < n => budgeted,
+                    DetectionMode::BoundOnly | DetectionMode::Off if !policy_legal => budgeted,
+                    _ => continue,
+                },
+                OverloadFloor::BoundOnly => match mode {
+                    DetectionMode::Full | DetectionMode::Sampled(_) => DetectionMode::BoundOnly,
+                    _ => continue,
+                },
+            };
+            if target != mode {
+                self.sites.site(i).cell.store(target);
+                changed += 1;
+            }
+        }
+        changed
     }
 
     /// Window stats of one flat site (summed deltas), for the metrics
@@ -942,6 +1002,46 @@ mod tests {
         }
         assert_eq!(s.eb[0].cell.load(), DetectionMode::Sampled(3));
         assert_eq!(s.eb[1].cell.load(), DetectionMode::Sampled(34));
+    }
+
+    #[test]
+    fn overload_floor_presses_skips_cooldown_sites_and_restores() {
+        let s = sites(2, 1);
+        let mut c = controller(&s, quick_cfg()); // gemm n*=3, eb n*=4
+        // Flag gemm/0 and step: the site (and neighbors) hold Full under
+        // cooldown — the floor must not touch them.
+        s.gemm[0].telem.note_flags(1);
+        c.step();
+        assert_eq!(s.gemm[0].cell.load(), DetectionMode::Full);
+        let changed = c.apply_overload_floor(OverloadFloor::Budgeted);
+        // gemm/0 + neighbor gemm/1 are cooling down; only eb/0 presses.
+        assert_eq!(changed, 1);
+        assert_eq!(s.gemm[0].cell.load(), DetectionMode::Full);
+        assert_eq!(s.eb[0].cell.load(), DetectionMode::Sampled(4));
+        // Deeper floor presses below budget (quick_cfg leaves
+        // allow_bound_only off — overload is the explicit opt-in).
+        for _ in 0..8 {
+            c.step(); // drain cooldowns quietly
+        }
+        let changed = c.apply_overload_floor(OverloadFloor::BoundOnly);
+        assert!(changed >= 1);
+        assert_eq!(s.eb[0].cell.load(), DetectionMode::BoundOnly);
+        // A fault while degraded still escalates within one tick.
+        s.eb[0].telem.note_flags(1);
+        let r = c.step();
+        assert!(r.escalations >= 1);
+        assert_eq!(s.eb[0].cell.load(), DetectionMode::Full);
+        // Lifting the floor restores modes the policy could never have
+        // chosen back to the budgeted target.
+        for _ in 0..8 {
+            c.step();
+        }
+        c.apply_overload_floor(OverloadFloor::BoundOnly);
+        assert_eq!(s.gemm[1].cell.load(), DetectionMode::BoundOnly);
+        let changed = c.apply_overload_floor(OverloadFloor::None);
+        assert!(changed >= 1);
+        assert_eq!(s.gemm[1].cell.load(), DetectionMode::Sampled(3));
+        assert_eq!(s.eb[0].cell.load(), DetectionMode::Sampled(4));
     }
 
     /// Table-driven decay: quiet ticks walk the lattice one step per

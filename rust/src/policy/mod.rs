@@ -21,6 +21,12 @@
 //!   flag snaps the site and its neighbors back to `Full` for a
 //!   cooldown; persistent flags raise the shard/table scrub pacing via
 //!   the `scrub_budget` knob. Hysteresis everywhere — modes never flap.
+//! * [`overload`] — the serve-side pressure input (PR 10): an
+//!   [`OverloadCtl`] watches the measured p99 against `--slo-p99-ms`
+//!   and, under sustained pressure, presses non-escalated sites down
+//!   the lattice (`Sampled(n*)`, then `BoundOnly`) *before* admission
+//!   sheds a single request, restoring with hysteresis when pressure
+//!   clears.
 //!
 //! Safety invariant (tested in `rust/tests/prop.rs` and the
 //! `fused_epilogue`/`shard_integration` grids): **modes never change
@@ -31,6 +37,7 @@
 
 pub mod controller;
 pub mod mode;
+pub mod overload;
 pub mod telemetry;
 
 pub use controller::{
@@ -38,4 +45,5 @@ pub use controller::{
     SiteState, StepReport, UnitCosts,
 };
 pub use mode::{DetectionMode, PolicyCell};
+pub use overload::{OverloadConfig, OverloadCtl, OverloadFloor, OverloadState};
 pub use telemetry::{PolicyHandle, PolicySites, Site, SiteKind, SiteSnapshot, SiteTelemetry};

@@ -1,0 +1,424 @@
+//! Overload-adaptive detection (PR 10): the serve-side pressure input
+//! to the policy lattice.
+//!
+//! The paper's budgets (<20% GEMM, <26% EmbeddingBag) frame detection
+//! as *overhead* — so under SLO pressure, detection overhead is the
+//! first thing the server trades, and shedding load is the last. The
+//! [`OverloadCtl`] watches the measured serving p99 (a windowed view of
+//! the cumulative latency histogram — [`crate::obs::HistWindow`] —
+//! because a cumulative p99 never comes back down after a burst) plus
+//! batch-queue depth against a `--slo-p99-ms` target, and walks a
+//! three-level floor with hysteresis in both directions:
+//!
+//! ```text
+//!            sustained over-SLO (enter_ticks)          more pressure
+//!   Normal ───────────────────────────────► Degrading ─────────────► Shedding
+//!   floor: none          floor: Sampled(n*) → BoundOnly         admission rejects
+//!     ▲                                                              │
+//!     └────────── sustained under clear line (clear_ticks each) ◄────┘
+//! ```
+//!
+//! The floor is *applied* by
+//! [`PolicyController::apply_overload_floor`](super::PolicyController::apply_overload_floor),
+//! which exempts every site holding an escalation cooldown — a fault
+//! still snaps its site to `Full` within one controller tick while the
+//! front end is degraded, and detected corruption is never served. Only
+//! after the floor is fully pressed (`Sampled(n*)`, then `BoundOnly`
+//! when opted in) and pressure persists does the state reach
+//! `Shedding`, where admission starts refusing requests — so detection
+//! degrades strictly before the first shed.
+//!
+//! The hot-path surface is two relaxed atomic loads
+//! ([`OverloadCtl::should_shed`]); the state machine itself runs only
+//! on the (per-tick) control path.
+
+use crate::obs::{HistWindow, LogLinHist};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Serve-side overload state, coarsest first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverloadState {
+    /// Under SLO: no floor, no shedding.
+    Normal,
+    /// Sustained pressure: detection floor pressed down, still admitting.
+    Degrading,
+    /// Floor exhausted and pressure persists: admission sheds.
+    Shedding,
+}
+
+impl OverloadState {
+    /// Stable numeric code (strings are skipped by the Prometheus
+    /// walker, so the snapshot carries both).
+    pub fn code(self) -> u32 {
+        match self {
+            OverloadState::Normal => 0,
+            OverloadState::Degrading => 1,
+            OverloadState::Shedding => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OverloadState::Normal => "normal",
+            OverloadState::Degrading => "degrading",
+            OverloadState::Shedding => "shedding",
+        }
+    }
+
+    fn from_code(c: u32) -> Self {
+        match c {
+            0 => OverloadState::Normal,
+            1 => OverloadState::Degrading,
+            _ => OverloadState::Shedding,
+        }
+    }
+}
+
+/// Detection floor the overload controller presses sites toward.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverloadFloor {
+    /// No floor: sites follow the normal escalate/decay walk.
+    None,
+    /// Press straight to the budgeted target (`Sampled(n*)` per site) —
+    /// where quiet decay would eventually land, minus the patience.
+    Budgeted,
+    /// Press below budget to `BoundOnly` (one aggregate check per
+    /// invocation) — the deepest the dial goes before shedding.
+    BoundOnly,
+}
+
+impl OverloadFloor {
+    pub fn level(self) -> u32 {
+        match self {
+            OverloadFloor::None => 0,
+            OverloadFloor::Budgeted => 1,
+            OverloadFloor::BoundOnly => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OverloadFloor::None => "none",
+            OverloadFloor::Budgeted => "budgeted",
+            OverloadFloor::BoundOnly => "bound_only",
+        }
+    }
+
+    fn from_level(l: u32) -> Self {
+        match l {
+            0 => OverloadFloor::None,
+            1 => OverloadFloor::Budgeted,
+            _ => OverloadFloor::BoundOnly,
+        }
+    }
+}
+
+/// Overload-controller tuning. Defaults favor stability: two sustained
+/// over-SLO ticks per degradation step, four clear ticks per restore
+/// step, and a dead band between the SLO and `clear_frac · SLO` where
+/// nothing moves.
+#[derive(Clone, Copy, Debug)]
+pub struct OverloadConfig {
+    /// The p99 target, microseconds (`--slo-p99-ms` × 1000).
+    pub slo_p99_us: u64,
+    /// Pressure clears only below `clear_frac · slo` (restore
+    /// hysteresis; must be ≤ 1).
+    pub clear_frac: f64,
+    /// Consecutive over-pressure ticks per step down (floor deeper, or
+    /// Degrading → Shedding once the floor is exhausted).
+    pub enter_ticks: u32,
+    /// Consecutive clear ticks per step back up (Shedding → Degrading,
+    /// then one floor level at a time).
+    pub clear_ticks: u32,
+    /// Queue depth ≥ `queue_frac · bound` counts as pressure even while
+    /// the windowed p99 looks healthy (the queue is tomorrow's p99).
+    pub queue_frac: f64,
+    /// Whether the floor may press below the budgeted `Sampled(n*)` to
+    /// `BoundOnly`.
+    pub allow_bound_only: bool,
+}
+
+impl OverloadConfig {
+    /// Config for a p99 SLO given in milliseconds.
+    pub fn for_slo_ms(ms: u64) -> Self {
+        Self {
+            slo_p99_us: ms.saturating_mul(1000),
+            clear_frac: 0.75,
+            enter_ticks: 2,
+            clear_ticks: 4,
+            queue_frac: 0.5,
+            allow_bound_only: true,
+        }
+    }
+}
+
+struct Inner {
+    window: HistWindow,
+    over_streak: u32,
+    under_streak: u32,
+    floor: u32,
+    shedding: bool,
+}
+
+/// The overload controller. `tick` runs the state machine (control
+/// path, one short mutex); everything admission or a metrics snapshot
+/// reads is a relaxed atomic.
+pub struct OverloadCtl {
+    cfg: OverloadConfig,
+    state: AtomicU32,
+    floor: AtomicU32,
+    last_p99_us: AtomicU64,
+    degrade_steps: AtomicU64,
+    restore_steps: AtomicU64,
+    pressed_sites: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl OverloadCtl {
+    pub fn new(cfg: OverloadConfig) -> Self {
+        Self {
+            cfg,
+            state: AtomicU32::new(OverloadState::Normal.code()),
+            floor: AtomicU32::new(0),
+            last_p99_us: AtomicU64::new(0),
+            degrade_steps: AtomicU64::new(0),
+            restore_steps: AtomicU64::new(0),
+            pressed_sites: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                window: HistWindow::new(),
+                over_streak: 0,
+                under_streak: 0,
+                floor: 0,
+                shedding: false,
+            }),
+        }
+    }
+
+    /// One control tick: roll the latency window, classify pressure,
+    /// advance the state machine, and return the floor the policy
+    /// controller should apply this tick.
+    pub fn tick(&self, hist: &LogLinHist, queue_depth: usize, queue_bound: usize) -> OverloadFloor {
+        let mut g = self.inner.lock().unwrap();
+        let p99 = g.window.roll_quantile(hist, 0.99);
+        if let Some(p) = p99 {
+            self.last_p99_us.store(p, Ordering::Relaxed);
+        }
+        let q_over =
+            queue_bound > 0 && (queue_depth as f64) >= self.cfg.queue_frac * queue_bound as f64;
+        let lat_over = p99.is_some_and(|p| p > self.cfg.slo_p99_us);
+        // No new samples reads as clear: either traffic stopped or
+        // everything was shed — both mean pressure is draining.
+        let lat_clear =
+            p99.is_none_or(|p| (p as f64) <= self.cfg.slo_p99_us as f64 * self.cfg.clear_frac);
+        if lat_over || q_over {
+            g.over_streak += 1;
+            g.under_streak = 0;
+        } else if lat_clear {
+            g.under_streak += 1;
+            g.over_streak = 0;
+        } else {
+            // Dead band between clear line and SLO: hold position.
+            g.over_streak = 0;
+            g.under_streak = 0;
+        }
+        let max_floor = if self.cfg.allow_bound_only { 2 } else { 1 };
+        if g.over_streak >= self.cfg.enter_ticks.max(1) {
+            g.over_streak = 0;
+            if g.floor < max_floor {
+                g.floor += 1;
+                self.degrade_steps.fetch_add(1, Ordering::Relaxed);
+            } else if !g.shedding {
+                g.shedding = true;
+            }
+        }
+        if g.under_streak >= self.cfg.clear_ticks.max(1) {
+            g.under_streak = 0;
+            if g.shedding {
+                g.shedding = false;
+            } else if g.floor > 0 {
+                g.floor -= 1;
+                self.restore_steps.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let state = if g.shedding {
+            OverloadState::Shedding
+        } else if g.floor > 0 {
+            OverloadState::Degrading
+        } else {
+            OverloadState::Normal
+        };
+        self.state.store(state.code(), Ordering::Relaxed);
+        self.floor.store(g.floor, Ordering::Relaxed);
+        OverloadFloor::from_level(g.floor)
+    }
+
+    /// Admission check — two relaxed loads, no locks. Sheds only in
+    /// `Shedding` state, and then only while the queue sits above half
+    /// its bound, so a shedding server keeps serving at reduced rate
+    /// instead of blackholing (and the latency window keeps getting
+    /// samples to recover on).
+    #[inline]
+    pub fn should_shed(&self, queue_depth: usize, queue_bound: usize) -> bool {
+        if self.state.load(Ordering::Relaxed) != OverloadState::Shedding.code() {
+            return false;
+        }
+        queue_bound == 0 || queue_depth.saturating_mul(2) >= queue_bound
+    }
+
+    /// Record how many sites the policy controller changed when applying
+    /// this tick's floor.
+    pub fn note_pressed(&self, sites: usize) {
+        if sites > 0 {
+            self.pressed_sites.fetch_add(sites as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn state(&self) -> OverloadState {
+        OverloadState::from_code(self.state.load(Ordering::Relaxed))
+    }
+
+    pub fn floor(&self) -> OverloadFloor {
+        OverloadFloor::from_level(self.floor.load(Ordering::Relaxed))
+    }
+
+    /// Windowed p99 as of the last tick that saw samples, microseconds.
+    pub fn last_p99_us(&self) -> u64 {
+        self.last_p99_us.load(Ordering::Relaxed)
+    }
+
+    pub fn degrade_steps(&self) -> u64 {
+        self.degrade_steps.load(Ordering::Relaxed)
+    }
+
+    pub fn restore_steps(&self) -> u64 {
+        self.restore_steps.load(Ordering::Relaxed)
+    }
+
+    pub fn pressed_sites(&self) -> u64 {
+        self.pressed_sites.load(Ordering::Relaxed)
+    }
+
+    pub fn config(&self) -> &OverloadConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> OverloadConfig {
+        OverloadConfig {
+            slo_p99_us: 1000,
+            clear_frac: 0.75,
+            enter_ticks: 2,
+            clear_ticks: 2,
+            queue_frac: 0.5,
+            allow_bound_only: true,
+        }
+    }
+
+    fn feed(h: &LogLinHist, us: u64, n: usize) {
+        for _ in 0..n {
+            h.record(us);
+        }
+    }
+
+    #[test]
+    fn degrades_through_both_floor_levels_before_shedding() {
+        let ctl = OverloadCtl::new(quick_cfg());
+        let h = LogLinHist::new();
+        let mut saw_budgeted = false;
+        let mut saw_bound = false;
+        for _ in 0..12 {
+            feed(&h, 5000, 50);
+            let floor = ctl.tick(&h, 0, 1000);
+            match ctl.state() {
+                OverloadState::Normal => assert_eq!(floor, OverloadFloor::None),
+                OverloadState::Degrading => {
+                    saw_budgeted |= floor == OverloadFloor::Budgeted;
+                    saw_bound |= floor == OverloadFloor::BoundOnly;
+                }
+                OverloadState::Shedding => {
+                    // Shedding is only reachable with the floor fully
+                    // pressed: detection degraded strictly first.
+                    assert!(saw_budgeted && saw_bound);
+                    assert_eq!(floor, OverloadFloor::BoundOnly);
+                    return;
+                }
+            }
+        }
+        panic!("never reached Shedding under sustained 5x-SLO pressure");
+    }
+
+    #[test]
+    fn recovers_with_hysteresis_when_pressure_clears() {
+        let ctl = OverloadCtl::new(quick_cfg());
+        let h = LogLinHist::new();
+        while ctl.state() != OverloadState::Shedding {
+            feed(&h, 5000, 50);
+            ctl.tick(&h, 0, 1000);
+        }
+        // Clear traffic: the ladder unwinds one step per clear_ticks —
+        // Shedding → floor 2 → floor 1 → Normal, never all at once.
+        let mut states = Vec::new();
+        for _ in 0..12 {
+            feed(&h, 100, 50);
+            ctl.tick(&h, 0, 1000);
+            states.push((ctl.state(), ctl.floor().level()));
+        }
+        assert_eq!(
+            states.last().copied(),
+            Some((OverloadState::Normal, 0)),
+            "states: {states:?}"
+        );
+        // Degrading with the full floor must appear on the way down.
+        assert!(states.contains(&(OverloadState::Degrading, 2)), "states: {states:?}");
+        assert!(states.contains(&(OverloadState::Degrading, 1)), "states: {states:?}");
+        assert!(ctl.restore_steps() >= 2);
+    }
+
+    #[test]
+    fn dead_band_holds_position() {
+        let ctl = OverloadCtl::new(quick_cfg());
+        let h = LogLinHist::new();
+        for _ in 0..4 {
+            feed(&h, 5000, 50);
+            ctl.tick(&h, 0, 1000);
+        }
+        let floor = ctl.floor().level();
+        assert!(floor >= 1);
+        // Between clear line (750) and SLO (1000): neither streak grows.
+        for _ in 0..10 {
+            feed(&h, 900, 50);
+            ctl.tick(&h, 0, 1000);
+        }
+        assert_eq!(ctl.floor().level(), floor, "dead band moved the floor");
+    }
+
+    #[test]
+    fn queue_depth_alone_is_pressure() {
+        let ctl = OverloadCtl::new(quick_cfg());
+        let h = LogLinHist::new();
+        for _ in 0..2 {
+            feed(&h, 100, 10); // latency healthy
+            ctl.tick(&h, 600, 1000); // queue at 60% of bound
+        }
+        assert_eq!(ctl.state(), OverloadState::Degrading);
+        assert!(ctl.degrade_steps() >= 1);
+    }
+
+    #[test]
+    fn shed_gate_needs_shedding_state_and_deep_queue() {
+        let ctl = OverloadCtl::new(quick_cfg());
+        assert!(!ctl.should_shed(1000, 1000), "Normal never sheds");
+        let h = LogLinHist::new();
+        while ctl.state() != OverloadState::Shedding {
+            feed(&h, 5000, 50);
+            ctl.tick(&h, 900, 1000);
+        }
+        assert!(ctl.should_shed(600, 1000));
+        assert!(!ctl.should_shed(100, 1000), "shallow queue serves even while Shedding");
+    }
+}

@@ -548,6 +548,11 @@ impl<'scope, 'env> Scope<'scope, 'env> {
         *self.sync.pending.lock().unwrap() += 1;
         let sync = self.sync;
         let panic = self.panic;
+        // Workers inherit the spawning thread's flow so fan-out spans
+        // (row-block GEMM, EB bags) attribute to the batch that caused
+        // them instead of flow 0. One u64 capture — still far under the
+        // inline job-slot budget.
+        let flow = crate::obs::flow::current();
         // SAFETY: the scope's Waiter joins every spawned job before the
         // scope frame (which owns `sync`/`panic` and bounds every 'env
         // borrow) can be left, normally or by unwind — so neither the
@@ -555,6 +560,7 @@ impl<'scope, 'env> Scope<'scope, 'env> {
         unsafe {
             self.pool.submit_erased(move || {
                 let _guard = ScopeGuard(sync);
+                let _flow = crate::obs::flow::FlowGuard::enter(flow);
                 if let Err(payload) = catch_unwind(AssertUnwindSafe(f)) {
                     let mut slot = panic.lock().unwrap();
                     if slot.is_none() {

@@ -1,0 +1,313 @@
+//! Integration: the readiness-driven (epoll) serving front end and the
+//! overload-adaptive detection ladder (PR 10).
+//!
+//! * The async server must be a drop-in: bit-identical scores to the
+//!   threaded path, same control ops, same overload reply.
+//! * Admission control: a full queue bounces requests with one
+//!   `{"error":"overloaded"}` line and recovers as soon as the queue
+//!   drains.
+//! * The overload drill: under sustained p99 pressure detection steps
+//!   down the mode lattice (budgeted sampling, then bound-only) strictly
+//!   *before* the controller reaches its shedding state; pressure
+//!   clearing unwinds the ladder with hysteresis; an injected fault
+//!   escalates its site back to `Full` within one tick even while the
+//!   floor is pressed; and detected corruption is never served
+//!   uncorrected while degraded.
+
+use dlrm_abft::coordinator::{BatchPolicy, ChaosConfig, Client, Engine, ScoreRequest, Server};
+use dlrm_abft::dlrm::{DlrmConfig, DlrmModel, Protection, TableConfig};
+use dlrm_abft::policy::{
+    DetectionMode, OverloadConfig, OverloadFloor, OverloadState, PolicyConfig,
+};
+use dlrm_abft::util::json::Json;
+use dlrm_abft::util::rng::Pcg32;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[cfg(target_os = "linux")]
+use dlrm_abft::coordinator::{AsyncServer, ReactorOptions};
+#[cfg(target_os = "linux")]
+use std::io::{BufRead, BufReader, BufWriter, Write};
+#[cfg(target_os = "linux")]
+use std::net::TcpStream;
+
+fn cfg(protection: Protection) -> DlrmConfig {
+    DlrmConfig {
+        num_dense: 6,
+        embedding_dim: 16,
+        bottom_mlp: vec![32, 16],
+        top_mlp: vec![32],
+        tables: vec![
+            TableConfig { rows: 2_000, pooling: 10 },
+            TableConfig { rows: 1_000, pooling: 5 },
+        ],
+        protection,
+        dense_range: (0.0, 1.0),
+        seed: 21,
+    }
+}
+
+fn requests(model: &DlrmModel, n: usize, seed: u64) -> Vec<ScoreRequest> {
+    let mut rng = Pcg32::new(seed);
+    model
+        .synth_requests(n, &mut rng)
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| ScoreRequest { id: i as u64, dense: r.dense, sparse: r.sparse })
+        .collect()
+}
+
+fn policy() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        max_queue: 256,
+        loops: 1,
+    }
+}
+
+/// Manual-tick policy config (no background controller thread) so the
+/// drill steps are fully deterministic.
+fn manual_policy_cfg() -> PolicyConfig {
+    PolicyConfig {
+        tick: Duration::ZERO,
+        cooldown_ticks: 2,
+        decay_patience: 1,
+        ..PolicyConfig::default()
+    }
+}
+
+/// Push a hot latency window into the engine's histogram, then run one
+/// overload tick at the given queue depth.
+fn hot_tick(engine: &Engine, depth: usize, bound: usize) {
+    for _ in 0..50 {
+        engine.metrics.latency.record_us(50_000);
+    }
+    engine.overload_tick(depth, bound);
+}
+
+fn calm_tick(engine: &Engine, bound: usize) {
+    for _ in 0..50 {
+        engine.metrics.latency.record_us(100);
+    }
+    engine.overload_tick(0, bound);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn async_scores_bit_identical_to_threaded() {
+    // Twin engines from the same seed behind the two front ends: every
+    // score must agree to the bit. Then the async engine is pressed to
+    // its detection floor and rescored — degraded detection must not
+    // move clean scores either (the policy-lattice safety invariant,
+    // here asserted across the wire).
+    let reqs = requests(&DlrmModel::random(cfg(Protection::DetectRecompute)), 16, 11);
+    let threaded_engine = Arc::new(Engine::new(DlrmModel::random(cfg(Protection::DetectRecompute))));
+    let async_engine = Arc::new(
+        Engine::new(DlrmModel::random(cfg(Protection::DetectRecompute)))
+            .with_policy(manual_policy_cfg())
+            .with_overload(OverloadConfig::for_slo_ms(1)),
+    );
+    let t_server = Server::start("127.0.0.1:0", Arc::clone(&threaded_engine), policy()).unwrap();
+    let a_server = AsyncServer::start(
+        "127.0.0.1:0",
+        Arc::clone(&async_engine),
+        policy(),
+        ReactorOptions::default(),
+    )
+    .unwrap();
+    let mut tc = Client::connect(&t_server.addr).unwrap();
+    let mut ac = Client::connect(&a_server.addr).unwrap();
+    let mut threaded_scores = Vec::new();
+    for req in &reqs {
+        let tr = tc.score(req).unwrap();
+        let ar = ac.score(req).unwrap();
+        assert_eq!(tr.id, ar.id);
+        assert_eq!(
+            tr.score.to_bits(),
+            ar.score.to_bits(),
+            "async front end must not move scores (id {})",
+            req.id
+        );
+        assert!(!ar.detected);
+        threaded_scores.push(tr.score);
+    }
+    // Press the async engine's detection floor (latency pressure only —
+    // the queue stays shallow, so nothing sheds and traffic still
+    // flows).
+    let ctl = Arc::clone(async_engine.overload().unwrap());
+    for _ in 0..8 {
+        hot_tick(&async_engine, 0, 64);
+    }
+    assert_ne!(ctl.floor(), OverloadFloor::None, "floor must be pressed");
+    for (req, want) in reqs.iter().zip(&threaded_scores) {
+        let ar = ac.score(req).unwrap();
+        assert_eq!(
+            ar.score.to_bits(),
+            want.to_bits(),
+            "degraded detection must not move clean scores (id {})",
+            req.id
+        );
+    }
+    t_server.stop();
+    a_server.stop();
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn admission_rejects_past_watermark_and_recovers() {
+    let model = DlrmModel::random(cfg(Protection::Detect));
+    let reqs = requests(&model, 4, 9);
+    let engine = Arc::new(Engine::new(model));
+    // A queue of two and a long cut: pipelined requests park in the
+    // queue deterministically while a third one bounces.
+    let tight = BatchPolicy {
+        max_batch: 64,
+        max_wait: Duration::from_millis(600),
+        max_queue: 2,
+        loops: 1,
+    };
+    let server =
+        AsyncServer::start("127.0.0.1:0", Arc::clone(&engine), tight, ReactorOptions::default())
+            .unwrap();
+    let a = TcpStream::connect(server.addr).unwrap();
+    let mut aw = BufWriter::new(a.try_clone().unwrap());
+    let mut ar = BufReader::new(a);
+    writeln!(aw, "{}", reqs[0].to_json()).unwrap();
+    writeln!(aw, "{}", reqs[1].to_json()).unwrap();
+    aw.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(150)); // let the reactor enqueue both
+    // Past the watermark: one-line overload reply, immediately.
+    let mut bc = Client::connect(&server.addr).unwrap();
+    let err = bc.score(&reqs[2]).unwrap_err();
+    assert!(err.to_string().contains("overloaded"), "{err}");
+    // The queued pair drains at the batch cut...
+    let mut line = String::new();
+    ar.read_line(&mut line).unwrap();
+    assert!(line.contains("score"), "{line}");
+    line.clear();
+    ar.read_line(&mut line).unwrap();
+    assert!(line.contains("score"), "{line}");
+    // ...and admission recovers: the bounced client is served.
+    let resp = bc.score(&reqs[3]).unwrap();
+    assert_eq!(resp.id, reqs[3].id);
+    assert!(engine.metrics.shed.load(Ordering::Relaxed) >= 1);
+    assert!(engine.metrics.admitted.load(Ordering::Relaxed) >= 3);
+    server.stop();
+}
+
+#[test]
+fn overload_drill_degrades_detection_strictly_before_shedding() {
+    let engine = Engine::new(DlrmModel::random(cfg(Protection::DetectRecompute)))
+        .with_policy(manual_policy_cfg())
+        .with_overload(OverloadConfig::for_slo_ms(1));
+    let ctl = Arc::clone(engine.overload().unwrap());
+    let sites = Arc::clone(engine.policy_sites().unwrap());
+    let bound = 64usize;
+    // Sustained pressure: the floor must walk Budgeted → BoundOnly while
+    // the controller is still only Degrading; shedding comes last.
+    let mut saw_budgeted_before_shed = false;
+    let mut saw_bound_only_before_shed = false;
+    for _ in 0..20 {
+        hot_tick(&engine, bound, bound);
+        if ctl.state() == OverloadState::Shedding {
+            break;
+        }
+        saw_budgeted_before_shed |= ctl.floor() == OverloadFloor::Budgeted;
+        saw_bound_only_before_shed |= ctl.floor() == OverloadFloor::BoundOnly;
+        assert!(
+            !ctl.should_shed(bound, bound),
+            "no shed before the floor is exhausted"
+        );
+    }
+    assert!(saw_budgeted_before_shed, "skipped the budgeted floor");
+    assert!(saw_bound_only_before_shed, "skipped the bound-only floor");
+    assert_eq!(ctl.state(), OverloadState::Shedding);
+    assert!(ctl.should_shed(bound, bound));
+    // With the floor fully pressed, every (non-cooldown) site sits at
+    // BoundOnly — detection was spent down before a single shed.
+    for g in &sites.gemm {
+        assert_eq!(g.cell.load(), DetectionMode::BoundOnly);
+    }
+    for e in &sites.eb {
+        assert_eq!(e.cell.load(), DetectionMode::BoundOnly);
+    }
+    // Pressure clears → the ladder unwinds with hysteresis back to
+    // Normal, and the floor lift restores modes the policy itself would
+    // never have chosen.
+    for _ in 0..40 {
+        calm_tick(&engine, bound);
+        if ctl.state() == OverloadState::Normal && ctl.floor() == OverloadFloor::None {
+            break;
+        }
+    }
+    assert_eq!(ctl.state(), OverloadState::Normal);
+    assert_eq!(ctl.floor(), OverloadFloor::None);
+    for g in &sites.gemm {
+        assert_ne!(g.cell.load(), DetectionMode::BoundOnly, "floor lift must restore");
+    }
+    for e in &sites.eb {
+        assert_ne!(e.cell.load(), DetectionMode::BoundOnly, "floor lift must restore");
+    }
+    assert!(ctl.degrade_steps() >= 2);
+    assert!(ctl.restore_steps() >= 2);
+}
+
+#[test]
+fn fault_escalates_past_the_floor_and_corruption_is_never_served() {
+    // A chaos engine, degraded by overload pressure: an injected fault
+    // must snap its site back to Full within one policy tick (the floor
+    // skips cooling sites), and every detection on served traffic must
+    // resolve as recovered — detected corruption never reaches a reply.
+    let engine = Engine::with_chaos(
+        DlrmModel::random(cfg(Protection::DetectRecompute)),
+        ChaosConfig { p_weight_flip: 1.0, p_table_flip: 0.0, seed: 5 },
+    )
+    .with_policy(manual_policy_cfg())
+    .with_overload(OverloadConfig::for_slo_ms(1));
+    let ctl = Arc::clone(engine.overload().unwrap());
+    let sites = Arc::clone(engine.policy_sites().unwrap());
+    let bound = 64usize;
+    for _ in 0..8 {
+        hot_tick(&engine, bound, bound);
+    }
+    assert_eq!(ctl.floor(), OverloadFloor::BoundOnly, "drill starts fully degraded");
+    for g in &sites.gemm {
+        assert_eq!(g.cell.load(), DetectionMode::BoundOnly);
+    }
+    // Fault signal on every GEMM site: one tick later they are Full,
+    // floor or no floor.
+    for g in &sites.gemm {
+        g.telem.note_flags(1);
+    }
+    let rep = engine.policy_tick().expect("policy attached");
+    assert!(rep.escalations >= sites.gemm.len(), "escalation must beat the floor");
+    for g in &sites.gemm {
+        assert_eq!(g.cell.load(), DetectionMode::Full);
+    }
+    // The floor keeps pressing while hot — but not the escalated sites.
+    hot_tick(&engine, bound, bound);
+    for g in &sites.gemm {
+        assert_eq!(g.cell.load(), DetectionMode::Full, "cooldown sites are floor-exempt");
+    }
+    // Serve chaos traffic with detection escalated (EB sites still
+    // degraded): everything detected must be repaired before replying.
+    let reqs = requests(&DlrmModel::random(cfg(Protection::DetectRecompute)), 12, 2);
+    let mut detected_any = false;
+    for _round in 0..5 {
+        for resp in engine.process_batch(reqs.clone()) {
+            if resp.detected {
+                detected_any = true;
+                assert!(!resp.degraded, "detected corruption must be repaired, not served");
+            }
+        }
+    }
+    assert!(detected_any, "p=1.0 weight chaos never detected at Full");
+    // The journal saw the faults (the drill's post-mortem query).
+    let ev = engine.events_json(64);
+    assert!(
+        ev.path(&["counts", "total"]).and_then(Json::as_usize).unwrap_or(0) >= 1,
+        "journal must carry the detected faults: {ev}"
+    );
+}
